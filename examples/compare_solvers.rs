@@ -1,0 +1,77 @@
+//! Side-by-side convergence study: plain Lloyd vs fixed-m Anderson vs the
+//! paper's dynamic-m Anderson on a slow-converging manifold dataset,
+//! printing the energy traces as an ASCII convergence figure.
+//!
+//! Run: `cargo run --release --example compare_solvers [-- <registry name>]`
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::data::dataset_by_name;
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::rng::Pcg32;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "Slicelocalization".to_string());
+    let spec = dataset_by_name(&name).expect("unknown registry dataset");
+    // Smoke scale keeps the example quick; pass the full-size data through
+    // the bench harness instead.
+    let x = spec.generate_scaled((30_000.0 / spec.n as f64).min(1.0));
+    println!("dataset {} (n={}, d={}), K=10\n", spec.name, x.n(), x.d());
+    let mut rng = Pcg32::seed_from_u64(11);
+    let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+
+    let variants: [(&str, Acceleration); 4] = [
+        ("lloyd", Acceleration::None),
+        ("fixed m=2", Acceleration::FixedM(2)),
+        ("fixed m=5", Acceleration::FixedM(5)),
+        ("dynamic m=2 (paper)", Acceleration::DynamicM(2)),
+    ];
+    let mut traces = Vec::new();
+    for (label, accel) in variants {
+        let cfg = SolverConfig { accel, record_trace: true, threads: 1, ..SolverConfig::default() };
+        let report = Solver::new(cfg).run(&x, c0.clone());
+        println!(
+            "{label:<22} {:>4} iters ({:>3} accepted)  {:>7.3}s  energy {:.6e}",
+            report.iterations, report.accepted, report.seconds, report.energy
+        );
+        traces.push((label, report.energy_trace.clone()));
+    }
+
+    // ASCII figure: log-scale suboptimality vs iteration.
+    let e_star = traces
+        .iter()
+        .flat_map(|(_, t)| t.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let max_iter = traces.iter().map(|(_, t)| t.len()).max().unwrap_or(0);
+    const COLS: usize = 72;
+    const ROWS: usize = 16;
+    println!("\nconvergence figure: log10(E - E*) vs iteration (columns = iterations)");
+    let log_sub = |e: f64| ((e - e_star).max(1e-12)).log10();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, t) in &traces {
+        for &e in t {
+            let v = log_sub(e);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let mut grid = vec![vec![b' '; COLS]; ROWS];
+    let marks = [b'L', b'2', b'5', b'D'];
+    for (vi, (_, t)) in traces.iter().enumerate() {
+        for (it, &e) in t.iter().enumerate() {
+            let col = it * (COLS - 1) / max_iter.max(1);
+            let row = if hi > lo {
+                ((hi - log_sub(e)) / (hi - lo) * (ROWS - 1) as f64).round() as usize
+            } else {
+                0
+            };
+            grid[row.min(ROWS - 1)][col.min(COLS - 1)] = marks[vi];
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let y = hi - (hi - lo) * r as f64 / (ROWS - 1) as f64;
+        println!("{y:>6.1} |{}", String::from_utf8_lossy(row));
+    }
+    println!("        {}^ iter {max_iter}", "-".repeat(COLS));
+    println!("        L=lloyd  2=fixed m=2  5=fixed m=5  D=dynamic (paper)");
+}

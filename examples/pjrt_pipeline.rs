@@ -1,0 +1,97 @@
+//! END-TO-END three-layer driver (the validation run recorded in
+//! EXPERIMENTS.md §End-to-end): the Rust coordinator executes the paper's
+//! Algorithm 1 with the assignment step running through the **AOT-compiled
+//! JAX/Pallas artifact via PJRT** — Python never runs — on a real small
+//! workload, and cross-checks iterations/energy against the native engine.
+//!
+//! Layers exercised:
+//!   L1  Pallas tiled distance+argmin kernel (compiled inside the HLO)
+//!   L2  JAX G-step lowered to HLO text by `make artifacts`
+//!   L3  this binary: Anderson acceleration, dynamic m, energy guard
+//!
+//! Run: `make artifacts && cargo run --release --example pjrt_pipeline`
+
+use aakm::config::{Acceleration, EngineKind, SolverConfig};
+use aakm::data::synth;
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::metrics::Stopwatch;
+use aakm::rng::Pcg32;
+use aakm::runtime::{default_artifact_dir, PjrtEngine, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let runtime = std::rc::Rc::new(PjrtRuntime::open(&dir)?);
+    println!(
+        "PJRT platform: {} | artifacts: {} ({} buckets)",
+        runtime.platform(),
+        dir.display(),
+        runtime.manifest().specs.len()
+    );
+
+    // Real small workload: 12k samples, 8-D, 10 clusters (pads to the
+    // n=16384 / k=16 bucket).
+    let mut rng = Pcg32::seed_from_u64(2024);
+    let x = synth::gaussian_blobs_ex(&mut rng, 12_000, 8, 10, 2.0, 0.35, 0.05, 2.0);
+    let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+    println!("workload: n={} d={} K=10, k-means++ seeding", x.n(), x.d());
+
+    // 1) Raw fixed-point iteration entirely through the AOT G-step.
+    let sw = Stopwatch::start();
+    let mut c = c0.clone();
+    let mut steps = 0;
+    let last_energy;
+    loop {
+        let out = runtime.g_step(&x, &c)?;
+        steps += 1;
+        let moved = out.centroids.frob_dist(&c);
+        c = out.centroids;
+        if moved < 1e-7 || steps >= 500 {
+            last_energy = out.energy;
+            break;
+        }
+    }
+    println!(
+        "\n[L2/L1 via PJRT] plain fixed-point: {} G-steps, energy {:.6e}, {:.2}s",
+        steps,
+        last_energy,
+        sw.seconds()
+    );
+
+    // 2) Algorithm 1 with the PJRT assignment engine (the full stack).
+    let cfg = SolverConfig {
+        engine: EngineKind::Pjrt,
+        accel: Acceleration::DynamicM(2),
+        threads: 1,
+        record_trace: true,
+        ..SolverConfig::default()
+    };
+    let engine = PjrtEngine::new(std::rc::Rc::clone(&runtime));
+    let ours = Solver::with_engine(cfg, Box::new(engine)).run(&x, c0.clone());
+    println!("[L3+PJRT] anderson dynamic-m: {}", ours.summary());
+
+    // 3) Native cross-check: same seed, Hamerly engine.
+    let native_cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
+    let native = Solver::new(native_cfg).run(&x, c0.clone());
+    println!("[native ] anderson dynamic-m: {}", native.summary());
+    let lloyd_cfg = SolverConfig {
+        accel: Acceleration::None,
+        threads: 1,
+        ..SolverConfig::default()
+    };
+    let lloyd = Solver::new(lloyd_cfg).run(&x, c0);
+    println!("[native ] lloyd baseline:     {}", lloyd.summary());
+
+    let rel = (ours.energy - native.energy).abs() / native.energy;
+    println!(
+        "\nPJRT vs native final-energy relative difference: {rel:.2e} (f32 artifact vs f64 native)"
+    );
+    println!(
+        "iteration reduction vs Lloyd: {:.2}x (pjrt path), {:.2}x (native path)",
+        lloyd.iterations as f64 / ours.iterations.max(1) as f64,
+        lloyd.iterations as f64 / native.iterations.max(1) as f64,
+    );
+    anyhow::ensure!(rel < 0.05, "PJRT and native paths diverged");
+    println!("END-TO-END OK: all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX/Pallas model definition + AOT lowering.
+
+Nothing in this package runs on the request path; `make artifacts` invokes
+`python -m compile.aot` once and the Rust coordinator consumes the HLO text
+it writes to artifacts/.
+"""

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Artifacts are lowered per *shape bucket* -- HLO is shape-static, so the
+Rust runtime pads a job up to the nearest bucket (see runtime/bucket.rs).
+The manifest written next to the artifacts is in the TOML subset the Rust
+config parser understands.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--buckets n,d,k;...]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default bucket ladder: n (samples) x d (dims); K is padded to 16 (the
+# examples/benches run K=10). Kept deliberately small -- each bucket costs
+# the Rust side one PJRT compile at load time.
+DEFAULT_BUCKETS = [
+    (n, d, 16)
+    for n in (1024, 4096, 16384)
+    for d in (2, 8, 32)
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(kind, n, d, k):
+    return f"{kind}_n{n}_d{d}_k{k}"
+
+
+def lower_bucket(kind, n, d, k):
+    if kind == "g_step":
+        return model.lowered_g_step(n, d, k)
+    if kind == "energy_step":
+        return model.lowered_energy_step(n, d, k)
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+def parse_buckets(spec):
+    """Parse 'n,d,k;n,d,k;...' into tuples."""
+    out = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        n, d, k = (int(v) for v in part.split(","))
+        out.append((n, d, k))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="override bucket ladder: 'n,d,k;n,d,k;...'",
+    )
+    ap.add_argument(
+        "--kinds",
+        default="g_step,energy_step",
+        help="comma-separated artifact kinds (g_step,energy_step)",
+    )
+    args = ap.parse_args(argv)
+
+    buckets = parse_buckets(args.buckets) if args.buckets else DEFAULT_BUCKETS
+    kinds = [k.strip() for k in args.kinds.split(",") if k.strip()]
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = [
+        "# aakm AOT artifact manifest (TOML subset; parsed by rust config).",
+        f'jax_version = "{jax.__version__}"',
+        'format = "hlo-text"',
+        f"tile_n = {256}",
+    ]
+    for kind in kinds:
+        for (n, d, k) in buckets:
+            name = artifact_name(kind, n, d, k)
+            lowered = lower_bucket(kind, n, d, k)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines += [
+                f"[{name}]",
+                f'kind = "{kind}"',
+                f"n = {n}",
+                f"d = {d}",
+                f"k = {k}",
+                f'file = "{fname}"',
+            ]
+            print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(kinds) * len(buckets)} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+`assign` holds the paper's computational hot-spot -- the assignment step --
+as a tiled Pallas kernel; `ref` is the pure-jnp oracle it is tested against.
+"""
+
+from . import assign, ref  # noqa: F401

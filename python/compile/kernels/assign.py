@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: the assignment step (the per-iteration hot-spot).
+
+The paper's C++ implementation spends almost all of its per-iteration time
+in the assignment step. On TPU-shaped hardware the right formulation is not
+the CPU bounds-pruning loop but a dense, MXU-friendly tile sweep (see
+DESIGN.md "Hardware-Adaptation"):
+
+* squared distances via ``|x|^2 - 2 x.c^T + |c|^2`` so the dominant term is
+  an ``(TILE_N, d) x (d, K)`` matmul that maps onto the systolic array;
+* the sample axis is tiled with a 1-D grid; each grid step stages one
+  ``TILE_N x d`` slab of X into VMEM while the (small) centroid block is
+  re-fetched with a constant index map;
+* argmin / min over the ``TILE_N x K`` distance slab are VPU reductions.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom calls, and the AOT path (compile/aot.py) runs everything on
+the CPU client. Real-TPU performance is estimated analytically in
+EXPERIMENTS.md (Sec. "Perf/L1") from the VMEM footprint of these BlockSpecs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile over the sample axis. 8x128 lanes is the native f32 VPU tile;
+# 256 keeps the (TILE_N x K) distance slab well under VMEM for K <= 1024.
+TILE_N = 256
+
+
+def _assign_kernel(x_ref, c_ref, csq_ref, assign_ref, dist_ref):
+    """One grid step: assign TILE_N samples against all K centroids."""
+    x = x_ref[...]                       # (tile_n, d)  VMEM
+    c = c_ref[...]                       # (k, d)       VMEM
+    csq = csq_ref[...]                   # (k,)         precomputed |c|^2
+    xsq = jnp.sum(x * x, axis=1)         # (tile_n,)    VPU reduce
+    # The MXU term: x @ c^T. preferred_element_type keeps the accumulate f32.
+    dots = jax.lax.dot_general(
+        x, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                    # (tile_n, k)
+    d2 = xsq[:, None] - 2.0 * dots + csq[None, :]
+    # Guard the expansion's tiny negatives so distances are proper.
+    d2 = jnp.maximum(d2, 0.0)
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def assign_argmin(x, c, tile_n=TILE_N):
+    """Nearest-centroid assignment via the Pallas kernel.
+
+    Args:
+      x: (n, d) f32 samples; n must be a multiple of ``tile_n`` (the L2
+         model pads to the shape bucket before calling).
+      c: (k, d) f32 centroids.
+      tile_n: sample-axis tile size.
+
+    Returns:
+      (assign (n,) int32, min_sq_dist (n,) f32)
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    if d != d2:
+        raise ValueError(f"dimension mismatch: x has d={d}, c has d={d2}")
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} not a multiple of tile_n={tile_n}")
+    csq = jnp.sum(c * c, axis=1)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            # One slab of samples per grid step ...
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            # ... against the whole centroid block (constant index map).
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        # interpret=True: CPU-PJRT cannot run Mosaic custom-calls; see module
+        # docstring. The BlockSpec schedule above is what a real-TPU build
+        # would compile.
+        interpret=True,
+    )(x, c, csq)
+
+
+def vmem_footprint_bytes(tile_n, d, k, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (see EXPERIMENTS.md Perf/L1).
+
+    Counts the staged operands plus the distance slab the kernel
+    materializes: x slab, centroid block, |c|^2, d2 slab, outputs.
+    """
+    x_slab = tile_n * d * dtype_bytes
+    c_block = k * d * dtype_bytes
+    csq = k * dtype_bytes
+    d2_slab = tile_n * k * dtype_bytes
+    outs = tile_n * (4 + dtype_bytes)
+    return x_slab + c_block + csq + d2_slab + outs
+
+
+def mxu_flops_per_step(tile_n, d, k):
+    """MXU FLOPs of the dot-general per grid step (2*m*n*k)."""
+    return 2 * tile_n * d * k

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the K-Means fixed-point map.
+
+This is the correctness reference for the Pallas kernel (Layer 1) and the
+JAX model (Layer 2): straightforward, unfused jnp implementations of the
+assignment step, the update step, the energy, and the combined map
+``G(C) = Update(Assign(X, C))``.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x, c):
+    """Squared Euclidean distances, shape (n, k).
+
+    Computed the numerically-stable direct way: ``sum((x - c)^2)``.
+    """
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_step(x, c):
+    """Nearest-centroid assignment (paper Eq. 3) and the squared distance.
+
+    Returns ``(assign[i] int32, min_sq_dist[i] f32)``.
+    """
+    d2 = pairwise_sq_dists(x, c)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    min_d2 = jnp.min(d2, axis=1)
+    return assign, min_d2
+
+
+def update_step(x, assign, c_prev, mask=None):
+    """Centroid update (paper Eq. 4) with empty clusters keeping their
+    previous position. ``mask`` (n,) zeroes out padding rows.
+
+    Returns ``(c_new (k,d), counts (k,))``.
+    """
+    k = c_prev.shape[0]
+    one_hot = jnp.equal(assign[:, None], jnp.arange(k)[None, :]).astype(x.dtype)
+    if mask is not None:
+        one_hot = one_hot * mask[:, None]
+    counts = jnp.sum(one_hot, axis=0)
+    sums = one_hot.T @ x
+    safe = jnp.maximum(counts, 1.0)
+    means = sums / safe[:, None]
+    c_new = jnp.where(counts[:, None] > 0, means, c_prev)
+    return c_new, counts
+
+
+def energy(x, c, assign, mask=None):
+    """Clustering energy (paper Eq. 1) under a fixed assignment."""
+    d2 = jnp.sum((x - c[assign]) ** 2, axis=1)
+    if mask is not None:
+        d2 = d2 * mask
+    return jnp.sum(d2)
+
+
+def g_step(x, c, mask=None):
+    """The combined fixed-point map of the paper's Eq. 6 (plus energy).
+
+    Returns ``(c_new, assign, energy, counts)``.
+    """
+    assign, min_d2 = assign_step(x, c)
+    if mask is not None:
+        e = jnp.sum(min_d2 * mask)
+    else:
+        e = jnp.sum(min_d2)
+    c_new, counts = update_step(x, assign, c, mask)
+    return c_new, assign, e, counts

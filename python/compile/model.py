@@ -1,0 +1,81 @@
+"""Layer-2 JAX model: the K-Means fixed-point map ``G``.
+
+``g_step`` is the function the Rust coordinator executes through PJRT on
+its hot path: one combined assignment + update + energy evaluation, with
+the assignment step delegated to the Layer-1 Pallas kernel. The update is
+expressed as a one-hot matmul (``A^T X``) rather than a scatter-add so it
+lowers to MXU work on TPU-shaped backends.
+
+Shape-bucket padding contract (enforced by the Rust runtime):
+
+* ``x`` rows beyond the real sample count are arbitrary; ``mask`` is 1.0
+  for real rows and 0.0 for padding, which removes them from the energy,
+  the counts and the sums.
+* ``c`` rows beyond the real cluster count are set to the sentinel
+  ``PAD_CENTROID_SENTINEL`` (far outside any data), so no real sample
+  selects them; their count is 0 and the update passes them through.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import assign as assign_kernel
+
+# Padding centroids are parked here; anything farther than sqrt(d)*1e6 from
+# the data is unselectable for standardized inputs.
+PAD_CENTROID_SENTINEL = 1.0e6
+
+
+def g_step(x, c, mask):
+    """One fixed-point iteration ``C -> G(C)`` (paper Eq. 6) plus metrics.
+
+    Args:
+      x: (n, d) f32 samples (padded to the bucket size).
+      c: (k, d) f32 centroids (padded with the sentinel).
+      mask: (n,) f32, 1.0 for real samples, 0.0 for padding.
+
+    Returns a 4-tuple:
+      c_new  (k, d) f32 -- updated centroids (pad rows pass through),
+      assign (n,)  i32 -- nearest-centroid index per sample,
+      energy ()    f32 -- masked clustering energy at the *input* centroids,
+      counts (k,)  f32 -- masked per-cluster sample counts.
+    """
+    assign, min_d2 = assign_kernel.assign_argmin(x, c)
+    energy = jnp.sum(min_d2 * mask)
+    k = c.shape[0]
+    one_hot = jnp.equal(assign[:, None], jnp.arange(k)[None, :]).astype(x.dtype)
+    one_hot = one_hot * mask[:, None]
+    counts = jnp.sum(one_hot, axis=0)
+    sums = jax.lax.dot_general(
+        one_hot, x,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    safe = jnp.maximum(counts, 1.0)
+    means = sums / safe[:, None]
+    c_new = jnp.where(counts[:, None] > 0, means, c)
+    return c_new, assign, energy, counts
+
+
+def energy_step(x, c, mask):
+    """Energy + assignment only (the guard check of Algorithm 1 line 13
+    when the Rust side wants to price an accelerated iterate without paying
+    for the update)."""
+    assign, min_d2 = assign_kernel.assign_argmin(x, c)
+    return assign, jnp.sum(min_d2 * mask)
+
+
+def lowered_g_step(n, d, k):
+    """``jax.jit(g_step).lower`` for a concrete shape bucket."""
+    spec_x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return jax.jit(g_step).lower(spec_x, spec_c, spec_m)
+
+
+def lowered_energy_step(n, d, k):
+    """``jax.jit(energy_step).lower`` for a concrete shape bucket."""
+    spec_x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return jax.jit(energy_step).lower(spec_x, spec_c, spec_m)

@@ -1,0 +1,112 @@
+"""L1 correctness: the Pallas assignment kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: the kernel must
+agree with ``ref.assign_step`` on assignment (modulo exact-tie order, which
+we exclude by construction) and on min-distance to float tolerance, across
+a hypothesis sweep of shapes, scales and degenerate inputs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import assign as ak
+from compile.kernels import ref
+
+
+def _random_problem(rng, n, d, k, scale=1.0, duplicates=False):
+    x = rng.normal(size=(n, d)).astype(np.float32) * scale
+    c = rng.normal(size=(k, d)).astype(np.float32) * scale
+    if duplicates:
+        c[k // 2] = c[0]  # duplicate centroid: argmin tie on purpose
+    return jnp.asarray(x), jnp.asarray(c)
+
+
+def _check_against_ref(x, c, tile_n):
+    got_a, got_d = ak.assign_argmin(x, c, tile_n=tile_n)
+    ref_a, ref_d = ref.assign_step(x, c)
+    got_a, got_d = np.asarray(got_a), np.asarray(got_d)
+    ref_a, ref_d = np.asarray(ref_a), np.asarray(ref_d)
+    # Distances must match to f32 tolerance (expansion vs direct form).
+    np.testing.assert_allclose(got_d, ref_d, rtol=2e-4, atol=2e-4)
+    # Assignments must point at centroids equidistant with the oracle's.
+    d2 = np.asarray(ref.pairwise_sq_dists(x, c))
+    chosen = d2[np.arange(len(got_a)), got_a]
+    best = d2[np.arange(len(ref_a)), ref_a]
+    np.testing.assert_allclose(chosen, best, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=1, max_value=48),
+    k=st.integers(min_value=1, max_value=24),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_sweep(tiles, d, k, scale, seed):
+    tile_n = 64
+    n = tiles * tile_n
+    rng = np.random.default_rng(seed)
+    x, c = _random_problem(rng, n, d, k, scale=scale)
+    _check_against_ref(x, c, tile_n)
+
+
+@pytest.mark.parametrize("tile_n", [64, 128, 256])
+def test_kernel_tile_sizes(tile_n):
+    rng = np.random.default_rng(7)
+    x, c = _random_problem(rng, tile_n * 3, 8, 10)
+    _check_against_ref(x, c, tile_n)
+
+
+def test_kernel_duplicate_centroids():
+    rng = np.random.default_rng(8)
+    x, c = _random_problem(rng, 256, 4, 8, duplicates=True)
+    _check_against_ref(x, c, 256)
+
+
+def test_kernel_single_centroid():
+    rng = np.random.default_rng(9)
+    x, c = _random_problem(rng, 256, 3, 1)
+    got_a, got_d = ak.assign_argmin(x, c, tile_n=256)
+    assert np.all(np.asarray(got_a) == 0)
+    ref_d = np.asarray(ref.assign_step(x, c)[1])
+    np.testing.assert_allclose(np.asarray(got_d), ref_d, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_identical_points():
+    # All samples identical: distance 0 to the coincident centroid.
+    x = jnp.zeros((256, 5), dtype=jnp.float32)
+    c = jnp.concatenate([jnp.zeros((1, 5)), jnp.ones((3, 5))]).astype(jnp.float32)
+    got_a, got_d = ak.assign_argmin(x, c, tile_n=256)
+    assert np.all(np.asarray(got_a) == 0)
+    np.testing.assert_allclose(np.asarray(got_d), 0.0, atol=1e-6)
+
+
+def test_kernel_distances_nonnegative():
+    # The |x|^2 - 2xc + |c|^2 expansion can go slightly negative; the kernel
+    # must clamp.
+    rng = np.random.default_rng(10)
+    x, _ = _random_problem(rng, 512, 16, 4, scale=1000.0)
+    got_a, got_d = ak.assign_argmin(x, x[:4], tile_n=256)
+    assert np.all(np.asarray(got_d) >= 0.0)
+
+
+def test_kernel_rejects_bad_shapes():
+    x = jnp.zeros((100, 3), dtype=jnp.float32)  # not a tile multiple
+    c = jnp.zeros((4, 3), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        ak.assign_argmin(x, c, tile_n=64)
+    x2 = jnp.zeros((64, 3), dtype=jnp.float32)
+    c2 = jnp.zeros((4, 5), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="dimension mismatch"):
+        ak.assign_argmin(x2, c2, tile_n=64)
+
+
+def test_vmem_footprint_analytics():
+    # Sanity on the analytic model used in EXPERIMENTS.md Perf/L1.
+    fp = ak.vmem_footprint_bytes(256, 32, 16)
+    assert fp == 256 * 32 * 4 + 16 * 32 * 4 + 16 * 4 + 256 * 16 * 4 + 256 * 8
+    assert ak.mxu_flops_per_step(256, 32, 16) == 2 * 256 * 32 * 16

@@ -1,0 +1,109 @@
+"""L2 correctness: the jitted G-step vs the oracle, including the padding
+contract the Rust runtime relies on (mask + sentinel centroids)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(rng, n, d, k, scale=1.0):
+    x = rng.normal(size=(n, d)).astype(np.float32) * scale
+    c = rng.normal(size=(k, d)).astype(np.float32) * scale
+    return jnp.asarray(x), jnp.asarray(c)
+
+
+def test_g_step_matches_ref_no_padding():
+    rng = np.random.default_rng(1)
+    x, c = _problem(rng, 512, 8, 10)
+    mask = jnp.ones((512,), dtype=jnp.float32)
+    c_new, assign, energy, counts = model.g_step(x, c, mask)
+    rc, ra, re, rcount = ref.g_step(x, c)
+    np.testing.assert_allclose(np.asarray(c_new), np.asarray(rc), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(energy), np.asarray(re), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rcount))
+    # Assignments agree through distances (ties allowed).
+    d2 = np.asarray(ref.pairwise_sq_dists(x, c))
+    idx = np.arange(512)
+    np.testing.assert_allclose(
+        d2[idx, np.asarray(assign)], d2[idx, np.asarray(ra)], rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    real_n=st.integers(min_value=1, max_value=255),
+    d=st.integers(min_value=1, max_value=16),
+    real_k=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_padding_is_invisible(real_n, d, real_k, seed):
+    """G-step on (padded x, sentinel c) == oracle on the unpadded problem."""
+    rng = np.random.default_rng(seed)
+    n_bucket, k_bucket = 256, 16
+    x_real = rng.normal(size=(real_n, d)).astype(np.float32)
+    c_real = rng.normal(size=(real_k, d)).astype(np.float32)
+    # Pad.
+    x_pad = np.zeros((n_bucket, d), dtype=np.float32)
+    x_pad[:real_n] = x_real
+    c_pad = np.full((k_bucket, d), model.PAD_CENTROID_SENTINEL, dtype=np.float32)
+    c_pad[:real_k] = c_real
+    mask = np.zeros((n_bucket,), dtype=np.float32)
+    mask[:real_n] = 1.0
+    c_new, assign, energy, counts = model.g_step(
+        jnp.asarray(x_pad), jnp.asarray(c_pad), jnp.asarray(mask)
+    )
+    rc, ra, re, rcounts = ref.g_step(jnp.asarray(x_real), jnp.asarray(c_real))
+    np.testing.assert_allclose(
+        np.asarray(c_new)[:real_k], np.asarray(rc), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(np.asarray(energy), np.asarray(re), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts)[:real_k], np.asarray(rcounts))
+    # Pad centroids: zero counts, position pass-through.
+    assert np.all(np.asarray(counts)[real_k:] == 0.0)
+    np.testing.assert_allclose(
+        np.asarray(c_new)[real_k:], model.PAD_CENTROID_SENTINEL
+    )
+    # Real samples never select a sentinel centroid.
+    assert np.all(np.asarray(assign)[:real_n] < real_k)
+
+
+def test_g_step_fixed_point_energy_decreases():
+    """Iterating the lowered map decreases the (masked) energy — the MM
+    property the whole paper rests on."""
+    rng = np.random.default_rng(3)
+    x, c = _problem(rng, 1024, 4, 8)
+    mask = jnp.ones((1024,), dtype=jnp.float32)
+    prev = np.inf
+    for _ in range(12):
+        c_next, _, energy, _ = model.g_step(x, c, mask)
+        e = float(energy)
+        assert e <= prev * (1 + 1e-6), f"energy rose: {prev} -> {e}"
+        prev = e
+        c = c_next
+
+
+def test_empty_cluster_passthrough():
+    # A centroid far from all samples keeps its position and count 0.
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(256, 2)).astype(np.float32))
+    c = jnp.asarray(
+        np.array([[0.0, 0.0], [500.0, 500.0]], dtype=np.float32)
+    )
+    mask = jnp.ones((256,), dtype=jnp.float32)
+    c_new, assign, _, counts = model.g_step(x, c, mask)
+    assert float(counts[1]) == 0.0
+    np.testing.assert_allclose(np.asarray(c_new)[1], [500.0, 500.0])
+    assert np.all(np.asarray(assign) == 0)
+
+
+def test_energy_step_matches_g_step():
+    rng = np.random.default_rng(5)
+    x, c = _problem(rng, 512, 6, 9)
+    mask = jnp.ones((512,), dtype=jnp.float32)
+    a1, e1 = model.energy_step(x, c, mask)
+    _, a2, e2, _ = model.g_step(x, c, mask)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-6)

@@ -1,0 +1,53 @@
+//! Ablation A — sensitivity to the dynamic-m thresholds (ε₁, ε₂). The
+//! paper fixes ε₁ = 0.02, ε₂ = 0.5 for every dataset; this harness shows
+//! the neighborhood is flat (i.e. the defaults are not cherry-picked).
+
+mod common;
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::metrics::{Table, TableCell};
+use aakm::rng::Pcg32;
+use common::{dataset, registry, results_dir, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let picks = [5usize, 8, 11]; // HTRU2, Eb, Colorment
+    let eps1s = [0.005, 0.02, 0.05, 0.1];
+    let eps2s = [0.3, 0.5, 0.7, 0.9];
+    let mut table = Table::new(
+        "Ablation — (ε₁, ε₂) grid: iterations (time s) per dataset",
+        &["ε₁", "ε₂", "HTRU2", "Eb", "Colorment"],
+    );
+    for &e1 in &eps1s {
+        for &e2 in &eps2s {
+            if e1 >= e2 {
+                continue;
+            }
+            let mut row = vec![TableCell::plain(format!("{e1}")), TableCell::plain(format!("{e2}"))];
+            for &num in &picks {
+                let spec = &registry()[num - 1];
+                let x = dataset(spec, scale);
+                let mut rng = Pcg32::seed_from_u64(0xAB1A + num as u64);
+                let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+                let cfg = SolverConfig {
+                    accel: Acceleration::DynamicM(2),
+                    epsilon1: e1,
+                    epsilon2: e2,
+                    threads: 1,
+                    ..SolverConfig::default()
+                };
+                let r = Solver::new(cfg).run(&x, c0);
+                row.push(TableCell::plain(format!("{} ({:.2})", r.iterations, r.seconds)));
+            }
+            table.push_row(row);
+        }
+        eprintln!("done ε₁={e1}");
+    }
+    println!("{}", table.to_markdown());
+    println!("paper defaults: ε₁=0.02, ε₂=0.5 (used unchanged for all datasets)");
+    let csv = results_dir().join("ablation_epsilon.csv");
+    table.save_csv(&csv).expect("write csv");
+    println!("(scale = {scale:?}; csv -> {})", csv.display());
+}

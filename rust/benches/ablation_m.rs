@@ -1,0 +1,51 @@
+//! Ablation B — history cap m̄ and initial window m₀ (the paper uses
+//! m̄ = 30 and m₀ ∈ {2, 5}): shows the dynamic controller is robust to
+//! both, and what a too-small cap costs.
+
+mod common;
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::metrics::{Table, TableCell};
+use aakm::rng::Pcg32;
+use common::{dataset, registry, results_dir, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let picks = [2usize, 9, 13]; // Slicelocalization, AllUsers, Birch
+    let mut table = Table::new(
+        "Ablation — m̄ (cap) × m₀ (initial m): iterations (accepted)",
+        &["m̄", "m₀", "Slicelocalization", "AllUsers", "Birch"],
+    );
+    for m_max in [5usize, 10, 30, 60] {
+        for m0 in [1usize, 2, 5, 10] {
+            if m0 > m_max {
+                continue;
+            }
+            let mut row =
+                vec![TableCell::plain(m_max.to_string()), TableCell::plain(m0.to_string())];
+            for &num in &picks {
+                let spec = &registry()[num - 1];
+                let x = dataset(spec, scale);
+                let mut rng = Pcg32::seed_from_u64(0xAB1B + num as u64);
+                let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+                let cfg = SolverConfig {
+                    accel: Acceleration::DynamicM(m0),
+                    m_max,
+                    threads: 1,
+                    ..SolverConfig::default()
+                };
+                let r = Solver::new(cfg).run(&x, c0);
+                row.push(TableCell::plain(format!("{} ({})", r.iterations, r.accepted)));
+            }
+            table.push_row(row);
+        }
+        eprintln!("done m̄={m_max}");
+    }
+    println!("{}", table.to_markdown());
+    println!("paper: m̄=30, m₀=2 by default (Table 2 also reports m₀=5)");
+    let csv = results_dir().join("ablation_m.csv");
+    table.save_csv(&csv).expect("write csv");
+    println!("(scale = {scale:?}; csv -> {})", csv.display());
+}

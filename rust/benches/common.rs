@@ -1,0 +1,101 @@
+//! Shared support for the paper-table bench harnesses.
+//!
+//! `AAKM_BENCH_SCALE` selects the workload size:
+//! * `smoke` (default) — datasets capped at [`SMOKE_CAP`] samples so the
+//!   whole `cargo bench` suite completes in minutes on one core;
+//! * `paper` — the full Table-1 sample counts (hours; use for the record).
+//!
+//! Every harness prints the paper's table as markdown and writes a CSV
+//! next to it under `bench_results/`.
+//!
+//! (Each bench target compiles this module independently and uses a
+//! subset of the helpers, hence the blanket `allow(dead_code)`.)
+#![allow(dead_code)]
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::data::{DatasetSpec, REGISTRY};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::{RunReport, Solver};
+use aakm::rng::Pcg32;
+use std::path::PathBuf;
+
+/// Sample cap in smoke mode.
+pub const SMOKE_CAP: usize = 20_000;
+
+/// Benchmark scale selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Paper,
+}
+
+impl Scale {
+    /// Read from `AAKM_BENCH_SCALE`.
+    pub fn from_env() -> Self {
+        match std::env::var("AAKM_BENCH_SCALE").as_deref() {
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Smoke,
+        }
+    }
+
+    /// Generation scale for a dataset.
+    pub fn factor(&self, spec: &DatasetSpec) -> f64 {
+        match self {
+            Scale::Paper => 1.0,
+            Scale::Smoke => (SMOKE_CAP as f64 / spec.n as f64).min(1.0),
+        }
+    }
+}
+
+/// Generate dataset `spec` at the chosen scale.
+pub fn dataset(spec: &DatasetSpec, scale: Scale) -> aakm::data::DataMatrix {
+    spec.generate_scaled(scale.factor(spec))
+}
+
+/// Generate dataset `spec` at an explicit fraction of the paper's N
+/// (clamped to (0, 1]); used by harness columns that need a tighter cap.
+#[allow(dead_code)]
+pub fn dataset_capped(spec: &DatasetSpec, fraction: f64) -> aakm::data::DataMatrix {
+    spec.generate_scaled(fraction.clamp(1e-6, 1.0))
+}
+
+/// The solver config used across benches (paper defaults, single thread —
+/// the container has one core and the paper reports per-config wall-clock).
+pub fn solver_config(accel: Acceleration) -> SolverConfig {
+    SolverConfig { accel, threads: 1, ..SolverConfig::default() }
+}
+
+/// Run one (dataset, init, accel, K) case from a deterministic seed.
+pub fn run_case(
+    x: &aakm::data::DataMatrix,
+    k: usize,
+    init: InitMethod,
+    accel: Acceleration,
+    seed: u64,
+) -> RunReport {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let c0 = seed_centroids(x, k, init, &mut rng);
+    Solver::new(solver_config(accel)).run(x, c0)
+}
+
+/// Where bench CSVs land.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Iterate the registry (all 20 paper datasets).
+pub fn registry() -> &'static [DatasetSpec] {
+    &REGISTRY
+}
+
+/// Paper-style time cell.
+pub fn fmt_time(seconds: f64) -> String {
+    format!("{seconds:.2}")
+}
+
+/// Paper-style MSE cell.
+pub fn fmt_mse(mse: f64) -> String {
+    format!("{mse:.2}")
+}

@@ -1,0 +1,61 @@
+//! Convergence-rate figure: per-iteration energy traces of Lloyd vs the
+//! accelerated solver on four representative datasets (the evidence behind
+//! the paper's §2 convergence discussion — the paper prints tables only;
+//! we emit the underlying series as CSV plus an ASCII preview).
+
+mod common;
+
+use aakm::config::Acceleration;
+use aakm::init::InitMethod;
+use aakm::rng::Pcg32;
+use aakm::init::seed_centroids;
+use aakm::kmeans::Solver;
+use aakm::config::SolverConfig;
+use common::{dataset, registry, results_dir, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let picks = [2usize, 8, 11, 13]; // Slice (manifold), Eb (curve), Colorment (blobs), Birch (grid)
+    let dir = results_dir();
+    for num in picks {
+        let spec = &registry()[num - 1];
+        let x = dataset(spec, scale);
+        let mut rng = Pcg32::seed_from_u64(0xF16 + num as u64);
+        let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+        let run = |accel| {
+            let cfg = SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() };
+            Solver::new(cfg).run(&x, c0.clone())
+        };
+        let lloyd = run(Acceleration::None);
+        let ours = run(Acceleration::DynamicM(2));
+        // CSV: iter, lloyd_energy, ours_energy, ours_m
+        let mut csv = String::from("iter,lloyd_energy,ours_energy,ours_m\n");
+        let len = lloyd.energy_trace.len().max(ours.energy_trace.len());
+        for i in 0..len {
+            let l = lloyd.energy_trace.get(i).map_or(String::new(), |v| format!("{v}"));
+            let o = ours.energy_trace.get(i).map_or(String::new(), |v| format!("{v}"));
+            let m = ours.m_trace.get(i).map_or(String::new(), |v| format!("{v}"));
+            csv.push_str(&format!("{i},{l},{o},{m}\n"));
+        }
+        let path = dir.join(format!("fig_convergence_{}.csv", spec.name));
+        std::fs::write(&path, csv).expect("write csv");
+        // ASCII summary.
+        let e_star = lloyd.energy.min(ours.energy);
+        let progress = |trace: &[f64], frac: f64| {
+            let target = e_star + (trace[0] - e_star) * frac;
+            trace.iter().position(|&e| e <= target).unwrap_or(trace.len())
+        };
+        println!(
+            "#{:<2} {:<18} lloyd {:>4} iters / ours {:>4} ({:>4} acc) | iters to 99% progress: lloyd {:>4}, ours {:>4} | csv {}",
+            spec.number,
+            spec.name,
+            lloyd.iterations,
+            ours.iterations,
+            ours.accepted,
+            progress(&lloyd.energy_trace, 0.01),
+            progress(&ours.energy_trace, 0.01),
+            path.display()
+        );
+    }
+    println!("(scale = {scale:?})");
+}

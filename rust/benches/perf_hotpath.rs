@@ -1,0 +1,147 @@
+//! §Perf harness — the per-layer profiling the optimization pass records in
+//! EXPERIMENTS.md:
+//!
+//! * L3 micro: assignment-engine cost per call (cold vs warm vs post-jump),
+//!   the fused update+energy pass vs separate passes, AA solve cost vs m.
+//! * L3 macro: per-iteration overhead of Algorithm 1 vs plain Lloyd.
+//! * PJRT: G-step execution cost per bucket (when artifacts exist).
+
+mod common;
+
+use aakm::anderson::AndersonAccelerator;
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::data::synth;
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::lloyd::{self, AssignmentEngine, HamerlyEngine, NaiveEngine};
+use aakm::metrics::Stopwatch;
+use aakm::par::ThreadPool;
+use aakm::rng::{Pcg32, Rng};
+
+fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    sw.seconds() * 1000.0 / iters as f64
+}
+
+fn main() {
+    let mut rng = Pcg32::seed_from_u64(0x9E8F);
+    let n = 100_000;
+    let (d, k) = (8usize, 10usize);
+    let x = synth::gaussian_blobs_ex(&mut rng, n, d, k, 2.0, 0.4, 0.05, 2.0);
+    let c = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
+    let pool = ThreadPool::new(1);
+    println!("## L3 micro (n={n}, d={d}, K={k}, 1 thread)\n");
+
+    // Assignment engines: cold, warm (small Lloyd motion), post-jump.
+    let mut out = Vec::new();
+    let mut naive = NaiveEngine::new();
+    let t_naive = time_ms(3, || naive.assign(&x, &c, &pool, &mut out));
+    println!("naive assign:            {t_naive:8.2} ms/call");
+    let mut ham = HamerlyEngine::new();
+    ham.assign(&x, &c, &pool, &mut out); // cold init
+    let mut c_small = c.clone();
+    let t_warm = time_ms(5, || {
+        // small Lloyd-like motion
+        for j in 0..k {
+            for t in 0..d {
+                c_small[(j, t)] += 1e-4;
+            }
+        }
+        ham.assign(&x, &c_small, &pool, &mut out);
+    });
+    println!("hamerly warm (small step): {t_warm:6.2} ms/call");
+    let mut c_jump = c.clone();
+    let mut jrng = Pcg32::seed_from_u64(1);
+    let t_jump = time_ms(5, || {
+        for j in 0..k {
+            for t in 0..d {
+                c_jump[(j, t)] += 0.05 * jrng.next_gaussian();
+            }
+        }
+        ham.assign(&x, &c_jump, &pool, &mut out);
+    });
+    println!("hamerly post-jump:       {t_jump:8.2} ms/call  ({:.2}x warm)", t_jump / t_warm);
+
+    // Fused update+energy vs separate passes.
+    let assign = lloyd::brute_force_assign(&x, &c);
+    let mut cn = c.clone();
+    let t_sep = time_ms(10, || {
+        lloyd::update_step(&x, &assign, &c, &mut cn, &pool);
+        let _ = lloyd::energy(&x, &c, &assign, &pool);
+    });
+    let t_fused = time_ms(10, || {
+        let _ = lloyd::update_and_energy(&x, &assign, &c, &mut cn, &pool);
+    });
+    println!(
+        "update+energy separate:  {t_sep:8.2} ms | fused: {t_fused:6.2} ms ({:.2}x)",
+        t_sep / t_fused
+    );
+
+    // AA solve cost vs m (dim = K*d).
+    println!("\nAA propose cost vs m (dim = {}):", k * d);
+    for m in [2usize, 5, 10, 30] {
+        let mut acc = AndersonAccelerator::new(m, k * d);
+        let mut grng = Pcg32::seed_from_u64(m as u64);
+        let g: Vec<f64> = (0..k * d).map(|_| grng.next_gaussian()).collect();
+        let f: Vec<f64> = (0..k * d).map(|_| grng.next_gaussian()).collect();
+        // warm the history
+        for _ in 0..m + 1 {
+            let g2: Vec<f64> = g.iter().map(|v| v + grng.next_gaussian() * 0.01).collect();
+            let f2: Vec<f64> = f.iter().map(|v| v * 0.9 + grng.next_gaussian() * 0.01).collect();
+            let _ = acc.propose(&g2, &f2, m);
+        }
+        let t = time_ms(200, || {
+            let g2: Vec<f64> = g.iter().map(|v| v + 0.001).collect();
+            let f2: Vec<f64> = f.iter().map(|v| v * 0.9).collect();
+            let _ = acc.propose(&g2, &f2, m);
+        });
+        println!("  m={m:<3} {t:8.4} ms/propose");
+    }
+
+    // Macro: per-iteration cost ratio ours vs lloyd.
+    println!("\n## L3 macro — per-iteration overhead vs Lloyd\n");
+    for (name, num) in [("Eb", 8usize), ("Colorment", 11), ("Birch", 13)] {
+        let spec = &aakm::data::REGISTRY[num - 1];
+        let x = spec.generate_scaled((50_000.0 / spec.n as f64).min(1.0));
+        let mut srng = Pcg32::seed_from_u64(7);
+        let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut srng);
+        let lloyd = Solver::new(SolverConfig {
+            accel: Acceleration::None,
+            threads: 1,
+            ..SolverConfig::default()
+        })
+        .run(&x, c0.clone());
+        let ours =
+            Solver::new(SolverConfig { threads: 1, ..SolverConfig::default() }).run(&x, c0);
+        let per_l = lloyd.seconds / lloyd.iterations.max(1) as f64 * 1000.0;
+        let per_o = ours.seconds / ours.iterations.max(1) as f64 * 1000.0;
+        println!(
+            "{name:<12} lloyd {:>4} it ({per_l:6.2} ms/it) | ours {:>4} it ({per_o:6.2} ms/it) | overhead {:.2}x | time ratio {:.2}x",
+            lloyd.iterations,
+            ours.iterations,
+            per_o / per_l,
+            lloyd.seconds / ours.seconds.max(1e-12),
+        );
+    }
+
+    // PJRT G-step cost per bucket.
+    println!("\n## PJRT G-step (AOT artifact) cost\n");
+    match aakm::runtime::PjrtRuntime::open(&aakm::runtime::default_artifact_dir()) {
+        Ok(rt) => {
+            for (bn, bd) in [(1024usize, 8usize), (4096, 8), (16384, 8)] {
+                let mut prng = Pcg32::seed_from_u64(3);
+                let xb = synth::gaussian_blobs(&mut prng, bn - 7, bd, 10, 2.0, 0.3);
+                let cb = seed_centroids(&xb, 10, InitMethod::Random, &mut prng);
+                let _ = rt.g_step(&xb, &cb).expect("warm-up/compile");
+                let t = time_ms(10, || {
+                    let _ = rt.g_step(&xb, &cb).expect("g_step");
+                });
+                println!("  bucket n={bn:<6} d={bd}: {t:8.2} ms/G-step");
+            }
+        }
+        Err(e) => println!("  skipped (no artifacts): {e}"),
+    }
+}

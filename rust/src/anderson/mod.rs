@@ -1,0 +1,323 @@
+//! Anderson acceleration — generic over fixed-point maps.
+//!
+//! This module packages the paper's two algorithmic ingredients in reusable
+//! form (the paper's conclusion explicitly points at "other problems" with
+//! Lloyd-like structure):
+//!
+//! * [`AndersonAccelerator`] — the stabilized AA step of Peng et al. 2018:
+//!   feed the map output `G^t` and residual `F^t = G^t − C^t` each
+//!   iteration, get the extrapolated next iterate (Eq. 7–8). The caller
+//!   applies the energy-decrease guard and reverts to the plain iterate when
+//!   the extrapolation fails (Algorithm 1 lines 13–15).
+//! * [`MController`] — the paper's dynamic-`m` trust-region-style rule
+//!   (Algorithm 1 lines 8–12, §2.2).
+//!
+//! [`accelerated_fixed_point`] glues both onto an arbitrary map + energy
+//! function; the K-Means solver in [`crate::kmeans`] instantiates the same
+//! loop with engine-aware assignment reuse.
+
+use crate::linalg::AndersonLsWorkspace;
+
+/// Dynamic adjustment of the AA window `m` (paper §2.2).
+///
+/// After each iterate, feed the energy-decrease ratio
+/// `r = (E^{t-1} − E^t) / (E^{t-2} − E^{t-1})`:
+/// `r < ε₁` shrinks `m`, `r > ε₂` grows it (clamped to `[0, m_max]`).
+#[derive(Debug, Clone)]
+pub struct MController {
+    m: usize,
+    m_max: usize,
+    epsilon1: f64,
+    epsilon2: f64,
+}
+
+impl MController {
+    /// Paper defaults: ε₁ = 0.02, ε₂ = 0.5, m̄ = 30.
+    pub fn new(m0: usize, m_max: usize, epsilon1: f64, epsilon2: f64) -> Self {
+        assert!(epsilon1 <= epsilon2, "ε₁ must not exceed ε₂");
+        Self { m: m0.min(m_max), m_max, epsilon1, epsilon2 }
+    }
+
+    /// Current window size.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// History cap m̄.
+    pub fn m_max(&self) -> usize {
+        self.m_max
+    }
+
+    /// Apply Algorithm 1 lines 8–12 given the last two energy decreases.
+    /// Non-finite or non-positive denominators (start-up, plateau) leave
+    /// `m` unchanged.
+    pub fn adjust(&mut self, decrease_now: f64, decrease_prev: f64) {
+        if !decrease_prev.is_finite() || decrease_prev <= 0.0 || !decrease_now.is_finite() {
+            return;
+        }
+        let ratio = decrease_now / decrease_prev;
+        if ratio < self.epsilon1 {
+            self.m = self.m.saturating_sub(1);
+        } else if ratio > self.epsilon2 {
+            self.m = (self.m + 1).min(self.m_max);
+        }
+    }
+}
+
+/// Stabilized Anderson accelerator over flattened iterates.
+///
+/// Call [`AndersonAccelerator::propose`] once per iteration with the plain
+/// fixed-point output `g_t` and residual `f_t`; it returns the accelerated
+/// candidate (equal to `g_t` when no history or `m_use == 0`). The caller
+/// decides acceptance and never needs to tell the accelerator — history is
+/// built from the `(g_t, f_t)` stream regardless, exactly as Algorithm 1
+/// pushes every `(G^t, F^t)` pair.
+#[derive(Debug, Clone)]
+pub struct AndersonAccelerator {
+    ws: AndersonLsWorkspace,
+    prev_f: Option<Vec<f64>>,
+    prev_g: Option<Vec<f64>>,
+    /// Count of propose() calls that actually extrapolated.
+    accelerated_steps: u64,
+}
+
+impl AndersonAccelerator {
+    /// Accelerator for residuals of dimension `dim` keeping up to `m_max`
+    /// difference columns.
+    pub fn new(m_max: usize, dim: usize) -> Self {
+        Self {
+            ws: AndersonLsWorkspace::new(m_max.max(1), dim),
+            prev_f: None,
+            prev_g: None,
+            accelerated_steps: 0,
+        }
+    }
+
+    /// Feed this iteration's `(g_t, f_t)` and get the next iterate proposal
+    /// using at most `m_use` history columns.
+    pub fn propose(&mut self, g_t: &[f64], f_t: &[f64], m_use: usize) -> Vec<f64> {
+        debug_assert_eq!(g_t.len(), self.ws.dim());
+        debug_assert_eq!(f_t.len(), self.ws.dim());
+        if let (Some(pf), Some(pg)) = (&self.prev_f, &self.prev_g) {
+            let mut df = vec![0.0; f_t.len()];
+            let mut dg = vec![0.0; g_t.len()];
+            crate::linalg::sub(f_t, pf, &mut df);
+            crate::linalg::sub(g_t, pg, &mut dg);
+            self.ws.push(df, dg);
+        }
+        self.prev_f = Some(f_t.to_vec());
+        self.prev_g = Some(g_t.to_vec());
+        if m_use == 0 || self.ws.is_empty() {
+            return g_t.to_vec();
+        }
+        match self.ws.solve(f_t, m_use) {
+            Some(theta) => {
+                self.accelerated_steps += 1;
+                self.ws.accelerate(g_t, &theta)
+            }
+            None => g_t.to_vec(),
+        }
+    }
+
+    /// Number of proposals that used extrapolation (vs pass-through).
+    pub fn accelerated_steps(&self) -> u64 {
+        self.accelerated_steps
+    }
+
+    /// Drop all history (restart).
+    pub fn reset(&mut self) {
+        self.ws.clear();
+        self.prev_f = None;
+        self.prev_g = None;
+    }
+}
+
+/// Outcome of one accelerated fixed-point solve.
+#[derive(Debug, Clone)]
+pub struct FixedPointReport {
+    /// Final iterate.
+    pub solution: Vec<f64>,
+    /// Energy at the solution.
+    pub energy: f64,
+    /// Iterations taken.
+    pub iterations: usize,
+    /// Iterations whose accelerated candidate was accepted.
+    pub accepted: usize,
+    /// Energy trace (one entry per iteration).
+    pub trace: Vec<f64>,
+}
+
+/// Generic stabilized-AA driver for any fixed-point map `g` with a merit
+/// function `energy` that `g` monotonically decreases (the MM property
+/// Lloyd's algorithm has). Demonstrates that the paper's scheme transfers
+/// beyond K-Means; the K-Means solver uses a specialized loop.
+pub fn accelerated_fixed_point(
+    x0: &[f64],
+    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    mut energy: impl FnMut(&[f64]) -> f64,
+    controller: &mut MController,
+    max_iters: usize,
+    tol: f64,
+) -> FixedPointReport {
+    let dim = x0.len();
+    let mut acc = AndersonAccelerator::new(controller.m_max(), dim);
+    let mut x = x0.to_vec();
+    let mut g_x = g(&x);
+    let mut e_prev = f64::INFINITY;
+    let mut decrease_prev = f64::INFINITY;
+    let mut accepted = 0;
+    let mut trace = Vec::new();
+    let mut candidate_was_accel = false;
+    for t in 0..max_iters {
+        let mut e = energy(&x);
+        // Energy guard: revert to the plain iterate when the accelerated
+        // candidate failed to decrease.
+        if candidate_was_accel && e >= e_prev {
+            x = g_x.clone();
+            e = energy(&x);
+        } else if candidate_was_accel {
+            accepted += 1;
+        }
+        trace.push(e);
+        controller.adjust(e_prev - e, decrease_prev);
+        decrease_prev = e_prev - e;
+        e_prev = e;
+        g_x = g(&x);
+        let f_t: Vec<f64> = g_x.iter().zip(&x).map(|(a, b)| a - b).collect();
+        let res: f64 = f_t.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if res < tol {
+            let e_final = energy(&g_x);
+            return FixedPointReport {
+                solution: g_x,
+                energy: e_final,
+                iterations: t + 1,
+                accepted,
+                trace,
+            };
+        }
+        let m_use = controller.m();
+        let next = acc.propose(&g_x, &f_t, m_use);
+        candidate_was_accel = m_use > 0 && next != g_x;
+        x = next;
+    }
+    let e = energy(&x);
+    trace.push(e);
+    FixedPointReport { solution: x, energy: e, iterations: max_iters, accepted, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_follows_algorithm1_rules() {
+        let mut c = MController::new(2, 30, 0.02, 0.5);
+        // Large ratio grows m.
+        c.adjust(1.0, 1.0); // ratio 1.0 > 0.5
+        assert_eq!(c.m(), 3);
+        // Tiny ratio shrinks m.
+        c.adjust(0.001, 1.0); // ratio 0.001 < 0.02
+        assert_eq!(c.m(), 2);
+        // Mid ratio leaves m.
+        c.adjust(0.2, 1.0);
+        assert_eq!(c.m(), 2);
+    }
+
+    #[test]
+    fn controller_clamps_to_bounds() {
+        let mut c = MController::new(0, 2, 0.02, 0.5);
+        c.adjust(0.0001, 1.0);
+        assert_eq!(c.m(), 0, "m must not underflow");
+        for _ in 0..5 {
+            c.adjust(1.0, 1.0);
+        }
+        assert_eq!(c.m(), 2, "m must cap at m_max");
+    }
+
+    #[test]
+    fn controller_ignores_degenerate_denominator() {
+        let mut c = MController::new(5, 30, 0.02, 0.5);
+        c.adjust(1.0, f64::INFINITY); // start-up: E^0 = +inf
+        assert_eq!(c.m(), 5);
+        c.adjust(1.0, 0.0); // plateau
+        assert_eq!(c.m(), 5);
+        c.adjust(f64::NAN, 1.0);
+        assert_eq!(c.m(), 5);
+    }
+
+    #[test]
+    fn accelerator_passthrough_without_history() {
+        let mut acc = AndersonAccelerator::new(5, 3);
+        let g = vec![1.0, 2.0, 3.0];
+        let f = vec![0.1, 0.1, 0.1];
+        let out = acc.propose(&g, &f, 5);
+        assert_eq!(out, g, "first call has no history: pass through");
+        assert_eq!(acc.accelerated_steps(), 0);
+    }
+
+    #[test]
+    fn accelerator_m_zero_is_plain_iteration() {
+        let mut acc = AndersonAccelerator::new(5, 2);
+        acc.propose(&[1.0, 1.0], &[0.5, 0.5], 5);
+        let g2 = vec![1.5, 1.2];
+        let out = acc.propose(&g2, &[0.2, 0.3], 0);
+        assert_eq!(out, g2);
+    }
+
+    /// AA solves a linear contraction dramatically faster than plain
+    /// iteration — the quasi-Newton property the paper leans on.
+    #[test]
+    fn accelerates_linear_contraction() {
+        let a = [0.9, 0.85, 0.95, 0.8];
+        let b = [1.0, -2.0, 0.5, 3.0];
+        let fixed: Vec<f64> = (0..4).map(|i| b[i] / (1.0 - a[i])).collect();
+        let g = |x: &[f64]| -> Vec<f64> { (0..4).map(|i| a[i] * x[i] + b[i]).collect() };
+        let energy = |x: &[f64]| -> f64 {
+            x.iter().zip(&fixed).map(|(v, f)| (v - f) * (v - f)).sum()
+        };
+        // Plain iteration count to tol.
+        let mut x = vec![0.0; 4];
+        let mut plain_iters = 0;
+        while energy(&x) > 1e-16 && plain_iters < 10_000 {
+            x = g(&x);
+            plain_iters += 1;
+        }
+        // Accelerated.
+        let mut ctl = MController::new(4, 10, 0.02, 0.5);
+        let report =
+            accelerated_fixed_point(&[0.0; 4], g, energy, &mut ctl, 1000, 1e-10);
+        assert!(
+            report.iterations * 5 < plain_iters,
+            "AA {} iters vs plain {plain_iters}",
+            report.iterations
+        );
+        for i in 0..4 {
+            assert!((report.solution[i] - fixed[i]).abs() < 1e-6);
+        }
+    }
+
+    /// Alternating projections onto two lines through the origin — the
+    /// map is nonexpansive and the energy guard must keep AA stable.
+    #[test]
+    fn alternating_projections_stays_monotone() {
+        // Project onto line span{(1,0.2)} then span{(0.2,1)}; intersection
+        // is the origin. Energy = squared norm.
+        let proj = |u: [f64; 2], x: &[f64]| -> Vec<f64> {
+            let nn = u[0] * u[0] + u[1] * u[1];
+            let t = (u[0] * x[0] + u[1] * x[1]) / nn;
+            vec![t * u[0], t * u[1]]
+        };
+        let g = move |x: &[f64]| -> Vec<f64> {
+            let y = proj([1.0, 0.2], x);
+            proj([0.2, 1.0], &y)
+        };
+        let energy = |x: &[f64]| -> f64 { x[0] * x[0] + x[1] * x[1] };
+        let mut ctl = MController::new(2, 5, 0.02, 0.5);
+        let report = accelerated_fixed_point(&[3.0, 4.0], g, energy, &mut ctl, 200, 1e-12);
+        // Trace must be monotonically non-increasing (the guard's contract).
+        for w in report.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "energy increased: {} -> {}", w[0], w[1]);
+        }
+        assert!(report.energy < 1e-8, "should reach the intersection");
+    }
+}

@@ -1,0 +1,88 @@
+//! Tiny flag parser: `--key value` pairs and boolean `--flag`s.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Boolean flags the CLI understands (everything else expects a value).
+const BOOL_FLAGS: &[&str] = &["compare", "trace", "verbose", "quiet"];
+
+impl Args {
+    /// Parse an argv slice (after the subcommand).
+    pub fn parse(argv: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let token = argv[i];
+            let Some(name) = token.strip_prefix("--") else {
+                bail!("unexpected positional argument '{token}'");
+            };
+            if name.is_empty() {
+                bail!("bare '--' is not supported");
+            }
+            // --key=value form.
+            if let Some((k, v)) = name.split_once('=') {
+                out.values.insert(k.to_string(), v.to_string());
+                i += 1;
+                continue;
+            }
+            if BOOL_FLAGS.contains(&name) {
+                out.flags.push(name.to_string());
+                i += 1;
+                continue;
+            }
+            let Some(value) = argv.get(i + 1) else {
+                bail!("flag --{name} expects a value");
+            };
+            out.values.insert(name.to_string(), value.to_string());
+            i += 2;
+        }
+        Ok(out)
+    }
+
+    /// Value of `--key value` (or `--key=value`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// Whether a boolean `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_and_flags() {
+        let a = Args::parse(&["--k", "10", "--compare", "--dataset", "Birch"]).unwrap();
+        assert_eq!(a.get("k"), Some("10"));
+        assert_eq!(a.get("dataset"), Some("Birch"));
+        assert!(a.flag("compare"));
+        assert!(!a.flag("trace"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&["--scale=0.5"]).unwrap();
+        assert_eq!(a.get("scale"), Some("0.5"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&["--k"]).is_err());
+    }
+
+    #[test]
+    fn positional_is_error() {
+        assert!(Args::parse(&["oops"]).is_err());
+    }
+}

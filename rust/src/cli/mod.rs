@@ -1,0 +1,317 @@
+//! Command-line interface (hand-rolled; no `clap` offline).
+//!
+//! Subcommands:
+//!
+//! * `run`     — one clustering experiment (paper method and/or baseline).
+//! * `datagen` — materialize a registry dataset to CSV / binary.
+//! * `serve`   — run the coordinator service on a synthetic job stream.
+//! * `inspect` — show the AOT artifact manifest.
+//! * `help`    — usage.
+
+mod args;
+
+pub use args::Args;
+
+use crate::config::{Acceleration, EngineKind, ExperimentConfig};
+use crate::coordinator::{Coordinator, CoordinatorConfig, JobData, JobSpec};
+use crate::data::{self, DataMatrix};
+use crate::init::{seed_centroids, InitMethod};
+use crate::kmeans::Solver;
+use crate::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+const USAGE: &str = "\
+aakm — Fast K-Means with Anderson Acceleration (Zhang et al. 2018)
+
+USAGE:
+    repro <command> [flags]
+
+COMMANDS:
+    run      Run one clustering experiment
+             --dataset <registry name | csv/fvecs path>   (default Birch)
+             --k <clusters>                               (default 10)
+             --init <random|k-means++|afk-mc2|bf|clarans> (default k-means++)
+             --engine <naive|hamerly|elkan|yinyang|pjrt>  (default hamerly)
+             --accel <none|fixed:M|dynamic:M>             (default dynamic:2)
+             --seed <u64>  --scale <0..1>  --threads <n>
+             --config <file.toml>   --compare   --trace
+    datagen  Write a registry dataset to disk
+             --dataset <name> --scale <0..1> --out <path.{csv,fv}>
+    serve    Run the coordinator service demo
+             --workers <n> --jobs <n> --k <clusters> --engine <...>
+    inspect  Print the artifact manifest
+             --artifacts <dir>
+    help     This message
+";
+
+/// CLI entry point (called from `main`).
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    dispatch(&argv.iter().map(String::as_str).collect::<Vec<_>>())
+}
+
+/// Dispatch on a parsed argv (separated from `run` for tests).
+pub fn dispatch(argv: &[&str]) -> Result<()> {
+    let Some((&cmd, rest)) = argv.split_first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd {
+        "run" => cmd_run(&args),
+        "datagen" => cmd_datagen(&args),
+        "serve" => cmd_serve(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `repro help`)"),
+    }
+}
+
+/// Load a dataset: registry name, or a CSV / fvecs path.
+pub fn load_dataset(name: &str, scale: f64) -> Result<DataMatrix> {
+    if let Some(spec) = data::dataset_by_name(name) {
+        return Ok(spec.generate_scaled(scale));
+    }
+    let path = std::path::Path::new(name);
+    if path.exists() {
+        return if path.extension().is_some_and(|e| e == "fv") {
+            data::load_fvecs(path)
+        } else {
+            data::load_csv(path)
+        };
+    }
+    bail!("'{name}' is neither a registry dataset nor a readable file");
+}
+
+fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let doc = crate::config::ConfigDoc::parse_file(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            ExperimentConfig::from_doc(&doc).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.get("k") {
+        cfg.k = v.parse().context("--k")?;
+    }
+    if let Some(v) = args.get("init") {
+        cfg.init = InitMethod::parse(v).with_context(|| format!("bad --init {v}"))?;
+    }
+    if let Some(v) = args.get("engine") {
+        cfg.engine = EngineKind::parse(v).with_context(|| format!("bad --engine {v}"))?;
+    }
+    if let Some(v) = args.get("accel") {
+        cfg.accel =
+            crate::config::parse_accel(v).with_context(|| format!("bad --accel {v}"))?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = args.get("scale") {
+        cfg.scale = v.parse().context("--scale")?;
+    }
+    if let Some(v) = args.get("threads") {
+        cfg.threads = v.parse().context("--threads")?;
+    }
+    Ok(cfg)
+}
+
+fn build_solver(cfg: &ExperimentConfig, trace: bool, artifacts: &str) -> Result<Solver> {
+    let mut scfg = cfg.solver_config();
+    scfg.record_trace = trace;
+    if cfg.engine == EngineKind::Pjrt {
+        let engine = crate::runtime::PjrtEngine::open(std::path::Path::new(artifacts))?;
+        Ok(Solver::with_engine(scfg, Box::new(engine)))
+    } else {
+        Ok(Solver::new(scfg))
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = experiment_from_args(args)?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let x = load_dataset(&cfg.dataset, cfg.scale)?;
+    println!(
+        "dataset {} (n={}, d={}), k={}, init={}, engine={}, seed={}",
+        cfg.dataset,
+        x.n(),
+        x.d(),
+        cfg.k,
+        cfg.init.name(),
+        cfg.engine.name(),
+        cfg.seed
+    );
+    let mut rng = Pcg32::seed_from_u64(cfg.seed);
+    let c0 = seed_centroids(&x, cfg.k, cfg.init, &mut rng);
+    let trace = args.flag("trace");
+    let report = build_solver(&cfg, trace, artifacts)?.run(&x, c0.clone());
+    println!("ours ({:?}): {}", cfg.accel, report.summary());
+    println!("  phases: {}", report.phases.summary());
+    if trace {
+        println!("  energy trace: {:?}", &report.energy_trace);
+        println!("  m trace:      {:?}", &report.m_trace);
+    }
+    if args.flag("compare") {
+        let mut base_cfg = cfg.clone();
+        base_cfg.accel = Acceleration::None;
+        let base = build_solver(&base_cfg, false, artifacts)?.run(&x, c0);
+        println!("lloyd baseline: {}", base.summary());
+        let speedup = base.seconds / report.seconds.max(1e-12);
+        println!(
+            "speedup {speedup:.2}x, iteration ratio {:.2}x",
+            base.iterations as f64 / report.iterations.max(1) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let name = args.get("dataset").context("--dataset required")?;
+    let scale: f64 = args.get("scale").unwrap_or("1.0").parse()?;
+    let out = args.get("out").context("--out required")?;
+    let spec = data::dataset_by_name(name)
+        .with_context(|| format!("unknown registry dataset '{name}'"))?;
+    let x = spec.generate_scaled(scale);
+    let path = std::path::Path::new(out);
+    if path.extension().is_some_and(|e| e == "fv") {
+        data::save_fvecs(path, &x)?;
+    } else {
+        data::save_csv(path, &x)?;
+    }
+    println!("wrote {} (n={}, d={})", out, x.n(), x.d());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers: usize = args.get("workers").unwrap_or("2").parse()?;
+    let jobs: usize = args.get("jobs").unwrap_or("8").parse()?;
+    let k: usize = args.get("k").unwrap_or("10").parse()?;
+    let engine = EngineKind::parse(args.get("engine").unwrap_or("hamerly"))
+        .context("bad --engine")?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        queue_depth: jobs.max(4),
+        solver_threads: 1,
+        artifact_dir: args.get("artifacts").unwrap_or("artifacts").into(),
+    });
+    let sw = crate::metrics::Stopwatch::start();
+    let names = ["HTRU2", "Birch", "Shuttle", "Eb"];
+    for id in 0..jobs as u64 {
+        let job = JobSpec {
+            id,
+            data: JobData::Registry {
+                name: names[id as usize % names.len()].to_string(),
+                scale: 0.05,
+            },
+            k,
+            init: InitMethod::KMeansPlusPlus,
+            seed: id,
+            accel: Acceleration::DynamicM(2),
+            engine,
+            max_iters: 5000,
+        };
+        coord.submit(job)?;
+    }
+    let results = coord.collect(jobs)?;
+    let total = sw.seconds();
+    let mut ok = 0;
+    for r in &results {
+        match &r.outcome {
+            Ok(out) => {
+                ok += 1;
+                println!(
+                    "job {:>3} worker {} wait {:>9.1?} service {:>9.1?}  {} iters  mse {:.4}",
+                    r.id, r.worker, r.queue_wait, r.service_time, out.iterations, out.mse
+                );
+            }
+            Err(e) => println!("job {:>3} FAILED: {e}", r.id),
+        }
+    }
+    println!(
+        "served {ok}/{jobs} jobs in {total:.2}s ({:.2} jobs/s)",
+        jobs as f64 / total
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = crate::runtime::Manifest::load(std::path::Path::new(dir))?;
+    println!(
+        "artifact dir {} (jax {}, tile_n {})",
+        manifest.dir.display(),
+        manifest.jax_version,
+        manifest.tile_n
+    );
+    for s in &manifest.specs {
+        println!(
+            "  {:<28} kind={:<12} n={:<6} d={:<3} k={:<3} {}",
+            s.name, s.kind, s.n, s.d, s.k, s.file
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn help_is_ok() {
+        assert!(dispatch(&["help"]).is_ok());
+        assert!(dispatch(&[]).is_ok());
+    }
+
+    #[test]
+    fn load_dataset_registry_and_missing() {
+        let x = load_dataset("Birch", 0.001).unwrap();
+        assert_eq!(x.d(), 2);
+        assert!(load_dataset("no-such-thing", 1.0).is_err());
+    }
+
+    #[test]
+    fn run_on_tiny_registry_dataset() {
+        // End-to-end CLI run (smoke): tiny scale to stay fast.
+        assert!(dispatch(&[
+            "run", "--dataset", "HTRU2", "--scale", "0.01", "--k", "4", "--threads", "1",
+            "--compare"
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn datagen_roundtrip() {
+        let dir = std::env::temp_dir().join("aakm_cli_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("birch.csv");
+        dispatch(&[
+            "datagen", "--dataset", "Birch", "--scale", "0.001", "--out",
+            out.to_str().unwrap(),
+        ])
+        .unwrap();
+        let x = crate::data::load_csv(&out).unwrap();
+        assert_eq!(x.d(), 2);
+    }
+
+    #[test]
+    fn experiment_from_args_overrides() {
+        let args = Args::parse(&["--k", "25", "--accel", "fixed:7", "--init", "clarans"]).unwrap();
+        let cfg = experiment_from_args(&args).unwrap();
+        assert_eq!(cfg.k, 25);
+        assert_eq!(cfg.accel, Acceleration::FixedM(7));
+        assert_eq!(cfg.init, InitMethod::Clarans);
+    }
+}

@@ -1,0 +1,310 @@
+//! Configuration substrate: a minimal TOML-subset parser (no `serde`/`toml`
+//! offline) plus the typed experiment configuration used by the CLI, the
+//! coordinator and the bench harnesses.
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs where value is
+//! a quoted string, integer, float, bool, or a flat array of those; `#`
+//! comments. This covers every config file the repo ships.
+
+mod toml_lite;
+
+pub use toml_lite::{ConfigDoc, ConfigError, Value};
+
+use crate::init::InitMethod;
+
+/// Which assignment engine backs the solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// O(NK) direct distances.
+    Naive,
+    /// Hamerly 2010 bounds (paper's baseline assignment).
+    Hamerly,
+    /// Elkan 2003 triangle-inequality bounds.
+    Elkan,
+    /// Yinyang group bounds (Ding et al. 2015) — best at large K.
+    Yinyang,
+    /// PJRT-executed AOT G-step (the three-layer hot path).
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(Self::Naive),
+            "hamerly" => Some(Self::Hamerly),
+            "elkan" => Some(Self::Elkan),
+            "yinyang" => Some(Self::Yinyang),
+            "pjrt" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Naive => "naive",
+            Self::Hamerly => "hamerly",
+            Self::Elkan => "elkan",
+            Self::Yinyang => "yinyang",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Acceleration mode of the solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acceleration {
+    /// Plain Lloyd's algorithm (baseline).
+    None,
+    /// Anderson acceleration with a fixed window `m`.
+    FixedM(usize),
+    /// Anderson acceleration with the paper's dynamic-m controller.
+    DynamicM(usize),
+}
+
+/// Solver-level configuration (what [`crate::kmeans::Solver`] needs; the
+/// dataset/seeding fields live in [`ExperimentConfig`]).
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Acceleration mode (paper's method = `DynamicM(2)`).
+    pub accel: Acceleration,
+    /// Assignment engine.
+    pub engine: EngineKind,
+    /// ε₁ from Algorithm 1, paper default 0.02.
+    pub epsilon1: f64,
+    /// ε₂ from Algorithm 1, paper default 0.5.
+    pub epsilon2: f64,
+    /// m̄ history cap, paper default 30.
+    pub m_max: usize,
+    /// Iteration safety cap.
+    pub max_iters: usize,
+    /// Worker threads (0 = host-sized).
+    pub threads: usize,
+    /// Record per-iteration energy / m traces (small overhead).
+    pub record_trace: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self {
+            accel: Acceleration::DynamicM(2),
+            engine: EngineKind::Hamerly,
+            epsilon1: 0.02,
+            epsilon2: 0.5,
+            m_max: 30,
+            max_iters: 5000,
+            threads: 0,
+            record_trace: false,
+        }
+    }
+}
+
+/// A full experiment description (one solver run on one dataset).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Registry dataset name or a path to a CSV/fvecs file.
+    pub dataset: String,
+    /// Number of clusters.
+    pub k: usize,
+    /// Seeding method.
+    pub init: InitMethod,
+    /// Assignment engine.
+    pub engine: EngineKind,
+    /// Acceleration mode.
+    pub accel: Acceleration,
+    /// ε₁ from Algorithm 1 (shrink threshold), paper default 0.02.
+    pub epsilon1: f64,
+    /// ε₂ from Algorithm 1 (grow threshold), paper default 0.5.
+    pub epsilon2: f64,
+    /// m̄, the history cap, paper default 30.
+    pub m_max: usize,
+    /// Iteration safety cap (the paper runs to convergence; this guards CI).
+    pub max_iters: usize,
+    /// RNG seed for data generation and seeding.
+    pub seed: u64,
+    /// Fraction of the paper's N to generate (1.0 = full size).
+    pub scale: f64,
+    /// Worker threads for the assignment step (0 = host-sized).
+    pub threads: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "Birch".to_string(),
+            k: 10,
+            init: InitMethod::KMeansPlusPlus,
+            engine: EngineKind::Hamerly,
+            accel: Acceleration::DynamicM(2),
+            epsilon1: 0.02,
+            epsilon2: 0.5,
+            m_max: 30,
+            max_iters: 5000,
+            seed: 42,
+            scale: 1.0,
+            threads: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Read from a parsed TOML-lite document; missing keys keep defaults.
+    /// Recognized keys live in the `[experiment]` section (or the root).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self, ConfigError> {
+        let mut cfg = Self::default();
+        let sect = |key: &str| {
+            doc.get("experiment", key).or_else(|| doc.get("", key))
+        };
+        if let Some(v) = sect("dataset") {
+            cfg.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = sect("k") {
+            cfg.k = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("init") {
+            let s = v.as_str()?;
+            cfg.init = InitMethod::parse(s)
+                .ok_or_else(|| ConfigError::new(format!("unknown init method '{s}'")))?;
+        }
+        if let Some(v) = sect("engine") {
+            let s = v.as_str()?;
+            cfg.engine = EngineKind::parse(s)
+                .ok_or_else(|| ConfigError::new(format!("unknown engine '{s}'")))?;
+        }
+        if let Some(v) = sect("accel") {
+            cfg.accel = parse_accel(v.as_str()?)
+                .ok_or_else(|| ConfigError::new("bad accel (none|fixed:M|dynamic:M)"))?;
+        }
+        if let Some(v) = sect("epsilon1") {
+            cfg.epsilon1 = v.as_float()?;
+        }
+        if let Some(v) = sect("epsilon2") {
+            cfg.epsilon2 = v.as_float()?;
+        }
+        if let Some(v) = sect("m_max") {
+            cfg.m_max = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("max_iters") {
+            cfg.max_iters = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("seed") {
+            cfg.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = sect("scale") {
+            cfg.scale = v.as_float()?;
+        }
+        if let Some(v) = sect("threads") {
+            cfg.threads = v.as_int()? as usize;
+        }
+        Ok(cfg)
+    }
+}
+
+impl ExperimentConfig {
+    /// Project the solver-level part of this experiment.
+    pub fn solver_config(&self) -> SolverConfig {
+        SolverConfig {
+            accel: self.accel,
+            engine: self.engine,
+            epsilon1: self.epsilon1,
+            epsilon2: self.epsilon2,
+            m_max: self.m_max,
+            max_iters: self.max_iters,
+            threads: self.threads,
+            record_trace: false,
+        }
+    }
+}
+
+/// Parse an acceleration spec: `none`, `fixed:M`, `dynamic:M`.
+pub fn parse_accel(s: &str) -> Option<Acceleration> {
+    let s = s.to_ascii_lowercase();
+    if s == "none" || s == "lloyd" {
+        return Some(Acceleration::None);
+    }
+    let (kind, m) = s.split_once(':')?;
+    let m: usize = m.parse().ok()?;
+    match kind {
+        "fixed" => Some(Acceleration::FixedM(m)),
+        "dynamic" => Some(Acceleration::DynamicM(m)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_from_doc_full() {
+        let text = r#"
+            [experiment]
+            dataset = "HTRU2"
+            k = 100
+            init = "clarans"
+            engine = "elkan"
+            accel = "dynamic:5"
+            epsilon1 = 0.01
+            epsilon2 = 0.6
+            m_max = 20
+            max_iters = 123
+            seed = 7
+            scale = 0.25
+            threads = 2
+        "#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.dataset, "HTRU2");
+        assert_eq!(cfg.k, 100);
+        assert_eq!(cfg.init, InitMethod::Clarans);
+        assert_eq!(cfg.engine, EngineKind::Elkan);
+        assert_eq!(cfg.accel, Acceleration::DynamicM(5));
+        assert_eq!(cfg.epsilon1, 0.01);
+        assert_eq!(cfg.m_max, 20);
+        assert_eq!(cfg.max_iters, 123);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.scale, 0.25);
+        assert_eq!(cfg.threads, 2);
+    }
+
+    #[test]
+    fn experiment_defaults_on_empty_doc() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.epsilon1, 0.02);
+        assert_eq!(cfg.epsilon2, 0.5);
+        assert_eq!(cfg.m_max, 30);
+        assert_eq!(cfg.accel, Acceleration::DynamicM(2));
+    }
+
+    #[test]
+    fn parse_accel_variants() {
+        assert_eq!(parse_accel("none"), Some(Acceleration::None));
+        assert_eq!(parse_accel("fixed:2"), Some(Acceleration::FixedM(2)));
+        assert_eq!(parse_accel("dynamic:5"), Some(Acceleration::DynamicM(5)));
+        assert_eq!(parse_accel("what:3"), None);
+        assert_eq!(parse_accel("fixed:x"), None);
+    }
+
+    #[test]
+    fn engine_kind_roundtrip() {
+        for kind in [
+            EngineKind::Naive,
+            EngineKind::Hamerly,
+            EngineKind::Elkan,
+            EngineKind::Yinyang,
+            EngineKind::Pjrt,
+        ] {
+            assert_eq!(EngineKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(EngineKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn bad_init_is_error() {
+        let doc = ConfigDoc::parse("init = \"quantum\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+}

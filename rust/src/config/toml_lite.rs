@@ -1,0 +1,281 @@
+//! A small TOML-subset parser: sections, scalar values, flat arrays,
+//! comments. Error messages carry line numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse/typing error.
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    msg: String,
+}
+
+impl ConfigError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// String view (strings only).
+    pub fn as_str(&self) -> Result<&str, ConfigError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(ConfigError::new(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    /// Integer view (ints only).
+    pub fn as_int(&self) -> Result<i64, ConfigError> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => Err(ConfigError::new(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    /// Float view (accepts ints too).
+    pub fn as_float(&self) -> Result<f64, ConfigError> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            other => Err(ConfigError::new(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    /// Bool view.
+    pub fn as_bool(&self) -> Result<bool, ConfigError> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => Err(ConfigError::new(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    /// Array view.
+    pub fn as_array(&self) -> Result<&[Value], ConfigError> {
+        match self {
+            Value::Array(v) => Ok(v),
+            other => Err(ConfigError::new(format!("expected array, got {other:?}"))),
+        }
+    }
+}
+
+/// A parsed document: `(section, key) → value`. Root-level keys use the
+/// empty-string section.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::new(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                ConfigError::new(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError::new(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| ConfigError::new(format!("line {}: {}", lineno + 1, e.msg)))?;
+            doc.entries.insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    /// Parse a file.
+    pub fn parse_file(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Look up `key` in `section` ("" for root).
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// All `(section, key)` pairs (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.keys().map(|(s, k)| (s.as_str(), k.as_str()))
+    }
+
+    /// Insert / override a value (CLI `--set section.key=value` support).
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.entries.insert((section.to_string(), key.to_string()), value);
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, ConfigError> {
+    if text.is_empty() {
+        return Err(ConfigError::new("empty value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError::new("unterminated string"))?;
+        if inner.contains('"') {
+            return Err(ConfigError::new("embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| ConfigError::new("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, _> =
+            split_array_items(inner).iter().map(|s| parse_value(s.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = text.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = text.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(ConfigError::new(format!("cannot parse value '{text}'")))
+}
+
+/// Split array items on commas outside quotes.
+fn split_array_items(inner: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut current = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                current.push(c);
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut current));
+            }
+            _ => current.push(c),
+        }
+    }
+    if !current.trim().is_empty() {
+        items.push(current);
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = ConfigDoc::parse(
+            "top = 1\n[alpha]\nname = \"hello\"  # trailing comment\nratio = 0.5\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("alpha", "name").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(doc.get("alpha", "ratio").unwrap().as_float().unwrap(), 0.5);
+        assert!(doc.get("alpha", "flag").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = ConfigDoc::parse("ks = [10, 100, 1000]\nnames = [\"a\", \"b,c\"]\n").unwrap();
+        let ks = doc.get("", "ks").unwrap().as_array().unwrap();
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks[2].as_int().unwrap(), 1000);
+        let names = doc.get("", "names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b,c");
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = ConfigDoc::parse("path = \"/tmp/#not-a-comment\"\n").unwrap();
+        assert_eq!(doc.get("", "path").unwrap().as_str().unwrap(), "/tmp/#not-a-comment");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = ConfigDoc::parse("good = 1\nbad_line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_constructs_error() {
+        assert!(ConfigDoc::parse("[open\n").is_err());
+        assert!(ConfigDoc::parse("s = \"oops\n").is_err());
+        assert!(ConfigDoc::parse("a = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = ConfigDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 3.0);
+        assert!(doc.get("", "x").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut doc = ConfigDoc::parse("k = 10\n").unwrap();
+        doc.set("", "k", Value::Int(99));
+        assert_eq!(doc.get("", "k").unwrap().as_int().unwrap(), 99);
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let doc = ConfigDoc::parse("xs = []\n").unwrap();
+        assert!(doc.get("", "xs").unwrap().as_array().unwrap().is_empty());
+    }
+}

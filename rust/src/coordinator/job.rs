@@ -1,0 +1,136 @@
+//! Job descriptions and results for the clustering service.
+
+use crate::config::{Acceleration, EngineKind, SolverConfig};
+use crate::data::DataMatrix;
+use crate::init::InitMethod;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a job's samples come from.
+#[derive(Debug, Clone)]
+pub enum JobData {
+    /// Caller-provided matrix (shared, zero-copy across the queue).
+    Inline(Arc<DataMatrix>),
+    /// A Table-1 registry dataset, generated at the given scale.
+    Registry { name: String, scale: f64 },
+}
+
+impl JobData {
+    /// Materialize the samples.
+    pub fn materialize(&self) -> anyhow::Result<Arc<DataMatrix>> {
+        match self {
+            JobData::Inline(m) => Ok(Arc::clone(m)),
+            JobData::Registry { name, scale } => {
+                let spec = crate::data::dataset_by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown registry dataset '{name}'"))?;
+                Ok(Arc::new(spec.generate_scaled(*scale)))
+            }
+        }
+    }
+}
+
+/// One clustering request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Caller-chosen identifier (echoed in the result).
+    pub id: u64,
+    /// Samples.
+    pub data: JobData,
+    /// Number of clusters.
+    pub k: usize,
+    /// Seeding method.
+    pub init: InitMethod,
+    /// Seed for data generation / seeding.
+    pub seed: u64,
+    /// Acceleration mode (paper default: dynamic m=2).
+    pub accel: Acceleration,
+    /// Assignment engine.
+    pub engine: EngineKind,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl JobSpec {
+    /// A job over inline data with the paper's default solver settings.
+    pub fn inline(id: u64, data: Arc<DataMatrix>, k: usize) -> Self {
+        Self {
+            id,
+            data: JobData::Inline(data),
+            k,
+            init: InitMethod::KMeansPlusPlus,
+            seed: id ^ 0x5EED,
+            accel: Acceleration::DynamicM(2),
+            engine: EngineKind::Hamerly,
+            max_iters: 5000,
+        }
+    }
+
+    /// Project the solver configuration for this job.
+    pub fn solver_config(&self, threads: usize) -> SolverConfig {
+        SolverConfig {
+            accel: self.accel,
+            engine: self.engine,
+            max_iters: self.max_iters,
+            threads,
+            record_trace: false,
+            ..SolverConfig::default()
+        }
+    }
+}
+
+/// Completed-job summary (the heavy centroid/assignment payload is kept;
+/// callers that only need metrics can drop it).
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// Err text when the job failed (bad dataset, missing bucket, ...).
+    pub outcome: Result<JobOutcome, String>,
+    /// Time spent queued before a worker picked the job up.
+    pub queue_wait: Duration,
+    /// Time spent inside the solver.
+    pub service_time: Duration,
+    /// Index of the worker that ran the job.
+    pub worker: usize,
+}
+
+/// Successful clustering payload.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub iterations: usize,
+    pub accepted: usize,
+    pub energy: f64,
+    pub mse: f64,
+    pub converged: bool,
+    pub centroids: DataMatrix,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_job_defaults_match_paper() {
+        let data = Arc::new(DataMatrix::zeros(4, 2));
+        let job = JobSpec::inline(7, data, 2);
+        assert_eq!(job.accel, Acceleration::DynamicM(2));
+        assert_eq!(job.engine, EngineKind::Hamerly);
+        let cfg = job.solver_config(1);
+        assert_eq!(cfg.epsilon1, 0.02);
+        assert_eq!(cfg.epsilon2, 0.5);
+        assert_eq!(cfg.m_max, 30);
+    }
+
+    #[test]
+    fn registry_data_materializes() {
+        let jd = JobData::Registry { name: "Birch".into(), scale: 0.001 };
+        let m = jd.materialize().unwrap();
+        assert_eq!(m.d(), 2);
+        assert!(m.n() >= 64);
+    }
+
+    #[test]
+    fn unknown_registry_errors() {
+        let jd = JobData::Registry { name: "nope".into(), scale: 0.1 };
+        assert!(jd.materialize().is_err());
+    }
+}

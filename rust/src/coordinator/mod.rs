@@ -1,0 +1,301 @@
+//! The clustering service coordinator — Layer 3's process topology.
+//!
+//! A bounded job queue feeds a pool of worker threads; each worker owns its
+//! solver stack (assignment engine, thread pool, and — for
+//! `EngineKind::Pjrt` — its own PJRT runtime, since PJRT handles are not
+//! `Send`). Submission applies backpressure when the queue is full; results
+//! stream back over a channel with queue-wait and service-time metrics so
+//! the service-style examples can report latency/throughput.
+//!
+//! The paper's contribution is the solver itself, so this layer is kept
+//! deliberately thin (CLI + lifecycle + dispatch), as DESIGN.md specifies —
+//! but it is a real service: bounded queues, graceful shutdown, failure
+//! isolation per job, and per-worker warm engine reuse.
+
+mod job;
+pub mod stream;
+
+pub use job::{JobData, JobOutcome, JobResult, JobSpec};
+pub use stream::StreamingClusterer;
+
+use crate::init::seed_centroids;
+use crate::kmeans::Solver;
+use crate::metrics::Stopwatch;
+use crate::rng::Pcg32;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads (each runs one job at a time).
+    pub workers: usize,
+    /// Bounded queue depth; `submit` blocks when full (backpressure).
+    pub queue_depth: usize,
+    /// Threads each worker's solver may use for the assignment step.
+    pub solver_threads: usize,
+    /// Artifact directory for PJRT-engine jobs.
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 16,
+            solver_threads: 1,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+        }
+    }
+}
+
+enum Envelope {
+    Job(Box<JobSpec>, Instant),
+    Shutdown,
+}
+
+/// The running service.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<Envelope>,
+    results_rx: Mutex<mpsc::Receiver<JobResult>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    submitted: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Start the worker pool.
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+        let mut workers = Vec::new();
+        for widx in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let results_tx = results_tx.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &rx, &results_tx)));
+        }
+        Self {
+            tx,
+            results_rx: Mutex::new(results_rx),
+            workers,
+            submitted: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, job: JobSpec) -> Result<()> {
+        self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Envelope::Job(Box::new(job), Instant::now()))
+            .context("coordinator is shut down")
+    }
+
+    /// Try to submit without blocking; `false` when the queue is full.
+    pub fn try_submit(&self, job: JobSpec) -> Result<bool> {
+        match self.tx.try_send(Envelope::Job(Box::new(job), Instant::now())) {
+            Ok(()) => {
+                self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(true)
+            }
+            Err(mpsc::TrySendError::Full(_)) => Ok(false),
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                anyhow::bail!("coordinator is shut down")
+            }
+        }
+    }
+
+    /// Number of jobs submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Receive the next completed job (blocking).
+    pub fn recv(&self) -> Result<JobResult> {
+        self.results_rx
+            .lock()
+            .unwrap()
+            .recv()
+            .context("all workers exited")
+    }
+
+    /// Drain exactly `count` results (blocking), in completion order.
+    pub fn collect(&self, count: usize) -> Result<Vec<JobResult>> {
+        (0..count).map(|_| self.recv()).collect()
+    }
+
+    /// Stop accepting jobs, finish the queue, join the workers.
+    pub fn shutdown(self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Envelope::Shutdown);
+        }
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    widx: usize,
+    cfg: &CoordinatorConfig,
+    rx: &Arc<Mutex<mpsc::Receiver<Envelope>>>,
+    results: &mpsc::Sender<JobResult>,
+) {
+    // PJRT runtime is created lazily per worker (it is not Send, so it must
+    // be born on this thread) and reused across that worker's jobs so the
+    // executable cache stays warm.
+    let mut pjrt: Option<std::rc::Rc<crate::runtime::PjrtRuntime>> = None;
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let (job, enqueued_at) = match msg {
+            Ok(Envelope::Job(job, at)) => (job, at),
+            Ok(Envelope::Shutdown) | Err(_) => return,
+        };
+        let queue_wait = enqueued_at.elapsed();
+        let sw = Stopwatch::start();
+        let outcome = run_job(&job, cfg, &mut pjrt);
+        let result = JobResult {
+            id: job.id,
+            outcome: outcome.map_err(|e| format!("{e:#}")),
+            queue_wait,
+            service_time: sw.elapsed(),
+            worker: widx,
+        };
+        if results.send(result).is_err() {
+            return; // caller dropped the coordinator
+        }
+    }
+}
+
+fn run_job(
+    job: &JobSpec,
+    cfg: &CoordinatorConfig,
+    pjrt: &mut Option<std::rc::Rc<crate::runtime::PjrtRuntime>>,
+) -> Result<JobOutcome> {
+    let data = job.data.materialize()?;
+    anyhow::ensure!(job.k >= 1 && job.k <= data.n(), "bad k={} for n={}", job.k, data.n());
+    let mut rng = Pcg32::seed_from_u64(job.seed);
+    let c0 = seed_centroids(&data, job.k, job.init, &mut rng);
+    let solver_cfg = job.solver_config(cfg.solver_threads);
+    let mut solver = if job.engine == crate::config::EngineKind::Pjrt {
+        let rt = match pjrt {
+            Some(rt) => std::rc::Rc::clone(rt),
+            None => {
+                let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&cfg.artifact_dir)?);
+                *pjrt = Some(std::rc::Rc::clone(&rt));
+                rt
+            }
+        };
+        Solver::with_engine(solver_cfg, Box::new(crate::runtime::PjrtEngine::new(rt)))
+    } else {
+        Solver::new(solver_cfg)
+    };
+    let report = solver.run(&data, c0);
+    Ok(JobOutcome {
+        iterations: report.iterations,
+        accepted: report.accepted,
+        energy: report.energy,
+        mse: report.mse,
+        converged: report.converged,
+        centroids: report.centroids,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use std::sync::Arc;
+
+    fn tiny_data(seed: u64) -> Arc<crate::data::DataMatrix> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        Arc::new(synth::gaussian_blobs(&mut rng, 300, 3, 4, 2.0, 0.3))
+    }
+
+    #[test]
+    fn runs_jobs_and_returns_results() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..CoordinatorConfig::default()
+        });
+        for id in 0..6 {
+            coord.submit(JobSpec::inline(id, tiny_data(id), 4)).unwrap();
+        }
+        let results = coord.collect(6).unwrap();
+        assert_eq!(results.len(), 6);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        for r in &results {
+            let out = r.outcome.as_ref().expect("job should succeed");
+            assert!(out.converged);
+            assert!(out.mse > 0.0);
+            assert!(r.service_time.as_nanos() > 0);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_job_is_isolated() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        // k > n fails; the next job still succeeds.
+        let mut bad = JobSpec::inline(1, tiny_data(1), 4);
+        bad.k = 10_000;
+        coord.submit(bad).unwrap();
+        coord.submit(JobSpec::inline(2, tiny_data(2), 4)).unwrap();
+        let results = coord.collect(2).unwrap();
+        let bad_r = results.iter().find(|r| r.id == 1).unwrap();
+        assert!(bad_r.outcome.is_err());
+        let good_r = results.iter().find(|r| r.id == 2).unwrap();
+        assert!(good_r.outcome.is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn try_submit_reports_backpressure() {
+        // One worker, depth 1, and jobs slow enough to fill the queue.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 1,
+            ..CoordinatorConfig::default()
+        });
+        let mut accepted = 0;
+        let mut rejected = 0;
+        for id in 0..32 {
+            if coord.try_submit(JobSpec::inline(id, tiny_data(0), 8)).unwrap() {
+                accepted += 1;
+            } else {
+                rejected += 1;
+            }
+        }
+        assert!(accepted >= 1);
+        // Drain what was accepted.
+        let _ = coord.collect(accepted as usize).unwrap();
+        assert_eq!(coord.submitted(), accepted);
+        coord.shutdown();
+        // On a 1-core box the worker rarely keeps up; but even if it does,
+        // the test only requires that try_submit never blocked.
+        let _ = rejected;
+    }
+
+    #[test]
+    fn registry_job_via_coordinator() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let job = JobSpec {
+            data: JobData::Registry { name: "HTRU2".into(), scale: 0.02 },
+            ..JobSpec::inline(9, tiny_data(0), 5)
+        };
+        coord.submit(job).unwrap();
+        let r = coord.recv().unwrap();
+        assert_eq!(r.id, 9);
+        assert!(r.outcome.is_ok(), "{:?}", r.outcome);
+        coord.shutdown();
+    }
+}

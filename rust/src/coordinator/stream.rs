@@ -1,0 +1,178 @@
+//! Streaming / mini-batch clustering mode.
+//!
+//! For workloads that arrive as a stream (the service examples), the
+//! coordinator offers an online path: chunks are folded into the centroid
+//! estimate with per-centroid learning rates (mini-batch K-Means, Sculley
+//! 2010), a reservoir keeps a bounded design sample, and `finalize` polishes
+//! the estimate by running the paper's Algorithm-1 solver (AA + dynamic m)
+//! over the reservoir — so the streaming mode converges to the same quality
+//! as the batch path while touching each sample once.
+
+use crate::config::SolverConfig;
+use crate::data::DataMatrix;
+use crate::init::{seed_centroids, InitMethod};
+use crate::kmeans::{RunReport, Solver};
+use crate::lloyd::brute_force_assign;
+use crate::rng::{Pcg32, Rng};
+
+/// Online mini-batch clusterer with an AA-polished finalize step.
+pub struct StreamingClusterer {
+    k: usize,
+    d: usize,
+    /// Current centroid estimate (empty until enough samples arrive).
+    centroids: Option<DataMatrix>,
+    /// Per-centroid assigned-sample counts (learning-rate denominators).
+    counts: Vec<f64>,
+    /// Bounded reservoir of samples for seeding + finalize.
+    reservoir: Vec<Vec<f64>>,
+    reservoir_cap: usize,
+    seen: usize,
+    rng: Pcg32,
+    solver_cfg: SolverConfig,
+}
+
+impl StreamingClusterer {
+    /// New streaming clusterer for `k` clusters of `d`-dimensional samples.
+    pub fn new(k: usize, d: usize, reservoir_cap: usize, seed: u64, solver_cfg: SolverConfig) -> Self {
+        assert!(k >= 1 && d >= 1);
+        Self {
+            k,
+            d,
+            centroids: None,
+            counts: vec![0.0; k],
+            reservoir: Vec::with_capacity(reservoir_cap),
+            reservoir_cap: reservoir_cap.max(k),
+            seen: 0,
+            rng: Pcg32::seed_from_u64(seed),
+            solver_cfg,
+        }
+    }
+
+    /// Samples consumed so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Current centroid estimate (None until ≥ k samples arrived).
+    pub fn centroids(&self) -> Option<&DataMatrix> {
+        self.centroids.as_ref()
+    }
+
+    /// Fold one chunk of samples into the estimate.
+    pub fn push_chunk(&mut self, chunk: &DataMatrix) {
+        assert_eq!(chunk.d(), self.d, "chunk dimensionality mismatch");
+        for i in 0..chunk.n() {
+            self.push_row(chunk.row(i));
+        }
+        // Seed once enough distinct samples are buffered.
+        if self.centroids.is_none() && self.reservoir.len() >= self.k {
+            let res = self.reservoir_matrix();
+            self.centroids =
+                Some(seed_centroids(&res, self.k, InitMethod::KMeansPlusPlus, &mut self.rng));
+        }
+        // Mini-batch update on this chunk.
+        if let Some(c) = &mut self.centroids {
+            let assign = brute_force_assign(chunk, c);
+            for i in 0..chunk.n() {
+                let j = assign[i] as usize;
+                self.counts[j] += 1.0;
+                let eta = 1.0 / self.counts[j];
+                let row = chunk.row(i);
+                let dst = c.row_mut(j);
+                for t in 0..row.len() {
+                    dst[t] += eta * (row[t] - dst[t]);
+                }
+            }
+        }
+    }
+
+    fn push_row(&mut self, row: &[f64]) {
+        self.seen += 1;
+        if self.reservoir.len() < self.reservoir_cap {
+            self.reservoir.push(row.to_vec());
+        } else {
+            let j = self.rng.next_below(self.seen);
+            if j < self.reservoir_cap {
+                self.reservoir[j] = row.to_vec();
+            }
+        }
+    }
+
+    fn reservoir_matrix(&self) -> DataMatrix {
+        let mut m = DataMatrix::zeros(self.reservoir.len(), self.d);
+        for (i, r) in self.reservoir.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        m
+    }
+
+    /// Polish the streaming estimate with the paper's solver over the
+    /// reservoir; returns the run report (final centroids inside).
+    pub fn finalize(&mut self) -> Option<RunReport> {
+        let c0 = self.centroids.clone()?;
+        let res = self.reservoir_matrix();
+        if res.n() < self.k {
+            return None;
+        }
+        let report = Solver::new(self.solver_cfg.clone()).run(&res, c0);
+        self.centroids = Some(report.centroids.clone());
+        Some(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lloyd::energy;
+    use crate::par::ThreadPool;
+
+    fn cfg() -> SolverConfig {
+        SolverConfig { threads: 1, ..SolverConfig::default() }
+    }
+
+    #[test]
+    fn streams_to_reasonable_centroids() {
+        let mut rng = Pcg32::seed_from_u64(71);
+        let x = synth::gaussian_blobs(&mut rng, 4000, 3, 5, 3.0, 0.15);
+        let mut sc = StreamingClusterer::new(5, 3, 1000, 7, cfg());
+        for start in (0..x.n()).step_by(500) {
+            let idx: Vec<usize> = (start..(start + 500).min(x.n())).collect();
+            sc.push_chunk(&x.gather_rows(&idx));
+        }
+        assert_eq!(sc.seen(), 4000);
+        let report = sc.finalize().expect("should finalize");
+        assert!(report.converged);
+        // Quality: within 2x of a full-batch run on the same data.
+        let mut srng = Pcg32::seed_from_u64(8);
+        let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
+        let batch = Solver::new(cfg()).run(&x, c0);
+        let pool = ThreadPool::new(1);
+        let stream_assign = brute_force_assign(&x, sc.centroids().unwrap());
+        let stream_e = energy(&x, sc.centroids().unwrap(), &stream_assign, &pool);
+        assert!(
+            stream_e < 2.0 * batch.energy,
+            "stream {stream_e} vs batch {}",
+            batch.energy
+        );
+    }
+
+    #[test]
+    fn no_centroids_before_k_samples() {
+        let mut sc = StreamingClusterer::new(10, 2, 100, 1, cfg());
+        let x = DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        sc.push_chunk(&x);
+        assert!(sc.centroids().is_none());
+        assert!(sc.finalize().is_none());
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut rng = Pcg32::seed_from_u64(72);
+        let x = synth::uniform_box(&mut rng, 5000, 2, 1.0);
+        let mut sc = StreamingClusterer::new(3, 2, 128, 2, cfg());
+        sc.push_chunk(&x);
+        assert_eq!(sc.reservoir.len(), 128);
+        assert_eq!(sc.seen(), 5000);
+    }
+}

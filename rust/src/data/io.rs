@@ -1,0 +1,158 @@
+//! Dataset IO: CSV (human-friendly, interoperable) and `fvecs`-style binary
+//! (fast reload of the large registry datasets between bench runs).
+
+use super::DataMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load a headerless (or single-header) CSV of floats into a matrix.
+/// Lines starting with `#` and blank lines are skipped; a first line that
+/// fails to parse entirely is treated as a header.
+pub fn load_csv(path: &Path) -> Result<DataMatrix> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut data = Vec::new();
+    let mut d = None;
+    let mut first_data_line = true;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let values: std::result::Result<Vec<f64>, _> =
+            trimmed.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        match values {
+            Ok(row) => {
+                match d {
+                    None => d = Some(row.len()),
+                    Some(expect) if expect != row.len() => {
+                        bail!("ragged CSV at line {}: {} vs {} fields", lineno + 1, row.len(), expect)
+                    }
+                    _ => {}
+                }
+                data.extend_from_slice(&row);
+                first_data_line = false;
+            }
+            Err(e) => {
+                if first_data_line {
+                    continue; // header line
+                }
+                bail!("bad float at line {}: {e}", lineno + 1);
+            }
+        }
+    }
+    let d = d.context("empty CSV")?;
+    let n = data.len() / d;
+    Ok(DataMatrix::from_vec(data, n, d))
+}
+
+/// Write a matrix as a plain CSV.
+pub fn save_csv(path: &Path, x: &DataMatrix) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for i in 0..x.n() {
+        let row = x.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                w.write_all(b",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        w.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+const FVECS_MAGIC: &[u8; 8] = b"AAKMFV01";
+
+/// Save in a simple binary format: magic, u64 n, u64 d, then n·d f64 LE.
+pub fn save_fvecs(path: &Path, x: &DataMatrix) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(FVECS_MAGIC)?;
+    w.write_all(&(x.n() as u64).to_le_bytes())?;
+    w.write_all(&(x.d() as u64).to_le_bytes())?;
+    for &v in x.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the binary format written by [`save_fvecs`].
+pub fn load_fvecs(path: &Path) -> Result<DataMatrix> {
+    let mut file = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    file.read_exact(&mut magic)?;
+    if &magic != FVECS_MAGIC {
+        bail!("{} is not an aakm fvecs file", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    file.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    file.read_exact(&mut u64buf)?;
+    let d = u64::from_le_bytes(u64buf) as usize;
+    let total = n.checked_mul(d).context("overflow in header")?;
+    let mut raw = vec![0u8; total * 8];
+    file.read_exact(&mut raw)?;
+    let mut data = Vec::with_capacity(total);
+    for chunk in raw.chunks_exact(8) {
+        data.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(DataMatrix::from_vec(data, n, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("aakm_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let x = DataMatrix::from_rows(&[&[1.5, -2.0], &[0.0, 3.25]]);
+        let p = tmp("roundtrip.csv");
+        save_csv(&p, &x).unwrap();
+        let y = load_csv(&p).unwrap();
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn csv_skips_header_and_comments() {
+        let p = tmp("header.csv");
+        std::fs::write(&p, "colA,colB\n# comment\n1.0,2.0\n\n3.0,4.0\n").unwrap();
+        let x = load_csv(&p).unwrap();
+        assert_eq!(x.n(), 2);
+        assert_eq!(x.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1.0,2.0\n3.0\n").unwrap();
+        assert!(load_csv(&p).is_err());
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let x = DataMatrix::from_rows(&[&[1.0, 2.0, 3.0], &[-4.0, 5.5, 6.0]]);
+        let p = tmp("roundtrip.fv");
+        save_fvecs(&p, &x).unwrap();
+        let y = load_fvecs(&p).unwrap();
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn fvecs_rejects_bad_magic() {
+        let p = tmp("bad.fv");
+        std::fs::write(&p, b"NOTMAGIC\x00\x00").unwrap();
+        assert!(load_fvecs(&p).is_err());
+    }
+}

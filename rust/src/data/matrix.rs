@@ -1,0 +1,187 @@
+//! Row-major `f64` sample matrix — the core container for datasets and
+//! centroid sets alike (a centroid set is just a `K×d` matrix).
+
+/// Row-major matrix of `n` samples × `d` features.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataMatrix {
+    data: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl DataMatrix {
+    /// Zero-filled `n × d` matrix.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self { data: vec![0.0; n * d], n, d }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(data: Vec<f64>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "buffer is {} not {}×{}", data.len(), n, d);
+        Self { data, n, d }
+    }
+
+    /// Build from row slices.
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { data, n: rows.len(), d }
+    }
+
+    /// Number of samples (rows).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimensionality (columns).
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Whole backing buffer (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable backing buffer (row-major).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Copy the given rows into a new matrix (used for seeding from sample
+    /// indices and for sub-sampling).
+    pub fn gather_rows(&self, indices: &[usize]) -> DataMatrix {
+        let mut out = DataMatrix::zeros(indices.len(), self.d);
+        for (dst, &src) in indices.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Append all rows of `other` (must have the same `d`).
+    pub fn append(&mut self, other: &DataMatrix) {
+        assert_eq!(self.d, other.d);
+        self.data.extend_from_slice(&other.data);
+        self.n += other.n;
+    }
+
+    /// Per-dimension bounding box `(min, max)` of all samples.
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        let mut b = vec![(f64::INFINITY, f64::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            let r = self.row(i);
+            for j in 0..self.d {
+                if r[j] < b[j].0 {
+                    b[j].0 = r[j];
+                }
+                if r[j] > b[j].1 {
+                    b[j].1 = r[j];
+                }
+            }
+        }
+        b
+    }
+
+    /// Convert to `f32` (row-major) — the PJRT artifacts run in `f32`.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Frobenius-norm distance to another same-shape matrix.
+    pub fn frob_dist(&self, other: &DataMatrix) -> f64 {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.d, other.d);
+        crate::linalg::dist_sq(&self.data, &other.data).sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DataMatrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.n && j < self.d);
+        &self.data[i * self.d + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DataMatrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.n && j < self.d);
+        &mut self.data[i * self.d + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_rows() {
+        let m = DataMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.d(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = DataMatrix::from_rows(&[&[0.0], &[1.0], &[2.0], &[3.0]]);
+        let g = m.gather_rows(&[3, 0, 3]);
+        assert_eq!(g.as_slice(), &[3.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn bounds_cover_extremes() {
+        let m = DataMatrix::from_rows(&[&[-1.0, 5.0], &[2.0, -3.0]]);
+        assert_eq!(m.bounds(), vec![(-1.0, 2.0), (-3.0, 5.0)]);
+    }
+
+    #[test]
+    fn append_grows() {
+        let mut a = DataMatrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = DataMatrix::from_rows(&[&[3.0]]);
+        a.append(&b);
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.row(2), &[3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer is")]
+    fn from_vec_shape_mismatch_panics() {
+        DataMatrix::from_vec(vec![1.0, 2.0, 3.0], 2, 2);
+    }
+
+    #[test]
+    fn frob_dist_zero_for_identical() {
+        let a = DataMatrix::from_rows(&[&[1.0, 2.0]]);
+        assert_eq!(a.frob_dist(&a.clone()), 0.0);
+    }
+}

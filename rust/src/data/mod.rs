@@ -1,0 +1,70 @@
+//! Data substrate: the sample matrix, synthetic dataset generators, CSV and
+//! binary IO, normalization, and the registry reproducing the paper's
+//! Table 1 inventory (20 datasets) as synthetic equivalents.
+
+mod io;
+mod matrix;
+pub mod registry;
+pub mod synth;
+
+pub use io::{load_csv, load_fvecs, save_csv, save_fvecs};
+pub use matrix::DataMatrix;
+pub use registry::{dataset_by_name, dataset_by_number, DatasetSpec, REGISTRY};
+
+/// Scale every column to zero mean / unit variance (columns with zero
+/// variance are left centered). Returns per-column (mean, std) so callers
+/// can de-normalize centroids.
+pub fn standardize(x: &mut DataMatrix) -> Vec<(f64, f64)> {
+    let (n, d) = (x.n(), x.d());
+    let mut stats = vec![(0.0, 0.0); d];
+    if n == 0 {
+        return stats;
+    }
+    for j in 0..d {
+        let mut mean = 0.0;
+        for i in 0..n {
+            mean += x[(i, j)];
+        }
+        mean /= n as f64;
+        let mut var = 0.0;
+        for i in 0..n {
+            let c = x[(i, j)] - mean;
+            var += c * c;
+        }
+        var /= n as f64;
+        let std = var.sqrt();
+        let denom = if std > 0.0 { std } else { 1.0 };
+        for i in 0..n {
+            x[(i, j)] = (x[(i, j)] - mean) / denom;
+        }
+        stats[j] = (mean, std);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut x = DataMatrix::from_vec(vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0], 3, 2);
+        let stats = standardize(&mut x);
+        for j in 0..2 {
+            let mean: f64 = (0..3).map(|i| x[(i, j)]).sum::<f64>() / 3.0;
+            let var: f64 = (0..3).map(|i| x[(i, j)] * x[(i, j)]).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+            assert!(stats[j].1 > 0.0);
+        }
+    }
+
+    #[test]
+    fn standardize_constant_column() {
+        let mut x = DataMatrix::from_vec(vec![5.0, 5.0, 5.0], 3, 1);
+        standardize(&mut x);
+        for i in 0..3 {
+            assert_eq!(x[(i, 0)], 0.0);
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Synthetic dataset generators.
+//!
+//! These generators stand in for the paper's UCI datasets (see DESIGN.md §3
+//! for the substitution argument) and provide the workloads of the examples
+//! and benches. All of them are deterministic from the supplied RNG.
+
+use super::DataMatrix;
+use crate::rng::{shuffle, Pcg32, Rng};
+
+/// Isotropic Gaussian mixture ("blobs"): `clusters` centers uniform in
+/// `[-spread, spread]^d`, each sample drawn from one center with the given
+/// `noise` standard deviation plus a `background` fraction of uniform noise.
+pub fn gaussian_blobs<R: Rng>(
+    rng: &mut R,
+    n: usize,
+    d: usize,
+    clusters: usize,
+    spread: f64,
+    noise: f64,
+) -> DataMatrix {
+    gaussian_blobs_ex(rng, n, d, clusters, spread, noise, 0.0, 1.0)
+}
+
+/// Full-control blob generator.
+///
+/// * `spread` — half-width of the box the cluster centers are drawn from.
+/// * `noise` — per-cluster standard deviation.
+/// * `background` — fraction of samples replaced by uniform box noise
+///   (models the unstructured mass real UCI tables carry).
+/// * `anisotropy` — per-dimension sigma is scaled by a factor drawn from
+///   `[1/anisotropy, anisotropy]`; `1.0` keeps clusters isotropic.
+pub fn gaussian_blobs_ex<R: Rng>(
+    rng: &mut R,
+    n: usize,
+    d: usize,
+    clusters: usize,
+    spread: f64,
+    noise: f64,
+    background: f64,
+    anisotropy: f64,
+) -> DataMatrix {
+    assert!(clusters >= 1 && d >= 1);
+    let mut centers = DataMatrix::zeros(clusters, d);
+    for c in 0..clusters {
+        for j in 0..d {
+            centers[(c, j)] = rng.next_range(-spread, spread);
+        }
+    }
+    // Per-cluster, per-dimension sigmas.
+    let mut sigmas = vec![0.0; clusters * d];
+    for c in 0..clusters {
+        for j in 0..d {
+            let factor = if anisotropy > 1.0 {
+                let lo = 1.0 / anisotropy;
+                rng.next_range(lo, anisotropy)
+            } else {
+                1.0
+            };
+            sigmas[c * d + j] = noise * factor;
+        }
+    }
+    // Random (but non-degenerate) cluster weights.
+    let mut weights = vec![0.0; clusters];
+    for w in weights.iter_mut() {
+        *w = 0.2 + rng.next_f64();
+    }
+    let mut x = DataMatrix::zeros(n, d);
+    for i in 0..n {
+        if background > 0.0 && rng.next_f64() < background {
+            for j in 0..d {
+                x[(i, j)] = rng.next_range(-1.5 * spread, 1.5 * spread);
+            }
+            continue;
+        }
+        let c = crate::rng::choose_weighted(&weights, rng);
+        for j in 0..d {
+            x[(i, j)] = centers[(c, j)] + sigmas[c * d + j] * rng.next_gaussian();
+        }
+    }
+    x
+}
+
+/// The Birch1-style synthetic set (Zhang et al. 1997, as used by the paper):
+/// a regular `side × side` grid of Gaussian clusters in 2-D. The paper's
+/// instance is `side = 10`, `n = 100 000`.
+pub fn birch_grid<R: Rng>(rng: &mut R, n: usize, side: usize, sigma: f64) -> DataMatrix {
+    assert!(side >= 1);
+    let clusters = side * side;
+    let mut x = DataMatrix::zeros(n, 2);
+    for i in 0..n {
+        let c = rng.next_below(clusters);
+        let (gx, gy) = ((c % side) as f64, (c / side) as f64);
+        x[(i, 0)] = gx + sigma * rng.next_gaussian();
+        x[(i, 1)] = gy + sigma * rng.next_gaussian();
+    }
+    x
+}
+
+/// Uniform box noise — the worst case for AA (no cluster structure).
+pub fn uniform_box<R: Rng>(rng: &mut R, n: usize, d: usize, half_width: f64) -> DataMatrix {
+    let mut x = DataMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            x[(i, j)] = rng.next_range(-half_width, half_width);
+        }
+    }
+    x
+}
+
+/// Low-dimensional manifold embedded in `d` dimensions: samples on a noisy
+/// 1-D curve. Exercises the "samples not separated into clusters" regime the
+/// paper identifies as the slow-convergence case for Lloyd's.
+pub fn noisy_curve<R: Rng>(rng: &mut R, n: usize, d: usize, noise: f64) -> DataMatrix {
+    assert!(d >= 2);
+    let mut x = DataMatrix::zeros(n, d);
+    for i in 0..n {
+        let t = rng.next_f64() * std::f64::consts::TAU;
+        x[(i, 0)] = t.cos() * 3.0 + noise * rng.next_gaussian();
+        x[(i, 1)] = t.sin() * 3.0 + noise * rng.next_gaussian();
+        for j in 2..d {
+            // Harmonics keep the intrinsic dimension low but fill all axes.
+            x[(i, j)] = (t * (j as f64)).sin() + noise * rng.next_gaussian();
+        }
+    }
+    x
+}
+
+/// Random sinusoidal embedding of a low-dimensional latent into `R^d` —
+/// continuous, curved, strongly-correlated features.
+///
+/// This is the stand-in for sensor / trajectory / physics UCI tables
+/// (power readings, localization traces, particle features): their
+/// intrinsic dimension is far below `d`, K-Means centroids crawl along the
+/// manifold (the slow-but-smooth Lloyd regime), and that is exactly the
+/// landscape where the paper reports its largest accelerations.
+pub fn sin_manifold<R: Rng>(
+    rng: &mut R,
+    n: usize,
+    d: usize,
+    intrinsic: usize,
+    freq: f64,
+    noise: f64,
+) -> DataMatrix {
+    assert!(intrinsic >= 1 && d >= 1);
+    let mut w = vec![0.0; d * intrinsic];
+    let mut phase = vec![0.0; d];
+    for v in w.iter_mut() {
+        *v = freq * rng.next_gaussian();
+    }
+    for v in phase.iter_mut() {
+        *v = rng.next_range(0.0, std::f64::consts::TAU);
+    }
+    let mut x = DataMatrix::zeros(n, d);
+    let mut t = vec![0.0; intrinsic];
+    for i in 0..n {
+        for tv in t.iter_mut() {
+            *tv = rng.next_f64();
+        }
+        for j in 0..d {
+            let mut arg = phase[j];
+            for l in 0..intrinsic {
+                arg += w[j * intrinsic + l] * t[l];
+            }
+            x[(i, j)] = arg.sin() + noise * rng.next_gaussian();
+        }
+    }
+    x
+}
+
+/// A synthetic RGB-like image as an `(n_pixels × 3)` sample matrix composed
+/// of a few dominant color regions plus gradient noise. Used by the color
+/// quantization example (the paper's data-compression motivation).
+pub fn synthetic_image<R: Rng>(rng: &mut R, width: usize, height: usize) -> DataMatrix {
+    let palette: [[f64; 3]; 6] = [
+        [0.85, 0.10, 0.10], // red
+        [0.10, 0.60, 0.15], // green
+        [0.15, 0.20, 0.80], // blue
+        [0.95, 0.85, 0.20], // yellow
+        [0.50, 0.50, 0.50], // gray
+        [0.95, 0.95, 0.95], // white
+    ];
+    let mut x = DataMatrix::zeros(width * height, 3);
+    for py in 0..height {
+        for px in 0..width {
+            let i = py * width + px;
+            // Blocky regions with a diagonal gradient and sensor noise.
+            let region = ((px * 3 / width) + (py * 2 / height) * 3) % palette.len();
+            let grad = 0.15 * (px as f64 / width as f64);
+            for ch in 0..3 {
+                let v = palette[region][ch] + grad + 0.02 * rng.next_gaussian();
+                x[(i, ch)] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+    x
+}
+
+/// Heavy-tailed mixture: Gaussian clusters whose sigma is drawn from a
+/// log-uniform range, mimicking the scale disparity of real UCI features.
+pub fn heavy_tail_blobs<R: Rng>(
+    rng: &mut R,
+    n: usize,
+    d: usize,
+    clusters: usize,
+    spread: f64,
+) -> DataMatrix {
+    let mut x = gaussian_blobs_ex(rng, n, d, clusters, spread, 0.1 * spread, 0.02, 4.0);
+    // Inject a few far outliers (heavy tails).
+    let n_out = (n / 200).max(1);
+    let mut pcg = Pcg32::seed_from_u64(rng.next_u64());
+    let mut idx: Vec<usize> = (0..n).collect();
+    shuffle(&mut idx, &mut pcg);
+    for &i in idx.iter().take(n_out) {
+        for j in 0..d {
+            x[(i, j)] = pcg.next_range(-8.0 * spread, 8.0 * spread);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn blobs_shape_and_determinism() {
+        let a = gaussian_blobs(&mut Pcg32::seed_from_u64(1), 500, 4, 5, 2.0, 0.1);
+        let b = gaussian_blobs(&mut Pcg32::seed_from_u64(1), 500, 4, 5, 2.0, 0.1);
+        assert_eq!(a.n(), 500);
+        assert_eq!(a.d(), 4);
+        assert_eq!(a, b, "same seed must give identical data");
+    }
+
+    #[test]
+    fn blobs_cluster_structure_exists() {
+        // With tiny noise the pairwise spread within a cluster is far below
+        // the spread between cluster centers: variance check.
+        let x = gaussian_blobs(&mut Pcg32::seed_from_u64(2), 2000, 2, 4, 5.0, 0.01);
+        let b = x.bounds();
+        assert!(b[0].1 - b[0].0 > 1.0, "data should span the center box");
+    }
+
+    #[test]
+    fn birch_grid_bounds() {
+        let x = birch_grid(&mut Pcg32::seed_from_u64(3), 5000, 10, 0.05);
+        let b = x.bounds();
+        for j in 0..2 {
+            assert!(b[j].0 > -1.0 && b[j].1 < 10.0, "grid range violated: {:?}", b[j]);
+        }
+    }
+
+    #[test]
+    fn uniform_box_respects_half_width() {
+        let x = uniform_box(&mut Pcg32::seed_from_u64(4), 1000, 3, 2.5);
+        for (lo, hi) in x.bounds() {
+            assert!(lo >= -2.5 && hi < 2.5);
+        }
+    }
+
+    #[test]
+    fn synthetic_image_rgb_range() {
+        let x = synthetic_image(&mut Pcg32::seed_from_u64(5), 32, 24);
+        assert_eq!(x.n(), 32 * 24);
+        assert_eq!(x.d(), 3);
+        for (lo, hi) in x.bounds() {
+            assert!(lo >= 0.0 && hi <= 1.0);
+        }
+    }
+
+    #[test]
+    fn sin_manifold_bounded_and_deterministic() {
+        let a = sin_manifold(&mut Pcg32::seed_from_u64(8), 400, 6, 2, 4.0, 0.05);
+        let b = sin_manifold(&mut Pcg32::seed_from_u64(8), 400, 6, 2, 4.0, 0.05);
+        assert_eq!(a, b);
+        for (lo, hi) in a.bounds() {
+            assert!(lo > -2.0 && hi < 2.0, "sin+noise stays near [-1,1]");
+        }
+    }
+
+    #[test]
+    fn noisy_curve_shape() {
+        let x = noisy_curve(&mut Pcg32::seed_from_u64(6), 300, 5, 0.05);
+        assert_eq!((x.n(), x.d()), (300, 5));
+    }
+
+    #[test]
+    fn heavy_tail_has_outliers() {
+        let x = heavy_tail_blobs(&mut Pcg32::seed_from_u64(7), 2000, 3, 5, 1.0);
+        let b = x.bounds();
+        let wide = b.iter().any(|(lo, hi)| hi - lo > 6.0);
+        assert!(wide, "outlier injection should widen the bounding box");
+    }
+}

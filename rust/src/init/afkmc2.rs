@@ -1,0 +1,125 @@
+//! Assumption-free k-MC² seeding (Bachem et al., NeurIPS 2016).
+//!
+//! k-means++ needs a full pass over the data per center; afk-mc² replaces
+//! the exact D² draw with a Metropolis–Hastings chain of length `m` whose
+//! stationary distribution approximates it, using the proposal
+//! `q(x) = ½ · d(x, c₁)² / Σ d² + ½ · 1/N` built from the first center only.
+
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::rng::{choose_weighted, Rng};
+
+/// afk-mc² seeding with chain length `chain` (the paper's experiments use
+/// m in the low hundreds; we default to 200 via [`crate::init::seed_centroids`]).
+pub fn afk_mc2<R: Rng>(x: &DataMatrix, k: usize, chain: usize, rng: &mut R) -> DataMatrix {
+    let n = x.n();
+    assert!(k >= 1 && k <= n);
+    let chain = chain.max(1);
+    let first = rng.next_below(n);
+    let mut centers = vec![first];
+    if k == 1 {
+        return x.gather_rows(&centers);
+    }
+    // Proposal distribution from the first center.
+    let d_first: Vec<f64> = (0..n).map(|i| dist_sq(x.row(i), x.row(first))).collect();
+    let sum_d: f64 = d_first.iter().sum();
+    let uniform = 0.5 / n as f64;
+    let q: Vec<f64> = if sum_d > 0.0 {
+        d_first.iter().map(|&d| 0.5 * d / sum_d + uniform).collect()
+    } else {
+        vec![1.0 / n as f64; n] // all points identical
+    };
+    // dmin[i] = squared distance to nearest chosen center so far.
+    let mut dmin = d_first.clone();
+    while centers.len() < k {
+        // Initial chain state drawn from q.
+        let mut cur = choose_weighted(&q, rng);
+        let mut cur_score = dmin[cur] / q[cur];
+        for _ in 1..chain {
+            let cand = choose_weighted(&q, rng);
+            let cand_score = dmin[cand] / q[cand];
+            let accept = if cur_score <= 0.0 {
+                true // current state has zero mass; any candidate wins
+            } else {
+                cand_score / cur_score >= rng.next_f64()
+            };
+            if accept {
+                cur = cand;
+                cur_score = cand_score;
+            }
+        }
+        // Degenerate fall-back: if the chain settled on an existing center
+        // (duplicate point), pick any point with positive distance.
+        if dmin[cur] <= 0.0 {
+            if let Some(i) = (0..n).find(|&i| dmin[i] > 0.0) {
+                cur = i;
+            } else if let Some(i) = (0..n).find(|i| !centers.contains(i)) {
+                cur = i;
+            }
+        }
+        centers.push(cur);
+        let crow = x.row(cur);
+        for i in 0..n {
+            let d = dist_sq(x.row(i), crow);
+            if d < dmin[i] {
+                dmin[i] = d;
+            }
+        }
+    }
+    x.gather_rows(&centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn produces_valid_seeding() {
+        let mut rng = Pcg32::seed_from_u64(200);
+        let x = synth::gaussian_blobs(&mut rng, 600, 4, 6, 2.5, 0.2);
+        let c = afk_mc2(&x, 6, 100, &mut rng);
+        crate::init::check_valid_seeding(&x, 6, &c);
+    }
+
+    #[test]
+    fn covers_separated_clusters_like_kmpp() {
+        let mut rows = Vec::new();
+        for i in 0..40 {
+            rows.push([i as f64 * 0.01, 0.0]);
+        }
+        for i in 0..40 {
+            rows.push([500.0 + i as f64 * 0.01, 0.0]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = DataMatrix::from_rows(&refs);
+        let mut split = 0;
+        for seed in 0..20 {
+            let mut rng = Pcg32::seed_from_u64(seed);
+            let c = afk_mc2(&x, 2, 100, &mut rng);
+            if (c.row(0)[0] < 250.0) != (c.row(1)[0] < 250.0) {
+                split += 1;
+            }
+        }
+        assert!(split >= 18, "split only {split}/20");
+    }
+
+    #[test]
+    fn duplicate_points_dont_hang() {
+        let x = DataMatrix::from_rows(&[&[2.0], &[2.0], &[2.0], &[7.0]]);
+        let mut rng = Pcg32::seed_from_u64(9);
+        let c = afk_mc2(&x, 2, 50, &mut rng);
+        let mut v: Vec<f64> = c.as_slice().to_vec();
+        v.sort_by(f64::total_cmp);
+        assert_eq!(v, vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn chain_length_one_still_works() {
+        let mut rng = Pcg32::seed_from_u64(10);
+        let x = synth::gaussian_blobs(&mut rng, 100, 2, 3, 2.0, 0.2);
+        let c = afk_mc2(&x, 3, 1, &mut rng);
+        crate::init::check_valid_seeding(&x, 3, &c);
+    }
+}

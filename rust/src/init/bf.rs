@@ -1,0 +1,147 @@
+//! Bradley–Fayyad refinement seeding (Bradley & Fayyad, ICML 1998).
+//!
+//! 1. Draw `j` small subsamples; run K-Means on each (random-seeded) to get
+//!    candidate centroid sets `CM_1..CM_j` ("clustering the subsamples").
+//!    Empty clusters are reseeded from the subsample's farthest points
+//!    (the paper's *K-MeansMod*).
+//! 2. Pool all candidates into `CM` and run K-Means on `CM` once per
+//!    `CM_i` used as the seed ("smoothing"); return the solution with the
+//!    lowest distortion over `CM`.
+
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::lloyd::{brute_force_assign, energy, update_step};
+use crate::par::ThreadPool;
+use crate::rng::{sample_indices, Rng};
+
+/// Maximum Lloyd iterations inside the refinement loops.
+const INNER_ITERS: usize = 40;
+
+/// Bradley–Fayyad seeding with `j` subsamples.
+pub fn bradley_fayyad<R: Rng>(x: &DataMatrix, k: usize, j: usize, rng: &mut R) -> DataMatrix {
+    let n = x.n();
+    assert!(k >= 1 && k <= n);
+    let j = j.max(1);
+    // Subsample size: 10% of N, clamped to [k, 5000] (the original paper
+    // uses small subsamples; the clamp keeps seeding sub-linear in N).
+    let sub_n = (n / 10).clamp(k.min(n), 2000.min(n)).max(k);
+    let pool = ThreadPool::new(1);
+
+    // Phase 1: candidate sets from subsamples.
+    let mut candidate_sets: Vec<DataMatrix> = Vec::with_capacity(j);
+    for _ in 0..j {
+        let sample = x.gather_rows(&sample_indices(n, sub_n, rng));
+        let seed = sample.gather_rows(&sample_indices(sub_n, k, rng));
+        let c = kmeans_mod(&sample, seed, &pool);
+        candidate_sets.push(c);
+    }
+    // Phase 2: smoothing over the pooled candidates.
+    let mut cm = DataMatrix::zeros(0, x.d());
+    for cs in &candidate_sets {
+        cm.append(cs);
+    }
+    let mut best: Option<(f64, DataMatrix)> = None;
+    for cs in &candidate_sets {
+        let fitted = mini_lloyd(&cm, cs.clone(), &pool);
+        let assign = brute_force_assign(&cm, &fitted);
+        let distortion = energy(&cm, &fitted, &assign, &pool);
+        if best.as_ref().is_none_or(|(b, _)| distortion < *b) {
+            best = Some((distortion, fitted));
+        }
+    }
+    best.expect("j >= 1 guarantees a candidate").1
+}
+
+/// Plain Lloyd on a small matrix, run to (near) convergence.
+fn mini_lloyd(x: &DataMatrix, mut c: DataMatrix, pool: &ThreadPool) -> DataMatrix {
+    for _ in 0..INNER_ITERS {
+        let assign = brute_force_assign(x, &c);
+        let mut next = c.clone();
+        update_step(x, &assign, &c, &mut next, pool);
+        let moved = next.frob_dist(&c);
+        c = next;
+        if moved < 1e-10 {
+            break;
+        }
+    }
+    c
+}
+
+/// K-MeansMod: Lloyd, but an empty cluster is reseeded to the sample
+/// farthest from its assigned centroid.
+fn kmeans_mod(x: &DataMatrix, mut c: DataMatrix, pool: &ThreadPool) -> DataMatrix {
+    let k = c.n();
+    for _ in 0..INNER_ITERS {
+        let assign = brute_force_assign(x, &c);
+        let mut next = c.clone();
+        let counts = update_step(x, &assign, &c, &mut next, pool);
+        // Reseed empties at the farthest-from-centroid samples.
+        for (jj, &count) in counts.iter().enumerate().take(k) {
+            if count == 0 {
+                let far = (0..x.n())
+                    .max_by(|&a, &b| {
+                        let da = dist_sq(x.row(a), next.row(assign[a] as usize));
+                        let db = dist_sq(x.row(b), next.row(assign[b] as usize));
+                        da.total_cmp(&db)
+                    })
+                    .unwrap();
+                next.row_mut(jj).copy_from_slice(x.row(far));
+            }
+        }
+        let moved = next.frob_dist(&c);
+        c = next;
+        if moved < 1e-10 {
+            break;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn produces_valid_seeding() {
+        let mut rng = Pcg32::seed_from_u64(300);
+        let x = synth::gaussian_blobs(&mut rng, 900, 3, 5, 2.0, 0.2);
+        let c = bradley_fayyad(&x, 5, 4, &mut rng);
+        assert_eq!(c.n(), 5);
+        assert_eq!(c.d(), 3);
+        assert!(c.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn refined_seeds_are_better_than_random() {
+        // BF seeds should give lower initial energy than a random draw on a
+        // clustered dataset (averaged over a few trials).
+        let mut rng = Pcg32::seed_from_u64(301);
+        let x = synth::gaussian_blobs(&mut rng, 1200, 4, 8, 3.0, 0.15);
+        let pool = ThreadPool::new(1);
+        let (mut e_bf, mut e_rand) = (0.0, 0.0);
+        for t in 0..3 {
+            let mut r1 = Pcg32::seed_from_u64(400 + t);
+            let c_bf = bradley_fayyad(&x, 8, 5, &mut r1);
+            let a_bf = brute_force_assign(&x, &c_bf);
+            e_bf += energy(&x, &c_bf, &a_bf, &pool);
+            let mut r2 = Pcg32::seed_from_u64(500 + t);
+            let c_r = x.gather_rows(&sample_indices(x.n(), 8, &mut r2));
+            let a_r = brute_force_assign(&x, &c_r);
+            e_rand += energy(&x, &c_r, &a_r, &pool);
+        }
+        assert!(
+            e_bf < e_rand,
+            "BF initial energy {e_bf} should beat random {e_rand}"
+        );
+    }
+
+    #[test]
+    fn small_n_close_to_k() {
+        let mut rng = Pcg32::seed_from_u64(302);
+        let x = synth::gaussian_blobs(&mut rng, 12, 2, 3, 2.0, 0.3);
+        let c = bradley_fayyad(&x, 10, 3, &mut rng);
+        assert_eq!(c.n(), 10);
+    }
+}

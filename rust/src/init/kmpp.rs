@@ -1,0 +1,100 @@
+//! k-means++ seeding (Arthur & Vassilvitskii 2007): first center uniform,
+//! each subsequent center drawn with probability proportional to the squared
+//! distance to the nearest already-chosen center (D² sampling).
+
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::rng::{choose_weighted, Rng};
+
+/// D²-sampling seeding. O(N·k·d).
+pub fn kmeans_plus_plus<R: Rng>(x: &DataMatrix, k: usize, rng: &mut R) -> DataMatrix {
+    let n = x.n();
+    assert!(k >= 1 && k <= n);
+    let mut centers = Vec::with_capacity(k);
+    centers.push(rng.next_below(n));
+    // d2[i] = squared distance to nearest chosen center.
+    let mut d2: Vec<f64> = (0..n).map(|i| dist_sq(x.row(i), x.row(centers[0]))).collect();
+    while centers.len() < k {
+        let next = choose_weighted(&d2, rng);
+        // `choose_weighted` can only return an already-chosen index when all
+        // remaining mass is zero (duplicate points); fall back to scanning.
+        let next = if d2[next] > 0.0 {
+            next
+        } else {
+            match (0..n).find(|&i| d2[i] > 0.0) {
+                Some(i) => i,
+                None => (0..n).find(|i| !centers.contains(i)).unwrap_or(next),
+            }
+        };
+        centers.push(next);
+        let crow = x.row(next);
+        for i in 0..n {
+            let d = dist_sq(x.row(i), crow);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    x.gather_rows(&centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn produces_k_distinct_rows() {
+        let mut rng = Pcg32::seed_from_u64(100);
+        let x = synth::gaussian_blobs(&mut rng, 500, 3, 5, 3.0, 0.1);
+        let c = kmeans_plus_plus(&x, 5, &mut rng);
+        crate::init::check_valid_seeding(&x, 5, &c);
+    }
+
+    #[test]
+    fn spreads_over_separated_clusters() {
+        // Two far-apart tight clusters: with k=2, D² sampling should land
+        // one seed in each essentially always.
+        let mut rows = Vec::new();
+        for i in 0..50 {
+            rows.push([i as f64 * 0.001, 0.0]);
+        }
+        for i in 0..50 {
+            rows.push([100.0 + i as f64 * 0.001, 0.0]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = DataMatrix::from_rows(&refs);
+        let mut hit_both = 0;
+        for seed in 0..20 {
+            let mut rng = Pcg32::seed_from_u64(seed);
+            let c = kmeans_plus_plus(&x, 2, &mut rng);
+            let left = c.row(0)[0] < 50.0;
+            let right = c.row(1)[0] < 50.0;
+            if left != right {
+                hit_both += 1;
+            }
+        }
+        assert!(hit_both >= 19, "D² sampling split clusters only {hit_both}/20 times");
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        // All points identical except one: must still return k centers.
+        let x = DataMatrix::from_rows(&[&[1.0], &[1.0], &[1.0], &[9.0]]);
+        let mut rng = Pcg32::seed_from_u64(3);
+        let c = kmeans_plus_plus(&x, 2, &mut rng);
+        assert_eq!(c.n(), 2);
+        let mut v: Vec<f64> = c.as_slice().to_vec();
+        v.sort_by(f64::total_cmp);
+        assert_eq!(v, vec![1.0, 9.0]);
+    }
+
+    #[test]
+    fn k_one_is_uniform_draw() {
+        let x = DataMatrix::from_rows(&[&[0.0], &[1.0]]);
+        let mut rng = Pcg32::seed_from_u64(4);
+        let c = kmeans_plus_plus(&x, 1, &mut rng);
+        assert_eq!(c.n(), 1);
+    }
+}

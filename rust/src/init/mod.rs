@@ -1,0 +1,157 @@
+//! Centroid seeding — the four initialization techniques the paper
+//! evaluates (Table 3) plus plain random seeding:
+//!
+//! * [`InitMethod::Random`] — Forgy: k distinct samples.
+//! * [`InitMethod::KMeansPlusPlus`] — D² sampling (Arthur & Vassilvitskii 2007).
+//! * [`InitMethod::AfkMc2`] — assumption-free k-MC² MCMC seeding
+//!   (Bachem et al. 2016).
+//! * [`InitMethod::BradleyFayyad`] — subsample-refine seeding
+//!   (Bradley & Fayyad 1998).
+//! * [`InitMethod::Clarans`] — k-medoids CLARANS seeding
+//!   (Ng & Han 1994; used for K-Means seeding by Newling & Fleuret 2017).
+//!
+//! The paper generates initial centroids with the code accompanying
+//! Newling & Fleuret 2017; here each method is implemented in-tree.
+
+mod afkmc2;
+mod bf;
+mod clarans;
+mod kmpp;
+
+pub use afkmc2::afk_mc2;
+pub use bf::bradley_fayyad;
+pub use clarans::clarans;
+pub use kmpp::kmeans_plus_plus;
+
+use crate::data::DataMatrix;
+use crate::rng::{sample_indices, Rng};
+
+/// Seeding method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitMethod {
+    Random,
+    KMeansPlusPlus,
+    AfkMc2,
+    BradleyFayyad,
+    Clarans,
+}
+
+impl InitMethod {
+    /// Parse from CLI/config text. Accepts the paper's names
+    /// (`k-means++`, `afk-mc2`, `bf`, `clarans`) and common variants.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "random" | "forgy" => Some(Self::Random),
+            "k-means++" | "kmeans++" | "kmpp" | "kmeanspp" => Some(Self::KMeansPlusPlus),
+            "afk-mc2" | "afkmc2" | "mc2" => Some(Self::AfkMc2),
+            "bf" | "bradley-fayyad" => Some(Self::BradleyFayyad),
+            "clarans" => Some(Self::Clarans),
+            _ => None,
+        }
+    }
+
+    /// Canonical (paper) name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Random => "random",
+            Self::KMeansPlusPlus => "k-means++",
+            Self::AfkMc2 => "afk-mc2",
+            Self::BradleyFayyad => "bf",
+            Self::Clarans => "clarans",
+        }
+    }
+
+    /// All methods the paper evaluates (Table 3 column order).
+    pub const PAPER_SET: [InitMethod; 4] =
+        [Self::KMeansPlusPlus, Self::AfkMc2, Self::BradleyFayyad, Self::Clarans];
+}
+
+/// Produce `k` initial centroids from `x` with the chosen method.
+///
+/// Panics if `k == 0` or `k > x.n()`.
+pub fn seed_centroids<R: Rng>(
+    x: &DataMatrix,
+    k: usize,
+    method: InitMethod,
+    rng: &mut R,
+) -> DataMatrix {
+    assert!(k > 0, "k must be positive");
+    assert!(k <= x.n(), "k={k} exceeds sample count {}", x.n());
+    match method {
+        InitMethod::Random => x.gather_rows(&sample_indices(x.n(), k, rng)),
+        InitMethod::KMeansPlusPlus => kmeans_plus_plus(x, k, rng),
+        InitMethod::AfkMc2 => afk_mc2(x, k, 200, rng),
+        InitMethod::BradleyFayyad => bradley_fayyad(x, k, 10, rng),
+        InitMethod::Clarans => clarans(x, k, rng),
+    }
+}
+
+/// Shared check used by the per-method tests: centroids have the right
+/// shape, are finite, and are pairwise distinct.
+#[cfg(test)]
+pub(crate) fn check_valid_seeding(x: &DataMatrix, k: usize, c: &DataMatrix) {
+    assert_eq!(c.n(), k);
+    assert_eq!(c.d(), x.d());
+    for j in 0..k {
+        assert!(c.row(j).iter().all(|v| v.is_finite()), "centroid {j} not finite");
+    }
+    for a in 0..k {
+        for b in (a + 1)..k {
+            assert!(
+                crate::linalg::dist_sq(c.row(a), c.row(b)) > 0.0,
+                "centroids {a} and {b} coincide"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn parse_paper_names() {
+        assert_eq!(InitMethod::parse("k-means++"), Some(InitMethod::KMeansPlusPlus));
+        assert_eq!(InitMethod::parse("afk-mc2"), Some(InitMethod::AfkMc2));
+        assert_eq!(InitMethod::parse("bf"), Some(InitMethod::BradleyFayyad));
+        assert_eq!(InitMethod::parse("CLARANS"), Some(InitMethod::Clarans));
+        assert_eq!(InitMethod::parse("random"), Some(InitMethod::Random));
+        assert_eq!(InitMethod::parse("xyz"), None);
+    }
+
+    #[test]
+    fn every_method_produces_valid_seeds() {
+        let mut rng = Pcg32::seed_from_u64(1234);
+        let x = synth::gaussian_blobs(&mut rng, 800, 4, 6, 2.0, 0.2);
+        for method in [
+            InitMethod::Random,
+            InitMethod::KMeansPlusPlus,
+            InitMethod::AfkMc2,
+            InitMethod::BradleyFayyad,
+            InitMethod::Clarans,
+        ] {
+            let c = seed_centroids(&x, 6, method, &mut rng);
+            check_valid_seeding(&x, 6, &c);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_is_every_point() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let x = DataMatrix::from_rows(&[&[0.0], &[1.0], &[2.0]]);
+        let c = seed_centroids(&x, 3, InitMethod::Random, &mut rng);
+        let mut vals: Vec<f64> = c.as_slice().to_vec();
+        vals.sort_by(f64::total_cmp);
+        assert_eq!(vals, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds sample count")]
+    fn k_too_large_panics() {
+        let mut rng = Pcg32::seed_from_u64(6);
+        let x = DataMatrix::from_rows(&[&[0.0]]);
+        seed_centroids(&x, 2, InitMethod::Random, &mut rng);
+    }
+}

@@ -1,0 +1,438 @@
+//! The K-Means solver — the paper's Algorithm 1 end to end, plus the plain
+//! Lloyd baseline it is compared against.
+//!
+//! One [`Solver`] instance drives one clustering run: the assignment engine
+//! (Hamerly by default, as in the paper), the update step, the stabilized
+//! Anderson accelerator, the dynamic-`m` controller, the energy guard, and
+//! the same-assignment convergence criterion. Timings are broken down per
+//! phase so the benches can report the paper's overhead claims.
+
+mod report;
+
+pub use report::RunReport;
+
+use crate::anderson::{AndersonAccelerator, MController};
+use crate::config::Acceleration;
+pub use crate::config::SolverConfig;
+use crate::data::DataMatrix;
+use crate::lloyd::{self, Assignment, AssignmentEngine};
+use crate::metrics::{PhaseTimer, Stopwatch};
+use crate::par::ThreadPool;
+
+/// Algorithm 1 driver.
+pub struct Solver {
+    cfg: SolverConfig,
+    engine: Box<dyn AssignmentEngine>,
+    pool: ThreadPool,
+}
+
+impl Solver {
+    /// Build a solver with the engine named in the config (panics on
+    /// `EngineKind::Pjrt`, which needs artifacts — use [`Solver::with_engine`]).
+    pub fn new(cfg: SolverConfig) -> Self {
+        let engine = lloyd::make_engine(cfg.engine);
+        Self::with_engine(cfg, engine)
+    }
+
+    /// Build a solver around a caller-provided engine (e.g. the PJRT
+    /// engine from [`crate::runtime`]).
+    pub fn with_engine(cfg: SolverConfig, engine: Box<dyn AssignmentEngine>) -> Self {
+        let pool =
+            if cfg.threads == 0 { ThreadPool::host_sized() } else { ThreadPool::new(cfg.threads) };
+        Self { cfg, engine, pool }
+    }
+
+    /// Configuration in use.
+    pub fn config(&self) -> &SolverConfig {
+        &self.cfg
+    }
+
+    /// Run to convergence (same assignment twice) or `max_iters`.
+    ///
+    /// With `Acceleration::None` this is exactly Lloyd's algorithm on the
+    /// configured engine; otherwise it is Algorithm 1.
+    pub fn run(&mut self, x: &DataMatrix, c0: DataMatrix) -> RunReport {
+        assert_eq!(c0.d(), x.d(), "centroid/data dimension mismatch");
+        assert!(c0.n() >= 1 && c0.n() <= x.n(), "bad K");
+        match self.cfg.accel {
+            Acceleration::None => self.run_lloyd(x, c0),
+            Acceleration::FixedM(m0) => self.run_accelerated(x, c0, m0, false),
+            Acceleration::DynamicM(m0) => self.run_accelerated(x, c0, m0, true),
+        }
+    }
+
+    /// Plain Lloyd: assignment + update until the assignment repeats.
+    fn run_lloyd(&mut self, x: &DataMatrix, c0: DataMatrix) -> RunReport {
+        let sw = Stopwatch::start();
+        let mut phases = PhaseTimer::new();
+        let evals0 = self.engine.distance_evals();
+        self.engine.reset();
+        let mut c = c0;
+        let mut assign = Assignment::new();
+        let mut prev_assign: Option<Assignment> = None;
+        let mut trace = Vec::new();
+        let mut iterations = 0;
+        let mut converged = false;
+        for _t in 0..self.cfg.max_iters {
+            phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
+            if prev_assign.as_deref() == Some(assign.as_slice()) {
+                converged = true;
+                break;
+            }
+            iterations += 1;
+            if self.cfg.record_trace {
+                trace.push(phases.time("energy", || lloyd::energy(x, &c, &assign, &self.pool)));
+            }
+            let mut next = c.clone();
+            phases.time("update", || {
+                lloyd::update_step(x, &assign, &c, &mut next, &self.pool)
+            });
+            prev_assign = Some(std::mem::take(&mut assign));
+            c = next;
+        }
+        let final_assign = prev_assign.unwrap_or(assign);
+        let energy = lloyd::energy(x, &c, &final_assign, &self.pool);
+        RunReport {
+            iterations,
+            accepted: 0,
+            seconds: sw.seconds(),
+            energy,
+            mse: energy / x.n() as f64,
+            converged,
+            energy_trace: trace,
+            m_trace: Vec::new(),
+            dist_evals: self.engine.distance_evals() - evals0,
+            phases,
+            centroids: c,
+            assignment: final_assign,
+        }
+    }
+
+    /// Algorithm 1: Anderson-accelerated Lloyd with the energy guard and
+    /// (optionally) the dynamic-m controller.
+    fn run_accelerated(
+        &mut self,
+        x: &DataMatrix,
+        c0: DataMatrix,
+        m0: usize,
+        dynamic: bool,
+    ) -> RunReport {
+        let sw = Stopwatch::start();
+        let mut phases = PhaseTimer::new();
+        let evals0 = self.engine.distance_evals();
+        self.engine.reset();
+        let (k, d) = (c0.n(), c0.d());
+        let dim = k * d;
+        let mut acc = AndersonAccelerator::new(self.cfg.m_max.max(1), dim);
+        let mut controller = MController::new(
+            m0.min(self.cfg.m_max),
+            self.cfg.m_max,
+            self.cfg.epsilon1,
+            self.cfg.epsilon2,
+        );
+
+        // Line 1: C^1 = C_AU^1 = G(C^0).
+        let mut assign = Assignment::new();
+        phases.time("assign", || self.engine.assign(x, &c0, &self.pool, &mut assign));
+        let mut c_au = DataMatrix::zeros(k, d);
+        phases.time("update", || lloyd::update_step(x, &assign, &c0, &mut c_au, &self.pool));
+        let mut c = c_au.clone();
+        // Scratch buffer for the fused update+energy pass.
+        let mut c_next = DataMatrix::zeros(k, d);
+        let mut prev_assign = Some(std::mem::take(&mut assign));
+
+        let mut e_prev = f64::INFINITY; // E^{t-1}
+        let mut decrease_prev = f64::INFINITY; // E^{t-2} − E^{t-1}
+        let mut candidate_was_accel = false;
+        let mut iterations = 0;
+        let mut accepted = 0;
+        let mut converged = false;
+        let mut trace = Vec::new();
+        let mut m_trace = Vec::new();
+
+        for _t in 1..=self.cfg.max_iters {
+            // Line 3: P^t = Assignment-Step(X, C^t).
+            phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
+            // Lines 4–6: converged when assignments repeat. The paper's own
+            // convergence narrative ("… until the fall-back iterate using
+            // Lloyd's algorithm results in the same assignment …") requires
+            // the terminal iterate to be a *Lloyd* iterate: if the repeat
+            // was produced by an accelerated C^t, fall back to C_AU (the
+            // means of the same assignment — energy ≤ the accelerated
+            // iterate's) and keep iterating until the joint fixed point is
+            // verified. This makes the returned (C, P) exact: P is the
+            // nearest-assignment of C and C the means of P.
+            if prev_assign.as_deref() == Some(assign.as_slice()) {
+                if !candidate_was_accel {
+                    converged = true;
+                    break;
+                }
+                c = c_au.clone();
+                self.engine.rollback();
+                candidate_was_accel = false;
+                continue;
+            }
+            iterations += 1;
+            // Line 7 + line 16, fused: one O(N·d) pass yields both
+            // E^t = E(P^t, C^t) (energy at the *input* centroids) and
+            // C_AU^{t+1} = Update-Step(X, P^t) — the accelerated solver then
+            // touches the samples exactly as often per iteration as Lloyd.
+            let mut e = phases.time("update+energy", || {
+                lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.pool).1
+            });
+            // Lines 8–12: adjust m from the decrease ratio.
+            if dynamic {
+                controller.adjust(e_prev - e, decrease_prev);
+            }
+            // Lines 13–15: energy guard — revert to the Lloyd iterate. The
+            // engine rolls back to the bound state it had *before* the
+            // rejected jump, so the revert assignment only drifts the bounds
+            // by one small Lloyd step instead of the jump there-and-back.
+            if e >= e_prev {
+                std::mem::swap(&mut c, &mut c_au); // C^t = C_AU^t
+                self.engine.rollback();
+                phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
+                // A reverted iterate might still match the previous
+                // assignment — that is Algorithm 1's terminal state (the
+                // fall-back Lloyd step changed nothing).
+                if prev_assign.as_deref() == Some(assign.as_slice()) {
+                    converged = true;
+                    // Terminal probe, not a productive iteration.
+                    iterations -= 1;
+                    break;
+                }
+                e = phases.time("update+energy", || {
+                    lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.pool).1
+                });
+            } else if candidate_was_accel {
+                accepted += 1;
+            }
+            if self.cfg.record_trace {
+                trace.push(e);
+                m_trace.push(controller.m());
+            }
+            decrease_prev = e_prev - e;
+            e_prev = e;
+            // c_next currently holds C_AU^{t+1}; rotate it into c_au.
+            std::mem::swap(&mut c_au, &mut c_next);
+            // Lines 17–19: Anderson extrapolation.
+            let next = phases.time("anderson", || {
+                let g_t = c_au.as_slice();
+                let f_t: Vec<f64> =
+                    g_t.iter().zip(c.as_slice()).map(|(g, ci)| g - ci).collect();
+                let m_use = controller.m();
+                acc.propose(g_t, &f_t, m_use)
+            });
+            candidate_was_accel = next != c_au.as_slice();
+            if candidate_was_accel {
+                // Save the bound state at C^t so a rejected jump can roll
+                // back instead of paying two large bound drifts.
+                self.engine.checkpoint();
+            }
+            prev_assign = Some(std::mem::take(&mut assign));
+            c = DataMatrix::from_vec(next, k, d);
+        }
+
+        let final_assign = match prev_assign {
+            Some(a) if !a.is_empty() => a,
+            _ => assign,
+        };
+        let energy = lloyd::energy(x, &c, &final_assign, &self.pool);
+        RunReport {
+            iterations,
+            accepted,
+            seconds: sw.seconds(),
+            energy,
+            mse: energy / x.n() as f64,
+            converged,
+            energy_trace: trace,
+            m_trace,
+            dist_evals: self.engine.distance_evals() - evals0,
+            phases,
+            centroids: c,
+            assignment: final_assign,
+        }
+    }
+}
+
+/// Convenience: run the paper's method (dynamic m, Hamerly engine) with
+/// default parameters.
+pub fn run_paper_method(x: &DataMatrix, c0: DataMatrix) -> RunReport {
+    Solver::new(SolverConfig::default()).run(x, c0)
+}
+
+/// Convenience: run the Lloyd(Hamerly) baseline the paper compares against.
+pub fn run_lloyd_baseline(x: &DataMatrix, c0: DataMatrix) -> RunReport {
+    let cfg = SolverConfig { accel: Acceleration::None, ..SolverConfig::default() };
+    Solver::new(cfg).run(x, c0)
+}
+
+/// Solver configuration lives in [`crate::config`]; re-exported here for
+/// the public API surface promised in the crate docs.
+pub use crate::config::SolverConfig as Config;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::init::{seed_centroids, InitMethod};
+    use crate::config::EngineKind;
+    use crate::rng::Pcg32;
+
+    fn problem(seed: u64, n: usize, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let x = synth::gaussian_blobs(&mut rng, n, d, k, 2.0, 0.4);
+        let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
+        (x, c0)
+    }
+
+    fn base_cfg() -> SolverConfig {
+        SolverConfig { threads: 1, record_trace: true, ..SolverConfig::default() }
+    }
+
+    #[test]
+    fn lloyd_converges_and_energy_monotone() {
+        let (x, c0) = problem(1, 1500, 4, 8);
+        let cfg = SolverConfig { accel: Acceleration::None, ..base_cfg() };
+        let report = Solver::new(cfg).run(&x, c0);
+        assert!(report.converged, "Lloyd must converge on a small problem");
+        for w in report.energy_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "Lloyd energy increased: {} -> {}", w[0], w[1]);
+        }
+        assert!(report.mse > 0.0);
+    }
+
+    #[test]
+    fn accelerated_energy_monotone_and_same_quality() {
+        let (x, c0) = problem(2, 1500, 4, 8);
+        let lloyd = Solver::new(SolverConfig { accel: Acceleration::None, ..base_cfg() })
+            .run(&x, c0.clone());
+        let ours = Solver::new(base_cfg()).run(&x, c0);
+        assert!(ours.converged);
+        for w in ours.energy_trace.windows(2) {
+            assert!(
+                w[1] <= w[0] + 1e-9,
+                "guarded AA energy increased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        // Both converge to a local minimum; energies should be comparable
+        // (AA may find a slightly different, sometimes better, optimum).
+        assert!(
+            ours.energy <= lloyd.energy * 1.05,
+            "ours {} vs lloyd {}",
+            ours.energy,
+            lloyd.energy
+        );
+    }
+
+    #[test]
+    fn accelerated_uses_fewer_iterations_on_slow_problem() {
+        // Poorly-separated data is the regime where Lloyd is slow and AA
+        // shines; aggregate over a few seeds to avoid flakiness.
+        let mut rng = Pcg32::seed_from_u64(33);
+        let x = synth::noisy_curve(&mut rng, 4000, 3, 0.3);
+        let (mut it_lloyd, mut it_ours) = (0usize, 0usize);
+        for seed in 0..3 {
+            let mut srng = Pcg32::seed_from_u64(100 + seed);
+            let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut srng);
+            let lloyd = Solver::new(SolverConfig { accel: Acceleration::None, ..base_cfg() })
+                .run(&x, c0.clone());
+            let ours = Solver::new(base_cfg()).run(&x, c0);
+            it_lloyd += lloyd.iterations;
+            it_ours += ours.iterations;
+        }
+        assert!(
+            it_ours < it_lloyd,
+            "accelerated {it_ours} iters should beat Lloyd {it_lloyd}"
+        );
+    }
+
+    #[test]
+    fn fixed_m_variant_runs() {
+        let (x, c0) = problem(4, 800, 3, 6);
+        let cfg = SolverConfig { accel: Acceleration::FixedM(5), ..base_cfg() };
+        let report = Solver::new(cfg).run(&x, c0);
+        assert!(report.converged);
+        assert!(report.accepted <= report.iterations);
+    }
+
+    #[test]
+    fn engines_agree_on_final_energy() {
+        let (x, c0) = problem(5, 1000, 5, 7);
+        let mut energies = Vec::new();
+        for engine in [EngineKind::Naive, EngineKind::Hamerly, EngineKind::Elkan] {
+            let cfg = SolverConfig { engine, accel: Acceleration::None, ..base_cfg() };
+            let report = Solver::new(cfg).run(&x, c0.clone());
+            energies.push(report.energy);
+        }
+        for e in &energies[1..] {
+            assert!(
+                (e - energies[0]).abs() / energies[0] < 1e-9,
+                "engines disagree: {energies:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn k_equals_one_converges_immediately() {
+        let (x, _) = problem(6, 300, 2, 3);
+        let c0 = x.gather_rows(&[0]);
+        let report = Solver::new(base_cfg()).run(&x, c0);
+        assert!(report.converged);
+        assert!(report.iterations <= 2, "K=1 is a single mean: {}", report.iterations);
+    }
+
+    #[test]
+    fn max_iters_caps_runaway() {
+        let (x, c0) = problem(7, 2000, 4, 12);
+        let cfg = SolverConfig { max_iters: 3, ..base_cfg() };
+        let report = Solver::new(cfg).run(&x, c0);
+        assert!(report.iterations <= 3);
+    }
+
+    #[test]
+    fn centroid_is_mean_of_cluster_at_convergence() {
+        let (x, c0) = problem(8, 600, 3, 5);
+        let report = Solver::new(base_cfg()).run(&x, c0);
+        assert!(report.converged);
+        // At a fixed point each centroid equals the mean of its cluster.
+        let k = report.centroids.n();
+        let d = x.d();
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..x.n() {
+            let j = report.assignment[i] as usize;
+            counts[j] += 1;
+            for t in 0..d {
+                sums[j * d + t] += x[(i, t)];
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue;
+            }
+            for t in 0..d {
+                let mean = sums[j * d + t] / counts[j] as f64;
+                assert!(
+                    (report.centroids[(j, t)] - mean).abs() < 1e-8,
+                    "centroid {j} dim {t}: {} vs mean {mean}",
+                    report.centroids[(j, t)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn report_counts_are_consistent() {
+        let (x, c0) = problem(9, 900, 4, 6);
+        let report = Solver::new(base_cfg()).run(&x, c0);
+        assert!(report.accepted <= report.iterations);
+        assert_eq!(report.energy_trace.len(), report.iterations);
+        assert_eq!(report.m_trace.len(), report.iterations);
+        assert!(report.dist_evals > 0);
+        assert!(report.seconds >= 0.0);
+        assert_eq!(report.assignment.len(), x.n());
+    }
+}

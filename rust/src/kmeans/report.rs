@@ -1,0 +1,104 @@
+//! Run report: everything the paper's tables print about one solver run.
+
+use crate::data::DataMatrix;
+use crate::lloyd::Assignment;
+use crate::metrics::PhaseTimer;
+
+/// Outcome of one clustering run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Total solver iterations (the `b` in the paper's `a/b` column).
+    pub iterations: usize,
+    /// Iterations whose accelerated iterate was accepted (the `a`).
+    pub accepted: usize,
+    /// Wall-clock seconds for the whole run.
+    pub seconds: f64,
+    /// Final clustering energy (paper Eq. 1).
+    pub energy: f64,
+    /// Final mean squared error `E/N` (the paper's MSE column).
+    pub mse: f64,
+    /// True when the same-assignment criterion fired (vs. the iteration cap).
+    pub converged: bool,
+    /// Per-iteration energy (only when `record_trace`).
+    pub energy_trace: Vec<f64>,
+    /// Per-iteration value of `m` (only for dynamic-m runs with trace).
+    pub m_trace: Vec<usize>,
+    /// Point–centroid distance evaluations performed by the engine.
+    pub dist_evals: u64,
+    /// Per-phase wall-clock breakdown (assign / update / energy / anderson).
+    pub phases: PhaseTimer,
+    /// Final centroids.
+    pub centroids: DataMatrix,
+    /// Final assignment.
+    pub assignment: Assignment,
+}
+
+impl RunReport {
+    /// The paper's `a/b` iteration cell (e.g. `"27 / 31"`).
+    pub fn iter_cell(&self) -> String {
+        format!("{} / {}", self.accepted, self.iterations)
+    }
+
+    /// Acceptance rate of accelerated iterates.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.iterations as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} iters ({} accepted), {:.3}s, energy {:.6e}, mse {:.4}, {} dist-evals{}",
+            self.iterations,
+            self.accepted,
+            self.seconds,
+            self.energy,
+            self.mse,
+            self.dist_evals,
+            if self.converged { "" } else { " [iteration cap hit]" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> RunReport {
+        RunReport {
+            iterations: 31,
+            accepted: 27,
+            seconds: 0.25,
+            energy: 100.0,
+            mse: 15.08,
+            converged: true,
+            energy_trace: vec![],
+            m_trace: vec![],
+            dist_evals: 10,
+            phases: PhaseTimer::new(),
+            centroids: DataMatrix::zeros(1, 1),
+            assignment: vec![0],
+        }
+    }
+
+    #[test]
+    fn iter_cell_matches_paper_format() {
+        assert_eq!(dummy().iter_cell(), "27 / 31");
+    }
+
+    #[test]
+    fn acceptance_rate() {
+        let r = dummy();
+        assert!((r.acceptance_rate() - 27.0 / 31.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_mentions_cap_when_not_converged() {
+        let mut r = dummy();
+        r.converged = false;
+        assert!(r.summary().contains("cap"));
+    }
+}

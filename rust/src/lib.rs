@@ -1,0 +1,54 @@
+//! # aakm — Fast K-Means Clustering with Anderson Acceleration
+//!
+//! A production reproduction of *Zhang, Yao, Peng, Yu, Deng — "Fast K-Means
+//! Clustering with Anderson Acceleration" (2018)* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Anderson-accelerated Lloyd solver with
+//!   dynamic-`m` adjustment (the paper's Algorithm 1), the baselines it is
+//!   compared against (Lloyd with naive / Hamerly / Elkan assignment), the
+//!   four seeding methods from the evaluation (k-means++, afk-mc²,
+//!   Bradley–Fayyad, CLARANS), and a clustering service coordinator.
+//! * **Layer 2 (JAX, build time)** — the fixed-point map
+//!   `G(C) = Update(Assign(X, C))` lowered AOT to HLO text.
+//! * **Layer 1 (Pallas, build time)** — the tiled distance + argmin kernel
+//!   inside the L2 map.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (`xla` crate) so
+//! the Rust hot path can execute the JAX-defined G-step without Python.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use aakm::data::synth;
+//! use aakm::kmeans::{Solver, SolverConfig};
+//! use aakm::init::{seed_centroids, InitMethod};
+//! use aakm::rng::Pcg32;
+//!
+//! let mut rng = Pcg32::seed_from_u64(7);
+//! let x = synth::gaussian_blobs(&mut rng, 10_000, 8, 10, 1.0, 0.05);
+//! let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+//! let report = Solver::new(SolverConfig::default()).run(&x, c0);
+//! println!("converged in {} iterations, mse {:.4}",
+//!          report.iterations, report.mse);
+//! ```
+
+pub mod anderson;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod init;
+pub mod kmeans;
+pub mod linalg;
+pub mod lloyd;
+pub mod metrics;
+pub mod par;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and service endpoints.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,266 @@
+//! Small dense matrices (row-major), Cholesky SPD solve, Householder-QR
+//! least squares. Sized for the AA subproblem (`m ≤ 30`).
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data: data.to_vec() }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = super::dot(&self.data[i * self.cols..(i + 1) * self.cols], x);
+        }
+        y
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Solve `A x = b` for symmetric positive-definite `A` (in-place Cholesky;
+/// `a` is the packed row-major `n×n` matrix, destroyed; `b` becomes `x`).
+///
+/// Returns `false` when the factorization hits a non-positive pivot (matrix
+/// not SPD within tolerance) — callers are expected to re-regularize.
+pub fn cholesky_solve_in_place(a: &mut [f64], b: &mut [f64], n: usize) -> bool {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // Factor A = L Lᵀ, L stored in the lower triangle of `a`.
+    for j in 0..n {
+        let mut diag = a[j * n + j];
+        for k in 0..j {
+            diag -= a[j * n + k] * a[j * n + k];
+        }
+        if diag <= 0.0 || !diag.is_finite() {
+            return false;
+        }
+        let ljj = diag.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / ljj;
+        }
+    }
+    // Forward solve L y = b.
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= a[i * n + k] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    // Back solve Lᵀ x = y.
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for k in (i + 1)..n {
+            v -= a[k * n + i] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    true
+}
+
+/// Least squares `min ‖A x − b‖₂` via Householder QR with column norms as a
+/// rank guard. `a` is `rows×cols` row-major with `rows ≥ cols`. Used as the
+/// reference solver in tests and as the fall-back when normal equations are
+/// too ill-conditioned.
+pub fn householder_lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_lstsq needs rows >= cols");
+    assert_eq!(b.len(), m);
+    let mut r = a.data.clone();
+    let mut y = b.to_vec();
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut alpha = 0.0;
+        for i in k..m {
+            alpha += r[i * n + k] * r[i * n + k];
+        }
+        let alpha = alpha.sqrt();
+        if alpha == 0.0 {
+            continue; // zero column: leave x_k = 0 via zero pivot handling
+        }
+        let sign = if r[k * n + k] >= 0.0 { 1.0 } else { -1.0 };
+        let mut v = vec![0.0; m - k];
+        v[0] = r[k * n + k] + sign * alpha;
+        for i in (k + 1)..m {
+            v[i - k] = r[i * n + k];
+        }
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..] and y[k..].
+        for j in k..n {
+            let mut proj = 0.0;
+            for i in k..m {
+                proj += v[i - k] * r[i * n + j];
+            }
+            let scale = 2.0 * proj / vnorm_sq;
+            for i in k..m {
+                r[i * n + j] -= scale * v[i - k];
+            }
+        }
+        let mut proj = 0.0;
+        for i in k..m {
+            proj += v[i - k] * y[i];
+        }
+        let scale = 2.0 * proj / vnorm_sq;
+        for i in k..m {
+            y[i] -= scale * v[i - k];
+        }
+    }
+    // Back substitution on the upper-triangular R.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut v = y[i];
+        for j in (i + 1)..n {
+            v -= r[i * n + j] * x[j];
+        }
+        let pivot = r[i * n + i];
+        x[i] = if pivot.abs() > 1e-12 { v / pivot } else { 0.0 };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = Bᵀ B + I is SPD.
+        let n = 4;
+        let bmat = [
+            1.0, 2.0, 0.0, 1.0, //
+            0.0, 1.0, 3.0, 0.0, //
+            2.0, 0.0, 1.0, 1.0, //
+            1.0, 1.0, 1.0, 2.0,
+        ];
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += bmat[k * n + i] * bmat[k * n + j];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let x_true = [1.0, -2.0, 0.5, 3.0];
+        let mut rhs = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                rhs[i] += a[i * n + j] * x_true[j];
+            }
+        }
+        let mut a_work = a.clone();
+        assert!(cholesky_solve_in_place(&mut a_work, &mut rhs, n));
+        for i in 0..n {
+            assert!((rhs[i] - x_true[i]).abs() < 1e-9, "x[{i}]={}", rhs[i]);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        let mut b = vec![1.0, 1.0];
+        assert!(!cholesky_solve_in_place(&mut a, &mut b, 2));
+    }
+
+    #[test]
+    fn qr_recovers_exact_solution_square() {
+        let a = Mat::from_rows(3, 3, &[2.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 4.0]);
+        let x_true = [1.0, -1.0, 2.0];
+        let b = a.matvec(&x_true);
+        let x = householder_lstsq(&a, &b);
+        for i in 0..3 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn qr_overdetermined_matches_normal_equations() {
+        // Fit a line y = 2x + 1 through noisy-free samples: exact recovery.
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let mut data = Vec::new();
+        let mut b = Vec::new();
+        for &x in &xs {
+            data.extend_from_slice(&[x, 1.0]);
+            b.push(2.0 * x + 1.0);
+        }
+        let a = Mat::from_rows(5, 2, &data);
+        let sol = householder_lstsq(&a, &b);
+        assert!((sol[0] - 2.0).abs() < 1e-9);
+        assert!((sol[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qr_rank_deficient_returns_finite() {
+        // Second column is 2× the first: rank 1. Solver must not blow up.
+        let a = Mat::from_rows(4, 2, &[1.0, 2.0, 2.0, 4.0, 3.0, 6.0, 4.0, 8.0]);
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let x = householder_lstsq(&a, &b);
+        assert!(x.iter().all(|v| v.is_finite()));
+        // Residual should still be (near) minimal: b is in the column space.
+        let pred = a.matvec(&x);
+        let res: f64 = pred.iter().zip(&b).map(|(p, t)| (p - t) * (p - t)).sum();
+        assert!(res < 1e-9, "residual {res}");
+    }
+
+    #[test]
+    fn mat_eye_and_matvec() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.matvec(&[4.0, 5.0, 6.0]), vec![4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,342 @@
+//! The Anderson-acceleration least-squares subproblem (paper Eq. 7–8).
+//!
+//! Given the residual history `F^t, F^{t-1}, …` of the fixed-point map, each
+//! iteration solves
+//!
+//! ```text
+//! θ* = argmin ‖ F^t − Σ_{j=1..m} θ_j (F^{t-j+1} − F^{t-j}) ‖²
+//! ```
+//!
+//! and extrapolates `C^{t+1} = G^t − Σ_j θ*_j (G^{t-j+1} − G^{t-j})`.
+//! (Algorithm 1 line 19 of the paper; the `+` in its Eq. 8 is a sign typo —
+//! the Walker–Ni form and the paper's own pseudocode both subtract.)
+//!
+//! The normal matrix `ΔFᵀΔF` is maintained **incrementally**: pushing a new
+//! column costs `m` inner products of length `dim` (exactly the per-iteration
+//! overhead the paper quotes), not a full `m²` Gram rebuild. The `m×m` system
+//! is solved by Cholesky with escalating Tikhonov regularization, falling
+//! back to Householder QR on the raw columns if the normal equations stay
+//! indefinite (Peng et al. 2018 use the same regularized scheme).
+
+use super::dense::{cholesky_solve_in_place, householder_lstsq, Mat};
+use super::dot;
+
+/// Relative Tikhonov regularization added to the normal matrix diagonal.
+const BASE_REG: f64 = 1e-10;
+/// Escalation factor when Cholesky fails.
+const REG_ESCALATION: f64 = 1e4;
+/// Give up after this many escalations and use QR instead.
+const MAX_REG_ROUNDS: usize = 3;
+
+/// Reusable workspace holding the ΔF/ΔG column history and the cached Gram
+/// matrix. Columns are indexed by recency: index 0 is `F^t − F^{t-1}`.
+#[derive(Debug, Clone)]
+pub struct AndersonLsWorkspace {
+    max_m: usize,
+    dim: usize,
+    /// ΔF columns, newest first. Length ≤ max_m.
+    delta_f: std::collections::VecDeque<Vec<f64>>,
+    /// ΔG columns, newest first, aligned with `delta_f`.
+    delta_g: std::collections::VecDeque<Vec<f64>>,
+    /// Gram matrix of `delta_f` with the same recency indexing, row-major
+    /// `max_m × max_m` (only the top-left `len×len` block is valid).
+    gram: Vec<f64>,
+    /// Scratch for the regularized normal matrix.
+    scratch_a: Vec<f64>,
+    /// Scratch for the RHS / solution.
+    scratch_b: Vec<f64>,
+}
+
+impl AndersonLsWorkspace {
+    /// Workspace for up to `max_m` history columns of dimension `dim`.
+    pub fn new(max_m: usize, dim: usize) -> Self {
+        assert!(max_m > 0, "max_m must be positive");
+        Self {
+            max_m,
+            dim,
+            delta_f: std::collections::VecDeque::with_capacity(max_m + 1),
+            delta_g: std::collections::VecDeque::with_capacity(max_m + 1),
+            gram: vec![0.0; max_m * max_m],
+            scratch_a: vec![0.0; max_m * max_m],
+            scratch_b: vec![0.0; max_m],
+        }
+    }
+
+    /// Number of stored history columns.
+    pub fn len(&self) -> usize {
+        self.delta_f.len()
+    }
+
+    /// True when no history is stored.
+    pub fn is_empty(&self) -> bool {
+        self.delta_f.is_empty()
+    }
+
+    /// Residual dimension this workspace was sized for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Drop all history (used when the solver restarts after a rejection
+    /// cascade or a dataset switch).
+    pub fn clear(&mut self) {
+        self.delta_f.clear();
+        self.delta_g.clear();
+    }
+
+    /// Push the newest difference columns `ΔF = f_new − f_old`,
+    /// `ΔG = g_new − g_old`. Updates the Gram cache with `len` inner
+    /// products (the paper's stated per-iteration cost).
+    pub fn push(&mut self, delta_f: Vec<f64>, delta_g: Vec<f64>) {
+        assert_eq!(delta_f.len(), self.dim);
+        assert_eq!(delta_g.len(), self.dim);
+        // Shift the valid Gram block down-right by one (newest slot is 0,0).
+        let old_len = self.delta_f.len().min(self.max_m - 1);
+        for i in (0..old_len).rev() {
+            for j in (0..old_len).rev() {
+                self.gram[(i + 1) * self.max_m + (j + 1)] = self.gram[i * self.max_m + j];
+            }
+        }
+        if self.delta_f.len() == self.max_m {
+            self.delta_f.pop_back();
+            self.delta_g.pop_back();
+        }
+        self.delta_f.push_front(delta_f);
+        self.delta_g.push_front(delta_g);
+        // New inner products for row/column 0.
+        let newest = &self.delta_f[0];
+        for j in 0..self.delta_f.len() {
+            let v = dot(newest, &self.delta_f[j]);
+            self.gram[j] = v; // row 0
+            self.gram[j * self.max_m] = v; // column 0
+        }
+    }
+
+    /// Solve Eq. (7) for the `m_use` most recent columns against residual
+    /// `f_t`, returning `θ*`. `None` when there is no usable history.
+    pub fn solve(&mut self, f_t: &[f64], m_use: usize) -> Option<Vec<f64>> {
+        assert_eq!(f_t.len(), self.dim);
+        let m = m_use.min(self.delta_f.len());
+        if m == 0 {
+            return None;
+        }
+        // RHS: b_j = <ΔF_j, F^t>.
+        for j in 0..m {
+            self.scratch_b[j] = dot(&self.delta_f[j], f_t);
+        }
+        // Mean diagonal magnitude sets the regularization scale.
+        let mut trace = 0.0;
+        for i in 0..m {
+            trace += self.gram[i * self.max_m + i];
+        }
+        let scale = (trace / m as f64).max(f64::MIN_POSITIVE);
+
+        let mut reg = BASE_REG;
+        for _round in 0..MAX_REG_ROUNDS {
+            for i in 0..m {
+                for j in 0..m {
+                    self.scratch_a[i * m + j] = self.gram[i * self.max_m + j];
+                }
+                self.scratch_a[i * m + i] += reg * scale;
+            }
+            let mut rhs = self.scratch_b[..m].to_vec();
+            if cholesky_solve_in_place(&mut self.scratch_a[..m * m], &mut rhs, m)
+                && rhs.iter().all(|v| v.is_finite())
+            {
+                return Some(rhs);
+            }
+            reg *= REG_ESCALATION;
+        }
+        // Last resort: QR on the explicit (dim × m) column matrix.
+        let mut cols = vec![0.0; self.dim * m];
+        for (j, col) in self.delta_f.iter().take(m).enumerate() {
+            for i in 0..self.dim {
+                cols[i * m + j] = col[i];
+            }
+        }
+        let a = Mat::from_rows(self.dim, m, &cols);
+        let theta = householder_lstsq(&a, f_t);
+        theta.iter().all(|v| v.is_finite()).then_some(theta)
+    }
+
+    /// Apply the extrapolation of Algorithm 1 line 19:
+    /// `out = g_t − Σ_j θ_j ΔG_j`.
+    pub fn accelerate(&self, g_t: &[f64], theta: &[f64]) -> Vec<f64> {
+        assert_eq!(g_t.len(), self.dim);
+        assert!(theta.len() <= self.delta_g.len());
+        let mut out = g_t.to_vec();
+        for (j, &th) in theta.iter().enumerate() {
+            super::axpy(-th, &self.delta_g[j], &mut out);
+        }
+        out
+    }
+}
+
+/// One-shot convenience wrapper: build a workspace from explicit histories
+/// and solve. Used by tests and by callers that do not keep a workspace.
+///
+/// `f_hist` / `g_hist` are newest-first sequences `[F^t, F^{t-1}, …]`.
+pub fn solve_anderson_weights(
+    f_hist: &[Vec<f64>],
+    g_hist: &[Vec<f64>],
+    m_use: usize,
+) -> Option<(Vec<f64>, Vec<f64>)> {
+    if f_hist.len() < 2 {
+        return None;
+    }
+    let dim = f_hist[0].len();
+    let m = m_use.min(f_hist.len() - 1);
+    let mut ws = AndersonLsWorkspace::new(m.max(1), dim);
+    // Push oldest differences first so index 0 ends up newest.
+    for j in (0..m).rev() {
+        let mut df = vec![0.0; dim];
+        let mut dg = vec![0.0; dim];
+        super::sub(&f_hist[j], &f_hist[j + 1], &mut df);
+        super::sub(&g_hist[j], &g_hist[j + 1], &mut dg);
+        ws.push(df, dg);
+    }
+    let theta = ws.solve(&f_hist[0], m)?;
+    let accel = ws.accelerate(&g_hist[0], &theta);
+    Some((theta, accel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force reference: materialize ΔF and solve with QR.
+    fn reference_theta(f_hist: &[Vec<f64>], m: usize) -> Vec<f64> {
+        let dim = f_hist[0].len();
+        let mut cols = vec![0.0; dim * m];
+        for j in 0..m {
+            for i in 0..dim {
+                cols[i * m + j] = f_hist[j][i] - f_hist[j + 1][i];
+            }
+        }
+        let a = Mat::from_rows(dim, m, &cols);
+        householder_lstsq(&a, &f_hist[0])
+    }
+
+    fn fake_history(dim: usize, steps: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        use crate::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let f: Vec<Vec<f64>> =
+            (0..steps).map(|_| (0..dim).map(|_| rng.next_gaussian()).collect()).collect();
+        let g: Vec<Vec<f64>> =
+            (0..steps).map(|_| (0..dim).map(|_| rng.next_gaussian()).collect()).collect();
+        (f, g)
+    }
+
+    #[test]
+    fn workspace_matches_qr_reference() {
+        let (f, g) = fake_history(40, 6, 21);
+        for m in 1..=5 {
+            let (theta, _) = solve_anderson_weights(&f, &g, m).unwrap();
+            let reference = reference_theta(&f, m);
+            for j in 0..m {
+                assert!(
+                    (theta[j] - reference[j]).abs() < 1e-6,
+                    "m={m} j={j}: {} vs {}",
+                    theta[j],
+                    reference[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_gram_equals_fresh_gram() {
+        let (f, g) = fake_history(25, 8, 22);
+        let dim = 25;
+        let mut ws = AndersonLsWorkspace::new(4, dim);
+        for t in (0..7).rev() {
+            let mut df = vec![0.0; dim];
+            let mut dg = vec![0.0; dim];
+            crate::linalg::sub(&f[t], &f[t + 1], &mut df);
+            crate::linalg::sub(&g[t], &g[t + 1], &mut dg);
+            ws.push(df, dg);
+        }
+        // After 7 pushes into capacity 4, columns are ΔF_0..ΔF_3.
+        assert_eq!(ws.len(), 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = dot(&ws.delta_f[i], &ws.delta_f[j]);
+                let got = ws.gram[i * ws.max_m + j];
+                assert!((expect - got).abs() < 1e-9, "gram[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn acceleration_is_exact_for_linear_map() {
+        // For a linear fixed-point map G(x) = A x + b with fixed point x*,
+        // AA with m = dim recovers x* in one extrapolation from generic
+        // iterates (the quasi-Newton property on linear problems).
+        let a_diag = [0.5, -0.25, 0.8];
+        let b = [1.0, 2.0, -1.0];
+        let x_star: Vec<f64> = (0..3).map(|i| b[i] / (1.0 - a_diag[i])).collect();
+        let g = |x: &[f64]| -> Vec<f64> {
+            (0..3).map(|i| a_diag[i] * x[i] + b[i]).collect()
+        };
+        // Build 4 iterates (newest first at the end).
+        let mut xs = vec![vec![0.0, 0.0, 0.0]];
+        for t in 0..3 {
+            let next = g(&xs[t]);
+            xs.push(next);
+        }
+        // Histories newest-first: F^t = G(x^t) − x^t, G^t = G(x^t).
+        let mut f_hist = Vec::new();
+        let mut g_hist = Vec::new();
+        for x in xs.iter().rev() {
+            let gx = g(x);
+            f_hist.push((0..3).map(|i| gx[i] - x[i]).collect());
+            g_hist.push(gx);
+        }
+        let (_, accel) = solve_anderson_weights(&f_hist, &g_hist, 3).unwrap();
+        for i in 0..3 {
+            // Tolerance is bounded below by the Tikhonov regularization the
+            // production solver always applies (BASE_REG ≈ 1e-10 relative).
+            assert!(
+                (accel[i] - x_star[i]).abs() < 1e-6,
+                "accel[{i}]={} vs x*={}",
+                accel[i],
+                x_star[i]
+            );
+        }
+    }
+
+    #[test]
+    fn solve_handles_duplicate_columns() {
+        // Identical ΔF columns make the Gram singular; regularization (or
+        // the QR fall-back) must still return finite weights.
+        let dim = 10;
+        let col: Vec<f64> = (0..dim).map(|i| i as f64).collect();
+        let mut ws = AndersonLsWorkspace::new(3, dim);
+        for _ in 0..3 {
+            ws.push(col.clone(), col.clone());
+        }
+        let f_t: Vec<f64> = (0..dim).map(|i| (i as f64).cos()).collect();
+        let theta = ws.solve(&f_t, 3).expect("should solve with regularization");
+        assert!(theta.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn empty_history_returns_none() {
+        let mut ws = AndersonLsWorkspace::new(5, 8);
+        let f = vec![1.0; 8];
+        assert!(ws.solve(&f, 5).is_none());
+        assert!(solve_anderson_weights(&[f.clone()], &[f], 3).is_none());
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let dim = 4;
+        let mut ws = AndersonLsWorkspace::new(2, dim);
+        for v in 1..=5 {
+            ws.push(vec![v as f64; dim], vec![v as f64; dim]);
+        }
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.delta_f[0], vec![5.0; dim]);
+        assert_eq!(ws.delta_f[1], vec![4.0; dim]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Hamerly's assignment algorithm (Hamerly 2010) — one upper bound on the
+//! distance to the assigned centroid and one lower bound on the distance to
+//! the second-closest centroid per sample, invalidated by centroid motion.
+//!
+//! This is the assignment engine the paper builds Algorithm 1 on. Crucially,
+//! the bounds stay valid under *arbitrary* centroid motion (the update rule
+//! only needs how far each centroid moved), so they survive accelerated
+//! iterates and the occasional revert-to-`C_AU` fall-back.
+
+use super::{Assignment, AssignmentEngine};
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::par::{SyncSliceMut, ThreadPool};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hamerly-bounds assignment engine.
+#[derive(Debug, Default)]
+pub struct HamerlyEngine {
+    /// Centroids seen at the previous call.
+    prev_c: Option<DataMatrix>,
+    /// Upper bound: d(x_i, c_{a_i}).
+    upper: Vec<f64>,
+    /// Lower bound: d(x_i, second-closest centroid).
+    lower: Vec<f64>,
+    /// Current assignment.
+    assign: Vec<u32>,
+    /// Saved state for [`AssignmentEngine::rollback`] after rejected
+    /// accelerated jumps: `(prev_c, upper, lower, assign)`.
+    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
+    dist_evals: AtomicU64,
+}
+
+impl HamerlyEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Full O(NK) initialization of bounds + assignment.
+    fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
+        let (n, k) = (x.n(), c.n());
+        self.upper.resize(n, 0.0);
+        self.lower.resize(n, 0.0);
+        self.assign.resize(n, 0);
+        let upper = SyncSliceMut::new(&mut self.upper);
+        let lower = SyncSliceMut::new(&mut self.lower);
+        let assign = SyncSliceMut::new(&mut self.assign);
+        let evals = AtomicU64::new(0);
+        pool.parallel_for(n, 256, |range| {
+            let mut local = 0u64;
+            for i in range {
+                let row = x.row(i);
+                let (mut d1, mut d2, mut best) = (f64::INFINITY, f64::INFINITY, 0u32);
+                for j in 0..k {
+                    let d = dist_sq(row, c.row(j)).sqrt();
+                    if d < d1 {
+                        d2 = d1;
+                        d1 = d;
+                        best = j as u32;
+                    } else if d < d2 {
+                        d2 = d;
+                    }
+                }
+                local += k as u64;
+                *upper.at(i) = d1;
+                *lower.at(i) = d2;
+                *assign.at(i) = best;
+            }
+            evals.fetch_add(local, Ordering::Relaxed);
+        });
+        self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+impl AssignmentEngine for HamerlyEngine {
+    fn name(&self) -> &'static str {
+        "hamerly"
+    }
+
+    fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
+        let (n, k, d) = (x.n(), c.n(), x.d());
+        let stale = match &self.prev_c {
+            Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
+            None => true,
+        };
+        if stale {
+            self.initialize(x, c, pool);
+            self.prev_c = Some(c.clone());
+            out.clear();
+            out.extend_from_slice(&self.assign);
+            return;
+        }
+        let prev = self.prev_c.as_ref().unwrap();
+        // Per-centroid movement; track the largest and second largest so a
+        // sample assigned to the arg-max centroid uses the runner-up.
+        let mut moved = vec![0.0f64; k];
+        let (mut max1, mut max2, mut argmax) = (0.0f64, 0.0f64, usize::MAX);
+        for j in 0..k {
+            let m = dist_sq(prev.row(j), c.row(j)).sqrt();
+            moved[j] = m;
+            if m > max1 {
+                max2 = max1;
+                max1 = m;
+                argmax = j;
+            } else if m > max2 {
+                max2 = m;
+            }
+        }
+        // Half distance from each centroid to its nearest other centroid.
+        let mut s = vec![f64::INFINITY; k];
+        for j in 0..k {
+            for j2 in (j + 1)..k {
+                let d_jj = dist_sq(c.row(j), c.row(j2)).sqrt();
+                if d_jj < s[j] {
+                    s[j] = d_jj;
+                }
+                if d_jj < s[j2] {
+                    s[j2] = d_jj;
+                }
+            }
+        }
+        for v in s.iter_mut() {
+            *v *= 0.5;
+        }
+
+        let upper = SyncSliceMut::new(&mut self.upper);
+        let lower = SyncSliceMut::new(&mut self.lower);
+        let assign = SyncSliceMut::new(&mut self.assign);
+        let evals = AtomicU64::new(0);
+        pool.parallel_for(n, 256, |range| {
+            let mut local = 0u64;
+            for i in range {
+                let a = *assign.at(i) as usize;
+                // Drift the bounds by centroid motion.
+                let u = *upper.at(i) + moved[a];
+                let loosen = if a == argmax { max2 } else { max1 };
+                let l = *lower.at(i) - loosen;
+                *upper.at(i) = u;
+                *lower.at(i) = l;
+                let threshold = s[a].max(l);
+                if u <= threshold {
+                    continue; // bound test passed, assignment unchanged
+                }
+                // Tighten the upper bound with one real distance.
+                let row = x.row(i);
+                let tight = dist_sq(row, c.row(a)).sqrt();
+                local += 1;
+                *upper.at(i) = tight;
+                if tight <= threshold {
+                    continue;
+                }
+                // Full scan.
+                let (mut d1, mut d2, mut best) = (f64::INFINITY, f64::INFINITY, a as u32);
+                for j in 0..k {
+                    let dj = dist_sq(row, c.row(j)).sqrt();
+                    if dj < d1 {
+                        d2 = d1;
+                        d1 = dj;
+                        best = j as u32;
+                    } else if dj < d2 {
+                        d2 = dj;
+                    }
+                }
+                local += k as u64;
+                *upper.at(i) = d1;
+                *lower.at(i) = d2;
+                *assign.at(i) = best;
+            }
+            evals.fetch_add(local, Ordering::Relaxed);
+        });
+        self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.prev_c = Some(c.clone());
+        out.clear();
+        out.extend_from_slice(&self.assign);
+    }
+
+    fn reset(&mut self) {
+        self.prev_c = None;
+        self.upper.clear();
+        self.lower.clear();
+        self.assign.clear();
+        self.saved = None;
+    }
+
+    fn distance_evals(&self) -> u64 {
+        self.dist_evals.load(Ordering::Relaxed)
+    }
+
+    fn checkpoint(&mut self) {
+        if let Some(prev) = &self.prev_c {
+            self.saved =
+                Some((prev.clone(), self.upper.clone(), self.lower.clone(), self.assign.clone()));
+        }
+    }
+
+    fn rollback(&mut self) -> bool {
+        match self.saved.take() {
+            Some((prev, upper, lower, assign)) => {
+                self.prev_c = Some(prev);
+                self.upper = upper;
+                self.lower = lower;
+                self.assign = assign;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lloyd::test_support::engine_matches_brute_force;
+    use crate::lloyd::{brute_force_assign, update_step};
+
+    #[test]
+    fn matches_brute_force_over_rounds() {
+        engine_matches_brute_force(&mut HamerlyEngine::new());
+    }
+
+    #[test]
+    fn saves_distance_evals_vs_naive() {
+        // Over a converging Lloyd run, Hamerly must do far fewer distance
+        // evaluations than N*K per iteration.
+        let (x, mut c) = crate::lloyd::test_support::small_problem(42, 2000, 4, 10);
+        let pool = ThreadPool::new(1);
+        let mut engine = HamerlyEngine::new();
+        let mut out = Assignment::new();
+        let mut iters = 0;
+        loop {
+            let before = engine.distance_evals();
+            engine.assign(&x, &c, &pool, &mut out);
+            let evals = engine.distance_evals() - before;
+            if iters > 2 {
+                assert!(
+                    evals < (x.n() * c.n()) as u64 / 2,
+                    "iter {iters}: {evals} evals is not better than half of naive"
+                );
+            }
+            let mut next = c.clone();
+            update_step(&x, &out, &c, &mut next, &pool);
+            if next.frob_dist(&c) < 1e-12 || iters > 60 {
+                break;
+            }
+            c = next;
+            iters += 1;
+        }
+        assert!(iters > 3, "problem should take a few iterations");
+    }
+
+    #[test]
+    fn single_cluster_works() {
+        let x = DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        let c = DataMatrix::from_rows(&[&[0.5, 0.5]]);
+        let pool = ThreadPool::new(1);
+        let mut engine = HamerlyEngine::new();
+        let mut out = Assignment::new();
+        engine.assign(&x, &c, &pool, &mut out);
+        assert_eq!(out, vec![0, 0]);
+        // Second call with moved centroid still works.
+        let c2 = DataMatrix::from_rows(&[&[5.0, 5.0]]);
+        engine.assign(&x, &c2, &pool, &mut out);
+        assert_eq!(out, vec![0, 0]);
+    }
+
+    #[test]
+    fn reset_reinitializes() {
+        let (x, c) = crate::lloyd::test_support::small_problem(7, 100, 3, 4);
+        let pool = ThreadPool::new(1);
+        let mut engine = HamerlyEngine::new();
+        let mut out = Assignment::new();
+        engine.assign(&x, &c, &pool, &mut out);
+        engine.reset();
+        engine.assign(&x, &c, &pool, &mut out);
+        let expect = brute_force_assign(&x, &c);
+        for i in 0..x.n() {
+            let got_d = dist_sq(x.row(i), c.row(out[i] as usize));
+            let exp_d = dist_sq(x.row(i), c.row(expect[i] as usize));
+            assert!((got_d - exp_d).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn k_change_triggers_reinit() {
+        let (x, c) = crate::lloyd::test_support::small_problem(8, 120, 3, 4);
+        let pool = ThreadPool::new(1);
+        let mut engine = HamerlyEngine::new();
+        let mut out = Assignment::new();
+        engine.assign(&x, &c, &pool, &mut out);
+        // Different K: engine must not panic and must stay correct.
+        let c2 = c.gather_rows(&[0, 1]);
+        engine.assign(&x, &c2, &pool, &mut out);
+        let expect = brute_force_assign(&x, &c2);
+        for i in 0..x.n() {
+            let got_d = dist_sq(x.row(i), c2.row(out[i] as usize));
+            let exp_d = dist_sq(x.row(i), c2.row(expect[i] as usize));
+            assert!((got_d - exp_d).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Lloyd's algorithm building blocks: assignment engines, the update step,
+//! and energy evaluation.
+//!
+//! The paper implements its *Assignment-Step* with Hamerly's bounds
+//! (Hamerly 2010) and notes that faster engines (Ding et al. 2015, Newling
+//! & Fleuret 2016) would not change the iteration-count reduction. We
+//! provide four CPU engines behind one trait —
+//! [`NaiveEngine`] (O(NK) reference), [`HamerlyEngine`] (the paper's
+//! choice), [`ElkanEngine`] (Elkan 2003) and [`YinyangEngine`] (Ding et
+//! al. 2015, for the large-K columns) — plus the PJRT engine in
+//! [`crate::runtime`] that executes the AOT-compiled JAX G-step.
+
+mod elkan;
+mod hamerly;
+mod naive;
+mod yinyang;
+
+pub use elkan::ElkanEngine;
+pub use hamerly::HamerlyEngine;
+pub use naive::NaiveEngine;
+pub use yinyang::YinyangEngine;
+
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::par::ThreadPool;
+
+/// Cluster assignment for every sample.
+pub type Assignment = Vec<u32>;
+
+/// An assignment-step implementation. Engines may keep per-sample bound
+/// state between calls (Hamerly, Elkan); [`AssignmentEngine::reset`] drops
+/// it (used when the centroid set is replaced wholesale, e.g. a new run).
+///
+/// Deliberately not `Send`: the PJRT engine wraps non-`Send` PJRT handles.
+/// The coordinator gives each worker thread its own engine via a factory.
+pub trait AssignmentEngine {
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Assign every sample in `x` to its nearest centroid in `c`, writing
+    /// into `out` (resized as needed). Implementations may exploit bound
+    /// state from the previous call *with arbitrary new centroids* — both
+    /// Hamerly and Elkan bounds stay valid under any centroid motion, which
+    /// is what lets the paper reuse them for accelerated iterates.
+    fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment);
+
+    /// Forget all cached bound state.
+    fn reset(&mut self);
+
+    /// Number of full point–centroid distance evaluations since creation
+    /// (the classic efficiency metric for accelerated K-Means engines).
+    fn distance_evals(&self) -> u64;
+
+    /// Save the current bound state. Called by the accelerated solver right
+    /// before it jumps to an Anderson candidate, so that a rejected jump can
+    /// [`AssignmentEngine::rollback`] instead of drifting the bounds by two
+    /// large motions (candidate there-and-back). Default: unsupported no-op.
+    fn checkpoint(&mut self) {}
+
+    /// Restore the state saved by [`AssignmentEngine::checkpoint`]; returns
+    /// `false` when unsupported (callers then proceed with drifted bounds —
+    /// correctness is unaffected either way, this is purely a prune-quality
+    /// optimization; see EXPERIMENTS.md §Perf L3 iteration 2).
+    fn rollback(&mut self) -> bool {
+        false
+    }
+}
+
+/// Build an engine by kind. The `Pjrt` kind is constructed by the runtime
+/// module (it needs artifacts) — asking for it here panics.
+pub fn make_engine(kind: crate::config::EngineKind) -> Box<dyn AssignmentEngine> {
+    use crate::config::EngineKind;
+    match kind {
+        EngineKind::Naive => Box::new(NaiveEngine::new()),
+        EngineKind::Hamerly => Box::new(HamerlyEngine::new()),
+        EngineKind::Elkan => Box::new(ElkanEngine::new()),
+        EngineKind::Yinyang => Box::new(YinyangEngine::new()),
+        EngineKind::Pjrt => panic!("PJRT engine must be built via runtime::PjrtEngine"),
+    }
+}
+
+/// The update step (paper Eq. 4): each centroid moves to the mean of its
+/// assigned samples. Empty clusters keep their previous position (the
+/// conventional choice; the paper does not treat empty clusters specially).
+/// Returns the per-cluster sample counts.
+pub fn update_step(
+    x: &DataMatrix,
+    assign: &Assignment,
+    prev_c: &DataMatrix,
+    out_c: &mut DataMatrix,
+    pool: &ThreadPool,
+) -> Vec<usize> {
+    let (n, d) = (x.n(), x.d());
+    let k = prev_c.n();
+    debug_assert_eq!(assign.len(), n);
+    debug_assert_eq!(out_c.n(), k);
+    // Parallel partial sums per lane, combined at the end. Each partial is
+    // (k*d sums, k counts).
+    let (sums, counts) = pool.map_reduce(
+        n,
+        512,
+        || (vec![0.0f64; k * d], vec![0usize; k]),
+        |acc, range| {
+            let (sums, counts) = acc;
+            for i in range {
+                let j = assign[i] as usize;
+                debug_assert!(j < k, "assignment out of range");
+                counts[j] += 1;
+                let row = x.row(i);
+                let dst = &mut sums[j * d..(j + 1) * d];
+                for (s, &v) in dst.iter_mut().zip(row) {
+                    *s += v;
+                }
+            }
+        },
+        |(mut s1, mut c1), (s2, c2)| {
+            for (a, b) in s1.iter_mut().zip(&s2) {
+                *a += b;
+            }
+            for (a, b) in c1.iter_mut().zip(&c2) {
+                *a += b;
+            }
+            (s1, c1)
+        },
+    );
+    for j in 0..k {
+        let dst = out_c.row_mut(j);
+        if counts[j] == 0 {
+            dst.copy_from_slice(prev_c.row(j));
+        } else {
+            let inv = 1.0 / counts[j] as f64;
+            for (o, &s) in dst.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                *o = s * inv;
+            }
+        }
+    }
+    counts
+}
+
+/// Fused update + energy: one parallel pass over the samples computes the
+/// per-cluster sums/counts (the update step) *and* the clustering energy at
+/// the **input** centroids `E(P, C^t)` — the quantity Algorithm 1 line 7
+/// needs for the acceptance guard. Fusing the two O(N·d) sweeps makes the
+/// accelerated solver's per-iteration memory traffic identical to plain
+/// Lloyd's (see EXPERIMENTS.md §Perf, L3 iteration 1).
+pub fn update_and_energy(
+    x: &DataMatrix,
+    assign: &Assignment,
+    c_t: &DataMatrix,
+    out_c: &mut DataMatrix,
+    pool: &ThreadPool,
+) -> (Vec<usize>, f64) {
+    let (n, d) = (x.n(), x.d());
+    let k = c_t.n();
+    debug_assert_eq!(assign.len(), n);
+    debug_assert_eq!(out_c.n(), k);
+    let (sums, counts, energy) = pool.map_reduce(
+        n,
+        512,
+        || (vec![0.0f64; k * d], vec![0usize; k], 0.0f64),
+        |acc, range| {
+            let (sums, counts, energy) = acc;
+            for i in range {
+                let j = assign[i] as usize;
+                debug_assert!(j < k);
+                counts[j] += 1;
+                let row = x.row(i);
+                let cj = c_t.row(j);
+                let dst = &mut sums[j * d..(j + 1) * d];
+                let mut e = 0.0;
+                for t in 0..d {
+                    let v = row[t];
+                    dst[t] += v;
+                    let diff = v - cj[t];
+                    e += diff * diff;
+                }
+                *energy += e;
+            }
+        },
+        |(mut s1, mut c1, e1), (s2, c2, e2)| {
+            for (a, b) in s1.iter_mut().zip(&s2) {
+                *a += b;
+            }
+            for (a, b) in c1.iter_mut().zip(&c2) {
+                *a += b;
+            }
+            (s1, c1, e1 + e2)
+        },
+    );
+    for j in 0..k {
+        let dst = out_c.row_mut(j);
+        if counts[j] == 0 {
+            dst.copy_from_slice(c_t.row(j));
+        } else {
+            let inv = 1.0 / counts[j] as f64;
+            for (o, &s) in dst.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                *o = s * inv;
+            }
+        }
+    }
+    (counts, energy)
+}
+
+/// Clustering energy (paper Eq. 1) with a precomputed assignment —
+/// `E(P, C)` in Algorithm 1. O(N·d).
+pub fn energy(x: &DataMatrix, c: &DataMatrix, assign: &Assignment, pool: &ThreadPool) -> f64 {
+    let n = x.n();
+    debug_assert_eq!(assign.len(), n);
+    pool.map_reduce(
+        n,
+        1024,
+        || 0.0f64,
+        |acc, range| {
+            let mut s = 0.0;
+            for i in range {
+                s += dist_sq(x.row(i), c.row(assign[i] as usize));
+            }
+            *acc += s;
+        },
+        |a, b| a + b,
+    )
+}
+
+/// Mean squared error — the paper's reported MSE column: `E / N`.
+pub fn mse(x: &DataMatrix, c: &DataMatrix, assign: &Assignment, pool: &ThreadPool) -> f64 {
+    energy(x, c, assign, pool) / x.n().max(1) as f64
+}
+
+/// Reference brute-force assignment used in tests to validate engines.
+pub fn brute_force_assign(x: &DataMatrix, c: &DataMatrix) -> Assignment {
+    (0..x.n())
+        .map(|i| {
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for j in 0..c.n() {
+                let dsq = dist_sq(x.row(i), c.row(j));
+                if dsq < best_d {
+                    best_d = dsq;
+                    best = j as u32;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    /// A deterministic small problem for engine tests.
+    pub fn small_problem(seed: u64, n: usize, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let x = synth::gaussian_blobs(&mut rng, n, d, k, 2.0, 0.3);
+        let c = x.gather_rows(&crate::rng::sample_indices(n, k, &mut rng));
+        (x, c)
+    }
+
+    /// Assert an engine agrees with brute force across several rounds of
+    /// centroid motion (including non-Lloyd "accelerated" jumps).
+    pub fn engine_matches_brute_force(engine: &mut dyn AssignmentEngine) {
+        let pool = ThreadPool::new(2);
+        let (x, mut c) = small_problem(404, 600, 5, 8);
+        let mut rng = Pcg32::seed_from_u64(505);
+        let mut out = Assignment::new();
+        for round in 0..6 {
+            engine.assign(&x, &c, &pool, &mut out);
+            let expect = brute_force_assign(&x, &c);
+            // Ties can differ between engines; compare distances instead of ids.
+            for i in 0..x.n() {
+                let got_d = dist_sq(x.row(i), c.row(out[i] as usize));
+                let exp_d = dist_sq(x.row(i), c.row(expect[i] as usize));
+                assert!(
+                    (got_d - exp_d).abs() < 1e-9,
+                    "{}: round {round} sample {i}: {got_d} vs {exp_d}",
+                    engine.name()
+                );
+            }
+            // Move centroids: alternate Lloyd-like small steps and random
+            // jumps (mimicking accepted accelerated iterates).
+            if round % 2 == 0 {
+                let mut next = c.clone();
+                update_step(&x, &out, &c, &mut next, &pool);
+                c = next;
+            } else {
+                use crate::rng::Rng;
+                for j in 0..c.n() {
+                    for t in 0..c.d() {
+                        c[(j, t)] += 0.2 * rng.next_gaussian();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn update_step_computes_means() {
+        let x = DataMatrix::from_rows(&[&[0.0, 0.0], &[2.0, 0.0], &[10.0, 10.0]]);
+        let prev = DataMatrix::from_rows(&[&[0.0, 0.0], &[9.0, 9.0], &[-5.0, -5.0]]);
+        let assign = vec![0, 0, 1];
+        let mut out = DataMatrix::zeros(3, 2);
+        let pool = ThreadPool::new(1);
+        let counts = update_step(&x, &assign, &prev, &mut out, &pool);
+        assert_eq!(counts, vec![2, 1, 0]);
+        assert_eq!(out.row(0), &[1.0, 0.0]);
+        assert_eq!(out.row(1), &[10.0, 10.0]);
+        // Empty cluster 2 keeps its previous position.
+        assert_eq!(out.row(2), &[-5.0, -5.0]);
+    }
+
+    #[test]
+    fn energy_matches_manual() {
+        let x = DataMatrix::from_rows(&[&[0.0], &[4.0]]);
+        let c = DataMatrix::from_rows(&[&[1.0]]);
+        let assign = vec![0, 0];
+        let pool = ThreadPool::new(1);
+        // (0-1)^2 + (4-1)^2 = 1 + 9
+        assert_eq!(energy(&x, &c, &assign, &pool), 10.0);
+        assert_eq!(mse(&x, &c, &assign, &pool), 5.0);
+    }
+
+    #[test]
+    fn update_parallel_equals_serial() {
+        let mut rng = Pcg32::seed_from_u64(77);
+        let x = synth::gaussian_blobs(&mut rng, 3000, 6, 5, 2.0, 0.4);
+        let c0 = x.gather_rows(&[0, 100, 200, 300, 400]);
+        let assign = brute_force_assign(&x, &c0);
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let mut out1 = DataMatrix::zeros(5, 6);
+        let mut out4 = DataMatrix::zeros(5, 6);
+        let c1 = update_step(&x, &assign, &c0, &mut out1, &pool1);
+        let c4 = update_step(&x, &assign, &c0, &mut out4, &pool4);
+        assert_eq!(c1, c4);
+        for j in 0..5 {
+            for t in 0..6 {
+                assert!((out1[(j, t)] - out4[(j, t)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn lloyd_iteration_decreases_energy() {
+        let (x, mut c) = test_support::small_problem(9, 500, 4, 6);
+        let pool = ThreadPool::new(1);
+        let mut prev_energy = f64::INFINITY;
+        for _ in 0..20 {
+            let assign = brute_force_assign(&x, &c);
+            let e = energy(&x, &c, &assign, &pool);
+            assert!(
+                e <= prev_energy + 1e-9,
+                "Lloyd iteration must not increase energy: {e} > {prev_energy}"
+            );
+            prev_energy = e;
+            let mut next = c.clone();
+            update_step(&x, &assign, &c, &mut next, &pool);
+            c = next;
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! The O(NK) reference assignment engine: every sample against every
+//! centroid, parallelized over samples. No state between calls.
+
+use super::{Assignment, AssignmentEngine};
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::par::{SyncSliceMut, ThreadPool};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Brute-force nearest-centroid assignment.
+#[derive(Debug, Default)]
+pub struct NaiveEngine {
+    dist_evals: AtomicU64,
+}
+
+impl NaiveEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl AssignmentEngine for NaiveEngine {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
+        let (n, k) = (x.n(), c.n());
+        out.resize(n, 0);
+        let shared = SyncSliceMut::new(out.as_mut_slice());
+        let evals = AtomicU64::new(0);
+        pool.parallel_for(n, 256, |range| {
+            let mut local_evals = 0u64;
+            for i in range {
+                let row = x.row(i);
+                let mut best = 0u32;
+                let mut best_d = f64::INFINITY;
+                for j in 0..k {
+                    let dsq = dist_sq(row, c.row(j));
+                    if dsq < best_d {
+                        best_d = dsq;
+                        best = j as u32;
+                    }
+                }
+                local_evals += k as u64;
+                *shared.at(i) = best;
+            }
+            evals.fetch_add(local_evals, Ordering::Relaxed);
+        });
+        self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    fn reset(&mut self) {}
+
+    fn distance_evals(&self) -> u64 {
+        self.dist_evals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lloyd::test_support::engine_matches_brute_force;
+
+    #[test]
+    fn matches_brute_force() {
+        engine_matches_brute_force(&mut NaiveEngine::new());
+    }
+
+    #[test]
+    fn counts_distance_evals() {
+        let mut e = NaiveEngine::new();
+        let pool = ThreadPool::new(1);
+        let x = DataMatrix::from_rows(&[&[0.0], &[1.0], &[2.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0], &[5.0]]);
+        let mut out = Assignment::new();
+        e.assign(&x, &c, &pool, &mut out);
+        assert_eq!(e.distance_evals(), 6); // 3 samples × 2 centroids
+        assert_eq!(out, vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,383 @@
+//! Yinyang K-Means assignment (Ding et al., ICML 2015) — the "drop-in
+//! faster assignment" the paper cites as compatible with its acceleration.
+//!
+//! Centroids are clustered into `G ≈ K/10` groups once at initialization;
+//! each sample keeps one upper bound (distance to its assigned centroid)
+//! and one lower bound **per group** (min distance to that group's
+//! centroids). Group-level bounds survive centroid motion much better than
+//! Hamerly's single global lower bound when only a few centroids move far —
+//! which is exactly what an accepted Anderson jump looks like — and they
+//! scale to the paper's K=100 / K=1000 columns.
+
+use super::{Assignment, AssignmentEngine};
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+use crate::par::{SyncSliceMut, ThreadPool};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Target number of centroids per group (Ding et al. use K/10).
+const GROUP_SIZE: usize = 10;
+/// Lloyd rounds used to cluster the centroids into groups.
+const GROUPING_ROUNDS: usize = 5;
+
+/// Yinyang group-bounds assignment engine.
+#[derive(Debug, Default)]
+pub struct YinyangEngine {
+    prev_c: Option<DataMatrix>,
+    /// Group id per centroid.
+    group_of: Vec<usize>,
+    n_groups: usize,
+    /// Upper bound d(x_i, c_{a_i}).
+    upper: Vec<f64>,
+    /// Lower bounds per sample per group, row-major N×G: min distance to
+    /// any centroid of the group **other than the assigned centroid**.
+    lower: Vec<f64>,
+    assign: Vec<u32>,
+    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
+    dist_evals: AtomicU64,
+}
+
+impl YinyangEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cluster the centroids into groups with a few Lloyd rounds (groups
+    /// are fixed afterwards, as in the original algorithm).
+    fn build_groups(&mut self, c: &DataMatrix) {
+        let k = c.n();
+        let g = k.div_ceil(GROUP_SIZE).max(1);
+        self.n_groups = g;
+        self.group_of = vec![0; k];
+        if g == 1 {
+            return;
+        }
+        // Seed group centers with a strided pick, then Lloyd on centroids.
+        let mut centers: Vec<Vec<f64>> =
+            (0..g).map(|j| c.row(j * k / g).to_vec()).collect();
+        for _ in 0..GROUPING_ROUNDS {
+            for j in 0..k {
+                let (mut best, mut best_d) = (0usize, f64::INFINITY);
+                for (gi, ctr) in centers.iter().enumerate() {
+                    let d = dist_sq(c.row(j), ctr);
+                    if d < best_d {
+                        best_d = d;
+                        best = gi;
+                    }
+                }
+                self.group_of[j] = best;
+            }
+            // Means (empty groups keep their center).
+            let d = c.d();
+            let mut sums = vec![vec![0.0; d]; g];
+            let mut counts = vec![0usize; g];
+            for j in 0..k {
+                let gi = self.group_of[j];
+                counts[gi] += 1;
+                for t in 0..d {
+                    sums[gi][t] += c[(j, t)];
+                }
+            }
+            for gi in 0..g {
+                if counts[gi] > 0 {
+                    for t in 0..d {
+                        centers[gi][t] = sums[gi][t] / counts[gi] as f64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Full O(NK) pass establishing assignment + bounds.
+    fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
+        let (n, k, g) = (x.n(), c.n(), self.n_groups);
+        self.upper.resize(n, 0.0);
+        self.lower.resize(n * g, 0.0);
+        self.assign.resize(n, 0);
+        let upper = SyncSliceMut::new(&mut self.upper);
+        let lower = SyncSliceMut::new(&mut self.lower);
+        let assign = SyncSliceMut::new(&mut self.assign);
+        let group_of = &self.group_of;
+        let evals = AtomicU64::new(0);
+        pool.parallel_for(n, 128, |range| {
+            let mut local = 0u64;
+            let mut glb = vec![f64::INFINITY; g];
+            for i in range {
+                let row = x.row(i);
+                glb.iter_mut().for_each(|v| *v = f64::INFINITY);
+                let (mut d1, mut best) = (f64::INFINITY, 0usize);
+                for j in 0..k {
+                    let dj = dist_sq(row, c.row(j)).sqrt();
+                    let gj = group_of[j];
+                    if dj < d1 {
+                        // The old best drops into its group's lower bound.
+                        if d1 < glb[group_of[best]] {
+                            glb[group_of[best]] = d1;
+                        }
+                        d1 = dj;
+                        best = j;
+                    } else if dj < glb[gj] {
+                        glb[gj] = dj;
+                    }
+                }
+                local += k as u64;
+                *upper.at(i) = d1;
+                *assign.at(i) = best as u32;
+                for (gi, &v) in glb.iter().enumerate() {
+                    *lower.at(i * g + gi) = v;
+                }
+            }
+            evals.fetch_add(local, Ordering::Relaxed);
+        });
+        self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+impl AssignmentEngine for YinyangEngine {
+    fn name(&self) -> &'static str {
+        "yinyang"
+    }
+
+    fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
+        let (n, k, d) = (x.n(), c.n(), x.d());
+        let stale = match &self.prev_c {
+            Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
+            None => true,
+        };
+        if stale {
+            self.build_groups(c);
+            self.initialize(x, c, pool);
+            self.prev_c = Some(c.clone());
+            out.clear();
+            out.extend_from_slice(&self.assign);
+            return;
+        }
+        let prev = self.prev_c.as_ref().unwrap();
+        let g = self.n_groups;
+        // Per-centroid and per-group max movement.
+        let mut moved = vec![0.0f64; k];
+        let mut group_moved = vec![0.0f64; g];
+        for j in 0..k {
+            let m = dist_sq(prev.row(j), c.row(j)).sqrt();
+            moved[j] = m;
+            let gj = self.group_of[j];
+            if m > group_moved[gj] {
+                group_moved[gj] = m;
+            }
+        }
+        let upper = SyncSliceMut::new(&mut self.upper);
+        let lower = SyncSliceMut::new(&mut self.lower);
+        let assign = SyncSliceMut::new(&mut self.assign);
+        let group_of = &self.group_of;
+        let evals = AtomicU64::new(0);
+        pool.parallel_for(n, 128, |range| {
+            let mut local = 0u64;
+            for i in range {
+                let a = *assign.at(i) as usize;
+                let mut u = *upper.at(i) + moved[a];
+                // Drift group lower bounds; find the global minimum.
+                let mut glb_min = f64::INFINITY;
+                for gi in 0..g {
+                    let lb = lower.at(i * g + gi);
+                    *lb = (*lb - group_moved[gi]).max(0.0);
+                    if *lb < glb_min {
+                        glb_min = *lb;
+                    }
+                }
+                if u <= glb_min {
+                    *upper.at(i) = u;
+                    continue;
+                }
+                // Tighten the upper bound once.
+                let row = x.row(i);
+                u = dist_sq(row, c.row(a)).sqrt();
+                local += 1;
+                if u <= glb_min {
+                    *upper.at(i) = u;
+                    continue;
+                }
+                // Scan only the groups whose bound fails the test. Cache the
+                // distances so the exact per-group lower bounds (min over
+                // members excluding the final assigned centroid) come free.
+                let mut best = a;
+                let mut d1 = u;
+                let mut scanned: Vec<(usize, Vec<(usize, f64)>)> = Vec::new();
+                for gi in 0..g {
+                    if *lower.at(i * g + gi) >= d1 {
+                        continue; // group cannot contain a closer centroid
+                    }
+                    let mut dists = Vec::new();
+                    for j in 0..k {
+                        if group_of[j] != gi || j == a {
+                            continue;
+                        }
+                        let dj = dist_sq(row, c.row(j)).sqrt();
+                        local += 1;
+                        dists.push((j, dj));
+                        if dj < d1 {
+                            d1 = dj;
+                            best = j;
+                        }
+                    }
+                    scanned.push((gi, dists));
+                }
+                // Exact lower bounds for scanned groups. The previously
+                // assigned centroid `a` (distance u) belongs to some group
+                // and is no longer the assignment if best != a.
+                for (gi, dists) in &scanned {
+                    let mut exact = f64::INFINITY;
+                    for &(j, dj) in dists {
+                        if j != best && dj < exact {
+                            exact = dj;
+                        }
+                    }
+                    if group_of[a] == *gi && a != best && u < exact {
+                        exact = u;
+                    }
+                    *lower.at(i * g + gi) = exact;
+                }
+                // If `a` moved groups... it cannot — but if `a`'s group was
+                // NOT scanned and the assignment changed, its drifted bound
+                // may now exceed the true min (which includes `a`): shrink.
+                if best != a {
+                    let ga = group_of[a];
+                    let lb = lower.at(i * g + ga);
+                    if u < *lb {
+                        *lb = u;
+                    }
+                }
+                *upper.at(i) = d1;
+                *assign.at(i) = best as u32;
+            }
+            evals.fetch_add(local, Ordering::Relaxed);
+        });
+        self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.prev_c = Some(c.clone());
+        out.clear();
+        out.extend_from_slice(&self.assign);
+    }
+
+    fn reset(&mut self) {
+        self.prev_c = None;
+        self.upper.clear();
+        self.lower.clear();
+        self.assign.clear();
+        self.group_of.clear();
+        self.saved = None;
+    }
+
+    fn distance_evals(&self) -> u64 {
+        self.dist_evals.load(Ordering::Relaxed)
+    }
+
+    fn checkpoint(&mut self) {
+        if let Some(prev) = &self.prev_c {
+            self.saved =
+                Some((prev.clone(), self.upper.clone(), self.lower.clone(), self.assign.clone()));
+        }
+    }
+
+    fn rollback(&mut self) -> bool {
+        match self.saved.take() {
+            Some((prev, upper, lower, assign)) => {
+                self.prev_c = Some(prev);
+                self.upper = upper;
+                self.lower = lower;
+                self.assign = assign;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lloyd::test_support::engine_matches_brute_force;
+    use crate::lloyd::update_step;
+
+    #[test]
+    fn matches_brute_force_over_rounds() {
+        engine_matches_brute_force(&mut YinyangEngine::new());
+    }
+
+    #[test]
+    fn matches_brute_force_large_k() {
+        // The regime yinyang exists for: K larger than GROUP_SIZE so the
+        // engine actually maintains several groups.
+        let pool = ThreadPool::new(1);
+        let (x, mut c) = crate::lloyd::test_support::small_problem(77, 800, 4, 40);
+        let mut engine = YinyangEngine::new();
+        let mut out = Assignment::new();
+        for round in 0..5 {
+            engine.assign(&x, &c, &pool, &mut out);
+            let expect = crate::lloyd::brute_force_assign(&x, &c);
+            for i in 0..x.n() {
+                let got = dist_sq(x.row(i), c.row(out[i] as usize));
+                let exp = dist_sq(x.row(i), c.row(expect[i] as usize));
+                assert!((got - exp).abs() < 1e-9, "round {round} sample {i}");
+            }
+            let mut next = c.clone();
+            update_step(&x, &out, &c, &mut next, &pool);
+            c = next;
+        }
+        assert!(engine.n_groups >= 2, "expected multiple groups for K=40");
+    }
+
+    #[test]
+    fn saves_evals_at_large_k() {
+        let pool = ThreadPool::new(1);
+        let (x, mut c) = crate::lloyd::test_support::small_problem(78, 3000, 6, 50);
+        let mut engine = YinyangEngine::new();
+        let mut out = Assignment::new();
+        let mut total_after_init = 0u64;
+        for iter in 0..12 {
+            let before = engine.distance_evals();
+            engine.assign(&x, &c, &pool, &mut out);
+            let evals = engine.distance_evals() - before;
+            if iter > 2 {
+                total_after_init += evals;
+                assert!(
+                    evals < (x.n() * c.n()) as u64 / 2,
+                    "iter {iter}: {evals} evals (naive would be {})",
+                    x.n() * c.n()
+                );
+            }
+            let mut next = c.clone();
+            update_step(&x, &out, &c, &mut next, &pool);
+            if next.frob_dist(&c) < 1e-12 {
+                break;
+            }
+            c = next;
+        }
+        assert!(total_after_init > 0);
+    }
+
+    #[test]
+    fn rollback_roundtrip() {
+        let pool = ThreadPool::new(1);
+        let (x, c) = crate::lloyd::test_support::small_problem(79, 300, 3, 25);
+        let mut engine = YinyangEngine::new();
+        let mut out = Assignment::new();
+        engine.assign(&x, &c, &pool, &mut out);
+        engine.checkpoint();
+        let saved_assign = engine.assign.clone();
+        // Jump far away and back.
+        let mut c_jump = c.clone();
+        for j in 0..c_jump.n() {
+            c_jump[(j, 0)] += 3.0;
+        }
+        engine.assign(&x, &c_jump, &pool, &mut out);
+        assert!(engine.rollback());
+        assert_eq!(engine.assign, saved_assign);
+        // Next assign from restored state stays correct.
+        engine.assign(&x, &c, &pool, &mut out);
+        let expect = crate::lloyd::brute_force_assign(&x, &c);
+        for i in 0..x.n() {
+            let got = dist_sq(x.row(i), c.row(out[i] as usize));
+            let exp = dist_sq(x.row(i), c.row(expect[i] as usize));
+            assert!((got - exp).abs() < 1e-9);
+        }
+    }
+}

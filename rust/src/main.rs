@@ -1,0 +1,3 @@
+fn main() -> aakm::Result<()> {
+    aakm::cli::run()
+}

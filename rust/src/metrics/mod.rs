@@ -1,0 +1,218 @@
+//! Metrics substrate: wall-clock timers, per-phase accumulators, run
+//! statistics and the table emitters (markdown + CSV) the bench harnesses
+//! use to regenerate the paper's tables.
+
+pub mod quality;
+mod table;
+
+pub use quality::{adjusted_rand_index, davies_bouldin, silhouette};
+pub use table::{Table, TableCell};
+
+use std::time::{Duration, Instant};
+
+/// Simple wall-clock stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the previous lap.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let lap = now - self.start;
+        self.start = now;
+        lap
+    }
+}
+
+/// Named phase timing accumulator (assignment / update / acceleration /
+/// energy-check breakdown of the solver loop).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a sample to a named phase.
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        if let Some(entry) = self.phases.iter_mut().find(|(n, _, _)| n == phase) {
+            entry.1 += d;
+            entry.2 += 1;
+        } else {
+            self.phases.push((phase.to_string(), d, 1));
+        }
+    }
+
+    /// Time `f`, attributing the cost to `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(phase, sw.elapsed());
+        out
+    }
+
+    /// Total duration for a phase (zero if unseen).
+    pub fn total(&self, phase: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _, _)| n == phase)
+            .map(|(_, d, _)| *d)
+            .unwrap_or_default()
+    }
+
+    /// Call count for a phase.
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.iter().find(|(n, _, _)| n == phase).map(|(_, _, c)| *c).unwrap_or(0)
+    }
+
+    /// All phases in insertion order: `(name, total, count)`.
+    pub fn phases(&self) -> &[(String, Duration, u64)] {
+        &self.phases
+    }
+
+    /// Grand total across phases.
+    pub fn grand_total(&self) -> Duration {
+        self.phases.iter().map(|(_, d, _)| *d).sum()
+    }
+
+    /// Render a compact per-phase summary line.
+    pub fn summary(&self) -> String {
+        let total = self.grand_total().as_secs_f64().max(1e-12);
+        self.phases
+            .iter()
+            .map(|(n, d, c)| {
+                format!("{n}: {:.3}s ({:.1}%, {c}x)", d.as_secs_f64(), 100.0 * d.as_secs_f64() / total)
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// Aggregates a stream of (ours, baseline) timing pairs into the paper's
+/// headline metrics: win count and mean decrease ratio.
+#[derive(Debug, Clone, Default)]
+pub struct HeadlineStats {
+    cases: usize,
+    wins: usize,
+    decrease_sum: f64,
+}
+
+impl HeadlineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one test case.
+    pub fn record(&mut self, ours_seconds: f64, baseline_seconds: f64) {
+        self.cases += 1;
+        if ours_seconds < baseline_seconds {
+            self.wins += 1;
+        }
+        if baseline_seconds > 0.0 {
+            self.decrease_sum += (baseline_seconds - ours_seconds) / baseline_seconds;
+        }
+    }
+
+    pub fn cases(&self) -> usize {
+        self.cases
+    }
+
+    pub fn wins(&self) -> usize {
+        self.wins
+    }
+
+    /// Mean of `(baseline − ours) / baseline` over all cases — the paper's
+    /// ">33% mean decrease of computational time".
+    pub fn mean_decrease_ratio(&self) -> f64 {
+        if self.cases == 0 {
+            0.0
+        } else {
+            self.decrease_sum / self.cases as f64
+        }
+    }
+
+    /// Render as `wins/cases, mean decrease P%`.
+    pub fn summary(&self) -> String {
+        format!(
+            "wins {}/{} cases, mean time decrease {:.1}%",
+            self.wins,
+            self.cases,
+            100.0 * self.mean_decrease_ratio()
+        )
+    }
+}
+
+/// Format a duration in the paper's style (seconds with 2 decimals).
+pub fn fmt_seconds(d: Duration) -> String {
+    format!("{:.2}", d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.seconds() > 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("assign", Duration::from_millis(10));
+        pt.add("assign", Duration::from_millis(5));
+        pt.add("update", Duration::from_millis(1));
+        assert_eq!(pt.count("assign"), 2);
+        assert_eq!(pt.total("assign"), Duration::from_millis(15));
+        assert_eq!(pt.grand_total(), Duration::from_millis(16));
+        assert!(pt.summary().contains("assign"));
+    }
+
+    #[test]
+    fn phase_timer_time_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(pt.count("work"), 1);
+    }
+
+    #[test]
+    fn headline_stats_math() {
+        let mut h = HeadlineStats::new();
+        h.record(1.0, 2.0); // win, 50% decrease
+        h.record(3.0, 2.0); // loss, -50% decrease
+        assert_eq!(h.cases(), 2);
+        assert_eq!(h.wins(), 1);
+        assert!((h.mean_decrease_ratio() - 0.0).abs() < 1e-12);
+        let mut h2 = HeadlineStats::new();
+        h2.record(0.6, 1.0);
+        assert!((h2.mean_decrease_ratio() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_seconds_two_decimals() {
+        assert_eq!(fmt_seconds(Duration::from_millis(1234)), "1.23");
+    }
+}

@@ -1,0 +1,214 @@
+//! Clustering-quality metrics: internal (silhouette, Davies–Bouldin) and
+//! external (adjusted Rand index vs. ground-truth labels from the synthetic
+//! generators). Used by the examples and by validation tests to show the
+//! accelerated solver reaches the same clustering *quality* as Lloyd, not
+//! just the same energy.
+
+use crate::data::DataMatrix;
+use crate::linalg::dist_sq;
+
+/// Mean silhouette coefficient over (optionally subsampled) samples.
+/// O(n²·d) — pass `max_samples` to bound the cost on big data.
+pub fn silhouette(x: &DataMatrix, assign: &[u32], k: usize, max_samples: usize) -> f64 {
+    let n = x.n().min(max_samples.max(2));
+    if n < 2 || k < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..n {
+        let own = assign[i] as usize;
+        // Mean distance to every cluster.
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let cl = assign[j] as usize;
+            sums[cl] += dist_sq(x.row(i), x.row(j)).sqrt();
+            counts[cl] += 1;
+        }
+        if counts[own] == 0 {
+            continue; // singleton cluster: silhouette undefined, skip
+        }
+        let a = sums[own] / counts[own] as f64;
+        let mut b = f64::INFINITY;
+        for cl in 0..k {
+            if cl != own && counts[cl] > 0 {
+                b = b.min(sums[cl] / counts[cl] as f64);
+            }
+        }
+        if !b.is_finite() {
+            continue;
+        }
+        total += (b - a) / a.max(b).max(f64::MIN_POSITIVE);
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// Davies–Bouldin index (lower is better).
+pub fn davies_bouldin(x: &DataMatrix, c: &DataMatrix, assign: &[u32]) -> f64 {
+    let k = c.n();
+    if k < 2 {
+        return 0.0;
+    }
+    // Per-cluster mean scatter.
+    let mut scatter = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for i in 0..x.n() {
+        let cl = assign[i] as usize;
+        scatter[cl] += dist_sq(x.row(i), c.row(cl)).sqrt();
+        counts[cl] += 1;
+    }
+    for cl in 0..k {
+        if counts[cl] > 0 {
+            scatter[cl] /= counts[cl] as f64;
+        }
+    }
+    let mut total = 0.0;
+    let mut used = 0usize;
+    for a in 0..k {
+        if counts[a] == 0 {
+            continue;
+        }
+        let mut worst: f64 = 0.0;
+        for b in 0..k {
+            if a == b || counts[b] == 0 {
+                continue;
+            }
+            let sep = dist_sq(c.row(a), c.row(b)).sqrt();
+            if sep > 0.0 {
+                worst = worst.max((scatter[a] + scatter[b]) / sep);
+            }
+        }
+        total += worst;
+        used += 1;
+    }
+    if used == 0 {
+        0.0
+    } else {
+        total / used as f64
+    }
+}
+
+/// Adjusted Rand index between two labelings (1.0 = identical partitions,
+/// ~0.0 = random agreement).
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ka = 1 + *a.iter().max().unwrap_or(&0) as usize;
+    let kb = 1 + *b.iter().max().unwrap_or(&0) as usize;
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] as usize * kb + b[i] as usize] += 1;
+        rows[a[i] as usize] += 1;
+        cols[b[i] as usize] += 1;
+    }
+    let c2 = |v: u64| (v * v.saturating_sub(1)) as f64 / 2.0;
+    let sum_table: f64 = table.iter().map(|&v| c2(v)).sum();
+    let sum_rows: f64 = rows.iter().map(|&v| c2(v)).sum();
+    let sum_cols: f64 = cols.iter().map(|&v| c2(v)).sum();
+    let total = c2(n as u64);
+    let expected = sum_rows * sum_cols / total;
+    let max_index = 0.5 * (sum_rows + sum_cols);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_table - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+
+    fn two_blob_problem() -> (DataMatrix, Vec<u32>, DataMatrix) {
+        // Two far-apart blobs with known labels.
+        let mut rng = Pcg32::seed_from_u64(1);
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..200 {
+            use crate::rng::Rng;
+            let (cx, label) = if i % 2 == 0 { (0.0, 0u32) } else { (50.0, 1u32) };
+            rows.push([cx + 0.1 * rng.next_gaussian(), 0.1 * rng.next_gaussian()]);
+            labels.push(label);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = DataMatrix::from_rows(&refs);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0], &[50.0, 0.0]]);
+        (x, labels, c)
+    }
+
+    #[test]
+    fn silhouette_near_one_for_separated_blobs() {
+        let (x, labels, _) = two_blob_problem();
+        let s = silhouette(&x, &labels, 2, 500);
+        assert!(s > 0.95, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_near_zero_for_random_labels() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let x = synth::uniform_box(&mut rng, 300, 2, 1.0);
+        use crate::rng::Rng;
+        let labels: Vec<u32> = (0..300).map(|_| rng.next_below(3) as u32).collect();
+        let s = silhouette(&x, &labels, 3, 300);
+        assert!(s.abs() < 0.1, "silhouette {s}");
+    }
+
+    #[test]
+    fn davies_bouldin_prefers_separated() {
+        let (x, labels, c) = two_blob_problem();
+        let good = davies_bouldin(&x, &c, &labels);
+        // Bad centroids: both in the middle.
+        let c_bad = DataMatrix::from_rows(&[&[24.0, 0.0], &[26.0, 0.0]]);
+        let bad_assign = crate::lloyd::brute_force_assign(&x, &c_bad);
+        let bad = davies_bouldin(&x, &c_bad, &bad_assign);
+        assert!(good < bad, "DB good {good} vs bad {bad}");
+    }
+
+    #[test]
+    fn ari_identical_and_permuted() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        let permuted = vec![2u32, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &permuted) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        use crate::rng::Rng;
+        let a: Vec<u32> = (0..2000).map(|_| rng.next_below(4) as u32).collect();
+        let b: Vec<u32> = (0..2000).map(|_| rng.next_below(4) as u32).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.05, "ARI {ari}");
+    }
+
+    #[test]
+    fn recovers_ground_truth_through_solver() {
+        let (x, labels, _) = two_blob_problem();
+        let mut rng = Pcg32::seed_from_u64(4);
+        let c0 =
+            crate::init::seed_centroids(&x, 2, crate::init::InitMethod::KMeansPlusPlus, &mut rng);
+        let report = crate::kmeans::Solver::new(crate::config::SolverConfig {
+            threads: 1,
+            ..Default::default()
+        })
+        .run(&x, c0);
+        let ari = adjusted_rand_index(&labels, &report.assignment);
+        assert!(ari > 0.99, "solver should recover the two blobs (ARI {ari})");
+    }
+}

@@ -1,0 +1,175 @@
+//! Table builder rendering the paper's result tables as markdown (for the
+//! console / EXPERIMENTS.md) and CSV (machine-readable, written next to the
+//! bench output).
+
+use std::fmt::Write as _;
+
+/// One cell: plain text, optionally bold (the paper bolds the fastest
+/// variant per row).
+#[derive(Debug, Clone)]
+pub struct TableCell {
+    pub text: String,
+    pub bold: bool,
+}
+
+impl TableCell {
+    pub fn plain(text: impl Into<String>) -> Self {
+        Self { text: text.into(), bold: false }
+    }
+
+    pub fn bold(text: impl Into<String>) -> Self {
+        Self { text: text.into(), bold: true }
+    }
+}
+
+impl<T: std::fmt::Display> From<T> for TableCell {
+    fn from(v: T) -> Self {
+        TableCell::plain(v.to_string())
+    }
+}
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<TableCell>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn push_row(&mut self, row: Vec<TableCell>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as github-flavored markdown with aligned columns.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|c| if c.bold { format!("**{}**", c.text) } else { c.text.clone() })
+                    .collect()
+            })
+            .collect();
+        for row in &rendered {
+            for (j, cell) in row.iter().enumerate() {
+                widths[j] = widths[j].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let hdr: Vec<String> =
+            self.header.iter().enumerate().map(|(j, h)| format!("{:<w$}", h, w = widths[j])).collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "| {} |", sep.join(" | "));
+        for row in &rendered {
+            let cells: Vec<String> =
+                row.iter().enumerate().map(|(j, c)| format!("{:<w$}", c, w = widths[j])).collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    /// Render as CSV (no bold markers).
+    pub fn to_csv(&self) -> String {
+        let escape = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| escape(&c.text)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write the CSV rendering to `path`.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["Dataset", "Time (s)"]);
+        t.push_row(vec![TableCell::plain("Birch"), TableCell::bold("0.19")]);
+        t.push_row(vec![TableCell::plain("HTRU2"), TableCell::plain("0.15")]);
+        t
+    }
+
+    #[test]
+    fn markdown_contains_all_cells() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| Dataset"));
+        assert!(md.contains("**0.19**"));
+        assert!(md.contains("HTRU2"));
+        // header + separator + 2 rows + title lines
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 4);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.push_row(vec![TableCell::plain("x,y"), TableCell::plain("plain")]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.push_row(vec![TableCell::plain("only one")]);
+    }
+
+    #[test]
+    fn save_csv_writes_file() {
+        let dir = std::env::temp_dir().join("aakm_table_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        sample().save_csv(&p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("Dataset,Time (s)"));
+    }
+}

@@ -1,0 +1,287 @@
+//! Parallelism substrate — the OpenMP substitute.
+//!
+//! The paper's C++ implementation parallelizes the assignment loop with
+//! OpenMP. The offline crate set has no `rayon`, so this module provides a
+//! persistent [`ThreadPool`] with a chunked, work-stealing `parallel_for`
+//! over index ranges, plus a `map_reduce` built on top of it.
+//!
+//! Design: workers park on a condvar; a `parallel_for` call installs a job
+//! (closure + atomic chunk cursor), wakes everyone, participates itself,
+//! and returns once the done-counter reaches the worker count. Closures are
+//! borrowed from the caller's stack — safe because the call does not return
+//! until every worker has finished the job (enforced by the completion
+//! latch), mirroring rayon's scoped model.
+
+mod slice;
+
+pub use slice::SyncSliceMut;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job: a closure over an index range plus its chunk cursor.
+struct Job {
+    /// Pointer to the caller's `&(dyn Fn(Range<usize>) + Sync)`, type-erased
+    /// to `'static`. Valid only while the issuing `parallel_for` is blocked.
+    func: *const (dyn Fn(Range<usize>) + Sync),
+    cursor: Arc<AtomicUsize>,
+    n: usize,
+    chunk: usize,
+}
+
+// SAFETY: `func` points into the stack frame of the `parallel_for` caller,
+// which blocks until the job is fully drained; the pointee is `Sync`.
+unsafe impl Send for Job {}
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    work_done: Condvar,
+}
+
+struct State {
+    /// Current job, if any. Replaced wholesale per `parallel_for`.
+    job: Option<Job>,
+    /// Monotonic id so sleeping workers can tell a fresh job from a stale one.
+    epoch: u64,
+    /// Workers still running the current epoch's job.
+    active: usize,
+    shutdown: bool,
+}
+
+/// A persistent pool of worker threads executing chunked index loops.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes (including the caller's). `threads`
+    /// is clamped to ≥ 1; `ThreadPool::new(1)` runs everything inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, active: 0, shutdown: false }),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+        });
+        // The caller participates, so spawn threads-1 workers.
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, workers, threads }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn host_sized() -> Self {
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    /// Number of lanes (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over `0..n` in chunks of at least `min_chunk`, in parallel.
+    /// Blocks until every chunk has been processed.
+    pub fn parallel_for<F>(&self, n: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let min_chunk = min_chunk.max(1);
+        // Inline when there is nothing to parallelize.
+        if self.threads == 1 || n <= min_chunk {
+            f(0..n);
+            return;
+        }
+        // Aim for ~4 chunks per lane to smooth imbalance, floor at min_chunk.
+        let chunk = (n / (self.threads * 4)).max(min_chunk);
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let f_ref: &(dyn Fn(Range<usize>) + Sync) = &f;
+        // SAFETY: see `Job.func` — we block below until the job drains.
+        let func: *const (dyn Fn(Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "parallel_for is not reentrant");
+            st.job = Some(Job { func, cursor: Arc::clone(&cursor), n, chunk });
+            st.epoch += 1;
+            st.active = self.workers.len();
+            self.shared.work_ready.notify_all();
+        }
+        // The caller participates in the same job.
+        run_chunks(&f, &cursor, n, chunk);
+        // Wait until all workers have finished their last chunk.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.work_done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Parallel map-reduce over `0..n`: each lane folds its chunks with
+    /// `fold`, starting from `init()`; partials are combined with `combine`.
+    pub fn map_reduce<T, FInit, FFold, FComb>(
+        &self,
+        n: usize,
+        min_chunk: usize,
+        init: FInit,
+        fold: FFold,
+        combine: FComb,
+    ) -> T
+    where
+        T: Send,
+        FInit: Fn() -> T + Sync,
+        FFold: Fn(&mut T, Range<usize>) + Sync,
+        FComb: Fn(T, T) -> T,
+    {
+        let partials = Mutex::new(Vec::<T>::new());
+        self.parallel_for(n, min_chunk, |range| {
+            // One partial per chunk; cheap relative to chunk work.
+            let mut acc = init();
+            fold(&mut acc, range);
+            partials.lock().unwrap().push(acc);
+        });
+        let partials = partials.into_inner().unwrap();
+        let mut it = partials.into_iter();
+        let first = it.next().unwrap_or_else(&init);
+        it.fold(first, &combine)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let (func, cursor, n, chunk) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    if let Some(job) = &st.job {
+                        last_epoch = st.epoch;
+                        break (job.func, Arc::clone(&job.cursor), job.n, job.chunk);
+                    }
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the issuing parallel_for blocks until `active` hits zero,
+        // keeping the closure alive for the duration of this call.
+        let f: &(dyn Fn(Range<usize>) + Sync) = unsafe { &*func };
+        run_chunks(f, &cursor, n, chunk);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.work_done.notify_all();
+        }
+    }
+}
+
+/// Claim chunks from the shared cursor until the range is exhausted.
+fn run_chunks(f: &(dyn Fn(Range<usize>) + Sync), cursor: &AtomicUsize, n: usize, chunk: usize) {
+    loop {
+        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+        if start >= n {
+            return;
+        }
+        f(start..(start + chunk).min(n));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let n = 10_007;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(n, 16, |range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}: some index not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_length_is_noop() {
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(0, 1, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn sequential_reuse_of_pool() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let total = AtomicU64::new(0);
+            pool.parallel_for(1000, 8, |range| {
+                let s: u64 = range.map(|i| i as u64).sum();
+                total.fetch_add(s, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        let pool = ThreadPool::new(4);
+        let sum = pool.map_reduce(
+            100_000,
+            64,
+            || 0u64,
+            |acc, range| *acc += range.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(sum, 99_999u64 * 100_000 / 2);
+    }
+
+    #[test]
+    fn map_reduce_empty_returns_init() {
+        let pool = ThreadPool::new(2);
+        let v = pool.map_reduce(0, 1, || 42u32, |_, _| panic!(), |a, _| a);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        pool.parallel_for(100, 1, |_range| {
+            assert_eq!(std::thread::current().id(), caller);
+        });
+    }
+}

@@ -1,0 +1,84 @@
+//! Unsafe-but-contained helper for disjoint parallel writes.
+//!
+//! `parallel_for` hands each lane a disjoint index range; per-sample state
+//! (assignments, bounds) is naturally partitioned by that range. Rust can't
+//! prove the disjointness through a `Fn(Range)` closure, so [`SyncSliceMut`]
+//! wraps a raw pointer and exposes unchecked per-index access. All callers
+//! in this crate index strictly inside the range their lane was given.
+
+use std::marker::PhantomData;
+
+/// A `&mut [T]` that can be shared across the pool's lanes for writes to
+/// disjoint indices.
+pub struct SyncSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is only valid for disjoint indices; enforced by callers
+// indexing within their assigned chunk.
+unsafe impl<T: Send> Send for SyncSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSliceMut<'_, T> {}
+
+impl<'a, T> SyncSliceMut<'a, T> {
+    /// Wrap a mutable slice.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` at `i`.
+    ///
+    /// # Safety contract (checked by debug assert only)
+    /// `i` must be inside the caller's disjoint chunk.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn at(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        // SAFETY: disjointness is guaranteed by the chunked parallel_for
+        // contract documented on this type.
+        unsafe { &mut *self.ptr.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::ThreadPool;
+
+    #[test]
+    fn disjoint_parallel_writes_land() {
+        let pool = ThreadPool::new(4);
+        let n = 5000;
+        let mut data = vec![0usize; n];
+        {
+            let shared = SyncSliceMut::new(&mut data);
+            pool.parallel_for(n, 32, |range| {
+                for i in range {
+                    *shared.at(i) = i * 2;
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+
+    #[test]
+    fn len_matches() {
+        let mut v = vec![1, 2, 3];
+        let s = SyncSliceMut::new(&mut v);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline crate set has no `rand`, so this module implements the PRNGs
+//! and samplers the rest of the crate needs: [`Pcg32`] (O'Neill's PCG-XSH-RR
+//! 64/32) for the main streams, [`SplitMix64`] for seeding, gaussian samples
+//! via Box–Muller, weighted discrete sampling, and Fisher–Yates shuffles.
+//!
+//! All generators are deterministic from their seed; every experiment in the
+//! bench harness records its seed so runs are exactly reproducible.
+
+mod pcg;
+mod sample;
+
+pub use pcg::{Pcg32, SplitMix64};
+pub use sample::{choose_weighted, reservoir_sample, sample_indices, shuffle};
+
+/// Minimal RNG interface used across the crate.
+pub trait Rng {
+    /// Next uniform 32-bit value.
+    fn next_u32(&mut self) -> u32;
+
+    /// Next uniform 64-bit value.
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's method, bias-free for the
+    /// bound sizes used here).
+    fn next_below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0, "next_below bound must be positive");
+        // 64-bit multiply-shift; bias is < 2^-32 for bounds < 2^32.
+        let x = self.next_u64();
+        ((x as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    fn next_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal sample (Box–Muller; one of the pair is discarded to
+    /// keep the generator stateless beyond the stream).
+    fn next_gaussian(&mut self) -> f64 {
+        // Avoid log(0) by nudging u1 away from zero.
+        let u1 = (self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x), "{x} out of [0,1)");
+        }
+    }
+
+    #[test]
+    fn next_below_respects_bound() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        for bound in [1usize, 2, 3, 7, 100, 12345] {
+            for _ in 0..1000 {
+                assert!(rng.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_below_covers_small_range() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            seen[rng.next_below(5)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all of 0..5 should appear");
+    }
+
+    #[test]
+    fn gaussian_moments_are_sane() {
+        let mut rng = Pcg32::seed_from_u64(4);
+        let n = 100_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.next_gaussian();
+            sum += g;
+            sumsq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn next_range_bounds() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        for _ in 0..1000 {
+            let x = rng.next_range(-3.0, 4.5);
+            assert!((-3.0..4.5).contains(&x));
+        }
+    }
+}

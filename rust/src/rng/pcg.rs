@@ -1,0 +1,135 @@
+//! PCG-XSH-RR 64/32 (O'Neill 2014) and SplitMix64 (Steele et al. 2014).
+
+use super::Rng;
+
+/// SplitMix64 — used to expand a single `u64` seed into independent streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl Rng for SplitMix64 {
+    fn next_u32(&mut self) -> u32 {
+        (SplitMix64::next(self) >> 32) as u32
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        SplitMix64::next(self)
+    }
+}
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit xorshift-rotate output.
+///
+/// Small, fast, statistically solid — the workhorse generator for seeding,
+/// synthetic data and the sampling-based initializers.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Construct from explicit state/stream (the PCG reference constructor).
+    pub fn new(init_state: u64, init_seq: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (init_seq << 1) | 1 };
+        rng.step();
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.step();
+        rng
+    }
+
+    /// Construct from a single seed, expanding with SplitMix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::new(sm.next(), sm.next())
+    }
+
+    /// Derive an independent child stream (used to hand one RNG per worker
+    /// thread / per dataset without sharing mutable state).
+    pub fn split(&mut self) -> Self {
+        Self::new(Rng::next_u64(self), Rng::next_u64(self))
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+}
+
+impl Rng for Pcg32 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.step();
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_reference_vector() {
+        // First outputs of pcg32 with the reference demo seeding
+        // (state=42, seq=54), from the PCG minimal C library.
+        let mut rng = Pcg32::new(42, 54);
+        let expected = [0xa15c_02b7u32, 0x7b47_f409, 0xba1d_3330, 0x83d2_f293];
+        for &e in &expected {
+            assert_eq!(rng.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn seeding_is_deterministic() {
+        let mut a = Pcg32::seed_from_u64(99);
+        let mut b = Pcg32::seed_from_u64(99);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg32::seed_from_u64(1);
+        let mut b = Pcg32::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be effectively independent");
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut root = Pcg32::seed_from_u64(5);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn splitmix_known_value() {
+        // SplitMix64(seed=0) first output, per the reference implementation.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next(), 0xE220_A839_7B1D_CDAF);
+    }
+}

@@ -1,0 +1,146 @@
+//! Sampling utilities on top of the [`Rng`] trait: shuffles, index draws,
+//! weighted choice (the core of k-means++ / afk-mc² seeding) and reservoir
+//! sampling for streaming subsamples.
+
+use super::Rng;
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<T, R: Rng>(items: &mut [T], rng: &mut R) {
+    for i in (1..items.len()).rev() {
+        let j = rng.next_below(i + 1);
+        items.swap(i, j);
+    }
+}
+
+/// Draw `count` distinct indices from `0..n` (Floyd's algorithm for small
+/// `count`, shuffle-prefix otherwise).
+pub fn sample_indices<R: Rng>(n: usize, count: usize, rng: &mut R) -> Vec<usize> {
+    assert!(count <= n, "cannot draw {count} distinct indices from {n}");
+    if count * 4 >= n {
+        let mut all: Vec<usize> = (0..n).collect();
+        shuffle(&mut all, rng);
+        all.truncate(count);
+        return all;
+    }
+    // Robert Floyd's sampling: O(count) expected, no O(n) allocation.
+    let mut chosen = std::collections::HashSet::with_capacity(count);
+    let mut out = Vec::with_capacity(count);
+    for j in (n - count)..n {
+        let t = rng.next_below(j + 1);
+        let pick = if chosen.contains(&t) { j } else { t };
+        chosen.insert(pick);
+        out.push(pick);
+    }
+    out
+}
+
+/// Weighted discrete sample: returns an index `i` with probability
+/// `weights[i] / sum(weights)`. Zero-total weight falls back to uniform.
+pub fn choose_weighted<R: Rng>(weights: &[f64], rng: &mut R) -> usize {
+    debug_assert!(!weights.is_empty());
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 || !total.is_finite() {
+        return rng.next_below(weights.len());
+    }
+    let mut target = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        target -= w;
+        if target < 0.0 {
+            return i;
+        }
+    }
+    // Floating-point slack: return the last strictly-positive weight.
+    weights
+        .iter()
+        .rposition(|&w| w > 0.0)
+        .unwrap_or(weights.len() - 1)
+}
+
+/// Reservoir-sample `count` items from an iterator of unknown length
+/// (Vitter's Algorithm R). Used by the streaming coordinator to keep a
+/// bounded design sample for seeding.
+pub fn reservoir_sample<T, I, R>(iter: I, count: usize, rng: &mut R) -> Vec<T>
+where
+    I: IntoIterator<Item = T>,
+    R: Rng,
+{
+    let mut reservoir: Vec<T> = Vec::with_capacity(count);
+    for (i, item) in iter.into_iter().enumerate() {
+        if i < count {
+            reservoir.push(item);
+        } else {
+            let j = rng.next_below(i + 1);
+            if j < count {
+                reservoir[j] = item;
+            }
+        }
+    }
+    reservoir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seed_from_u64(10);
+        let mut v: Vec<usize> = (0..100).collect();
+        shuffle(&mut v, &mut rng);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg32::seed_from_u64(11);
+        for (n, c) in [(10, 3), (10, 10), (1000, 5), (1000, 900)] {
+            let idx = sample_indices(n, c, &mut rng);
+            assert_eq!(idx.len(), c);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), c, "indices must be distinct");
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn choose_weighted_respects_weights() {
+        let mut rng = Pcg32::seed_from_u64(12);
+        let weights = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[choose_weighted(&weights, &mut rng)] += 1;
+        }
+        assert_eq!(counts[0], 0, "zero-weight item must never be drawn");
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio {ratio} should be ~3");
+    }
+
+    #[test]
+    fn choose_weighted_zero_total_is_uniform() {
+        let mut rng = Pcg32::seed_from_u64(13);
+        let weights = [0.0, 0.0, 0.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[choose_weighted(&weights, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn reservoir_sample_size_and_membership() {
+        let mut rng = Pcg32::seed_from_u64(14);
+        let sample = reservoir_sample(0..10_000, 32, &mut rng);
+        assert_eq!(sample.len(), 32);
+        assert!(sample.iter().all(|&x| x < 10_000));
+    }
+
+    #[test]
+    fn reservoir_sample_short_input() {
+        let mut rng = Pcg32::seed_from_u64(15);
+        let sample = reservoir_sample(0..5, 32, &mut rng);
+        assert_eq!(sample, vec![0, 1, 2, 3, 4]);
+    }
+}

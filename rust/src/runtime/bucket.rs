@@ -1,0 +1,104 @@
+//! Shape-bucket padding: HLO artifacts are shape-static, so jobs are padded
+//! up to the nearest lowered bucket before execution.
+//!
+//! Contract (mirrored by `python/compile/model.py` and property-tested in
+//! `python/tests/test_model.py` + `rust/tests/integration_runtime.rs`):
+//!
+//! * sample rows beyond the real count are zero and masked out (`mask = 0`);
+//! * centroid rows beyond the real count are parked at the sentinel, far
+//!   outside any standardized dataset, so no real sample selects them.
+
+use crate::data::DataMatrix;
+
+/// Where padding centroids live (must match `model.PAD_CENTROID_SENTINEL`).
+pub const PAD_CENTROID_SENTINEL: f32 = 1.0e6;
+
+/// Key identifying a shape bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+/// A problem padded into a bucket, in the f32 row-major layout PJRT takes.
+#[derive(Debug, Clone)]
+pub struct PaddedProblem {
+    /// (bucket_n × d) samples, zero-padded.
+    pub x: Vec<f32>,
+    /// (bucket_k × d) centroids, sentinel-padded.
+    pub c: Vec<f32>,
+    /// (bucket_n,) 1.0 for real rows, 0.0 for padding.
+    pub mask: Vec<f32>,
+    /// Real sample count.
+    pub real_n: usize,
+    /// Real cluster count.
+    pub real_k: usize,
+}
+
+/// Pad `(x, c)` into an `(bucket_n, bucket_k)` bucket.
+///
+/// Panics if the bucket is too small (callers select buckets through
+/// [`crate::runtime::Manifest::find_bucket`], which guarantees fit).
+pub fn pad_problem(x: &DataMatrix, c: &DataMatrix, bucket_n: usize, bucket_k: usize) -> PaddedProblem {
+    let (n, d, k) = (x.n(), x.d(), c.n());
+    assert!(bucket_n >= n, "bucket n {bucket_n} < {n}");
+    assert!(bucket_k >= k, "bucket k {bucket_k} < {k}");
+    assert_eq!(c.d(), d);
+    let mut xf = vec![0.0f32; bucket_n * d];
+    for i in 0..n {
+        let row = x.row(i);
+        for t in 0..d {
+            xf[i * d + t] = row[t] as f32;
+        }
+    }
+    let mut cf = vec![PAD_CENTROID_SENTINEL; bucket_k * d];
+    for j in 0..k {
+        let row = c.row(j);
+        for t in 0..d {
+            cf[j * d + t] = row[t] as f32;
+        }
+    }
+    let mut mask = vec![0.0f32; bucket_n];
+    for m in mask.iter_mut().take(n) {
+        *m = 1.0;
+    }
+    PaddedProblem { x: xf, c: cf, mask, real_n: n, real_k: k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_samples_and_mask() {
+        let x = DataMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0]]);
+        let p = pad_problem(&x, &c, 4, 2);
+        assert_eq!(p.x.len(), 8);
+        assert_eq!(&p.x[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&p.x[4..], &[0.0; 4]);
+        assert_eq!(p.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.c.len(), 4);
+        assert_eq!(&p.c[..2], &[0.0, 0.0]);
+        assert_eq!(&p.c[2..], &[PAD_CENTROID_SENTINEL; 2]);
+        assert_eq!((p.real_n, p.real_k), (2, 1));
+    }
+
+    #[test]
+    fn exact_fit_no_padding() {
+        let x = DataMatrix::from_rows(&[&[1.0], &[2.0]]);
+        let c = DataMatrix::from_rows(&[&[0.5], &[1.5]]);
+        let p = pad_problem(&x, &c, 2, 2);
+        assert_eq!(p.mask, vec![1.0, 1.0]);
+        assert_eq!(p.c, vec![0.5, 1.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket n")]
+    fn too_small_bucket_panics() {
+        let x = DataMatrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0]]);
+        pad_problem(&x, &c, 2, 1);
+    }
+}

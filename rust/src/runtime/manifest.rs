@@ -1,0 +1,183 @@
+//! Artifact manifest: the TOML-subset file `aot.py` writes next to the
+//! HLO artifacts, describing each shape bucket.
+
+use crate::config::ConfigDoc;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered artifact (a `kind` at a concrete shape bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Section name, e.g. `g_step_n1024_d8_k16`.
+    pub name: String,
+    /// `g_step` or `energy_step`.
+    pub kind: String,
+    /// Bucket sample count.
+    pub n: usize,
+    /// Bucket dimensionality (must match exactly).
+    pub d: usize,
+    /// Bucket cluster capacity.
+    pub k: usize,
+    /// File name inside the artifact dir.
+    pub file: String,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+    /// The Pallas tile size the artifacts were lowered with.
+    pub tile_n: usize,
+    /// jax version recorded at lowering time (for diagnostics).
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let doc = ConfigDoc::parse_file(&path)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("load manifest {}", path.display()))?;
+        Self::from_doc(&doc, dir)
+    }
+
+    /// Build from a parsed document (exposed for tests).
+    pub fn from_doc(doc: &ConfigDoc, dir: &Path) -> Result<Self> {
+        let tile_n = doc
+            .get("", "tile_n")
+            .and_then(|v| v.as_int().ok())
+            .unwrap_or(256) as usize;
+        let jax_version = doc
+            .get("", "jax_version")
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_default();
+        let mut sections: Vec<String> = Vec::new();
+        for (section, _) in doc.keys() {
+            if !section.is_empty() && !sections.iter().any(|s| s == section) {
+                sections.push(section.to_string());
+            }
+        }
+        let mut specs = Vec::new();
+        for name in sections {
+            let get = |key: &str| {
+                doc.get(&name, key)
+                    .with_context(|| format!("manifest section [{name}] missing `{key}`"))
+            };
+            let kind = get("kind")?.as_str().map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+            let n = get("n")?.as_int().map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+            let d = get("d")?.as_int().map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+            let k = get("k")?.as_int().map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+            let file = get("file")?.as_str().map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+            specs.push(ArtifactSpec { name, kind, n, d, k, file });
+        }
+        anyhow::ensure!(!specs.is_empty(), "manifest lists no artifacts");
+        Ok(Self { dir: dir.to_path_buf(), specs, tile_n, jax_version })
+    }
+
+    /// Smallest bucket of `kind` that fits `(n, d, k)`: `d` must match
+    /// exactly (HLO is shape-static in every dim; padding the feature axis
+    /// would change distances), `n`/`k` round up.
+    pub fn find_bucket(&self, kind: &str, n: usize, d: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == kind && s.d == d && s.n >= n && s.k >= k)
+            .min_by_key(|s| (s.n, s.k))
+    }
+
+    /// Human list of available buckets for one kind (error messages).
+    pub fn bucket_summary(&self, kind: &str) -> String {
+        let mut v: Vec<String> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| format!("n{}d{}k{}", s.n, s.d, s.k))
+            .collect();
+        v.sort();
+        if v.is_empty() {
+            "none".to_string()
+        } else {
+            v.join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+jax_version = "0.8.2"
+format = "hlo-text"
+tile_n = 256
+[g_step_n1024_d8_k16]
+kind = "g_step"
+n = 1024
+d = 8
+k = 16
+file = "g_step_n1024_d8_k16.hlo.txt"
+[g_step_n4096_d8_k16]
+kind = "g_step"
+n = 4096
+d = 8
+k = 16
+file = "g_step_n4096_d8_k16.hlo.txt"
+[g_step_n1024_d2_k16]
+kind = "g_step"
+n = 1024
+d = 2
+k = 16
+file = "g_step_n1024_d2_k16.hlo.txt"
+"#;
+
+    fn manifest() -> Manifest {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        Manifest::from_doc(&doc, Path::new("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_specs() {
+        let m = manifest();
+        assert_eq!(m.specs.len(), 3);
+        assert_eq!(m.tile_n, 256);
+        assert_eq!(m.jax_version, "0.8.2");
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let m = manifest();
+        let s = m.find_bucket("g_step", 900, 8, 10).unwrap();
+        assert_eq!(s.n, 1024);
+        let s = m.find_bucket("g_step", 1025, 8, 10).unwrap();
+        assert_eq!(s.n, 4096);
+    }
+
+    #[test]
+    fn bucket_requires_exact_d() {
+        let m = manifest();
+        assert!(m.find_bucket("g_step", 100, 3, 10).is_none());
+        assert!(m.find_bucket("g_step", 100, 2, 10).is_some());
+    }
+
+    #[test]
+    fn bucket_none_when_too_large() {
+        let m = manifest();
+        assert!(m.find_bucket("g_step", 100_000, 8, 10).is_none());
+        assert!(m.find_bucket("g_step", 100, 8, 32).is_none());
+    }
+
+    #[test]
+    fn summary_lists_buckets() {
+        let m = manifest();
+        let s = m.bucket_summary("g_step");
+        assert!(s.contains("n1024d8k16"));
+        assert_eq!(m.bucket_summary("nope"), "none");
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        let doc = ConfigDoc::parse("tile_n = 256\n").unwrap();
+        assert!(Manifest::from_doc(&doc, Path::new("/tmp")).is_err());
+    }
+}

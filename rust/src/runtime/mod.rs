@@ -1,0 +1,280 @@
+//! PJRT runtime — executes the AOT-compiled JAX/Pallas artifacts from Rust.
+//!
+//! This is the bridge that makes the three-layer architecture real: the
+//! Python side (`python/compile/aot.py`) lowers the L2 G-step once to HLO
+//! text per shape bucket; this module loads those files through the `xla`
+//! crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile`
+//! → `execute`) so the request path never touches Python.
+//!
+//! * [`Manifest`] — parses `artifacts/manifest.txt` (TOML subset).
+//! * [`bucket`] — shape-bucket selection and the padding contract
+//!   (zero-padded samples + mask, sentinel-padded centroids).
+//! * [`PjrtRuntime`] — compiled-executable cache + typed `g_step` /
+//!   `energy_step` entry points.
+//! * [`PjrtEngine`] — an [`crate::lloyd::AssignmentEngine`] backed by the
+//!   AOT `energy_step`, so the Algorithm-1 solver can run its assignment
+//!   hot path on the compiled artifact.
+//!
+//! PJRT handles hold `Rc` internals (not `Send`): callers that want one
+//! runtime per worker thread construct it *inside* the thread (see
+//! [`crate::coordinator`]).
+
+pub mod bucket;
+mod manifest;
+
+pub use bucket::{pad_problem, BucketKey, PaddedProblem, PAD_CENTROID_SENTINEL};
+pub use manifest::{ArtifactSpec, Manifest};
+
+use crate::data::DataMatrix;
+use crate::lloyd::{Assignment, AssignmentEngine};
+use crate::par::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Output of one compiled G-step execution (already unpadded).
+#[derive(Debug, Clone)]
+pub struct GStepOutput {
+    /// Updated centroids (k × d).
+    pub centroids: DataMatrix,
+    /// Per-sample assignment.
+    pub assignment: Assignment,
+    /// Masked clustering energy at the *input* centroids.
+    pub energy: f64,
+    /// Per-cluster sample counts.
+    pub counts: Vec<f64>,
+}
+
+/// PJRT-backed executor over the artifact set.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Executable cache keyed by artifact name. Compilation happens lazily
+    /// on first use of a bucket and is then amortized across the run.
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Distance-evaluation accounting (one full sweep = n·k).
+    dist_evals: std::cell::Cell<u64>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (expects `manifest.txt` inside).
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            dist_evals: std::cell::Cell::new(0),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Total point–centroid distance evaluations implied by the executed
+    /// sweeps (the dense kernel always computes n·k distances per call).
+    pub fn dist_evals(&self) -> u64 {
+        self.dist_evals.get()
+    }
+
+    fn executable(&self, spec: &ArtifactSpec) -> Result<()> {
+        if self.cache.borrow().contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", spec.name))?;
+        self.cache.borrow_mut().insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute the compiled artifact `spec` on an already-padded problem.
+    fn execute_padded(
+        &self,
+        spec: &ArtifactSpec,
+        padded: &PaddedProblem,
+    ) -> Result<xla::Literal> {
+        self.executable(spec)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&spec.name).expect("just inserted");
+        let x_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[spec.n, spec.d],
+            bytes_of(&padded.x),
+        )?;
+        let c_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[spec.k, spec.d],
+            bytes_of(&padded.c),
+        )?;
+        let m_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[spec.n],
+            bytes_of(&padded.mask),
+        )?;
+        let result = exe.execute::<xla::Literal>(&[x_lit, c_lit, m_lit])?[0][0]
+            .to_literal_sync()?;
+        self.dist_evals.set(self.dist_evals.get() + (spec.n * spec.k) as u64);
+        Ok(result)
+    }
+
+    /// Run one full fixed-point step `G(C)` (assignment + update + energy)
+    /// on the AOT artifact, transparently padding to the bucket.
+    pub fn g_step(&self, x: &DataMatrix, c: &DataMatrix) -> Result<GStepOutput> {
+        let spec = self
+            .manifest
+            .find_bucket("g_step", x.n(), x.d(), c.n())
+            .with_context(|| {
+                format!(
+                    "no g_step bucket for n={} d={} k={} (available: {})",
+                    x.n(),
+                    x.d(),
+                    c.n(),
+                    self.manifest.bucket_summary("g_step")
+                )
+            })?
+            .clone();
+        let padded = pad_problem(x, c, spec.n, spec.k);
+        let result = self.execute_padded(&spec, &padded)?;
+        let (c_new, assign, energy, counts) = result.to_tuple4()?;
+        // Unpad.
+        let c_f32 = c_new.to_vec::<f32>()?;
+        let mut centroids = DataMatrix::zeros(c.n(), c.d());
+        for j in 0..c.n() {
+            for t in 0..c.d() {
+                centroids[(j, t)] = c_f32[j * spec.d + t] as f64;
+            }
+        }
+        let assign_i32 = assign.to_vec::<i32>()?;
+        let assignment: Assignment = assign_i32[..x.n()].iter().map(|&v| v as u32).collect();
+        if assignment.iter().any(|&a| a as usize >= c.n()) {
+            bail!("artifact returned an assignment to a padding centroid");
+        }
+        let energy_v = energy.to_vec::<f32>()?;
+        let counts_v: Vec<f64> =
+            counts.to_vec::<f32>()?[..c.n()].iter().map(|&v| v as f64).collect();
+        Ok(GStepOutput {
+            centroids,
+            assignment,
+            energy: energy_v[0] as f64,
+            counts: counts_v,
+        })
+    }
+
+    /// Run assignment + energy only (`energy_step` artifact).
+    pub fn energy_step(&self, x: &DataMatrix, c: &DataMatrix) -> Result<(Assignment, f64)> {
+        let spec = self
+            .manifest
+            .find_bucket("energy_step", x.n(), x.d(), c.n())
+            .with_context(|| {
+                format!(
+                    "no energy_step bucket for n={} d={} k={} (available: {})",
+                    x.n(),
+                    x.d(),
+                    c.n(),
+                    self.manifest.bucket_summary("energy_step")
+                )
+            })?
+            .clone();
+        let padded = pad_problem(x, c, spec.n, spec.k);
+        let result = self.execute_padded(&spec, &padded)?;
+        let (assign, energy) = result.to_tuple2()?;
+        let assign_i32 = assign.to_vec::<i32>()?;
+        let assignment: Assignment = assign_i32[..x.n()].iter().map(|&v| v as u32).collect();
+        let energy_v = energy.to_vec::<f32>()?;
+        Ok((assignment, energy_v[0] as f64))
+    }
+}
+
+/// View a `f32` slice as bytes (little-endian host layout, what PJRT wants).
+fn bytes_of(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and we only reinterpret for
+    // reading; alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// An [`AssignmentEngine`] running the assignment step through the AOT
+/// artifact (the `energy_step` kind). This is how `EngineKind::Pjrt` plugs
+/// into the Algorithm-1 solver: Rust drives the outer loop, PJRT executes
+/// the JAX/Pallas compute.
+pub struct PjrtEngine {
+    runtime: std::rc::Rc<PjrtRuntime>,
+}
+
+impl PjrtEngine {
+    /// Wrap a shared runtime.
+    pub fn new(runtime: std::rc::Rc<PjrtRuntime>) -> Self {
+        Self { runtime }
+    }
+
+    /// Convenience: open the artifact dir and wrap.
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        Ok(Self::new(std::rc::Rc::new(PjrtRuntime::open(artifact_dir)?)))
+    }
+}
+
+impl AssignmentEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, _pool: &ThreadPool, out: &mut Assignment) {
+        let (assignment, _energy) = self
+            .runtime
+            .energy_step(x, c)
+            .expect("PJRT energy_step failed (missing bucket or artifact)");
+        *out = assignment;
+    }
+
+    fn reset(&mut self) {}
+
+    fn distance_evals(&self) -> u64 {
+        self.runtime.dist_evals()
+    }
+}
+
+/// Default artifact directory: `$AAKM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("AAKM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_of_roundtrip() {
+        let v = [1.0f32, -2.5, 3.25];
+        let b = bytes_of(&v);
+        assert_eq!(b.len(), 12);
+        let back = f32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+        assert_eq!(back, -2.5);
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // Note: env-var mutation is process-global; keep the assert local.
+        std::env::set_var("AAKM_ARTIFACTS", "/tmp/aakm_custom");
+        assert_eq!(default_artifact_dir(), std::path::PathBuf::from("/tmp/aakm_custom"));
+        std::env::remove_var("AAKM_ARTIFACTS");
+        assert_eq!(default_artifact_dir(), std::path::PathBuf::from("artifacts"));
+    }
+}

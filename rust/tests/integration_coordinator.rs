@@ -1,0 +1,111 @@
+//! Integration: the coordinator service end to end — mixed engines, mixed
+//! datasets, streaming mode, and the PJRT path when artifacts exist.
+
+use aakm::config::{Acceleration, EngineKind, SolverConfig};
+use aakm::coordinator::{
+    Coordinator, CoordinatorConfig, JobData, JobSpec, StreamingClusterer,
+};
+use aakm::data::synth;
+use aakm::init::InitMethod;
+use aakm::rng::Pcg32;
+use std::sync::Arc;
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_depth: 16,
+        solver_threads: 1,
+        artifact_dir: aakm::runtime::default_artifact_dir(),
+    })
+}
+
+#[test]
+fn mixed_dataset_job_stream() {
+    let coord = coordinator();
+    let names = ["HTRU2", "Birch", "Eb", "Shuttle"];
+    for (id, name) in names.iter().enumerate() {
+        coord
+            .submit(JobSpec {
+                id: id as u64,
+                data: JobData::Registry { name: name.to_string(), scale: 0.02 },
+                k: 8,
+                init: InitMethod::KMeansPlusPlus,
+                seed: id as u64,
+                accel: Acceleration::DynamicM(2),
+                engine: EngineKind::Hamerly,
+                max_iters: 5000,
+            })
+            .unwrap();
+    }
+    let results = coord.collect(names.len()).unwrap();
+    for r in &results {
+        let out = r.outcome.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", r.id));
+        assert!(out.converged, "job {}", r.id);
+        assert!(out.centroids.n() == 8);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_jobs_through_the_service() {
+    // Skips when artifacts are missing.
+    if aakm::runtime::Manifest::load(&aakm::runtime::default_artifact_dir()).is_err() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let coord = coordinator();
+    let mut rng = Pcg32::seed_from_u64(5);
+    let data = Arc::new(synth::gaussian_blobs(&mut rng, 800, 8, 10, 2.0, 0.3));
+    for id in 0..3 {
+        let mut job = JobSpec::inline(id, Arc::clone(&data), 10);
+        job.engine = EngineKind::Pjrt;
+        coord.submit(job).unwrap();
+    }
+    let results = coord.collect(3).unwrap();
+    for r in &results {
+        let out = r.outcome.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", r.id));
+        assert!(out.converged);
+        assert!(out.mse > 0.0);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn native_and_pjrt_agree_through_the_service() {
+    if aakm::runtime::Manifest::load(&aakm::runtime::default_artifact_dir()).is_err() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let coord = coordinator();
+    let mut rng = Pcg32::seed_from_u64(6);
+    let data = Arc::new(synth::gaussian_blobs(&mut rng, 900, 2, 8, 2.5, 0.2));
+    let mut native = JobSpec::inline(1, Arc::clone(&data), 8);
+    native.engine = EngineKind::Hamerly;
+    let mut pjrt = JobSpec::inline(2, Arc::clone(&data), 8);
+    pjrt.engine = EngineKind::Pjrt;
+    // Same seed → same seeding → comparable energies.
+    pjrt.seed = native.seed;
+    coord.submit(native).unwrap();
+    coord.submit(pjrt).unwrap();
+    let results = coord.collect(2).unwrap();
+    let e1 = results[0].outcome.as_ref().unwrap().energy;
+    let e2 = results[1].outcome.as_ref().unwrap().energy;
+    let rel = (e1 - e2).abs() / e1.max(e2);
+    assert!(rel < 0.05, "native {e1} vs pjrt {e2}");
+    coord.shutdown();
+}
+
+#[test]
+fn streaming_clusterer_end_to_end() {
+    let mut rng = Pcg32::seed_from_u64(77);
+    let x = synth::gaussian_blobs(&mut rng, 6000, 4, 6, 3.0, 0.2);
+    let cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
+    let mut sc = StreamingClusterer::new(6, 4, 1500, 3, cfg);
+    for start in (0..x.n()).step_by(750) {
+        let idx: Vec<usize> = (start..(start + 750).min(x.n())).collect();
+        sc.push_chunk(&x.gather_rows(&idx));
+    }
+    let report = sc.finalize().expect("finalize");
+    assert!(report.converged);
+    assert_eq!(sc.centroids().unwrap().n(), 6);
+}

@@ -1,0 +1,136 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and agrees with
+//! the native Rust engines numerically.
+//!
+//! Requires `make artifacts` (skips politely when artifacts are missing,
+//! e.g. in a cargo-only environment).
+
+use aakm::config::{Acceleration, EngineKind, SolverConfig};
+use aakm::data::{synth, DataMatrix};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::lloyd::{brute_force_assign, energy, update_step};
+use aakm::par::ThreadPool;
+use aakm::rng::Pcg32;
+use aakm::runtime::{default_artifact_dir, PjrtEngine, PjrtRuntime};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = default_artifact_dir();
+    match PjrtRuntime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable at {}: {e:#}", dir.display());
+            None
+        }
+    }
+}
+
+fn problem(seed: u64, n: usize, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let x = synth::gaussian_blobs(&mut rng, n, d, k, 2.0, 0.3);
+    let c = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
+    (x, c)
+}
+
+#[test]
+fn g_step_matches_native_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (x, c) = problem(11, 900, 8, 10);
+    let out = rt.g_step(&x, &c).expect("g_step");
+    // Native reference.
+    let pool = ThreadPool::new(1);
+    let assign = brute_force_assign(&x, &c);
+    let mut c_ref = DataMatrix::zeros(10, 8);
+    let counts = update_step(&x, &assign, &c, &mut c_ref, &pool);
+    let e_ref = energy(&x, &c, &assign, &pool);
+    // Energy: f32 artifact vs f64 native.
+    let rel = (out.energy - e_ref).abs() / e_ref;
+    assert!(rel < 1e-3, "energy mismatch: pjrt {} vs native {e_ref}", out.energy);
+    // Assignments must agree up to distance ties.
+    for i in 0..x.n() {
+        let got = aakm::linalg::dist_sq(x.row(i), c.row(out.assignment[i] as usize));
+        let exp = aakm::linalg::dist_sq(x.row(i), c.row(assign[i] as usize));
+        assert!(
+            (got - exp).abs() <= 1e-3 * (1.0 + exp),
+            "sample {i}: pjrt d²={got} vs native d²={exp}"
+        );
+    }
+    // Counts and centroids.
+    let total: f64 = out.counts.iter().sum();
+    assert_eq!(total as usize, x.n());
+    for j in 0..10 {
+        assert!((out.counts[j] - counts[j] as f64).abs() < 0.5, "count {j}");
+        for t in 0..8 {
+            let diff = (out.centroids[(j, t)] - c_ref[(j, t)]).abs();
+            assert!(diff < 1e-3, "centroid ({j},{t}): {diff}");
+        }
+    }
+}
+
+#[test]
+fn energy_step_matches_g_step() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (x, c) = problem(12, 500, 2, 7);
+    let g = rt.g_step(&x, &c).expect("g_step");
+    let (assign, e) = rt.energy_step(&x, &c).expect("energy_step");
+    assert_eq!(assign, g.assignment);
+    assert!((e - g.energy).abs() <= 1e-3 * (1.0 + g.energy));
+}
+
+#[test]
+fn bucket_padding_is_invisible() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // 700 samples pad to the 1024 bucket; 10 clusters pad to 16.
+    let (x, c) = problem(13, 700, 2, 10);
+    let out = rt.g_step(&x, &c).expect("g_step");
+    assert_eq!(out.assignment.len(), 700);
+    assert_eq!(out.centroids.n(), 10);
+    assert_eq!(out.counts.len(), 10);
+    assert!(out.assignment.iter().all(|&a| a < 10));
+    let total: f64 = out.counts.iter().sum();
+    assert_eq!(total as usize, 700);
+}
+
+#[test]
+fn oversized_problem_reports_available_buckets() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (x, c) = problem(14, 100, 8, 10);
+    // d=7 has no bucket.
+    let x_bad = DataMatrix::zeros(100, 7);
+    let c_bad = DataMatrix::zeros(10, 7);
+    let err = rt.g_step(&x_bad, &c_bad).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no g_step bucket"), "{msg}");
+    assert!(msg.contains("d8"), "should list available buckets: {msg}");
+    drop((x, c));
+}
+
+#[test]
+fn pjrt_engine_drives_algorithm1_solver() {
+    let dir = default_artifact_dir();
+    let engine = match PjrtEngine::open(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let (x, c0) = problem(15, 800, 8, 10);
+    let cfg = SolverConfig {
+        engine: EngineKind::Pjrt,
+        accel: Acceleration::DynamicM(2),
+        threads: 1,
+        record_trace: true,
+        ..SolverConfig::default()
+    };
+    let ours = Solver::with_engine(cfg, Box::new(engine)).run(&x, c0.clone());
+    assert!(ours.converged, "PJRT-driven solver should converge");
+    // Energy trace monotone (guard holds through the PJRT path too).
+    for w in ours.energy_trace.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-6), "energy rose: {} -> {}", w[0], w[1]);
+    }
+    // Final quality matches the native Hamerly solver from the same seed.
+    let native_cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
+    let native = Solver::new(native_cfg).run(&x, c0);
+    let rel = (ours.energy - native.energy).abs() / native.energy;
+    assert!(rel < 0.05, "pjrt {} vs native {}", ours.energy, native.energy);
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration: registry datasets → seeding → Algorithm 1 vs
+//! the Lloyd baseline, over every initialization the paper evaluates.
+
+use aakm::config::{Acceleration, EngineKind, SolverConfig};
+use aakm::data::{dataset_by_number, synth};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::rng::Pcg32;
+
+fn cfg(accel: Acceleration) -> SolverConfig {
+    SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() }
+}
+
+#[test]
+fn paper_method_beats_lloyd_iterations_across_inits() {
+    // Aggregated over the paper's four initializations on a mid-size
+    // registry dataset at smoke scale: ours must use fewer iterations in
+    // aggregate (the paper's Table 3 signal). Conflongdemo is one of the
+    // manifold-structured stand-ins where the paper's regime holds (see
+    // EXPERIMENTS.md — on the iid-blob stand-ins the iteration cut is
+    // data-dependent and this assertion would be flaky).
+    let x = dataset_by_number(12).unwrap().generate_scaled(0.1); // Conflongdemo
+    let (mut ours_total, mut lloyd_total) = (0usize, 0usize);
+    for (i, init) in InitMethod::PAPER_SET.iter().enumerate() {
+        let mut rng = Pcg32::seed_from_u64(1000 + i as u64);
+        let c0 = seed_centroids(&x, 10, *init, &mut rng);
+        let ours = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0.clone());
+        let lloyd = Solver::new(cfg(Acceleration::None)).run(&x, c0);
+        assert!(ours.converged && lloyd.converged);
+        // Quality parity (same local-minimum ballpark).
+        assert!(
+            ours.energy <= lloyd.energy * 1.05,
+            "{}: ours {} vs lloyd {}",
+            init.name(),
+            ours.energy,
+            lloyd.energy
+        );
+        ours_total += ours.iterations;
+        lloyd_total += lloyd.iterations;
+    }
+    assert!(
+        ours_total < lloyd_total,
+        "ours {ours_total} iters vs lloyd {lloyd_total}"
+    );
+}
+
+#[test]
+fn dynamic_m_adapts_over_the_run() {
+    // On a hard (poorly separated) instance the controller must actually
+    // move m around rather than sit at the initial value.
+    let mut rng = Pcg32::seed_from_u64(42);
+    let x = synth::noisy_curve(&mut rng, 3000, 4, 0.25);
+    let c0 = seed_centroids(&x, 12, InitMethod::KMeansPlusPlus, &mut rng);
+    let report = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0);
+    assert!(report.converged);
+    let distinct: std::collections::HashSet<usize> = report.m_trace.iter().copied().collect();
+    assert!(
+        distinct.len() >= 2,
+        "dynamic m never changed: trace {:?}",
+        report.m_trace
+    );
+    assert!(report.m_trace.iter().all(|&m| m <= 30));
+}
+
+#[test]
+fn acceptance_rate_is_high_on_clustered_data() {
+    // Tables 2–3 show most accelerated iterates are accepted. Acceptance
+    // varies with the instance (the paper's own Table 3 spans ~45–95%), so
+    // aggregate over several seeds and require a healthy aggregate rate.
+    let x = dataset_by_number(12).unwrap().generate_scaled(0.1); // Conflongdemo
+    let (mut accepted, mut iterations) = (0usize, 0usize);
+    for seed in 0..3u64 {
+        let mut rng = Pcg32::seed_from_u64(7 + seed);
+        let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+        let report = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0);
+        assert!(report.converged);
+        accepted += report.accepted;
+        iterations += report.iterations;
+    }
+    let rate = accepted as f64 / iterations.max(1) as f64;
+    assert!(
+        rate > 0.4,
+        "aggregate acceptance {rate:.2} too low ({accepted} / {iterations})"
+    );
+}
+
+#[test]
+fn k_sweep_matches_paper_shape() {
+    // Table 3's last columns: the method keeps working as K grows.
+    let x = dataset_by_number(13).unwrap().generate_scaled(0.03); // Birch
+    for k in [5, 25, 75] {
+        let mut rng = Pcg32::seed_from_u64(k as u64);
+        let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
+        let ours = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0.clone());
+        let lloyd = Solver::new(cfg(Acceleration::None)).run(&x, c0);
+        assert!(ours.converged, "k={k}");
+        assert!(
+            ours.energy <= lloyd.energy * 1.10,
+            "k={k}: ours {} vs lloyd {}",
+            ours.energy,
+            lloyd.energy
+        );
+    }
+}
+
+#[test]
+fn engines_and_acceleration_commute() {
+    // Same seed, same data: the accelerated solver must reach the same
+    // energy basin regardless of the assignment engine backing it.
+    let x = dataset_by_number(7).unwrap().generate_scaled(0.2); // FrogsMFCCs
+    let mut rng = Pcg32::seed_from_u64(55);
+    let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+    let mut energies = Vec::new();
+    for engine in [EngineKind::Naive, EngineKind::Hamerly, EngineKind::Elkan] {
+        let mut c = cfg(Acceleration::DynamicM(2));
+        c.engine = engine;
+        let report = Solver::new(c).run(&x, c0.clone());
+        assert!(report.converged, "{engine:?}");
+        energies.push(report.energy);
+    }
+    for e in &energies[1..] {
+        let rel = (e - energies[0]).abs() / energies[0];
+        assert!(rel < 1e-6, "engines diverged under AA: {energies:?}");
+    }
+}
+
+#[test]
+fn fixed_vs_dynamic_m_both_converge_table2_style() {
+    let x = dataset_by_number(4).unwrap().generate_scaled(0.05); // Letterrecognition
+    let mut rng = Pcg32::seed_from_u64(2);
+    let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+    for accel in [
+        Acceleration::FixedM(2),
+        Acceleration::DynamicM(2),
+        Acceleration::FixedM(5),
+        Acceleration::DynamicM(5),
+    ] {
+        let report = Solver::new(cfg(accel)).run(&x, c0.clone());
+        assert!(report.converged, "{accel:?} did not converge");
+        for w in report.energy_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{accel:?}: energy rose");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Property-based invariants over randomized problem instances.
+//!
+//! `proptest` is unavailable offline, so this is a seeded sweep harness:
+//! each property is checked over a few dozen random instances whose
+//! parameters (n, d, k, separation, noise, seeding) are themselves drawn
+//! from a seeded PCG stream; any failure prints the instance tuple so the
+//! case can be replayed exactly.
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::data::{synth, DataMatrix};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::linalg::dist_sq;
+use aakm::lloyd::{brute_force_assign, energy, update_step, HamerlyEngine, AssignmentEngine};
+use aakm::par::ThreadPool;
+use aakm::rng::{Pcg32, Rng};
+
+/// One random instance.
+#[derive(Debug, Clone, Copy)]
+struct Instance {
+    seed: u64,
+    n: usize,
+    d: usize,
+    k: usize,
+    spread: f64,
+    noise: f64,
+}
+
+fn random_instance(rng: &mut Pcg32) -> Instance {
+    let n = 100 + rng.next_below(900);
+    let d = 1 + rng.next_below(10);
+    let k = 2 + rng.next_below(10.min(n / 4));
+    Instance {
+        seed: rng.next_u64(),
+        n,
+        d,
+        k,
+        spread: rng.next_range(0.5, 4.0),
+        noise: rng.next_range(0.05, 1.0),
+    }
+}
+
+fn materialize(inst: Instance) -> (DataMatrix, DataMatrix) {
+    let mut rng = Pcg32::seed_from_u64(inst.seed);
+    let x = synth::gaussian_blobs(&mut rng, inst.n, inst.d, inst.k, inst.spread, inst.noise);
+    let c0 = seed_centroids(&x, inst.k, InitMethod::KMeansPlusPlus, &mut rng);
+    (x, c0)
+}
+
+fn solver(accel: Acceleration) -> Solver {
+    Solver::new(SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() })
+}
+
+const ROUNDS: usize = 25;
+
+#[test]
+fn prop_energy_monotone_under_guarded_aa() {
+    let mut rng = Pcg32::seed_from_u64(0xAA01);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, c0) = materialize(inst);
+        let report = solver(Acceleration::DynamicM(2)).run(&x, c0);
+        for w in report.energy_trace.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-12) + 1e-12,
+                "{inst:?}: energy rose {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_assignment_is_always_nearest() {
+    // At convergence every sample sits in the cluster of its nearest
+    // centroid (validity of the returned assignment).
+    let mut rng = Pcg32::seed_from_u64(0xAA02);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, c0) = materialize(inst);
+        let report = solver(Acceleration::DynamicM(2)).run(&x, c0);
+        if !report.converged {
+            continue;
+        }
+        let expect = brute_force_assign(&x, &report.centroids);
+        for i in 0..x.n() {
+            let got = dist_sq(x.row(i), report.centroids.row(report.assignment[i] as usize));
+            let best = dist_sq(x.row(i), report.centroids.row(expect[i] as usize));
+            assert!(
+                got <= best + 1e-9,
+                "{inst:?}: sample {i} not nearest ({got} vs {best})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_aa_quality_never_much_worse_than_lloyd() {
+    let mut rng = Pcg32::seed_from_u64(0xAA03);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, c0) = materialize(inst);
+        let ours = solver(Acceleration::DynamicM(2)).run(&x, c0.clone());
+        let base = solver(Acceleration::None).run(&x, c0);
+        assert!(
+            ours.energy <= base.energy * 1.10 + 1e-9,
+            "{inst:?}: ours {} vs lloyd {}",
+            ours.energy,
+            base.energy
+        );
+    }
+}
+
+#[test]
+fn prop_hamerly_equals_naive_on_random_motion() {
+    // Bounds correctness under adversarial (non-Lloyd) centroid motion.
+    let mut rng = Pcg32::seed_from_u64(0xAA04);
+    let pool = ThreadPool::new(1);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, mut c) = materialize(inst);
+        let mut engine = HamerlyEngine::new();
+        let mut out = Vec::new();
+        for round in 0..4 {
+            engine.assign(&x, &c, &pool, &mut out);
+            let expect = brute_force_assign(&x, &c);
+            for i in 0..x.n() {
+                let got = dist_sq(x.row(i), c.row(out[i] as usize));
+                let best = dist_sq(x.row(i), c.row(expect[i] as usize));
+                assert!(
+                    (got - best).abs() < 1e-9,
+                    "{inst:?} round {round}: sample {i}"
+                );
+            }
+            // Random jump.
+            for j in 0..c.n() {
+                for t in 0..c.d() {
+                    c[(j, t)] += rng.next_range(-0.5, 0.5);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_update_step_centroids_are_cluster_means() {
+    let mut rng = Pcg32::seed_from_u64(0xAA05);
+    let pool = ThreadPool::new(1);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, c) = materialize(inst);
+        let assign = brute_force_assign(&x, &c);
+        let mut next = c.clone();
+        let counts = update_step(&x, &assign, &c, &mut next, &pool);
+        assert_eq!(counts.iter().sum::<usize>(), x.n(), "{inst:?}: counts must sum to n");
+        for j in 0..c.n() {
+            if counts[j] == 0 {
+                assert_eq!(next.row(j), c.row(j), "{inst:?}: empty cluster must hold");
+                continue;
+            }
+            let mut mean = vec![0.0; x.d()];
+            for i in 0..x.n() {
+                if assign[i] as usize == j {
+                    for t in 0..x.d() {
+                        mean[t] += x[(i, t)];
+                    }
+                }
+            }
+            for t in 0..x.d() {
+                mean[t] /= counts[j] as f64;
+                assert!(
+                    (next[(j, t)] - mean[t]).abs() < 1e-9,
+                    "{inst:?}: centroid {j} dim {t}"
+                );
+            }
+        }
+        // And the update never increases energy under the fixed assignment.
+        let e_old = energy(&x, &c, &assign, &pool);
+        let e_new = energy(&x, &next, &assign, &pool);
+        assert!(e_new <= e_old + 1e-9, "{inst:?}: update raised energy");
+    }
+}
+
+#[test]
+fn prop_seeding_methods_produce_valid_centroids() {
+    let mut rng = Pcg32::seed_from_u64(0xAA06);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, _) = materialize(inst);
+        for method in [
+            InitMethod::Random,
+            InitMethod::KMeansPlusPlus,
+            InitMethod::AfkMc2,
+            InitMethod::BradleyFayyad,
+            InitMethod::Clarans,
+        ] {
+            let c = seed_centroids(&x, inst.k, method, &mut rng);
+            assert_eq!(c.n(), inst.k, "{inst:?} {method:?}");
+            assert_eq!(c.d(), inst.d);
+            assert!(
+                c.as_slice().iter().all(|v| v.is_finite()),
+                "{inst:?} {method:?}: non-finite centroid"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_convergence_detection_is_a_fixed_point() {
+    // After the solver reports convergence, one more Lloyd step must not
+    // change the assignment.
+    let mut rng = Pcg32::seed_from_u64(0xAA07);
+    let pool = ThreadPool::new(1);
+    for _ in 0..ROUNDS {
+        let inst = random_instance(&mut rng);
+        let (x, c0) = materialize(inst);
+        let report = solver(Acceleration::DynamicM(5)).run(&x, c0);
+        if !report.converged {
+            continue;
+        }
+        let assign1 = brute_force_assign(&x, &report.centroids);
+        let mut next = report.centroids.clone();
+        update_step(&x, &assign1, &report.centroids, &mut next, &pool);
+        let assign2 = brute_force_assign(&x, &next);
+        // Assignments may differ only on exact ties.
+        for i in 0..x.n() {
+            if assign1[i] != assign2[i] {
+                let d1 = dist_sq(x.row(i), next.row(assign1[i] as usize));
+                let d2 = dist_sq(x.row(i), next.row(assign2[i] as usize));
+                assert!(
+                    (d1 - d2).abs() < 1e-9,
+                    "{inst:?}: sample {i} moved after convergence ({d1} vs {d2})"
+                );
+            }
+        }
+    }
+}
