@@ -1,6 +1,10 @@
 //! §Perf harness — the per-layer profiling the optimization pass records in
 //! EXPERIMENTS.md:
 //!
+//! * Kernel sweep: the seed's scalar per-pair assign loop vs the blocked
+//!   norm-decomposed `DistanceKernel` across a d×K grid (machine-readable
+//!   results land in `BENCH_hotpath.json` so the perf trajectory is
+//!   tracked PR over PR).
 //! * L3 micro: assignment-engine cost per call (cold vs warm vs post-jump),
 //!   the fused update+energy pass vs separate passes, AA solve cost vs m.
 //! * L3 macro: per-iteration overhead of Algorithm 1 vs plain Lloyd.
@@ -10,9 +14,10 @@ mod common;
 
 use aakm::anderson::AndersonAccelerator;
 use aakm::config::{Acceleration, SolverConfig};
-use aakm::data::synth;
+use aakm::data::{synth, DataMatrix};
 use aakm::init::{seed_centroids, InitMethod};
 use aakm::kmeans::Solver;
+use aakm::linalg::dist_sq;
 use aakm::lloyd::{self, AssignmentEngine, HamerlyEngine, NaiveEngine};
 use aakm::metrics::Stopwatch;
 use aakm::par::ThreadPool;
@@ -26,6 +31,25 @@ fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
     sw.seconds() * 1000.0 / iters as f64
 }
 
+/// The seed's naive assignment path, kept verbatim as the scalar baseline
+/// the kernel sweep measures against: per-pair subtract-square `dist_sq`,
+/// no norm caching, no blocking.
+fn assign_scalar(x: &DataMatrix, c: &DataMatrix, out: &mut Vec<u32>) {
+    out.resize(x.n(), 0);
+    for i in 0..x.n() {
+        let row = x.row(i);
+        let (mut best, mut best_d) = (0u32, f64::INFINITY);
+        for j in 0..c.n() {
+            let dsq = dist_sq(row, c.row(j));
+            if dsq < best_d {
+                best_d = dsq;
+                best = j as u32;
+            }
+        }
+        out[i] = best;
+    }
+}
+
 fn main() {
     let mut rng = Pcg32::seed_from_u64(0x9E8F);
     let n = 100_000;
@@ -33,7 +57,32 @@ fn main() {
     let x = synth::gaussian_blobs_ex(&mut rng, n, d, k, 2.0, 0.4, 0.05, 2.0);
     let c = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
     let pool = ThreadPool::new(1);
-    println!("## L3 micro (n={n}, d={d}, K={k}, 1 thread)\n");
+
+    // ---- Kernel sweep: scalar (seed) vs blocked norm-decomposed assign.
+    println!("## Kernel sweep — scalar (seed) vs blocked kernel assign (n={n}, 1 thread)\n");
+    let mut sweep_rows: Vec<String> = Vec::new();
+    for &(sd, sk) in &[(2usize, 10usize), (8, 10), (8, 64), (16, 10), (32, 64), (100, 10)] {
+        let mut srng = Pcg32::seed_from_u64(0xBEEF ^ ((sd * 131 + sk) as u64));
+        let sx = synth::gaussian_blobs(&mut srng, n, sd, sk.min(16), 2.0, 0.4);
+        let sc = seed_centroids(&sx, sk, InitMethod::Random, &mut srng);
+        // Budget ~2e8 pair-flops per timing arm, at least 2 reps.
+        let iters = (200_000_000 / (n * sk * sd)).clamp(2, 10);
+        let mut out = Vec::new();
+        let t_scalar = time_ms(iters, || assign_scalar(&sx, &sc, &mut out));
+        let mut eng = NaiveEngine::new();
+        let mut out2 = Vec::new();
+        eng.assign(&sx, &sc, &pool, &mut out2); // warm the norm cache
+        let t_kernel = time_ms(iters, || eng.assign(&sx, &sc, &pool, &mut out2));
+        let speedup = t_scalar / t_kernel.max(1e-12);
+        println!(
+            "d={sd:<4} K={sk:<4} scalar {t_scalar:8.2} ms | kernel {t_kernel:8.2} ms | {speedup:5.2}x"
+        );
+        sweep_rows.push(format!(
+            "    {{\"d\": {sd}, \"k\": {sk}, \"scalar_ms\": {t_scalar:.4}, \"kernel_ms\": {t_kernel:.4}, \"speedup\": {speedup:.3}}}"
+        ));
+    }
+
+    println!("\n## L3 micro (n={n}, d={d}, K={k}, 1 thread)\n");
 
     // Assignment engines: cold, warm (small Lloyd motion), post-jump.
     let mut out = Vec::new();
@@ -87,22 +136,24 @@ fn main() {
         let mut grng = Pcg32::seed_from_u64(m as u64);
         let g: Vec<f64> = (0..k * d).map(|_| grng.next_gaussian()).collect();
         let f: Vec<f64> = (0..k * d).map(|_| grng.next_gaussian()).collect();
+        let mut next = vec![0.0; k * d];
         // warm the history
         for _ in 0..m + 1 {
             let g2: Vec<f64> = g.iter().map(|v| v + grng.next_gaussian() * 0.01).collect();
             let f2: Vec<f64> = f.iter().map(|v| v * 0.9 + grng.next_gaussian() * 0.01).collect();
-            let _ = acc.propose(&g2, &f2, m);
+            let _ = acc.propose_into(&g2, &f2, m, &mut next);
         }
+        let g2: Vec<f64> = g.iter().map(|v| v + 0.001).collect();
+        let f2: Vec<f64> = f.iter().map(|v| v * 0.9).collect();
         let t = time_ms(200, || {
-            let g2: Vec<f64> = g.iter().map(|v| v + 0.001).collect();
-            let f2: Vec<f64> = f.iter().map(|v| v * 0.9).collect();
-            let _ = acc.propose(&g2, &f2, m);
+            let _ = acc.propose_into(&g2, &f2, m, &mut next);
         });
         println!("  m={m:<3} {t:8.4} ms/propose");
     }
 
     // Macro: per-iteration cost ratio ours vs lloyd.
     println!("\n## L3 macro — per-iteration overhead vs Lloyd\n");
+    let mut macro_rows: Vec<String> = Vec::new();
     for (name, num) in [("Eb", 8usize), ("Colorment", 11), ("Birch", 13)] {
         let spec = &aakm::data::REGISTRY[num - 1];
         let x = spec.generate_scaled((50_000.0 / spec.n as f64).min(1.0));
@@ -125,6 +176,24 @@ fn main() {
             per_o / per_l,
             lloyd.seconds / ours.seconds.max(1e-12),
         );
+        macro_rows.push(format!(
+            "    {{\"dataset\": \"{name}\", \"lloyd_iters\": {}, \"lloyd_ms_per_iter\": {per_l:.4}, \"ours_iters\": {}, \"ours_ms_per_iter\": {per_o:.4}, \"overhead\": {:.3}, \"time_ratio\": {:.3}}}",
+            lloyd.iterations,
+            ours.iterations,
+            per_o / per_l,
+            lloyd.seconds / ours.seconds.max(1e-12),
+        ));
+    }
+
+    // Machine-readable trail for the perf trajectory.
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath\",\n  \"n\": {n},\n  \"kernel_sweep\": [\n{}\n  ],\n  \"macro\": [\n{}\n  ]\n}}\n",
+        sweep_rows.join(",\n"),
+        macro_rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
     }
 
     // PJRT G-step cost per bucket.

@@ -77,6 +77,11 @@ pub struct AndersonAccelerator {
     ws: AndersonLsWorkspace,
     prev_f: Option<Vec<f64>>,
     prev_g: Option<Vec<f64>>,
+    /// Buffers recycled from evicted history columns — once the window is
+    /// full, pushing a new difference pair allocates nothing.
+    free_cols: Vec<Vec<f64>>,
+    /// Scratch for θ* between the solve and the extrapolation.
+    theta: Vec<f64>,
     /// Count of propose() calls that actually extrapolated.
     accelerated_steps: u64,
 }
@@ -89,6 +94,8 @@ impl AndersonAccelerator {
             ws: AndersonLsWorkspace::new(m_max.max(1), dim),
             prev_f: None,
             prev_g: None,
+            free_cols: Vec::new(),
+            theta: Vec::new(),
             accelerated_steps: 0,
         }
     }
@@ -96,26 +103,53 @@ impl AndersonAccelerator {
     /// Feed this iteration's `(g_t, f_t)` and get the next iterate proposal
     /// using at most `m_use` history columns.
     pub fn propose(&mut self, g_t: &[f64], f_t: &[f64], m_use: usize) -> Vec<f64> {
-        debug_assert_eq!(g_t.len(), self.ws.dim());
-        debug_assert_eq!(f_t.len(), self.ws.dim());
+        let mut out = vec![0.0; g_t.len()];
+        self.propose_into(g_t, f_t, m_use, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`AndersonAccelerator::propose`]: writes
+    /// the proposal into `out` (length `dim`) and returns whether the
+    /// proposal differs from the plain iterate `g_t` (i.e. whether the
+    /// caller is looking at an accelerated candidate). At steady state —
+    /// full history window, well-conditioned normal equations — this
+    /// performs no heap allocation: difference columns are recycled from
+    /// evicted history entries and the previous `(f, g)` snapshots are
+    /// overwritten in place.
+    pub fn propose_into(&mut self, g_t: &[f64], f_t: &[f64], m_use: usize, out: &mut [f64]) -> bool {
+        let dim = self.ws.dim();
+        debug_assert_eq!(g_t.len(), dim);
+        debug_assert_eq!(f_t.len(), dim);
+        debug_assert_eq!(out.len(), dim);
         if let (Some(pf), Some(pg)) = (&self.prev_f, &self.prev_g) {
-            let mut df = vec![0.0; f_t.len()];
-            let mut dg = vec![0.0; g_t.len()];
+            let mut df = self.free_cols.pop().unwrap_or_else(|| vec![0.0; dim]);
+            let mut dg = self.free_cols.pop().unwrap_or_else(|| vec![0.0; dim]);
             crate::linalg::sub(f_t, pf, &mut df);
             crate::linalg::sub(g_t, pg, &mut dg);
-            self.ws.push(df, dg);
-        }
-        self.prev_f = Some(f_t.to_vec());
-        self.prev_g = Some(g_t.to_vec());
-        if m_use == 0 || self.ws.is_empty() {
-            return g_t.to_vec();
-        }
-        match self.ws.solve(f_t, m_use) {
-            Some(theta) => {
-                self.accelerated_steps += 1;
-                self.ws.accelerate(g_t, &theta)
+            if let Some((ef, eg)) = self.ws.push(df, dg) {
+                self.free_cols.push(ef);
+                self.free_cols.push(eg);
             }
-            None => g_t.to_vec(),
+        }
+        match &mut self.prev_f {
+            Some(pf) => pf.copy_from_slice(f_t),
+            None => self.prev_f = Some(f_t.to_vec()),
+        }
+        match &mut self.prev_g {
+            Some(pg) => pg.copy_from_slice(g_t),
+            None => self.prev_g = Some(g_t.to_vec()),
+        }
+        if m_use == 0 || self.ws.is_empty() {
+            out.copy_from_slice(g_t);
+            return false;
+        }
+        if self.ws.solve_into(f_t, m_use, &mut self.theta) {
+            self.accelerated_steps += 1;
+            self.ws.accelerate_into(g_t, &self.theta, out);
+            out != g_t
+        } else {
+            out.copy_from_slice(g_t);
+            false
         }
     }
 

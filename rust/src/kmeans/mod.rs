@@ -67,7 +67,11 @@ impl Solver {
         let mut phases = PhaseTimer::new();
         let evals0 = self.engine.distance_evals();
         self.engine.reset();
+        let (k, d) = (c0.n(), c0.d());
         let mut c = c0;
+        // Rotating centroid buffer + swapped assignment buffers: the loop
+        // itself allocates nothing at steady state.
+        let mut c_next = DataMatrix::zeros(k, d);
         let mut assign = Assignment::new();
         let mut prev_assign: Option<Assignment> = None;
         let mut trace = Vec::new();
@@ -83,12 +87,14 @@ impl Solver {
             if self.cfg.record_trace {
                 trace.push(phases.time("energy", || lloyd::energy(x, &c, &assign, &self.pool)));
             }
-            let mut next = c.clone();
             phases.time("update", || {
-                lloyd::update_step(x, &assign, &c, &mut next, &self.pool)
+                lloyd::update_step(x, &assign, &c, &mut c_next, &self.pool)
             });
-            prev_assign = Some(std::mem::take(&mut assign));
-            c = next;
+            match prev_assign.as_mut() {
+                Some(p) => std::mem::swap(p, &mut assign),
+                None => prev_assign = Some(std::mem::take(&mut assign)),
+            }
+            std::mem::swap(&mut c, &mut c_next);
         }
         let final_assign = prev_assign.unwrap_or(assign);
         let energy = lloyd::energy(x, &c, &final_assign, &self.pool);
@@ -137,9 +143,17 @@ impl Solver {
         let mut c_au = DataMatrix::zeros(k, d);
         phases.time("update", || lloyd::update_step(x, &assign, &c0, &mut c_au, &self.pool));
         let mut c = c_au.clone();
-        // Scratch buffer for the fused update+energy pass.
+        // Steady-state scratch, all allocated once up front: the fused
+        // update+energy output matrix, the Anderson residual `f_t`, and the
+        // pair of assignment buffers that rotate through `prev_assign`. The
+        // hot loop below performs no heap allocation — buffers are swapped
+        // or overwritten in place (the rare exceptions, by design: the
+        // first `m` history pushes inside the accelerator and its
+        // ill-conditioned QR fall-back).
         let mut c_next = DataMatrix::zeros(k, d);
+        let mut f_t = vec![0.0f64; dim];
         let mut prev_assign = Some(std::mem::take(&mut assign));
+        assign.reserve(x.n());
 
         let mut e_prev = f64::INFINITY; // E^{t-1}
         let mut decrease_prev = f64::INFINITY; // E^{t-2} − E^{t-1}
@@ -167,7 +181,7 @@ impl Solver {
                     converged = true;
                     break;
                 }
-                c = c_au.clone();
+                c.as_mut_slice().copy_from_slice(c_au.as_slice());
                 self.engine.rollback();
                 candidate_was_accel = false;
                 continue;
@@ -215,22 +229,23 @@ impl Solver {
             e_prev = e;
             // c_next currently holds C_AU^{t+1}; rotate it into c_au.
             std::mem::swap(&mut c_au, &mut c_next);
-            // Lines 17–19: Anderson extrapolation.
-            let next = phases.time("anderson", || {
-                let g_t = c_au.as_slice();
-                let f_t: Vec<f64> =
-                    g_t.iter().zip(c.as_slice()).map(|(g, ci)| g - ci).collect();
+            // Lines 17–19: Anderson extrapolation, written straight into
+            // `c` (which becomes C^{t+1} — its old contents, C^t, are only
+            // needed to form the residual f_t = G(C^t) − C^t first).
+            candidate_was_accel = phases.time("anderson", || {
+                crate::linalg::sub(c_au.as_slice(), c.as_slice(), &mut f_t);
                 let m_use = controller.m();
-                acc.propose(g_t, &f_t, m_use)
+                acc.propose_into(c_au.as_slice(), &f_t, m_use, c.as_mut_slice())
             });
-            candidate_was_accel = next != c_au.as_slice();
             if candidate_was_accel {
                 // Save the bound state at C^t so a rejected jump can roll
                 // back instead of paying two large bound drifts.
                 self.engine.checkpoint();
             }
-            prev_assign = Some(std::mem::take(&mut assign));
-            c = DataMatrix::from_vec(next, k, d);
+            match prev_assign.as_mut() {
+                Some(p) => std::mem::swap(p, &mut assign),
+                None => prev_assign = Some(std::mem::take(&mut assign)),
+            }
         }
 
         let final_assign = match prev_assign {

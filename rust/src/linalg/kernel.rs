@@ -1,0 +1,402 @@
+//! Blocked, norm-decomposed distance kernels — the compute core every
+//! assignment engine runs on.
+//!
+//! # Decomposition
+//!
+//! The squared Euclidean distance is evaluated as
+//!
+//! ```text
+//! ‖x − c‖² = ‖x‖² − 2·x·c + ‖c‖²
+//! ```
+//!
+//! with `‖x‖²` cached once per dataset (samples never move during a run)
+//! and `‖c‖²` refreshed once per centroid motion (i.e. per [`DistanceKernel::prepare`]
+//! call). That turns the inner loop from 3 flops/element (subtract, square,
+//! add) into a pure 2 flops/element dot product, which the register-blocked
+//! micro-kernel below evaluates for four centroids at a time so each sample
+//! element is loaded once per block instead of once per centroid.
+//!
+//! # Blocking
+//!
+//! [`DistanceKernel::argmin2_range`] sweeps cache-sized *sample tiles* ×
+//! *centroid blocks*: the centroid block (sized to stay resident in L1) is
+//! reused across every sample of the tile, and within a block the
+//! [`dot_x4`] micro-kernel keeps four independent accumulator chains alive
+//! so the auto-vectorizer can emit wide FMA lanes. The sweep is *fused*
+//! with the argmin: it returns both the best and second-best distance per
+//! sample in one pass, which is exactly what bound-based engines (Hamerly,
+//! Elkan, Yinyang) need to refresh their upper *and* lower bounds from a
+//! single sweep.
+//!
+//! # Accuracy tradeoff
+//!
+//! The norm-decomposed form loses bits to cancellation when `‖x‖² + ‖c‖²`
+//! is much larger than the true distance (a point sitting almost on a
+//! centroid): the absolute error is `O(ε · (‖x‖² + ‖c‖²))` with
+//! `ε ≈ 2.2e−16`, versus `O(ε · ‖x − c‖²)` for the subtract-square form.
+//! Results are clamped at zero (the decomposition can go slightly
+//! negative), and downstream comparisons must use *distance* equality (the
+//! crate-wide `1e-9` tolerance), never assignment-id equality — ties can
+//! legitimately resolve either way. For data with coordinates up to ~1e4
+//! the error stays below ~1e-12, far inside the tolerance; callers with
+//! extreme dynamic range should pre-center their data (see ROADMAP).
+
+use crate::data::DataMatrix;
+use crate::par::{SyncSliceMut, ThreadPool};
+use std::ops::Range;
+
+/// Samples per tile of the blocked sweep. A tile's running best/second
+/// state lives in stack arrays of this size.
+const SAMPLE_TILE: usize = 32;
+/// Centroids per micro-kernel pass (the register-blocking width).
+const CENTROID_BLOCK: usize = 4;
+/// Target bytes of centroid data kept hot per block sweep (~half of a
+/// typical 32 KiB L1d).
+const CENTROID_TILE_BYTES: usize = 16 * 1024;
+
+/// Result of the fused argmin sweep for one sample: squared distances to
+/// the best and second-best centroid. `second_d` is `+∞` when `K == 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct Best2 {
+    /// Index of the nearest centroid.
+    pub best: u32,
+    /// Squared distance to the nearest centroid (clamped ≥ 0).
+    pub best_d: f64,
+    /// Squared distance to the second-nearest centroid (clamped ≥ 0).
+    pub second_d: f64,
+}
+
+/// Per-engine cache of the norm decomposition: sample norms are computed
+/// once per dataset (keyed on the buffer pointer + shape, dropped by
+/// [`DistanceKernel::invalidate`]), centroid norms once per
+/// [`DistanceKernel::prepare`] call — i.e. once per centroid motion.
+#[derive(Debug, Clone, Default)]
+pub struct DistanceKernel {
+    /// `(buffer ptr, n, d)` of the sample matrix the cached norms belong
+    /// to. Engines call [`DistanceKernel::invalidate`] on reset so a new
+    /// run never trusts a stale pointer match.
+    x_key: Option<(usize, usize, usize)>,
+    x_norms: Vec<f64>,
+    c_norms: Vec<f64>,
+}
+
+impl DistanceKernel {
+    /// Fresh kernel with no cached state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Refresh the cached norms for `(x, c)`. Sample norms are recomputed
+    /// only when `x` changed identity or shape (one parallel O(N·d) pass);
+    /// centroid norms are recomputed every call (O(K·d), negligible).
+    pub fn prepare(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
+        let key = (x.as_slice().as_ptr() as usize, x.n(), x.d());
+        if self.x_key != Some(key) {
+            self.x_norms.clear();
+            self.x_norms.resize(x.n(), 0.0);
+            let norms = SyncSliceMut::new(&mut self.x_norms);
+            pool.parallel_for(x.n(), 512, |range| {
+                for i in range {
+                    *norms.at(i) = super::norm_sq(x.row(i));
+                }
+            });
+            self.x_key = Some(key);
+        }
+        self.c_norms.clear();
+        self.c_norms.resize(c.n(), 0.0);
+        for j in 0..c.n() {
+            self.c_norms[j] = super::norm_sq(c.row(j));
+        }
+    }
+
+    /// Drop the cached sample norms (engines call this from `reset`).
+    pub fn invalidate(&mut self) {
+        self.x_key = None;
+    }
+
+    /// Centroid rows per cache tile: as many as fit the L1 budget, rounded
+    /// to the register-block width, never below one block.
+    fn centroid_tile(&self, d: usize) -> usize {
+        let rows = CENTROID_TILE_BYTES / (8 * d.max(1));
+        (rows.max(CENTROID_BLOCK) / CENTROID_BLOCK) * CENTROID_BLOCK
+    }
+
+    /// Fused (best, second-best) argmin over all centroids for every
+    /// sample in `rows`, evaluated in sample tiles × centroid blocks.
+    /// `emit(i, best2)` is called once per sample in ascending order.
+    ///
+    /// Requires a matching [`DistanceKernel::prepare`] call. Safe to call
+    /// concurrently from pool lanes over disjoint ranges (`&self` only).
+    pub fn argmin2_range(
+        &self,
+        x: &DataMatrix,
+        c: &DataMatrix,
+        rows: Range<usize>,
+        mut emit: impl FnMut(usize, Best2),
+    ) {
+        debug_assert_eq!(self.x_norms.len(), x.n(), "prepare() not called for x");
+        debug_assert_eq!(self.c_norms.len(), c.n(), "prepare() not called for c");
+        let k = c.n();
+        let ctile = self.centroid_tile(x.d());
+        let mut start = rows.start;
+        while start < rows.end {
+            let tile = (rows.end - start).min(SAMPLE_TILE);
+            // Running partials p = ‖c‖² − 2·x·c; the constant ‖x‖² is added
+            // at emit time (it does not affect the argmin).
+            let mut best = [0u32; SAMPLE_TILE];
+            let mut best_p = [f64::INFINITY; SAMPLE_TILE];
+            let mut second_p = [f64::INFINITY; SAMPLE_TILE];
+            let mut cb = 0;
+            while cb < k {
+                let cend = (cb + ctile).min(k);
+                for ti in 0..tile {
+                    self.scan_block(
+                        x.row(start + ti),
+                        c,
+                        cb,
+                        cend,
+                        &mut best[ti],
+                        &mut best_p[ti],
+                        &mut second_p[ti],
+                    );
+                }
+                cb = cend;
+            }
+            for ti in 0..tile {
+                let xn = self.x_norms[start + ti];
+                emit(
+                    start + ti,
+                    Best2 {
+                        best: best[ti],
+                        best_d: (xn + best_p[ti]).max(0.0),
+                        second_d: (xn + second_p[ti]).max(0.0),
+                    },
+                );
+            }
+            start += tile;
+        }
+    }
+
+    /// Fused best/second-best for a single sample (the bound engines' full
+    /// re-scan path).
+    pub fn argmin2_row(&self, x: &DataMatrix, c: &DataMatrix, i: usize) -> Best2 {
+        let mut out = Best2 { best: 0, best_d: f64::INFINITY, second_d: f64::INFINITY };
+        self.argmin2_range(x, c, i..i + 1, |_, b| out = b);
+        out
+    }
+
+    /// All `K` squared distances for sample `i` written into `out`
+    /// (the dense initialization path of Elkan / Yinyang).
+    pub fn dists_row(&self, x: &DataMatrix, c: &DataMatrix, i: usize, out: &mut [f64]) {
+        let k = c.n();
+        debug_assert_eq!(out.len(), k);
+        debug_assert_eq!(self.c_norms.len(), k, "prepare() not called for c");
+        let row = x.row(i);
+        let xn = self.x_norms[i];
+        let mut j = 0;
+        while j + CENTROID_BLOCK <= k {
+            let dots = dot_x4(row, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+            for (lane, &dj) in dots.iter().enumerate() {
+                out[j + lane] = (xn - 2.0 * dj + self.c_norms[j + lane]).max(0.0);
+            }
+            j += CENTROID_BLOCK;
+        }
+        while j < k {
+            out[j] = (xn - 2.0 * super::dot(row, c.row(j)) + self.c_norms[j]).max(0.0);
+            j += 1;
+        }
+    }
+
+    /// Single-pair squared distance via the cached norms (the sparse
+    /// bound-tightening path).
+    pub fn dist_sq(&self, x: &DataMatrix, c: &DataMatrix, i: usize, j: usize) -> f64 {
+        (self.x_norms[i] - 2.0 * super::dot(x.row(i), c.row(j)) + self.c_norms[j]).max(0.0)
+    }
+
+    /// Scan centroids `[cb, cend)` for one sample, updating the running
+    /// best/second partials. Full blocks go through the 4-wide micro-kernel.
+    #[inline]
+    fn scan_block(
+        &self,
+        row: &[f64],
+        c: &DataMatrix,
+        cb: usize,
+        cend: usize,
+        best: &mut u32,
+        best_p: &mut f64,
+        second_p: &mut f64,
+    ) {
+        let mut j = cb;
+        while j + CENTROID_BLOCK <= cend {
+            let dots = dot_x4(row, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+            for (lane, &dj) in dots.iter().enumerate() {
+                let p = self.c_norms[j + lane] - 2.0 * dj;
+                update2(best, best_p, second_p, (j + lane) as u32, p);
+            }
+            j += CENTROID_BLOCK;
+        }
+        while j < cend {
+            let p = self.c_norms[j] - 2.0 * super::dot(row, c.row(j));
+            update2(best, best_p, second_p, j as u32, p);
+            j += 1;
+        }
+    }
+}
+
+/// Track the two smallest partials seen so far. Strict `<` keeps the
+/// lowest centroid index on exact ties, matching the brute-force scan.
+#[inline(always)]
+fn update2(best: &mut u32, best_p: &mut f64, second_p: &mut f64, j: u32, p: f64) {
+    if p < *best_p {
+        *second_p = *best_p;
+        *best_p = p;
+        *best = j;
+    } else if p < *second_p {
+        *second_p = p;
+    }
+}
+
+/// Dot products of one sample row against four centroid rows at once —
+/// the register-blocked micro-kernel. Four independent accumulator chains
+/// let the auto-vectorizer emit wide FMA lanes while each sample element
+/// is loaded once per block instead of once per centroid.
+#[inline(always)]
+fn dot_x4(x: &[f64], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) -> [f64; 4] {
+    let d = x.len();
+    let (c0, c1, c2, c3) = (&c0[..d], &c1[..d], &c2[..d], &c3[..d]);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for t in 0..d {
+        let v = x[t];
+        s0 += v * c0[t];
+        s1 += v * c1[t];
+        s2 += v * c2[t];
+        s3 += v * c3[t];
+    }
+    [s0, s1, s2, s3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg;
+    use crate::lloyd::brute_force_assign;
+    use crate::rng::Pcg32;
+
+    /// Exact distances for one sample, for cross-checking.
+    fn exact_dists(x: &DataMatrix, c: &DataMatrix, i: usize) -> Vec<f64> {
+        (0..c.n()).map(|j| linalg::dist_sq(x.row(i), c.row(j))).collect()
+    }
+
+    fn check_matches_brute(x: &DataMatrix, c: &DataMatrix, ctx: &str) {
+        let pool = ThreadPool::new(2);
+        let mut kernel = DistanceKernel::new();
+        kernel.prepare(x, c, &pool);
+        let expect = brute_force_assign(x, c);
+        let k = c.n();
+        let mut seen = 0usize;
+        kernel.argmin2_range(x, c, 0..x.n(), |i, b| {
+            seen += 1;
+            let mut exact = exact_dists(x, c, i);
+            // The kernel's pick must be distance-equal to the brute-force
+            // pick (ids may differ on ties — see module docs).
+            let got = exact[b.best as usize];
+            let best = exact[expect[i] as usize];
+            assert!((got - best).abs() < 1e-9, "{ctx}: sample {i}: {got} vs {best}");
+            assert!((b.best_d - got).abs() < 1e-9, "{ctx}: sample {i} best_d");
+            assert!(b.best_d >= 0.0 && b.second_d >= 0.0, "{ctx}: negative distance");
+            exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if k >= 2 {
+                assert!(
+                    (b.second_d - exact[1]).abs() < 1e-9,
+                    "{ctx}: sample {i} second_d {} vs {}",
+                    b.second_d,
+                    exact[1]
+                );
+            } else {
+                assert!(b.second_d.is_infinite(), "{ctx}: K=1 second bound");
+            }
+            // dists_row and dist_sq agree with the exact form too.
+            let mut dense = vec![0.0; k];
+            kernel.dists_row(x, c, i, &mut dense);
+            for j in 0..k {
+                let e = linalg::dist_sq(x.row(i), c.row(j));
+                assert!((dense[j] - e).abs() < 1e-9, "{ctx}: dists_row[{i}][{j}]");
+            }
+            let one = kernel.dist_sq(x, c, i, b.best as usize);
+            assert!((one - got).abs() < 1e-9, "{ctx}: dist_sq one-pair");
+        });
+        assert_eq!(seen, x.n(), "{ctx}: emit must cover every sample once");
+    }
+
+    /// Satellite property test: tiled/norm-decomposed assignment matches
+    /// brute force across the full d × K grid, with duplicate points and
+    /// tie distances (duplicated centroids, centroids placed exactly on
+    /// samples so clamping at zero is exercised).
+    #[test]
+    fn property_matches_brute_force_across_shapes() {
+        let mut rng = Pcg32::seed_from_u64(0xD15E);
+        for &d in &[1usize, 2, 3, 7, 8, 16, 100] {
+            for &k in &[1usize, 7, 64] {
+                let n = 160.max(2 * k);
+                let blobs = k.clamp(1, 8);
+                let mut x = synth::gaussian_blobs(&mut rng, n, d, blobs, 2.0, 0.3);
+                // Duplicate points: rows 1 and 2 become copies of row 0.
+                let r0 = x.row(0).to_vec();
+                x.row_mut(1).copy_from_slice(&r0);
+                x.row_mut(2).copy_from_slice(&r0);
+                // Centroids sit exactly on samples (zero distances).
+                let idx: Vec<usize> = (0..k).map(|j| (j * 7) % n).collect();
+                let mut c = x.gather_rows(&idx);
+                if k >= 2 {
+                    // Tie distances: centroid 1 duplicates centroid 0.
+                    let c0 = c.row(0).to_vec();
+                    c.row_mut(1).copy_from_slice(&c0);
+                }
+                check_matches_brute(&x, &c, &format!("d={d} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_tracks_centroid_motion() {
+        let mut rng = Pcg32::seed_from_u64(7);
+        let x = synth::gaussian_blobs(&mut rng, 200, 5, 3, 2.0, 0.4);
+        let mut c = x.gather_rows(&[0, 50, 100]);
+        let pool = ThreadPool::new(1);
+        let mut kernel = DistanceKernel::new();
+        for round in 0..4 {
+            kernel.prepare(&x, &c, &pool);
+            check_round(&kernel, &x, &c, round);
+            for j in 0..c.n() {
+                for t in 0..c.d() {
+                    c[(j, t)] += 0.1 * (j + t + 1) as f64;
+                }
+            }
+        }
+
+        fn check_round(kernel: &DistanceKernel, x: &DataMatrix, c: &DataMatrix, round: usize) {
+            for i in (0..x.n()).step_by(17) {
+                for j in 0..c.n() {
+                    let e = linalg::dist_sq(x.row(i), c.row(j));
+                    let g = kernel.dist_sq(x, c, i, j);
+                    assert!((g - e).abs() < 1e-9, "round {round} pair ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalidate_recomputes_sample_norms() {
+        let pool = ThreadPool::new(1);
+        let mut kernel = DistanceKernel::new();
+        let x1 = DataMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0]]);
+        kernel.prepare(&x1, &c, &pool);
+        assert!((kernel.dist_sq(&x1, &c, 1, 0) - 4.0).abs() < 1e-12);
+        kernel.invalidate();
+        let x2 = DataMatrix::from_rows(&[&[3.0, 0.0], &[0.0, 5.0]]);
+        kernel.prepare(&x2, &c, &pool);
+        assert!((kernel.dist_sq(&x2, &c, 1, 0) - 25.0).abs() < 1e-12);
+    }
+}

@@ -43,8 +43,11 @@ pub struct AndersonLsWorkspace {
     gram: Vec<f64>,
     /// Scratch for the regularized normal matrix.
     scratch_a: Vec<f64>,
-    /// Scratch for the RHS / solution.
+    /// Scratch for the RHS.
     scratch_b: Vec<f64>,
+    /// Scratch for the Cholesky solution (the RHS is preserved across
+    /// regularization retries).
+    scratch_x: Vec<f64>,
 }
 
 impl AndersonLsWorkspace {
@@ -59,6 +62,7 @@ impl AndersonLsWorkspace {
             gram: vec![0.0; max_m * max_m],
             scratch_a: vec![0.0; max_m * max_m],
             scratch_b: vec![0.0; max_m],
+            scratch_x: vec![0.0; max_m],
         }
     }
 
@@ -86,8 +90,14 @@ impl AndersonLsWorkspace {
 
     /// Push the newest difference columns `ΔF = f_new − f_old`,
     /// `ΔG = g_new − g_old`. Updates the Gram cache with `len` inner
-    /// products (the paper's stated per-iteration cost).
-    pub fn push(&mut self, delta_f: Vec<f64>, delta_g: Vec<f64>) {
+    /// products (the paper's stated per-iteration cost). When the history
+    /// is at capacity the evicted column pair is returned so callers can
+    /// recycle the buffers (the solver's zero-alloc steady state).
+    pub fn push(
+        &mut self,
+        delta_f: Vec<f64>,
+        delta_g: Vec<f64>,
+    ) -> Option<(Vec<f64>, Vec<f64>)> {
         assert_eq!(delta_f.len(), self.dim);
         assert_eq!(delta_g.len(), self.dim);
         // Shift the valid Gram block down-right by one (newest slot is 0,0).
@@ -97,10 +107,13 @@ impl AndersonLsWorkspace {
                 self.gram[(i + 1) * self.max_m + (j + 1)] = self.gram[i * self.max_m + j];
             }
         }
-        if self.delta_f.len() == self.max_m {
-            self.delta_f.pop_back();
-            self.delta_g.pop_back();
-        }
+        let evicted = if self.delta_f.len() == self.max_m {
+            let ef = self.delta_f.pop_back().expect("len == max_m > 0");
+            let eg = self.delta_g.pop_back().expect("aligned with delta_f");
+            Some((ef, eg))
+        } else {
+            None
+        };
         self.delta_f.push_front(delta_f);
         self.delta_g.push_front(delta_g);
         // New inner products for row/column 0.
@@ -110,15 +123,26 @@ impl AndersonLsWorkspace {
             self.gram[j] = v; // row 0
             self.gram[j * self.max_m] = v; // column 0
         }
+        evicted
     }
 
     /// Solve Eq. (7) for the `m_use` most recent columns against residual
     /// `f_t`, returning `θ*`. `None` when there is no usable history.
     pub fn solve(&mut self, f_t: &[f64], m_use: usize) -> Option<Vec<f64>> {
+        let mut theta = Vec::new();
+        self.solve_into(f_t, m_use, &mut theta).then_some(theta)
+    }
+
+    /// Allocation-free variant of [`AndersonLsWorkspace::solve`]: writes
+    /// `θ*` into `theta_out` (cleared first) and returns whether a finite
+    /// solution was found. The Cholesky path reuses internal scratch; only
+    /// the rare ill-conditioned QR fall-back allocates.
+    pub fn solve_into(&mut self, f_t: &[f64], m_use: usize, theta_out: &mut Vec<f64>) -> bool {
         assert_eq!(f_t.len(), self.dim);
+        theta_out.clear();
         let m = m_use.min(self.delta_f.len());
         if m == 0 {
-            return None;
+            return false;
         }
         // RHS: b_j = <ΔF_j, F^t>.
         for j in 0..m {
@@ -139,11 +163,13 @@ impl AndersonLsWorkspace {
                 }
                 self.scratch_a[i * m + i] += reg * scale;
             }
-            let mut rhs = self.scratch_b[..m].to_vec();
-            if cholesky_solve_in_place(&mut self.scratch_a[..m * m], &mut rhs, m)
-                && rhs.iter().all(|v| v.is_finite())
+            let (rhs, sol) = (&self.scratch_b[..m], &mut self.scratch_x[..m]);
+            sol.copy_from_slice(rhs);
+            if cholesky_solve_in_place(&mut self.scratch_a[..m * m], sol, m)
+                && sol.iter().all(|v| v.is_finite())
             {
-                return Some(rhs);
+                theta_out.extend_from_slice(sol);
+                return true;
             }
             reg *= REG_ESCALATION;
         }
@@ -156,19 +182,31 @@ impl AndersonLsWorkspace {
         }
         let a = Mat::from_rows(self.dim, m, &cols);
         let theta = householder_lstsq(&a, f_t);
-        theta.iter().all(|v| v.is_finite()).then_some(theta)
+        if theta.iter().all(|v| v.is_finite()) {
+            theta_out.extend_from_slice(&theta);
+            true
+        } else {
+            false
+        }
     }
 
     /// Apply the extrapolation of Algorithm 1 line 19:
     /// `out = g_t − Σ_j θ_j ΔG_j`.
     pub fn accelerate(&self, g_t: &[f64], theta: &[f64]) -> Vec<f64> {
-        assert_eq!(g_t.len(), self.dim);
-        assert!(theta.len() <= self.delta_g.len());
-        let mut out = g_t.to_vec();
-        for (j, &th) in theta.iter().enumerate() {
-            super::axpy(-th, &self.delta_g[j], &mut out);
-        }
+        let mut out = vec![0.0; self.dim];
+        self.accelerate_into(g_t, theta, &mut out);
         out
+    }
+
+    /// Allocation-free variant of [`AndersonLsWorkspace::accelerate`].
+    pub fn accelerate_into(&self, g_t: &[f64], theta: &[f64], out: &mut [f64]) {
+        assert_eq!(g_t.len(), self.dim);
+        assert_eq!(out.len(), self.dim);
+        assert!(theta.len() <= self.delta_g.len());
+        out.copy_from_slice(g_t);
+        for (j, &th) in theta.iter().enumerate() {
+            super::axpy(-th, &self.delta_g[j], out);
+        }
     }
 }
 
@@ -193,7 +231,7 @@ pub fn solve_anderson_weights(
         let mut dg = vec![0.0; dim];
         super::sub(&f_hist[j], &f_hist[j + 1], &mut df);
         super::sub(&g_hist[j], &g_hist[j + 1], &mut dg);
-        ws.push(df, dg);
+        let _ = ws.push(df, dg);
     }
     let theta = ws.solve(&f_hist[0], m)?;
     let accel = ws.accelerate(&g_hist[0], &theta);
@@ -254,7 +292,7 @@ mod tests {
             let mut dg = vec![0.0; dim];
             crate::linalg::sub(&f[t], &f[t + 1], &mut df);
             crate::linalg::sub(&g[t], &g[t + 1], &mut dg);
-            ws.push(df, dg);
+            let _ = ws.push(df, dg);
         }
         // After 7 pushes into capacity 4, columns are ΔF_0..ΔF_3.
         assert_eq!(ws.len(), 4);
@@ -313,7 +351,7 @@ mod tests {
         let col: Vec<f64> = (0..dim).map(|i| i as f64).collect();
         let mut ws = AndersonLsWorkspace::new(3, dim);
         for _ in 0..3 {
-            ws.push(col.clone(), col.clone());
+            let _ = ws.push(col.clone(), col.clone());
         }
         let f_t: Vec<f64> = (0..dim).map(|i| (i as f64).cos()).collect();
         let theta = ws.solve(&f_t, 3).expect("should solve with regularization");
@@ -333,7 +371,7 @@ mod tests {
         let dim = 4;
         let mut ws = AndersonLsWorkspace::new(2, dim);
         for v in 1..=5 {
-            ws.push(vec![v as f64; dim], vec![v as f64; dim]);
+            let _ = ws.push(vec![v as f64; dim], vec![v as f64; dim]);
         }
         assert_eq!(ws.len(), 2);
         assert_eq!(ws.delta_f[0], vec![5.0; dim]);

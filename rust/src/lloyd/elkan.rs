@@ -6,13 +6,15 @@
 
 use super::{Assignment, AssignmentEngine};
 use crate::data::DataMatrix;
-use crate::linalg::dist_sq;
+use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Elkan triangle-inequality assignment engine.
 #[derive(Debug, Default)]
 pub struct ElkanEngine {
+    /// Blocked norm-decomposed distance kernel (per-engine cache).
+    kernel: DistanceKernel,
     prev_c: Option<DataMatrix>,
     /// Upper bound d(x_i, c_{a_i}).
     upper: Vec<f64>,
@@ -37,14 +39,18 @@ impl ElkanEngine {
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 128, |range| {
             let mut local = 0u64;
+            // Elkan's init needs every distance anyway: one dense blocked
+            // kernel row per sample fills the whole lower-bound row.
+            let mut dists = vec![0.0f64; k];
             for i in range {
-                let row = x.row(i);
+                kernel.dists_row(x, c, i, &mut dists);
                 let (mut d1, mut best) = (f64::INFINITY, 0u32);
-                for j in 0..k {
-                    let dj = dist_sq(row, c.row(j)).sqrt();
+                for (j, &dsq) in dists.iter().enumerate() {
+                    let dj = dsq.sqrt();
                     *lower.at(i * k + j) = dj;
                     if dj < d1 {
                         d1 = dj;
@@ -68,6 +74,7 @@ impl AssignmentEngine for ElkanEngine {
 
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k, d) = (x.n(), c.n(), x.d());
+        self.kernel.prepare(x, c, pool);
         let stale = match &self.prev_c {
             Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
             None => true,
@@ -109,6 +116,7 @@ impl AssignmentEngine for ElkanEngine {
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 128, |range| {
             let mut local = 0u64;
@@ -125,7 +133,6 @@ impl AssignmentEngine for ElkanEngine {
                     *upper.at(i) = u;
                     continue; // global prune: nothing can be closer
                 }
-                let row = x.row(i);
                 let mut u_tight = false;
                 for j in 0..k {
                     if j == a {
@@ -136,7 +143,7 @@ impl AssignmentEngine for ElkanEngine {
                     // inter-centroid prune?
                     if u > lb && u > 0.5 * cc[a * k + j] {
                         if !u_tight {
-                            u = dist_sq(row, c.row(a)).sqrt();
+                            u = kernel.dist_sq(x, c, i, a).sqrt();
                             local += 1;
                             *lower.at(i * k + a) = u;
                             u_tight = true;
@@ -144,7 +151,7 @@ impl AssignmentEngine for ElkanEngine {
                                 continue;
                             }
                         }
-                        let dj = dist_sq(row, c.row(j)).sqrt();
+                        let dj = kernel.dist_sq(x, c, i, j).sqrt();
                         local += 1;
                         *lower.at(i * k + j) = dj;
                         if dj < u {
@@ -165,6 +172,7 @@ impl AssignmentEngine for ElkanEngine {
     }
 
     fn reset(&mut self) {
+        self.kernel.invalidate();
         self.prev_c = None;
         self.upper.clear();
         self.lower.clear();

@@ -9,13 +9,15 @@
 
 use super::{Assignment, AssignmentEngine};
 use crate::data::DataMatrix;
-use crate::linalg::dist_sq;
+use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Hamerly-bounds assignment engine.
 #[derive(Debug, Default)]
 pub struct HamerlyEngine {
+    /// Blocked norm-decomposed distance kernel (per-engine cache).
+    kernel: DistanceKernel,
     /// Centroids seen at the previous call.
     prev_c: Option<DataMatrix>,
     /// Upper bound: d(x_i, c_{a_i}).
@@ -44,27 +46,16 @@ impl HamerlyEngine {
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 256, |range| {
-            let mut local = 0u64;
-            for i in range {
-                let row = x.row(i);
-                let (mut d1, mut d2, mut best) = (f64::INFINITY, f64::INFINITY, 0u32);
-                for j in 0..k {
-                    let d = dist_sq(row, c.row(j)).sqrt();
-                    if d < d1 {
-                        d2 = d1;
-                        d1 = d;
-                        best = j as u32;
-                    } else if d < d2 {
-                        d2 = d;
-                    }
-                }
-                local += k as u64;
-                *upper.at(i) = d1;
-                *lower.at(i) = d2;
-                *assign.at(i) = best;
-            }
+            // One fused kernel sweep yields both bounds per sample.
+            let local = (range.len() * k) as u64;
+            kernel.argmin2_range(x, c, range, |i, b| {
+                *upper.at(i) = b.best_d.sqrt();
+                *lower.at(i) = b.second_d.sqrt();
+                *assign.at(i) = b.best;
+            });
             evals.fetch_add(local, Ordering::Relaxed);
         });
         self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
@@ -78,6 +69,7 @@ impl AssignmentEngine for HamerlyEngine {
 
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k, d) = (x.n(), c.n(), x.d());
+        self.kernel.prepare(x, c, pool);
         let stale = match &self.prev_c {
             Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
             None => true,
@@ -125,6 +117,7 @@ impl AssignmentEngine for HamerlyEngine {
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 256, |range| {
             let mut local = 0u64;
@@ -141,29 +134,19 @@ impl AssignmentEngine for HamerlyEngine {
                     continue; // bound test passed, assignment unchanged
                 }
                 // Tighten the upper bound with one real distance.
-                let row = x.row(i);
-                let tight = dist_sq(row, c.row(a)).sqrt();
+                let tight = kernel.dist_sq(x, c, i, a).sqrt();
                 local += 1;
                 *upper.at(i) = tight;
                 if tight <= threshold {
                     continue;
                 }
-                // Full scan.
-                let (mut d1, mut d2, mut best) = (f64::INFINITY, f64::INFINITY, a as u32);
-                for j in 0..k {
-                    let dj = dist_sq(row, c.row(j)).sqrt();
-                    if dj < d1 {
-                        d2 = d1;
-                        d1 = dj;
-                        best = j as u32;
-                    } else if dj < d2 {
-                        d2 = dj;
-                    }
-                }
+                // Full scan through the fused blocked kernel: one sweep
+                // refreshes both bounds.
+                let b = kernel.argmin2_row(x, c, i);
                 local += k as u64;
-                *upper.at(i) = d1;
-                *lower.at(i) = d2;
-                *assign.at(i) = best;
+                *upper.at(i) = b.best_d.sqrt();
+                *lower.at(i) = b.second_d.sqrt();
+                *assign.at(i) = b.best;
             }
             evals.fetch_add(local, Ordering::Relaxed);
         });
@@ -174,6 +157,7 @@ impl AssignmentEngine for HamerlyEngine {
     }
 
     fn reset(&mut self) {
+        self.kernel.invalidate();
         self.prev_c = None;
         self.upper.clear();
         self.lower.clear();

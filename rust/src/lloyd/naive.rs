@@ -1,15 +1,19 @@
 //! The O(NK) reference assignment engine: every sample against every
-//! centroid, parallelized over samples. No state between calls.
+//! centroid, parallelized over samples. No bound state between calls — but
+//! the distances themselves run on the blocked norm-decomposed
+//! [`DistanceKernel`], so this is the fastest *exhaustive* sweep the crate
+//! has (and the baseline the bound engines are judged against).
 
 use super::{Assignment, AssignmentEngine};
 use crate::data::DataMatrix;
-use crate::linalg::dist_sq;
+use crate::linalg::DistanceKernel;
 use crate::par::{SyncSliceMut, ThreadPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Brute-force nearest-centroid assignment.
+/// Brute-force nearest-centroid assignment over the blocked kernel.
 #[derive(Debug, Default)]
 pub struct NaiveEngine {
+    kernel: DistanceKernel,
     dist_evals: AtomicU64,
 }
 
@@ -27,30 +31,23 @@ impl AssignmentEngine for NaiveEngine {
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k) = (x.n(), c.n());
         out.resize(n, 0);
+        self.kernel.prepare(x, c, pool);
+        let kernel = &self.kernel;
         let shared = SyncSliceMut::new(out.as_mut_slice());
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 256, |range| {
-            let mut local_evals = 0u64;
-            for i in range {
-                let row = x.row(i);
-                let mut best = 0u32;
-                let mut best_d = f64::INFINITY;
-                for j in 0..k {
-                    let dsq = dist_sq(row, c.row(j));
-                    if dsq < best_d {
-                        best_d = dsq;
-                        best = j as u32;
-                    }
-                }
-                local_evals += k as u64;
-                *shared.at(i) = best;
-            }
-            evals.fetch_add(local_evals, Ordering::Relaxed);
+            let local = (range.len() * k) as u64;
+            kernel.argmin2_range(x, c, range, |i, b| {
+                *shared.at(i) = b.best;
+            });
+            evals.fetch_add(local, Ordering::Relaxed);
         });
         self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
-    fn reset(&mut self) {}
+    fn reset(&mut self) {
+        self.kernel.invalidate();
+    }
 
     fn distance_evals(&self) -> u64 {
         self.dist_evals.load(Ordering::Relaxed)

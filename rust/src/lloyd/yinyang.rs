@@ -11,7 +11,7 @@
 
 use super::{Assignment, AssignmentEngine};
 use crate::data::DataMatrix;
-use crate::linalg::dist_sq;
+use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -23,6 +23,8 @@ const GROUPING_ROUNDS: usize = 5;
 /// Yinyang group-bounds assignment engine.
 #[derive(Debug, Default)]
 pub struct YinyangEngine {
+    /// Blocked norm-decomposed distance kernel (per-engine cache).
+    kernel: DistanceKernel,
     prev_c: Option<DataMatrix>,
     /// Group id per centroid.
     group_of: Vec<usize>,
@@ -98,16 +100,19 @@ impl YinyangEngine {
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
         let group_of = &self.group_of;
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 128, |range| {
             let mut local = 0u64;
             let mut glb = vec![f64::INFINITY; g];
+            // The init needs every distance: dense blocked kernel rows.
+            let mut dists = vec![0.0f64; k];
             for i in range {
-                let row = x.row(i);
+                kernel.dists_row(x, c, i, &mut dists);
                 glb.iter_mut().for_each(|v| *v = f64::INFINITY);
                 let (mut d1, mut best) = (f64::INFINITY, 0usize);
-                for j in 0..k {
-                    let dj = dist_sq(row, c.row(j)).sqrt();
+                for (j, &dsq) in dists.iter().enumerate() {
+                    let dj = dsq.sqrt();
                     let gj = group_of[j];
                     if dj < d1 {
                         // The old best drops into its group's lower bound.
@@ -140,6 +145,7 @@ impl AssignmentEngine for YinyangEngine {
 
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k, d) = (x.n(), c.n(), x.d());
+        self.kernel.prepare(x, c, pool);
         let stale = match &self.prev_c {
             Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
             None => true,
@@ -169,6 +175,7 @@ impl AssignmentEngine for YinyangEngine {
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
         let group_of = &self.group_of;
+        let kernel = &self.kernel;
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 128, |range| {
             let mut local = 0u64;
@@ -189,8 +196,7 @@ impl AssignmentEngine for YinyangEngine {
                     continue;
                 }
                 // Tighten the upper bound once.
-                let row = x.row(i);
-                u = dist_sq(row, c.row(a)).sqrt();
+                u = kernel.dist_sq(x, c, i, a).sqrt();
                 local += 1;
                 if u <= glb_min {
                     *upper.at(i) = u;
@@ -211,7 +217,7 @@ impl AssignmentEngine for YinyangEngine {
                         if group_of[j] != gi || j == a {
                             continue;
                         }
-                        let dj = dist_sq(row, c.row(j)).sqrt();
+                        let dj = kernel.dist_sq(x, c, i, j).sqrt();
                         local += 1;
                         dists.push((j, dj));
                         if dj < d1 {
@@ -258,6 +264,7 @@ impl AssignmentEngine for YinyangEngine {
     }
 
     fn reset(&mut self) {
+        self.kernel.invalidate();
         self.prev_c = None;
         self.upper.clear();
         self.lower.clear();

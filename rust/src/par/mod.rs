@@ -5,12 +5,16 @@
 //! persistent [`ThreadPool`] with a chunked, work-stealing `parallel_for`
 //! over index ranges, plus a `map_reduce` built on top of it.
 //!
-//! Design: workers park on a condvar; a `parallel_for` call installs a job
-//! (closure + atomic chunk cursor), wakes everyone, participates itself,
-//! and returns once the done-counter reaches the worker count. Closures are
-//! borrowed from the caller's stack — safe because the call does not return
-//! until every worker has finished the job (enforced by the completion
-//! latch), mirroring rayon's scoped model.
+//! Design: workers park on a condvar; a job dispatch installs a per-lane
+//! closure, wakes everyone, participates itself, and returns once the
+//! done-counter reaches the worker count. Closures are borrowed from the
+//! caller's stack — safe because the call does not return until every
+//! worker has finished the job (enforced by the completion latch),
+//! mirroring rayon's scoped model. Each lane has a stable id (`0` is the
+//! caller, `1..threads` the workers), which `map_reduce` uses to fold into
+//! exactly one accumulator per lane — chunks are claimed lock-free from a
+//! shared cursor, and the only synchronization is the single per-lane
+//! publish at the end, not a lock per chunk.
 
 mod slice;
 
@@ -21,17 +25,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// Type-erased job: a closure over an index range plus its chunk cursor.
+/// Type-erased job: a closure invoked once per lane with the lane id.
 struct Job {
-    /// Pointer to the caller's `&(dyn Fn(Range<usize>) + Sync)`, type-erased
-    /// to `'static`. Valid only while the issuing `parallel_for` is blocked.
-    func: *const (dyn Fn(Range<usize>) + Sync),
-    cursor: Arc<AtomicUsize>,
-    n: usize,
-    chunk: usize,
+    /// Pointer to the caller's `&(dyn Fn(usize) + Sync)`, type-erased to
+    /// `'static`. Valid only while the issuing dispatch is blocked.
+    func: *const (dyn Fn(usize) + Sync),
 }
 
-// SAFETY: `func` points into the stack frame of the `parallel_for` caller,
+// SAFETY: `func` points into the stack frame of the dispatching caller,
 // which blocks until the job is fully drained; the pointee is `Sync`.
 unsafe impl Send for Job {}
 
@@ -42,7 +43,7 @@ struct Shared {
 }
 
 struct State {
-    /// Current job, if any. Replaced wholesale per `parallel_for`.
+    /// Current job, if any. Replaced wholesale per dispatch.
     job: Option<Job>,
     /// Monotonic id so sleeping workers can tell a fresh job from a stale one.
     epoch: u64,
@@ -68,11 +69,12 @@ impl ThreadPool {
             work_ready: Condvar::new(),
             work_done: Condvar::new(),
         });
-        // The caller participates, so spawn threads-1 workers.
+        // The caller participates as lane 0, so spawn threads-1 workers
+        // with lane ids 1..threads.
         let workers = (1..threads)
-            .map(|_| {
+            .map(|lane| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(&shared, lane))
             })
             .collect();
         Self { shared, workers, threads }
@@ -87,6 +89,33 @@ impl ThreadPool {
     /// Number of lanes (caller + workers).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Run `f(lane)` once on every lane (caller = lane 0, workers =
+    /// lanes `1..threads`). Blocks until every lane has returned.
+    fn dispatch(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        // SAFETY: see `Job.func` — we block below until the job drains.
+        let func: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "pool jobs are not reentrant");
+            st.job = Some(Job { func });
+            st.epoch += 1;
+            st.active = self.workers.len();
+            self.shared.work_ready.notify_all();
+        }
+        // The caller participates in the same job as lane 0.
+        f(0);
+        // Wait until all workers have finished.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.work_done.wait(st).unwrap();
+        }
+        st.job = None;
     }
 
     /// Run `f` over `0..n` in chunks of at least `min_chunk`, in parallel.
@@ -106,31 +135,14 @@ impl ThreadPool {
         }
         // Aim for ~4 chunks per lane to smooth imbalance, floor at min_chunk.
         let chunk = (n / (self.threads * 4)).max(min_chunk);
-        let cursor = Arc::new(AtomicUsize::new(0));
-        let f_ref: &(dyn Fn(Range<usize>) + Sync) = &f;
-        // SAFETY: see `Job.func` — we block below until the job drains.
-        let func: *const (dyn Fn(Range<usize>) + Sync) =
-            unsafe { std::mem::transmute(f_ref) };
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            debug_assert!(st.job.is_none(), "parallel_for is not reentrant");
-            st.job = Some(Job { func, cursor: Arc::clone(&cursor), n, chunk });
-            st.epoch += 1;
-            st.active = self.workers.len();
-            self.shared.work_ready.notify_all();
-        }
-        // The caller participates in the same job.
-        run_chunks(&f, &cursor, n, chunk);
-        // Wait until all workers have finished their last chunk.
-        let mut st = self.shared.state.lock().unwrap();
-        while st.active > 0 {
-            st = self.shared.work_done.wait(st).unwrap();
-        }
-        st.job = None;
+        let cursor = AtomicUsize::new(0);
+        self.dispatch(&|_lane| run_chunks(&f, &cursor, n, chunk));
     }
 
-    /// Parallel map-reduce over `0..n`: each lane folds its chunks with
-    /// `fold`, starting from `init()`; partials are combined with `combine`.
+    /// Parallel map-reduce over `0..n`: each lane folds every chunk it
+    /// claims into one thread-local accumulator (created lazily from
+    /// `init()`), and the per-lane partials — at most `threads` of them,
+    /// regardless of chunk count — are combined with `combine` at the end.
     pub fn map_reduce<T, FInit, FFold, FComb>(
         &self,
         n: usize,
@@ -145,17 +157,34 @@ impl ThreadPool {
         FFold: Fn(&mut T, Range<usize>) + Sync,
         FComb: Fn(T, T) -> T,
     {
-        let partials = Mutex::new(Vec::<T>::new());
-        self.parallel_for(n, min_chunk, |range| {
-            // One partial per chunk; cheap relative to chunk work.
+        let min_chunk = min_chunk.max(1);
+        if self.threads == 1 || n <= min_chunk {
             let mut acc = init();
-            fold(&mut acc, range);
-            partials.lock().unwrap().push(acc);
+            if n > 0 {
+                fold(&mut acc, 0..n);
+            }
+            return acc;
+        }
+        let chunk = (n / (self.threads * 4)).max(min_chunk);
+        let cursor = AtomicUsize::new(0);
+        // One slot per lane; a lane that claims no chunk publishes nothing.
+        let slots: Vec<Mutex<Option<T>>> = (0..self.threads).map(|_| Mutex::new(None)).collect();
+        self.dispatch(&|lane| {
+            let mut acc: Option<T> = None;
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                fold(acc.get_or_insert_with(&init), start..(start + chunk).min(n));
+            }
+            if acc.is_some() {
+                *slots[lane].lock().unwrap() = acc;
+            }
         });
-        let partials = partials.into_inner().unwrap();
-        let mut it = partials.into_iter();
-        let first = it.next().unwrap_or_else(&init);
-        it.fold(first, &combine)
+        let mut partials = slots.into_iter().filter_map(|s| s.into_inner().unwrap());
+        let first = partials.next().unwrap_or_else(&init);
+        partials.fold(first, &combine)
     }
 }
 
@@ -172,10 +201,10 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, lane: usize) {
     let mut last_epoch = 0u64;
     loop {
-        let (func, cursor, n, chunk) = {
+        let func = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -184,16 +213,16 @@ fn worker_loop(shared: &Shared) {
                 if st.epoch != last_epoch {
                     if let Some(job) = &st.job {
                         last_epoch = st.epoch;
-                        break (job.func, Arc::clone(&job.cursor), job.n, job.chunk);
+                        break job.func;
                     }
                 }
                 st = shared.work_ready.wait(st).unwrap();
             }
         };
-        // SAFETY: the issuing parallel_for blocks until `active` hits zero,
+        // SAFETY: the issuing dispatch blocks until `active` hits zero,
         // keeping the closure alive for the duration of this call.
-        let f: &(dyn Fn(Range<usize>) + Sync) = unsafe { &*func };
-        run_chunks(f, &cursor, n, chunk);
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*func };
+        f(lane);
         let mut st = shared.state.lock().unwrap();
         st.active -= 1;
         if st.active == 0 {
@@ -203,7 +232,12 @@ fn worker_loop(shared: &Shared) {
 }
 
 /// Claim chunks from the shared cursor until the range is exhausted.
-fn run_chunks(f: &(dyn Fn(Range<usize>) + Sync), cursor: &AtomicUsize, n: usize, chunk: usize) {
+fn run_chunks(
+    f: &(dyn Fn(Range<usize>) + Sync),
+    cursor: &AtomicUsize,
+    n: usize,
+    chunk: usize,
+) {
     loop {
         let start = cursor.fetch_add(chunk, Ordering::Relaxed);
         if start >= n {
@@ -273,6 +307,37 @@ mod tests {
         let pool = ThreadPool::new(2);
         let v = pool.map_reduce(0, 1, || 42u32, |_, _| panic!(), |a, _| a);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn map_reduce_combines_lane_count_partials() {
+        // The per-lane fold must create at most one accumulator per lane —
+        // not one per chunk — no matter how many chunks the job splits into.
+        let threads = 4;
+        let pool = ThreadPool::new(threads);
+        let n = 100_000;
+        let inits = AtomicUsize::new(0);
+        let combines = AtomicUsize::new(0);
+        // min_chunk 8 → chunk = n / (threads*4) = 6250 → 16 chunks > lanes.
+        let sum = pool.map_reduce(
+            n,
+            8,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0u64
+            },
+            |acc, range| *acc += range.map(|i| i as u64).sum::<u64>(),
+            |a, b| {
+                combines.fetch_add(1, Ordering::Relaxed);
+                a + b
+            },
+        );
+        assert_eq!(sum, (n as u64 - 1) * n as u64 / 2);
+        let inits = inits.load(Ordering::Relaxed);
+        let combines = combines.load(Ordering::Relaxed);
+        assert!(inits <= threads, "{inits} accumulators for {threads} lanes");
+        assert!(combines < threads, "{combines} combines for {threads} lanes");
+        assert!(inits >= 1 && combines == inits - 1);
     }
 
     #[test]

@@ -11,7 +11,10 @@ use aakm::data::{synth, DataMatrix};
 use aakm::init::{seed_centroids, InitMethod};
 use aakm::kmeans::Solver;
 use aakm::linalg::dist_sq;
-use aakm::lloyd::{brute_force_assign, energy, update_step, HamerlyEngine, AssignmentEngine};
+use aakm::lloyd::{
+    brute_force_assign, energy, update_step, AssignmentEngine, ElkanEngine, HamerlyEngine,
+    NaiveEngine, YinyangEngine,
+};
 use aakm::par::ThreadPool;
 use aakm::rng::{Pcg32, Rng};
 
@@ -137,6 +140,66 @@ fn prop_hamerly_equals_naive_on_random_motion() {
             for j in 0..c.n() {
                 for t in 0..c.d() {
                     c[(j, t)] += rng.next_range(-0.5, 0.5);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernelized_engines_match_brute_force_with_ties() {
+    // All four engines run on the blocked norm-decomposed DistanceKernel;
+    // they must stay distance-equal (within the crate-wide 1e-9 tolerance,
+    // never id-equal — ties resolve arbitrarily) to the exact subtract-
+    // square brute force, including duplicate points, duplicated centroids
+    // (tie distances), and centroids sitting exactly on samples.
+    let mut rng = Pcg32::seed_from_u64(0xAA08);
+    let pool = ThreadPool::new(2);
+    for &d in &[1usize, 7, 16] {
+        for &k in &[1usize, 7, 64] {
+            let n = 400;
+            let mut x = synth::gaussian_blobs(&mut rng, n, d, k.clamp(1, 8), 2.0, 0.3);
+            let r0 = x.row(0).to_vec();
+            x.row_mut(1).copy_from_slice(&r0); // duplicate points
+            let idx: Vec<usize> = (0..k).map(|j| (j * 11) % n).collect();
+            let mut c = x.gather_rows(&idx); // centroids on samples
+            if k >= 2 {
+                let c0 = c.row(0).to_vec();
+                c.row_mut(1).copy_from_slice(&c0); // tie distances
+            }
+            let mut engines: Vec<Box<dyn AssignmentEngine>> = vec![
+                Box::new(NaiveEngine::new()),
+                Box::new(HamerlyEngine::new()),
+                Box::new(ElkanEngine::new()),
+                Box::new(YinyangEngine::new()),
+            ];
+            let expect = brute_force_assign(&x, &c);
+            for engine in engines.iter_mut() {
+                let mut out = Vec::new();
+                // Two rounds: cold init plus a warm call after motion.
+                for round in 0..2 {
+                    let (cur, reference) = if round == 0 {
+                        (c.clone(), expect.clone())
+                    } else {
+                        let mut moved = c.clone();
+                        for j in 0..moved.n() {
+                            for t in 0..moved.d() {
+                                moved[(j, t)] += rng.next_range(-0.3, 0.3);
+                            }
+                        }
+                        let reference = brute_force_assign(&x, &moved);
+                        (moved, reference)
+                    };
+                    engine.assign(&x, &cur, &pool, &mut out);
+                    for i in 0..x.n() {
+                        let got = dist_sq(x.row(i), cur.row(out[i] as usize));
+                        let best = dist_sq(x.row(i), cur.row(reference[i] as usize));
+                        assert!(
+                            (got - best).abs() < 1e-9,
+                            "{} d={d} k={k} round {round} sample {i}: {got} vs {best}",
+                            engine.name()
+                        );
+                    }
                 }
             }
         }
