@@ -1,11 +1,13 @@
 //! Side-by-side convergence study: plain Lloyd vs fixed-m Anderson vs the
 //! paper's dynamic-m Anderson on a slow-converging manifold dataset,
-//! printing the energy traces as an ASCII convergence figure.
+//! printing the energy traces as an ASCII convergence figure — followed by
+//! a kernel-precision comparison (`--precision f64` vs `f32`) of the
+//! paper's method on pre-centered data.
 //!
 //! Run: `cargo run --release --example compare_solvers [-- <registry name>]`
 
-use aakm::config::{Acceleration, SolverConfig};
-use aakm::data::dataset_by_name;
+use aakm::config::{Acceleration, Precision, SolverConfig};
+use aakm::data::{self, dataset_by_name};
 use aakm::init::{seed_centroids, InitMethod};
 use aakm::kmeans::Solver;
 use aakm::rng::Pcg32;
@@ -74,4 +76,26 @@ fn main() {
     }
     println!("        {}^ iter {max_iter}", "-".repeat(COLS));
     println!("        L=lloyd  2=fixed m=2  5=fixed m=5  D=dynamic (paper)");
+
+    // ---- Kernel precision comparison (the CLI's --precision option):
+    // the paper's method at f64 vs f32 sample storage, on pre-centered
+    // data (the f32 mode's accuracy companion — distances are
+    // translation-invariant, so centering never changes the clustering).
+    println!("\nkernel precision comparison (dynamic m=2, pre-centered data)");
+    let mut xc = x.clone();
+    let mean = data::center(&mut xc);
+    let mut rng = Pcg32::seed_from_u64(11);
+    let c0c = seed_centroids(&xc, 10, InitMethod::KMeansPlusPlus, &mut rng);
+    for precision in [Precision::F64, Precision::F32] {
+        let cfg = SolverConfig { precision, threads: 1, ..SolverConfig::default() };
+        let mut report = Solver::new(cfg).run(&xc, c0c.clone());
+        data::uncenter(&mut report.centroids, &mean);
+        println!(
+            "  --precision {:<4} {:>4} iters  {:>7.3}s  energy {:.6e}",
+            precision.name(),
+            report.iterations,
+            report.seconds,
+            report.energy
+        );
+    }
 }

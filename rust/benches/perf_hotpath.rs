@@ -2,13 +2,18 @@
 //! EXPERIMENTS.md:
 //!
 //! * Kernel sweep: the seed's scalar per-pair assign loop vs the blocked
-//!   norm-decomposed `DistanceKernel` across a d×K grid (machine-readable
-//!   results land in `BENCH_hotpath.json` so the perf trajectory is
-//!   tracked PR over PR).
+//!   norm-decomposed `DistanceKernel` in its three variants — forced-scalar
+//!   f64, runtime-dispatched SIMD f64, and SIMD f32 sample storage — across
+//!   a d×K grid (machine-readable results land in `BENCH_hotpath.json` so
+//!   the perf trajectory is tracked PR over PR).
 //! * L3 micro: assignment-engine cost per call (cold vs warm vs post-jump),
 //!   the fused update+energy pass vs separate passes, AA solve cost vs m.
 //! * L3 macro: per-iteration overhead of Algorithm 1 vs plain Lloyd.
 //! * PJRT: G-step execution cost per bucket (when artifacts exist).
+//!
+//! Set `PERF_HOTPATH_QUICK=1` for the CI smoke leg: a single small shape
+//! through the three kernel variants, micro/macro/PJRT sections skipped,
+//! `BENCH_hotpath.json` still written (that is what CI asserts on).
 
 mod common;
 
@@ -17,7 +22,8 @@ use aakm::config::{Acceleration, SolverConfig};
 use aakm::data::{synth, DataMatrix};
 use aakm::init::{seed_centroids, InitMethod};
 use aakm::kmeans::Solver;
-use aakm::linalg::dist_sq;
+use aakm::linalg::kernel::simd::detect;
+use aakm::linalg::{dist_sq, DistanceKernel, Precision, SimdLevel};
 use aakm::lloyd::{self, AssignmentEngine, HamerlyEngine, NaiveEngine};
 use aakm::metrics::Stopwatch;
 use aakm::par::ThreadPool;
@@ -29,6 +35,45 @@ fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
         f();
     }
     sw.seconds() * 1000.0 / iters as f64
+}
+
+/// Steady-state cost of one full assign sweep on a configured kernel:
+/// per-iteration `prepare` (centroid norms + f32 centroid mirror) plus the
+/// fused argmin over every sample — exactly what an engine pays per Lloyd
+/// iteration once the sample-side caches are warm.
+fn time_kernel_ms(
+    x: &DataMatrix,
+    c: &DataMatrix,
+    precision: Precision,
+    simd: SimdLevel,
+    pool: &ThreadPool,
+    iters: usize,
+) -> f64 {
+    let mut kern = DistanceKernel::with_options(precision, simd);
+    kern.prepare(x, c, pool); // warm the sample norms / f32 mirror
+    let mut sink = 0u32;
+    let t = time_ms(iters, || {
+        kern.prepare(x, c, pool);
+        kern.argmin2_range(x, c, 0..x.n(), |_, b| sink = sink.wrapping_add(b.best));
+    });
+    std::hint::black_box(sink);
+    t
+}
+
+/// Machine-readable trail for the perf trajectory (CI smoke-checks the
+/// per-variant keys are present).
+fn write_json(n: usize, simd: SimdLevel, quick: bool, sweep_rows: &[String], macro_rows: &[String]) {
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath\",\n  \"n\": {n},\n  \"simd_level\": \"{}\",\n  \
+         \"quick\": {quick},\n  \"kernel_sweep\": [\n{}\n  ],\n  \"macro\": [\n{}\n  ]\n}}\n",
+        simd.name(),
+        sweep_rows.join(",\n"),
+        macro_rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
+    }
 }
 
 /// The seed's naive assignment path, kept verbatim as the scalar baseline
@@ -51,35 +96,58 @@ fn assign_scalar(x: &DataMatrix, c: &DataMatrix, out: &mut Vec<u32>) {
 }
 
 fn main() {
+    let quick = std::env::var("PERF_HOTPATH_QUICK").is_ok();
     let mut rng = Pcg32::seed_from_u64(0x9E8F);
-    let n = 100_000;
+    let n = if quick { 20_000 } else { 100_000 };
     let (d, k) = (8usize, 10usize);
     let x = synth::gaussian_blobs_ex(&mut rng, n, d, k, 2.0, 0.4, 0.05, 2.0);
     let c = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
     let pool = ThreadPool::new(1);
+    let simd = detect();
 
-    // ---- Kernel sweep: scalar (seed) vs blocked norm-decomposed assign.
-    println!("## Kernel sweep — scalar (seed) vs blocked kernel assign (n={n}, 1 thread)\n");
+    // ---- Kernel sweep: seed scalar loop vs the three kernel variants.
+    println!(
+        "## Kernel sweep — seed scalar vs scalar-f64 / simd-f64 / simd-f32 kernels \
+         (n={n}, 1 thread, dispatch={})\n",
+        simd.name()
+    );
+    let shapes: &[(usize, usize)] = if quick {
+        &[(8usize, 64usize)]
+    } else {
+        &[(2usize, 10usize), (8, 10), (8, 64), (16, 10), (32, 64), (100, 10)]
+    };
     let mut sweep_rows: Vec<String> = Vec::new();
-    for &(sd, sk) in &[(2usize, 10usize), (8, 10), (8, 64), (16, 10), (32, 64), (100, 10)] {
+    for &(sd, sk) in shapes {
         let mut srng = Pcg32::seed_from_u64(0xBEEF ^ ((sd * 131 + sk) as u64));
         let sx = synth::gaussian_blobs(&mut srng, n, sd, sk.min(16), 2.0, 0.4);
         let sc = seed_centroids(&sx, sk, InitMethod::Random, &mut srng);
         // Budget ~2e8 pair-flops per timing arm, at least 2 reps.
         let iters = (200_000_000 / (n * sk * sd)).clamp(2, 10);
         let mut out = Vec::new();
-        let t_scalar = time_ms(iters, || assign_scalar(&sx, &sc, &mut out));
-        let mut eng = NaiveEngine::new();
-        let mut out2 = Vec::new();
-        eng.assign(&sx, &sc, &pool, &mut out2); // warm the norm cache
-        let t_kernel = time_ms(iters, || eng.assign(&sx, &sc, &pool, &mut out2));
-        let speedup = t_scalar / t_kernel.max(1e-12);
+        let t_seed = time_ms(iters, || assign_scalar(&sx, &sc, &mut out));
+        let t_scalar =
+            time_kernel_ms(&sx, &sc, Precision::F64, SimdLevel::Scalar, &pool, iters);
+        let t_simd64 = time_kernel_ms(&sx, &sc, Precision::F64, simd, &pool, iters);
+        let t_simd32 = time_kernel_ms(&sx, &sc, Precision::F32, simd, &pool, iters);
+        let su64 = t_scalar / t_simd64.max(1e-12);
+        let su32 = t_simd64 / t_simd32.max(1e-12);
         println!(
-            "d={sd:<4} K={sk:<4} scalar {t_scalar:8.2} ms | kernel {t_kernel:8.2} ms | {speedup:5.2}x"
+            "d={sd:<4} K={sk:<4} seed {t_seed:8.2} ms | scalar-f64 {t_scalar:8.2} ms | \
+             simd-f64 {t_simd64:8.2} ms ({su64:4.2}x) | simd-f32 {t_simd32:8.2} ms ({su32:4.2}x)"
         );
         sweep_rows.push(format!(
-            "    {{\"d\": {sd}, \"k\": {sk}, \"scalar_ms\": {t_scalar:.4}, \"kernel_ms\": {t_kernel:.4}, \"speedup\": {speedup:.3}}}"
+            "    {{\"d\": {sd}, \"k\": {sk}, \"seed_scalar_ms\": {t_seed:.4}, \
+             \"scalar_f64_ms\": {t_scalar:.4}, \"simd_f64_ms\": {t_simd64:.4}, \
+             \"simd_f32_ms\": {t_simd32:.4}, \"simd_f64_speedup\": {su64:.3}, \
+             \"simd_f32_speedup\": {su32:.3}}}"
         ));
+    }
+
+    let mut macro_rows: Vec<String> = Vec::new();
+    if quick {
+        write_json(n, simd, quick, &sweep_rows, &macro_rows);
+        println!("\nquick mode: micro/macro/PJRT sections skipped");
+        return;
     }
 
     println!("\n## L3 micro (n={n}, d={d}, K={k}, 1 thread)\n");
@@ -153,7 +221,6 @@ fn main() {
 
     // Macro: per-iteration cost ratio ours vs lloyd.
     println!("\n## L3 macro — per-iteration overhead vs Lloyd\n");
-    let mut macro_rows: Vec<String> = Vec::new();
     for (name, num) in [("Eb", 8usize), ("Colorment", 11), ("Birch", 13)] {
         let spec = &aakm::data::REGISTRY[num - 1];
         let x = spec.generate_scaled((50_000.0 / spec.n as f64).min(1.0));
@@ -185,16 +252,7 @@ fn main() {
         ));
     }
 
-    // Machine-readable trail for the perf trajectory.
-    let json = format!(
-        "{{\n  \"bench\": \"perf_hotpath\",\n  \"n\": {n},\n  \"kernel_sweep\": [\n{}\n  ],\n  \"macro\": [\n{}\n  ]\n}}\n",
-        sweep_rows.join(",\n"),
-        macro_rows.join(",\n"),
-    );
-    match std::fs::write("BENCH_hotpath.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
-        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
-    }
+    write_json(n, simd, quick, &sweep_rows, &macro_rows);
 
     // PJRT G-step cost per bucket.
     println!("\n## PJRT G-step (AOT artifact) cost\n");

@@ -11,7 +11,7 @@ pub struct Args {
 }
 
 /// Boolean flags the CLI understands (everything else expects a value).
-const BOOL_FLAGS: &[&str] = &["compare", "trace", "verbose", "quiet"];
+const BOOL_FLAGS: &[&str] = &["compare", "trace", "verbose", "quiet", "center"];
 
 impl Args {
     /// Parse an argv slice (after the subcommand).

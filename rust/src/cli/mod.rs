@@ -33,6 +33,12 @@ COMMANDS:
              --init <random|k-means++|afk-mc2|bf|clarans> (default k-means++)
              --engine <naive|hamerly|elkan|yinyang|pjrt>  (default hamerly)
              --accel <none|fixed:M|dynamic:M>             (default dynamic:2)
+             --precision <f64|f32>                        (default f64; f32
+               stores samples in single precision for a ~2x faster assign
+               sweep and auto-enables pre-centering)
+             --center     pre-center data (subtract the per-dimension mean;
+               reported centroids are mapped back — always safe, distances
+               are translation-invariant)
              --seed <u64>  --scale <0..1>  --threads <n>
              --config <file.toml>   --compare   --trace
     datagen  Write a registry dataset to disk
@@ -120,6 +126,10 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("threads") {
         cfg.threads = v.parse().context("--threads")?;
     }
+    if let Some(v) = args.get("precision") {
+        cfg.precision =
+            crate::config::Precision::parse(v).with_context(|| format!("bad --precision {v}"))?;
+    }
     Ok(cfg)
 }
 
@@ -137,21 +147,32 @@ fn build_solver(cfg: &ExperimentConfig, trace: bool, artifacts: &str) -> Result<
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = experiment_from_args(args)?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let x = load_dataset(&cfg.dataset, cfg.scale)?;
+    let mut x = load_dataset(&cfg.dataset, cfg.scale)?;
+    // Pre-centering is the f32 mode's accuracy companion (see
+    // linalg::kernel): on by default there, opt-in via --center otherwise.
+    // Distances are translation-invariant, so the clustering is unchanged;
+    // reported centroids are mapped back below.
+    let centering = args.flag("center") || cfg.precision == crate::config::Precision::F32;
+    let mean = if centering { Some(data::center(&mut x)) } else { None };
     println!(
-        "dataset {} (n={}, d={}), k={}, init={}, engine={}, seed={}",
+        "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}, seed={}",
         cfg.dataset,
         x.n(),
         x.d(),
         cfg.k,
         cfg.init.name(),
         cfg.engine.name(),
+        cfg.precision.name(),
+        if centering { ", pre-centered" } else { "" },
         cfg.seed
     );
     let mut rng = Pcg32::seed_from_u64(cfg.seed);
     let c0 = seed_centroids(&x, cfg.k, cfg.init, &mut rng);
     let trace = args.flag("trace");
-    let report = build_solver(&cfg, trace, artifacts)?.run(&x, c0.clone());
+    let mut report = build_solver(&cfg, trace, artifacts)?.run(&x, c0.clone());
+    if let Some(mean) = &mean {
+        data::uncenter(&mut report.centroids, mean);
+    }
     println!("ours ({:?}): {}", cfg.accel, report.summary());
     println!("  phases: {}", report.phases.summary());
     if trace {
@@ -290,6 +311,23 @@ mod tests {
             "--compare"
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn run_f32_precision_and_centering() {
+        // The f32 sample-storage path end-to-end (auto-centers), plus the
+        // explicit --center flag on the f64 path.
+        assert!(dispatch(&[
+            "run", "--dataset", "HTRU2", "--scale", "0.01", "--k", "4", "--threads", "1",
+            "--precision", "f32"
+        ])
+        .is_ok());
+        assert!(dispatch(&[
+            "run", "--dataset", "HTRU2", "--scale", "0.01", "--k", "4", "--threads", "1",
+            "--center"
+        ])
+        .is_ok());
+        assert!(dispatch(&["run", "--precision", "f16"]).is_err());
     }
 
     #[test]

@@ -10,6 +10,10 @@ mod toml_lite;
 
 pub use toml_lite::{ConfigDoc, ConfigError, Value};
 
+/// Storage precision of the assignment kernel (defined next to the kernel
+/// in [`crate::linalg::kernel`]; re-exported here as the config surface).
+pub use crate::linalg::kernel::Precision;
+
 use crate::init::InitMethod;
 
 /// Which assignment engine backs the solver.
@@ -83,6 +87,11 @@ pub struct SolverConfig {
     pub threads: usize,
     /// Record per-iteration energy / m traces (small overhead).
     pub record_trace: bool,
+    /// Assignment-kernel sample storage precision. `F32` halves the assign
+    /// sweep's memory traffic and doubles its FMA lanes; centroids, bounds
+    /// and energies stay `f64`. Pair with [`crate::data::center`] — see the
+    /// accuracy notes in [`crate::linalg::kernel`].
+    pub precision: Precision,
 }
 
 impl Default for SolverConfig {
@@ -96,6 +105,7 @@ impl Default for SolverConfig {
             max_iters: 5000,
             threads: 0,
             record_trace: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -127,6 +137,9 @@ pub struct ExperimentConfig {
     pub scale: f64,
     /// Worker threads for the assignment step (0 = host-sized).
     pub threads: usize,
+    /// Assignment-kernel sample storage precision (`f64` default; `f32`
+    /// trades ~1e-7-relative distance accuracy for 2× sweep bandwidth).
+    pub precision: Precision,
 }
 
 impl Default for ExperimentConfig {
@@ -144,6 +157,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             scale: 1.0,
             threads: 0,
+            precision: Precision::F64,
         }
     }
 }
@@ -197,6 +211,11 @@ impl ExperimentConfig {
         if let Some(v) = sect("threads") {
             cfg.threads = v.as_int()? as usize;
         }
+        if let Some(v) = sect("precision") {
+            let s = v.as_str()?;
+            cfg.precision = Precision::parse(s)
+                .ok_or_else(|| ConfigError::new(format!("unknown precision '{s}' (f64|f32)")))?;
+        }
         Ok(cfg)
     }
 }
@@ -213,6 +232,7 @@ impl ExperimentConfig {
             max_iters: self.max_iters,
             threads: self.threads,
             record_trace: false,
+            precision: self.precision,
         }
     }
 }
@@ -277,6 +297,17 @@ mod tests {
         assert_eq!(cfg.epsilon2, 0.5);
         assert_eq!(cfg.m_max, 30);
         assert_eq!(cfg.accel, Acceleration::DynamicM(2));
+        assert_eq!(cfg.precision, Precision::F64);
+    }
+
+    #[test]
+    fn precision_from_doc_and_projection() {
+        let doc = ConfigDoc::parse("precision = \"f32\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(cfg.solver_config().precision, Precision::F32);
+        let bad = ConfigDoc::parse("precision = \"f16\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 
     #[test]

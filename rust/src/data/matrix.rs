@@ -1,24 +1,66 @@
 //! Row-major `f64` sample matrix — the core container for datasets and
 //! centroid sets alike (a centroid set is just a `K×d` matrix).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global identity counter: every matrix *construction* (including clones)
+/// draws a fresh identity, so `(ident, version, n, d)` uniquely identifies
+/// matrix contents — unlike a buffer pointer, an identity is never reused
+/// after free/realloc, which is what makes the stamp safe as a norm-cache
+/// key (see [`crate::linalg::DistanceKernel`]). Mutations only bump the
+/// per-matrix `version` (a plain increment — `&mut self` proves exclusive
+/// access), keeping element-wise write loops free of atomic traffic.
+static IDENT: AtomicU64 = AtomicU64::new(1);
+
+fn next_ident() -> u64 {
+    IDENT.fetch_add(1, Ordering::Relaxed)
+}
+
 /// Row-major matrix of `n` samples × `d` features.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct DataMatrix {
     data: Vec<f64>,
     n: usize,
     d: usize,
+    /// Globally unique construction identity (never copied by `clone`).
+    ident: u64,
+    /// Mutation count; bumped by every `&mut` accessor.
+    version: u64,
+}
+
+/// Clones take a fresh identity: two clones that diverge through later
+/// mutation must never share a content stamp, which copied
+/// `(ident, version)` pairs could.
+impl Clone for DataMatrix {
+    fn clone(&self) -> Self {
+        Self {
+            data: self.data.clone(),
+            n: self.n,
+            d: self.d,
+            ident: next_ident(),
+            version: 0,
+        }
+    }
+}
+
+/// Equality is by shape and contents; the content stamp is identity
+/// metadata and deliberately excluded.
+impl PartialEq for DataMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n && self.d == other.d && self.data == other.data
+    }
 }
 
 impl DataMatrix {
     /// Zero-filled `n × d` matrix.
     pub fn zeros(n: usize, d: usize) -> Self {
-        Self { data: vec![0.0; n * d], n, d }
+        Self { data: vec![0.0; n * d], n, d, ident: next_ident(), version: 0 }
     }
 
     /// Take ownership of a row-major buffer.
     pub fn from_vec(data: Vec<f64>, n: usize, d: usize) -> Self {
         assert_eq!(data.len(), n * d, "buffer is {} not {}×{}", data.len(), n, d);
-        Self { data, n, d }
+        Self { data, n, d, ident: next_ident(), version: 0 }
     }
 
     /// Build from row slices.
@@ -30,7 +72,16 @@ impl DataMatrix {
             assert_eq!(r.len(), d, "ragged rows");
             data.extend_from_slice(r);
         }
-        Self { data, n: rows.len(), d }
+        Self { data, n: rows.len(), d, ident: next_ident(), version: 0 }
+    }
+
+    /// Content stamp `(ident, version)`. Two reads returning the same pair
+    /// guarantee the contents did not change in between (every mutable
+    /// access bumps `version`), and no two differently-built matrices —
+    /// including clones that later diverge — ever share a stamp.
+    #[inline]
+    pub fn generation(&self) -> (u64, u64) {
+        (self.ident, self.version)
     }
 
     /// Number of samples (rows).
@@ -54,6 +105,7 @@ impl DataMatrix {
     /// Mutably borrow row `i`.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        self.version += 1;
         &mut self.data[i * self.d..(i + 1) * self.d]
     }
 
@@ -66,6 +118,7 @@ impl DataMatrix {
     /// Mutable backing buffer (row-major).
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        self.version += 1;
         &mut self.data
     }
 
@@ -89,6 +142,7 @@ impl DataMatrix {
         assert_eq!(self.d, other.d);
         self.data.extend_from_slice(&other.data);
         self.n += other.n;
+        self.version += 1;
     }
 
     /// Per-dimension bounding box `(min, max)` of all samples.
@@ -108,9 +162,23 @@ impl DataMatrix {
         b
     }
 
-    /// Convert to `f32` (row-major) — the PJRT artifacts run in `f32`.
+    /// Convert to `f32` (row-major). The single `f64→f32` narrowing point
+    /// in the crate: both the PJRT padding path and the distance kernel's
+    /// f32 sample-storage mirror go through here / [`DataMatrix::write_f32_into`].
     pub fn to_f32(&self) -> Vec<f32> {
-        self.data.iter().map(|&v| v as f32).collect()
+        let mut out = vec![0.0f32; self.data.len()];
+        self.write_f32_into(&mut out);
+        out
+    }
+
+    /// Write the row-major `f32` narrowing of this matrix into `out`
+    /// (which must hold exactly `n·d` values). Allocation-free variant of
+    /// [`DataMatrix::to_f32`] for callers that own padded or reused buffers.
+    pub fn write_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len(), "f32 destination shape mismatch");
+        for (o, &v) in out.iter_mut().zip(&self.data) {
+            *o = v as f32;
+        }
     }
 
     /// Frobenius-norm distance to another same-shape matrix.
@@ -134,6 +202,7 @@ impl std::ops::IndexMut<(usize, usize)> for DataMatrix {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.n && j < self.d);
+        self.version += 1;
         &mut self.data[i * self.d + j]
     }
 }
@@ -183,5 +252,84 @@ mod tests {
     fn frob_dist_zero_for_identical() {
         let a = DataMatrix::from_rows(&[&[1.0, 2.0]]);
         assert_eq!(a.frob_dist(&a.clone()), 0.0);
+    }
+
+    #[test]
+    fn generation_bumps_on_every_mut_accessor() {
+        let mut m = DataMatrix::zeros(2, 2);
+        let g0 = m.generation();
+        m.row_mut(0)[0] = 1.0;
+        let g1 = m.generation();
+        assert_ne!(g1, g0, "row_mut must bump the stamp");
+        m.as_mut_slice()[1] = 2.0;
+        let g2 = m.generation();
+        assert_ne!(g2, g1, "as_mut_slice must bump the stamp");
+        m[(1, 1)] = 3.0;
+        let g3 = m.generation();
+        assert_ne!(g3, g2, "index_mut must bump the stamp");
+        m.append(&DataMatrix::zeros(1, 2));
+        assert_ne!(m.generation(), g3, "append must bump the stamp");
+        // Read-only access leaves the stamp alone.
+        let g4 = m.generation();
+        let _ = m.row(0);
+        let _ = m.as_slice();
+        let _ = m[(0, 0)];
+        assert_eq!(m.generation(), g4);
+    }
+
+    #[test]
+    fn generations_are_unique_across_matrices() {
+        // Two freshly built matrices never share a stamp, even with the
+        // same shape and contents — the property the norm-cache key needs
+        // that a buffer pointer cannot provide after free/realloc.
+        let a = DataMatrix::zeros(3, 2);
+        let b = DataMatrix::zeros(3, 2);
+        assert_ne!(a.generation(), b.generation());
+        assert_eq!(a, b, "equality still compares contents only");
+    }
+
+    #[test]
+    fn diverging_clones_never_share_a_stamp() {
+        // A clone takes a fresh identity, so mutating original and clone
+        // the same number of times still yields distinct stamps (a copied
+        // identity with per-matrix version counters would collide here).
+        let mut a = DataMatrix::zeros(2, 2);
+        a.row_mut(0)[0] = 1.0;
+        let mut b = a.clone();
+        assert_ne!(a.generation(), b.generation());
+        a.row_mut(0)[0] = 2.0;
+        b.row_mut(0)[0] = 3.0;
+        assert_ne!(a.generation(), b.generation());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn to_f32_round_trip_accuracy() {
+        // Values representable in f32 survive the round trip exactly; the
+        // rest stay within half-ULP relative error (~6e-8).
+        let exact = DataMatrix::from_rows(&[&[1.0, -2.5, 0.0], &[1024.0, 0.125, -0.75]]);
+        for (&w, &v) in exact.to_f32().iter().zip(exact.as_slice()) {
+            assert_eq!(w as f64, v);
+        }
+        let vals: Vec<f64> = (0..64).map(|i| (i as f64 * 0.7130711).sin() * 1e3).collect();
+        let m = DataMatrix::from_vec(vals, 8, 8);
+        let narrowed = m.to_f32();
+        assert_eq!(narrowed.len(), 64);
+        for (&w, &v) in narrowed.iter().zip(m.as_slice()) {
+            let rel = ((w as f64) - v).abs() / v.abs().max(1e-30);
+            assert!(rel < 6.0e-8, "{v} -> {w}: rel err {rel}");
+        }
+        // write_f32_into is the same conversion, no allocation.
+        let mut buf = vec![0.0f32; 64];
+        m.write_f32_into(&mut buf);
+        assert_eq!(buf, narrowed);
+    }
+
+    #[test]
+    #[should_panic(expected = "f32 destination shape mismatch")]
+    fn write_f32_into_checks_shape() {
+        let m = DataMatrix::zeros(2, 2);
+        let mut buf = vec![0.0f32; 3];
+        m.write_f32_into(&mut buf);
     }
 }

@@ -42,6 +42,54 @@ pub fn standardize(x: &mut DataMatrix) -> Vec<(f64, f64)> {
     stats
 }
 
+/// Pre-centering transform: subtract the per-dimension mean from every
+/// sample, returning the mean vector so callers can [`uncenter`] reported
+/// centroids afterwards.
+///
+/// Squared Euclidean distances — and therefore assignments, energies and
+/// the whole Lloyd/Anderson iteration — are translation-invariant, so
+/// centering never changes the clustering. What it buys is numerical
+/// headroom: the norm-decomposed kernel's cancellation error scales with
+/// `‖x‖² + ‖c‖²` (see [`crate::linalg::kernel`]), and centering minimizes
+/// the sample norms. It is the recommended (and CLI-default) companion of
+/// the `f32` sample-storage mode, where the error budget is `f32`-sized.
+pub fn center(x: &mut DataMatrix) -> Vec<f64> {
+    let (n, d) = (x.n(), x.d());
+    let mut mean = vec![0.0f64; d];
+    if n == 0 {
+        return mean;
+    }
+    for i in 0..n {
+        let row = x.row(i);
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    let inv = 1.0 / n as f64;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for (v, &m) in row.iter_mut().zip(&mean) {
+            *v -= m;
+        }
+    }
+    mean
+}
+
+/// Undo [`center`]: add the per-dimension mean back to every row (used to
+/// report centroids in the original coordinate frame).
+pub fn uncenter(c: &mut DataMatrix, mean: &[f64]) {
+    assert_eq!(c.d(), mean.len(), "mean dimension mismatch");
+    for i in 0..c.n() {
+        let row = c.row_mut(i);
+        for (v, &m) in row.iter_mut().zip(mean) {
+            *v += m;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,5 +114,45 @@ mod tests {
         for i in 0..3 {
             assert_eq!(x[(i, 0)], 0.0);
         }
+    }
+
+    #[test]
+    fn center_uncenter_round_trip() {
+        let orig = DataMatrix::from_vec(vec![1.0, 10.0, 3.0, 30.0, 5.0, 20.0], 3, 2);
+        let mut x = orig.clone();
+        let mean = center(&mut x);
+        assert!((mean[0] - 3.0).abs() < 1e-12);
+        assert!((mean[1] - 20.0).abs() < 1e-12);
+        for j in 0..2 {
+            let col: f64 = (0..3).map(|i| x[(i, j)]).sum();
+            assert!(col.abs() < 1e-12, "column {j} not centered");
+        }
+        uncenter(&mut x, &mean);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert!((x[(i, j)] - orig[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn center_preserves_pairwise_distances() {
+        let a = DataMatrix::from_rows(&[&[100.0, -7.0], &[103.0, -3.0], &[90.0, 2.0]]);
+        let mut b = a.clone();
+        center(&mut b);
+        for i in 0..a.n() {
+            for j in 0..a.n() {
+                let da = crate::linalg::dist_sq(a.row(i), a.row(j));
+                let db = crate::linalg::dist_sq(b.row(i), b.row(j));
+                assert!((da - db).abs() < 1e-9, "pair ({i},{j}): {da} vs {db}");
+            }
+        }
+    }
+
+    #[test]
+    fn center_empty_matrix_is_noop() {
+        let mut x = DataMatrix::zeros(0, 3);
+        let mean = center(&mut x);
+        assert_eq!(mean, vec![0.0; 3]);
     }
 }

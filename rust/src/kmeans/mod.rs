@@ -30,7 +30,7 @@ impl Solver {
     /// Build a solver with the engine named in the config (panics on
     /// `EngineKind::Pjrt`, which needs artifacts — use [`Solver::with_engine`]).
     pub fn new(cfg: SolverConfig) -> Self {
-        let engine = lloyd::make_engine(cfg.engine);
+        let engine = lloyd::make_engine_with(cfg.engine, cfg.precision);
         Self::with_engine(cfg, engine)
     }
 
@@ -386,6 +386,40 @@ mod tests {
             assert!(
                 (e - energies[0]).abs() / energies[0] < 1e-9,
                 "engines disagree: {energies:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_precision_reaches_f64_quality_on_centered_data() {
+        use crate::config::Precision;
+        // The f32 sample-storage mode on pre-centered data (the pipeline
+        // the CLI sets up) must land at the same clustering quality as the
+        // f64 run: energies and convergence behavior agree to far better
+        // than the cluster-separation scale.
+        let (mut x, _) = problem(12, 1200, 6, 8);
+        let mean = crate::data::center(&mut x);
+        assert_eq!(mean.len(), 6);
+        let mut rng = Pcg32::seed_from_u64(21);
+        let c0 = seed_centroids(&x, 8, InitMethod::KMeansPlusPlus, &mut rng);
+        for engine in [EngineKind::Naive, EngineKind::Hamerly] {
+            let f64_run = Solver::new(SolverConfig { engine, ..base_cfg() }).run(&x, c0.clone());
+            let f32_run = Solver::new(SolverConfig {
+                engine,
+                precision: Precision::F32,
+                ..base_cfg()
+            })
+            .run(&x, c0.clone());
+            assert!(f32_run.converged, "{}: f32 run must converge", engine.name());
+            // Same 5% quality band the f64 accel-vs-lloyd test uses: both
+            // runs must land at comparable local minima.
+            let rel = (f32_run.energy - f64_run.energy).abs() / f64_run.energy.max(1e-12);
+            assert!(
+                rel < 5e-2,
+                "{}: f32 energy {} vs f64 {} (rel {rel})",
+                engine.name(),
+                f32_run.energy,
+                f64_run.energy
             );
         }
     }

@@ -1,0 +1,802 @@
+//! Blocked, norm-decomposed distance kernels — the compute core every
+//! assignment engine runs on. Precision-generic since PR 2: the same tile
+//! sweep runs on `f64` storage or on an `f32` sample mirror, over explicit
+//! AVX2+FMA lanes or the portable autovectorized fallback, selected once
+//! per kernel at construction.
+//!
+//! # Decomposition
+//!
+//! The squared Euclidean distance is evaluated as
+//!
+//! ```text
+//! ‖x − c‖² = ‖x‖² − 2·x·c + ‖c‖²
+//! ```
+//!
+//! with `‖x‖²` cached once per dataset (samples never move during a run)
+//! and `‖c‖²` refreshed once per centroid motion (i.e. per [`DistanceKernel::prepare`]
+//! call). That turns the inner loop from 3 flops/element (subtract, square,
+//! add) into a pure 2 flops/element dot product, which the register-blocked
+//! micro-kernel evaluates for four centroids at a time so each sample
+//! element is loaded once per block instead of once per centroid.
+//!
+//! # Layers
+//!
+//! * [`scalar`] defines the [`Scalar`] trait (`f64` / `f32` storage) and the
+//!   portable 4-chain micro-kernels the auto-vectorizer handles well.
+//! * [`simd`] holds the explicit `std::arch` AVX2+FMA micro-kernels
+//!   (`_mm256_fmadd_pd` 4-wide / `_mm256_fmadd_ps` 8-wide) and the one-shot
+//!   [`simd::detect`] runtime dispatch; on non-x86_64 targets it degrades to
+//!   the enum plus a detector that always answers [`SimdLevel::Scalar`].
+//! * This module owns the caches and the blocked sweep, generic over both.
+//!
+//! # Blocking
+//!
+//! [`DistanceKernel::argmin2_range`] sweeps cache-sized *sample tiles* ×
+//! *centroid blocks*: the centroid block (sized to stay resident in L1) is
+//! reused across every sample of the tile, and within a block the 4-wide
+//! micro-kernel keeps four independent accumulator chains alive. The sweep
+//! is *fused* with the argmin: it returns both the best and second-best
+//! distance per sample in one pass, which is exactly what bound-based
+//! engines (Hamerly, Elkan, Yinyang) need to refresh their upper *and*
+//! lower bounds from a single sweep.
+//!
+//! # Accuracy tradeoff
+//!
+//! The norm-decomposed form loses bits to cancellation when `‖x‖² + ‖c‖²`
+//! is much larger than the true distance (a point sitting almost on a
+//! centroid): the absolute error is `O(ε · (‖x‖² + ‖c‖²))`, versus
+//! `O(ε · ‖x − c‖²)` for the subtract-square form.
+//!
+//! * **f64 storage** (`ε ≈ 2.2e−16`): for data with coordinates up to ~1e4
+//!   the error stays below ~1e-12, far inside the crate-wide `1e-9`
+//!   tolerance. The AVX2 path changes only the summation *order* (4-wide
+//!   FMA trees), never the precision — scalar-f64 and simd-f64 agree to
+//!   the same `1e-9` tolerance, which the parity property test pins down.
+//! * **f32 sample storage** (`ε ≈ 1.2e−7`): samples are mirrored once into
+//!   an `f32` buffer for 2× memory bandwidth and 8-wide FMA lanes, while
+//!   centroids, norms, bounds and energies stay `f64` (the mirror of the
+//!   centroid block is refreshed per [`DistanceKernel::prepare`], an
+//!   O(K·d) cost). Distances now carry `O(ε₃₂ · (‖x‖² + ‖c‖²))` error, so
+//!   the mode is meant to be paired with the [`crate::data::center`]
+//!   pre-centering transform, which minimizes sample norms and keeps the
+//!   error near `ε₃₂ ·` (cluster spread)² — ties may resolve differently,
+//!   but every returned distance stays within that envelope of the exact
+//!   one. The CLI applies pre-centering automatically in f32 mode.
+//!
+//! Results are clamped at zero (the decomposition can go slightly
+//! negative), and downstream comparisons must use *distance* equality,
+//! never assignment-id equality — ties can legitimately resolve either way.
+//!
+//! # Cache identity
+//!
+//! Sample norms (and the f32 mirror) are keyed on
+//! `(DataMatrix::generation, n, d)`. The stamp is an
+//! `(identity, mutation-count)` pair — identities are globally unique and
+//! never copied by `clone`, and every `&mut` accessor bumps the count — so,
+//! unlike the buffer pointer this cache used to key on, a
+//! freed-and-reallocated matrix at the same address, or an in-place
+//! mutation, can never alias a stale cache entry.
+//! [`DistanceKernel::invalidate`] remains as a belt-and-braces reset used
+//! by the engines.
+
+pub mod scalar;
+pub mod simd;
+
+pub use scalar::Scalar;
+pub use simd::SimdLevel;
+
+use crate::data::DataMatrix;
+use crate::par::{SyncSliceMut, ThreadPool};
+use std::ops::Range;
+
+/// Samples per tile of the blocked sweep. A tile's running best/second
+/// state lives in stack arrays of this size.
+const SAMPLE_TILE: usize = 32;
+/// Centroids per micro-kernel pass (the register-blocking width).
+const CENTROID_BLOCK: usize = 4;
+/// Target bytes of centroid data kept hot per block sweep (~half of a
+/// typical 32 KiB L1d).
+const CENTROID_TILE_BYTES: usize = 16 * 1024;
+
+/// Storage precision of a [`DistanceKernel`]'s sample data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-precision `f64` storage (the default).
+    #[default]
+    F64,
+    /// `f32` sample-storage mode: samples mirrored once into `f32` for 2×
+    /// assign-sweep bandwidth; centroids, bounds and energy stay `f64`.
+    F32,
+}
+
+impl Precision {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Self::F64),
+            "f32" | "single" | "float" => Some(Self::F32),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F64 => "f64",
+            Self::F32 => "f32",
+        }
+    }
+
+    /// Bytes per stored sample element (drives the L1 tile sizing).
+    fn elem_bytes(&self) -> usize {
+        match self {
+            Self::F64 => 8,
+            Self::F32 => 4,
+        }
+    }
+}
+
+/// Result of the fused argmin sweep for one sample: squared distances to
+/// the best and second-best centroid. `second_d` is `+∞` when `K == 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct Best2 {
+    /// Index of the nearest centroid.
+    pub best: u32,
+    /// Squared distance to the nearest centroid (clamped ≥ 0).
+    pub best_d: f64,
+    /// Squared distance to the second-nearest centroid (clamped ≥ 0).
+    pub second_d: f64,
+}
+
+/// Per-engine cache of the norm decomposition: sample norms (plus, in f32
+/// mode, the sample mirror) are computed once per dataset — keyed on the
+/// matrix generation stamp and shape, dropped by
+/// [`DistanceKernel::invalidate`] — and centroid norms once per
+/// [`DistanceKernel::prepare`] call, i.e. once per centroid motion.
+#[derive(Debug, Clone)]
+pub struct DistanceKernel {
+    precision: Precision,
+    simd: SimdLevel,
+    /// `(generation stamp, n, d)` of the sample matrix the cached norms
+    /// (and the f32 mirror) belong to. The stamp is never reused, so a
+    /// matching key proves the contents are the ones we prepared for.
+    x_key: Option<((u64, u64), usize, usize)>,
+    x_norms: Vec<f64>,
+    c_norms: Vec<f64>,
+    /// f32 sample mirror (F32 precision only; cached under `x_key`).
+    x32: Vec<f32>,
+    /// f32 centroid mirror (F32 precision only; refreshed per `prepare`).
+    c32: Vec<f32>,
+}
+
+impl Default for DistanceKernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DistanceKernel {
+    /// Fresh `f64` kernel with runtime-detected SIMD dispatch.
+    pub fn new() -> Self {
+        Self::with_precision(Precision::F64)
+    }
+
+    /// Fresh kernel at the given storage precision, runtime-detected SIMD.
+    pub fn with_precision(precision: Precision) -> Self {
+        Self::with_options(precision, simd::detect())
+    }
+
+    /// Fully explicit construction — benches and tests use this to force
+    /// the portable fallback. A requested [`SimdLevel::Avx2Fma`] is
+    /// silently downgraded when the running CPU lacks AVX2+FMA, so a
+    /// constructed kernel is always safe to run.
+    pub fn with_options(precision: Precision, simd: SimdLevel) -> Self {
+        let simd = match simd {
+            SimdLevel::Avx2Fma if simd::detect() != SimdLevel::Avx2Fma => SimdLevel::Scalar,
+            other => other,
+        };
+        Self {
+            precision,
+            simd,
+            x_key: None,
+            x_norms: Vec::new(),
+            c_norms: Vec::new(),
+            x32: Vec::new(),
+            c32: Vec::new(),
+        }
+    }
+
+    /// Storage precision this kernel runs at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// SIMD dispatch level resolved at construction.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Refresh the cached norms for `(x, c)`. Sample norms — and the f32
+    /// sample mirror in F32 mode — are recomputed only when `x` changed
+    /// generation or shape (one parallel O(N·d) pass); centroid norms (and
+    /// the f32 centroid mirror) are recomputed every call (O(K·d),
+    /// negligible next to the sweep).
+    pub fn prepare(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
+        let key = (x.generation(), x.n(), x.d());
+        if self.x_key != Some(key) {
+            let d = x.d();
+            self.x_norms.clear();
+            self.x_norms.resize(x.n(), 0.0);
+            match self.precision {
+                Precision::F64 => {
+                    let simd = self.simd;
+                    let norms = SyncSliceMut::new(&mut self.x_norms);
+                    pool.parallel_for(x.n(), 512, |range| {
+                        for i in range {
+                            let row = x.row(i);
+                            *norms.at(i) = f64::dot(simd, row, row);
+                        }
+                    });
+                }
+                Precision::F32 => {
+                    self.x32.clear();
+                    self.x32.resize(x.n() * d, 0.0);
+                    x.write_f32_into(&mut self.x32);
+                    let simd = self.simd;
+                    let x32: &[f32] = &self.x32;
+                    let norms = SyncSliceMut::new(&mut self.x_norms);
+                    pool.parallel_for(x.n(), 512, |range| {
+                        for i in range {
+                            let row = &x32[i * d..(i + 1) * d];
+                            *norms.at(i) = f32::dot(simd, row, row);
+                        }
+                    });
+                }
+            }
+            self.x_key = Some(key);
+        }
+        self.c_norms.clear();
+        self.c_norms.resize(c.n(), 0.0);
+        match self.precision {
+            Precision::F64 => {
+                for j in 0..c.n() {
+                    let row = c.row(j);
+                    self.c_norms[j] = f64::dot(self.simd, row, row);
+                }
+            }
+            Precision::F32 => {
+                let d = c.d();
+                self.c32.clear();
+                self.c32.resize(c.n() * d, 0.0);
+                c.write_f32_into(&mut self.c32);
+                for j in 0..c.n() {
+                    let row = &self.c32[j * d..(j + 1) * d];
+                    self.c_norms[j] = f32::dot(self.simd, row, row);
+                }
+            }
+        }
+    }
+
+    /// Drop the cached sample norms (engines call this from `reset`).
+    pub fn invalidate(&mut self) {
+        self.x_key = None;
+    }
+
+    /// Centroid rows per cache tile: as many as fit the L1 budget, rounded
+    /// to the register-block width, never below one block.
+    fn centroid_tile(&self, d: usize) -> usize {
+        let rows = CENTROID_TILE_BYTES / (self.precision.elem_bytes() * d.max(1));
+        (rows.max(CENTROID_BLOCK) / CENTROID_BLOCK) * CENTROID_BLOCK
+    }
+
+    /// Fused (best, second-best) argmin over all centroids for every
+    /// sample in `rows`, evaluated in sample tiles × centroid blocks.
+    /// `emit(i, best2)` is called once per sample in ascending order.
+    ///
+    /// Requires a matching [`DistanceKernel::prepare`] call. Safe to call
+    /// concurrently from pool lanes over disjoint ranges (`&self` only).
+    pub fn argmin2_range(
+        &self,
+        x: &DataMatrix,
+        c: &DataMatrix,
+        rows: Range<usize>,
+        mut emit: impl FnMut(usize, Best2),
+    ) {
+        debug_assert_eq!(self.x_norms.len(), x.n(), "prepare() not called for x");
+        debug_assert_eq!(self.c_norms.len(), c.n(), "prepare() not called for c");
+        match self.precision {
+            Precision::F64 => self.argmin2_range_t::<f64>(
+                x.as_slice(),
+                c.as_slice(),
+                x.d(),
+                c.n(),
+                rows,
+                &mut emit,
+            ),
+            Precision::F32 => {
+                debug_assert_eq!(self.x32.len(), x.n() * x.d(), "f32 mirror stale for x");
+                debug_assert_eq!(self.c32.len(), c.n() * c.d(), "f32 mirror stale for c");
+                self.argmin2_range_t::<f32>(&self.x32, &self.c32, x.d(), c.n(), rows, &mut emit)
+            }
+        }
+    }
+
+    /// The precision-generic tile sweep behind [`DistanceKernel::argmin2_range`].
+    fn argmin2_range_t<T: Scalar>(
+        &self,
+        xdata: &[T],
+        cdata: &[T],
+        d: usize,
+        k: usize,
+        rows: Range<usize>,
+        emit: &mut dyn FnMut(usize, Best2),
+    ) {
+        let ctile = self.centroid_tile(d);
+        let mut start = rows.start;
+        while start < rows.end {
+            let tile = (rows.end - start).min(SAMPLE_TILE);
+            // Running partials p = ‖c‖² − 2·x·c; the constant ‖x‖² is added
+            // at emit time (it does not affect the argmin).
+            let mut best = [0u32; SAMPLE_TILE];
+            let mut best_p = [f64::INFINITY; SAMPLE_TILE];
+            let mut second_p = [f64::INFINITY; SAMPLE_TILE];
+            let mut cb = 0;
+            while cb < k {
+                let cend = (cb + ctile).min(k);
+                for ti in 0..tile {
+                    let i = start + ti;
+                    scan_block(
+                        self.simd,
+                        &xdata[i * d..(i + 1) * d],
+                        cdata,
+                        d,
+                        &self.c_norms,
+                        cb,
+                        cend,
+                        &mut best[ti],
+                        &mut best_p[ti],
+                        &mut second_p[ti],
+                    );
+                }
+                cb = cend;
+            }
+            for ti in 0..tile {
+                let xn = self.x_norms[start + ti];
+                emit(
+                    start + ti,
+                    Best2 {
+                        best: best[ti],
+                        best_d: (xn + best_p[ti]).max(0.0),
+                        second_d: (xn + second_p[ti]).max(0.0),
+                    },
+                );
+            }
+            start += tile;
+        }
+    }
+
+    /// Fused best/second-best for a single sample (the bound engines' full
+    /// re-scan path).
+    pub fn argmin2_row(&self, x: &DataMatrix, c: &DataMatrix, i: usize) -> Best2 {
+        let mut out = Best2 { best: 0, best_d: f64::INFINITY, second_d: f64::INFINITY };
+        self.argmin2_range(x, c, i..i + 1, |_, b| out = b);
+        out
+    }
+
+    /// All `K` squared distances for sample `i` written into `out`
+    /// (the dense initialization path of Elkan / Yinyang).
+    pub fn dists_row(&self, x: &DataMatrix, c: &DataMatrix, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), c.n());
+        debug_assert_eq!(self.c_norms.len(), c.n(), "prepare() not called for c");
+        match self.precision {
+            Precision::F64 => {
+                self.dists_row_t::<f64>(x.as_slice(), c.as_slice(), x.d(), c.n(), i, out)
+            }
+            Precision::F32 => self.dists_row_t::<f32>(&self.x32, &self.c32, x.d(), c.n(), i, out),
+        }
+    }
+
+    fn dists_row_t<T: Scalar>(
+        &self,
+        xdata: &[T],
+        cdata: &[T],
+        d: usize,
+        k: usize,
+        i: usize,
+        out: &mut [f64],
+    ) {
+        let row = &xdata[i * d..(i + 1) * d];
+        let xn = self.x_norms[i];
+        let mut j = 0;
+        while j + CENTROID_BLOCK <= k {
+            let dots = T::dot_x4(
+                self.simd,
+                row,
+                &cdata[j * d..(j + 1) * d],
+                &cdata[(j + 1) * d..(j + 2) * d],
+                &cdata[(j + 2) * d..(j + 3) * d],
+                &cdata[(j + 3) * d..(j + 4) * d],
+            );
+            for (lane, &dj) in dots.iter().enumerate() {
+                out[j + lane] = (xn - 2.0 * dj + self.c_norms[j + lane]).max(0.0);
+            }
+            j += CENTROID_BLOCK;
+        }
+        while j < k {
+            let dj = T::dot(self.simd, row, &cdata[j * d..(j + 1) * d]);
+            out[j] = (xn - 2.0 * dj + self.c_norms[j]).max(0.0);
+            j += 1;
+        }
+    }
+
+    /// Single-pair squared distance via the cached norms (the sparse
+    /// bound-tightening path).
+    pub fn dist_sq(&self, x: &DataMatrix, c: &DataMatrix, i: usize, j: usize) -> f64 {
+        let d = x.d();
+        let dot = match self.precision {
+            Precision::F64 => f64::dot(self.simd, x.row(i), c.row(j)),
+            Precision::F32 => f32::dot(
+                self.simd,
+                &self.x32[i * d..(i + 1) * d],
+                &self.c32[j * d..(j + 1) * d],
+            ),
+        };
+        (self.x_norms[i] - 2.0 * dot + self.c_norms[j]).max(0.0)
+    }
+}
+
+/// Scan centroids `[cb, cend)` for one sample, updating the running
+/// best/second partials. Full blocks go through the 4-wide micro-kernel.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn scan_block<T: Scalar>(
+    simd: SimdLevel,
+    row: &[T],
+    cdata: &[T],
+    d: usize,
+    c_norms: &[f64],
+    cb: usize,
+    cend: usize,
+    best: &mut u32,
+    best_p: &mut f64,
+    second_p: &mut f64,
+) {
+    let mut j = cb;
+    while j + CENTROID_BLOCK <= cend {
+        let dots = T::dot_x4(
+            simd,
+            row,
+            &cdata[j * d..(j + 1) * d],
+            &cdata[(j + 1) * d..(j + 2) * d],
+            &cdata[(j + 2) * d..(j + 3) * d],
+            &cdata[(j + 3) * d..(j + 4) * d],
+        );
+        for (lane, &dj) in dots.iter().enumerate() {
+            let p = c_norms[j + lane] - 2.0 * dj;
+            update2(best, best_p, second_p, (j + lane) as u32, p);
+        }
+        j += CENTROID_BLOCK;
+    }
+    while j < cend {
+        let p = c_norms[j] - 2.0 * T::dot(simd, row, &cdata[j * d..(j + 1) * d]);
+        update2(best, best_p, second_p, j as u32, p);
+        j += 1;
+    }
+}
+
+/// Track the two smallest partials seen so far. Strict `<` keeps the
+/// lowest centroid index on exact ties, matching the brute-force scan.
+#[inline(always)]
+fn update2(best: &mut u32, best_p: &mut f64, second_p: &mut f64, j: u32, p: f64) {
+    if p < *best_p {
+        *second_p = *best_p;
+        *best_p = p;
+        *best = j;
+    } else if p < *second_p {
+        *second_p = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg;
+    use crate::lloyd::brute_force_assign;
+    use crate::rng::Pcg32;
+
+    /// Exact distances for one sample, for cross-checking.
+    fn exact_dists(x: &DataMatrix, c: &DataMatrix, i: usize) -> Vec<f64> {
+        (0..c.n()).map(|j| linalg::dist_sq(x.row(i), c.row(j))).collect()
+    }
+
+    fn check_matches_brute(kernel: &mut DistanceKernel, x: &DataMatrix, c: &DataMatrix, ctx: &str) {
+        let pool = ThreadPool::new(2);
+        kernel.prepare(x, c, &pool);
+        let expect = brute_force_assign(x, c);
+        let k = c.n();
+        let mut seen = 0usize;
+        kernel.argmin2_range(x, c, 0..x.n(), |i, b| {
+            seen += 1;
+            let mut exact = exact_dists(x, c, i);
+            // The kernel's pick must be distance-equal to the brute-force
+            // pick (ids may differ on ties — see module docs).
+            let got = exact[b.best as usize];
+            let best = exact[expect[i] as usize];
+            assert!((got - best).abs() < 1e-9, "{ctx}: sample {i}: {got} vs {best}");
+            assert!((b.best_d - got).abs() < 1e-9, "{ctx}: sample {i} best_d");
+            assert!(b.best_d >= 0.0 && b.second_d >= 0.0, "{ctx}: negative distance");
+            exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if k >= 2 {
+                assert!(
+                    (b.second_d - exact[1]).abs() < 1e-9,
+                    "{ctx}: sample {i} second_d {} vs {}",
+                    b.second_d,
+                    exact[1]
+                );
+            } else {
+                assert!(b.second_d.is_infinite(), "{ctx}: K=1 second bound");
+            }
+            // dists_row and dist_sq agree with the exact form too.
+            let mut dense = vec![0.0; k];
+            kernel.dists_row(x, c, i, &mut dense);
+            for j in 0..k {
+                let e = linalg::dist_sq(x.row(i), c.row(j));
+                assert!((dense[j] - e).abs() < 1e-9, "{ctx}: dists_row[{i}][{j}]");
+            }
+            let one = kernel.dist_sq(x, c, i, b.best as usize);
+            assert!((one - got).abs() < 1e-9, "{ctx}: dist_sq one-pair");
+        });
+        assert_eq!(seen, x.n(), "{ctx}: emit must cover every sample once");
+    }
+
+    /// Grid problem with duplicate points, tie distances, and centroids
+    /// sitting exactly on samples (so clamping at zero is exercised).
+    fn grid_problem(rng: &mut Pcg32, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
+        let n = 160.max(2 * k);
+        let blobs = k.clamp(1, 8);
+        let mut x = synth::gaussian_blobs(rng, n, d, blobs, 2.0, 0.3);
+        // Duplicate points: rows 1 and 2 become copies of row 0.
+        let r0 = x.row(0).to_vec();
+        x.row_mut(1).copy_from_slice(&r0);
+        x.row_mut(2).copy_from_slice(&r0);
+        // Centroids sit exactly on samples (zero distances).
+        let idx: Vec<usize> = (0..k).map(|j| (j * 7) % n).collect();
+        let mut c = x.gather_rows(&idx);
+        if k >= 2 {
+            // Tie distances: centroid 1 duplicates centroid 0.
+            let c0 = c.row(0).to_vec();
+            c.row_mut(1).copy_from_slice(&c0);
+        }
+        (x, c)
+    }
+
+    /// Property test: tiled/norm-decomposed assignment matches brute force
+    /// across the full d × K grid — for the auto-dispatched f64 kernel AND
+    /// the forced-scalar fallback (the runtime-dispatch degradation path).
+    #[test]
+    fn property_matches_brute_force_across_shapes() {
+        let mut rng = Pcg32::seed_from_u64(0xD15E);
+        for &d in &[1usize, 2, 3, 7, 8, 16, 100] {
+            for &k in &[1usize, 7, 64] {
+                let (x, c) = grid_problem(&mut rng, d, k);
+                let mut auto = DistanceKernel::new();
+                check_matches_brute(&mut auto, &x, &c, &format!("auto d={d} k={k}"));
+                let mut scalar = DistanceKernel::with_options(Precision::F64, SimdLevel::Scalar);
+                check_matches_brute(&mut scalar, &x, &c, &format!("scalar d={d} k={k}"));
+            }
+        }
+    }
+
+    /// Satellite parity property: scalar-f64, simd-f64 and simd-f32 agree
+    /// on best/second-best *distances* (not assignment ids — ties resolve
+    /// freely) across the d × K grid, for raw and pre-centered data.
+    #[test]
+    fn parity_scalar_f64_simd_f64_simd_f32() {
+        let pool = ThreadPool::new(2);
+        let mut rng = Pcg32::seed_from_u64(0xF32D);
+        for &d in &[1usize, 2, 5, 8, 9, 16, 33] {
+            for &k in &[1usize, 5, 64] {
+                for &centered in &[false, true] {
+                    let (mut x, mut c) = grid_problem(&mut rng, d, k);
+                    if centered {
+                        // Center the samples and move the (sample-derived)
+                        // centroids into the same frame.
+                        let mean = crate::data::center(&mut x);
+                        for j in 0..c.n() {
+                            for (v, &m) in c.row_mut(j).iter_mut().zip(&mean) {
+                                *v -= m;
+                            }
+                        }
+                    } else {
+                        // Push the data off-origin — the cancellation regime
+                        // pre-centering exists to fix.
+                        for i in 0..x.n() {
+                            for v in x.row_mut(i).iter_mut() {
+                                *v += 25.0;
+                            }
+                        }
+                        for j in 0..c.n() {
+                            for v in c.row_mut(j).iter_mut() {
+                                *v += 25.0;
+                            }
+                        }
+                    }
+                    let ctx = format!("d={d} k={k} centered={centered}");
+
+                    let mut scalar64 =
+                        DistanceKernel::with_options(Precision::F64, SimdLevel::Scalar);
+                    let mut simd64 = DistanceKernel::with_precision(Precision::F64);
+                    let mut simd32 = DistanceKernel::with_precision(Precision::F32);
+                    scalar64.prepare(&x, &c, &pool);
+                    simd64.prepare(&x, &c, &pool);
+                    simd32.prepare(&x, &c, &pool);
+
+                    let collect = |kern: &DistanceKernel| {
+                        let mut out = Vec::with_capacity(x.n());
+                        kern.argmin2_range(&x, &c, 0..x.n(), |_, b| out.push(b));
+                        out
+                    };
+                    let a = collect(&scalar64);
+                    let b = collect(&simd64);
+                    let f = collect(&simd32);
+
+                    // f32 error envelope: ε₃₂ · (‖x‖² + ‖c‖²) per the module
+                    // docs, padded for accumulation order.
+                    let max_xn =
+                        (0..x.n()).map(|i| linalg::norm_sq(x.row(i))).fold(0.0f64, f64::max);
+                    let max_cn =
+                        (0..c.n()).map(|j| linalg::norm_sq(c.row(j))).fold(0.0f64, f64::max);
+                    let tol32 = 1e-5 * (1.0 + max_xn + max_cn);
+
+                    for i in 0..x.n() {
+                        assert!(
+                            (a[i].best_d - b[i].best_d).abs() < 1e-9,
+                            "{ctx}: sample {i} scalar/simd f64 best_d {} vs {}",
+                            a[i].best_d,
+                            b[i].best_d
+                        );
+                        assert!(
+                            (f[i].best_d - a[i].best_d).abs() < tol32,
+                            "{ctx}: sample {i} f32 best_d {} vs {} (tol {tol32})",
+                            f[i].best_d,
+                            a[i].best_d
+                        );
+                        if c.n() >= 2 {
+                            assert!(
+                                (a[i].second_d - b[i].second_d).abs() < 1e-9,
+                                "{ctx}: sample {i} scalar/simd f64 second_d"
+                            );
+                            assert!(
+                                (f[i].second_d - a[i].second_d).abs() < tol32,
+                                "{ctx}: sample {i} f32 second_d {} vs {} (tol {tol32})",
+                                f[i].second_d,
+                                a[i].second_d
+                            );
+                        } else {
+                            assert!(a[i].second_d.is_infinite());
+                            assert!(b[i].second_d.is_infinite());
+                            assert!(f[i].second_d.is_infinite());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Runtime dispatch degrades cleanly: forcing AVX2 on a CPU without it
+    /// must yield a working scalar kernel, and the forced-scalar kernel is
+    /// always available and correct (checked above). On non-x86_64 the
+    /// detector itself can only answer `Scalar` (cfg-asserted in `simd`).
+    #[test]
+    fn forced_avx_downgrades_when_unsupported() {
+        let kern = DistanceKernel::with_options(Precision::F64, SimdLevel::Avx2Fma);
+        if simd::detect() == SimdLevel::Scalar {
+            assert_eq!(kern.simd_level(), SimdLevel::Scalar);
+        } else {
+            assert_eq!(kern.simd_level(), SimdLevel::Avx2Fma);
+        }
+        let scalar = DistanceKernel::with_options(Precision::F32, SimdLevel::Scalar);
+        assert_eq!(scalar.simd_level(), SimdLevel::Scalar);
+        assert_eq!(scalar.precision(), Precision::F32);
+    }
+
+    #[test]
+    fn prepare_tracks_centroid_motion() {
+        let mut rng = Pcg32::seed_from_u64(7);
+        let x = synth::gaussian_blobs(&mut rng, 200, 5, 3, 2.0, 0.4);
+        let mut c = x.gather_rows(&[0, 50, 100]);
+        let pool = ThreadPool::new(1);
+        let mut kernel = DistanceKernel::new();
+        for round in 0..4 {
+            kernel.prepare(&x, &c, &pool);
+            check_round(&kernel, &x, &c, round);
+            for j in 0..c.n() {
+                for t in 0..c.d() {
+                    c[(j, t)] += 0.1 * (j + t + 1) as f64;
+                }
+            }
+        }
+
+        fn check_round(kernel: &DistanceKernel, x: &DataMatrix, c: &DataMatrix, round: usize) {
+            for i in (0..x.n()).step_by(17) {
+                for j in 0..c.n() {
+                    let e = linalg::dist_sq(x.row(i), c.row(j));
+                    let g = kernel.dist_sq(x, c, i, j);
+                    assert!((g - e).abs() < 1e-9, "round {round} pair ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalidate_recomputes_sample_norms() {
+        let pool = ThreadPool::new(1);
+        let mut kernel = DistanceKernel::new();
+        let x1 = DataMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0]]);
+        kernel.prepare(&x1, &c, &pool);
+        assert!((kernel.dist_sq(&x1, &c, 1, 0) - 4.0).abs() < 1e-12);
+        kernel.invalidate();
+        let x2 = DataMatrix::from_rows(&[&[3.0, 0.0], &[0.0, 5.0]]);
+        kernel.prepare(&x2, &c, &pool);
+        assert!((kernel.dist_sq(&x2, &c, 1, 0) - 25.0).abs() < 1e-12);
+    }
+
+    /// Satellite regression: in-place mutation of the sample matrix (same
+    /// buffer address, same shape) must refresh the norm cache. The old
+    /// `(buffer ptr, n, d)` key silently reused stale norms here; the
+    /// generation stamp cannot.
+    #[test]
+    fn mutated_matrix_refreshes_norm_cache() {
+        let pool = ThreadPool::new(1);
+        for precision in [Precision::F64, Precision::F32] {
+            let mut kernel = DistanceKernel::with_precision(precision);
+            let mut x = DataMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+            let c = DataMatrix::from_rows(&[&[0.0, 0.0]]);
+            kernel.prepare(&x, &c, &pool);
+            assert!((kernel.dist_sq(&x, &c, 1, 0) - 4.0).abs() < 1e-6);
+            // Same allocation, same shape, new contents — no invalidate().
+            x.row_mut(1)[1] = 5.0;
+            kernel.prepare(&x, &c, &pool);
+            assert!(
+                (kernel.dist_sq(&x, &c, 1, 0) - 25.0).abs() < 1e-6,
+                "{}: stale norm cache survived an in-place mutation",
+                precision.name()
+            );
+        }
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert_eq!(Precision::parse("single"), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    /// The f32 kernel path end-to-end: matches brute force within the f32
+    /// envelope on centered data (the configuration the CLI sets up).
+    #[test]
+    fn f32_kernel_close_to_exact_on_centered_data() {
+        let pool = ThreadPool::new(2);
+        let mut rng = Pcg32::seed_from_u64(0xCE17);
+        let mut x = synth::gaussian_blobs(&mut rng, 400, 12, 6, 2.0, 0.3);
+        let _ = crate::data::center(&mut x);
+        let c = x.gather_rows(&[0, 64, 128, 192, 256, 320]);
+        let mut kernel = DistanceKernel::with_precision(Precision::F32);
+        kernel.prepare(&x, &c, &pool);
+        kernel.argmin2_range(&x, &c, 0..x.n(), |i, b| {
+            let exact = exact_dists(&x, &c, i);
+            let best = exact.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                (b.best_d - best).abs() < 1e-3,
+                "sample {i}: f32 best_d {} vs exact {best}",
+                b.best_d
+            );
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! The precision abstraction and the portable (autovectorized) micro-kernels.
+//!
+//! [`Scalar`] is the trait the whole distance subsystem is generic over:
+//! it carries the element type of the *storage* (`f64`, or the `f32`
+//! mirror of the sample matrix) and routes every dot product through the
+//! dispatch level chosen at kernel construction. Accumulation happens in
+//! the storage precision — that is the point of the f32 mode: half the
+//! memory traffic *and* twice the lanes per FMA — and results are widened
+//! to `f64` at the micro-kernel boundary, so norms, partials, bounds and
+//! energies stay `f64` everywhere above this file.
+
+use super::simd::SimdLevel;
+
+/// Element type of a distance-kernel storage buffer (`f64` or `f32`).
+///
+/// The methods take the [`SimdLevel`] the owning kernel resolved once at
+/// construction and pick between the explicit AVX2+FMA lanes and the
+/// autovectorized fallback below; both return `f64`. (Narrowing *into*
+/// the storage type is not part of this trait — the f32 mirror is filled
+/// by [`crate::data::DataMatrix::write_f32_into`], the crate's single
+/// conversion point.)
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + Default
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + Into<f64>
+    + 'static
+{
+    /// Dot product of two equal-length slices under `simd`.
+    fn dot(simd: SimdLevel, a: &[Self], b: &[Self]) -> f64;
+
+    /// Register-blocked micro-kernel: one sample row against four centroid
+    /// rows at once, under `simd`.
+    fn dot_x4(
+        simd: SimdLevel,
+        x: &[Self],
+        c0: &[Self],
+        c1: &[Self],
+        c2: &[Self],
+        c3: &[Self],
+    ) -> [f64; 4];
+}
+
+/// Portable dot product with four independent accumulator chains — the
+/// shape the auto-vectorizer reliably turns into wide FMA lanes.
+pub fn dot_autovec<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) =
+        (T::default(), T::default(), T::default(), T::default());
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0;
+    s += s1;
+    s += s2;
+    s += s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s.into()
+}
+
+/// Portable 4-wide register-blocked micro-kernel: four accumulator chains,
+/// one per centroid, each sample element loaded once per block.
+pub fn dot_x4_autovec<T: Scalar>(x: &[T], c0: &[T], c1: &[T], c2: &[T], c3: &[T]) -> [f64; 4] {
+    let d = x.len();
+    let (c0, c1, c2, c3) = (&c0[..d], &c1[..d], &c2[..d], &c3[..d]);
+    let (mut s0, mut s1, mut s2, mut s3) =
+        (T::default(), T::default(), T::default(), T::default());
+    for t in 0..d {
+        let v = x[t];
+        s0 += v * c0[t];
+        s1 += v * c1[t];
+        s2 += v * c2[t];
+        s3 += v * c3[t];
+    }
+    [s0.into(), s1.into(), s2.into(), s3.into()]
+}
+
+impl Scalar for f64 {
+    #[inline]
+    fn dot(simd: SimdLevel, a: &[Self], b: &[Self]) -> f64 {
+        #[cfg(target_arch = "x86_64")]
+        if simd == SimdLevel::Avx2Fma {
+            // SAFETY: Avx2Fma is only ever constructed after runtime
+            // detection (see `simd::detect` / `DistanceKernel::with_options`).
+            return unsafe { super::simd::dot_f64_avx2(a, b) };
+        }
+        let _ = simd;
+        dot_autovec(a, b)
+    }
+
+    #[inline]
+    fn dot_x4(
+        simd: SimdLevel,
+        x: &[Self],
+        c0: &[Self],
+        c1: &[Self],
+        c2: &[Self],
+        c3: &[Self],
+    ) -> [f64; 4] {
+        #[cfg(target_arch = "x86_64")]
+        if simd == SimdLevel::Avx2Fma {
+            // SAFETY: as in `dot` above.
+            return unsafe { super::simd::dot_x4_f64_avx2(x, c0, c1, c2, c3) };
+        }
+        let _ = simd;
+        dot_x4_autovec(x, c0, c1, c2, c3)
+    }
+}
+
+impl Scalar for f32 {
+    #[inline]
+    fn dot(simd: SimdLevel, a: &[Self], b: &[Self]) -> f64 {
+        #[cfg(target_arch = "x86_64")]
+        if simd == SimdLevel::Avx2Fma {
+            // SAFETY: as in the f64 impl.
+            return unsafe { super::simd::dot_f32_avx2(a, b) };
+        }
+        let _ = simd;
+        dot_autovec(a, b)
+    }
+
+    #[inline]
+    fn dot_x4(
+        simd: SimdLevel,
+        x: &[Self],
+        c0: &[Self],
+        c1: &[Self],
+        c2: &[Self],
+        c3: &[Self],
+    ) -> [f64; 4] {
+        #[cfg(target_arch = "x86_64")]
+        if simd == SimdLevel::Avx2Fma {
+            // SAFETY: as in the f64 impl.
+            return unsafe { super::simd::dot_x4_f32_avx2(x, c0, c1, c2, c3) };
+        }
+        let _ = simd;
+        dot_x4_autovec(x, c0, c1, c2, c3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autovec_dot_matches_naive_for_both_precisions() {
+        let a64: Vec<f64> = (0..37).map(|i| (i as f64 * 0.5).sin()).collect();
+        let b64: Vec<f64> = (0..37).map(|i| (i as f64 * 0.2).cos()).collect();
+        let naive: f64 = a64.iter().zip(&b64).map(|(x, y)| x * y).sum();
+        assert!((dot_autovec(&a64, &b64) - naive).abs() < 1e-12);
+
+        let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+        assert!((dot_autovec(&a32, &b32) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_x4_autovec_matches_four_dots() {
+        let rows: Vec<Vec<f64>> = (0..5)
+            .map(|r| (0..13).map(|i| ((r * 13 + i) as f64 * 0.73).sin()).collect())
+            .collect();
+        let got = dot_x4_autovec(&rows[0], &rows[1], &rows[2], &rows[3], &rows[4]);
+        for lane in 0..4 {
+            let exact: f64 =
+                rows[0].iter().zip(&rows[lane + 1]).map(|(x, y)| x * y).sum();
+            assert!((got[lane] - exact).abs() < 1e-12, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn trait_dispatch_agrees_across_levels() {
+        // Whatever level `detect` picks must agree with the forced-scalar
+        // fallback — the unit-level version of the argmin parity property.
+        let level = super::super::simd::detect();
+        for d in [1usize, 4, 7, 8, 12, 33] {
+            let a: Vec<f64> = (0..d).map(|i| (i as f64 * 1.3).sin() * 3.0).collect();
+            let b: Vec<f64> = (0..d).map(|i| (i as f64 * 0.7).cos() * 2.0).collect();
+            let scalar = f64::dot(SimdLevel::Scalar, &a, &b);
+            let best = f64::dot(level, &a, &b);
+            assert!((scalar - best).abs() < 1e-10, "d={d}: {scalar} vs {best}");
+
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let scalar32 = f32::dot(SimdLevel::Scalar, &a32, &b32);
+            let best32 = f32::dot(level, &a32, &b32);
+            assert!(
+                (scalar32 - best32).abs() < 1e-4,
+                "d={d}: f32 {scalar32} vs {best32}"
+            );
+        }
+    }
+}

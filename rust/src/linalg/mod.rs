@@ -7,16 +7,17 @@
 //! normal-equations path in tests), and the regularized normal-equation
 //! solver the solver's hot loop uses (same scheme as Peng et al. 2018).
 //!
-//! The assignment hot path lives in [`kernel`]: blocked, norm-decomposed
-//! distance kernels with a fused (best, second-best) argmin that all four
-//! CPU engines run on.
+//! The assignment hot path lives in [`kernel`]: blocked, norm-decomposed,
+//! precision-generic distance kernels (f64 / f32 sample storage, explicit
+//! AVX2+FMA lanes with a runtime-dispatched scalar fallback) with a fused
+//! (best, second-best) argmin that all four CPU engines run on.
 
 mod dense;
 pub mod kernel;
 mod lstsq;
 
 pub use dense::{cholesky_solve_in_place, householder_lstsq, Mat};
-pub use kernel::{Best2, DistanceKernel};
+pub use kernel::{Best2, DistanceKernel, Precision, Scalar, SimdLevel};
 pub use lstsq::{solve_anderson_weights, AndersonLsWorkspace};
 
 /// Dot product.

@@ -31,6 +31,11 @@ impl ElkanEngine {
         Self::default()
     }
 
+    /// Engine whose kernel stores samples at the given precision.
+    pub fn with_precision(precision: crate::linalg::Precision) -> Self {
+        Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
+    }
+
     fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
         let (n, k) = (x.n(), c.n());
         self.upper.resize(n, 0.0);

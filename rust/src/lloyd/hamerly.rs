@@ -37,6 +37,11 @@ impl HamerlyEngine {
         Self::default()
     }
 
+    /// Engine whose kernel stores samples at the given precision.
+    pub fn with_precision(precision: crate::linalg::Precision) -> Self {
+        Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
+    }
+
     /// Full O(NK) initialization of bounds + assignment.
     fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
         let (n, k) = (x.n(), c.n());

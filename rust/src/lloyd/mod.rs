@@ -66,15 +66,25 @@ pub trait AssignmentEngine {
     }
 }
 
-/// Build an engine by kind. The `Pjrt` kind is constructed by the runtime
-/// module (it needs artifacts) — asking for it here panics.
+/// Build an engine by kind with the default `f64` kernel precision. The
+/// `Pjrt` kind is constructed by the runtime module (it needs artifacts) —
+/// asking for it here panics.
 pub fn make_engine(kind: crate::config::EngineKind) -> Box<dyn AssignmentEngine> {
+    make_engine_with(kind, crate::config::Precision::F64)
+}
+
+/// Build an engine by kind with an explicit kernel storage precision (the
+/// solver threads [`crate::config::SolverConfig::precision`] through here).
+pub fn make_engine_with(
+    kind: crate::config::EngineKind,
+    precision: crate::config::Precision,
+) -> Box<dyn AssignmentEngine> {
     use crate::config::EngineKind;
     match kind {
-        EngineKind::Naive => Box::new(NaiveEngine::new()),
-        EngineKind::Hamerly => Box::new(HamerlyEngine::new()),
-        EngineKind::Elkan => Box::new(ElkanEngine::new()),
-        EngineKind::Yinyang => Box::new(YinyangEngine::new()),
+        EngineKind::Naive => Box::new(NaiveEngine::with_precision(precision)),
+        EngineKind::Hamerly => Box::new(HamerlyEngine::with_precision(precision)),
+        EngineKind::Elkan => Box::new(ElkanEngine::with_precision(precision)),
+        EngineKind::Yinyang => Box::new(YinyangEngine::with_precision(precision)),
         EngineKind::Pjrt => panic!("PJRT engine must be built via runtime::PjrtEngine"),
     }
 }

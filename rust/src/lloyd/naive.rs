@@ -21,6 +21,11 @@ impl NaiveEngine {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Engine whose kernel stores samples at the given precision.
+    pub fn with_precision(precision: crate::linalg::Precision) -> Self {
+        Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
+    }
 }
 
 impl AssignmentEngine for NaiveEngine {

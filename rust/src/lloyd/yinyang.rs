@@ -44,6 +44,11 @@ impl YinyangEngine {
         Self::default()
     }
 
+    /// Engine whose kernel stores samples at the given precision.
+    pub fn with_precision(precision: crate::linalg::Precision) -> Self {
+        Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
+    }
+
     /// Cluster the centroids into groups with a few Lloyd rounds (groups
     /// are fixed afterwards, as in the original algorithm).
     fn build_groups(&mut self, c: &DataMatrix) {

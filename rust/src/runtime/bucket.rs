@@ -45,20 +45,13 @@ pub fn pad_problem(x: &DataMatrix, c: &DataMatrix, bucket_n: usize, bucket_k: us
     assert!(bucket_n >= n, "bucket n {bucket_n} < {n}");
     assert!(bucket_k >= k, "bucket k {bucket_k} < {k}");
     assert_eq!(c.d(), d);
+    // The narrowing itself is DataMatrix::write_f32_into — the crate's one
+    // f64→f32 conversion point — written into the real-row prefix of each
+    // padded buffer.
     let mut xf = vec![0.0f32; bucket_n * d];
-    for i in 0..n {
-        let row = x.row(i);
-        for t in 0..d {
-            xf[i * d + t] = row[t] as f32;
-        }
-    }
+    x.write_f32_into(&mut xf[..n * d]);
     let mut cf = vec![PAD_CENTROID_SENTINEL; bucket_k * d];
-    for j in 0..k {
-        let row = c.row(j);
-        for t in 0..d {
-            cf[j * d + t] = row[t] as f32;
-        }
-    }
+    c.write_f32_into(&mut cf[..k * d]);
     let mut mask = vec![0.0f32; bucket_n];
     for m in mask.iter_mut().take(n) {
         *m = 1.0;

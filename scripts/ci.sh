@@ -23,3 +23,28 @@ fi
 cargo fmt --check
 cargo build --release
 cargo test -q
+
+# Quick-mode perf smoke: run the three kernel variants (scalar-f64,
+# simd-f64, simd-f32) on one small shape and fail if the machine-readable
+# trail is missing any variant's entries. The --no-run probe separates
+# "bench target not declared in the materialized manifest" (legitimate
+# skip) from a broken bench build (hard failure — `cargo test` above does
+# not compile bench targets).
+probe_log=$(mktemp)
+if PERF_HOTPATH_QUICK=1 cargo bench --bench perf_hotpath --no-run >"$probe_log" 2>&1; then
+  PERF_HOTPATH_QUICK=1 cargo bench --bench perf_hotpath
+  for key in seed_scalar_ms scalar_f64_ms simd_f64_ms simd_f32_ms simd_level; do
+    if ! grep -q "\"$key\"" BENCH_hotpath.json; then
+      echo "ci.sh: BENCH_hotpath.json is missing '$key' entries" >&2
+      exit 1
+    fi
+  done
+  echo "ci.sh: perf_hotpath smoke leg OK (BENCH_hotpath.json has all kernel variants)"
+elif grep -qi "no bench target named" "$probe_log"; then
+  echo "ci.sh: perf_hotpath bench target not declared in this manifest; skipping smoke leg" >&2
+else
+  echo "ci.sh: perf_hotpath bench failed to build:" >&2
+  cat "$probe_log" >&2
+  exit 1
+fi
+rm -f "$probe_log"
