@@ -18,11 +18,14 @@ fn main() {
 
     for k in [8usize, 16, 32] {
         let c0 = seed_centroids(&pixels, k, InitMethod::KMeansPlusPlus, &mut rng);
-        let ours = Solver::new(SolverConfig::default()).run(&pixels, c0.clone());
-        let lloyd = Solver::new(SolverConfig {
+        let ours = Solver::try_new(SolverConfig::default())
+            .expect("CPU engine")
+            .run(&pixels, c0.clone());
+        let lloyd = Solver::try_new(SolverConfig {
             accel: Acceleration::None,
             ..SolverConfig::default()
         })
+        .expect("CPU engine")
         .run(&pixels, c0);
         // PSNR of the quantized image (peak = 1.0 in our normalized RGB).
         let psnr = -10.0 * (ours.mse / 3.0).log10();

@@ -31,7 +31,7 @@ fn main() {
     let mut traces = Vec::new();
     for (label, accel) in variants {
         let cfg = SolverConfig { accel, record_trace: true, threads: 1, ..SolverConfig::default() };
-        let report = Solver::new(cfg).run(&x, c0.clone());
+        let report = Solver::try_new(cfg).expect("CPU engine").run(&x, c0.clone());
         println!(
             "{label:<22} {:>4} iters ({:>3} accepted)  {:>7.3}s  energy {:.6e}",
             report.iterations, report.accepted, report.seconds, report.energy
@@ -88,7 +88,7 @@ fn main() {
     let c0c = seed_centroids(&xc, 10, InitMethod::KMeansPlusPlus, &mut rng);
     for precision in [Precision::F64, Precision::F32] {
         let cfg = SolverConfig { precision, threads: 1, ..SolverConfig::default() };
-        let mut report = Solver::new(cfg).run(&xc, c0c.clone());
+        let mut report = Solver::try_new(cfg).expect("CPU engine").run(&xc, c0c.clone());
         data::uncenter(&mut report.centroids, &mean);
         println!(
             "  --precision {:<4} {:>4} iters  {:>7.3}s  energy {:.6e}",

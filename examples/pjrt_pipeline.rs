@@ -72,14 +72,14 @@ fn main() -> anyhow::Result<()> {
 
     // 3) Native cross-check: same seed, Hamerly engine.
     let native_cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
-    let native = Solver::new(native_cfg).run(&x, c0.clone());
+    let native = Solver::try_new(native_cfg)?.run(&x, c0.clone());
     println!("[native ] anderson dynamic-m: {}", native.summary());
     let lloyd_cfg = SolverConfig {
         accel: Acceleration::None,
         threads: 1,
         ..SolverConfig::default()
     };
-    let lloyd = Solver::new(lloyd_cfg).run(&x, c0);
+    let lloyd = Solver::try_new(lloyd_cfg)?.run(&x, c0);
     println!("[native ] lloyd baseline:     {}", lloyd.summary());
 
     let rel = (ours.energy - native.energy).abs() / native.energy;

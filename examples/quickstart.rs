@@ -1,34 +1,55 @@
 //! Quickstart: cluster a synthetic dataset with the paper's method
-//! (Anderson-accelerated Lloyd, dynamic m) and compare against the
-//! Lloyd(Hamerly) baseline.
+//! (Anderson-accelerated Lloyd, dynamic m) through the unified
+//! `ClusterRequest` / `ClusterSession` API, compare against the
+//! Lloyd(Hamerly) baseline on the same warm workspace, and watch the run
+//! through an observer.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use aakm::config::{Acceleration, SolverConfig};
+use aakm::config::Acceleration;
 use aakm::data::synth;
-use aakm::init::{seed_centroids, InitMethod};
-use aakm::kmeans::Solver;
+use aakm::observe::{CancelToken, TraceObserver};
 use aakm::rng::Pcg32;
+use aakm::{ClusterError, ClusterRequest, ClusterSession};
+use std::sync::Arc;
 
-fn main() {
+fn main() -> Result<(), ClusterError> {
     // 20k samples in 8-D around 10 anisotropic Gaussian clusters.
     let mut rng = Pcg32::seed_from_u64(7);
-    let x = synth::gaussian_blobs_ex(&mut rng, 20_000, 8, 10, 2.0, 0.4, 0.05, 2.0);
+    let x = Arc::new(synth::gaussian_blobs_ex(&mut rng, 20_000, 8, 10, 2.0, 0.4, 0.05, 2.0));
     println!("dataset: n={} d={}", x.n(), x.d());
 
-    // Seed with k-means++ — both solvers start from the same centroids.
-    let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
+    // One request describes the whole job: source, k, seeding, engine,
+    // precision, acceleration, budgets, seed. The same value would drive
+    // the coordinator service unchanged.
+    let request = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(10)
+        .seed(7)
+        .build()?;
 
     // The paper's method: Algorithm 1 with dynamic m (ε₁=0.02, ε₂=0.5, m̄=30).
-    let cfg = SolverConfig { record_trace: true, ..SolverConfig::default() };
-    let ours = Solver::new(cfg.clone()).run(&x, c0.clone());
+    // An observer sees every iteration (energy, m, accepted candidates).
+    let mut session = ClusterSession::open(request)?;
+    let mut trace = TraceObserver::new();
+    let ours = session.run_with(&mut trace, &CancelToken::new())?;
     println!("anderson (dynamic m): {}", ours.summary());
     println!("  accepted {}/{} accelerated iterates", ours.accepted, ours.iterations);
     println!("  phase breakdown: {}", ours.phases.summary());
+    let final_m = trace.records().last().map(|r| r.m).unwrap_or(0);
+    println!("  observer saw {} iterations (final m = {final_m})", trace.records().len());
 
-    // Baseline: plain Lloyd on the same Hamerly assignment engine.
-    let lloyd_cfg = SolverConfig { accel: Acceleration::None, ..cfg };
-    let lloyd = Solver::new(lloyd_cfg).run(&x, c0);
+    // Baseline: plain Lloyd on the same Hamerly engine — the baseline
+    // request reuses the session's warm workspace (same engine spec).
+    let lloyd_request = ClusterRequest::builder()
+        .inline(x)
+        .k(10)
+        .seed(7)
+        .accel(Acceleration::None)
+        .build()?;
+    let mut lloyd_session =
+        ClusterSession::with_workspace(lloyd_request, session.into_workspace())?;
+    let lloyd = lloyd_session.run()?;
     println!("lloyd baseline:       {}", lloyd.summary());
 
     println!(
@@ -37,4 +58,5 @@ fn main() {
         lloyd.seconds / ours.seconds.max(1e-12),
         (ours.mse - lloyd.mse).abs() / lloyd.mse < 1e-2,
     );
+    Ok(())
 }

@@ -1,15 +1,17 @@
 //! Clustering-service demo: the Layer-3 coordinator serving a stream of
-//! jobs across worker threads, with queue-wait / service-time / throughput
-//! reporting — the "serving" face of the system.
+//! `ClusterRequest`s across worker threads, with job handles
+//! (poll / wait / cancel), per-job precision metadata, and queue-wait /
+//! service-time / throughput reporting — the "serving" face of the system.
 //!
 //! Run: `cargo run --release --example service_demo`
 
-use aakm::config::{Acceleration, EngineKind};
-use aakm::coordinator::{Coordinator, CoordinatorConfig, JobData, JobSpec};
+use aakm::config::{Acceleration, EngineKind, Precision};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
 use aakm::init::InitMethod;
 use aakm::metrics::Stopwatch;
+use aakm::ClusterRequest;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 2,
         queue_depth: 8,
@@ -17,40 +19,54 @@ fn main() {
         artifact_dir: aakm::runtime::default_artifact_dir(),
     });
 
-    // A mixed stream: four registry datasets × (ours, lloyd).
+    // A mixed stream over four registry datasets: round 0 runs the paper's
+    // method, round 1 the Lloyd baseline, and the kernel precision
+    // alternates with an offset per round so every dataset is served at
+    // both f64 and f32 across the stream.
     let names = ["HTRU2", "Eb", "Shuttle", "Birch"];
-    let mut jobs = 0u64;
     let sw = Stopwatch::start();
+    let mut handles = Vec::new();
     for round in 0..2 {
         for (i, name) in names.iter().enumerate() {
             let accel =
                 if round == 0 { Acceleration::DynamicM(2) } else { Acceleration::None };
-            let job = JobSpec {
-                id: jobs,
-                data: JobData::Registry { name: name.to_string(), scale: 0.2 },
-                k: 10,
-                init: InitMethod::KMeansPlusPlus,
-                seed: i as u64,
-                accel,
-                engine: EngineKind::Hamerly,
-                max_iters: 5000,
-            };
-            coord.submit(job).expect("submit");
-            jobs += 1;
+            let precision =
+                if (i + round) % 2 == 0 { Precision::F64 } else { Precision::F32 };
+            let request = ClusterRequest::builder()
+                .registry(*name, 0.2)
+                .k(10)
+                .init(InitMethod::KMeansPlusPlus)
+                .seed(i as u64)
+                .accel(accel)
+                .engine(EngineKind::Hamerly)
+                .precision(precision)
+                .build()?;
+            handles.push(coord.submit(request)?);
         }
     }
-    let results = coord.collect(jobs as usize).expect("collect");
+    let jobs = handles.len();
+    let results = Coordinator::wait_all(handles);
     let wall = sw.seconds();
 
-    println!("{:<4} {:<8} {:>10} {:>10} {:>7} {:>10}", "job", "worker", "wait", "service", "iters", "mse");
+    println!(
+        "{:<4} {:<8} {:>10} {:>10} {:>7} {:>10} {:>14}",
+        "job", "worker", "wait", "service", "iters", "mse", "engine/prec"
+    );
     let mut total_service = 0.0;
     for r in &results {
         match &r.outcome {
             Ok(out) => {
                 total_service += r.service_time.as_secs_f64();
                 println!(
-                    "{:<4} {:<8} {:>10.1?} {:>10.1?} {:>7} {:>10.4}",
-                    r.id, r.worker, r.queue_wait, r.service_time, out.iterations, out.mse
+                    "{:<4} {:<8} {:>10.1?} {:>10.1?} {:>7} {:>10.4} {:>9}/{}",
+                    r.id,
+                    r.worker,
+                    r.queue_wait,
+                    r.service_time,
+                    out.iterations,
+                    out.mse,
+                    out.engine.name(),
+                    out.precision.name()
                 );
             }
             Err(e) => println!("{:<4} FAILED: {e}", r.id),
@@ -63,4 +79,5 @@ fn main() {
         100.0 * total_service / (2.0 * wall)
     );
     coord.shutdown();
+    Ok(())
 }

@@ -38,7 +38,7 @@ fn main() {
                     threads: 1,
                     ..SolverConfig::default()
                 };
-                let r = Solver::new(cfg).run(&x, c0);
+                let r = Solver::try_new(cfg).expect("CPU engine").run(&x, c0);
                 row.push(TableCell::plain(format!("{} ({:.2})", r.iterations, r.seconds)));
             }
             table.push_row(row);

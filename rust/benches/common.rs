@@ -75,7 +75,7 @@ pub fn run_case(
 ) -> RunReport {
     let mut rng = Pcg32::seed_from_u64(seed);
     let c0 = seed_centroids(x, k, init, &mut rng);
-    Solver::new(solver_config(accel)).run(x, c0)
+    Solver::try_new(solver_config(accel)).expect("CPU engine").run(x, c0)
 }
 
 /// Where bench CSVs land.

@@ -24,7 +24,7 @@ fn main() {
         let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
         let run = |accel| {
             let cfg = SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() };
-            Solver::new(cfg).run(&x, c0.clone())
+            Solver::try_new(cfg).expect("CPU engine").run(&x, c0.clone())
         };
         let lloyd = run(Acceleration::None);
         let ours = run(Acceleration::DynamicM(2));

@@ -62,18 +62,73 @@ fn time_kernel_ms(
 
 /// Machine-readable trail for the perf trajectory (CI smoke-checks the
 /// per-variant keys are present).
-fn write_json(n: usize, simd: SimdLevel, quick: bool, sweep_rows: &[String], macro_rows: &[String]) {
+fn write_json(
+    n: usize,
+    simd: SimdLevel,
+    quick: bool,
+    sweep_rows: &[String],
+    macro_rows: &[String],
+    session_row: &str,
+) {
     let json = format!(
         "{{\n  \"bench\": \"perf_hotpath\",\n  \"n\": {n},\n  \"simd_level\": \"{}\",\n  \
-         \"quick\": {quick},\n  \"kernel_sweep\": [\n{}\n  ],\n  \"macro\": [\n{}\n  ]\n}}\n",
+         \"quick\": {quick},\n  \"kernel_sweep\": [\n{}\n  ],\n  \"session\": [\n{}\n  ],\n  \
+         \"macro\": [\n{}\n  ]\n}}\n",
         simd.name(),
         sweep_rows.join(",\n"),
+        session_row,
         macro_rows.join(",\n"),
     );
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),
         Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
     }
+}
+
+/// Warm-vs-cold session comparison: a fresh `ClusterSession` per run
+/// (engine, pool and scratch rebuilt, data re-seeded — the old
+/// fresh-solver-per-call pattern) vs one warm session with report
+/// recycling (the workspace-reuse contract of the request/session API).
+fn session_leg(quick: bool) -> String {
+    use aakm::{ClusterRequest, ClusterSession};
+    use std::sync::Arc;
+    let n = if quick { 5_000 } else { 50_000 };
+    let mut rng = Pcg32::seed_from_u64(0x5E55);
+    let x = Arc::new(synth::gaussian_blobs_ex(&mut rng, n, 8, 10, 2.0, 0.4, 0.05, 2.0));
+    let build = || {
+        ClusterRequest::builder()
+            .inline(Arc::clone(&x))
+            .k(10)
+            .threads(1)
+            .seed(3)
+            .build()
+            .expect("valid request")
+    };
+    let reps = if quick { 2 } else { 5 };
+    let t_cold = time_ms(reps, || {
+        let mut s = ClusterSession::open(build()).expect("open");
+        let r = s.run().expect("run");
+        std::hint::black_box(r.iterations);
+    });
+    let mut warm = ClusterSession::open(build()).expect("open");
+    let r0 = warm.run().expect("warm-up");
+    warm.recycle(r0);
+    let t_warm = time_ms(reps, || {
+        let r = warm.run().expect("run");
+        std::hint::black_box(r.iterations);
+        warm.recycle(r);
+    });
+    println!("\n## Session reuse — cold open-per-run vs warm session (n={n}, 1 thread)\n");
+    println!("cold (open per run):  {t_cold:8.2} ms/run");
+    println!(
+        "warm (session reuse): {t_warm:8.2} ms/run  ({:.2}x)",
+        t_cold / t_warm.max(1e-12)
+    );
+    format!(
+        "    {{\"n\": {n}, \"cold_session_ms\": {t_cold:.4}, \"warm_session_ms\": {t_warm:.4}, \
+         \"warm_speedup\": {:.3}}}",
+        t_cold / t_warm.max(1e-12)
+    )
 }
 
 /// The seed's naive assignment path, kept verbatim as the scalar baseline
@@ -143,9 +198,11 @@ fn main() {
         ));
     }
 
+    let session_row = session_leg(quick);
+
     let mut macro_rows: Vec<String> = Vec::new();
     if quick {
-        write_json(n, simd, quick, &sweep_rows, &macro_rows);
+        write_json(n, simd, quick, &sweep_rows, &macro_rows, &session_row);
         println!("\nquick mode: micro/macro/PJRT sections skipped");
         return;
     }
@@ -226,14 +283,16 @@ fn main() {
         let x = spec.generate_scaled((50_000.0 / spec.n as f64).min(1.0));
         let mut srng = Pcg32::seed_from_u64(7);
         let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut srng);
-        let lloyd = Solver::new(SolverConfig {
+        let lloyd = Solver::try_new(SolverConfig {
             accel: Acceleration::None,
             threads: 1,
             ..SolverConfig::default()
         })
+        .expect("CPU engine")
         .run(&x, c0.clone());
-        let ours =
-            Solver::new(SolverConfig { threads: 1, ..SolverConfig::default() }).run(&x, c0);
+        let ours = Solver::try_new(SolverConfig { threads: 1, ..SolverConfig::default() })
+            .expect("CPU engine")
+            .run(&x, c0);
         let per_l = lloyd.seconds / lloyd.iterations.max(1) as f64 * 1000.0;
         let per_o = ours.seconds / ours.iterations.max(1) as f64 * 1000.0;
         println!(
@@ -252,7 +311,7 @@ fn main() {
         ));
     }
 
-    write_json(n, simd, quick, &sweep_rows, &macro_rows);
+    write_json(n, simd, quick, &sweep_rows, &macro_rows, &session_row);
 
     // PJRT G-step cost per bucket.
     println!("\n## PJRT G-step (AOT artifact) cost\n");

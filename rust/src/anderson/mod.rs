@@ -131,13 +131,24 @@ impl AndersonAccelerator {
                 self.free_cols.push(eg);
             }
         }
+        // The first snapshots after construction / reset draw from the
+        // recycled-column pool too, so a reset accelerator starts its next
+        // run without touching the allocator.
         match &mut self.prev_f {
             Some(pf) => pf.copy_from_slice(f_t),
-            None => self.prev_f = Some(f_t.to_vec()),
+            None => {
+                let mut buf = self.free_cols.pop().unwrap_or_else(|| vec![0.0; dim]);
+                buf.copy_from_slice(f_t);
+                self.prev_f = Some(buf);
+            }
         }
         match &mut self.prev_g {
             Some(pg) => pg.copy_from_slice(g_t),
-            None => self.prev_g = Some(g_t.to_vec()),
+            None => {
+                let mut buf = self.free_cols.pop().unwrap_or_else(|| vec![0.0; dim]);
+                buf.copy_from_slice(g_t);
+                self.prev_g = Some(buf);
+            }
         }
         if m_use == 0 || self.ws.is_empty() {
             out.copy_from_slice(g_t);
@@ -158,11 +169,18 @@ impl AndersonAccelerator {
         self.accelerated_steps
     }
 
-    /// Drop all history (restart).
+    /// Drop all history (restart). Buffers are recycled into the internal
+    /// free pool, so reset-and-reuse on a same-dimension problem performs
+    /// no heap allocation.
     pub fn reset(&mut self) {
-        self.ws.clear();
-        self.prev_f = None;
-        self.prev_g = None;
+        self.ws.clear_into(&mut self.free_cols);
+        if let Some(pf) = self.prev_f.take() {
+            self.free_cols.push(pf);
+        }
+        if let Some(pg) = self.prev_g.take() {
+            self.free_cols.push(pg);
+        }
+        self.accelerated_steps = 0;
     }
 }
 

@@ -7,18 +7,22 @@
 //! * `serve`   — run the coordinator service on a synthetic job stream.
 //! * `inspect` — show the AOT artifact manifest.
 //! * `help`    — usage.
+//!
+//! Both `run` and `serve` are thin fronts over the same
+//! [`ClusterRequest`] / [`ClusterSession`] API the library exposes.
 
 mod args;
 
 pub use args::Args;
 
-use crate::config::{Acceleration, EngineKind, ExperimentConfig};
-use crate::coordinator::{Coordinator, CoordinatorConfig, JobData, JobSpec};
+use crate::config::{Acceleration, EngineKind, ExperimentConfig, Precision};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::data::{self, DataMatrix};
-use crate::init::{seed_centroids, InitMethod};
-use crate::kmeans::Solver;
-use crate::rng::Pcg32;
+use crate::init::InitMethod;
+use crate::request::ClusterRequest;
+use crate::session::ClusterSession;
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 const USAGE: &str = "\
 aakm — Fast K-Means with Anderson Acceleration (Zhang et al. 2018)
@@ -45,6 +49,7 @@ COMMANDS:
              --dataset <name> --scale <0..1> --out <path.{csv,fv}>
     serve    Run the coordinator service demo
              --workers <n> --jobs <n> --k <clusters> --engine <...>
+             --precision <f64|f32> --scale <0..1>
     inspect  Print the artifact manifest
              --artifacts <dir>
     help     This message
@@ -128,20 +133,35 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("precision") {
         cfg.precision =
-            crate::config::Precision::parse(v).with_context(|| format!("bad --precision {v}"))?;
+            Precision::parse(v).with_context(|| format!("bad --precision {v}"))?;
     }
     Ok(cfg)
 }
 
-fn build_solver(cfg: &ExperimentConfig, trace: bool, artifacts: &str) -> Result<Solver> {
-    let mut scfg = cfg.solver_config();
-    scfg.record_trace = trace;
-    if cfg.engine == EngineKind::Pjrt {
-        let engine = crate::runtime::PjrtEngine::open(std::path::Path::new(artifacts))?;
-        Ok(Solver::with_engine(scfg, Box::new(engine)))
-    } else {
-        Ok(Solver::new(scfg))
-    }
+/// Project an [`ExperimentConfig`] + pre-loaded data into the unified
+/// request shape (the single job description every layer consumes).
+fn request_from_experiment(
+    cfg: &ExperimentConfig,
+    x: Arc<DataMatrix>,
+    trace: bool,
+    artifacts: &str,
+) -> Result<ClusterRequest> {
+    let request = ClusterRequest::builder()
+        .inline(x)
+        .k(cfg.k)
+        .init(cfg.init)
+        .engine(cfg.engine)
+        .precision(cfg.precision)
+        .accel(cfg.accel)
+        .epsilons(cfg.epsilon1, cfg.epsilon2)
+        .m_max(cfg.m_max)
+        .max_iters(cfg.max_iters)
+        .threads(cfg.threads)
+        .seed(cfg.seed)
+        .record_trace(trace)
+        .artifact_dir(artifacts)
+        .build()?;
+    Ok(request)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -152,7 +172,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // linalg::kernel): on by default there, opt-in via --center otherwise.
     // Distances are translation-invariant, so the clustering is unchanged;
     // reported centroids are mapped back below.
-    let centering = args.flag("center") || cfg.precision == crate::config::Precision::F32;
+    let centering = args.flag("center") || cfg.precision == Precision::F32;
     let mean = if centering { Some(data::center(&mut x)) } else { None };
     println!(
         "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}, seed={}",
@@ -166,10 +186,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         if centering { ", pre-centered" } else { "" },
         cfg.seed
     );
-    let mut rng = Pcg32::seed_from_u64(cfg.seed);
-    let c0 = seed_centroids(&x, cfg.k, cfg.init, &mut rng);
     let trace = args.flag("trace");
-    let mut report = build_solver(&cfg, trace, artifacts)?.run(&x, c0.clone());
+    let x = Arc::new(x);
+    let request = request_from_experiment(&cfg, Arc::clone(&x), trace, artifacts)?;
+    let mut session = ClusterSession::open(request)?;
+    let mut report = session.run()?;
     if let Some(mean) = &mean {
         data::uncenter(&mut report.centroids, mean);
     }
@@ -180,9 +201,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("  m trace:      {:?}", &report.m_trace);
     }
     if args.flag("compare") {
+        // The baseline differs only in acceleration, so it can reuse the
+        // warm workspace (same engine / precision / threads).
         let mut base_cfg = cfg.clone();
         base_cfg.accel = Acceleration::None;
-        let base = build_solver(&base_cfg, false, artifacts)?.run(&x, c0);
+        let base_req = request_from_experiment(&base_cfg, x, false, artifacts)?;
+        let mut base_session =
+            ClusterSession::with_workspace(base_req, session.into_workspace())?;
+        let base = base_session.run()?;
         println!("lloyd baseline: {}", base.summary());
         let speedup = base.seconds / report.seconds.max(1e-12);
         println!(
@@ -216,6 +242,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let k: usize = args.get("k").unwrap_or("10").parse()?;
     let engine = EngineKind::parse(args.get("engine").unwrap_or("hamerly"))
         .context("bad --engine")?;
+    let precision = Precision::parse(args.get("precision").unwrap_or("f64"))
+        .context("bad --precision (f64|f32)")?;
+    let scale: f64 = args.get("scale").unwrap_or("0.05").parse()?;
     let coord = Coordinator::start(CoordinatorConfig {
         workers,
         queue_depth: jobs.max(4),
@@ -224,23 +253,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     });
     let sw = crate::metrics::Stopwatch::start();
     let names = ["HTRU2", "Birch", "Shuttle", "Eb"];
+    let mut handles = Vec::new();
     for id in 0..jobs as u64 {
-        let job = JobSpec {
-            id,
-            data: JobData::Registry {
-                name: names[id as usize % names.len()].to_string(),
-                scale: 0.05,
-            },
-            k,
-            init: InitMethod::KMeansPlusPlus,
-            seed: id,
-            accel: Acceleration::DynamicM(2),
-            engine,
-            max_iters: 5000,
-        };
-        coord.submit(job)?;
+        let request = ClusterRequest::builder()
+            .registry(names[id as usize % names.len()], scale)
+            .k(k)
+            .init(InitMethod::KMeansPlusPlus)
+            .seed(id)
+            .accel(Acceleration::DynamicM(2))
+            .engine(engine)
+            .precision(precision)
+            .build()?;
+        handles.push(coord.submit(request)?);
     }
-    let results = coord.collect(jobs)?;
+    let results = Coordinator::wait_all(handles);
     let total = sw.seconds();
     let mut ok = 0;
     for r in &results {
@@ -248,8 +274,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(out) => {
                 ok += 1;
                 println!(
-                    "job {:>3} worker {} wait {:>9.1?} service {:>9.1?}  {} iters  mse {:.4}",
-                    r.id, r.worker, r.queue_wait, r.service_time, out.iterations, out.mse
+                    "job {:>3} worker {} wait {:>9.1?} service {:>9.1?}  {} iters  mse {:.4}  [{}/{}]",
+                    r.id,
+                    r.worker,
+                    r.queue_wait,
+                    r.service_time,
+                    out.iterations,
+                    out.mse,
+                    out.engine.name(),
+                    out.precision.name()
                 );
             }
             Err(e) => println!("job {:>3} FAILED: {e}", r.id),
@@ -328,6 +361,18 @@ mod tests {
         ])
         .is_ok());
         assert!(dispatch(&["run", "--precision", "f16"]).is_err());
+    }
+
+    #[test]
+    fn serve_smoke_with_precision() {
+        // The service mode end-to-end at smoke scale, f32 jobs included —
+        // Precision flows request → worker → result metadata.
+        assert!(dispatch(&[
+            "serve", "--workers", "1", "--jobs", "2", "--k", "3", "--scale", "0.005",
+            "--precision", "f32"
+        ])
+        .is_ok());
+        assert!(dispatch(&["serve", "--jobs", "1", "--precision", "f16"]).is_err());
     }
 
     #[test]

@@ -83,6 +83,9 @@ pub struct SolverConfig {
     pub m_max: usize,
     /// Iteration safety cap.
     pub max_iters: usize,
+    /// Optional wall-clock budget; the run stops at the first iteration
+    /// boundary past it and reports `stopped_early` (never mid-iteration).
+    pub time_limit: Option<std::time::Duration>,
     /// Worker threads (0 = host-sized).
     pub threads: usize,
     /// Record per-iteration energy / m traces (small overhead).
@@ -103,6 +106,7 @@ impl Default for SolverConfig {
             epsilon2: 0.5,
             m_max: 30,
             max_iters: 5000,
+            time_limit: None,
             threads: 0,
             record_trace: false,
             precision: Precision::F64,
@@ -230,6 +234,7 @@ impl ExperimentConfig {
             epsilon2: self.epsilon2,
             m_max: self.m_max,
             max_iters: self.max_iters,
+            time_limit: None,
             threads: self.threads,
             record_trace: false,
             precision: self.precision,

@@ -1,12 +1,17 @@
-//! Job descriptions and results for the clustering service.
+//! Job results (and the deprecated `JobSpec` shim) for the clustering
+//! service. Jobs are described by [`crate::request::ClusterRequest`]; the
+//! types here are what comes back.
 
-use crate::config::{Acceleration, EngineKind, SolverConfig};
+use crate::config::{Acceleration, EngineKind, Precision, SolverConfig};
 use crate::data::DataMatrix;
+use crate::error::ClusterError;
 use crate::init::InitMethod;
+use crate::request::{ClusterRequest, DataSource};
 use std::sync::Arc;
 use std::time::Duration;
 
 /// Where a job's samples come from.
+#[deprecated(note = "superseded by request::DataSource")]
 #[derive(Debug, Clone)]
 pub enum JobData {
     /// Caller-provided matrix (shared, zero-copy across the queue).
@@ -15,22 +20,33 @@ pub enum JobData {
     Registry { name: String, scale: f64 },
 }
 
+#[allow(deprecated)]
 impl JobData {
     /// Materialize the samples.
     pub fn materialize(&self) -> anyhow::Result<Arc<DataMatrix>> {
-        match self {
-            JobData::Inline(m) => Ok(Arc::clone(m)),
-            JobData::Registry { name, scale } => {
-                let spec = crate::data::dataset_by_name(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown registry dataset '{name}'"))?;
-                Ok(Arc::new(spec.generate_scaled(*scale)))
-            }
+        Ok(DataSource::from(self.clone()).materialize()?)
+    }
+}
+
+#[allow(deprecated)]
+impl From<JobData> for DataSource {
+    fn from(data: JobData) -> Self {
+        match data {
+            JobData::Inline(m) => DataSource::Inline(m),
+            JobData::Registry { name, scale } => DataSource::Registry { name, scale },
         }
     }
 }
 
-/// One clustering request.
+/// One clustering request, in the pre-`ClusterRequest` shape.
+///
+/// Kept as a thin shim: convert with [`JobSpec::into_request`] and submit
+/// through [`crate::coordinator::Coordinator::submit`] (or use the
+/// deprecated `submit_spec`, which does both). Note the shim predates
+/// `Precision` — converted jobs always run at the default `f64`.
+#[deprecated(note = "superseded by request::ClusterRequest (builder-validated, carries Precision)")]
 #[derive(Debug, Clone)]
+#[allow(deprecated)]
 pub struct JobSpec {
     /// Caller-chosen identifier (echoed in the result).
     pub id: u64,
@@ -50,6 +66,7 @@ pub struct JobSpec {
     pub max_iters: usize,
 }
 
+#[allow(deprecated)]
 impl JobSpec {
     /// A job over inline data with the paper's default solver settings.
     pub fn inline(id: u64, data: Arc<DataMatrix>, k: usize) -> Self {
@@ -76,15 +93,30 @@ impl JobSpec {
             ..SolverConfig::default()
         }
     }
+
+    /// Convert into the unified request shape (the job `id` is carried by
+    /// the coordinator, not the request).
+    pub fn into_request(self) -> Result<ClusterRequest, ClusterError> {
+        ClusterRequest::builder()
+            .source(self.data.into())
+            .k(self.k)
+            .init(self.init)
+            .seed(self.seed)
+            .accel(self.accel)
+            .engine(self.engine)
+            .max_iters(self.max_iters)
+            .build()
+    }
 }
 
-/// Completed-job summary (the heavy centroid/assignment payload is kept;
-/// callers that only need metrics can drop it).
+/// Completed-job summary (the heavy centroid payload is kept; callers that
+/// only need metrics can drop it).
 #[derive(Debug)]
 pub struct JobResult {
+    /// Job id (coordinator-assigned, or the `JobSpec` id for shim jobs).
     pub id: u64,
-    /// Err text when the job failed (bad dataset, missing bucket, ...).
-    pub outcome: Result<JobOutcome, String>,
+    /// Typed outcome; [`ClusterError::Cancelled`] for cancelled jobs.
+    pub outcome: Result<JobOutcome, ClusterError>,
     /// Time spent queued before a worker picked the job up.
     pub queue_wait: Duration,
     /// Time spent inside the solver.
@@ -101,10 +133,16 @@ pub struct JobOutcome {
     pub energy: f64,
     pub mse: f64,
     pub converged: bool,
+    /// Kernel precision the job actually ran at (request metadata echoed
+    /// end to end — service jobs can opt into `f32`).
+    pub precision: Precision,
+    /// Engine that served the job.
+    pub engine: EngineKind,
     pub centroids: DataMatrix,
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -118,6 +156,27 @@ mod tests {
         assert_eq!(cfg.epsilon1, 0.02);
         assert_eq!(cfg.epsilon2, 0.5);
         assert_eq!(cfg.m_max, 30);
+    }
+
+    #[test]
+    fn spec_converts_to_request() {
+        let data = Arc::new(DataMatrix::zeros(8, 2));
+        let req = JobSpec::inline(3, data, 4).into_request().unwrap();
+        assert_eq!(req.k(), 4);
+        assert_eq!(req.engine(), EngineKind::Hamerly);
+        assert_eq!(req.precision(), Precision::F64, "shim jobs default to f64");
+        assert_eq!(req.seed(), 3 ^ 0x5EED);
+    }
+
+    #[test]
+    fn spec_conversion_validates() {
+        let data = Arc::new(DataMatrix::zeros(4, 2));
+        let mut bad = JobSpec::inline(1, data, 2);
+        bad.max_iters = 0;
+        assert!(matches!(
+            bad.into_request(),
+            Err(ClusterError::InvalidRequest { field: "max_iters", .. })
+        ));
     }
 
     #[test]

@@ -1,31 +1,43 @@
 //! The clustering service coordinator — Layer 3's process topology.
 //!
-//! A bounded job queue feeds a pool of worker threads; each worker owns its
-//! solver stack (assignment engine, thread pool, and — for
-//! `EngineKind::Pjrt` — its own PJRT runtime, since PJRT handles are not
-//! `Send`). Submission applies backpressure when the queue is full; results
-//! stream back over a channel with queue-wait and service-time metrics so
-//! the service-style examples can report latency/throughput.
+//! A bounded job queue feeds a pool of worker threads; submission takes a
+//! [`ClusterRequest`] (the same description the in-process session API
+//! consumes, `Precision` included) and returns a [`JobHandle`] with
+//! poll / wait / cancel. Each worker owns its solver stack and keeps the
+//! [`Workspace`](crate::kmeans::Workspace) of its previous job warm: a
+//! stream of same-spec jobs reuses the engine, thread pool, kernel caches
+//! and solver scratch job over job (and, for `EngineKind::Pjrt`, the PJRT
+//! runtime with its compiled-executable cache, since PJRT handles are not
+//! `Send`). Submission applies backpressure when the queue is full;
+//! cancellation is cooperative — queued jobs are dropped at pickup,
+//! running jobs stop at the next iteration boundary.
 //!
 //! The paper's contribution is the solver itself, so this layer is kept
-//! deliberately thin (CLI + lifecycle + dispatch), as DESIGN.md specifies —
-//! but it is a real service: bounded queues, graceful shutdown, failure
-//! isolation per job, and per-worker warm engine reuse.
+//! deliberately thin (lifecycle + dispatch) — but it is a real service:
+//! bounded queues, graceful shutdown, per-job failure isolation (worker
+//! panics are caught and surfaced as typed results), and per-worker warm
+//! workspace reuse.
 
 mod job;
 pub mod stream;
 
-pub use job::{JobData, JobOutcome, JobResult, JobSpec};
+#[allow(deprecated)]
+pub use job::{JobData, JobSpec};
+pub use job::{JobOutcome, JobResult};
 pub use stream::StreamingClusterer;
 
-use crate::init::seed_centroids;
-use crate::kmeans::Solver;
+use crate::config::EngineKind;
+use crate::error::ClusterError;
+use crate::kmeans::Workspace;
 use crate::metrics::Stopwatch;
-use crate::rng::Pcg32;
-use anyhow::{Context, Result};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use crate::observe::{CancelToken, NoopObserver};
+use crate::request::ClusterRequest;
+use crate::session::ClusterSession;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -34,9 +46,10 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded queue depth; `submit` blocks when full (backpressure).
     pub queue_depth: usize,
-    /// Threads each worker's solver may use for the assignment step.
+    /// Threads each worker's solver may use for the assignment step
+    /// (applied to jobs that leave `threads` at 0).
     pub solver_threads: usize,
-    /// Artifact directory for PJRT-engine jobs.
+    /// Artifact directory for PJRT-engine jobs without an explicit one.
     pub artifact_dir: std::path::PathBuf,
 }
 
@@ -51,17 +64,135 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Lifecycle of a submitted job, as seen through its [`JobHandle`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Waiting in the queue.
+    Queued,
+    /// A worker is running it.
+    Running,
+    /// Finished; the result is (or was) available via [`JobHandle::wait`].
+    Done,
+}
+
+enum SlotState {
+    Queued,
+    Running,
+    Done(Option<JobResult>),
+}
+
+struct JobShared {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+    cancel: CancelToken,
+}
+
+impl JobShared {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(SlotState::Queued),
+            cv: Condvar::new(),
+            cancel: CancelToken::new(),
+        }
+    }
+
+    fn set_running(&self) {
+        *self.state.lock().unwrap() = SlotState::Running;
+    }
+
+    fn fulfill(&self, result: JobResult) {
+        let mut st = self.state.lock().unwrap();
+        *st = SlotState::Done(Some(result));
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to one submitted job: poll its status, wait for the result, or
+/// cancel it (cooperatively — queued jobs are dropped at pickup, running
+/// jobs stop at the next solver iteration boundary and come back as
+/// [`ClusterError::Cancelled`]).
+pub struct JobHandle {
+    id: u64,
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    /// Coordinator-assigned job id (echoed in the result).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Current lifecycle state (non-blocking poll).
+    pub fn status(&self) -> JobStatus {
+        match &*self.shared.state.lock().unwrap() {
+            SlotState::Queued => JobStatus::Queued,
+            SlotState::Running => JobStatus::Running,
+            SlotState::Done(_) => JobStatus::Done,
+        }
+    }
+
+    /// Request cancellation.
+    pub fn cancel(&self) {
+        self.shared.cancel.cancel();
+    }
+
+    /// The job's cancel token (e.g. to wire several jobs to one switch).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.shared.cancel.clone()
+    }
+
+    /// Block until the job finishes and take its result.
+    pub fn wait(self) -> JobResult {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let SlotState::Done(result) = &mut *st {
+                return result.take().expect("JobHandle::wait consumes the handle");
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+}
+
 enum Envelope {
-    Job(Box<JobSpec>, Instant),
+    Job(Box<JobTicket>),
     Shutdown,
+}
+
+struct JobTicket {
+    id: u64,
+    /// Taken by the worker; `Some` until the job actually runs.
+    request: Option<ClusterRequest>,
+    shared: Arc<JobShared>,
+    enqueued_at: Instant,
+}
+
+/// A ticket dropped before its job was fulfilled (worker death, queue
+/// teardown) still resolves its handle — [`JobHandle::wait`] must never
+/// hang, mirroring the pre-handle API's "all workers exited" error.
+impl Drop for JobTicket {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        if !matches!(*st, SlotState::Done(_)) {
+            *st = SlotState::Done(Some(JobResult {
+                id: self.id,
+                outcome: Err(ClusterError::Shutdown),
+                queue_wait: self.enqueued_at.elapsed(),
+                service_time: Duration::ZERO,
+                worker: usize::MAX,
+            }));
+            drop(st);
+            self.shared.cv.notify_all();
+        }
+    }
 }
 
 /// The running service.
 pub struct Coordinator {
     tx: mpsc::SyncSender<Envelope>,
-    results_rx: Mutex<mpsc::Receiver<JobResult>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    submitted: std::sync::atomic::AtomicU64,
+    submitted: AtomicU64,
+    next_id: AtomicU64,
 }
 
 impl Coordinator {
@@ -69,61 +200,76 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Self {
         let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let mut workers = Vec::new();
         for widx in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
-            let results_tx = results_tx.clone();
             let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &rx, &results_tx)));
+            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &rx)));
         }
-        Self {
-            tx,
-            results_rx: Mutex::new(results_rx),
-            workers,
-            submitted: std::sync::atomic::AtomicU64::new(0),
-        }
+        Self { tx, workers, submitted: AtomicU64::new(0), next_id: AtomicU64::new(0) }
     }
 
-    /// Submit a job; blocks when the queue is full (backpressure).
-    pub fn submit(&self, job: JobSpec) -> Result<()> {
-        self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Envelope::Job(Box::new(job), Instant::now()))
-            .context("coordinator is shut down")
-    }
-
-    /// Try to submit without blocking; `false` when the queue is full.
-    pub fn try_submit(&self, job: JobSpec) -> Result<bool> {
-        match self.tx.try_send(Envelope::Job(Box::new(job), Instant::now())) {
-            Ok(()) => {
-                self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                Ok(true)
-            }
-            Err(mpsc::TrySendError::Full(_)) => Ok(false),
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                anyhow::bail!("coordinator is shut down")
+    fn enqueue(
+        &self,
+        id: u64,
+        request: ClusterRequest,
+        blocking: bool,
+    ) -> Result<Option<JobHandle>, ClusterError> {
+        let shared = Arc::new(JobShared::new());
+        let ticket = Box::new(JobTicket {
+            id,
+            request: Some(request),
+            shared: Arc::clone(&shared),
+            enqueued_at: Instant::now(),
+        });
+        if blocking {
+            self.tx.send(Envelope::Job(ticket)).map_err(|_| ClusterError::Shutdown)?;
+        } else {
+            match self.tx.try_send(Envelope::Job(ticket)) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(_)) => return Ok(None),
+                Err(mpsc::TrySendError::Disconnected(_)) => return Err(ClusterError::Shutdown),
             }
         }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(JobHandle { id, shared }))
+    }
+
+    /// Submit a request; blocks when the queue is full (backpressure).
+    pub fn submit(&self, request: ClusterRequest) -> Result<JobHandle, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(self.enqueue(id, request, true)?.expect("blocking submit always enqueues"))
+    }
+
+    /// Try to submit without blocking; `None` when the queue is full.
+    pub fn try_submit(&self, request: ClusterRequest) -> Result<Option<JobHandle>, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.enqueue(id, request, false)
+    }
+
+    /// Submit a legacy [`JobSpec`] (converted through the request builder).
+    /// The spec's own `id` is kept and the auto-id counter is advanced past
+    /// it, so *later* [`Coordinator::submit`] calls stay collision-free —
+    /// but, as with the legacy API, nothing stops a caller-chosen id from
+    /// matching an id that was already handed out; shim-job id uniqueness
+    /// remains the caller's responsibility.
+    #[deprecated(note = "build a ClusterRequest and use Coordinator::submit")]
+    #[allow(deprecated)]
+    pub fn submit_spec(&self, job: JobSpec) -> Result<JobHandle, ClusterError> {
+        let id = job.id;
+        self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
+        let request = job.into_request()?;
+        Ok(self.enqueue(id, request, true)?.expect("blocking submit always enqueues"))
     }
 
     /// Number of jobs submitted so far.
     pub fn submitted(&self) -> u64 {
-        self.submitted.load(std::sync::atomic::Ordering::Relaxed)
+        self.submitted.load(Ordering::Relaxed)
     }
 
-    /// Receive the next completed job (blocking).
-    pub fn recv(&self) -> Result<JobResult> {
-        self.results_rx
-            .lock()
-            .unwrap()
-            .recv()
-            .context("all workers exited")
-    }
-
-    /// Drain exactly `count` results (blocking), in completion order.
-    pub fn collect(&self, count: usize) -> Result<Vec<JobResult>> {
-        (0..count).map(|_| self.recv()).collect()
+    /// Wait for a batch of handles, in submission order.
+    pub fn wait_all(handles: impl IntoIterator<Item = JobHandle>) -> Vec<JobResult> {
+        handles.into_iter().map(JobHandle::wait).collect()
     }
 
     /// Stop accepting jobs, finish the queue, join the workers.
@@ -138,84 +284,175 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
-    widx: usize,
-    cfg: &CoordinatorConfig,
-    rx: &Arc<Mutex<mpsc::Receiver<Envelope>>>,
-    results: &mpsc::Sender<JobResult>,
-) {
-    // PJRT runtime is created lazily per worker (it is not Send, so it must
-    // be born on this thread) and reused across that worker's jobs so the
-    // executable cache stays warm.
-    let mut pjrt: Option<std::rc::Rc<crate::runtime::PjrtRuntime>> = None;
+/// Render a caught worker panic into a result message.
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+fn worker_loop(widx: usize, cfg: &CoordinatorConfig, rx: &Arc<Mutex<mpsc::Receiver<Envelope>>>) {
+    // Warm state reused across this worker's jobs: the previous job's
+    // workspace (reused whenever the next job's spec matches) and the PJRT
+    // runtime (not `Send`, so it must be born on this thread).
+    let mut warm: Option<Workspace> = None;
+    let mut pjrt: Option<(PathBuf, Rc<crate::runtime::PjrtRuntime>)> = None;
     loop {
         let msg = {
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let (job, enqueued_at) = match msg {
-            Ok(Envelope::Job(job, at)) => (job, at),
+        let mut ticket = match msg {
+            Ok(Envelope::Job(ticket)) => ticket,
             Ok(Envelope::Shutdown) | Err(_) => return,
         };
-        let queue_wait = enqueued_at.elapsed();
+        let id = ticket.id;
+        let request = ticket.request.take().expect("every ticket carries a request");
+        let shared = Arc::clone(&ticket.shared);
+        let queue_wait = ticket.enqueued_at.elapsed();
+        shared.set_running();
         let sw = Stopwatch::start();
-        let outcome = run_job(&job, cfg, &mut pjrt);
-        let result = JobResult {
-            id: job.id,
-            outcome: outcome.map_err(|e| format!("{e:#}")),
+        let cancel = shared.cancel.clone();
+        let outcome = if cancel.is_cancelled() {
+            Err(ClusterError::Cancelled)
+        } else {
+            let warm_slot = warm.take();
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job(request, cfg, warm_slot, &mut pjrt, &cancel)
+            }));
+            match caught {
+                Ok((outcome, ws)) => {
+                    warm = ws;
+                    outcome
+                }
+                // A panicking job must not take the worker down (failure
+                // isolation); its workspace is dropped as suspect.
+                Err(panic) => Err(ClusterError::Internal(panic_message(panic))),
+            }
+        };
+        shared.fulfill(JobResult {
+            id,
+            outcome,
             queue_wait,
             service_time: sw.elapsed(),
             worker: widx,
-        };
-        if results.send(result).is_err() {
-            return; // caller dropped the coordinator
-        }
+        });
     }
 }
 
+/// Run one job, threading the worker's warm workspace through: returns the
+/// outcome plus the workspace to keep for the next job.
+#[allow(clippy::type_complexity)]
 fn run_job(
-    job: &JobSpec,
+    request: ClusterRequest,
     cfg: &CoordinatorConfig,
-    pjrt: &mut Option<std::rc::Rc<crate::runtime::PjrtRuntime>>,
-) -> Result<JobOutcome> {
-    let data = job.data.materialize()?;
-    anyhow::ensure!(job.k >= 1 && job.k <= data.n(), "bad k={} for n={}", job.k, data.n());
-    let mut rng = Pcg32::seed_from_u64(job.seed);
-    let c0 = seed_centroids(&data, job.k, job.init, &mut rng);
-    let solver_cfg = job.solver_config(cfg.solver_threads);
-    let mut solver = if job.engine == crate::config::EngineKind::Pjrt {
-        let rt = match pjrt {
-            Some(rt) => std::rc::Rc::clone(rt),
-            None => {
-                let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&cfg.artifact_dir)?);
-                *pjrt = Some(std::rc::Rc::clone(&rt));
-                rt
-            }
-        };
-        Solver::with_engine(solver_cfg, Box::new(crate::runtime::PjrtEngine::new(rt)))
-    } else {
-        Solver::new(solver_cfg)
+    warm: Option<Workspace>,
+    pjrt: &mut Option<(PathBuf, Rc<crate::runtime::PjrtRuntime>)>,
+    cancel: &CancelToken,
+) -> (Result<JobOutcome, ClusterError>, Option<Workspace>) {
+    let request = request.with_service_defaults(cfg.solver_threads, &cfg.artifact_dir);
+    let spec = request.workspace_spec();
+    let session = match warm {
+        Some(ws) if ws.matches(&spec) => ClusterSession::with_workspace(request, ws),
+        _ if spec.engine == EngineKind::Pjrt => {
+            // Share one PJRT runtime (compiled-executable cache) per worker
+            // across jobs, keyed by artifact directory.
+            let dir = spec
+                .artifact_dir
+                .clone()
+                .unwrap_or_else(crate::runtime::default_artifact_dir);
+            let rt = match pjrt {
+                Some((cached_dir, rt)) if *cached_dir == dir => Rc::clone(rt),
+                _ => match crate::runtime::PjrtRuntime::open(&dir) {
+                    Ok(rt) => {
+                        let rt = Rc::new(rt);
+                        *pjrt = Some((dir, Rc::clone(&rt)));
+                        rt
+                    }
+                    Err(e) => {
+                        return (
+                            Err(ClusterError::Engine {
+                                engine: "pjrt",
+                                reason: format!("{e:#}"),
+                            }),
+                            None,
+                        )
+                    }
+                },
+            };
+            let engine = Box::new(crate::runtime::PjrtEngine::new(rt));
+            ClusterSession::with_workspace(request, Workspace::from_engine(engine, spec))
+        }
+        _ => ClusterSession::open(request),
     };
-    let report = solver.run(&data, c0);
-    Ok(JobOutcome {
-        iterations: report.iterations,
-        accepted: report.accepted,
-        energy: report.energy,
-        mse: report.mse,
-        converged: report.converged,
-        centroids: report.centroids,
-    })
+    let mut session = match session {
+        Ok(s) => s,
+        Err(e) => return (Err(e), None),
+    };
+    let report = match session.run_with(&mut NoopObserver, cancel) {
+        Ok(r) => r,
+        Err(e) => return (Err(e), Some(session.into_workspace())),
+    };
+    let precision = session.request().precision();
+    let engine = session.request().engine();
+    let mut ws = session.into_workspace();
+    // Recycle the report buffers the outcome does not keep, so the warm
+    // workspace serves same-spec job streams allocation-free — the
+    // service-side counterpart of `ClusterSession::recycle`.
+    let outcome = if report.cancelled {
+        ws.recycle(report);
+        Err(ClusterError::Cancelled)
+    } else {
+        let crate::kmeans::RunReport {
+            iterations,
+            accepted,
+            energy,
+            mse,
+            converged,
+            centroids,
+            assignment,
+            energy_trace,
+            m_trace,
+            ..
+        } = report;
+        ws.recycle_buffers(assignment, energy_trace, m_trace);
+        Ok(JobOutcome {
+            iterations,
+            accepted,
+            energy,
+            mse,
+            converged,
+            precision,
+            engine,
+            centroids,
+        })
+    };
+    (outcome, Some(ws))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::rng::Pcg32;
     use std::sync::Arc;
 
     fn tiny_data(seed: u64) -> Arc<crate::data::DataMatrix> {
         let mut rng = Pcg32::seed_from_u64(seed);
         Arc::new(synth::gaussian_blobs(&mut rng, 300, 3, 4, 2.0, 0.3))
+    }
+
+    fn inline_request(seed: u64, k: usize) -> ClusterRequest {
+        ClusterRequest::builder()
+            .inline(tiny_data(seed))
+            .k(k)
+            .seed(seed)
+            .build()
+            .expect("valid request")
     }
 
     #[test]
@@ -225,18 +462,20 @@ mod tests {
             queue_depth: 8,
             ..CoordinatorConfig::default()
         });
-        for id in 0..6 {
-            coord.submit(JobSpec::inline(id, tiny_data(id), 4)).unwrap();
+        let mut handles = Vec::new();
+        for seed in 0..6 {
+            handles.push(coord.submit(inline_request(seed, 4)).unwrap());
         }
-        let results = coord.collect(6).unwrap();
-        assert_eq!(results.len(), 6);
-        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        let mut ids: Vec<u64> = handles.iter().map(JobHandle::id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        let results = Coordinator::wait_all(handles);
+        assert_eq!(results.len(), 6);
         for r in &results {
             let out = r.outcome.as_ref().expect("job should succeed");
             assert!(out.converged);
             assert!(out.mse > 0.0);
+            assert_eq!(out.engine, EngineKind::Hamerly);
             assert!(r.service_time.as_nanos() > 0);
         }
         coord.shutdown();
@@ -245,15 +484,21 @@ mod tests {
     #[test]
     fn failed_job_is_isolated() {
         let coord = Coordinator::start(CoordinatorConfig::default());
-        // k > n fails; the next job still succeeds.
-        let mut bad = JobSpec::inline(1, tiny_data(1), 4);
-        bad.k = 10_000;
-        coord.submit(bad).unwrap();
-        coord.submit(JobSpec::inline(2, tiny_data(2), 4)).unwrap();
-        let results = coord.collect(2).unwrap();
-        let bad_r = results.iter().find(|r| r.id == 1).unwrap();
-        assert!(bad_r.outcome.is_err());
-        let good_r = results.iter().find(|r| r.id == 2).unwrap();
+        // A registry source defers the k ≤ n check to the worker: the job
+        // fails with a typed error and the next one still succeeds.
+        let bad = ClusterRequest::builder()
+            .registry("Birch", 0.0001)
+            .k(50_000)
+            .build()
+            .unwrap();
+        let h_bad = coord.submit(bad).unwrap();
+        let h_good = coord.submit(inline_request(2, 4)).unwrap();
+        let bad_r = h_bad.wait();
+        assert!(matches!(
+            bad_r.outcome,
+            Err(ClusterError::InvalidRequest { field: "k", .. })
+        ));
+        let good_r = h_good.wait();
         assert!(good_r.outcome.is_ok());
         coord.shutdown();
     }
@@ -266,19 +511,17 @@ mod tests {
             queue_depth: 1,
             ..CoordinatorConfig::default()
         });
-        let mut accepted = 0;
-        let mut rejected = 0;
-        for id in 0..32 {
-            if coord.try_submit(JobSpec::inline(id, tiny_data(0), 8)).unwrap() {
-                accepted += 1;
-            } else {
-                rejected += 1;
+        let mut handles = Vec::new();
+        let mut rejected = 0u64;
+        for seed in 0..32 {
+            match coord.try_submit(inline_request(seed % 2, 8)).unwrap() {
+                Some(h) => handles.push(h),
+                None => rejected += 1,
             }
         }
-        assert!(accepted >= 1);
-        // Drain what was accepted.
-        let _ = coord.collect(accepted as usize).unwrap();
-        assert_eq!(coord.submitted(), accepted);
+        assert!(!handles.is_empty());
+        assert_eq!(coord.submitted(), handles.len() as u64);
+        let _ = Coordinator::wait_all(handles);
         coord.shutdown();
         // On a 1-core box the worker rarely keeps up; but even if it does,
         // the test only requires that try_submit never blocked.
@@ -288,14 +531,70 @@ mod tests {
     #[test]
     fn registry_job_via_coordinator() {
         let coord = Coordinator::start(CoordinatorConfig::default());
-        let job = JobSpec {
-            data: JobData::Registry { name: "HTRU2".into(), scale: 0.02 },
-            ..JobSpec::inline(9, tiny_data(0), 5)
-        };
-        coord.submit(job).unwrap();
-        let r = coord.recv().unwrap();
-        assert_eq!(r.id, 9);
+        let req = ClusterRequest::builder()
+            .registry("HTRU2", 0.02)
+            .k(5)
+            .seed(9)
+            .build()
+            .unwrap();
+        let handle = coord.submit(req).unwrap();
+        let r = handle.wait();
         assert!(r.outcome.is_ok(), "{:?}", r.outcome);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancelled_queued_job_is_dropped_at_pickup() {
+        // One worker: the first (slow-ish) job occupies it while we cancel
+        // the second, still-queued job.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..CoordinatorConfig::default()
+        });
+        let mut rng = Pcg32::seed_from_u64(77);
+        let slow = Arc::new(synth::noisy_curve(&mut rng, 6000, 3, 0.3));
+        let slow_req = ClusterRequest::builder()
+            .inline(slow)
+            .k(12)
+            .seed(1)
+            .build()
+            .unwrap();
+        let h_slow = coord.submit(slow_req).unwrap();
+        let h_victim = coord.submit(inline_request(3, 4)).unwrap();
+        h_victim.cancel();
+        assert!(h_slow.wait().outcome.is_ok());
+        let victim = h_victim.wait();
+        assert!(matches!(victim.outcome, Err(ClusterError::Cancelled)));
+        coord.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn job_spec_shim_matches_request_path() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 8,
+            ..CoordinatorConfig::default()
+        });
+        let data = tiny_data(5);
+        let spec = JobSpec::inline(41, Arc::clone(&data), 4);
+        let (seed, k) = (spec.seed, spec.k);
+        let h_old = coord.submit_spec(spec).unwrap();
+        assert_eq!(h_old.id(), 41, "the shim keeps the caller-chosen id");
+        let req = ClusterRequest::builder()
+            .inline(data)
+            .k(k)
+            .seed(seed)
+            .build()
+            .unwrap();
+        let h_new = coord.submit(req).unwrap();
+        let old_r = h_old.wait().outcome.unwrap();
+        let new_r = h_new.wait().outcome.unwrap();
+        // Identical job → identical deterministic result through both APIs.
+        assert_eq!(old_r.iterations, new_r.iterations);
+        assert_eq!(old_r.energy.to_bits(), new_r.energy.to_bits());
+        assert_eq!(old_r.centroids, new_r.centroids);
         coord.shutdown();
     }
 }

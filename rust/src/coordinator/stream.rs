@@ -29,6 +29,10 @@ pub struct StreamingClusterer {
     seen: usize,
     rng: Pcg32,
     solver_cfg: SolverConfig,
+    /// Warm solver for `finalize`, built lazily on first use and reused
+    /// across finalize calls (workspace reuse: repeated polishes on a
+    /// stable-size reservoir are allocation-free at steady state).
+    solver: Option<Solver>,
 }
 
 impl StreamingClusterer {
@@ -45,6 +49,7 @@ impl StreamingClusterer {
             seen: 0,
             rng: Pcg32::seed_from_u64(seed),
             solver_cfg,
+            solver: None,
         }
     }
 
@@ -107,14 +112,20 @@ impl StreamingClusterer {
     }
 
     /// Polish the streaming estimate with the paper's solver over the
-    /// reservoir; returns the run report (final centroids inside).
+    /// reservoir; returns the run report (final centroids inside). Returns
+    /// `None` before enough samples arrived, or when the configured engine
+    /// cannot be constructed in-process (`EngineKind::Pjrt` without
+    /// artifacts — configure a CPU engine for streaming finalize).
     pub fn finalize(&mut self) -> Option<RunReport> {
         let c0 = self.centroids.clone()?;
         let res = self.reservoir_matrix();
         if res.n() < self.k {
             return None;
         }
-        let report = Solver::new(self.solver_cfg.clone()).run(&res, c0);
+        if self.solver.is_none() {
+            self.solver = Some(Solver::try_new(self.solver_cfg.clone()).ok()?);
+        }
+        let report = self.solver.as_mut().expect("just built").run(&res, c0);
         self.centroids = Some(report.centroids.clone());
         Some(report)
     }
@@ -146,7 +157,7 @@ mod tests {
         // Quality: within 2x of a full-batch run on the same data.
         let mut srng = Pcg32::seed_from_u64(8);
         let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
-        let batch = Solver::new(cfg()).run(&x, c0);
+        let batch = Solver::try_new(cfg()).unwrap().run(&x, c0);
         let pool = ThreadPool::new(1);
         let stream_assign = brute_force_assign(&x, sc.centroids().unwrap());
         let stream_e = energy(&x, sc.centroids().unwrap(), &stream_assign, &pool);

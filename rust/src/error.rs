@@ -1,0 +1,91 @@
+//! Typed errors for the public clustering API.
+//!
+//! Everything the request/session surface can fail with is enumerated here,
+//! so library callers match on variants instead of parsing `anyhow` strings.
+//! Internal plumbing (PJRT artifact loading, dataset IO) still uses `anyhow`
+//! for context-rich messages; those are folded into the typed variants at
+//! the API boundary with their full context chain preserved in `reason`.
+
+/// Error type of the `ClusterRequest` / `ClusterSession` / coordinator API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// A request field failed validation (builder or run-time shape check).
+    InvalidRequest {
+        /// Which field was rejected (`"k"`, `"source"`, `"init"`, ...).
+        field: &'static str,
+        /// Human-readable explanation.
+        reason: String,
+    },
+    /// The data source could not be materialized.
+    Data {
+        /// Label of the offending source (registry name, path, ...).
+        source: String,
+        /// Human-readable explanation.
+        reason: String,
+    },
+    /// An assignment engine could not be constructed or failed fatally.
+    Engine {
+        /// Canonical engine name (`"pjrt"`, ...).
+        engine: &'static str,
+        /// Human-readable explanation.
+        reason: String,
+    },
+    /// The run was cancelled through a [`crate::observe::CancelToken`].
+    Cancelled,
+    /// The coordinator no longer accepts jobs.
+    Shutdown,
+    /// A worker failed unexpectedly (panic isolated per job).
+    Internal(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::InvalidRequest { field, reason } => {
+                write!(f, "invalid request: {field}: {reason}")
+            }
+            Self::Data { source, reason } => {
+                write!(f, "data source '{source}': {reason}")
+            }
+            Self::Engine { engine, reason } => {
+                write!(f, "engine '{engine}': {reason}")
+            }
+            Self::Cancelled => write!(f, "run cancelled"),
+            Self::Shutdown => write!(f, "coordinator is shut down"),
+            Self::Internal(reason) => write!(f, "internal failure: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl ClusterError {
+    /// Shorthand for a validation failure.
+    pub(crate) fn invalid(field: &'static str, reason: impl Into<String>) -> Self {
+        Self::InvalidRequest { field, reason: reason.into() }
+    }
+
+    /// True for [`ClusterError::Cancelled`].
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, Self::Cancelled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_field() {
+        let e = ClusterError::invalid("k", "must be at least 1");
+        assert_eq!(e.to_string(), "invalid request: k: must be at least 1");
+        assert!(!e.is_cancelled());
+        assert!(ClusterError::Cancelled.is_cancelled());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        let e: anyhow::Error = ClusterError::Shutdown.into();
+        assert!(e.to_string().contains("shut down"));
+    }
+}

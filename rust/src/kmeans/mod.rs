@@ -1,45 +1,80 @@
 //! The K-Means solver — the paper's Algorithm 1 end to end, plus the plain
 //! Lloyd baseline it is compared against.
 //!
-//! One [`Solver`] instance drives one clustering run: the assignment engine
-//! (Hamerly by default, as in the paper), the update step, the stabilized
-//! Anderson accelerator, the dynamic-`m` controller, the energy guard, and
-//! the same-assignment convergence criterion. Timings are broken down per
-//! phase so the benches can report the paper's overhead claims.
+//! One [`Solver`] drives clustering runs on top of a reusable
+//! [`Workspace`] (assignment engine, thread pool, kernel caches, centroid /
+//! assignment / Anderson scratch): repeated runs on same-shape data reuse
+//! every internal buffer across calls, not just within one. Construction is
+//! fallible ([`Solver::try_new`]) so the PJRT engine's artifact loading
+//! reports a typed [`crate::error::ClusterError`] instead of panicking; the
+//! higher-level entry point is [`crate::session::ClusterSession`], which
+//! owns the workspace, the data source and the seeding.
+//!
+//! Every run accepts an [`Observer`] (per-iteration energy, `m`, phase
+//! timings, proposed centroids) and a [`CancelToken`] checked at iteration
+//! boundaries. Timings are broken down per phase so the benches can report
+//! the paper's overhead claims.
 
 mod report;
+mod workspace;
 
 pub use report::RunReport;
+pub use workspace::{Workspace, WorkspaceSpec};
 
 use crate::anderson::{AndersonAccelerator, MController};
 use crate::config::Acceleration;
 pub use crate::config::SolverConfig;
 use crate::data::DataMatrix;
-use crate::lloyd::{self, Assignment, AssignmentEngine};
+use crate::error::ClusterError;
+use crate::lloyd::{self, AssignmentEngine};
 use crate::metrics::{PhaseTimer, Stopwatch};
-use crate::par::ThreadPool;
+use crate::observe::{CancelToken, IterationInfo, NoopObserver, Observer, ObserverControl};
 
-/// Algorithm 1 driver.
+/// Algorithm 1 driver over a reusable [`Workspace`].
 pub struct Solver {
     cfg: SolverConfig,
-    engine: Box<dyn AssignmentEngine>,
-    pool: ThreadPool,
+    ws: Workspace,
+}
+
+/// Whether the configured wall-clock budget is exhausted.
+fn over_budget(sw: &Stopwatch, limit: Option<std::time::Duration>) -> bool {
+    limit.is_some_and(|l| sw.elapsed() >= l)
 }
 
 impl Solver {
-    /// Build a solver with the engine named in the config (panics on
-    /// `EngineKind::Pjrt`, which needs artifacts — use [`Solver::with_engine`]).
+    /// Build a solver with the engine named in the config.
+    ///
+    /// Deprecated because it panics on construction failure (the documented
+    /// `EngineKind::Pjrt` case): use the fallible [`Solver::try_new`], or
+    /// [`crate::session::ClusterSession::open`] for the full request API.
+    #[deprecated(note = "panics on EngineKind::Pjrt; use Solver::try_new or ClusterSession::open")]
     pub fn new(cfg: SolverConfig) -> Self {
-        let engine = lloyd::make_engine_with(cfg.engine, cfg.precision);
-        Self::with_engine(cfg, engine)
+        Self::try_new(cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Build a solver with the engine named in the config. Every CPU engine
+    /// succeeds; `EngineKind::Pjrt` returns a typed error here because it
+    /// needs an artifact directory — open it through
+    /// [`crate::session::ClusterSession`] (which carries one) or wrap a
+    /// `runtime::PjrtEngine` with [`Solver::with_engine`].
+    pub fn try_new(cfg: SolverConfig) -> Result<Self, ClusterError> {
+        let ws = Workspace::open(&WorkspaceSpec::from_config(&cfg))?;
+        Ok(Self { cfg, ws })
     }
 
     /// Build a solver around a caller-provided engine (e.g. the PJRT
     /// engine from [`crate::runtime`]).
     pub fn with_engine(cfg: SolverConfig, engine: Box<dyn AssignmentEngine>) -> Self {
-        let pool =
-            if cfg.threads == 0 { ThreadPool::host_sized() } else { ThreadPool::new(cfg.threads) };
-        Self { cfg, engine, pool }
+        let spec = WorkspaceSpec::from_config(&cfg);
+        let ws = Workspace::from_engine(engine, spec);
+        Self { cfg, ws }
+    }
+
+    /// Build a solver over an existing (warm) workspace. The caller is
+    /// responsible for the workspace matching the config — sessions and the
+    /// coordinator check [`Workspace::matches`] first.
+    pub(crate) fn from_workspace(cfg: SolverConfig, ws: Workspace) -> Self {
+        Self { cfg, ws }
     }
 
     /// Configuration in use.
@@ -47,57 +82,135 @@ impl Solver {
         &self.cfg
     }
 
+    /// The workspace backing this solver.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    pub(crate) fn workspace_mut(&mut self) -> &mut Workspace {
+        &mut self.ws
+    }
+
+    /// Release the workspace for reuse by another solver/session.
+    pub fn into_workspace(self) -> Workspace {
+        self.ws
+    }
+
     /// Run to convergence (same assignment twice) or `max_iters`.
     ///
     /// With `Acceleration::None` this is exactly Lloyd's algorithm on the
     /// configured engine; otherwise it is Algorithm 1.
     pub fn run(&mut self, x: &DataMatrix, c0: DataMatrix) -> RunReport {
+        self.run_observed(x, &c0, &mut NoopObserver, &CancelToken::new())
+    }
+
+    /// [`Solver::run`] with a per-iteration [`Observer`] and a
+    /// [`CancelToken`] checked at iteration boundaries. A cancelled run
+    /// returns its report with [`RunReport::cancelled`] set and the last
+    /// guarded (Lloyd-consistent) iterate as centroids; an observer
+    /// [`ObserverControl::Stop`] sets [`RunReport::stopped_early`].
+    pub fn run_observed(
+        &mut self,
+        x: &DataMatrix,
+        c0: &DataMatrix,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
+    ) -> RunReport {
         assert_eq!(c0.d(), x.d(), "centroid/data dimension mismatch");
         assert!(c0.n() >= 1 && c0.n() <= x.n(), "bad K");
-        match self.cfg.accel {
-            Acceleration::None => self.run_lloyd(x, c0),
-            Acceleration::FixedM(m0) => self.run_accelerated(x, c0, m0, false),
-            Acceleration::DynamicM(m0) => self.run_accelerated(x, c0, m0, true),
-        }
+        self.ws.scratch.begin_run();
+        observer.on_start(x, c0);
+        let report = match self.cfg.accel {
+            Acceleration::None => self.run_lloyd(x, c0, observer, cancel),
+            Acceleration::FixedM(m0) => self.run_accelerated(x, c0, m0, false, observer, cancel),
+            Acceleration::DynamicM(m0) => self.run_accelerated(x, c0, m0, true, observer, cancel),
+        };
+        observer.on_finish(&report);
+        report
     }
 
     /// Plain Lloyd: assignment + update until the assignment repeats.
-    fn run_lloyd(&mut self, x: &DataMatrix, c0: DataMatrix) -> RunReport {
+    fn run_lloyd(
+        &mut self,
+        x: &DataMatrix,
+        c0: &DataMatrix,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
+    ) -> RunReport {
         let sw = Stopwatch::start();
         let mut phases = PhaseTimer::new();
-        let evals0 = self.engine.distance_evals();
-        self.engine.reset();
+        let evals0 = self.ws.engine.distance_evals();
+        self.ws.engine.reset();
         let (k, d) = (c0.n(), c0.d());
-        let mut c = c0;
-        // Rotating centroid buffer + swapped assignment buffers: the loop
-        // itself allocates nothing at steady state.
-        let mut c_next = DataMatrix::zeros(k, d);
-        let mut assign = Assignment::new();
-        let mut prev_assign: Option<Assignment> = None;
-        let mut trace = Vec::new();
+        // Workspace-held buffers: the loop itself allocates nothing at
+        // steady state, and a warm workspace reuses them across runs.
+        let mut c = self.ws.scratch.take_output_mat(k, d);
+        c.as_mut_slice().copy_from_slice(c0.as_slice());
+        let mut c_next = self.ws.scratch.take_mat(k, d);
+        let mut assign = self.ws.scratch.take_assign();
+        let mut prev_assign = self.ws.scratch.take_assign();
+        let mut trace = if self.cfg.record_trace {
+            self.ws.scratch.take_trace_f64()
+        } else {
+            Vec::new()
+        };
+        let need_energy = self.cfg.record_trace || observer.wants_energy();
         let mut iterations = 0;
         let mut converged = false;
+        let mut cancelled = false;
+        let mut stopped_early = false;
         for _t in 0..self.cfg.max_iters {
-            phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
-            if prev_assign.as_deref() == Some(assign.as_slice()) {
+            phases.time("assign", || self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign));
+            if prev_assign.as_slice() == assign.as_slice() {
                 converged = true;
                 break;
             }
+            // Iteration boundary: the freshly computed assignment pairs
+            // with `c`, so an interrupted run still returns a consistent
+            // (centroids, assignment) state.
+            if cancel.is_cancelled() || over_budget(&sw, self.cfg.time_limit) {
+                cancelled = cancel.is_cancelled();
+                stopped_early = !cancelled;
+                std::mem::swap(&mut prev_assign, &mut assign);
+                break;
+            }
             iterations += 1;
-            if self.cfg.record_trace {
-                trace.push(phases.time("energy", || lloyd::energy(x, &c, &assign, &self.pool)));
+            let mut iter_energy = None;
+            if need_energy {
+                let e = phases.time("energy", || lloyd::energy(x, &c, &assign, &self.ws.pool));
+                if self.cfg.record_trace {
+                    trace.push(e);
+                }
+                iter_energy = Some(e);
             }
             phases.time("update", || {
-                lloyd::update_step(x, &assign, &c, &mut c_next, &self.pool)
+                lloyd::update_step(x, &assign, &c, &mut c_next, &self.ws.pool)
             });
-            match prev_assign.as_mut() {
-                Some(p) => std::mem::swap(p, &mut assign),
-                None => prev_assign = Some(std::mem::take(&mut assign)),
-            }
+            std::mem::swap(&mut prev_assign, &mut assign);
             std::mem::swap(&mut c, &mut c_next);
+            let control = observer.on_iteration(&IterationInfo {
+                iteration: iterations,
+                energy: iter_energy,
+                m: 0,
+                accelerated_candidate: false,
+                accepted: false,
+                centroids: &c,
+                phases: &phases,
+            });
+            if control == ObserverControl::Stop {
+                stopped_early = true;
+                break;
+            }
         }
-        let final_assign = prev_assign.unwrap_or(assign);
-        let energy = lloyd::energy(x, &c, &final_assign, &self.pool);
+        let final_assign = if !prev_assign.is_empty() {
+            self.ws.scratch.put_assign(assign);
+            prev_assign
+        } else {
+            self.ws.scratch.put_assign(prev_assign);
+            assign
+        };
+        let energy = lloyd::energy(x, &c, &final_assign, &self.ws.pool);
+        self.ws.scratch.put_mat(c_next);
         RunReport {
             iterations,
             accepted: 0,
@@ -105,9 +218,11 @@ impl Solver {
             energy,
             mse: energy / x.n() as f64,
             converged,
+            cancelled,
+            stopped_early,
             energy_trace: trace,
             m_trace: Vec::new(),
-            dist_evals: self.engine.distance_evals() - evals0,
+            dist_evals: self.ws.engine.distance_evals() - evals0,
             phases,
             centroids: c,
             assignment: final_assign,
@@ -119,17 +234,20 @@ impl Solver {
     fn run_accelerated(
         &mut self,
         x: &DataMatrix,
-        c0: DataMatrix,
+        c0: &DataMatrix,
         m0: usize,
         dynamic: bool,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
     ) -> RunReport {
         let sw = Stopwatch::start();
         let mut phases = PhaseTimer::new();
-        let evals0 = self.engine.distance_evals();
-        self.engine.reset();
+        let evals0 = self.ws.engine.distance_evals();
+        self.ws.engine.reset();
         let (k, d) = (c0.n(), c0.d());
         let dim = k * d;
-        let mut acc = AndersonAccelerator::new(self.cfg.m_max.max(1), dim);
+        let mut acc: AndersonAccelerator =
+            self.ws.scratch.take_accelerator(self.cfg.m_max.max(1), dim);
         let mut controller = MController::new(
             m0.min(self.cfg.m_max),
             self.cfg.m_max,
@@ -138,22 +256,32 @@ impl Solver {
         );
 
         // Line 1: C^1 = C_AU^1 = G(C^0).
-        let mut assign = Assignment::new();
-        phases.time("assign", || self.engine.assign(x, &c0, &self.pool, &mut assign));
-        let mut c_au = DataMatrix::zeros(k, d);
-        phases.time("update", || lloyd::update_step(x, &assign, &c0, &mut c_au, &self.pool));
-        let mut c = c_au.clone();
-        // Steady-state scratch, all allocated once up front: the fused
+        let mut assign = self.ws.scratch.take_assign();
+        phases.time("assign", || self.ws.engine.assign(x, c0, &self.ws.pool, &mut assign));
+        let mut c_au = self.ws.scratch.take_mat(k, d);
+        phases.time("update", || lloyd::update_step(x, &assign, c0, &mut c_au, &self.ws.pool));
+        let mut c = self.ws.scratch.take_output_mat(k, d);
+        c.as_mut_slice().copy_from_slice(c_au.as_slice());
+        // Steady-state scratch, all drawn from the workspace: the fused
         // update+energy output matrix, the Anderson residual `f_t`, and the
         // pair of assignment buffers that rotate through `prev_assign`. The
         // hot loop below performs no heap allocation — buffers are swapped
-        // or overwritten in place (the rare exceptions, by design: the
-        // first `m` history pushes inside the accelerator and its
-        // ill-conditioned QR fall-back).
-        let mut c_next = DataMatrix::zeros(k, d);
-        let mut f_t = vec![0.0f64; dim];
-        let mut prev_assign = Some(std::mem::take(&mut assign));
+        // or overwritten in place, and a warm workspace carries them (plus
+        // the accelerator's history columns) across runs.
+        let mut c_next = self.ws.scratch.take_mat(k, d);
+        let mut f_t = self.ws.scratch.take_f_t(dim);
+        let mut prev_assign = std::mem::replace(&mut assign, self.ws.scratch.take_assign());
         assign.reserve(x.n());
+        let mut trace = if self.cfg.record_trace {
+            self.ws.scratch.take_trace_f64()
+        } else {
+            Vec::new()
+        };
+        let mut m_trace = if self.cfg.record_trace {
+            self.ws.scratch.take_trace_usize()
+        } else {
+            Vec::new()
+        };
 
         let mut e_prev = f64::INFINITY; // E^{t-1}
         let mut decrease_prev = f64::INFINITY; // E^{t-2} − E^{t-1}
@@ -161,12 +289,23 @@ impl Solver {
         let mut iterations = 0;
         let mut accepted = 0;
         let mut converged = false;
-        let mut trace = Vec::new();
-        let mut m_trace = Vec::new();
+        let mut cancelled = false;
+        let mut stopped_early = false;
 
         for _t in 1..=self.cfg.max_iters {
+            // Iteration boundary: on cancellation / budget exhaustion fall
+            // back from an unguarded accelerated proposal to the last
+            // Lloyd iterate so the returned state is always guarded.
+            if cancel.is_cancelled() || over_budget(&sw, self.cfg.time_limit) {
+                if candidate_was_accel {
+                    c.as_mut_slice().copy_from_slice(c_au.as_slice());
+                }
+                cancelled = cancel.is_cancelled();
+                stopped_early = !cancelled;
+                break;
+            }
             // Line 3: P^t = Assignment-Step(X, C^t).
-            phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
+            phases.time("assign", || self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign));
             // Lines 4–6: converged when assignments repeat. The paper's own
             // convergence narrative ("… until the fall-back iterate using
             // Lloyd's algorithm results in the same assignment …") requires
@@ -176,13 +315,13 @@ impl Solver {
             // iterate's) and keep iterating until the joint fixed point is
             // verified. This makes the returned (C, P) exact: P is the
             // nearest-assignment of C and C the means of P.
-            if prev_assign.as_deref() == Some(assign.as_slice()) {
+            if prev_assign.as_slice() == assign.as_slice() {
                 if !candidate_was_accel {
                     converged = true;
                     break;
                 }
                 c.as_mut_slice().copy_from_slice(c_au.as_slice());
-                self.engine.rollback();
+                self.ws.engine.rollback();
                 candidate_was_accel = false;
                 continue;
             }
@@ -192,7 +331,7 @@ impl Solver {
             // C_AU^{t+1} = Update-Step(X, P^t) — the accelerated solver then
             // touches the samples exactly as often per iteration as Lloyd.
             let mut e = phases.time("update+energy", || {
-                lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.pool).1
+                lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.ws.pool).1
             });
             // Lines 8–12: adjust m from the decrease ratio.
             if dynamic {
@@ -202,24 +341,28 @@ impl Solver {
             // engine rolls back to the bound state it had *before* the
             // rejected jump, so the revert assignment only drifts the bounds
             // by one small Lloyd step instead of the jump there-and-back.
+            let mut accepted_this_iter = false;
             if e >= e_prev {
                 std::mem::swap(&mut c, &mut c_au); // C^t = C_AU^t
-                self.engine.rollback();
-                phases.time("assign", || self.engine.assign(x, &c, &self.pool, &mut assign));
+                self.ws.engine.rollback();
+                phases.time("assign", || {
+                    self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign)
+                });
                 // A reverted iterate might still match the previous
                 // assignment — that is Algorithm 1's terminal state (the
                 // fall-back Lloyd step changed nothing).
-                if prev_assign.as_deref() == Some(assign.as_slice()) {
+                if prev_assign.as_slice() == assign.as_slice() {
                     converged = true;
                     // Terminal probe, not a productive iteration.
                     iterations -= 1;
                     break;
                 }
                 e = phases.time("update+energy", || {
-                    lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.pool).1
+                    lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.ws.pool).1
                 });
             } else if candidate_was_accel {
                 accepted += 1;
+                accepted_this_iter = true;
             }
             if self.cfg.record_trace {
                 trace.push(e);
@@ -240,19 +383,40 @@ impl Solver {
             if candidate_was_accel {
                 // Save the bound state at C^t so a rejected jump can roll
                 // back instead of paying two large bound drifts.
-                self.engine.checkpoint();
+                self.ws.engine.checkpoint();
             }
-            match prev_assign.as_mut() {
-                Some(p) => std::mem::swap(p, &mut assign),
-                None => prev_assign = Some(std::mem::take(&mut assign)),
+            std::mem::swap(&mut prev_assign, &mut assign);
+            // `c` now holds the proposal for the next iteration.
+            let control = observer.on_iteration(&IterationInfo {
+                iteration: iterations,
+                energy: Some(e),
+                m: controller.m(),
+                accelerated_candidate: candidate_was_accel,
+                accepted: accepted_this_iter,
+                centroids: &c,
+                phases: &phases,
+            });
+            if control == ObserverControl::Stop {
+                if candidate_was_accel {
+                    c.as_mut_slice().copy_from_slice(c_au.as_slice());
+                }
+                stopped_early = true;
+                break;
             }
         }
 
-        let final_assign = match prev_assign {
-            Some(a) if !a.is_empty() => a,
-            _ => assign,
+        let final_assign = if !prev_assign.is_empty() {
+            self.ws.scratch.put_assign(assign);
+            prev_assign
+        } else {
+            self.ws.scratch.put_assign(prev_assign);
+            assign
         };
-        let energy = lloyd::energy(x, &c, &final_assign, &self.pool);
+        let energy = lloyd::energy(x, &c, &final_assign, &self.ws.pool);
+        self.ws.scratch.put_mat(c_au);
+        self.ws.scratch.put_mat(c_next);
+        self.ws.scratch.put_f_t(f_t);
+        self.ws.scratch.put_accelerator(acc);
         RunReport {
             iterations,
             accepted,
@@ -260,9 +424,11 @@ impl Solver {
             energy,
             mse: energy / x.n() as f64,
             converged,
+            cancelled,
+            stopped_early,
             energy_trace: trace,
             m_trace,
-            dist_evals: self.engine.distance_evals() - evals0,
+            dist_evals: self.ws.engine.distance_evals() - evals0,
             phases,
             centroids: c,
             assignment: final_assign,
@@ -272,14 +438,18 @@ impl Solver {
 
 /// Convenience: run the paper's method (dynamic m, Hamerly engine) with
 /// default parameters.
+#[deprecated(note = "build a ClusterRequest and open a ClusterSession instead")]
 pub fn run_paper_method(x: &DataMatrix, c0: DataMatrix) -> RunReport {
-    Solver::new(SolverConfig::default()).run(x, c0)
+    Solver::try_new(SolverConfig::default())
+        .expect("the default config uses a CPU engine")
+        .run(x, c0)
 }
 
 /// Convenience: run the Lloyd(Hamerly) baseline the paper compares against.
+#[deprecated(note = "build a ClusterRequest with Acceleration::None and open a ClusterSession")]
 pub fn run_lloyd_baseline(x: &DataMatrix, c0: DataMatrix) -> RunReport {
     let cfg = SolverConfig { accel: Acceleration::None, ..SolverConfig::default() };
-    Solver::new(cfg).run(x, c0)
+    Solver::try_new(cfg).expect("the default config uses a CPU engine").run(x, c0)
 }
 
 /// Solver configuration lives in [`crate::config`]; re-exported here for
@@ -289,10 +459,14 @@ pub use crate::config::SolverConfig as Config;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EngineKind;
     use crate::data::synth;
     use crate::init::{seed_centroids, InitMethod};
-    use crate::config::EngineKind;
     use crate::rng::Pcg32;
+
+    fn solver(cfg: SolverConfig) -> Solver {
+        Solver::try_new(cfg).expect("CPU engine construction is infallible")
+    }
 
     fn problem(seed: u64, n: usize, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
         let mut rng = Pcg32::seed_from_u64(seed);
@@ -309,7 +483,7 @@ mod tests {
     fn lloyd_converges_and_energy_monotone() {
         let (x, c0) = problem(1, 1500, 4, 8);
         let cfg = SolverConfig { accel: Acceleration::None, ..base_cfg() };
-        let report = Solver::new(cfg).run(&x, c0);
+        let report = solver(cfg).run(&x, c0);
         assert!(report.converged, "Lloyd must converge on a small problem");
         for w in report.energy_trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "Lloyd energy increased: {} -> {}", w[0], w[1]);
@@ -320,9 +494,9 @@ mod tests {
     #[test]
     fn accelerated_energy_monotone_and_same_quality() {
         let (x, c0) = problem(2, 1500, 4, 8);
-        let lloyd = Solver::new(SolverConfig { accel: Acceleration::None, ..base_cfg() })
+        let lloyd = solver(SolverConfig { accel: Acceleration::None, ..base_cfg() })
             .run(&x, c0.clone());
-        let ours = Solver::new(base_cfg()).run(&x, c0);
+        let ours = solver(base_cfg()).run(&x, c0);
         assert!(ours.converged);
         for w in ours.energy_trace.windows(2) {
             assert!(
@@ -352,9 +526,9 @@ mod tests {
         for seed in 0..3 {
             let mut srng = Pcg32::seed_from_u64(100 + seed);
             let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut srng);
-            let lloyd = Solver::new(SolverConfig { accel: Acceleration::None, ..base_cfg() })
+            let lloyd = solver(SolverConfig { accel: Acceleration::None, ..base_cfg() })
                 .run(&x, c0.clone());
-            let ours = Solver::new(base_cfg()).run(&x, c0);
+            let ours = solver(base_cfg()).run(&x, c0);
             it_lloyd += lloyd.iterations;
             it_ours += ours.iterations;
         }
@@ -368,7 +542,7 @@ mod tests {
     fn fixed_m_variant_runs() {
         let (x, c0) = problem(4, 800, 3, 6);
         let cfg = SolverConfig { accel: Acceleration::FixedM(5), ..base_cfg() };
-        let report = Solver::new(cfg).run(&x, c0);
+        let report = solver(cfg).run(&x, c0);
         assert!(report.converged);
         assert!(report.accepted <= report.iterations);
     }
@@ -379,7 +553,7 @@ mod tests {
         let mut energies = Vec::new();
         for engine in [EngineKind::Naive, EngineKind::Hamerly, EngineKind::Elkan] {
             let cfg = SolverConfig { engine, accel: Acceleration::None, ..base_cfg() };
-            let report = Solver::new(cfg).run(&x, c0.clone());
+            let report = solver(cfg).run(&x, c0.clone());
             energies.push(report.energy);
         }
         for e in &energies[1..] {
@@ -403,8 +577,8 @@ mod tests {
         let mut rng = Pcg32::seed_from_u64(21);
         let c0 = seed_centroids(&x, 8, InitMethod::KMeansPlusPlus, &mut rng);
         for engine in [EngineKind::Naive, EngineKind::Hamerly] {
-            let f64_run = Solver::new(SolverConfig { engine, ..base_cfg() }).run(&x, c0.clone());
-            let f32_run = Solver::new(SolverConfig {
+            let f64_run = solver(SolverConfig { engine, ..base_cfg() }).run(&x, c0.clone());
+            let f32_run = solver(SolverConfig {
                 engine,
                 precision: Precision::F32,
                 ..base_cfg()
@@ -428,7 +602,7 @@ mod tests {
     fn k_equals_one_converges_immediately() {
         let (x, _) = problem(6, 300, 2, 3);
         let c0 = x.gather_rows(&[0]);
-        let report = Solver::new(base_cfg()).run(&x, c0);
+        let report = solver(base_cfg()).run(&x, c0);
         assert!(report.converged);
         assert!(report.iterations <= 2, "K=1 is a single mean: {}", report.iterations);
     }
@@ -437,14 +611,68 @@ mod tests {
     fn max_iters_caps_runaway() {
         let (x, c0) = problem(7, 2000, 4, 12);
         let cfg = SolverConfig { max_iters: 3, ..base_cfg() };
-        let report = Solver::new(cfg).run(&x, c0);
+        let report = solver(cfg).run(&x, c0);
         assert!(report.iterations <= 3);
+    }
+
+    #[test]
+    fn zero_time_budget_stops_early_with_consistent_state() {
+        let (x, c0) = problem(15, 1200, 4, 8);
+        let n = x.n();
+        for accel in [Acceleration::None, Acceleration::DynamicM(2)] {
+            let cfg = SolverConfig {
+                accel,
+                time_limit: Some(std::time::Duration::ZERO),
+                ..base_cfg()
+            };
+            let report = solver(cfg).run(&x, c0.clone());
+            assert!(report.stopped_early, "{accel:?}: zero budget must stop the run");
+            assert!(!report.converged && !report.cancelled);
+            assert_eq!(report.assignment.len(), n, "{accel:?}: state must stay consistent");
+            assert!(report.energy.is_finite());
+        }
+    }
+
+    #[test]
+    fn solver_reuses_workspace_across_runs() {
+        let (x, c0) = problem(16, 900, 4, 6);
+        let mut s = solver(base_cfg());
+        let r1 = s.run(&x, c0.clone());
+        assert!(s.workspace().last_run_rebuilt_scratch(), "first run builds scratch");
+        let r2 = s.run(&x, c0.clone());
+        assert!(
+            !s.workspace().last_run_rebuilt_scratch(),
+            "second same-shape run must reuse the workspace scratch"
+        );
+        assert_eq!(s.workspace().runs(), 2);
+        // Same inputs, same engine state after reset: identical runs.
+        assert_eq!(r1.iterations, r2.iterations);
+        assert_eq!(r1.energy.to_bits(), r2.energy.to_bits());
+        assert_eq!(r1.assignment, r2.assignment);
+    }
+
+    #[test]
+    fn try_new_is_infallible_for_cpu_engines() {
+        for engine in [
+            EngineKind::Naive,
+            EngineKind::Hamerly,
+            EngineKind::Elkan,
+            EngineKind::Yinyang,
+        ] {
+            let cfg = SolverConfig { engine, threads: 1, ..SolverConfig::default() };
+            let s = Solver::try_new(cfg).expect("CPU engines must construct");
+            assert_eq!(s.workspace().engine_name(), engine.name());
+        }
+        // The PJRT construction-failure path is typed, not a panic; it is
+        // exercised with an explicit bogus artifact dir in the workspace
+        // tests (Workspace::open) to avoid racing on $AAKM_ARTIFACTS here.
+        let _: fn(SolverConfig) -> Result<Solver, ClusterError> = Solver::try_new;
     }
 
     #[test]
     fn centroid_is_mean_of_cluster_at_convergence() {
         let (x, c0) = problem(8, 600, 3, 5);
-        let report = Solver::new(base_cfg()).run(&x, c0);
+        let report = solver(base_cfg()).run(&x, c0);
         assert!(report.converged);
         // At a fixed point each centroid equals the mean of its cluster.
         let k = report.centroids.n();
@@ -476,7 +704,7 @@ mod tests {
     #[test]
     fn report_counts_are_consistent() {
         let (x, c0) = problem(9, 900, 4, 6);
-        let report = Solver::new(base_cfg()).run(&x, c0);
+        let report = solver(base_cfg()).run(&x, c0);
         assert!(report.accepted <= report.iterations);
         assert_eq!(report.energy_trace.len(), report.iterations);
         assert_eq!(report.m_trace.len(), report.iterations);

@@ -19,6 +19,12 @@ pub struct RunReport {
     pub mse: f64,
     /// True when the same-assignment criterion fired (vs. the iteration cap).
     pub converged: bool,
+    /// True when the run was ended by a [`crate::observe::CancelToken`]
+    /// before converging.
+    pub cancelled: bool,
+    /// True when an [`crate::observe::Observer`] or the configured time
+    /// budget ended the run before the convergence criterion fired.
+    pub stopped_early: bool,
     /// Per-iteration energy (only when `record_trace`).
     pub energy_trace: Vec<f64>,
     /// Per-iteration value of `m` (only for dynamic-m runs with trace).
@@ -58,7 +64,15 @@ impl RunReport {
             self.energy,
             self.mse,
             self.dist_evals,
-            if self.converged { "" } else { " [iteration cap hit]" },
+            if self.converged {
+                ""
+            } else if self.cancelled {
+                " [cancelled]"
+            } else if self.stopped_early {
+                " [stopped early]"
+            } else {
+                " [iteration cap hit]"
+            },
         )
     }
 }
@@ -75,6 +89,8 @@ mod tests {
             energy: 100.0,
             mse: 15.08,
             converged: true,
+            cancelled: false,
+            stopped_early: false,
             energy_trace: vec![],
             m_trace: vec![],
             dist_evals: 10,

@@ -1,0 +1,363 @@
+//! The reusable solver workspace: assignment engine, thread pool, kernel
+//! caches and all solver scratch, owned across runs.
+//!
+//! One [`Workspace`] backs one [`crate::kmeans::Solver`] (and therefore one
+//! [`crate::session::ClusterSession`]). Repeated runs on same-shape data
+//! reuse every internal buffer — the engine's bound state and kernel norm
+//! caches keep their capacity through `reset`, the Anderson history columns
+//! are recycled, and the centroid/assignment scratch is taken and returned
+//! per run. Report output buffers come from a recycle pool fed by
+//! [`Workspace::recycle`], so a `run → recycle → run` cycle on same-shape
+//! data leaves the solver's own buffers untouched by the allocator
+//! (remaining transients are the parallel-reduce accumulators and phase
+//! labels; the counting-allocator contract test is `tests/alloc_reuse.rs`).
+
+use crate::anderson::AndersonAccelerator;
+use crate::config::{EngineKind, Precision, SolverConfig};
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::kmeans::RunReport;
+use crate::lloyd::{self, Assignment, AssignmentEngine};
+use crate::par::ThreadPool;
+use std::path::PathBuf;
+
+/// What a [`Workspace`] was built for. Reusing a workspace for a different
+/// spec (another engine kind, precision, thread count or artifact set)
+/// requires opening a fresh one — [`Workspace::matches`] is the check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkspaceSpec {
+    /// Assignment engine kind.
+    pub engine: EngineKind,
+    /// Kernel sample-storage precision.
+    pub precision: Precision,
+    /// Thread-pool lanes (0 = host-sized).
+    pub threads: usize,
+    /// Artifact directory for [`EngineKind::Pjrt`] (`None` = the default
+    /// directory). Ignored by CPU engines.
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl WorkspaceSpec {
+    /// The spec a [`SolverConfig`] implies (no artifact directory).
+    pub fn from_config(cfg: &SolverConfig) -> Self {
+        Self {
+            engine: cfg.engine,
+            precision: cfg.precision,
+            threads: cfg.threads,
+            artifact_dir: None,
+        }
+    }
+}
+
+/// Engine + thread pool + solver scratch, reusable across runs.
+pub struct Workspace {
+    spec: WorkspaceSpec,
+    pub(crate) engine: Box<dyn AssignmentEngine>,
+    pub(crate) pool: ThreadPool,
+    pub(crate) scratch: Scratch,
+}
+
+/// All per-run solver buffers, kept warm between runs.
+#[derive(Default)]
+pub(crate) struct Scratch {
+    /// Internal centroid-matrix pool (the `c_au` / `c_next` rotation).
+    mats: Vec<DataMatrix>,
+    /// Anderson residual buffer.
+    f_t: Vec<f64>,
+    /// Assignment-buffer pool (working + previous + recycled outputs).
+    assign_bufs: Vec<Assignment>,
+    /// Accelerator, reusable while `(m_max, dim)` is unchanged.
+    acc: Option<AndersonAccelerator>,
+    acc_key: (usize, usize),
+    /// Recycled output centroid matrices (fed by [`Workspace::recycle`]).
+    spare_centroids: Vec<DataMatrix>,
+    /// Recycled trace buffers.
+    spare_f64: Vec<Vec<f64>>,
+    spare_usize: Vec<Vec<usize>>,
+    /// Whether the last run had to (re)allocate internal scratch.
+    rebuilt: bool,
+    runs: u64,
+}
+
+/// Reshape a matrix buffer to `k × d`, reusing its allocation.
+fn reshape(m: DataMatrix, k: usize, d: usize) -> (DataMatrix, bool) {
+    if m.n() == k && m.d() == d {
+        return (m, false);
+    }
+    let mut v = m.into_vec();
+    let grew = v.capacity() < k * d;
+    v.clear();
+    v.resize(k * d, 0.0);
+    (DataMatrix::from_vec(v, k, d), grew)
+}
+
+impl Workspace {
+    /// Open a workspace for `spec`, constructing the engine fallibly: CPU
+    /// engines always succeed; [`EngineKind::Pjrt`] loads the AOT artifact
+    /// manifest from `spec.artifact_dir` (or the default directory) and
+    /// returns [`ClusterError::Engine`] when that fails.
+    pub fn open(spec: &WorkspaceSpec) -> Result<Self, ClusterError> {
+        let engine: Box<dyn AssignmentEngine> = match spec.engine {
+            EngineKind::Pjrt => {
+                let dir = spec
+                    .artifact_dir
+                    .clone()
+                    .unwrap_or_else(crate::runtime::default_artifact_dir);
+                let engine = crate::runtime::PjrtEngine::open(&dir).map_err(|e| {
+                    ClusterError::Engine { engine: "pjrt", reason: format!("{e:#}") }
+                })?;
+                Box::new(engine)
+            }
+            other => lloyd::try_make_engine(other, spec.precision)?,
+        };
+        Ok(Self::from_engine(engine, spec.clone()))
+    }
+
+    /// Wrap a caller-built engine (e.g. a `runtime::PjrtEngine` sharing a
+    /// runtime across jobs). The caller vouches that the engine matches
+    /// `spec.engine` / `spec.precision`.
+    pub fn from_engine(engine: Box<dyn AssignmentEngine>, spec: WorkspaceSpec) -> Self {
+        let pool = if spec.threads == 0 {
+            ThreadPool::host_sized()
+        } else {
+            ThreadPool::new(spec.threads)
+        };
+        Self { spec, engine, pool, scratch: Scratch::default() }
+    }
+
+    /// The spec this workspace was opened for.
+    pub fn spec(&self) -> &WorkspaceSpec {
+        &self.spec
+    }
+
+    /// Whether this workspace can serve a run with the given spec.
+    pub fn matches(&self, spec: &WorkspaceSpec) -> bool {
+        self.spec == *spec
+    }
+
+    /// Engine name (for reports / metadata).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Completed runs through this workspace.
+    pub fn runs(&self) -> u64 {
+        self.scratch.runs
+    }
+
+    /// Whether the most recent run had to (re)allocate internal solver
+    /// scratch — `false` from the second same-shape run on, which is the
+    /// warm-workspace contract the session API exists for.
+    pub fn last_run_rebuilt_scratch(&self) -> bool {
+        self.scratch.rebuilt
+    }
+
+    /// Return a finished report's buffers to the recycle pool, making the
+    /// next same-shape run's outputs allocation-free as well.
+    pub fn recycle(&mut self, report: RunReport) {
+        let RunReport { centroids, assignment, energy_trace, m_trace, .. } = report;
+        self.scratch.spare_centroids.push(centroids);
+        self.recycle_buffers(assignment, energy_trace, m_trace);
+    }
+
+    /// Recycle the non-centroid output buffers of a finished run — for
+    /// callers (like the coordinator) that keep the centroids but can
+    /// return the assignment and trace buffers.
+    pub fn recycle_buffers(
+        &mut self,
+        assignment: Assignment,
+        energy_trace: Vec<f64>,
+        m_trace: Vec<usize>,
+    ) {
+        if assignment.capacity() > 0 {
+            self.scratch.assign_bufs.push(assignment);
+        }
+        if energy_trace.capacity() > 0 {
+            self.scratch.spare_f64.push(energy_trace);
+        }
+        if m_trace.capacity() > 0 {
+            self.scratch.spare_usize.push(m_trace);
+        }
+    }
+}
+
+impl Scratch {
+    /// Start-of-run bookkeeping.
+    pub(crate) fn begin_run(&mut self) {
+        self.rebuilt = false;
+        self.runs += 1;
+    }
+
+    /// Take an internal `k × d` matrix (the `c_au` / `c_next` rotation).
+    pub(crate) fn take_mat(&mut self, k: usize, d: usize) -> DataMatrix {
+        match self.mats.pop() {
+            Some(m) => {
+                let (m, grew) = reshape(m, k, d);
+                self.rebuilt |= grew;
+                m
+            }
+            None => {
+                self.rebuilt = true;
+                DataMatrix::zeros(k, d)
+            }
+        }
+    }
+
+    /// Return an internal matrix at the end of a run.
+    pub(crate) fn put_mat(&mut self, m: DataMatrix) {
+        self.mats.push(m);
+    }
+
+    /// Take the output centroid matrix (recycled report buffer when
+    /// available — drawing a fresh one is *not* counted as a scratch
+    /// rebuild, since un-recycled outputs necessarily allocate).
+    pub(crate) fn take_output_mat(&mut self, k: usize, d: usize) -> DataMatrix {
+        match self.spare_centroids.pop() {
+            Some(m) => reshape(m, k, d).0,
+            None => DataMatrix::zeros(k, d),
+        }
+    }
+
+    /// Take a cleared assignment buffer.
+    pub(crate) fn take_assign(&mut self) -> Assignment {
+        let mut a = self.assign_bufs.pop().unwrap_or_default();
+        a.clear();
+        a
+    }
+
+    /// Return an assignment buffer.
+    pub(crate) fn put_assign(&mut self, a: Assignment) {
+        if a.capacity() > 0 {
+            self.assign_bufs.push(a);
+        }
+    }
+
+    /// Take the Anderson residual buffer, sized to `dim`.
+    pub(crate) fn take_f_t(&mut self, dim: usize) -> Vec<f64> {
+        let mut f = std::mem::take(&mut self.f_t);
+        if f.capacity() < dim {
+            self.rebuilt = true;
+        }
+        f.clear();
+        f.resize(dim, 0.0);
+        f
+    }
+
+    /// Return the residual buffer.
+    pub(crate) fn put_f_t(&mut self, f: Vec<f64>) {
+        self.f_t = f;
+    }
+
+    /// Take the accelerator for `(m_max, dim)`, reusing (and resetting) the
+    /// cached one when the key matches.
+    pub(crate) fn take_accelerator(&mut self, m_max: usize, dim: usize) -> AndersonAccelerator {
+        let key = (m_max, dim);
+        match self.acc.take() {
+            Some(mut acc) if self.acc_key == key => {
+                acc.reset();
+                acc
+            }
+            _ => {
+                self.rebuilt = true;
+                self.acc_key = key;
+                AndersonAccelerator::new(m_max, dim)
+            }
+        }
+    }
+
+    /// Return the accelerator.
+    pub(crate) fn put_accelerator(&mut self, acc: AndersonAccelerator) {
+        self.acc = Some(acc);
+    }
+
+    /// Take a cleared `f64` trace buffer.
+    pub(crate) fn take_trace_f64(&mut self) -> Vec<f64> {
+        let mut t = self.spare_f64.pop().unwrap_or_default();
+        t.clear();
+        t
+    }
+
+    /// Take a cleared `usize` trace buffer.
+    pub(crate) fn take_trace_usize(&mut self) -> Vec<usize> {
+        let mut t = self.spare_usize.pop().unwrap_or_default();
+        t.clear();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_cpu_engines_and_reject_pjrt_without_artifacts() {
+        for engine in [
+            EngineKind::Naive,
+            EngineKind::Hamerly,
+            EngineKind::Elkan,
+            EngineKind::Yinyang,
+        ] {
+            let spec = WorkspaceSpec {
+                engine,
+                precision: Precision::F64,
+                threads: 1,
+                artifact_dir: None,
+            };
+            let ws = Workspace::open(&spec).expect("CPU engines are infallible");
+            assert_eq!(ws.engine_name(), engine.name());
+            assert!(ws.matches(&spec));
+        }
+        let spec = WorkspaceSpec {
+            engine: EngineKind::Pjrt,
+            precision: Precision::F64,
+            threads: 1,
+            artifact_dir: Some(PathBuf::from("/definitely/not/a/real/artifact/dir")),
+        };
+        match Workspace::open(&spec) {
+            Err(ClusterError::Engine { engine, .. }) => assert_eq!(engine, "pjrt"),
+            other => panic!("expected a typed engine error, got {:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable_on_same_shape() {
+        let mut s = Scratch::default();
+        s.begin_run();
+        let m1 = s.take_mat(4, 3);
+        let m2 = s.take_mat(4, 3);
+        let f = s.take_f_t(12);
+        let acc = s.take_accelerator(5, 12);
+        assert!(s.rebuilt, "first run must build scratch");
+        s.put_mat(m1);
+        s.put_mat(m2);
+        s.put_f_t(f);
+        s.put_accelerator(acc);
+
+        s.begin_run();
+        let m1 = s.take_mat(4, 3);
+        let m2 = s.take_mat(4, 3);
+        let f = s.take_f_t(12);
+        let acc = s.take_accelerator(5, 12);
+        assert!(!s.rebuilt, "same-shape second run must reuse scratch");
+        s.put_mat(m1);
+        s.put_mat(m2);
+        s.put_f_t(f);
+        s.put_accelerator(acc);
+
+        s.begin_run();
+        let m1 = s.take_mat(8, 3); // shape change: rebuild is expected
+        s.put_mat(m1);
+        assert!(s.rebuilt);
+    }
+
+    #[test]
+    fn reshape_reuses_capacity() {
+        let m = DataMatrix::zeros(6, 4);
+        let (m2, grew) = reshape(m, 4, 6); // same 24 elements
+        assert!(!grew);
+        assert_eq!((m2.n(), m2.d()), (4, 6));
+        let (m3, grew) = reshape(m2, 10, 10);
+        assert!(grew);
+        assert_eq!((m3.n(), m3.d()), (10, 10));
+    }
+}

@@ -19,35 +19,58 @@
 //!
 //! ## Quickstart
 //!
+//! Every layer consumes one job description, [`ClusterRequest`]; opening it
+//! as a [`ClusterSession`] owns a warm workspace (engine, thread pool,
+//! kernel caches, solver scratch) that repeated runs reuse:
+//!
 //! ```no_run
 //! use aakm::data::synth;
-//! use aakm::kmeans::{Solver, SolverConfig};
-//! use aakm::init::{seed_centroids, InitMethod};
 //! use aakm::rng::Pcg32;
+//! use aakm::{ClusterRequest, ClusterSession};
+//! use std::sync::Arc;
 //!
-//! let mut rng = Pcg32::seed_from_u64(7);
-//! let x = synth::gaussian_blobs(&mut rng, 10_000, 8, 10, 1.0, 0.05);
-//! let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
-//! let report = Solver::new(SolverConfig::default()).run(&x, c0);
-//! println!("converged in {} iterations, mse {:.4}",
-//!          report.iterations, report.mse);
+//! fn main() -> Result<(), aakm::ClusterError> {
+//!     let mut rng = Pcg32::seed_from_u64(7);
+//!     let x = Arc::new(synth::gaussian_blobs(&mut rng, 10_000, 8, 10, 1.0, 0.05));
+//!     let request = ClusterRequest::builder().inline(x).k(10).seed(7).build()?;
+//!     let mut session = ClusterSession::open(request)?;
+//!     let report = session.run()?;
+//!     println!("converged in {} iterations, mse {:.4}", report.iterations, report.mse);
+//!     session.recycle(report); // next same-shape run is allocation-free
+//!     Ok(())
+//! }
 //! ```
+//!
+//! Mid-run observability and cancellation live in [`observe`]
+//! ([`Observer`], [`CancelToken`]); the service coordinator
+//! ([`coordinator::Coordinator`]) accepts the same requests and returns
+//! [`coordinator::JobHandle`]s with poll / wait / cancel.
 
 pub mod anderson;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod init;
 pub mod kmeans;
 pub mod linalg;
 pub mod lloyd;
 pub mod metrics;
+pub mod observe;
 pub mod par;
+pub mod request;
 pub mod rng;
 pub mod runtime;
+pub mod session;
 
-/// Crate-wide result alias.
+pub use error::ClusterError;
+pub use observe::{CancelToken, Observer};
+pub use request::{ClusterRequest, DataSource, InitSpec};
+pub use session::ClusterSession;
+
+/// Crate-wide result alias (internal plumbing; the public request/session
+/// API returns [`ClusterError`] instead).
 pub type Result<T> = anyhow::Result<T>;
 
 /// Version string reported by the CLI and service endpoints.

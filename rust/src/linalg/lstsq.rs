@@ -88,6 +88,15 @@ impl AndersonLsWorkspace {
         self.delta_g.clear();
     }
 
+    /// [`AndersonLsWorkspace::clear`], but hands the evicted column buffers
+    /// to the caller for recycling — clearing between same-shape runs then
+    /// costs no allocator traffic (the warm-workspace contract of
+    /// [`crate::kmeans::Workspace`]).
+    pub fn clear_into(&mut self, free: &mut Vec<Vec<f64>>) {
+        free.extend(self.delta_f.drain(..));
+        free.extend(self.delta_g.drain(..));
+    }
+
     /// Push the newest difference columns `ΔF = f_new − f_old`,
     /// `ΔG = g_new − g_old`. Updates the Gram cache with `len` inner
     /// products (the paper's stated per-iteration cost). When the history

@@ -68,25 +68,46 @@ pub trait AssignmentEngine {
 
 /// Build an engine by kind with the default `f64` kernel precision. The
 /// `Pjrt` kind is constructed by the runtime module (it needs artifacts) —
-/// asking for it here panics.
+/// asking for it here panics; prefer [`try_make_engine`].
 pub fn make_engine(kind: crate::config::EngineKind) -> Box<dyn AssignmentEngine> {
     make_engine_with(kind, crate::config::Precision::F64)
 }
 
 /// Build an engine by kind with an explicit kernel storage precision (the
 /// solver threads [`crate::config::SolverConfig::precision`] through here).
+/// Panics on `EngineKind::Pjrt`; prefer [`try_make_engine`].
 pub fn make_engine_with(
     kind: crate::config::EngineKind,
     precision: crate::config::Precision,
 ) -> Box<dyn AssignmentEngine> {
+    try_make_engine(kind, precision)
+        .unwrap_or_else(|e| panic!("{e} (use lloyd::try_make_engine or ClusterSession::open)"))
+}
+
+/// Fallible engine factory: every CPU engine kind succeeds; the `Pjrt`
+/// kind returns a typed error because it needs AOT artifacts — construct
+/// it through [`crate::kmeans::Workspace::open`] (which knows the artifact
+/// directory) or wrap a `runtime::PjrtEngine` yourself.
+pub fn try_make_engine(
+    kind: crate::config::EngineKind,
+    precision: crate::config::Precision,
+) -> Result<Box<dyn AssignmentEngine>, crate::error::ClusterError> {
     use crate::config::EngineKind;
-    match kind {
+    Ok(match kind {
         EngineKind::Naive => Box::new(NaiveEngine::with_precision(precision)),
         EngineKind::Hamerly => Box::new(HamerlyEngine::with_precision(precision)),
         EngineKind::Elkan => Box::new(ElkanEngine::with_precision(precision)),
         EngineKind::Yinyang => Box::new(YinyangEngine::with_precision(precision)),
-        EngineKind::Pjrt => panic!("PJRT engine must be built via runtime::PjrtEngine"),
-    }
+        EngineKind::Pjrt => {
+            return Err(crate::error::ClusterError::Engine {
+                engine: "pjrt",
+                reason: "needs AOT artifacts; open it via Workspace::open / \
+                         ClusterSession::open (artifact_dir) or wrap a \
+                         runtime::PjrtEngine with Solver::with_engine"
+                    .to_string(),
+            })
+        }
+    })
 }
 
 /// The update step (paper Eq. 4): each centroid moves to the mean of its

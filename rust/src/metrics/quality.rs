@@ -203,10 +203,11 @@ mod tests {
         let mut rng = Pcg32::seed_from_u64(4);
         let c0 =
             crate::init::seed_centroids(&x, 2, crate::init::InitMethod::KMeansPlusPlus, &mut rng);
-        let report = crate::kmeans::Solver::new(crate::config::SolverConfig {
+        let report = crate::kmeans::Solver::try_new(crate::config::SolverConfig {
             threads: 1,
             ..Default::default()
         })
+        .unwrap()
         .run(&x, c0);
         let ari = adjusted_rand_index(&labels, &report.assignment);
         assert!(ari > 0.99, "solver should recover the two blobs (ARI {ari})");

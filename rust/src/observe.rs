@@ -1,0 +1,287 @@
+//! Mid-run observability and cooperative cancellation for solver runs.
+//!
+//! Both solver loops ([`crate::kmeans::Solver`], and therefore every
+//! [`crate::session::ClusterSession`] and coordinator job) call an
+//! [`Observer`] once per iteration with the energy, the current Anderson
+//! window `m`, the phase-timing breakdown and the proposed centroids for
+//! the next iterate, and check a [`CancelToken`] at every iteration
+//! boundary. Observers can end a run early (`ObserverControl::Stop`);
+//! tokens cancel it from another thread within one iteration.
+
+use crate::data::DataMatrix;
+use crate::kmeans::RunReport;
+use crate::metrics::PhaseTimer;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Cooperative cancellation flag, checked by the solver at iteration
+/// boundaries. Cheap to clone (shared flag) and safe to trip from any
+/// thread: the run stops before its next iteration and reports
+/// [`RunReport::cancelled`].
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// Fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Trip the token; every run holding a clone stops at its next
+    /// iteration boundary.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether [`CancelToken::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// Per-iteration snapshot handed to [`Observer::on_iteration`].
+#[derive(Debug)]
+pub struct IterationInfo<'a> {
+    /// 1-based productive iteration count so far.
+    pub iteration: usize,
+    /// Clustering energy `E(P^t, C^t)` at this iteration's input centroids.
+    /// `None` only in plain-Lloyd runs when neither tracing nor the
+    /// observer asked for it (see [`Observer::wants_energy`]).
+    pub energy: Option<f64>,
+    /// Anderson window in effect (0 for plain Lloyd).
+    pub m: usize,
+    /// Whether the centroids proposed for the next iteration are an
+    /// Anderson extrapolation (vs. the plain Lloyd iterate).
+    pub accelerated_candidate: bool,
+    /// Whether this iteration's accelerated candidate passed the energy
+    /// guard (always `false` in plain Lloyd runs).
+    pub accepted: bool,
+    /// Centroids proposed for the next iteration.
+    pub centroids: &'a DataMatrix,
+    /// Per-phase wall-clock breakdown accumulated so far.
+    pub phases: &'a PhaseTimer,
+}
+
+/// What an observer wants the solver to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObserverControl {
+    /// Keep iterating.
+    Continue,
+    /// End the run cleanly after this iteration
+    /// ([`RunReport::stopped_early`] is set).
+    Stop,
+}
+
+/// Per-iteration hook into a solver run. All methods have defaults, so an
+/// implementation overrides only what it needs.
+pub trait Observer {
+    /// Whether the solver should compute the energy for
+    /// [`IterationInfo::energy`] even when it would not otherwise need it.
+    /// Only plain-Lloyd runs without tracing pay for this (one extra
+    /// O(N·d) pass per iteration); accelerated runs always have it.
+    /// Defaults to `false` so minimal observers add no cost — override it
+    /// (as [`TraceObserver`] and [`EarlyStop`] do) when you consume energy.
+    fn wants_energy(&self) -> bool {
+        false
+    }
+
+    /// Called once before the first iteration.
+    fn on_start(&mut self, _x: &DataMatrix, _c0: &DataMatrix) {}
+
+    /// Called once per productive iteration.
+    fn on_iteration(&mut self, _info: &IterationInfo<'_>) -> ObserverControl {
+        ObserverControl::Continue
+    }
+
+    /// Called once with the finished report (also on cancelled runs).
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// The do-nothing observer used by the plain `run()` entry points; all
+/// trait defaults apply, so un-observed Lloyd runs keep their exact cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// One recorded iteration of a [`TraceObserver`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    /// 1-based iteration index.
+    pub iteration: usize,
+    /// Energy at this iteration (`NaN` when unavailable).
+    pub energy: f64,
+    /// Anderson window in effect.
+    pub m: usize,
+    /// Whether the next proposal is an accelerated candidate.
+    pub accelerated_candidate: bool,
+    /// Whether this iteration's candidate was accepted.
+    pub accepted: bool,
+}
+
+/// Built-in observer that records one [`TraceRecord`] per iteration —
+/// the observer-API equivalent of `SolverConfig::record_trace`, without
+/// touching the report.
+#[derive(Debug, Clone, Default)]
+pub struct TraceObserver {
+    records: Vec<TraceRecord>,
+}
+
+impl TraceObserver {
+    /// Empty trace recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Recorded iterations, in order.
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    /// Energy column of the trace.
+    pub fn energies(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.energy).collect()
+    }
+}
+
+impl Observer for TraceObserver {
+    fn wants_energy(&self) -> bool {
+        true
+    }
+
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ObserverControl {
+        self.records.push(TraceRecord {
+            iteration: info.iteration,
+            energy: info.energy.unwrap_or(f64::NAN),
+            m: info.m,
+            accelerated_candidate: info.accelerated_candidate,
+            accepted: info.accepted,
+        });
+        ObserverControl::Continue
+    }
+}
+
+/// Built-in early-stop observer: ends the run once the relative energy
+/// decrease stays below `rel_tol` for `patience` consecutive iterations —
+/// a cheaper stopping rule than the exact same-assignment criterion for
+/// callers that only need approximate centroids.
+#[derive(Debug, Clone)]
+pub struct EarlyStop {
+    rel_tol: f64,
+    patience: usize,
+    streak: usize,
+    last_energy: Option<f64>,
+    fired: bool,
+}
+
+impl EarlyStop {
+    /// Stop after `patience` consecutive iterations whose relative energy
+    /// decrease is below `rel_tol`.
+    pub fn new(rel_tol: f64, patience: usize) -> Self {
+        Self { rel_tol, patience: patience.max(1), streak: 0, last_energy: None, fired: false }
+    }
+
+    /// Whether this observer ended a run.
+    pub fn fired(&self) -> bool {
+        self.fired
+    }
+}
+
+impl Observer for EarlyStop {
+    fn wants_energy(&self) -> bool {
+        true
+    }
+
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ObserverControl {
+        let Some(e) = info.energy else {
+            return ObserverControl::Continue;
+        };
+        if let Some(prev) = self.last_energy {
+            let decrease = (prev - e) / prev.abs().max(f64::MIN_POSITIVE);
+            if decrease < self.rel_tol {
+                self.streak += 1;
+            } else {
+                self.streak = 0;
+            }
+        }
+        self.last_energy = Some(e);
+        if self.streak >= self.patience {
+            self.fired = true;
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_trips_all_clones() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled() && b.is_cancelled());
+    }
+
+    fn info<'a>(
+        iteration: usize,
+        energy: f64,
+        centroids: &'a DataMatrix,
+        phases: &'a PhaseTimer,
+    ) -> IterationInfo<'a> {
+        IterationInfo {
+            iteration,
+            energy: Some(energy),
+            m: 2,
+            accelerated_candidate: false,
+            accepted: false,
+            centroids,
+            phases,
+        }
+    }
+
+    #[test]
+    fn trace_observer_records_every_iteration() {
+        let c = DataMatrix::zeros(1, 1);
+        let p = PhaseTimer::new();
+        let mut t = TraceObserver::new();
+        for (i, e) in [10.0, 8.0, 7.5].iter().enumerate() {
+            assert_eq!(t.on_iteration(&info(i + 1, *e, &c, &p)), ObserverControl::Continue);
+        }
+        assert_eq!(t.records().len(), 3);
+        assert_eq!(t.energies(), vec![10.0, 8.0, 7.5]);
+        assert_eq!(t.records()[1].iteration, 2);
+    }
+
+    #[test]
+    fn early_stop_fires_after_patience_flat_iterations() {
+        let c = DataMatrix::zeros(1, 1);
+        let p = PhaseTimer::new();
+        let mut es = EarlyStop::new(1e-3, 2);
+        // Big decreases: keeps going.
+        assert_eq!(es.on_iteration(&info(1, 100.0, &c, &p)), ObserverControl::Continue);
+        assert_eq!(es.on_iteration(&info(2, 50.0, &c, &p)), ObserverControl::Continue);
+        // Two consecutive sub-tolerance decreases: stops on the second.
+        assert_eq!(es.on_iteration(&info(3, 49.999, &c, &p)), ObserverControl::Continue);
+        assert_eq!(es.on_iteration(&info(4, 49.998, &c, &p)), ObserverControl::Stop);
+        assert!(es.fired());
+    }
+
+    #[test]
+    fn early_stop_resets_streak_on_progress() {
+        let c = DataMatrix::zeros(1, 1);
+        let p = PhaseTimer::new();
+        let mut es = EarlyStop::new(1e-3, 2);
+        es.on_iteration(&info(1, 100.0, &c, &p));
+        es.on_iteration(&info(2, 99.999, &c, &p)); // streak 1
+        es.on_iteration(&info(3, 50.0, &c, &p)); // progress: streak reset
+        assert_eq!(es.on_iteration(&info(4, 49.9999, &c, &p)), ObserverControl::Continue);
+        assert!(!es.fired());
+    }
+}

@@ -1,0 +1,590 @@
+//! [`ClusterRequest`] — the single job description consumed by every layer.
+//!
+//! One request says everything about one clustering job: where the samples
+//! come from ([`DataSource`]), how many clusters, how to seed
+//! ([`InitSpec`]), which engine / precision / acceleration to run, the
+//! iteration and wall-clock budgets, and the RNG seed. The same value
+//! drives the in-process path ([`crate::session::ClusterSession::open`])
+//! and the service path ([`crate::coordinator::Coordinator::submit`]), so
+//! capabilities can no longer diverge between the two (`Precision` in
+//! particular flows end to end).
+//!
+//! Requests are built — and validated — through
+//! [`ClusterRequest::builder`]. Everything data-independent is checked at
+//! [`ClusterRequestBuilder::build`]; shape checks against lazily
+//! materialized sources happen when the session first touches the data.
+
+use crate::config::{Acceleration, EngineKind, Precision, SolverConfig};
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::init::InitMethod;
+use crate::kmeans::WorkspaceSpec;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a request's samples come from.
+#[derive(Debug, Clone)]
+pub enum DataSource {
+    /// Caller-provided matrix (shared, zero-copy across queues and runs).
+    Inline(Arc<DataMatrix>),
+    /// A Table-1 registry dataset, generated at the given scale.
+    Registry {
+        /// Registry dataset name (see `data::REGISTRY`).
+        name: String,
+        /// Fraction of the paper's N to generate, in `(0, 1]`.
+        scale: f64,
+    },
+    /// A CSV (anything else) or fvecs (`.fv`) file on disk.
+    Path(PathBuf),
+}
+
+impl DataSource {
+    /// Short label for error messages.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Inline(m) => format!("inline {}x{}", m.n(), m.d()),
+            Self::Registry { name, scale } => format!("{name}@{scale}"),
+            Self::Path(p) => p.display().to_string(),
+        }
+    }
+
+    /// Materialize the samples.
+    pub fn materialize(&self) -> Result<Arc<DataMatrix>, ClusterError> {
+        match self {
+            Self::Inline(m) => Ok(Arc::clone(m)),
+            Self::Registry { name, scale } => {
+                let spec = crate::data::dataset_by_name(name).ok_or_else(|| {
+                    ClusterError::Data {
+                        source: self.label(),
+                        reason: "unknown registry dataset".to_string(),
+                    }
+                })?;
+                Ok(Arc::new(spec.generate_scaled(*scale)))
+            }
+            Self::Path(p) => {
+                let loaded = if p.extension().is_some_and(|e| e == "fv") {
+                    crate::data::load_fvecs(p)
+                } else {
+                    crate::data::load_csv(p)
+                };
+                loaded.map(Arc::new).map_err(|e| ClusterError::Data {
+                    source: self.label(),
+                    reason: format!("{e:#}"),
+                })
+            }
+        }
+    }
+}
+
+/// Shape checks that need the materialized data — one implementation
+/// shared by [`ClusterRequestBuilder::build`] (inline sources) and the
+/// session's first materialization (registry/path sources), so the two
+/// validation paths cannot drift.
+pub(crate) fn validate_against_data(
+    x: &DataMatrix,
+    k: usize,
+    init: &InitSpec,
+) -> Result<(), ClusterError> {
+    if x.n() == 0 || x.d() == 0 {
+        return Err(ClusterError::invalid("source", "data must be non-empty"));
+    }
+    if k > x.n() {
+        return Err(ClusterError::invalid(
+            "k",
+            format!("k={k} exceeds the sample count {}", x.n()),
+        ));
+    }
+    if let InitSpec::Centroids(c0) = init {
+        if c0.n() != k {
+            return Err(ClusterError::invalid(
+                "init",
+                format!("{} initial centroids for k={k}", c0.n()),
+            ));
+        }
+        if c0.d() != x.d() {
+            return Err(ClusterError::invalid(
+                "init",
+                format!(
+                    "initial centroids are {}-dimensional but the data is {}-dimensional",
+                    c0.d(),
+                    x.d()
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// How the initial centroids are produced.
+#[derive(Debug, Clone)]
+pub enum InitSpec {
+    /// Seed with one of the paper's methods, from the request seed.
+    Method(InitMethod),
+    /// Explicit initial centroids (`k × d`).
+    Centroids(Arc<DataMatrix>),
+}
+
+/// A fully validated clustering job description. Construct through
+/// [`ClusterRequest::builder`]; every field has a getter.
+#[derive(Debug, Clone)]
+pub struct ClusterRequest {
+    source: DataSource,
+    k: usize,
+    init: InitSpec,
+    engine: EngineKind,
+    precision: Precision,
+    accel: Acceleration,
+    epsilon1: f64,
+    epsilon2: f64,
+    m_max: usize,
+    max_iters: usize,
+    time_limit: Option<Duration>,
+    threads: usize,
+    record_trace: bool,
+    seed: u64,
+    artifact_dir: Option<PathBuf>,
+}
+
+impl ClusterRequest {
+    /// Start building a request (paper-default solver parameters).
+    pub fn builder() -> ClusterRequestBuilder {
+        ClusterRequestBuilder::default()
+    }
+
+    /// Data source.
+    pub fn source(&self) -> &DataSource {
+        &self.source
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Seeding specification.
+    pub fn init(&self) -> &InitSpec {
+        &self.init
+    }
+
+    /// Assignment engine kind.
+    pub fn engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Kernel sample-storage precision.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Acceleration mode.
+    pub fn accel(&self) -> Acceleration {
+        self.accel
+    }
+
+    /// Iteration budget.
+    pub fn max_iters(&self) -> usize {
+        self.max_iters
+    }
+
+    /// Wall-clock budget, if any.
+    pub fn time_limit(&self) -> Option<Duration> {
+        self.time_limit
+    }
+
+    /// Solver threads (0 = host-sized).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether per-iteration traces are recorded into the report.
+    pub fn record_trace(&self) -> bool {
+        self.record_trace
+    }
+
+    /// RNG seed (data generation + seeding).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// PJRT artifact directory override, if any.
+    pub fn artifact_dir(&self) -> Option<&PathBuf> {
+        self.artifact_dir.as_ref()
+    }
+
+    /// Project the solver-level configuration.
+    pub fn solver_config(&self) -> SolverConfig {
+        SolverConfig {
+            accel: self.accel,
+            engine: self.engine,
+            epsilon1: self.epsilon1,
+            epsilon2: self.epsilon2,
+            m_max: self.m_max,
+            max_iters: self.max_iters,
+            time_limit: self.time_limit,
+            threads: self.threads,
+            record_trace: self.record_trace,
+            precision: self.precision,
+        }
+    }
+
+    /// The workspace this request needs.
+    pub fn workspace_spec(&self) -> WorkspaceSpec {
+        WorkspaceSpec {
+            engine: self.engine,
+            precision: self.precision,
+            threads: self.threads,
+            artifact_dir: self.artifact_dir.clone(),
+        }
+    }
+
+    /// Apply service-side defaults: a zero thread count takes the
+    /// coordinator's per-worker thread budget (host-sizing every job would
+    /// oversubscribe the workers), and jobs without an explicit artifact
+    /// directory use the coordinator's.
+    pub(crate) fn with_service_defaults(
+        mut self,
+        solver_threads: usize,
+        artifact_dir: &std::path::Path,
+    ) -> Self {
+        if self.threads == 0 {
+            self.threads = solver_threads.max(1);
+        }
+        if self.artifact_dir.is_none() {
+            self.artifact_dir = Some(artifact_dir.to_path_buf());
+        }
+        self
+    }
+}
+
+/// Builder for [`ClusterRequest`]; `build` performs the data-independent
+/// validation (and shape validation where the source is inline).
+#[derive(Debug, Clone)]
+pub struct ClusterRequestBuilder {
+    source: Option<DataSource>,
+    k: usize,
+    init: InitSpec,
+    engine: EngineKind,
+    precision: Precision,
+    accel: Acceleration,
+    epsilon1: f64,
+    epsilon2: f64,
+    m_max: usize,
+    max_iters: usize,
+    time_limit: Option<Duration>,
+    threads: usize,
+    record_trace: bool,
+    seed: u64,
+    artifact_dir: Option<PathBuf>,
+}
+
+impl Default for ClusterRequestBuilder {
+    fn default() -> Self {
+        let cfg = SolverConfig::default();
+        Self {
+            source: None,
+            k: 10,
+            init: InitSpec::Method(InitMethod::KMeansPlusPlus),
+            engine: cfg.engine,
+            precision: cfg.precision,
+            accel: cfg.accel,
+            epsilon1: cfg.epsilon1,
+            epsilon2: cfg.epsilon2,
+            m_max: cfg.m_max,
+            max_iters: cfg.max_iters,
+            time_limit: None,
+            threads: cfg.threads,
+            record_trace: cfg.record_trace,
+            seed: 42,
+            artifact_dir: None,
+        }
+    }
+}
+
+impl ClusterRequestBuilder {
+    /// Set an arbitrary data source.
+    pub fn source(mut self, source: DataSource) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    /// Cluster caller-provided samples (zero-copy).
+    pub fn inline(self, data: Arc<DataMatrix>) -> Self {
+        self.source(DataSource::Inline(data))
+    }
+
+    /// Cluster a registry dataset at the given scale.
+    pub fn registry(self, name: impl Into<String>, scale: f64) -> Self {
+        self.source(DataSource::Registry { name: name.into(), scale })
+    }
+
+    /// Cluster a CSV / fvecs file.
+    pub fn path(self, path: impl Into<PathBuf>) -> Self {
+        self.source(DataSource::Path(path.into()))
+    }
+
+    /// Number of clusters.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Seeding method (the default is k-means++).
+    pub fn init(mut self, method: InitMethod) -> Self {
+        self.init = InitSpec::Method(method);
+        self
+    }
+
+    /// Explicit initial centroids instead of a seeding method.
+    pub fn initial_centroids(mut self, c0: Arc<DataMatrix>) -> Self {
+        self.init = InitSpec::Centroids(c0);
+        self
+    }
+
+    /// Assignment engine.
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Kernel sample-storage precision.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Acceleration mode.
+    pub fn accel(mut self, accel: Acceleration) -> Self {
+        self.accel = accel;
+        self
+    }
+
+    /// Algorithm 1's ε₁ / ε₂ thresholds.
+    pub fn epsilons(mut self, epsilon1: f64, epsilon2: f64) -> Self {
+        self.epsilon1 = epsilon1;
+        self.epsilon2 = epsilon2;
+        self
+    }
+
+    /// History cap m̄.
+    pub fn m_max(mut self, m_max: usize) -> Self {
+        self.m_max = m_max;
+        self
+    }
+
+    /// Iteration budget.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Wall-clock budget (checked at iteration boundaries).
+    pub fn time_limit(mut self, limit: Duration) -> Self {
+        self.time_limit = Some(limit);
+        self
+    }
+
+    /// Solver threads (0 = host-sized; the coordinator substitutes its
+    /// per-worker budget).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Record per-iteration energy / m traces into the report.
+    pub fn record_trace(mut self, record: bool) -> Self {
+        self.record_trace = record;
+        self
+    }
+
+    /// RNG seed for data generation and seeding.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// PJRT artifact directory (only used by `EngineKind::Pjrt`).
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = Some(dir.into());
+        self
+    }
+
+    /// Validate and produce the request.
+    pub fn build(self) -> Result<ClusterRequest, ClusterError> {
+        let source = self
+            .source
+            .ok_or_else(|| ClusterError::invalid("source", "a data source is required"))?;
+        if self.k == 0 {
+            return Err(ClusterError::invalid("k", "must be at least 1"));
+        }
+        if self.max_iters == 0 {
+            return Err(ClusterError::invalid("max_iters", "must be at least 1"));
+        }
+        if self.m_max == 0 {
+            return Err(ClusterError::invalid("m_max", "must be at least 1"));
+        }
+        if !(self.epsilon1.is_finite() && self.epsilon2.is_finite() && self.epsilon1 >= 0.0) {
+            return Err(ClusterError::invalid("epsilon", "ε₁/ε₂ must be finite and ε₁ ≥ 0"));
+        }
+        if self.epsilon1 > self.epsilon2 {
+            return Err(ClusterError::invalid("epsilon", "ε₁ must not exceed ε₂"));
+        }
+        if let DataSource::Registry { scale, .. } = &source {
+            if !(scale.is_finite() && *scale > 0.0 && *scale <= 1.0) {
+                return Err(ClusterError::invalid("source", "registry scale must be in (0, 1]"));
+            }
+        }
+        // Inline sources get the full shape checks right now; lazy sources
+        // get the identical checks (same helper) from the session at first
+        // materialization — only the data-independent centroid-count check
+        // can run for them here.
+        match &source {
+            DataSource::Inline(x) => validate_against_data(x, self.k, &self.init)?,
+            _ => {
+                if let InitSpec::Centroids(c0) = &self.init {
+                    if c0.n() != self.k {
+                        return Err(ClusterError::invalid(
+                            "init",
+                            format!("{} initial centroids for k={}", c0.n(), self.k),
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(ClusterRequest {
+            source,
+            k: self.k,
+            init: self.init,
+            engine: self.engine,
+            precision: self.precision,
+            accel: self.accel,
+            epsilon1: self.epsilon1,
+            epsilon2: self.epsilon2,
+            m_max: self.m_max,
+            max_iters: self.max_iters,
+            time_limit: self.time_limit,
+            threads: self.threads,
+            record_trace: self.record_trace,
+            seed: self.seed,
+            artifact_dir: self.artifact_dir,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Arc<DataMatrix> {
+        Arc::new(DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]))
+    }
+
+    #[test]
+    fn builder_applies_paper_defaults() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert_eq!(req.k(), 2);
+        assert_eq!(req.engine(), EngineKind::Hamerly);
+        assert_eq!(req.accel(), Acceleration::DynamicM(2));
+        assert_eq!(req.precision(), Precision::F64);
+        let cfg = req.solver_config();
+        assert_eq!(cfg.epsilon1, 0.02);
+        assert_eq!(cfg.epsilon2, 0.5);
+        assert_eq!(cfg.m_max, 30);
+    }
+
+    #[test]
+    fn builder_rejects_bad_fields() {
+        let no_source = ClusterRequest::builder().k(2).build();
+        assert!(matches!(
+            no_source,
+            Err(ClusterError::InvalidRequest { field: "source", .. })
+        ));
+        let bad_k = ClusterRequest::builder().inline(tiny()).k(0).build();
+        assert!(matches!(bad_k, Err(ClusterError::InvalidRequest { field: "k", .. })));
+        let k_over_n = ClusterRequest::builder().inline(tiny()).k(5).build();
+        assert!(matches!(k_over_n, Err(ClusterError::InvalidRequest { field: "k", .. })));
+        let zero_iters = ClusterRequest::builder().inline(tiny()).k(2).max_iters(0).build();
+        assert!(matches!(
+            zero_iters,
+            Err(ClusterError::InvalidRequest { field: "max_iters", .. })
+        ));
+        let bad_eps = ClusterRequest::builder().inline(tiny()).k(2).epsilons(0.9, 0.1).build();
+        assert!(matches!(
+            bad_eps,
+            Err(ClusterError::InvalidRequest { field: "epsilon", .. })
+        ));
+        let bad_scale = ClusterRequest::builder().registry("Birch", 0.0).k(2).build();
+        assert!(matches!(
+            bad_scale,
+            Err(ClusterError::InvalidRequest { field: "source", .. })
+        ));
+    }
+
+    #[test]
+    fn builder_rejects_dimension_mismatched_centroids() {
+        let c0 = Arc::new(DataMatrix::from_rows(&[&[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0]]));
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .initial_centroids(c0)
+            .build();
+        assert!(matches!(req, Err(ClusterError::InvalidRequest { field: "init", .. })));
+        let wrong_count =
+            Arc::new(DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0], &[2.0, 2.0]]));
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .initial_centroids(wrong_count)
+            .build();
+        assert!(matches!(req, Err(ClusterError::InvalidRequest { field: "init", .. })));
+    }
+
+    #[test]
+    fn sources_materialize_and_fail_typed() {
+        let inline = DataSource::Inline(tiny()).materialize().unwrap();
+        assert_eq!(inline.n(), 4);
+        let reg = DataSource::Registry { name: "Birch".into(), scale: 0.001 };
+        assert_eq!(reg.materialize().unwrap().d(), 2);
+        let unknown = DataSource::Registry { name: "nope".into(), scale: 0.5 };
+        assert!(matches!(unknown.materialize(), Err(ClusterError::Data { .. })));
+        let missing = DataSource::Path(PathBuf::from("/no/such/file.csv"));
+        assert!(matches!(missing.materialize(), Err(ClusterError::Data { .. })));
+    }
+
+    #[test]
+    fn service_defaults_fill_threads_and_artifacts() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert_eq!(req.threads(), 0);
+        let req = req.with_service_defaults(3, std::path::Path::new("arts"));
+        assert_eq!(req.threads(), 3);
+        assert_eq!(req.artifact_dir().unwrap(), &PathBuf::from("arts"));
+        // Explicit values survive.
+        let req2 = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .threads(2)
+            .artifact_dir("mine")
+            .build()
+            .unwrap()
+            .with_service_defaults(3, std::path::Path::new("arts"));
+        assert_eq!(req2.threads(), 2);
+        assert_eq!(req2.artifact_dir().unwrap(), &PathBuf::from("mine"));
+    }
+
+    #[test]
+    fn workspace_spec_projection() {
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .engine(EngineKind::Elkan)
+            .precision(Precision::F32)
+            .threads(2)
+            .build()
+            .unwrap();
+        let spec = req.workspace_spec();
+        assert_eq!(spec.engine, EngineKind::Elkan);
+        assert_eq!(spec.precision, Precision::F32);
+        assert_eq!(spec.threads, 2);
+        assert!(spec.artifact_dir.is_none());
+    }
+}

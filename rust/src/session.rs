@@ -1,0 +1,328 @@
+//! [`ClusterSession`] — an open clustering job with a warm
+//! [`Workspace`](crate::kmeans::Workspace).
+//!
+//! `ClusterSession::open(request)` replaces the panicking `Solver::new`
+//! construction path: it builds the engine fallibly (typed
+//! [`ClusterError`]s, including the PJRT artifact case), owns the thread
+//! pool and all solver scratch, and materializes + seeds the request's
+//! data lazily, exactly once. Repeated [`ClusterSession::run`]s on the
+//! same session therefore reuse the engine's bound state capacity, the
+//! kernel norm caches, the Anderson history columns and the centroid /
+//! assignment scratch across calls; returning finished reports through
+//! [`ClusterSession::recycle`] closes the loop so steady-state reruns
+//! leave the solver's own buffers untouched by the allocator.
+
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::init::seed_centroids;
+use crate::kmeans::{RunReport, Solver, Workspace};
+use crate::observe::{CancelToken, NoopObserver, Observer};
+use crate::request::{ClusterRequest, InitSpec};
+use crate::rng::Pcg32;
+use std::sync::Arc;
+
+/// An open clustering job: request + warm workspace + cached data/seeding.
+pub struct ClusterSession {
+    request: ClusterRequest,
+    solver: Solver,
+    data: Option<Arc<DataMatrix>>,
+    c0: Option<DataMatrix>,
+    no_cancel: CancelToken,
+}
+
+impl ClusterSession {
+    /// Open a session for `request`, constructing a fresh [`Workspace`]
+    /// (fallible: the PJRT engine loads artifacts here).
+    pub fn open(request: ClusterRequest) -> Result<Self, ClusterError> {
+        let ws = Workspace::open(&request.workspace_spec())?;
+        Self::with_workspace(request, ws)
+    }
+
+    /// Open a session over an existing workspace (warm-start: the
+    /// coordinator hands each worker's workspace from job to job). The
+    /// workspace must match the request's [`ClusterRequest::workspace_spec`].
+    pub fn with_workspace(request: ClusterRequest, ws: Workspace) -> Result<Self, ClusterError> {
+        if !ws.matches(&request.workspace_spec()) {
+            return Err(ClusterError::Engine {
+                engine: ws.engine_name(),
+                reason: format!(
+                    "workspace spec {:?} does not match the request's {:?}",
+                    ws.spec(),
+                    request.workspace_spec()
+                ),
+            });
+        }
+        let solver = Solver::from_workspace(request.solver_config(), ws);
+        Ok(Self { request, solver, data: None, c0: None, no_cancel: CancelToken::new() })
+    }
+
+    /// The request this session serves.
+    pub fn request(&self) -> &ClusterRequest {
+        &self.request
+    }
+
+    /// The workspace backing this session.
+    pub fn workspace(&self) -> &Workspace {
+        self.solver.workspace()
+    }
+
+    /// Materialized samples (materializing them now if needed).
+    pub fn data(&mut self) -> Result<&Arc<DataMatrix>, ClusterError> {
+        self.ensure_data()?;
+        Ok(self.data.as_ref().expect("ensure_data just set it"))
+    }
+
+    /// Run the request to convergence (or its budgets).
+    pub fn run(&mut self) -> Result<RunReport, ClusterError> {
+        let token = self.no_cancel.clone();
+        self.run_with(&mut NoopObserver, &token)
+    }
+
+    /// [`ClusterSession::run`] with a per-iteration [`Observer`] and a
+    /// [`CancelToken`]. A token tripped before the run starts returns
+    /// [`ClusterError::Cancelled`]; one tripped mid-run stops the solver at
+    /// the next iteration boundary and the report comes back with
+    /// [`RunReport::cancelled`] set (partial state preserved).
+    pub fn run_with(
+        &mut self,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
+    ) -> Result<RunReport, ClusterError> {
+        if cancel.is_cancelled() {
+            return Err(ClusterError::Cancelled);
+        }
+        self.ensure_data()?;
+        let x = self.data.as_ref().expect("ensure_data just set it");
+        let c0 = self.c0.as_ref().expect("ensure_data just set it");
+        Ok(self.solver.run_observed(x, c0, observer, cancel))
+    }
+
+    /// Return a finished report's buffers to the workspace pool so the next
+    /// same-shape run's outputs are allocation-free too.
+    pub fn recycle(&mut self, report: RunReport) {
+        self.solver.workspace_mut().recycle(report);
+    }
+
+    /// Release the warm workspace (for reuse by the next session).
+    pub fn into_workspace(self) -> Workspace {
+        self.solver.into_workspace()
+    }
+
+    /// Materialize the data source and the initial centroids once; the
+    /// request is immutable, so both are reused verbatim by later runs.
+    fn ensure_data(&mut self) -> Result<(), ClusterError> {
+        if self.data.is_some() {
+            return Ok(());
+        }
+        let x = self.request.source().materialize()?;
+        let k = self.request.k();
+        crate::request::validate_against_data(&x, k, self.request.init())?;
+        let c0 = match self.request.init() {
+            InitSpec::Method(method) => {
+                let mut rng = Pcg32::seed_from_u64(self.request.seed());
+                seed_centroids(&x, k, *method, &mut rng)
+            }
+            InitSpec::Centroids(c0) => DataMatrix::clone(c0),
+        };
+        self.data = Some(x);
+        self.c0 = Some(c0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Acceleration, EngineKind};
+    use crate::data::synth;
+    use crate::observe::{EarlyStop, ObserverControl, TraceObserver};
+    use crate::rng::Pcg32;
+
+    fn blob_data(seed: u64, n: usize) -> Arc<DataMatrix> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        Arc::new(synth::gaussian_blobs(&mut rng, n, 4, 6, 2.0, 0.4))
+    }
+
+    fn request(data: Arc<DataMatrix>) -> ClusterRequest {
+        ClusterRequest::builder()
+            .inline(data)
+            .k(6)
+            .threads(1)
+            .seed(7)
+            .build()
+            .expect("valid request")
+    }
+
+    #[test]
+    fn session_runs_and_reruns_identically() {
+        let data = blob_data(1, 1200);
+        let mut session = ClusterSession::open(request(data)).unwrap();
+        let r1 = session.run().unwrap();
+        assert!(r1.converged);
+        let it1 = r1.iterations;
+        let e1 = r1.energy;
+        session.recycle(r1);
+        let r2 = session.run().unwrap();
+        assert_eq!(r2.iterations, it1, "cached data + seeding: identical reruns");
+        assert_eq!(r2.energy.to_bits(), e1.to_bits());
+        assert!(
+            !session.workspace().last_run_rebuilt_scratch(),
+            "second run must reuse the workspace"
+        );
+    }
+
+    #[test]
+    fn run_time_shape_check_is_typed() {
+        // k fits the builder check only for inline sources; a registry
+        // source defers to run time.
+        let req = ClusterRequest::builder()
+            .registry("Birch", 0.0001)
+            .k(100_000)
+            .threads(1)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(req).unwrap();
+        match session.run() {
+            Err(ClusterError::InvalidRequest { field: "k", .. }) => {}
+            other => panic!("expected a typed k error, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn explicit_centroids_drive_the_run() {
+        let data = blob_data(2, 600);
+        let c0 = Arc::new(data.gather_rows(&[0, 100, 200, 300, 400, 500]));
+        let req = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(6)
+            .initial_centroids(c0)
+            .threads(1)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(req).unwrap();
+        let report = session.run().unwrap();
+        assert!(report.converged);
+        assert_eq!(report.centroids.n(), 6);
+    }
+
+    #[test]
+    fn observer_sees_iterations_and_early_stop_works() {
+        // A slow-converging manifold problem: plenty of iterations with
+        // small energy decreases for the early-stop rule to act on.
+        let mut rng = Pcg32::seed_from_u64(31);
+        let data = Arc::new(synth::noisy_curve(&mut rng, 2500, 3, 0.3));
+        let req = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(8)
+            .threads(1)
+            .seed(5)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(req.clone()).unwrap();
+        let mut trace = TraceObserver::new();
+        let token = CancelToken::new();
+        let full = session.run_with(&mut trace, &token).unwrap();
+        assert_eq!(trace.records().len(), full.iterations);
+        assert!(trace.records().iter().all(|r| r.energy.is_finite()));
+        assert!(full.iterations > 3, "need a multi-iteration run for the stop test");
+        // An aggressive early-stop observer ends a fresh session sooner.
+        let mut session2 = ClusterSession::open(req).unwrap();
+        let mut stopper = EarlyStop::new(0.5, 1);
+        let stopped = session2.run_with(&mut stopper, &token).unwrap();
+        assert!(stopper.fired());
+        assert!(stopped.stopped_early);
+        assert!(stopped.iterations < full.iterations);
+    }
+
+    #[test]
+    fn cancel_mid_run_stops_within_one_iteration() {
+        // The observer trips the token after iteration 3; the solver must
+        // notice at the next iteration boundary, so the report carries
+        // exactly 3 productive iterations.
+        use crate::observe::IterationInfo;
+        struct CancelAt {
+            at: usize,
+            token: CancelToken,
+        }
+        impl Observer for CancelAt {
+            fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ObserverControl {
+                if info.iteration == self.at {
+                    self.token.cancel();
+                }
+                ObserverControl::Continue
+            }
+        }
+        // A poorly separated problem that needs well over 3 iterations.
+        let mut rng = Pcg32::seed_from_u64(9);
+        let data = Arc::new(synth::noisy_curve(&mut rng, 3000, 3, 0.3));
+        let req = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(10)
+            .threads(1)
+            .seed(11)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(req.clone()).unwrap();
+        let baseline = session.run().unwrap();
+        assert!(baseline.iterations > 5, "need a long run for this test");
+
+        let token = CancelToken::new();
+        let mut observer = CancelAt { at: 3, token: token.clone() };
+        let mut session = ClusterSession::open(req).unwrap();
+        let report = session.run_with(&mut observer, &token).unwrap();
+        assert!(report.cancelled);
+        assert!(!report.converged);
+        assert_eq!(report.iterations, 3, "cancel must land within one iteration");
+        assert_eq!(report.assignment.len(), data.n(), "partial state stays consistent");
+        assert!(report.energy.is_finite());
+    }
+
+    #[test]
+    fn pre_cancelled_token_short_circuits() {
+        let data = blob_data(4, 400);
+        let mut session = ClusterSession::open(request(data)).unwrap();
+        let token = CancelToken::new();
+        token.cancel();
+        match session.run_with(&mut NoopObserver, &token) {
+            Err(ClusterError::Cancelled) => {}
+            other => panic!("expected Cancelled, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn all_engine_kinds_flow_through_the_builder() {
+        let data = blob_data(5, 500);
+        for engine in [
+            EngineKind::Naive,
+            EngineKind::Hamerly,
+            EngineKind::Elkan,
+            EngineKind::Yinyang,
+        ] {
+            let req = ClusterRequest::builder()
+                .inline(Arc::clone(&data))
+                .k(5)
+                .engine(engine)
+                .accel(Acceleration::DynamicM(2))
+                .threads(1)
+                .build()
+                .unwrap();
+            let mut session = ClusterSession::open(req).unwrap();
+            let report = session.run().unwrap();
+            assert!(report.converged, "{}", engine.name());
+        }
+        // PJRT is constructible through the same builder; without
+        // artifacts it fails with a typed error instead of panicking.
+        let req = ClusterRequest::builder()
+            .inline(data)
+            .k(5)
+            .engine(EngineKind::Pjrt)
+            .artifact_dir("/definitely/not/a/real/artifact/dir")
+            .build()
+            .unwrap();
+        match ClusterSession::open(req) {
+            Ok(_) => panic!("bogus artifact dir must not open"),
+            Err(ClusterError::Engine { engine, .. }) => assert_eq!(engine, "pjrt"),
+            Err(other) => panic!("expected an engine error, got {other}"),
+        }
+    }
+}

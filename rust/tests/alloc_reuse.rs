@@ -1,0 +1,113 @@
+//! Warm-workspace allocation accounting, under a counting global
+//! allocator. This binary holds exactly one test so no concurrent test
+//! pollutes the counters.
+//!
+//! The contract under test (the session API's reason to exist): a second
+//! same-shape `run` on a [`aakm::ClusterSession`], with the previous
+//! report recycled, must not (re)allocate any workspace scratch — engine
+//! bound state, kernel caches, Anderson history, centroid/assignment
+//! buffers are all reused across calls. The remaining warm-run allocator
+//! traffic is the per-iteration parallel-reduce accumulators plus a few
+//! phase labels, which is why the assertions below are a strict-reduction
+//! bound rather than a literal zero.
+
+use aakm::{ClusterRequest, ClusterSession};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn counters() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+#[test]
+fn warm_session_runs_do_not_rebuild_the_workspace() {
+    use aakm::data::synth;
+    use aakm::rng::Pcg32;
+
+    let mut rng = Pcg32::seed_from_u64(0xA110C);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 2000, 4, 8, 2.0, 0.4));
+    let request = ClusterRequest::builder()
+        .inline(x)
+        .k(8)
+        .threads(1)
+        .seed(9)
+        .build()
+        .unwrap();
+    let mut session = ClusterSession::open(request).unwrap();
+
+    // Cold run: builds engine bound state, kernel caches, Anderson history,
+    // and all solver scratch.
+    let (calls0, bytes0) = counters();
+    let r1 = session.run().unwrap();
+    let (calls1, bytes1) = counters();
+    let (cold_calls, cold_bytes) = (calls1 - calls0, bytes1 - bytes0);
+    assert!(r1.converged);
+    assert!(
+        session.workspace().last_run_rebuilt_scratch(),
+        "the first run must build the scratch"
+    );
+    let (iters, energy) = (r1.iterations, r1.energy);
+    session.recycle(r1);
+
+    // One warm-up rerun lets every pool (trace buffers, report outputs)
+    // reach steady state before measuring.
+    let r2 = session.run().unwrap();
+    assert!(!session.workspace().last_run_rebuilt_scratch());
+    session.recycle(r2);
+
+    // Measured steady-state rerun.
+    let (calls2, bytes2) = counters();
+    let r3 = session.run().unwrap();
+    let (calls3, bytes3) = counters();
+    let (warm_calls, warm_bytes) = (calls3 - calls2, bytes3 - bytes2);
+
+    // Identical deterministic run...
+    assert_eq!(r3.iterations, iters);
+    assert_eq!(r3.energy.to_bits(), energy.to_bits());
+    // ...with zero scratch rebuilds...
+    assert!(
+        !session.workspace().last_run_rebuilt_scratch(),
+        "steady-state rerun must not reallocate workspace scratch"
+    );
+    assert_eq!(session.workspace().runs(), 3);
+    // ...and sharply reduced allocator traffic: everything that remains is
+    // per-iteration reduce transients, so a warm run must stay well under
+    // the cold run on both axes (the runs are deterministic, so these
+    // bounds are exact regression checks, not timing-dependent ones).
+    assert!(
+        warm_calls * 2 < cold_calls,
+        "warm rerun made {warm_calls} allocations vs {cold_calls} cold — workspace reuse regressed"
+    );
+    assert!(
+        warm_bytes * 4 < cold_bytes,
+        "warm rerun allocated {warm_bytes} bytes vs {cold_bytes} cold — workspace reuse regressed"
+    );
+    session.recycle(r3);
+}

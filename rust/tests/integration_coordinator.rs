@@ -1,13 +1,13 @@
 //! Integration: the coordinator service end to end — mixed engines, mixed
-//! datasets, streaming mode, and the PJRT path when artifacts exist.
+//! datasets, precision threading, cancellation, streaming mode, and the
+//! PJRT path when artifacts exist.
 
-use aakm::config::{Acceleration, EngineKind, SolverConfig};
-use aakm::coordinator::{
-    Coordinator, CoordinatorConfig, JobData, JobSpec, StreamingClusterer,
-};
+use aakm::config::{Acceleration, EngineKind, Precision, SolverConfig};
+use aakm::coordinator::{Coordinator, CoordinatorConfig, JobStatus, StreamingClusterer};
 use aakm::data::synth;
 use aakm::init::InitMethod;
 use aakm::rng::Pcg32;
+use aakm::{ClusterError, ClusterRequest};
 use std::sync::Arc;
 
 fn coordinator() -> Coordinator {
@@ -23,25 +23,94 @@ fn coordinator() -> Coordinator {
 fn mixed_dataset_job_stream() {
     let coord = coordinator();
     let names = ["HTRU2", "Birch", "Eb", "Shuttle"];
+    let mut handles = Vec::new();
     for (id, name) in names.iter().enumerate() {
-        coord
-            .submit(JobSpec {
-                id: id as u64,
-                data: JobData::Registry { name: name.to_string(), scale: 0.02 },
-                k: 8,
-                init: InitMethod::KMeansPlusPlus,
-                seed: id as u64,
-                accel: Acceleration::DynamicM(2),
-                engine: EngineKind::Hamerly,
-                max_iters: 5000,
-            })
+        let request = ClusterRequest::builder()
+            .registry(*name, 0.02)
+            .k(8)
+            .init(InitMethod::KMeansPlusPlus)
+            .seed(id as u64)
+            .accel(Acceleration::DynamicM(2))
+            .engine(EngineKind::Hamerly)
+            .build()
             .unwrap();
+        handles.push(coord.submit(request).unwrap());
     }
-    let results = coord.collect(names.len()).unwrap();
+    let results = Coordinator::wait_all(handles);
     for r in &results {
         let out = r.outcome.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", r.id));
         assert!(out.converged, "job {}", r.id);
         assert!(out.centroids.n() == 8);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn precision_threads_through_the_coordinator() {
+    // The ROADMAP item this PR closes: service jobs can opt into f32, and
+    // the chosen precision is echoed in the result metadata.
+    let coord = coordinator();
+    let mut rng = Pcg32::seed_from_u64(40);
+    let mut x = synth::gaussian_blobs(&mut rng, 1500, 5, 6, 2.0, 0.3);
+    // Pre-center: the f32 kernel's accuracy companion.
+    aakm::data::center(&mut x);
+    let x = Arc::new(x);
+    let mut handles = Vec::new();
+    for precision in [Precision::F64, Precision::F32] {
+        let request = ClusterRequest::builder()
+            .inline(Arc::clone(&x))
+            .k(6)
+            .seed(11)
+            .precision(precision)
+            .build()
+            .unwrap();
+        handles.push(coord.submit(request).unwrap());
+    }
+    let results = Coordinator::wait_all(handles);
+    let f64_out = results[0].outcome.as_ref().unwrap();
+    let f32_out = results[1].outcome.as_ref().unwrap();
+    assert_eq!(f64_out.precision, Precision::F64);
+    assert_eq!(f32_out.precision, Precision::F32);
+    assert!(f64_out.converged && f32_out.converged);
+    let rel = (f32_out.energy - f64_out.energy).abs() / f64_out.energy.max(1e-12);
+    assert!(rel < 5e-2, "f32 {} vs f64 {} (rel {rel})", f32_out.energy, f64_out.energy);
+    coord.shutdown();
+}
+
+#[test]
+fn cancellation_reaches_a_running_job() {
+    // One worker, one long job: cancel while it runs; the worker must
+    // stop at an iteration boundary and report a typed Cancelled outcome.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        solver_threads: 1,
+        artifact_dir: aakm::runtime::default_artifact_dir(),
+    });
+    let mut rng = Pcg32::seed_from_u64(50);
+    // A big, poorly separated instance: hundreds of ms of solve time.
+    let x = Arc::new(synth::noisy_curve(&mut rng, 60_000, 4, 0.3));
+    let request = ClusterRequest::builder()
+        .inline(x)
+        .k(24)
+        .seed(3)
+        .build()
+        .unwrap();
+    let handle = coord.submit(request).unwrap();
+    // Wait until the worker has actually picked the job up.
+    while handle.status() == JobStatus::Queued {
+        std::thread::yield_now();
+    }
+    handle.cancel();
+    let result = handle.wait();
+    // The solver checks the token at iteration boundaries, so either the
+    // run was cut short (Cancelled) or it legitimately finished between
+    // pickup and cancel — on this instance the latter would take far
+    // longer than the cancel round-trip.
+    match &result.outcome {
+        Err(ClusterError::Cancelled) => {}
+        Err(other) => panic!("expected Cancelled, got error {other}"),
+        Ok(out) => panic!("expected Cancelled, job finished in {} iterations", out.iterations),
     }
     coord.shutdown();
 }
@@ -56,16 +125,23 @@ fn pjrt_jobs_through_the_service() {
     let coord = coordinator();
     let mut rng = Pcg32::seed_from_u64(5);
     let data = Arc::new(synth::gaussian_blobs(&mut rng, 800, 8, 10, 2.0, 0.3));
-    for id in 0..3 {
-        let mut job = JobSpec::inline(id, Arc::clone(&data), 10);
-        job.engine = EngineKind::Pjrt;
-        coord.submit(job).unwrap();
+    let mut handles = Vec::new();
+    for id in 0..3u64 {
+        let request = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(10)
+            .seed(id ^ 0x5EED)
+            .engine(EngineKind::Pjrt)
+            .build()
+            .unwrap();
+        handles.push(coord.submit(request).unwrap());
     }
-    let results = coord.collect(3).unwrap();
+    let results = Coordinator::wait_all(handles);
     for r in &results {
         let out = r.outcome.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", r.id));
         assert!(out.converged);
         assert!(out.mse > 0.0);
+        assert_eq!(out.engine, EngineKind::Pjrt);
     }
     coord.shutdown();
 }
@@ -79,17 +155,19 @@ fn native_and_pjrt_agree_through_the_service() {
     let coord = coordinator();
     let mut rng = Pcg32::seed_from_u64(6);
     let data = Arc::new(synth::gaussian_blobs(&mut rng, 900, 2, 8, 2.5, 0.2));
-    let mut native = JobSpec::inline(1, Arc::clone(&data), 8);
-    native.engine = EngineKind::Hamerly;
-    let mut pjrt = JobSpec::inline(2, Arc::clone(&data), 8);
-    pjrt.engine = EngineKind::Pjrt;
-    // Same seed → same seeding → comparable energies.
-    pjrt.seed = native.seed;
-    coord.submit(native).unwrap();
-    coord.submit(pjrt).unwrap();
-    let results = coord.collect(2).unwrap();
-    let e1 = results[0].outcome.as_ref().unwrap().energy;
-    let e2 = results[1].outcome.as_ref().unwrap().energy;
+    let request = |engine: EngineKind| {
+        ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(8)
+            .seed(7) // same seed → same seeding → comparable energies
+            .engine(engine)
+            .build()
+            .unwrap()
+    };
+    let h_native = coord.submit(request(EngineKind::Hamerly)).unwrap();
+    let h_pjrt = coord.submit(request(EngineKind::Pjrt)).unwrap();
+    let e1 = h_native.wait().outcome.unwrap().energy;
+    let e2 = h_pjrt.wait().outcome.unwrap().energy;
     let rel = (e1 - e2).abs() / e1.max(e2);
     assert!(rel < 0.05, "native {e1} vs pjrt {e2}");
     coord.shutdown();
@@ -108,4 +186,8 @@ fn streaming_clusterer_end_to_end() {
     let report = sc.finalize().expect("finalize");
     assert!(report.converged);
     assert_eq!(sc.centroids().unwrap().n(), 6);
+    // A second polish reuses the warm solver workspace.
+    sc.push_chunk(&x.gather_rows(&(0..750).collect::<Vec<_>>()));
+    let report2 = sc.finalize().expect("second finalize");
+    assert_eq!(report2.centroids.n(), 6);
 }

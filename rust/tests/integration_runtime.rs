@@ -130,7 +130,7 @@ fn pjrt_engine_drives_algorithm1_solver() {
     }
     // Final quality matches the native Hamerly solver from the same seed.
     let native_cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
-    let native = Solver::new(native_cfg).run(&x, c0);
+    let native = Solver::try_new(native_cfg).unwrap().run(&x, c0);
     let rel = (ours.energy - native.energy).abs() / native.energy;
     assert!(rel < 0.05, "pjrt {} vs native {}", ours.energy, native.energy);
 }

@@ -1,0 +1,95 @@
+//! Integration: the unified request/session API against the deprecated
+//! shims — same inputs must mean the same results through every entry
+//! point, so downstream callers can migrate mechanically.
+
+use aakm::config::{Acceleration, SolverConfig};
+use aakm::data::synth;
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::{RunReport, Solver};
+use aakm::rng::Pcg32;
+use aakm::{ClusterRequest, ClusterSession};
+use std::sync::Arc;
+
+// n ≤ 256 keeps every thread-pool operation on its inline path (all the
+// solver's parallel_for/map_reduce min_chunks are ≥ 256), so the shims'
+// host-sized pools still produce bit-identical results on any machine —
+// which is what lets the parity assertions below demand exact equality.
+fn problem(seed: u64) -> (Arc<aakm::data::DataMatrix>, aakm::data::DataMatrix) {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 250, 5, 7, 2.0, 0.35));
+    let c0 = seed_centroids(&x, 7, InitMethod::KMeansPlusPlus, &mut rng);
+    (x, c0)
+}
+
+fn assert_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.converged, b.converged);
+    assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.centroids, b.centroids);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_paper_method_shim_matches_session_path() {
+    let (x, c0) = problem(0xC0FFEE);
+    let via_shim = aakm::kmeans::run_paper_method(&x, c0.clone());
+    let req = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(7)
+        .initial_centroids(Arc::new(c0))
+        .build()
+        .unwrap();
+    let via_session = ClusterSession::open(req).unwrap().run().unwrap();
+    assert_identical(&via_shim, &via_session);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_lloyd_shim_matches_session_path() {
+    let (x, c0) = problem(0xBEEF);
+    let via_shim = aakm::kmeans::run_lloyd_baseline(&x, c0.clone());
+    let req = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(7)
+        .initial_centroids(Arc::new(c0))
+        .accel(Acceleration::None)
+        .build()
+        .unwrap();
+    let via_session = ClusterSession::open(req).unwrap().run().unwrap();
+    assert_identical(&via_shim, &via_session);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_solver_new_matches_try_new() {
+    let (x, c0) = problem(0xDEAD);
+    let cfg = SolverConfig { threads: 1, ..SolverConfig::default() };
+    let old = Solver::new(cfg.clone()).run(&x, c0.clone());
+    let new = Solver::try_new(cfg).unwrap().run(&x, c0);
+    assert_identical(&old, &new);
+}
+
+#[test]
+fn session_seeding_matches_explicit_seeding() {
+    // The session's internal seeding (fresh Pcg32 from the request seed)
+    // must be byte-identical to the documented manual pipeline.
+    let mut rng = Pcg32::seed_from_u64(123);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 1200, 4, 6, 2.0, 0.4));
+    let mut seed_rng = Pcg32::seed_from_u64(77);
+    let c0 = seed_centroids(&x, 6, InitMethod::KMeansPlusPlus, &mut seed_rng);
+    let manual = Solver::try_new(SolverConfig { threads: 1, ..SolverConfig::default() })
+        .unwrap()
+        .run(&x, c0);
+    let req = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(6)
+        .init(InitMethod::KMeansPlusPlus)
+        .seed(77)
+        .threads(1)
+        .build()
+        .unwrap();
+    let via_session = ClusterSession::open(req).unwrap().run().unwrap();
+    assert_identical(&manual, &via_session);
+}

@@ -11,6 +11,10 @@ fn cfg(accel: Acceleration) -> SolverConfig {
     SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() }
 }
 
+fn solver(accel: Acceleration) -> Solver {
+    Solver::try_new(cfg(accel)).expect("CPU engine construction is infallible")
+}
+
 #[test]
 fn paper_method_beats_lloyd_iterations_across_inits() {
     // Aggregated over the paper's four initializations on a mid-size
@@ -24,8 +28,8 @@ fn paper_method_beats_lloyd_iterations_across_inits() {
     for (i, init) in InitMethod::PAPER_SET.iter().enumerate() {
         let mut rng = Pcg32::seed_from_u64(1000 + i as u64);
         let c0 = seed_centroids(&x, 10, *init, &mut rng);
-        let ours = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0.clone());
-        let lloyd = Solver::new(cfg(Acceleration::None)).run(&x, c0);
+        let ours = solver(Acceleration::DynamicM(2)).run(&x, c0.clone());
+        let lloyd = solver(Acceleration::None).run(&x, c0);
         assert!(ours.converged && lloyd.converged);
         // Quality parity (same local-minimum ballpark).
         assert!(
@@ -51,7 +55,7 @@ fn dynamic_m_adapts_over_the_run() {
     let mut rng = Pcg32::seed_from_u64(42);
     let x = synth::noisy_curve(&mut rng, 3000, 4, 0.25);
     let c0 = seed_centroids(&x, 12, InitMethod::KMeansPlusPlus, &mut rng);
-    let report = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0);
+    let report = solver(Acceleration::DynamicM(2)).run(&x, c0);
     assert!(report.converged);
     let distinct: std::collections::HashSet<usize> = report.m_trace.iter().copied().collect();
     assert!(
@@ -72,7 +76,7 @@ fn acceptance_rate_is_high_on_clustered_data() {
     for seed in 0..3u64 {
         let mut rng = Pcg32::seed_from_u64(7 + seed);
         let c0 = seed_centroids(&x, 10, InitMethod::KMeansPlusPlus, &mut rng);
-        let report = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0);
+        let report = solver(Acceleration::DynamicM(2)).run(&x, c0);
         assert!(report.converged);
         accepted += report.accepted;
         iterations += report.iterations;
@@ -91,8 +95,8 @@ fn k_sweep_matches_paper_shape() {
     for k in [5, 25, 75] {
         let mut rng = Pcg32::seed_from_u64(k as u64);
         let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
-        let ours = Solver::new(cfg(Acceleration::DynamicM(2))).run(&x, c0.clone());
-        let lloyd = Solver::new(cfg(Acceleration::None)).run(&x, c0);
+        let ours = solver(Acceleration::DynamicM(2)).run(&x, c0.clone());
+        let lloyd = solver(Acceleration::None).run(&x, c0);
         assert!(ours.converged, "k={k}");
         assert!(
             ours.energy <= lloyd.energy * 1.10,
@@ -114,7 +118,7 @@ fn engines_and_acceleration_commute() {
     for engine in [EngineKind::Naive, EngineKind::Hamerly, EngineKind::Elkan] {
         let mut c = cfg(Acceleration::DynamicM(2));
         c.engine = engine;
-        let report = Solver::new(c).run(&x, c0.clone());
+        let report = Solver::try_new(c).unwrap().run(&x, c0.clone());
         assert!(report.converged, "{engine:?}");
         energies.push(report.energy);
     }
@@ -135,7 +139,7 @@ fn fixed_vs_dynamic_m_both_converge_table2_style() {
         Acceleration::FixedM(5),
         Acceleration::DynamicM(5),
     ] {
-        let report = Solver::new(cfg(accel)).run(&x, c0.clone());
+        let report = solver(accel).run(&x, c0.clone());
         assert!(report.converged, "{accel:?} did not converge");
         for w in report.energy_trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "{accel:?}: energy rose");

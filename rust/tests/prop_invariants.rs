@@ -51,7 +51,8 @@ fn materialize(inst: Instance) -> (DataMatrix, DataMatrix) {
 }
 
 fn solver(accel: Acceleration) -> Solver {
-    Solver::new(SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() })
+    Solver::try_new(SolverConfig { accel, threads: 1, record_trace: true, ..SolverConfig::default() })
+        .expect("CPU engine construction is infallible")
 }
 
 const ROUNDS: usize = 25;

@@ -24,6 +24,17 @@ cargo fmt --check
 cargo build --release
 cargo test -q
 
+# API-docs leg: the request/session surface is documented; drift (broken
+# intra-doc links, bad code fences) fails fast instead of rotting.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+echo "ci.sh: cargo doc leg OK (no rustdoc warnings)"
+
+# Example-compile smoke leg: examples/ are the public-API contract surface;
+# API drift that breaks them must fail CI. A manifest without example
+# targets makes this a no-op, which is the correct skip.
+cargo build --release --examples
+echo "ci.sh: examples compile leg OK"
+
 # Quick-mode perf smoke: run the three kernel variants (scalar-f64,
 # simd-f64, simd-f32) on one small shape and fail if the machine-readable
 # trail is missing any variant's entries. The --no-run probe separates
@@ -33,7 +44,8 @@ cargo test -q
 probe_log=$(mktemp)
 if PERF_HOTPATH_QUICK=1 cargo bench --bench perf_hotpath --no-run >"$probe_log" 2>&1; then
   PERF_HOTPATH_QUICK=1 cargo bench --bench perf_hotpath
-  for key in seed_scalar_ms scalar_f64_ms simd_f64_ms simd_f32_ms simd_level; do
+  for key in seed_scalar_ms scalar_f64_ms simd_f64_ms simd_f32_ms simd_level \
+             cold_session_ms warm_session_ms; do
     if ! grep -q "\"$key\"" BENCH_hotpath.json; then
       echo "ci.sh: BENCH_hotpath.json is missing '$key' entries" >&2
       exit 1
