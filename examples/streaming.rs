@@ -1,0 +1,94 @@
+//! Out-of-core streaming demo: generate a binary shard chunk-by-chunk
+//! (the full dataset never exists in memory), then cluster it with the
+//! Anderson-accelerated mini-batch engine through the same
+//! `ClusterRequest` / `ClusterSession` API as every other run — the shard
+//! is memory-mapped and streamed one chunk at a time, so peak resident
+//! samples stay at the configured chunk size while the shard itself is
+//! orders of magnitude larger.
+//!
+//! Run: `cargo run --release --example streaming`
+
+use aakm::config::{Acceleration, EngineKind};
+use aakm::data::{ChunkSource, DataMatrix, MmapShardSource, ShardWriter, SynthChunks};
+use aakm::{ClusterError, ClusterRequest, ClusterSession};
+
+const SHARD_ROWS: usize = 200_000;
+const DIMS: usize = 8;
+const CLUSTERS: usize = 10;
+const CHUNK_ROWS: usize = 8_192;
+
+fn main() -> Result<(), ClusterError> {
+    // ---- Produce the shard: a generator stream written chunk by chunk.
+    // Peak resident samples during generation = one chunk.
+    let dir = std::env::temp_dir().join("aakm_streaming_example");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let shard_path = dir.join("stream_demo.fv");
+    let mut generator = SynthChunks::new(7, SHARD_ROWS, DIMS, CLUSTERS, 2.5, 0.25);
+    let mut writer = ShardWriter::create(&shard_path, DIMS).expect("create shard");
+    let mut chunk = DataMatrix::zeros(0, DIMS);
+    while generator.next_chunk(CHUNK_ROWS, &mut chunk).expect("generate") > 0 {
+        writer.append(&chunk).expect("append chunk");
+    }
+    let rows = writer.finish().expect("finish shard");
+    let shard_bytes = std::fs::metadata(&shard_path).expect("stat shard").len();
+    let chunk_bytes = (CHUNK_ROWS * DIMS * 8) as u64;
+    println!(
+        "shard: {} ({} samples x {}d, {:.1} MiB) — chunk budget {} samples ({:.1} MiB, {:.0}x \
+         smaller)",
+        shard_path.display(),
+        rows,
+        DIMS,
+        shard_bytes as f64 / (1024.0 * 1024.0),
+        CHUNK_ROWS,
+        chunk_bytes as f64 / (1024.0 * 1024.0),
+        shard_bytes as f64 / chunk_bytes as f64,
+    );
+    let probe = MmapShardSource::open(&shard_path).expect("open shard");
+    assert_eq!(probe.n(), SHARD_ROWS);
+    println!(
+        "peak resident samples during clustering: {} (≤ chunk size {})\n",
+        CHUNK_ROWS.min(probe.n()),
+        CHUNK_ROWS
+    );
+
+    // ---- Cluster it, Anderson-on vs Anderson-off, through the unified
+    // request API: EngineKind::MiniBatch + a Shard source stream the file
+    // through MmapShardSource; iterations are epochs.
+    let mut epochs = Vec::new();
+    let variants = [
+        ("anderson (dynamic m=2)", Acceleration::DynamicM(2)),
+        ("plain mini-batch", Acceleration::None),
+    ];
+    for (label, accel) in variants {
+        let request = ClusterRequest::builder()
+            .shard(&shard_path)
+            .k(CLUSTERS)
+            .engine(EngineKind::MiniBatch)
+            .accel(accel)
+            .chunk_size(CHUNK_ROWS)
+            .record_trace(true)
+            .seed(7)
+            .build()?;
+        let mut session = ClusterSession::open(request)?;
+        let report = session.run()?;
+        println!(
+            "{label:<22} {} epochs ({} accepted), energy {:.6e}, mse {:.4}, {:.2}s",
+            report.iterations, report.accepted, report.energy, report.mse, report.seconds
+        );
+        if !report.energy_trace.is_empty() {
+            let first = report.energy_trace.first().copied().unwrap_or(f64::NAN);
+            let last = report.energy_trace.last().copied().unwrap_or(f64::NAN);
+            println!("  epoch energies: {first:.4e} → {last:.4e}");
+        }
+        epochs.push((label, report.iterations, report.energy));
+    }
+    if let [(_, aa_epochs, aa_e), (_, plain_epochs, plain_e)] = epochs[..] {
+        println!(
+            "\nanderson vs plain: {aa_epochs} vs {plain_epochs} epochs, final energy {:.4e} vs \
+             {:.4e}",
+            aa_e, plain_e
+        );
+    }
+    std::fs::remove_file(&shard_path).ok();
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Streaming mini-batch sweep: full-batch Lloyd baseline vs mini-batch
+//! with and without epoch-level Anderson acceleration, across bench
+//! shapes, with the machine-readable trail in `BENCH_minibatch.json`.
+//!
+//! For each shape the harness records the Lloyd(Hamerly) final energy
+//! `E*`, then runs both mini-batch variants from the same seeding and
+//! reports the number of *epochs* each needs to reach the 5%-of-Lloyd
+//! target (`1.05 · E*`) plus final energies and wall-clock — the
+//! acceptance trail for the streaming engine (AA should reach the target
+//! in fewer epochs than plain mini-batch on at least one shape).
+//!
+//! Set `PERF_MINIBATCH_QUICK=1` for the CI smoke leg: one small shape,
+//! `BENCH_minibatch.json` still written (that is what CI asserts on).
+
+use aakm::config::{Acceleration, EngineKind, SolverConfig};
+use aakm::data::{synth, DataMatrix, InMemoryChunks};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::metrics::Stopwatch;
+use aakm::rng::Pcg32;
+use aakm::stream::{MiniBatchConfig, MiniBatchSolver};
+use std::sync::Arc;
+
+struct ShapeResult {
+    row: String,
+    aa_beats_plain: bool,
+}
+
+fn minibatch_cfg(accel: Acceleration, chunk: usize, max_epochs: usize) -> MiniBatchConfig {
+    MiniBatchConfig {
+        solver: SolverConfig {
+            engine: EngineKind::MiniBatch,
+            accel,
+            threads: 1,
+            max_iters: max_epochs,
+            record_trace: true,
+            ..SolverConfig::default()
+        },
+        chunk_size: chunk,
+        batches_per_epoch: 0,
+        // Tight tolerance: the sweep measures epochs-to-target, so the
+        // run must not plateau-stop above the target band.
+        convergence_tol: 1e-7,
+    }
+}
+
+/// First 1-based epoch whose checkpoint energy is within the target.
+fn epochs_to_target(trace: &[f64], target: f64) -> Option<usize> {
+    trace.iter().position(|&e| e <= target).map(|idx| idx + 1)
+}
+
+fn fmt_epochs(e: Option<usize>) -> String {
+    match e {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+fn run_shape(
+    name: &str,
+    x: Arc<DataMatrix>,
+    k: usize,
+    chunk: usize,
+    max_epochs: usize,
+) -> ShapeResult {
+    let mut srng = Pcg32::seed_from_u64(0x5EED);
+    let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut srng);
+
+    // Full-batch Lloyd baseline (the quality target).
+    let sw = Stopwatch::start();
+    let lloyd = Solver::try_new(SolverConfig {
+        accel: Acceleration::None,
+        threads: 1,
+        ..SolverConfig::default()
+    })
+    .expect("CPU engine")
+    .run(&x, c0.clone());
+    let lloyd_ms = sw.seconds() * 1000.0;
+    let target = 1.05 * lloyd.energy;
+
+    let variant = |accel: Acceleration| {
+        let mut solver = MiniBatchSolver::try_new(minibatch_cfg(accel, chunk, max_epochs))
+            .expect("minibatch workspace");
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let sw = Stopwatch::start();
+        let report = solver.run(&mut source, &c0).expect("minibatch run");
+        let ms = sw.seconds() * 1000.0;
+        let reached = epochs_to_target(&report.energy_trace, target);
+        (report, ms, reached)
+    };
+    let (aa, aa_ms, aa_epochs) = variant(Acceleration::DynamicM(2));
+    let (plain, plain_ms, plain_epochs) = variant(Acceleration::None);
+
+    let aa_beats_plain = match (aa_epochs, plain_epochs) {
+        (Some(a), Some(p)) => a < p,
+        (Some(_), None) => true,
+        _ => false,
+    };
+    println!(
+        "{name:<16} lloyd E*={:.4e} ({:.0} ms, {} it) | AA: {} epochs to 1.05E* \
+         ({} total, {} accepted, {:.0} ms) | plain: {} epochs to 1.05E* ({} total, {:.0} ms)",
+        lloyd.energy,
+        lloyd_ms,
+        lloyd.iterations,
+        fmt_epochs(aa_epochs),
+        aa.iterations,
+        aa.accepted,
+        aa_ms,
+        fmt_epochs(plain_epochs),
+        plain.iterations,
+        plain_ms,
+    );
+    let row = format!(
+        "    {{\"shape\": \"{name}\", \"n\": {}, \"d\": {}, \"k\": {k}, \
+         \"chunk\": {chunk}, \"lloyd_energy\": {:.6e}, \"lloyd_ms\": {lloyd_ms:.2}, \
+         \"minibatch_aa\": {{\"epochs_to_target\": {}, \"epochs\": {}, \"accepted\": {}, \
+         \"final_energy\": {:.6e}, \"ms\": {aa_ms:.2}}}, \
+         \"minibatch_plain\": {{\"epochs_to_target\": {}, \"epochs\": {}, \
+         \"final_energy\": {:.6e}, \"ms\": {plain_ms:.2}}}, \
+         \"aa_beats_plain\": {aa_beats_plain}}}",
+        x.n(),
+        x.d(),
+        lloyd.energy,
+        fmt_epochs(aa_epochs),
+        aa.iterations,
+        aa.accepted,
+        aa.energy,
+        fmt_epochs(plain_epochs),
+        plain.iterations,
+        plain.energy,
+    );
+    ShapeResult { row, aa_beats_plain }
+}
+
+fn main() {
+    let quick = std::env::var("PERF_MINIBATCH_QUICK").is_ok();
+    println!(
+        "## Mini-batch sweep — Lloyd target vs minibatch ±Anderson (quick={quick})\n"
+    );
+    let mut results: Vec<ShapeResult> = Vec::new();
+    if quick {
+        let mut rng = Pcg32::seed_from_u64(0x7A11);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 20_000, 8, 8, 2.0, 0.4));
+        results.push(run_shape("blobs-20k", x, 8, 2048, 40));
+    } else {
+        let mut rng = Pcg32::seed_from_u64(0x7A11);
+        let blobs =
+            Arc::new(synth::gaussian_blobs_ex(&mut rng, 100_000, 8, 10, 2.0, 0.4, 0.05, 2.0));
+        results.push(run_shape("blobs-100k", blobs, 10, 4096, 60));
+        let curve = Arc::new(synth::noisy_curve(&mut rng, 50_000, 4, 0.3));
+        results.push(run_shape("curve-50k", curve, 16, 4096, 60));
+        let manifold = Arc::new(synth::sin_manifold(&mut rng, 60_000, 10, 2, 4.0, 0.05));
+        results.push(run_shape("manifold-60k", manifold, 12, 4096, 60));
+    }
+    let any_aa_win = results.iter().any(|r| r.aa_beats_plain);
+    println!(
+        "\nAA reached the 5%-of-Lloyd target in fewer epochs than plain mini-batch on \
+         {} of {} shapes",
+        results.iter().filter(|r| r.aa_beats_plain).count(),
+        results.len()
+    );
+    let rows: Vec<String> = results.into_iter().map(|r| r.row).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"perf_minibatch\",\n  \"quick\": {quick},\n  \
+         \"variants\": [\"lloyd\", \"minibatch_aa\", \"minibatch_plain\"],\n  \
+         \"aa_beats_plain_somewhere\": {any_aa_win},\n  \"shapes\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_minibatch.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_minibatch.json"),
+        Err(e) => println!("\ncould not write BENCH_minibatch.json: {e}"),
+    }
+}

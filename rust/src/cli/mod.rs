@@ -35,8 +35,16 @@ COMMANDS:
              --dataset <registry name | csv/fvecs path>   (default Birch)
              --k <clusters>                               (default 10)
              --init <random|k-means++|afk-mc2|bf|clarans> (default k-means++)
-             --engine <naive|hamerly|elkan|yinyang|pjrt>  (default hamerly)
-             --accel <none|fixed:M|dynamic:M>             (default dynamic:2)
+             --engine <naive|hamerly|elkan|yinyang|pjrt|minibatch>
+                                                          (default hamerly)
+             --chunk-size <n>          mini-batch chunk rows (default 4096);
+               with --engine minibatch a .fv dataset streams out-of-core
+               through a memory-mapped shard, chunk by chunk
+             --batches-per-epoch <n>   0 = full pass per epoch (default 0;
+               a positive cap trains each epoch on only the FIRST n chunks
+               of the source — meant for unbounded generators)
+             --accel <none|fixed:M|dynamic:M>             (default dynamic:2;
+               with minibatch this is the epoch-level Anderson step)
              --precision <f64|f32>                        (default f64; f32
                stores samples in single precision for a ~2x faster assign
                sweep and auto-enables pre-centering)
@@ -135,6 +143,12 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.precision =
             Precision::parse(v).with_context(|| format!("bad --precision {v}"))?;
     }
+    if let Some(v) = args.get("chunk-size") {
+        cfg.chunk_size = v.parse().context("--chunk-size")?;
+    }
+    if let Some(v) = args.get("batches-per-epoch") {
+        cfg.batches_per_epoch = v.parse().context("--batches-per-epoch")?;
+    }
     Ok(cfg)
 }
 
@@ -142,12 +156,12 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
 /// request shape (the single job description every layer consumes).
 fn request_from_experiment(
     cfg: &ExperimentConfig,
-    x: Arc<DataMatrix>,
+    source: crate::request::DataSource,
     trace: bool,
     artifacts: &str,
 ) -> Result<ClusterRequest> {
     let request = ClusterRequest::builder()
-        .inline(x)
+        .source(source)
         .k(cfg.k)
         .init(cfg.init)
         .engine(cfg.engine)
@@ -159,42 +173,88 @@ fn request_from_experiment(
         .threads(cfg.threads)
         .seed(cfg.seed)
         .record_trace(trace)
+        .chunk_size(cfg.chunk_size)
+        .batches_per_epoch(cfg.batches_per_epoch)
         .artifact_dir(artifacts)
         .build()?;
     Ok(request)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    use crate::request::DataSource;
     let cfg = experiment_from_args(args)?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let mut x = load_dataset(&cfg.dataset, cfg.scale)?;
-    // Pre-centering is the f32 mode's accuracy companion (see
-    // linalg::kernel): on by default there, opt-in via --center otherwise.
-    // Distances are translation-invariant, so the clustering is unchanged;
-    // reported centroids are mapped back below.
-    let centering = args.flag("center") || cfg.precision == Precision::F32;
-    let mean = if centering { Some(data::center(&mut x)) } else { None };
-    println!(
-        "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}, seed={}",
-        cfg.dataset,
-        x.n(),
-        x.d(),
-        cfg.k,
-        cfg.init.name(),
-        cfg.engine.name(),
-        cfg.precision.name(),
-        if centering { ", pre-centered" } else { "" },
-        cfg.seed
-    );
+    // A `.fv` dataset under the mini-batch engine streams out-of-core as
+    // a memory-mapped shard; every other combination loads in RAM.
+    let shard_path = std::path::Path::new(&cfg.dataset);
+    let streams_shard = cfg.engine == EngineKind::MiniBatch
+        && shard_path.extension().is_some_and(|e| e == "fv")
+        && shard_path.exists();
     let trace = args.flag("trace");
-    let x = Arc::new(x);
-    let request = request_from_experiment(&cfg, Arc::clone(&x), trace, artifacts)?;
+    let (source, mean) = if streams_shard {
+        // Pre-centering needs the whole dataset in hand; a streamed shard
+        // is deliberately never resident. Reject the combination loudly
+        // instead of silently changing numerical behavior vs. a RAM run.
+        if args.flag("center") || cfg.precision == Precision::F32 {
+            bail!(
+                "--center / --precision f32 (which auto-centers) cannot be applied while \
+                 streaming a shard; pre-center the data when writing the shard \
+                 (data::center before ShardWriter), or drop --engine minibatch to load it \
+                 in RAM"
+            );
+        }
+        if cfg.scale != 1.0 {
+            bail!(
+                "--scale only applies to generated registry datasets; a streamed shard is \
+                 always clustered whole (write a smaller shard instead)"
+            );
+        }
+        let shard = data::MmapShardSource::open(shard_path)?;
+        println!(
+            "dataset {} (shard, n={}, d={}), k={}, engine=minibatch, chunk={}, seed={}",
+            cfg.dataset,
+            shard.n(),
+            shard.d(),
+            cfg.k,
+            cfg.chunk_size,
+            cfg.seed
+        );
+        (DataSource::Shard(shard_path.to_path_buf()), None)
+    } else {
+        let mut x = load_dataset(&cfg.dataset, cfg.scale)?;
+        // Pre-centering is the f32 mode's accuracy companion (see
+        // linalg::kernel): on by default there, opt-in via --center
+        // otherwise. Distances are translation-invariant, so the
+        // clustering is unchanged; reported centroids are mapped back
+        // below.
+        let centering = args.flag("center") || cfg.precision == Precision::F32;
+        let mean = if centering { Some(data::center(&mut x)) } else { None };
+        println!(
+            "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}, seed={}",
+            cfg.dataset,
+            x.n(),
+            x.d(),
+            cfg.k,
+            cfg.init.name(),
+            cfg.engine.name(),
+            cfg.precision.name(),
+            if centering { ", pre-centered" } else { "" },
+            cfg.seed
+        );
+        (DataSource::Inline(Arc::new(x)), mean)
+    };
+    let request = request_from_experiment(&cfg, source.clone(), trace, artifacts)?;
     let mut session = ClusterSession::open(request)?;
     let mut report = session.run()?;
     if let Some(mean) = &mean {
         data::uncenter(&mut report.centroids, mean);
     }
-    println!("ours ({:?}): {}", cfg.accel, report.summary());
+    let unit = if cfg.engine == EngineKind::MiniBatch {
+        " (iterations = epochs)"
+    } else {
+        ""
+    };
+    println!("ours ({:?}): {}{unit}", cfg.accel, report.summary());
     println!("  phases: {}", report.phases.summary());
     if trace {
         println!("  energy trace: {:?}", &report.energy_trace);
@@ -202,14 +262,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.flag("compare") {
         // The baseline differs only in acceleration, so it can reuse the
-        // warm workspace (same engine / precision / threads).
+        // warm workspace (same engine / precision / threads). Under the
+        // mini-batch engine this compares Anderson-on vs Anderson-off
+        // epochs on the same stream.
         let mut base_cfg = cfg.clone();
         base_cfg.accel = Acceleration::None;
-        let base_req = request_from_experiment(&base_cfg, x, false, artifacts)?;
+        let base_req = request_from_experiment(&base_cfg, source, false, artifacts)?;
         let mut base_session =
             ClusterSession::with_workspace(base_req, session.into_workspace())?;
         let base = base_session.run()?;
-        println!("lloyd baseline: {}", base.summary());
+        println!("baseline (no accel): {}", base.summary());
         let speedup = base.seconds / report.seconds.max(1e-12);
         println!(
             "speedup {speedup:.2}x, iteration ratio {:.2}x",
@@ -361,6 +423,43 @@ mod tests {
         ])
         .is_ok());
         assert!(dispatch(&["run", "--precision", "f16"]).is_err());
+    }
+
+    #[test]
+    fn run_minibatch_engine_inline_and_shard() {
+        // In-memory mini-batch run (registry dataset), with the AA-on vs
+        // AA-off comparison path.
+        assert!(dispatch(&[
+            "run", "--dataset", "HTRU2", "--scale", "0.01", "--k", "4", "--threads", "1",
+            "--engine", "minibatch", "--chunk-size", "128", "--compare"
+        ])
+        .is_ok());
+        // Out-of-core: write a .fv shard, then stream it chunk by chunk.
+        let dir = std::env::temp_dir().join("aakm_cli_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("stream.fv");
+        dispatch(&[
+            "datagen", "--dataset", "Birch", "--scale", "0.005", "--out",
+            out.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(dispatch(&[
+            "run", "--dataset", out.to_str().unwrap(), "--k", "3", "--threads", "1",
+            "--engine", "minibatch", "--chunk-size", "64"
+        ])
+        .is_ok());
+        // Pre-centering cannot be applied to a streamed shard: loud error
+        // instead of silently un-centered f32 numerics.
+        assert!(dispatch(&[
+            "run", "--dataset", out.to_str().unwrap(), "--k", "3", "--threads", "1",
+            "--engine", "minibatch", "--precision", "f32"
+        ])
+        .is_err());
+        assert!(dispatch(&[
+            "run", "--dataset", out.to_str().unwrap(), "--k", "3", "--threads", "1",
+            "--engine", "minibatch", "--center"
+        ])
+        .is_err());
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub enum EngineKind {
     Yinyang,
     /// PJRT-executed AOT G-step (the three-layer hot path).
     Pjrt,
+    /// Streaming mini-batch solver (Sculley 2010 with epoch-level Anderson
+    /// acceleration): data flows through the SIMD assign kernels one chunk
+    /// at a time, so datasets larger than RAM cluster in bounded memory.
+    /// Selecting this routes a session to [`crate::stream::MiniBatchSolver`]
+    /// instead of the full-batch loop.
+    MiniBatch,
 }
 
 impl EngineKind {
@@ -40,6 +46,7 @@ impl EngineKind {
             "elkan" => Some(Self::Elkan),
             "yinyang" => Some(Self::Yinyang),
             "pjrt" => Some(Self::Pjrt),
+            "minibatch" | "mini-batch" => Some(Self::MiniBatch),
             _ => None,
         }
     }
@@ -52,6 +59,7 @@ impl EngineKind {
             Self::Elkan => "elkan",
             Self::Yinyang => "yinyang",
             Self::Pjrt => "pjrt",
+            Self::MiniBatch => "minibatch",
         }
     }
 }
@@ -144,6 +152,10 @@ pub struct ExperimentConfig {
     /// Assignment-kernel sample storage precision (`f64` default; `f32`
     /// trades ~1e-7-relative distance accuracy for 2× sweep bandwidth).
     pub precision: Precision,
+    /// Samples per mini-batch chunk (`--engine minibatch` only).
+    pub chunk_size: usize,
+    /// Mini-batches per epoch; 0 = one full pass over the source.
+    pub batches_per_epoch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -162,6 +174,8 @@ impl Default for ExperimentConfig {
             scale: 1.0,
             threads: 0,
             precision: Precision::F64,
+            chunk_size: 4096,
+            batches_per_epoch: 0,
         }
     }
 }
@@ -219,6 +233,12 @@ impl ExperimentConfig {
             let s = v.as_str()?;
             cfg.precision = Precision::parse(s)
                 .ok_or_else(|| ConfigError::new(format!("unknown precision '{s}' (f64|f32)")))?;
+        }
+        if let Some(v) = sect("chunk_size") {
+            cfg.chunk_size = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("batches_per_epoch") {
+            cfg.batches_per_epoch = v.as_int()? as usize;
         }
         Ok(cfg)
     }
@@ -332,9 +352,11 @@ mod tests {
             EngineKind::Elkan,
             EngineKind::Yinyang,
             EngineKind::Pjrt,
+            EngineKind::MiniBatch,
         ] {
             assert_eq!(EngineKind::parse(kind.name()), Some(kind));
         }
+        assert_eq!(EngineKind::parse("mini-batch"), Some(EngineKind::MiniBatch));
         assert_eq!(EngineKind::parse("gpu"), None);
     }
 

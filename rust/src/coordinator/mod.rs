@@ -1,16 +1,19 @@
 //! The clustering service coordinator — Layer 3's process topology.
 //!
-//! A bounded job queue feeds a pool of worker threads; submission takes a
-//! [`ClusterRequest`] (the same description the in-process session API
-//! consumes, `Precision` included) and returns a [`JobHandle`] with
-//! poll / wait / cancel. Each worker owns its solver stack and keeps the
-//! [`Workspace`](crate::kmeans::Workspace) of its previous job warm: a
-//! stream of same-spec jobs reuses the engine, thread pool, kernel caches
-//! and solver scratch job over job (and, for `EngineKind::Pjrt`, the PJRT
-//! runtime with its compiled-executable cache, since PJRT handles are not
-//! `Send`). Submission applies backpressure when the queue is full;
-//! cancellation is cooperative — queued jobs are dropped at pickup,
-//! running jobs stop at the next iteration boundary.
+//! A bounded priority queue feeds a pool of worker threads; submission
+//! takes a [`ClusterRequest`] (the same description the in-process
+//! session API consumes, `Precision` included) and returns a [`JobHandle`]
+//! with poll / wait / cancel. Worker pickup honors
+//! [`ClusterRequest::priority`]: the highest-priority queued job runs
+//! first, FIFO within equal priorities. Each worker owns its solver stack
+//! and keeps the [`Workspace`](crate::kmeans::Workspace) of its previous
+//! job warm: a stream of same-spec jobs reuses the engine, thread pool,
+//! kernel caches and solver scratch job over job (and, for
+//! `EngineKind::Pjrt`, the PJRT runtime with its compiled-executable
+//! cache, since PJRT handles are not `Send`). Submission applies
+//! backpressure when the queue is full; cancellation is cooperative —
+//! queued jobs are dropped at pickup, running jobs stop at the next
+//! iteration boundary.
 //!
 //! The paper's contribution is the solver itself, so this layer is kept
 //! deliberately thin (lifecycle + dispatch) — but it is a real service:
@@ -33,10 +36,11 @@ use crate::metrics::Stopwatch;
 use crate::observe::{CancelToken, NoopObserver};
 use crate::request::ClusterRequest;
 use crate::session::ClusterSession;
+use std::collections::BinaryHeap;
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
@@ -154,17 +158,133 @@ impl JobHandle {
     }
 }
 
-enum Envelope {
-    Job(Box<JobTicket>),
-    Shutdown,
-}
-
 struct JobTicket {
     id: u64,
     /// Taken by the worker; `Some` until the job actually runs.
     request: Option<ClusterRequest>,
     shared: Arc<JobShared>,
     enqueued_at: Instant,
+}
+
+/// One queued job with its scheduling key. Max-heap order: higher
+/// priority first, then FIFO by submission sequence within a priority.
+struct QueuedJob {
+    priority: i32,
+    seq: u64,
+    ticket: Box<JobTicket>,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedJob {}
+
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse the sequence comparison so earlier submissions win the
+        // max-heap among equal priorities (FIFO).
+        self.priority.cmp(&other.priority).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Bounded, closable priority queue: `push` blocks on a full queue
+/// (backpressure), `pop` blocks on an empty one, `close` stops intake —
+/// workers drain whatever is already queued, then exit.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct QueueState {
+    heap: BinaryHeap<QueuedJob>,
+    capacity: usize,
+    closed: bool,
+}
+
+/// Outcome of a non-blocking push attempt.
+enum TryPush {
+    Queued,
+    Full(Box<JobTicket>),
+}
+
+impl JobQueue {
+    fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                heap: BinaryHeap::new(),
+                capacity: capacity.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push (backpressure); fails only on a closed queue.
+    fn push(&self, job: QueuedJob) -> Result<(), ClusterError> {
+        let mut st = self.state.lock().unwrap();
+        while st.heap.len() >= st.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(ClusterError::Shutdown);
+        }
+        st.heap.push(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push; hands the ticket back when the queue is full.
+    fn try_push(&self, job: QueuedJob) -> Result<TryPush, ClusterError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(ClusterError::Shutdown);
+        }
+        if st.heap.len() >= st.capacity {
+            return Ok(TryPush::Full(job.ticket));
+        }
+        st.heap.push(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(TryPush::Queued)
+    }
+
+    /// Take the highest-priority job, blocking while the queue is empty
+    /// and open; `None` once the queue is closed *and* drained.
+    fn pop(&self) -> Option<Box<JobTicket>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.heap.pop() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(job.ticket);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Stop intake and wake everyone (pushers fail, poppers drain).
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
 }
 
 /// A ticket dropped before its job was fulfilled (worker death, queue
@@ -189,24 +309,30 @@ impl Drop for JobTicket {
 
 /// The running service.
 pub struct Coordinator {
-    tx: mpsc::SyncSender<Envelope>,
+    queue: Arc<JobQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
     submitted: AtomicU64,
     next_id: AtomicU64,
+    next_seq: AtomicU64,
 }
 
 impl Coordinator {
     /// Start the worker pool.
     pub fn start(cfg: CoordinatorConfig) -> Self {
-        let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_depth.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(JobQueue::new(cfg.queue_depth));
         let mut workers = Vec::new();
         for widx in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
+            let queue = Arc::clone(&queue);
             let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &rx)));
+            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &queue)));
         }
-        Self { tx, workers, submitted: AtomicU64::new(0), next_id: AtomicU64::new(0) }
+        Self {
+            queue,
+            workers,
+            submitted: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+        }
     }
 
     fn enqueue(
@@ -216,19 +342,23 @@ impl Coordinator {
         blocking: bool,
     ) -> Result<Option<JobHandle>, ClusterError> {
         let shared = Arc::new(JobShared::new());
+        let priority = request.priority();
         let ticket = Box::new(JobTicket {
             id,
             request: Some(request),
             shared: Arc::clone(&shared),
             enqueued_at: Instant::now(),
         });
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let job = QueuedJob { priority, seq, ticket };
         if blocking {
-            self.tx.send(Envelope::Job(ticket)).map_err(|_| ClusterError::Shutdown)?;
+            self.queue.push(job)?;
         } else {
-            match self.tx.try_send(Envelope::Job(ticket)) {
-                Ok(()) => {}
-                Err(mpsc::TrySendError::Full(_)) => return Ok(None),
-                Err(mpsc::TrySendError::Disconnected(_)) => return Err(ClusterError::Shutdown),
+            match self.queue.try_push(job)? {
+                TryPush::Queued => {}
+                // A rejected ticket must not resolve its handle: dropping
+                // it here (without the handle ever escaping) is fine.
+                TryPush::Full(_ticket) => return Ok(None),
             }
         }
         self.submitted.fetch_add(1, Ordering::Relaxed);
@@ -273,12 +403,22 @@ impl Coordinator {
     }
 
     /// Stop accepting jobs, finish the queue, join the workers.
-    pub fn shutdown(self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Envelope::Shutdown);
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
-        drop(self.tx);
-        for w in self.workers {
+    }
+}
+
+/// Dropping the coordinator without [`Coordinator::shutdown`] must not
+/// leak the worker threads: close the queue (waking every blocked
+/// worker) and join them, mirroring the channel-disconnect exit path of
+/// the pre-priority-queue implementation.
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -295,21 +435,15 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-fn worker_loop(widx: usize, cfg: &CoordinatorConfig, rx: &Arc<Mutex<mpsc::Receiver<Envelope>>>) {
+fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue) {
     // Warm state reused across this worker's jobs: the previous job's
     // workspace (reused whenever the next job's spec matches) and the PJRT
     // runtime (not `Send`, so it must be born on this thread).
     let mut warm: Option<Workspace> = None;
     let mut pjrt: Option<(PathBuf, Rc<crate::runtime::PjrtRuntime>)> = None;
-    loop {
-        let msg = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        let mut ticket = match msg {
-            Ok(Envelope::Job(ticket)) => ticket,
-            Ok(Envelope::Shutdown) | Err(_) => return,
-        };
+    // Pickup pops the highest-priority queued job; `None` means the queue
+    // is closed and fully drained.
+    while let Some(mut ticket) = queue.pop() {
         let id = ticket.id;
         let request = ticket.request.take().expect("every ticket carries a request");
         let shared = Arc::clone(&ticket.shared);
@@ -456,6 +590,50 @@ mod tests {
     }
 
     #[test]
+    fn queue_pops_by_priority_then_fifo() {
+        let queue = JobQueue::new(8);
+        let mk = |id: u64| {
+            Box::new(JobTicket {
+                id,
+                request: None,
+                shared: Arc::new(JobShared::new()),
+                enqueued_at: Instant::now(),
+            })
+        };
+        queue.push(QueuedJob { priority: 0, seq: 0, ticket: mk(10) }).unwrap();
+        queue.push(QueuedJob { priority: 5, seq: 1, ticket: mk(11) }).unwrap();
+        queue.push(QueuedJob { priority: 5, seq: 2, ticket: mk(12) }).unwrap();
+        queue.push(QueuedJob { priority: -3, seq: 3, ticket: mk(13) }).unwrap();
+        let order: Vec<u64> = (0..4).map(|_| queue.pop().unwrap().id).collect();
+        assert_eq!(order, vec![11, 12, 10, 13], "priority desc, FIFO within a priority");
+        queue.close();
+        assert!(queue.pop().is_none(), "closed + drained queue ends the worker");
+        assert!(matches!(
+            queue.push(QueuedJob { priority: 0, seq: 4, ticket: mk(14) }),
+            Err(ClusterError::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn closed_queue_drains_before_workers_exit() {
+        let queue = JobQueue::new(8);
+        let mk = |id: u64| {
+            Box::new(JobTicket {
+                id,
+                request: None,
+                shared: Arc::new(JobShared::new()),
+                enqueued_at: Instant::now(),
+            })
+        };
+        queue.push(QueuedJob { priority: 1, seq: 0, ticket: mk(1) }).unwrap();
+        queue.push(QueuedJob { priority: 2, seq: 1, ticket: mk(2) }).unwrap();
+        queue.close();
+        assert_eq!(queue.pop().unwrap().id, 2);
+        assert_eq!(queue.pop().unwrap().id, 1);
+        assert!(queue.pop().is_none());
+    }
+
+    #[test]
     fn runs_jobs_and_returns_results() {
         let coord = Coordinator::start(CoordinatorConfig {
             workers: 2,
@@ -479,6 +657,17 @@ mod tests {
             assert!(r.service_time.as_nanos() > 0);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn dropping_the_coordinator_joins_workers() {
+        // Without an explicit shutdown, Drop must close the queue, drain
+        // the already-queued work and join the workers — no leaked
+        // threads, no hung handles.
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let handle = coord.submit(inline_request(1, 4)).unwrap();
+        drop(coord);
+        assert!(handle.wait().outcome.is_ok());
     }
 
     #[test]

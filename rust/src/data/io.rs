@@ -65,7 +65,10 @@ pub fn save_csv(path: &Path, x: &DataMatrix) -> Result<()> {
     Ok(())
 }
 
-const FVECS_MAGIC: &[u8; 8] = b"AAKMFV01";
+/// Shared binary-shard magic: the streaming layer's `MmapShardSource` /
+/// `ShardWriter` (see [`super::chunks`]) speak the same format, so a shard
+/// written chunk-by-chunk loads through [`load_fvecs`] and vice versa.
+pub(crate) const FVECS_MAGIC: &[u8; 8] = b"AAKMFV01";
 
 /// Save in a simple binary format: magic, u64 n, u64 d, then n·d f64 LE.
 pub fn save_fvecs(path: &Path, x: &DataMatrix) -> Result<()> {

@@ -137,6 +137,17 @@ impl DataMatrix {
         out
     }
 
+    /// Resize to `n` rows (dimensionality unchanged), reusing the backing
+    /// allocation; rows added beyond the current count are zero-filled.
+    /// This is the chunk-buffer primitive of the streaming layer: one
+    /// matrix is refilled chunk after chunk, shrinking for the final
+    /// partial chunk without releasing capacity.
+    pub fn resize_rows(&mut self, n: usize) {
+        self.data.resize(n * self.d, 0.0);
+        self.n = n;
+        self.version += 1;
+    }
+
     /// Append all rows of `other` (must have the same `d`).
     pub fn append(&mut self, other: &DataMatrix) {
         assert_eq!(self.d, other.d);
@@ -231,6 +242,18 @@ mod tests {
     fn bounds_cover_extremes() {
         let m = DataMatrix::from_rows(&[&[-1.0, 5.0], &[2.0, -3.0]]);
         assert_eq!(m.bounds(), vec![(-1.0, 2.0), (-3.0, 5.0)]);
+    }
+
+    #[test]
+    fn resize_rows_keeps_prefix_and_zero_fills() {
+        let mut m = DataMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let g0 = m.generation();
+        m.resize_rows(2);
+        assert_eq!((m.n(), m.d()), (2, 2));
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(m.generation(), g0, "resize must bump the content stamp");
+        m.resize_rows(3);
+        assert_eq!(m.row(2), &[0.0, 0.0], "regrown rows are zero-filled");
     }
 
     #[test]

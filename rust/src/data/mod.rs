@@ -1,12 +1,16 @@
 //! Data substrate: the sample matrix, synthetic dataset generators, CSV and
-//! binary IO, normalization, and the registry reproducing the paper's
-//! Table 1 inventory (20 datasets) as synthetic equivalents.
+//! binary IO, normalization, chunked streaming sources (in-memory /
+//! generator / memory-mapped shard — see [`chunks`]), and the registry
+//! reproducing the paper's Table 1 inventory (20 datasets) as synthetic
+//! equivalents.
 
+pub mod chunks;
 mod io;
 mod matrix;
 pub mod registry;
 pub mod synth;
 
+pub use chunks::{ChunkSource, InMemoryChunks, MmapShardSource, ShardWriter, SynthChunks};
 pub use io::{load_csv, load_fvecs, save_csv, save_fvecs};
 pub use matrix::DataMatrix;
 pub use registry::{dataset_by_name, dataset_by_number, DatasetSpec, REGISTRY};

@@ -36,8 +36,9 @@ pub struct Solver {
     ws: Workspace,
 }
 
-/// Whether the configured wall-clock budget is exhausted.
-fn over_budget(sw: &Stopwatch, limit: Option<std::time::Duration>) -> bool {
+/// Whether the configured wall-clock budget is exhausted (shared with the
+/// streaming mini-batch solver in [`crate::stream`]).
+pub(crate) fn over_budget(sw: &Stopwatch, limit: Option<std::time::Duration>) -> bool {
     limit.is_some_and(|l| sw.elapsed() >= l)
 }
 
@@ -149,6 +150,7 @@ impl Solver {
         let mut c_next = self.ws.scratch.take_mat(k, d);
         let mut assign = self.ws.scratch.take_assign();
         let mut prev_assign = self.ws.scratch.take_assign();
+        let mut update = self.ws.scratch.take_update();
         let mut trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_f64()
         } else {
@@ -184,7 +186,7 @@ impl Solver {
                 iter_energy = Some(e);
             }
             phases.time("update", || {
-                lloyd::update_step(x, &assign, &c, &mut c_next, &self.ws.pool)
+                lloyd::update_step_with(x, &assign, &c, &mut c_next, &self.ws.pool, &mut update)
             });
             std::mem::swap(&mut prev_assign, &mut assign);
             std::mem::swap(&mut c, &mut c_next);
@@ -211,6 +213,7 @@ impl Solver {
         };
         let energy = lloyd::energy(x, &c, &final_assign, &self.ws.pool);
         self.ws.scratch.put_mat(c_next);
+        self.ws.scratch.put_update(update);
         RunReport {
             iterations,
             accepted: 0,
@@ -257,9 +260,12 @@ impl Solver {
 
         // Line 1: C^1 = C_AU^1 = G(C^0).
         let mut assign = self.ws.scratch.take_assign();
+        let mut update = self.ws.scratch.take_update();
         phases.time("assign", || self.ws.engine.assign(x, c0, &self.ws.pool, &mut assign));
         let mut c_au = self.ws.scratch.take_mat(k, d);
-        phases.time("update", || lloyd::update_step(x, &assign, c0, &mut c_au, &self.ws.pool));
+        phases.time("update", || {
+            lloyd::update_step_with(x, &assign, c0, &mut c_au, &self.ws.pool, &mut update)
+        });
         let mut c = self.ws.scratch.take_output_mat(k, d);
         c.as_mut_slice().copy_from_slice(c_au.as_slice());
         // Steady-state scratch, all drawn from the workspace: the fused
@@ -331,7 +337,14 @@ impl Solver {
             // C_AU^{t+1} = Update-Step(X, P^t) — the accelerated solver then
             // touches the samples exactly as often per iteration as Lloyd.
             let mut e = phases.time("update+energy", || {
-                lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.ws.pool).1
+                lloyd::update_and_energy_with(
+                    x,
+                    &assign,
+                    &c,
+                    &mut c_next,
+                    &self.ws.pool,
+                    &mut update,
+                )
             });
             // Lines 8–12: adjust m from the decrease ratio.
             if dynamic {
@@ -358,7 +371,14 @@ impl Solver {
                     break;
                 }
                 e = phases.time("update+energy", || {
-                    lloyd::update_and_energy(x, &assign, &c, &mut c_next, &self.ws.pool).1
+                    lloyd::update_and_energy_with(
+                        x,
+                        &assign,
+                        &c,
+                        &mut c_next,
+                        &self.ws.pool,
+                        &mut update,
+                    )
                 });
             } else if candidate_was_accel {
                 accepted += 1;
@@ -417,6 +437,7 @@ impl Solver {
         self.ws.scratch.put_mat(c_next);
         self.ws.scratch.put_f_t(f_t);
         self.ws.scratch.put_accelerator(acc);
+        self.ws.scratch.put_update(update);
         RunReport {
             iterations,
             accepted,

@@ -7,10 +7,12 @@
 //! caches keep their capacity through `reset`, the Anderson history columns
 //! are recycled, and the centroid/assignment scratch is taken and returned
 //! per run. Report output buffers come from a recycle pool fed by
-//! [`Workspace::recycle`], so a `run → recycle → run` cycle on same-shape
-//! data leaves the solver's own buffers untouched by the allocator
-//! (remaining transients are the parallel-reduce accumulators and phase
-//! labels; the counting-allocator contract test is `tests/alloc_reuse.rs`).
+//! [`Workspace::recycle`], and the update-step reduce folds into per-lane
+//! accumulators held here ([`crate::lloyd::UpdateScratch`]), so a
+//! `run → recycle → run` cycle on same-shape data leaves the solver's own
+//! buffers untouched by the allocator (remaining transients are a few
+//! phase labels; the counting-allocator contract test is
+//! `tests/alloc_reuse.rs`).
 
 use crate::anderson::AndersonAccelerator;
 use crate::config::{EngineKind, Precision, SolverConfig};
@@ -74,6 +76,9 @@ pub(crate) struct Scratch {
     /// Recycled trace buffers.
     spare_f64: Vec<Vec<f64>>,
     spare_usize: Vec<Vec<usize>>,
+    /// Per-lane accumulators for the update-step reduces (persist across
+    /// runs; the last per-iteration allocator transients lived here).
+    update: lloyd::UpdateScratch,
     /// Whether the last run had to (re)allocate internal scratch.
     rebuilt: bool,
     runs: u64,
@@ -270,11 +275,29 @@ impl Scratch {
         self.acc = Some(acc);
     }
 
+    /// Take the update-reduce lane accumulators (persisted across runs).
+    pub(crate) fn take_update(&mut self) -> lloyd::UpdateScratch {
+        std::mem::take(&mut self.update)
+    }
+
+    /// Return the update-reduce lane accumulators.
+    pub(crate) fn put_update(&mut self, update: lloyd::UpdateScratch) {
+        self.update = update;
+    }
+
     /// Take a cleared `f64` trace buffer.
     pub(crate) fn take_trace_f64(&mut self) -> Vec<f64> {
         let mut t = self.spare_f64.pop().unwrap_or_default();
         t.clear();
         t
+    }
+
+    /// Return an `f64` buffer to the spare pool (e.g. the mini-batch
+    /// solver's per-centroid learning-rate counters).
+    pub(crate) fn put_trace_f64(&mut self, t: Vec<f64>) {
+        if t.capacity() > 0 {
+            self.spare_f64.push(t);
+        }
     }
 
     /// Take a cleared `usize` trace buffer.

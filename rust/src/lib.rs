@@ -44,7 +44,14 @@
 //! Mid-run observability and cancellation live in [`observe`]
 //! ([`Observer`], [`CancelToken`]); the service coordinator
 //! ([`coordinator::Coordinator`]) accepts the same requests and returns
-//! [`coordinator::JobHandle`]s with poll / wait / cancel.
+//! [`coordinator::JobHandle`]s with poll / wait / cancel — worker pickup
+//! honors [`ClusterRequest`] priorities.
+//!
+//! Datasets larger than RAM run through the streaming engine: a request
+//! with `EngineKind::MiniBatch` (and, for out-of-core files, a
+//! `DataSource::Shard`) streams chunks from a [`data::ChunkSource`]
+//! through the mini-batch solver in [`stream`], with Anderson acceleration
+//! applied to the per-epoch centroid sequence.
 
 pub mod anderson;
 pub mod cli;
@@ -63,6 +70,7 @@ pub mod request;
 pub mod rng;
 pub mod runtime;
 pub mod session;
+pub mod stream;
 
 pub use error::ClusterError;
 pub use observe::{CancelToken, Observer};

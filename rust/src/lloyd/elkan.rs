@@ -15,14 +15,27 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct ElkanEngine {
     /// Blocked norm-decomposed distance kernel (per-engine cache).
     kernel: DistanceKernel,
+    /// Centroids seen at the previous call. The buffer survives `reset`
+    /// (only `prev_valid` drops) so warm same-shape runs never reallocate.
     prev_c: Option<DataMatrix>,
+    prev_valid: bool,
     /// Upper bound d(x_i, c_{a_i}).
     upper: Vec<f64>,
     /// Lower bounds d(x_i, c_j), row-major N×K.
     lower: Vec<f64>,
     assign: Vec<u32>,
-    /// Saved state for rollback after rejected accelerated jumps.
+    /// Saved state for [`AssignmentEngine::rollback`] after rejected
+    /// accelerated jumps: `(prev_c, upper, lower, assign)`. The buffers
+    /// are kept (and overwritten in place) across checkpoints and runs;
+    /// `saved_valid` marks whether they currently hold a restorable state.
     saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
+    saved_valid: bool,
+    /// Per-call scratch (per-centroid motion, the K×K centroid-centroid
+    /// distances and the half nearest-centroid distances), persistent so
+    /// warm calls stay allocation-free.
+    moved: Vec<f64>,
+    cc: Vec<f64>,
+    s_half: Vec<f64>,
     dist_evals: AtomicU64,
 }
 
@@ -34,6 +47,18 @@ impl ElkanEngine {
     /// Engine whose kernel stores samples at the given precision.
     pub fn with_precision(precision: crate::linalg::Precision) -> Self {
         Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
+    }
+
+    /// Remember `c` as the previous centroid set, reusing the existing
+    /// buffer when the shape matches (no allocation on warm calls).
+    fn store_prev(&mut self, c: &DataMatrix) {
+        match &mut self.prev_c {
+            Some(p) if p.n() == c.n() && p.d() == c.d() => {
+                p.as_mut_slice().copy_from_slice(c.as_slice());
+            }
+            _ => self.prev_c = Some(c.clone()),
+        }
+        self.prev_valid = true;
     }
 
     fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
@@ -80,44 +105,54 @@ impl AssignmentEngine for ElkanEngine {
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k, d) = (x.n(), c.n(), x.d());
         self.kernel.prepare(x, c, pool);
-        let stale = match &self.prev_c {
-            Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
-            None => true,
-        };
+        let stale = !self.prev_valid
+            || match &self.prev_c {
+                Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
+                None => true,
+            };
         if stale {
             self.initialize(x, c, pool);
-            self.prev_c = Some(c.clone());
+            self.store_prev(c);
             out.clear();
             out.extend_from_slice(&self.assign);
             return;
         }
-        let prev = self.prev_c.as_ref().unwrap();
-        // Centroid motion drifts all bounds.
-        let mut moved = vec![0.0f64; k];
-        for j in 0..k {
-            moved[j] = dist_sq(prev.row(j), c.row(j)).sqrt();
+        // Centroid motion drifts all bounds (persistent scratch: warm
+        // calls allocate nothing here).
+        self.moved.clear();
+        self.moved.resize(k, 0.0);
+        {
+            let prev = self.prev_c.as_ref().unwrap();
+            for j in 0..k {
+                self.moved[j] = dist_sq(prev.row(j), c.row(j)).sqrt();
+            }
         }
         // Centroid–centroid half-distances s[j] = ½ min_{j'≠j} d(c_j, c_j')
         // and the full pairwise matrix for the per-centroid prune.
-        let mut cc = vec![0.0f64; k * k];
-        let mut s = vec![f64::INFINITY; k];
+        self.cc.clear();
+        self.cc.resize(k * k, 0.0);
+        self.s_half.clear();
+        self.s_half.resize(k, f64::INFINITY);
         for j in 0..k {
             for j2 in (j + 1)..k {
                 let djj = dist_sq(c.row(j), c.row(j2)).sqrt();
-                cc[j * k + j2] = djj;
-                cc[j2 * k + j] = djj;
-                if djj < s[j] {
-                    s[j] = djj;
+                self.cc[j * k + j2] = djj;
+                self.cc[j2 * k + j] = djj;
+                if djj < self.s_half[j] {
+                    self.s_half[j] = djj;
                 }
-                if djj < s[j2] {
-                    s[j2] = djj;
+                if djj < self.s_half[j2] {
+                    self.s_half[j2] = djj;
                 }
             }
         }
-        for v in s.iter_mut() {
+        for v in self.s_half.iter_mut() {
             *v *= 0.5;
         }
 
+        let moved: &[f64] = &self.moved;
+        let cc: &[f64] = &self.cc;
+        let s: &[f64] = &self.s_half;
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
@@ -171,18 +206,19 @@ impl AssignmentEngine for ElkanEngine {
             evals.fetch_add(local, Ordering::Relaxed);
         });
         self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
-        self.prev_c = Some(c.clone());
+        self.store_prev(c);
         out.clear();
         out.extend_from_slice(&self.assign);
     }
 
     fn reset(&mut self) {
         self.kernel.invalidate();
-        self.prev_c = None;
+        // Keep the buffers (capacity) but mark the state unusable.
+        self.prev_valid = false;
         self.upper.clear();
         self.lower.clear();
         self.assign.clear();
-        self.saved = None;
+        self.saved_valid = false;
     }
 
     fn distance_evals(&self) -> u64 {
@@ -190,23 +226,55 @@ impl AssignmentEngine for ElkanEngine {
     }
 
     fn checkpoint(&mut self) {
-        if let Some(prev) = &self.prev_c {
-            self.saved =
-                Some((prev.clone(), self.upper.clone(), self.lower.clone(), self.assign.clone()));
+        if !self.prev_valid {
+            return;
         }
+        let Some(prev) = &self.prev_c else { return };
+        match &mut self.saved {
+            // Overwrite the retained buffers in place when shapes match —
+            // checkpoints on warm same-shape runs allocate nothing.
+            Some((sc, su, sl, sa))
+                if sc.n() == prev.n()
+                    && sc.d() == prev.d()
+                    && su.len() == self.upper.len()
+                    && sl.len() == self.lower.len() =>
+            {
+                sc.as_mut_slice().copy_from_slice(prev.as_slice());
+                su.copy_from_slice(&self.upper);
+                sl.copy_from_slice(&self.lower);
+                sa.copy_from_slice(&self.assign);
+            }
+            _ => {
+                self.saved = Some((
+                    prev.clone(),
+                    self.upper.clone(),
+                    self.lower.clone(),
+                    self.assign.clone(),
+                ));
+            }
+        }
+        self.saved_valid = true;
     }
 
     fn rollback(&mut self) -> bool {
-        match self.saved.take() {
-            Some((prev, upper, lower, assign)) => {
-                self.prev_c = Some(prev);
-                self.upper = upper;
-                self.lower = lower;
-                self.assign = assign;
-                true
-            }
-            None => false,
+        if !self.saved_valid {
+            return false;
         }
+        self.saved_valid = false;
+        let Some((sc, su, sl, sa)) = &self.saved else { return false };
+        match &mut self.prev_c {
+            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
+                p.as_mut_slice().copy_from_slice(sc.as_slice());
+            }
+            _ => self.prev_c = Some(sc.clone()),
+        }
+        self.upper.clear();
+        self.upper.extend_from_slice(su);
+        self.lower.clear();
+        self.lower.extend_from_slice(sl);
+        self.assign.clear();
+        self.assign.extend_from_slice(sa);
+        true
     }
 }
 

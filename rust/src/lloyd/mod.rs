@@ -88,13 +88,20 @@ pub fn make_engine_with(
 /// kind returns a typed error because it needs AOT artifacts — construct
 /// it through [`crate::kmeans::Workspace::open`] (which knows the artifact
 /// directory) or wrap a `runtime::PjrtEngine` yourself.
+///
+/// `EngineKind::MiniBatch` maps to the dense [`NaiveEngine`]: the
+/// mini-batch solver ([`crate::stream::MiniBatchSolver`]) assigns each
+/// fresh chunk exactly once, so bound state never survives a call and one
+/// exhaustive blocked-kernel sweep per chunk is the optimal strategy.
 pub fn try_make_engine(
     kind: crate::config::EngineKind,
     precision: crate::config::Precision,
 ) -> Result<Box<dyn AssignmentEngine>, crate::error::ClusterError> {
     use crate::config::EngineKind;
     Ok(match kind {
-        EngineKind::Naive => Box::new(NaiveEngine::with_precision(precision)),
+        EngineKind::Naive | EngineKind::MiniBatch => {
+            Box::new(NaiveEngine::with_precision(precision))
+        }
         EngineKind::Hamerly => Box::new(HamerlyEngine::with_precision(precision)),
         EngineKind::Elkan => Box::new(ElkanEngine::with_precision(precision)),
         EngineKind::Yinyang => Box::new(YinyangEngine::with_precision(precision)),
@@ -230,6 +237,127 @@ pub fn update_and_energy(
         }
     }
     (counts, energy)
+}
+
+/// Reusable per-lane accumulators for [`update_step_with`] /
+/// [`update_and_energy_with`]: `(per-cluster sums, per-cluster counts,
+/// energy)` per pool lane. Owned by the solver workspace so warm
+/// iterations run the update reduce without touching the allocator (the
+/// per-iteration reduce identities were the last warm-run transients —
+/// see `tests/alloc_reuse.rs`).
+#[derive(Default)]
+pub struct UpdateScratch {
+    lanes: crate::par::LaneScratch<(Vec<f64>, Vec<usize>, f64)>,
+}
+
+/// Shared core of the allocation-free update reduces: one parallel pass
+/// accumulates per-cluster sums/counts (and, when `with_energy`, the
+/// clustering energy at the input centroids) into `scratch`'s lane
+/// accumulators, then writes the means into `out_c` and returns the energy.
+fn update_reduce_with(
+    x: &DataMatrix,
+    assign: &Assignment,
+    c_ref: &DataMatrix,
+    out_c: &mut DataMatrix,
+    pool: &ThreadPool,
+    scratch: &mut UpdateScratch,
+    with_energy: bool,
+) -> f64 {
+    let (n, d) = (x.n(), x.d());
+    let k = c_ref.n();
+    debug_assert_eq!(assign.len(), n);
+    debug_assert_eq!(out_c.n(), k);
+    pool.map_reduce_with(
+        &mut scratch.lanes,
+        n,
+        512,
+        || (vec![0.0f64; k * d], vec![0usize; k], 0.0f64),
+        |acc| {
+            let (sums, counts, energy) = acc;
+            sums.clear();
+            sums.resize(k * d, 0.0);
+            counts.clear();
+            counts.resize(k, 0);
+            *energy = 0.0;
+        },
+        |acc, range| {
+            let (sums, counts, energy) = acc;
+            for i in range {
+                let j = assign[i] as usize;
+                debug_assert!(j < k, "assignment out of range");
+                counts[j] += 1;
+                let row = x.row(i);
+                let dst = &mut sums[j * d..(j + 1) * d];
+                if with_energy {
+                    let cj = c_ref.row(j);
+                    let mut e = 0.0;
+                    for t in 0..d {
+                        let v = row[t];
+                        dst[t] += v;
+                        let diff = v - cj[t];
+                        e += diff * diff;
+                    }
+                    *energy += e;
+                } else {
+                    for (s, &v) in dst.iter_mut().zip(row) {
+                        *s += v;
+                    }
+                }
+            }
+        },
+        |a, b| {
+            for (s, &v) in a.0.iter_mut().zip(&b.0) {
+                *s += v;
+            }
+            for (s, &v) in a.1.iter_mut().zip(&b.1) {
+                *s += v;
+            }
+            a.2 += b.2;
+        },
+        |acc| {
+            let (sums, counts, energy) = acc;
+            for j in 0..k {
+                let dst = out_c.row_mut(j);
+                if counts[j] == 0 {
+                    dst.copy_from_slice(c_ref.row(j));
+                } else {
+                    let inv = 1.0 / counts[j] as f64;
+                    for (o, &s) in dst.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                        *o = s * inv;
+                    }
+                }
+            }
+            *energy
+        },
+    )
+}
+
+/// Allocation-free [`update_step`]: identical means, but the reduce
+/// accumulators persist in the caller-owned [`UpdateScratch`], so warm
+/// solver iterations perform no heap allocation here.
+pub fn update_step_with(
+    x: &DataMatrix,
+    assign: &Assignment,
+    prev_c: &DataMatrix,
+    out_c: &mut DataMatrix,
+    pool: &ThreadPool,
+    scratch: &mut UpdateScratch,
+) {
+    let _ = update_reduce_with(x, assign, prev_c, out_c, pool, scratch, false);
+}
+
+/// Allocation-free [`update_and_energy`]: returns `E(P, C^t)` (the energy
+/// at the **input** centroids) while writing the update-step means into
+/// `out_c`, with all reduce accumulators drawn from `scratch`.
+pub fn update_and_energy_with(
+    x: &DataMatrix,
+    assign: &Assignment,
+    c_t: &DataMatrix,
+    out_c: &mut DataMatrix,
+    pool: &ThreadPool,
+    scratch: &mut UpdateScratch,
+) -> f64 {
+    update_reduce_with(x, assign, c_t, out_c, pool, scratch, true)
 }
 
 /// Clustering energy (paper Eq. 1) with a precomputed assignment —
@@ -375,6 +503,37 @@ mod tests {
         for j in 0..5 {
             for t in 0..6 {
                 assert!((out1[(j, t)] - out4[(j, t)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn update_with_matches_allocating_variants() {
+        let mut rng = Pcg32::seed_from_u64(91);
+        let x = synth::gaussian_blobs(&mut rng, 1500, 5, 6, 2.0, 0.4);
+        let c0 = x.gather_rows(&[0, 200, 400, 600, 800, 1000]);
+        let assign = brute_force_assign(&x, &c0);
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut scratch = UpdateScratch::default();
+            let mut ref_c = DataMatrix::zeros(6, 5);
+            let (_, ref_e) = update_and_energy(&x, &assign, &c0, &mut ref_c, &pool);
+            // Repeated calls reuse the same lane accumulators.
+            for round in 0..3 {
+                let mut got_c = DataMatrix::zeros(6, 5);
+                let e = update_and_energy_with(&x, &assign, &c0, &mut got_c, &pool, &mut scratch);
+                assert!(
+                    (e - ref_e).abs() <= 1e-9 * ref_e.max(1.0),
+                    "threads={threads} round={round}: {e} vs {ref_e}"
+                );
+                let mut step_c = DataMatrix::zeros(6, 5);
+                update_step_with(&x, &assign, &c0, &mut step_c, &pool, &mut scratch);
+                for j in 0..6 {
+                    for t in 0..5 {
+                        assert!((got_c[(j, t)] - ref_c[(j, t)]).abs() < 1e-9);
+                        assert!((step_c[(j, t)] - ref_c[(j, t)]).abs() < 1e-9);
+                    }
+                }
             }
         }
     }

@@ -25,7 +25,10 @@ const GROUPING_ROUNDS: usize = 5;
 pub struct YinyangEngine {
     /// Blocked norm-decomposed distance kernel (per-engine cache).
     kernel: DistanceKernel,
+    /// Centroids seen at the previous call. The buffer survives `reset`
+    /// (only `prev_valid` drops) so warm same-shape runs never reallocate.
     prev_c: Option<DataMatrix>,
+    prev_valid: bool,
     /// Group id per centroid.
     group_of: Vec<usize>,
     n_groups: usize,
@@ -35,7 +38,18 @@ pub struct YinyangEngine {
     /// any centroid of the group **other than the assigned centroid**.
     lower: Vec<f64>,
     assign: Vec<u32>,
+    /// Saved state for [`AssignmentEngine::rollback`], overwritten in
+    /// place across checkpoints (see `saved_valid`, mirroring Hamerly).
     saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
+    saved_valid: bool,
+    /// Per-call scratch (per-centroid and per-group motion, plus the
+    /// group-Lloyd buffers of `build_groups`), persistent so warm calls
+    /// stay allocation-free.
+    moved: Vec<f64>,
+    group_moved: Vec<f64>,
+    group_centers: Vec<f64>,
+    group_sums: Vec<f64>,
+    group_counts: Vec<usize>,
     dist_evals: AtomicU64,
 }
 
@@ -49,46 +63,72 @@ impl YinyangEngine {
         Self { kernel: DistanceKernel::with_precision(precision), ..Self::default() }
     }
 
+    /// Remember `c` as the previous centroid set, reusing the existing
+    /// buffer when the shape matches (no allocation on warm calls).
+    fn store_prev(&mut self, c: &DataMatrix) {
+        match &mut self.prev_c {
+            Some(p) if p.n() == c.n() && p.d() == c.d() => {
+                p.as_mut_slice().copy_from_slice(c.as_slice());
+            }
+            _ => self.prev_c = Some(c.clone()),
+        }
+        self.prev_valid = true;
+    }
+
     /// Cluster the centroids into groups with a few Lloyd rounds (groups
-    /// are fixed afterwards, as in the original algorithm).
+    /// are fixed afterwards, as in the original algorithm). All buffers
+    /// are persistent fields, so regrouping at the start of a warm run
+    /// does not touch the allocator.
     fn build_groups(&mut self, c: &DataMatrix) {
         let k = c.n();
+        let d = c.d();
         let g = k.div_ceil(GROUP_SIZE).max(1);
         self.n_groups = g;
-        self.group_of = vec![0; k];
+        self.group_of.clear();
+        self.group_of.resize(k, 0);
         if g == 1 {
             return;
         }
         // Seed group centers with a strided pick, then Lloyd on centroids.
-        let mut centers: Vec<Vec<f64>> =
-            (0..g).map(|j| c.row(j * k / g).to_vec()).collect();
+        self.group_centers.clear();
+        self.group_centers.resize(g * d, 0.0);
+        for gi in 0..g {
+            let src = c.row(gi * k / g);
+            self.group_centers[gi * d..(gi + 1) * d].copy_from_slice(src);
+        }
         for _ in 0..GROUPING_ROUNDS {
             for j in 0..k {
                 let (mut best, mut best_d) = (0usize, f64::INFINITY);
-                for (gi, ctr) in centers.iter().enumerate() {
-                    let d = dist_sq(c.row(j), ctr);
-                    if d < best_d {
-                        best_d = d;
+                for gi in 0..g {
+                    let ctr = &self.group_centers[gi * d..(gi + 1) * d];
+                    let dist = dist_sq(c.row(j), ctr);
+                    if dist < best_d {
+                        best_d = dist;
                         best = gi;
                     }
                 }
                 self.group_of[j] = best;
             }
             // Means (empty groups keep their center).
-            let d = c.d();
-            let mut sums = vec![vec![0.0; d]; g];
-            let mut counts = vec![0usize; g];
+            self.group_sums.clear();
+            self.group_sums.resize(g * d, 0.0);
+            self.group_counts.clear();
+            self.group_counts.resize(g, 0);
             for j in 0..k {
                 let gi = self.group_of[j];
-                counts[gi] += 1;
-                for t in 0..d {
-                    sums[gi][t] += c[(j, t)];
+                self.group_counts[gi] += 1;
+                let dst = &mut self.group_sums[gi * d..(gi + 1) * d];
+                for (s, &v) in dst.iter_mut().zip(c.row(j)) {
+                    *s += v;
                 }
             }
             for gi in 0..g {
-                if counts[gi] > 0 {
-                    for t in 0..d {
-                        centers[gi][t] = sums[gi][t] / counts[gi] as f64;
+                if self.group_counts[gi] > 0 {
+                    let inv = 1.0 / self.group_counts[gi] as f64;
+                    let sums = &self.group_sums[gi * d..(gi + 1) * d];
+                    let dst = &mut self.group_centers[gi * d..(gi + 1) * d];
+                    for (ctr, &s) in dst.iter_mut().zip(sums) {
+                        *ctr = s * inv;
                     }
                 }
             }
@@ -151,31 +191,39 @@ impl AssignmentEngine for YinyangEngine {
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment) {
         let (n, k, d) = (x.n(), c.n(), x.d());
         self.kernel.prepare(x, c, pool);
-        let stale = match &self.prev_c {
-            Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
-            None => true,
-        };
+        let stale = !self.prev_valid
+            || match &self.prev_c {
+                Some(prev) => prev.n() != k || prev.d() != d || self.assign.len() != n,
+                None => true,
+            };
         if stale {
             self.build_groups(c);
             self.initialize(x, c, pool);
-            self.prev_c = Some(c.clone());
+            self.store_prev(c);
             out.clear();
             out.extend_from_slice(&self.assign);
             return;
         }
-        let prev = self.prev_c.as_ref().unwrap();
         let g = self.n_groups;
-        // Per-centroid and per-group max movement.
-        let mut moved = vec![0.0f64; k];
-        let mut group_moved = vec![0.0f64; g];
-        for j in 0..k {
-            let m = dist_sq(prev.row(j), c.row(j)).sqrt();
-            moved[j] = m;
-            let gj = self.group_of[j];
-            if m > group_moved[gj] {
-                group_moved[gj] = m;
+        // Per-centroid and per-group max movement (persistent scratch:
+        // warm calls allocate nothing here).
+        self.moved.clear();
+        self.moved.resize(k, 0.0);
+        self.group_moved.clear();
+        self.group_moved.resize(g, 0.0);
+        {
+            let prev = self.prev_c.as_ref().unwrap();
+            for j in 0..k {
+                let m = dist_sq(prev.row(j), c.row(j)).sqrt();
+                self.moved[j] = m;
+                let gj = self.group_of[j];
+                if m > self.group_moved[gj] {
+                    self.group_moved[gj] = m;
+                }
             }
         }
+        let moved: &[f64] = &self.moved;
+        let group_moved: &[f64] = &self.group_moved;
         let upper = SyncSliceMut::new(&mut self.upper);
         let lower = SyncSliceMut::new(&mut self.lower);
         let assign = SyncSliceMut::new(&mut self.assign);
@@ -184,6 +232,13 @@ impl AssignmentEngine for YinyangEngine {
         let evals = AtomicU64::new(0);
         pool.parallel_for(n, 128, |range| {
             let mut local = 0u64;
+            // Flat scan buffers, shared by every sample this lane
+            // processes in this range (hoisted out of the per-sample loop
+            // so warm assignment sweeps stay allocation-light).
+            let mut scanned_groups: Vec<usize> = Vec::new();
+            let mut group_start: Vec<usize> = Vec::new();
+            let mut scan_j: Vec<u32> = Vec::new();
+            let mut scan_d: Vec<f64> = Vec::new();
             for i in range {
                 let a = *assign.at(i) as usize;
                 let mut u = *upper.at(i) + moved[a];
@@ -212,37 +267,43 @@ impl AssignmentEngine for YinyangEngine {
                 // members excluding the final assigned centroid) come free.
                 let mut best = a;
                 let mut d1 = u;
-                let mut scanned: Vec<(usize, Vec<(usize, f64)>)> = Vec::new();
+                scanned_groups.clear();
+                group_start.clear();
+                scan_j.clear();
+                scan_d.clear();
                 for gi in 0..g {
                     if *lower.at(i * g + gi) >= d1 {
                         continue; // group cannot contain a closer centroid
                     }
-                    let mut dists = Vec::new();
+                    scanned_groups.push(gi);
+                    group_start.push(scan_j.len());
                     for j in 0..k {
                         if group_of[j] != gi || j == a {
                             continue;
                         }
                         let dj = kernel.dist_sq(x, c, i, j).sqrt();
                         local += 1;
-                        dists.push((j, dj));
+                        scan_j.push(j as u32);
+                        scan_d.push(dj);
                         if dj < d1 {
                             d1 = dj;
                             best = j;
                         }
                     }
-                    scanned.push((gi, dists));
                 }
+                group_start.push(scan_j.len());
                 // Exact lower bounds for scanned groups. The previously
                 // assigned centroid `a` (distance u) belongs to some group
                 // and is no longer the assignment if best != a.
-                for (gi, dists) in &scanned {
+                for (idx, &gi) in scanned_groups.iter().enumerate() {
+                    let (lo, hi) = (group_start[idx], group_start[idx + 1]);
                     let mut exact = f64::INFINITY;
-                    for &(j, dj) in dists {
-                        if j != best && dj < exact {
-                            exact = dj;
+                    for t in lo..hi {
+                        if scan_j[t] as usize != best && scan_d[t] < exact {
+                            exact = scan_d[t];
                         }
                     }
-                    if group_of[a] == *gi && a != best && u < exact {
+                    if group_of[a] == gi && a != best && u < exact {
                         exact = u;
                     }
                     *lower.at(i * g + gi) = exact;
@@ -263,19 +324,20 @@ impl AssignmentEngine for YinyangEngine {
             evals.fetch_add(local, Ordering::Relaxed);
         });
         self.dist_evals.fetch_add(evals.load(Ordering::Relaxed), Ordering::Relaxed);
-        self.prev_c = Some(c.clone());
+        self.store_prev(c);
         out.clear();
         out.extend_from_slice(&self.assign);
     }
 
     fn reset(&mut self) {
         self.kernel.invalidate();
-        self.prev_c = None;
+        // Keep the buffers (capacity) but mark the state unusable.
+        self.prev_valid = false;
         self.upper.clear();
         self.lower.clear();
         self.assign.clear();
         self.group_of.clear();
-        self.saved = None;
+        self.saved_valid = false;
     }
 
     fn distance_evals(&self) -> u64 {
@@ -283,23 +345,55 @@ impl AssignmentEngine for YinyangEngine {
     }
 
     fn checkpoint(&mut self) {
-        if let Some(prev) = &self.prev_c {
-            self.saved =
-                Some((prev.clone(), self.upper.clone(), self.lower.clone(), self.assign.clone()));
+        if !self.prev_valid {
+            return;
         }
+        let Some(prev) = &self.prev_c else { return };
+        match &mut self.saved {
+            // Overwrite the retained buffers in place when shapes match —
+            // checkpoints on warm same-shape runs allocate nothing.
+            Some((sc, su, sl, sa))
+                if sc.n() == prev.n()
+                    && sc.d() == prev.d()
+                    && su.len() == self.upper.len()
+                    && sl.len() == self.lower.len() =>
+            {
+                sc.as_mut_slice().copy_from_slice(prev.as_slice());
+                su.copy_from_slice(&self.upper);
+                sl.copy_from_slice(&self.lower);
+                sa.copy_from_slice(&self.assign);
+            }
+            _ => {
+                self.saved = Some((
+                    prev.clone(),
+                    self.upper.clone(),
+                    self.lower.clone(),
+                    self.assign.clone(),
+                ));
+            }
+        }
+        self.saved_valid = true;
     }
 
     fn rollback(&mut self) -> bool {
-        match self.saved.take() {
-            Some((prev, upper, lower, assign)) => {
-                self.prev_c = Some(prev);
-                self.upper = upper;
-                self.lower = lower;
-                self.assign = assign;
-                true
-            }
-            None => false,
+        if !self.saved_valid {
+            return false;
         }
+        self.saved_valid = false;
+        let Some((sc, su, sl, sa)) = &self.saved else { return false };
+        match &mut self.prev_c {
+            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
+                p.as_mut_slice().copy_from_slice(sc.as_slice());
+            }
+            _ => self.prev_c = Some(sc.clone()),
+        }
+        self.upper.clear();
+        self.upper.extend_from_slice(su);
+        self.lower.clear();
+        self.lower.extend_from_slice(sl);
+        self.assign.clear();
+        self.assign.extend_from_slice(sa);
+        true
     }
 }
 

@@ -143,6 +143,11 @@ impl ThreadPool {
     /// claims into one thread-local accumulator (created lazily from
     /// `init()`), and the per-lane partials — at most `threads` of them,
     /// regardless of chunk count — are combined with `combine` at the end.
+    ///
+    /// Allocating accumulators (e.g. per-cluster sum vectors) are rebuilt
+    /// by `init()` on every call; hot loops that run a reduce per iteration
+    /// should use [`ThreadPool::map_reduce_with`], which keeps the per-lane
+    /// accumulators alive in a caller-owned [`LaneScratch`].
     pub fn map_reduce<T, FInit, FFold, FComb>(
         &self,
         n: usize,
@@ -185,6 +190,140 @@ impl ThreadPool {
         let mut partials = slots.into_iter().filter_map(|s| s.into_inner().unwrap());
         let first = partials.next().unwrap_or_else(&init);
         partials.fold(first, &combine)
+    }
+
+    /// [`ThreadPool::map_reduce`] with caller-owned per-lane accumulators:
+    /// the lane that claims a chunk takes the accumulator slot matching its
+    /// lane id from `scratch` — `init()` builds it on first use, `reset`
+    /// clears it on reuse — so a reduce that runs once per solver iteration
+    /// touches the allocator only on its very first call. The per-lane
+    /// partials are merged in place with `combine(dst, src)` and the merged
+    /// accumulator is handed to `finish`, whose return value is the call's
+    /// result (copy scalars out / write into caller buffers there; the
+    /// accumulator itself stays in `scratch` for the next call).
+    #[allow(clippy::too_many_arguments)]
+    pub fn map_reduce_with<T, R, FInit, FReset, FFold, FComb, FFinish>(
+        &self,
+        scratch: &mut LaneScratch<T>,
+        n: usize,
+        min_chunk: usize,
+        init: FInit,
+        reset: FReset,
+        fold: FFold,
+        combine: FComb,
+        finish: FFinish,
+    ) -> R
+    where
+        T: Send,
+        FInit: Fn() -> T + Sync,
+        FReset: Fn(&mut T) + Sync,
+        FFold: Fn(&mut T, Range<usize>) + Sync,
+        FComb: Fn(&mut T, &T),
+        FFinish: FnOnce(&mut T) -> R,
+    {
+        let min_chunk = min_chunk.max(1);
+        if scratch.slots.len() < self.threads {
+            scratch.slots.resize_with(self.threads, || None);
+            scratch.touched.resize(self.threads, false);
+        }
+        for t in scratch.touched.iter_mut() {
+            *t = false;
+        }
+        // Inline path: everything folds into lane 0's slot.
+        if self.threads == 1 || n <= min_chunk {
+            let slot = &mut scratch.slots[0];
+            match slot {
+                Some(acc) => reset(acc),
+                None => *slot = Some(init()),
+            }
+            let acc = slot.as_mut().expect("slot 0 was just filled");
+            if n > 0 {
+                fold(acc, 0..n);
+            }
+            return finish(acc);
+        }
+        let chunk = (n / (self.threads * 4)).max(min_chunk);
+        let cursor = AtomicUsize::new(0);
+        {
+            // SAFETY contract of SyncSliceMut: each lane touches only its
+            // own slot index, so the writes are disjoint by construction.
+            let slots = SyncSliceMut::new(&mut scratch.slots);
+            let touched = SyncSliceMut::new(&mut scratch.touched);
+            self.dispatch(&|lane| {
+                let mut claimed = false;
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    if !claimed {
+                        claimed = true;
+                        *touched.at(lane) = true;
+                        let slot = slots.at(lane);
+                        match slot {
+                            Some(acc) => reset(acc),
+                            None => *slot = Some(init()),
+                        }
+                    }
+                    let acc = slots.at(lane).as_mut().expect("claimed lane has an accumulator");
+                    fold(acc, start..(start + chunk).min(n));
+                }
+            });
+        }
+        // Serial in-place merge into the first touched lane's accumulator.
+        let mut result_lane = None;
+        for lane in 0..self.threads {
+            if !scratch.touched[lane] {
+                continue;
+            }
+            match result_lane {
+                None => result_lane = Some(lane),
+                Some(dst) => {
+                    let (left, right) = scratch.slots.split_at_mut(lane);
+                    let dst_acc = left[dst].as_mut().expect("touched lane has an accumulator");
+                    let src_acc = right[0].as_ref().expect("touched lane has an accumulator");
+                    combine(dst_acc, src_acc);
+                }
+            }
+        }
+        let lane = match result_lane {
+            Some(lane) => lane,
+            // n > 0 and chunk claims cover 0..n, so some lane always claims
+            // work; this arm only defends against future refactors.
+            None => {
+                let slot = &mut scratch.slots[0];
+                match slot {
+                    Some(acc) => reset(acc),
+                    None => *slot = Some(init()),
+                }
+                0
+            }
+        };
+        finish(scratch.slots[lane].as_mut().expect("result lane has an accumulator"))
+    }
+}
+
+/// Caller-owned per-lane accumulator slots for
+/// [`ThreadPool::map_reduce_with`]. One scratch serves one accumulator
+/// type; keep it alive (e.g. in a solver workspace) across calls so warm
+/// iterations reuse the lane accumulators instead of reallocating them.
+pub struct LaneScratch<T> {
+    /// One slot per lane; `None` until that lane first claims work.
+    slots: Vec<Option<T>>,
+    /// Which lanes claimed work during the current call.
+    touched: Vec<bool>,
+}
+
+impl<T> LaneScratch<T> {
+    /// Empty scratch; slots are sized lazily to the pool that uses it.
+    pub fn new() -> Self {
+        Self { slots: Vec::new(), touched: Vec::new() }
+    }
+}
+
+impl<T> Default for LaneScratch<T> {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -338,6 +477,75 @@ mod tests {
         assert!(inits <= threads, "{inits} accumulators for {threads} lanes");
         assert!(combines < threads, "{combines} combines for {threads} lanes");
         assert!(inits >= 1 && combines == inits - 1);
+    }
+
+    #[test]
+    fn map_reduce_with_matches_map_reduce() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut scratch = LaneScratch::new();
+            let n = 50_000;
+            let expect: u64 = (n as u64 - 1) * n as u64 / 2;
+            for round in 0..3 {
+                let sum = pool.map_reduce_with(
+                    &mut scratch,
+                    n,
+                    64,
+                    || vec![0u64; 1],
+                    |acc| acc[0] = 0,
+                    |acc, range| acc[0] += range.map(|i| i as u64).sum::<u64>(),
+                    |a, b| a[0] += b[0],
+                    |acc| acc[0],
+                );
+                assert_eq!(sum, expect, "threads={threads} round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_with_reuses_lane_accumulators() {
+        // After a warm-up call, further same-shape calls must never invoke
+        // `init` again — the lane accumulators live in the scratch.
+        let pool = ThreadPool::new(4);
+        let mut scratch = LaneScratch::new();
+        let inits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let _ = pool.map_reduce_with(
+                &mut scratch,
+                10_000,
+                8,
+                || {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    0u64
+                },
+                |acc| *acc = 0,
+                |acc, range| *acc += range.len() as u64,
+                |a, b| *a += *b,
+                |acc| *acc,
+            );
+        }
+        assert!(
+            inits.load(Ordering::Relaxed) <= 4,
+            "init ran {} times for a 4-lane pool across 5 calls",
+            inits.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn map_reduce_with_empty_input_returns_reset_accumulator() {
+        let pool = ThreadPool::new(2);
+        let mut scratch = LaneScratch::new();
+        let v = pool.map_reduce_with(
+            &mut scratch,
+            0,
+            1,
+            || 7u32,
+            |acc| *acc = 7,
+            |_, _| panic!("no chunks on empty input"),
+            |_, _| panic!("nothing to combine"),
+            |acc| *acc,
+        );
+        assert_eq!(v, 7);
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub enum DataSource {
     },
     /// A CSV (anything else) or fvecs (`.fv`) file on disk.
     Path(PathBuf),
+    /// A binary shard on disk (the `AAKMFV01` format written by
+    /// [`crate::data::ShardWriter`]), streamed chunk-by-chunk through
+    /// [`crate::data::MmapShardSource`] by the mini-batch engine — the
+    /// out-of-core source. Full-batch engines load it whole.
+    Shard(PathBuf),
 }
 
 impl DataSource {
@@ -46,6 +51,7 @@ impl DataSource {
             Self::Inline(m) => format!("inline {}x{}", m.n(), m.d()),
             Self::Registry { name, scale } => format!("{name}@{scale}"),
             Self::Path(p) => p.display().to_string(),
+            Self::Shard(p) => format!("shard {}", p.display()),
         }
     }
 
@@ -69,6 +75,15 @@ impl DataSource {
                     crate::data::load_csv(p)
                 };
                 loaded.map(Arc::new).map_err(|e| ClusterError::Data {
+                    source: self.label(),
+                    reason: format!("{e:#}"),
+                })
+            }
+            // Shards share the fvecs layout, so a full-batch materialize
+            // is just the batch loader (out-of-core streaming goes through
+            // the session's chunk-source path instead).
+            Self::Shard(p) => {
+                crate::data::load_fvecs(p).map(Arc::new).map_err(|e| ClusterError::Data {
                     source: self.label(),
                     reason: format!("{e:#}"),
                 })
@@ -144,6 +159,9 @@ pub struct ClusterRequest {
     record_trace: bool,
     seed: u64,
     artifact_dir: Option<PathBuf>,
+    priority: i32,
+    chunk_size: usize,
+    batches_per_epoch: usize,
 }
 
 impl ClusterRequest {
@@ -212,6 +230,33 @@ impl ClusterRequest {
         self.artifact_dir.as_ref()
     }
 
+    /// Scheduling priority (higher runs first; coordinator workers pick
+    /// the highest-priority queued job, FIFO within equal priorities).
+    pub fn priority(&self) -> i32 {
+        self.priority
+    }
+
+    /// Samples per mini-batch chunk (`EngineKind::MiniBatch` only).
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Mini-batches per epoch; 0 = one full pass over the source.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.batches_per_epoch
+    }
+
+    /// Project the streaming mini-batch configuration (used when
+    /// [`ClusterRequest::engine`] is `EngineKind::MiniBatch`).
+    pub fn minibatch_config(&self) -> crate::stream::MiniBatchConfig {
+        crate::stream::MiniBatchConfig {
+            solver: self.solver_config(),
+            chunk_size: self.chunk_size,
+            batches_per_epoch: self.batches_per_epoch,
+            ..crate::stream::MiniBatchConfig::default()
+        }
+    }
+
     /// Project the solver-level configuration.
     pub fn solver_config(&self) -> SolverConfig {
         SolverConfig {
@@ -276,6 +321,9 @@ pub struct ClusterRequestBuilder {
     record_trace: bool,
     seed: u64,
     artifact_dir: Option<PathBuf>,
+    priority: i32,
+    chunk_size: usize,
+    batches_per_epoch: usize,
 }
 
 impl Default for ClusterRequestBuilder {
@@ -297,6 +345,9 @@ impl Default for ClusterRequestBuilder {
             record_trace: cfg.record_trace,
             seed: 42,
             artifact_dir: None,
+            priority: 0,
+            chunk_size: 4096,
+            batches_per_epoch: 0,
         }
     }
 }
@@ -321,6 +372,12 @@ impl ClusterRequestBuilder {
     /// Cluster a CSV / fvecs file.
     pub fn path(self, path: impl Into<PathBuf>) -> Self {
         self.source(DataSource::Path(path.into()))
+    }
+
+    /// Cluster a binary shard file (streamed out-of-core by the
+    /// mini-batch engine; loaded whole by full-batch engines).
+    pub fn shard(self, path: impl Into<PathBuf>) -> Self {
+        self.source(DataSource::Shard(path.into()))
     }
 
     /// Number of clusters.
@@ -409,6 +466,32 @@ impl ClusterRequestBuilder {
         self
     }
 
+    /// Scheduling priority for service submission (higher runs first;
+    /// default 0). In-process sessions ignore it.
+    pub fn priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Samples per mini-batch chunk (`EngineKind::MiniBatch`; default
+    /// 4096 — also the peak resident sample count for streamed sources).
+    pub fn chunk_size(mut self, chunk_size: usize) -> Self {
+        self.chunk_size = chunk_size;
+        self
+    }
+
+    /// Mini-batches per epoch. 0 (the default) = one full pass over the
+    /// source. A positive cap makes every epoch train on the **first**
+    /// `batches` chunks of a pass — deterministic, but the rest of a
+    /// bounded source never updates the centroids (it still counts in the
+    /// energy checkpoint). Use a positive cap to bound unbounded
+    /// generator sources; keep 0 for full coverage of shards and
+    /// in-memory data.
+    pub fn batches_per_epoch(mut self, batches: usize) -> Self {
+        self.batches_per_epoch = batches;
+        self
+    }
+
     /// Validate and produce the request.
     pub fn build(self) -> Result<ClusterRequest, ClusterError> {
         let source = self
@@ -433,6 +516,9 @@ impl ClusterRequestBuilder {
             if !(scale.is_finite() && *scale > 0.0 && *scale <= 1.0) {
                 return Err(ClusterError::invalid("source", "registry scale must be in (0, 1]"));
             }
+        }
+        if self.chunk_size == 0 {
+            return Err(ClusterError::invalid("chunk_size", "must be at least 1"));
         }
         // Inline sources get the full shape checks right now; lazy sources
         // get the identical checks (same helper) from the session at first
@@ -467,6 +553,9 @@ impl ClusterRequestBuilder {
             record_trace: self.record_trace,
             seed: self.seed,
             artifact_dir: self.artifact_dir,
+            priority: self.priority,
+            chunk_size: self.chunk_size,
+            batches_per_epoch: self.batches_per_epoch,
         })
     }
 }
@@ -569,6 +658,38 @@ mod tests {
             .with_service_defaults(3, std::path::Path::new("arts"));
         assert_eq!(req2.threads(), 2);
         assert_eq!(req2.artifact_dir().unwrap(), &PathBuf::from("mine"));
+    }
+
+    #[test]
+    fn streaming_fields_default_and_validate() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert_eq!(req.priority(), 0);
+        assert_eq!(req.chunk_size(), 4096);
+        assert_eq!(req.batches_per_epoch(), 0);
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .priority(7)
+            .chunk_size(128)
+            .batches_per_epoch(3)
+            .build()
+            .unwrap();
+        assert_eq!(req.priority(), 7);
+        let mb = req.minibatch_config();
+        assert_eq!(mb.chunk_size, 128);
+        assert_eq!(mb.batches_per_epoch, 3);
+        let bad = ClusterRequest::builder().inline(tiny()).k(2).chunk_size(0).build();
+        assert!(matches!(
+            bad,
+            Err(ClusterError::InvalidRequest { field: "chunk_size", .. })
+        ));
+    }
+
+    #[test]
+    fn shard_source_labels_and_fails_typed() {
+        let src = DataSource::Shard(PathBuf::from("/no/such/shard.fv"));
+        assert!(src.label().starts_with("shard "));
+        assert!(matches!(src.materialize(), Err(ClusterError::Data { .. })));
     }
 
     #[test]

@@ -12,12 +12,14 @@
 //! [`ClusterSession::recycle`] closes the loop so steady-state reruns
 //! leave the solver's own buffers untouched by the allocator.
 
+use crate::config::EngineKind;
+use crate::data::chunks::{self, ChunkSource, InMemoryChunks, MmapShardSource};
 use crate::data::DataMatrix;
 use crate::error::ClusterError;
 use crate::init::seed_centroids;
 use crate::kmeans::{RunReport, Solver, Workspace};
 use crate::observe::{CancelToken, NoopObserver, Observer};
-use crate::request::{ClusterRequest, InitSpec};
+use crate::request::{ClusterRequest, DataSource, InitSpec};
 use crate::rng::Pcg32;
 use std::sync::Arc;
 
@@ -91,10 +93,109 @@ impl ClusterSession {
         if cancel.is_cancelled() {
             return Err(ClusterError::Cancelled);
         }
+        if self.request.engine() == EngineKind::MiniBatch {
+            return self.run_minibatch(observer, cancel);
+        }
         self.ensure_data()?;
         let x = self.data.as_ref().expect("ensure_data just set it");
         let c0 = self.c0.as_ref().expect("ensure_data just set it");
         Ok(self.solver.run_observed(x, c0, observer, cancel))
+    }
+
+    /// The streaming path (`EngineKind::MiniBatch`): build a
+    /// [`ChunkSource`] for the request's data — shards stream out-of-core
+    /// through [`MmapShardSource`]; every other source is RAM-resident by
+    /// nature and streams its materialized matrix — and run the
+    /// Anderson-accelerated mini-batch solver on this session's warm
+    /// workspace. The report counts *epochs* in `iterations` and carries
+    /// no per-sample assignment (a streamed dataset is never resident).
+    fn run_minibatch(
+        &mut self,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
+    ) -> Result<RunReport, ClusterError> {
+        let cfg = self.request.minibatch_config();
+        // Extract the owned path first: the seeding helpers below need
+        // `&mut self`, which cannot coexist with a borrow of the source.
+        let shard_path = match self.request.source() {
+            DataSource::Shard(path) => Some(path.clone()),
+            _ => None,
+        };
+        let mut source: Box<dyn ChunkSource> = match shard_path {
+            Some(path) => {
+                // One mapping serves both the seeding prefix and the run.
+                let mut shard = Self::open_shard(&path)?;
+                self.ensure_shard_seed(&mut shard)?;
+                shard.rewind();
+                Box::new(shard)
+            }
+            None => {
+                self.ensure_data()?;
+                let x = self.data.as_ref().expect("ensure_data just set it");
+                Box::new(InMemoryChunks::new(Arc::clone(x)))
+            }
+        };
+        let c0 = self.c0.as_ref().expect("seeding ran above");
+        crate::stream::run_on_workspace(
+            &cfg,
+            self.solver.workspace_mut(),
+            source.as_mut(),
+            c0,
+            observer,
+            cancel,
+        )
+    }
+
+    /// Open a shard with its IO/format failures folded into the typed
+    /// [`ClusterError::Data`] variant (the single wrap site for sessions).
+    fn open_shard(path: &std::path::Path) -> Result<MmapShardSource, ClusterError> {
+        MmapShardSource::open(path).map_err(|e| ClusterError::Data {
+            source: format!("shard {}", path.display()),
+            reason: format!("{e:#}"),
+        })
+    }
+
+    /// Seed the initial centroids for a shard-backed streaming run from a
+    /// bounded prefix of the stream (the full shard is never resident),
+    /// validating shape against the shard header. Runs once; later runs
+    /// of the session reuse the cached centroids verbatim. The caller
+    /// rewinds the shard afterwards.
+    fn ensure_shard_seed(&mut self, shard: &mut MmapShardSource) -> Result<(), ClusterError> {
+        if self.c0.is_some() {
+            return Ok(());
+        }
+        let k = self.request.k();
+        if k > shard.n() {
+            return Err(ClusterError::invalid(
+                "k",
+                format!("k={k} exceeds the shard's sample count {}", shard.n()),
+            ));
+        }
+        let c0 = match self.request.init() {
+            InitSpec::Method(method) => {
+                let chunk = self.request.chunk_size();
+                let cap = chunk.max(16 * k).min(shard.n());
+                let buf = chunks::collect_source(shard, chunk, cap)?;
+                let mut rng = Pcg32::seed_from_u64(self.request.seed());
+                seed_centroids(&buf, k, *method, &mut rng)
+            }
+            InitSpec::Centroids(c0) => {
+                if c0.d() != shard.d() {
+                    return Err(ClusterError::invalid(
+                        "init",
+                        format!(
+                            "initial centroids are {}-dimensional but the shard is \
+                             {}-dimensional",
+                            c0.d(),
+                            shard.d()
+                        ),
+                    ));
+                }
+                DataMatrix::clone(c0)
+            }
+        };
+        self.c0 = Some(c0);
+        Ok(())
     }
 
     /// Return a finished report's buffers to the workspace pool so the next

@@ -1,0 +1,683 @@
+//! Streaming mini-batch K-Means with epoch-level Anderson acceleration.
+//!
+//! [`MiniBatchSolver`] runs Sculley-style mini-batch K-Means (per-batch
+//! assign + per-centroid decaying learning rates) over any
+//! [`ChunkSource`], so only one chunk of samples is resident at a time —
+//! datasets far larger than RAM stream through the same SIMD assign
+//! kernels the full-batch engines use. On top of the batch loop it applies
+//! the paper's machinery at *epoch* granularity: one pass over the source
+//! is one application of a deterministic fixed-point map `C_e = G(C_{e-1})`
+//! (all built-in sources replay identical chunks after a rewind), and the
+//! smoothed per-epoch centroid sequence is Anderson-extrapolated with the
+//! dynamic-`m` safeguard from [`crate::anderson`]. Every epoch ends with a
+//! full-energy checkpoint over the source; the checkpoint guards AA
+//! proposals (reject on non-decrease, Algorithm 1 lines 13–15), drives the
+//! dynamic-`m` controller, restarts the AA history after repeated
+//! rejections, and decides convergence.
+//!
+//! The solver runs on the same reusable [`Workspace`] as the full-batch
+//! path — chunk buffer, assignment buffer, Anderson history and the
+//! per-centroid counters are all drawn from (and returned to) the
+//! workspace scratch, so warm reruns allocate nothing. The higher-level
+//! entry point is a [`crate::ClusterRequest`] with
+//! `EngineKind::MiniBatch`, which routes [`crate::ClusterSession`] (and
+//! therefore the coordinator) through this module.
+
+use crate::anderson::{AndersonAccelerator, MController};
+use crate::config::{Acceleration, SolverConfig};
+use crate::data::chunks::ChunkSource;
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::kmeans::{over_budget, RunReport, Workspace, WorkspaceSpec};
+use crate::lloyd;
+use crate::metrics::{PhaseTimer, Stopwatch};
+use crate::observe::{CancelToken, IterationInfo, NoopObserver, Observer, ObserverControl};
+
+/// Batch cap per epoch for custom unbounded sources that neither report a
+/// length nor run out (all built-in sources are bounded per pass).
+const UNBOUNDED_EPOCH_BATCHES: usize = 64;
+
+/// Consecutive rejected Anderson proposals after which the history is
+/// dropped (restart): epoch-level residuals are noisier than full-batch
+/// ones, and a stale history that keeps proposing uphill extrapolations
+/// is worse than starting fresh.
+const RESTART_AFTER_REJECTS: u32 = 2;
+
+/// Configuration of one streaming mini-batch run.
+#[derive(Debug, Clone)]
+pub struct MiniBatchConfig {
+    /// Solver-level knobs reused from the full-batch path: `accel` /
+    /// `epsilon1` / `epsilon2` / `m_max` drive the epoch-level Anderson
+    /// step, `max_iters` caps *epochs*, `time_limit` is checked at batch
+    /// boundaries, `threads` / `precision` size the workspace.
+    pub solver: SolverConfig,
+    /// Samples per mini-batch chunk (peak resident sample count).
+    pub chunk_size: usize,
+    /// Mini-batches per epoch; 0 = one full pass over the source. With a
+    /// positive cap each epoch streams the first `batches_per_epoch`
+    /// chunks of a pass, keeping the epoch map deterministic.
+    pub batches_per_epoch: usize,
+    /// Relative epoch-energy change below which the run converges.
+    pub convergence_tol: f64,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        Self {
+            solver: SolverConfig {
+                engine: crate::config::EngineKind::MiniBatch,
+                ..SolverConfig::default()
+            },
+            chunk_size: 4096,
+            batches_per_epoch: 0,
+            convergence_tol: 1e-4,
+        }
+    }
+}
+
+/// Anderson-accelerated mini-batch solver over a reusable [`Workspace`].
+pub struct MiniBatchSolver {
+    cfg: MiniBatchConfig,
+    ws: Workspace,
+}
+
+impl MiniBatchSolver {
+    /// Build a solver (and a fresh workspace) for `cfg`.
+    pub fn try_new(cfg: MiniBatchConfig) -> Result<Self, ClusterError> {
+        let ws = Workspace::open(&WorkspaceSpec::from_config(&cfg.solver))?;
+        Ok(Self { cfg, ws })
+    }
+
+    /// Build a solver over an existing (warm) workspace.
+    pub fn from_workspace(cfg: MiniBatchConfig, ws: Workspace) -> Self {
+        Self { cfg, ws }
+    }
+
+    /// Configuration in use.
+    pub fn config(&self) -> &MiniBatchConfig {
+        &self.cfg
+    }
+
+    /// The workspace backing this solver.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Release the workspace for reuse.
+    pub fn into_workspace(self) -> Workspace {
+        self.ws
+    }
+
+    /// Run mini-batch epochs over `source` from the initial centroids
+    /// `c0` until the epoch energy plateaus (convergence), the epoch cap
+    /// (`solver.max_iters`) or the time budget is reached.
+    pub fn run(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        c0: &DataMatrix,
+    ) -> Result<RunReport, ClusterError> {
+        self.run_observed(source, c0, &mut NoopObserver, &CancelToken::new())
+    }
+
+    /// [`MiniBatchSolver::run`] with an [`Observer`] called once per
+    /// *epoch* (the iteration granularity of this solver; `energy` is the
+    /// epoch's full checkpoint energy) and a [`CancelToken`] checked at
+    /// every batch boundary. In the returned report, `iterations` counts
+    /// epochs, `accepted` counts epochs whose Anderson proposal passed the
+    /// energy guard, and `assignment` is empty — a streamed dataset has no
+    /// resident assignment vector. Because the full dataset is never
+    /// resident, `Observer::on_start` receives the initial centroids as
+    /// its data argument.
+    pub fn run_observed(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        c0: &DataMatrix,
+        observer: &mut dyn Observer,
+        cancel: &CancelToken,
+    ) -> Result<RunReport, ClusterError> {
+        run_on_workspace(&self.cfg, &mut self.ws, source, c0, observer, cancel)
+    }
+}
+
+/// One full-energy checkpoint pass: rewind the source and accumulate the
+/// exact clustering energy of `c` over up to `max_batches` chunks (every
+/// chunk for bounded sources). Returns `Some((energy, samples))`, or
+/// `None` when the cancel token trips or the time budget expires mid-pass
+/// — like the training pass, the checkpoint yields at batch boundaries so
+/// cancellation latency on out-of-core data is one chunk, not one full
+/// dataset scan.
+#[allow(clippy::too_many_arguments)]
+fn checkpoint_energy(
+    ws: &mut Workspace,
+    source: &mut dyn ChunkSource,
+    c: &DataMatrix,
+    chunk: &mut DataMatrix,
+    assign: &mut lloyd::Assignment,
+    chunk_rows: usize,
+    max_batches: usize,
+    phases: &mut PhaseTimer,
+    cancel: &CancelToken,
+    sw: &Stopwatch,
+    limit: Option<std::time::Duration>,
+) -> Result<Option<(f64, u64)>, ClusterError> {
+    source.rewind();
+    let mut energy = 0.0;
+    let mut samples = 0u64;
+    let mut batches = 0usize;
+    while batches < max_batches {
+        if cancel.is_cancelled() || over_budget(sw, limit) {
+            return Ok(None);
+        }
+        let got = source.next_chunk(chunk_rows, chunk)?;
+        if got == 0 {
+            break;
+        }
+        // Per-chunk reset, as in the training pass: never let bound state
+        // from one chunk's samples prune another's.
+        ws.engine.reset();
+        phases.time("energy", || {
+            ws.engine.assign(chunk, c, &ws.pool, assign);
+            energy += lloyd::energy(chunk, c, assign, &ws.pool);
+        });
+        samples += got as u64;
+        batches += 1;
+    }
+    Ok(Some((energy, samples)))
+}
+
+/// The mini-batch epoch loop, shared by [`MiniBatchSolver`] and the
+/// session/coordinator path (which hands in the session's warm workspace).
+pub(crate) fn run_on_workspace(
+    cfg: &MiniBatchConfig,
+    ws: &mut Workspace,
+    source: &mut dyn ChunkSource,
+    c0: &DataMatrix,
+    observer: &mut dyn Observer,
+    cancel: &CancelToken,
+) -> Result<RunReport, ClusterError> {
+    // Typed validation, not asserts: MiniBatchSolver::run is a public
+    // entry point with the same fallible-API contract as ClusterSession.
+    if c0.d() != source.d() {
+        return Err(ClusterError::invalid(
+            "init",
+            format!(
+                "initial centroids are {}-dimensional but the source is {}-dimensional",
+                c0.d(),
+                source.d()
+            ),
+        ));
+    }
+    if c0.n() == 0 {
+        return Err(ClusterError::invalid("k", "at least one centroid is required"));
+    }
+    let sw = Stopwatch::start();
+    let mut phases = PhaseTimer::new();
+    let (k, d) = (c0.n(), c0.d());
+    let dim = k * d;
+    let chunk_rows = cfg.chunk_size.max(1);
+    let (use_aa, m0, dynamic) = match cfg.solver.accel {
+        Acceleration::None => (false, 0, false),
+        Acceleration::FixedM(m) => (true, m, false),
+        Acceleration::DynamicM(m) => (true, m, true),
+    };
+    // Epoch batch budget: an explicit cap, a full pass for bounded
+    // sources, or the defensive cap for custom unbounded generators.
+    let epoch_batches = if cfg.batches_per_epoch > 0 {
+        cfg.batches_per_epoch
+    } else if source.len().is_some() {
+        usize::MAX
+    } else {
+        UNBOUNDED_EPOCH_BATCHES
+    };
+    let eval_batches = if source.len().is_some() {
+        usize::MAX
+    } else {
+        epoch_batches
+    };
+
+    ws.scratch.begin_run();
+    ws.engine.reset();
+    let evals0 = ws.engine.distance_evals();
+    observer.on_start(c0, c0);
+
+    // Every buffer below comes from the workspace scratch: warm reruns of
+    // the same shape perform no allocation in the epoch loop.
+    let mut c = ws.scratch.take_output_mat(k, d);
+    c.as_mut_slice().copy_from_slice(c0.as_slice());
+    // Take order mirrors the put order below (LIFO pool): the chunk
+    // buffer keeps its large allocation across runs instead of rotating
+    // into a centroid-sized slot.
+    let mut chunk = ws.scratch.take_mat(chunk_rows, d);
+    let mut c_prev = ws.scratch.take_mat(k, d);
+    let mut c_prop = ws.scratch.take_mat(k, d);
+    let mut assign = ws.scratch.take_assign();
+    // Anderson state only exists for accelerated runs: a plain mini-batch
+    // run neither allocates the m̄ history columns nor the residual.
+    let mut aa_state: Option<(AndersonAccelerator, Vec<f64>)> = if use_aa {
+        let acc = ws.scratch.take_accelerator(cfg.solver.m_max.max(1), dim);
+        Some((acc, ws.scratch.take_f_t(dim)))
+    } else {
+        None
+    };
+    let mut counts = ws.scratch.take_trace_f64();
+    counts.clear();
+    counts.resize(k, 0.0);
+    let mut trace = if cfg.solver.record_trace {
+        ws.scratch.take_trace_f64()
+    } else {
+        Vec::new()
+    };
+    let mut m_trace = if cfg.solver.record_trace {
+        ws.scratch.take_trace_usize()
+    } else {
+        Vec::new()
+    };
+    let mut controller = MController::new(
+        m0.min(cfg.solver.m_max),
+        cfg.solver.m_max,
+        cfg.solver.epsilon1,
+        cfg.solver.epsilon2,
+    );
+
+    let mut e_prev = f64::INFINITY;
+    let mut decrease_prev = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut accepted = 0usize;
+    let mut rejects = 0u32;
+    let mut eval_samples = 0u64;
+    let mut converged = false;
+    let mut cancelled = false;
+    let mut stopped_early = false;
+    let mut mid_epoch_break = false;
+    // Source failures abort the run but must still flow past the buffer
+    // put-backs below (a transient IO error must not strip the workspace
+    // of its warm scratch), so they are carried out of the loop instead
+    // of early-returned.
+    let mut stream_error: Option<ClusterError> = None;
+
+    'epochs: for _epoch in 1..=cfg.solver.max_iters {
+        if cancel.is_cancelled() || over_budget(&sw, cfg.solver.time_limit) {
+            cancelled = cancel.is_cancelled();
+            stopped_early = !cancelled;
+            break;
+        }
+        // ---- Mini-batch pass: one application of the epoch map G.
+        c_prev.as_mut_slice().copy_from_slice(c.as_slice());
+        source.rewind();
+        let mut batches = 0usize;
+        while batches < epoch_batches {
+            let got = match source.next_chunk(chunk_rows, &mut chunk) {
+                Ok(got) => got,
+                Err(e) => {
+                    stream_error = Some(e);
+                    break 'epochs;
+                }
+            };
+            if got == 0 {
+                break;
+            }
+            // Every chunk is a fresh sample set: drop any per-sample bound
+            // state first. The default mini-batch engine (Naive) keeps no
+            // state and only re-derives small per-chunk norm caches, but a
+            // caller-configured bound engine (Hamerly/Elkan/Yinyang) would
+            // otherwise prune the new chunk with the previous chunk's
+            // bounds — same shapes, different samples — and silently
+            // mis-assign.
+            ws.engine.reset();
+            phases.time("assign", || ws.engine.assign(&chunk, &c, &ws.pool, &mut assign));
+            phases.time("update", || {
+                for i in 0..got {
+                    let j = assign[i] as usize;
+                    debug_assert!(j < k, "assignment out of range");
+                    counts[j] += 1.0;
+                    let eta = 1.0 / counts[j];
+                    let row = chunk.row(i);
+                    let dst = c.row_mut(j);
+                    for t in 0..d {
+                        dst[t] += eta * (row[t] - dst[t]);
+                    }
+                }
+            });
+            batches += 1;
+            // Batch boundary: cancellation and budgets land within one
+            // chunk. The partial epoch is discarded below so the returned
+            // state is always an epoch-boundary iterate with an exact
+            // checkpoint energy.
+            if cancel.is_cancelled() || over_budget(&sw, cfg.solver.time_limit) {
+                cancelled = cancel.is_cancelled();
+                stopped_early = !cancelled;
+                mid_epoch_break = true;
+                break 'epochs;
+            }
+        }
+        if batches == 0 {
+            // Empty source: the initial centroids are already the answer.
+            converged = true;
+            break;
+        }
+        // ---- Full-energy checkpoint at the smoothed iterate G_e (it
+        // yields at batch boundaries exactly like the training pass).
+        let (e_g, n_eval) = match checkpoint_energy(
+            ws,
+            source,
+            &c,
+            &mut chunk,
+            &mut assign,
+            chunk_rows,
+            eval_batches,
+            &mut phases,
+            cancel,
+            &sw,
+            cfg.solver.time_limit,
+        ) {
+            Ok(Some(measured)) => measured,
+            Ok(None) => {
+                // Interrupted before this epoch's energy was measured: the
+                // epoch is discarded like any other mid-pass break.
+                cancelled = cancel.is_cancelled();
+                stopped_early = !cancelled;
+                mid_epoch_break = true;
+                break;
+            }
+            Err(e) => {
+                stream_error = Some(e);
+                break;
+            }
+        };
+        epochs += 1;
+        eval_samples = n_eval;
+        let mut e = e_g;
+        // Dynamic-m safeguard on the epoch-energy decrease ratio.
+        if dynamic {
+            controller.adjust(e_prev - e_g, decrease_prev);
+        }
+        // ---- Anderson step on the epoch sequence, guarded by the
+        // checkpoint energy (reject ⇒ keep the plain mini-batch iterate).
+        let mut candidate = false;
+        let mut accepted_this = false;
+        if let Some((acc, f_t)) = aa_state.as_mut() {
+            candidate = phases.time("anderson", || {
+                crate::linalg::sub(c.as_slice(), c_prev.as_slice(), f_t);
+                acc.propose_into(c.as_slice(), f_t, controller.m(), c_prop.as_mut_slice())
+            });
+            if candidate {
+                match checkpoint_energy(
+                    ws,
+                    source,
+                    &c_prop,
+                    &mut chunk,
+                    &mut assign,
+                    chunk_rows,
+                    eval_batches,
+                    &mut phases,
+                    cancel,
+                    &sw,
+                    cfg.solver.time_limit,
+                ) {
+                    Ok(Some((e_p, _))) if e_p < e_g => {
+                        c.as_mut_slice().copy_from_slice(c_prop.as_slice());
+                        e = e_p;
+                        accepted += 1;
+                        accepted_this = true;
+                        rejects = 0;
+                    }
+                    Ok(Some(_)) => {
+                        rejects += 1;
+                        if rejects >= RESTART_AFTER_REJECTS {
+                            acc.reset();
+                            rejects = 0;
+                        }
+                    }
+                    // Interrupted mid-guard: keep the plain iterate (its
+                    // energy e_g is exact); the next epoch-top check ends
+                    // the run before any further work.
+                    Ok(None) => {}
+                    Err(e) => {
+                        stream_error = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if cfg.solver.record_trace {
+            trace.push(e);
+            m_trace.push(controller.m());
+        }
+        let plateaued = e_prev.is_finite()
+            && (e_prev - e).abs() <= cfg.convergence_tol * e_prev.abs().max(f64::MIN_POSITIVE);
+        decrease_prev = e_prev - e;
+        e_prev = e;
+        let control = observer.on_iteration(&IterationInfo {
+            iteration: epochs,
+            energy: Some(e),
+            m: controller.m(),
+            accelerated_candidate: candidate,
+            accepted: accepted_this,
+            centroids: &c,
+            phases: &phases,
+        });
+        if control == ObserverControl::Stop {
+            stopped_early = true;
+            break;
+        }
+        if plateaued {
+            converged = true;
+            break;
+        }
+    }
+
+    // An interrupted epoch is discarded: revert to the last epoch-boundary
+    // iterate, whose checkpoint energy (`e_prev`) is exact.
+    if mid_epoch_break {
+        c.as_mut_slice().copy_from_slice(c_prev.as_slice());
+    }
+    let (energy, n_eval) = if stream_error.is_some() {
+        (f64::INFINITY, 1)
+    } else if epochs > 0 {
+        (e_prev, eval_samples.max(1))
+    } else if cancelled {
+        // Fast cancel before the first checkpoint: no energy measured.
+        (f64::INFINITY, 1)
+    } else {
+        // No epoch completed (empty source / immediate stop): measure the
+        // returned centroids once — unless the budget is already gone, in
+        // which case the interruptible pass bails on its first batch.
+        match checkpoint_energy(
+            ws,
+            source,
+            &c,
+            &mut chunk,
+            &mut assign,
+            chunk_rows,
+            eval_batches,
+            &mut phases,
+            cancel,
+            &sw,
+            cfg.solver.time_limit,
+        ) {
+            Ok(Some((e0, n0))) => (e0, n0.max(1)),
+            Ok(None) => (f64::INFINITY, 1),
+            Err(e) => {
+                stream_error = Some(e);
+                (f64::INFINITY, 1)
+            }
+        }
+    };
+
+    ws.scratch.put_mat(c_prop);
+    ws.scratch.put_mat(c_prev);
+    ws.scratch.put_mat(chunk);
+    ws.scratch.put_assign(assign);
+    if let Some((acc, f_t)) = aa_state {
+        ws.scratch.put_f_t(f_t);
+        ws.scratch.put_accelerator(acc);
+    }
+    ws.scratch.put_trace_f64(counts);
+    // Buffers are home; only now may a carried source failure surface.
+    if let Some(e) = stream_error {
+        return Err(e);
+    }
+    let report = RunReport {
+        iterations: epochs,
+        accepted,
+        seconds: sw.seconds(),
+        energy,
+        mse: energy / n_eval as f64,
+        converged,
+        cancelled,
+        stopped_early,
+        energy_trace: trace,
+        m_trace,
+        dist_evals: ws.engine.distance_evals() - evals0,
+        phases,
+        centroids: c,
+        assignment: lloyd::Assignment::new(),
+    };
+    observer.on_finish(&report);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chunks::{InMemoryChunks, SynthChunks};
+    use crate::data::synth;
+    use crate::init::{seed_centroids, InitMethod};
+    use crate::lloyd::brute_force_assign;
+    use crate::par::ThreadPool;
+    use crate::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn cfg(accel: Acceleration, chunk: usize) -> MiniBatchConfig {
+        MiniBatchConfig {
+            solver: SolverConfig {
+                engine: crate::config::EngineKind::MiniBatch,
+                accel,
+                threads: 1,
+                max_iters: 60,
+                record_trace: true,
+                ..SolverConfig::default()
+            },
+            chunk_size: chunk,
+            batches_per_epoch: 0,
+            convergence_tol: 1e-5,
+        }
+    }
+
+    #[test]
+    fn clusters_in_memory_blobs_to_good_energy() {
+        let mut rng = Pcg32::seed_from_u64(42);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 4000, 4, 5, 3.0, 0.2));
+        let mut srng = Pcg32::seed_from_u64(7);
+        let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
+        let mut solver = MiniBatchSolver::try_new(cfg(Acceleration::DynamicM(2), 512)).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let report = solver.run(&mut source, &c0).unwrap();
+        assert!(report.iterations >= 1);
+        assert!(report.energy.is_finite() && report.energy > 0.0);
+        assert_eq!(report.centroids.n(), 5);
+        assert!(report.assignment.is_empty(), "streamed runs carry no assignment");
+        // The reported energy is exact for the reported centroids.
+        let pool = ThreadPool::new(1);
+        let assign = brute_force_assign(&x, &report.centroids);
+        let exact = lloyd::energy(&x, &report.centroids, &assign, &pool);
+        assert!(
+            (exact - report.energy).abs() <= 1e-6 * exact.max(1.0),
+            "checkpoint energy {} vs exact {exact}",
+            report.energy
+        );
+    }
+
+    #[test]
+    fn epoch_trace_has_one_entry_per_epoch() {
+        let mut source = SynthChunks::new(9, 3000, 3, 4, 2.0, 0.3);
+        let seed_buf =
+            crate::data::chunks::collect_source(&mut source, 512, 1024).unwrap();
+        let mut srng = Pcg32::seed_from_u64(3);
+        let c0 = seed_centroids(&seed_buf, 4, InitMethod::KMeansPlusPlus, &mut srng);
+        let mut solver = MiniBatchSolver::try_new(cfg(Acceleration::DynamicM(2), 500)).unwrap();
+        let report = solver.run(&mut source, &c0).unwrap();
+        assert_eq!(report.energy_trace.len(), report.iterations);
+        assert_eq!(report.m_trace.len(), report.iterations);
+        assert!(report.accepted <= report.iterations);
+    }
+
+    #[test]
+    fn warm_reruns_reuse_workspace_and_are_deterministic() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 2000, 3, 4, 2.5, 0.25));
+        let mut srng = Pcg32::seed_from_u64(5);
+        let c0 = seed_centroids(&x, 4, InitMethod::KMeansPlusPlus, &mut srng);
+        let mut solver = MiniBatchSolver::try_new(cfg(Acceleration::DynamicM(2), 256)).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let r1 = solver.run(&mut source, &c0).unwrap();
+        assert!(solver.workspace().last_run_rebuilt_scratch());
+        let (it1, e1) = (r1.iterations, r1.energy);
+        solver.ws.recycle(r1);
+        source.rewind();
+        let r2 = solver.run(&mut source, &c0).unwrap();
+        assert!(
+            !solver.workspace().last_run_rebuilt_scratch(),
+            "second same-shape run must reuse the workspace scratch"
+        );
+        assert_eq!(r2.iterations, it1, "deterministic source ⇒ identical reruns");
+        assert_eq!(r2.energy.to_bits(), e1.to_bits());
+    }
+
+    #[test]
+    fn cancel_before_first_epoch_reports_cancelled() {
+        let mut rng = Pcg32::seed_from_u64(6);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 1000, 3, 4, 2.0, 0.3));
+        let c0 = x.gather_rows(&[0, 1, 2, 3]);
+        let mut solver = MiniBatchSolver::try_new(cfg(Acceleration::None, 128)).unwrap();
+        let mut source = InMemoryChunks::new(x);
+        let token = CancelToken::new();
+        token.cancel();
+        let report =
+            solver.run_observed(&mut source, &c0, &mut NoopObserver, &token).unwrap();
+        assert!(report.cancelled);
+        assert_eq!(report.iterations, 0);
+        assert_eq!(report.centroids.as_slice(), c0.as_slice(), "state reverts to c0");
+    }
+
+    #[test]
+    fn plain_minibatch_matches_sculley_reference() {
+        // One epoch of the solver with Acceleration::None equals a direct
+        // transcription of Sculley's update on the same chunk order.
+        let mut rng = Pcg32::seed_from_u64(8);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 700, 2, 3, 2.0, 0.3));
+        let c0 = x.gather_rows(&[0, 300, 600]);
+        let mut config = cfg(Acceleration::None, 100);
+        config.solver.max_iters = 1;
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let report = solver.run(&mut source, &c0).unwrap();
+
+        // Reference implementation.
+        let mut c = c0.clone();
+        let mut counts = vec![0.0f64; 3];
+        for start in (0..x.n()).step_by(100) {
+            let idx: Vec<usize> = (start..(start + 100).min(x.n())).collect();
+            let chunk = x.gather_rows(&idx);
+            let assign = brute_force_assign(&chunk, &c);
+            for i in 0..chunk.n() {
+                let j = assign[i] as usize;
+                counts[j] += 1.0;
+                let eta = 1.0 / counts[j];
+                for t in 0..2 {
+                    c[(j, t)] += eta * (chunk[(i, t)] - c[(j, t)]);
+                }
+            }
+        }
+        for j in 0..3 {
+            for t in 0..2 {
+                assert!(
+                    (report.centroids[(j, t)] - c[(j, t)]).abs() < 1e-9,
+                    "centroid {j} dim {t}: {} vs reference {}",
+                    report.centroids[(j, t)],
+                    c[(j, t)]
+                );
+            }
+        }
+    }
+}

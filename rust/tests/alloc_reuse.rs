@@ -6,11 +6,16 @@
 //! same-shape `run` on a [`aakm::ClusterSession`], with the previous
 //! report recycled, must not (re)allocate any workspace scratch — engine
 //! bound state, kernel caches, Anderson history, centroid/assignment
-//! buffers are all reused across calls. The remaining warm-run allocator
-//! traffic is the per-iteration parallel-reduce accumulators plus a few
-//! phase labels, which is why the assertions below are a strict-reduction
-//! bound rather than a literal zero.
+//! buffers, the update-reduce lane accumulators and (for the streaming
+//! engine) the chunk buffer and per-centroid counters are all reused
+//! across calls. The contract holds for every engine with warm state:
+//! Hamerly (PR 3), Elkan and Yinyang (in-place `prev_c` / bound
+//! checkpoints, this PR), and the mini-batch solver's epoch loop. The
+//! remaining warm-run allocator traffic is a few phase labels and
+//! per-range scan buffers, which is why the assertions are a strict
+//! reduction bound rather than a literal zero.
 
+use aakm::config::{Acceleration, EngineKind};
 use aakm::{ClusterRequest, ClusterSession};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,32 +51,21 @@ fn counters() -> (u64, u64) {
     (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
 }
 
-#[test]
-fn warm_session_runs_do_not_rebuild_the_workspace() {
-    use aakm::data::synth;
-    use aakm::rng::Pcg32;
-
-    let mut rng = Pcg32::seed_from_u64(0xA110C);
-    let x = Arc::new(synth::gaussian_blobs(&mut rng, 2000, 4, 8, 2.0, 0.4));
-    let request = ClusterRequest::builder()
-        .inline(x)
-        .k(8)
-        .threads(1)
-        .seed(9)
-        .build()
-        .unwrap();
+/// Open a session for `request`, run cold + one warm-up, then measure a
+/// steady-state rerun. Returns (cold_calls, cold_bytes, warm_calls,
+/// warm_bytes) and asserts determinism + scratch reuse along the way.
+fn measure(request: ClusterRequest, label: &str) -> (u64, u64, u64, u64) {
     let mut session = ClusterSession::open(request).unwrap();
 
-    // Cold run: builds engine bound state, kernel caches, Anderson history,
-    // and all solver scratch.
+    // Cold run: builds engine bound state, kernel caches, Anderson
+    // history, and all solver scratch.
     let (calls0, bytes0) = counters();
     let r1 = session.run().unwrap();
     let (calls1, bytes1) = counters();
     let (cold_calls, cold_bytes) = (calls1 - calls0, bytes1 - bytes0);
-    assert!(r1.converged);
     assert!(
         session.workspace().last_run_rebuilt_scratch(),
-        "the first run must build the scratch"
+        "{label}: the first run must build the scratch"
     );
     let (iters, energy) = (r1.iterations, r1.energy);
     session.recycle(r1);
@@ -79,7 +73,7 @@ fn warm_session_runs_do_not_rebuild_the_workspace() {
     // One warm-up rerun lets every pool (trace buffers, report outputs)
     // reach steady state before measuring.
     let r2 = session.run().unwrap();
-    assert!(!session.workspace().last_run_rebuilt_scratch());
+    assert!(!session.workspace().last_run_rebuilt_scratch(), "{label}: warm-up rebuilt");
     session.recycle(r2);
 
     // Measured steady-state rerun.
@@ -89,25 +83,92 @@ fn warm_session_runs_do_not_rebuild_the_workspace() {
     let (warm_calls, warm_bytes) = (calls3 - calls2, bytes3 - bytes2);
 
     // Identical deterministic run...
-    assert_eq!(r3.iterations, iters);
-    assert_eq!(r3.energy.to_bits(), energy.to_bits());
-    // ...with zero scratch rebuilds...
+    assert_eq!(r3.iterations, iters, "{label}: rerun diverged");
+    assert_eq!(r3.energy.to_bits(), energy.to_bits(), "{label}: rerun energy diverged");
+    // ...with zero scratch rebuilds.
     assert!(
         !session.workspace().last_run_rebuilt_scratch(),
-        "steady-state rerun must not reallocate workspace scratch"
+        "{label}: steady-state rerun must not reallocate workspace scratch"
     );
-    assert_eq!(session.workspace().runs(), 3);
-    // ...and sharply reduced allocator traffic: everything that remains is
-    // per-iteration reduce transients, so a warm run must stay well under
-    // the cold run on both axes (the runs are deterministic, so these
-    // bounds are exact regression checks, not timing-dependent ones).
-    assert!(
-        warm_calls * 2 < cold_calls,
-        "warm rerun made {warm_calls} allocations vs {cold_calls} cold — workspace reuse regressed"
-    );
-    assert!(
-        warm_bytes * 4 < cold_bytes,
-        "warm rerun allocated {warm_bytes} bytes vs {cold_bytes} cold — workspace reuse regressed"
-    );
+    assert_eq!(session.workspace().runs(), 3, "{label}");
     session.recycle(r3);
+    (cold_calls, cold_bytes, warm_calls, warm_bytes)
+}
+
+#[test]
+fn warm_session_runs_do_not_rebuild_the_workspace() {
+    use aakm::data::synth;
+    use aakm::rng::Pcg32;
+
+    let mut rng = Pcg32::seed_from_u64(0xA110C);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 2000, 4, 8, 2.0, 0.4));
+    // Yinyang only maintains several groups for K > 10; use a second
+    // dataset with more clusters so its group machinery is exercised.
+    let mut rng24 = Pcg32::seed_from_u64(0xA110D);
+    let x24 = Arc::new(synth::gaussian_blobs(&mut rng24, 2000, 4, 24, 3.0, 0.3));
+
+    let cases: Vec<(&str, ClusterRequest)> = vec![
+        (
+            "hamerly",
+            ClusterRequest::builder()
+                .inline(Arc::clone(&x))
+                .k(8)
+                .threads(1)
+                .seed(9)
+                .build()
+                .unwrap(),
+        ),
+        (
+            "elkan",
+            ClusterRequest::builder()
+                .inline(Arc::clone(&x))
+                .k(8)
+                .engine(EngineKind::Elkan)
+                .threads(1)
+                .seed(9)
+                .build()
+                .unwrap(),
+        ),
+        (
+            "yinyang",
+            ClusterRequest::builder()
+                .inline(Arc::clone(&x24))
+                .k(24)
+                .engine(EngineKind::Yinyang)
+                .threads(1)
+                .seed(9)
+                .build()
+                .unwrap(),
+        ),
+        (
+            "minibatch",
+            ClusterRequest::builder()
+                .inline(Arc::clone(&x))
+                .k(8)
+                .engine(EngineKind::MiniBatch)
+                .accel(Acceleration::DynamicM(2))
+                .chunk_size(256)
+                .threads(1)
+                .seed(9)
+                .build()
+                .unwrap(),
+        ),
+    ];
+    for (label, request) in cases {
+        let (cold_calls, cold_bytes, warm_calls, warm_bytes) = measure(request, label);
+        // Sharply reduced allocator traffic: everything that remains is a
+        // few per-call transients, so a warm run must stay well under the
+        // cold run on both axes (the runs are deterministic, so these
+        // bounds are exact regression checks, not timing-dependent ones).
+        assert!(
+            warm_calls * 2 < cold_calls,
+            "{label}: warm rerun made {warm_calls} allocations vs {cold_calls} cold — \
+             workspace reuse regressed"
+        );
+        assert!(
+            warm_bytes * 4 < cold_bytes,
+            "{label}: warm rerun allocated {warm_bytes} bytes vs {cold_bytes} cold — \
+             workspace reuse regressed"
+        );
+    }
 }

@@ -78,6 +78,85 @@ fn precision_threads_through_the_coordinator() {
 }
 
 #[test]
+fn priority_jobs_jump_the_queue() {
+    // One worker, held busy by a slow job while we queue a slow
+    // low-priority job and then a fast high-priority one: the worker must
+    // pick the high-priority job first, so when it completes the
+    // low-priority job cannot have finished.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 8,
+        solver_threads: 1,
+        artifact_dir: aakm::runtime::default_artifact_dir(),
+    });
+    let mut rng = Pcg32::seed_from_u64(60);
+    let slow_data = Arc::new(synth::noisy_curve(&mut rng, 40_000, 4, 0.3));
+    let slow = |seed: u64, priority: i32| {
+        ClusterRequest::builder()
+            .inline(Arc::clone(&slow_data))
+            .k(16)
+            .seed(seed)
+            .priority(priority)
+            .build()
+            .unwrap()
+    };
+    let fast_data = Arc::new(synth::gaussian_blobs(&mut rng, 500, 3, 4, 2.5, 0.2));
+    let fast = ClusterRequest::builder()
+        .inline(fast_data)
+        .k(4)
+        .seed(1)
+        .priority(100)
+        .build()
+        .unwrap();
+    let h_running = coord.submit(slow(1, 0)).unwrap();
+    while h_running.status() == JobStatus::Queued {
+        std::thread::yield_now();
+    }
+    // Both now sit in the queue; the high-priority job was submitted last.
+    let h_low = coord.submit(slow(2, 0)).unwrap();
+    let h_high = coord.submit(fast).unwrap();
+    let high_result = h_high.wait();
+    assert!(high_result.outcome.is_ok(), "{:?}", high_result.outcome.err());
+    assert_ne!(
+        h_low.status(),
+        JobStatus::Done,
+        "low-priority job finished before the high-priority one was served"
+    );
+    // Don't burn CI time on the leftovers.
+    h_low.cancel();
+    h_running.cancel();
+    let _ = h_low.wait();
+    let _ = h_running.wait();
+    coord.shutdown();
+}
+
+#[test]
+fn minibatch_jobs_run_through_the_service() {
+    // EngineKind::MiniBatch routes coordinator jobs through the streaming
+    // solver; the outcome carries epoch counts and finite energies, and
+    // the engine metadata echoes the request.
+    let coord = coordinator();
+    let mut rng = Pcg32::seed_from_u64(70);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 3000, 4, 5, 3.0, 0.2));
+    let request = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(5)
+        .seed(4)
+        .engine(EngineKind::MiniBatch)
+        .chunk_size(512)
+        .build()
+        .unwrap();
+    let handle = coord.submit(request).unwrap();
+    let result = handle.wait();
+    let out = result.outcome.as_ref().unwrap_or_else(|e| panic!("minibatch job: {e}"));
+    assert_eq!(out.engine, EngineKind::MiniBatch);
+    assert!(out.iterations >= 1, "at least one epoch");
+    assert!(out.energy.is_finite() && out.mse > 0.0);
+    assert_eq!(out.centroids.n(), 5);
+    coord.shutdown();
+}
+
+#[test]
 fn cancellation_reaches_a_running_job() {
     // One worker, one long job: cancel while it runs; the worker must
     // stop at an iteration boundary and report a typed Cancelled outcome.

@@ -1,0 +1,254 @@
+//! Integration: the streaming mini-batch engine end to end — chunk-source
+//! properties (streaming ≡ slicing), shard round trips, mini-batch vs
+//! full-batch quality parity, and the session/request plumbing for
+//! `EngineKind::MiniBatch` + `DataSource::Shard`.
+
+use aakm::config::{Acceleration, EngineKind};
+use aakm::data::chunks::{collect_source, ChunkSource};
+use aakm::data::{synth, DataMatrix, InMemoryChunks, MmapShardSource, ShardWriter, SynthChunks};
+use aakm::rng::Pcg32;
+use aakm::{ClusterRequest, ClusterSession};
+use std::sync::Arc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("aakm_stream_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Property: streaming an in-memory matrix chunk-by-chunk reproduces
+/// exactly the chunks of direct row slicing, for arbitrary chunk sizes,
+/// across rewinds, and identically through the shard writer + mmap path.
+#[test]
+fn chunked_streaming_equals_direct_slicing() {
+    let mut rng = Pcg32::seed_from_u64(0x51_1CE);
+    // Sizes chosen to exercise partial final chunks and chunk == n edges.
+    for &(n, d) in &[(1usize, 3usize), (97, 2), (1000, 5)] {
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, n, d, 3.min(n), 2.0, 0.3));
+        let shard_path = tmp(&format!("prop_{n}x{d}.fv"));
+        let mut w = ShardWriter::create(&shard_path, d).unwrap();
+        let mut feeder = InMemoryChunks::new(Arc::clone(&x));
+        let mut buf = DataMatrix::zeros(0, d);
+        while feeder.next_chunk(53, &mut buf).unwrap() > 0 {
+            w.append(&buf).unwrap();
+        }
+        assert_eq!(w.finish().unwrap() as usize, n);
+
+        for chunk_rows in [1usize, 13, 64, n, n + 7] {
+            let mut mem = InMemoryChunks::new(Arc::clone(&x));
+            let mut shard = MmapShardSource::open(&shard_path).unwrap();
+            for pass in 0..2 {
+                let mut mem_buf = DataMatrix::zeros(0, d);
+                let mut shard_buf = DataMatrix::zeros(0, d);
+                let mut row = 0usize;
+                loop {
+                    let got_mem = mem.next_chunk(chunk_rows, &mut mem_buf).unwrap();
+                    let got_shard = shard.next_chunk(chunk_rows, &mut shard_buf).unwrap();
+                    assert_eq!(
+                        got_mem, got_shard,
+                        "n={n} chunk={chunk_rows} pass={pass}: chunk sizes diverge"
+                    );
+                    if got_mem == 0 {
+                        break;
+                    }
+                    // Chunking must be exactly direct slicing of the rows.
+                    for i in 0..got_mem {
+                        assert_eq!(
+                            mem_buf.row(i),
+                            x.row(row + i),
+                            "n={n} chunk={chunk_rows} pass={pass} row={}",
+                            row + i
+                        );
+                        assert_eq!(shard_buf.row(i), x.row(row + i));
+                    }
+                    row += got_mem;
+                }
+                assert_eq!(row, n, "every row exactly once");
+                mem.rewind();
+                shard.rewind();
+            }
+        }
+    }
+}
+
+/// Mini-batch parity on tier-1 synthetic shapes: the streamed solver's
+/// final energy lands within 5% of the full-batch Lloyd baseline
+/// (`run_lloyd_baseline`) started from the same seeding.
+#[test]
+#[allow(deprecated)]
+fn minibatch_energy_within_5pct_of_lloyd_baseline() {
+    use aakm::init::{seed_centroids, InitMethod};
+    // (n, d, k): small/medium blob shapes from the tier-1 tests.
+    for &(seed, n, d, k) in &[(1u64, 3000usize, 4usize, 6usize), (2, 5000, 8, 10)] {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, n, d, k, 3.0, 0.2));
+        let mut srng = Pcg32::seed_from_u64(seed);
+        let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut srng);
+        let lloyd = aakm::kmeans::run_lloyd_baseline(&x, c0.clone());
+        assert!(lloyd.converged);
+
+        let request = ClusterRequest::builder()
+            .inline(Arc::clone(&x))
+            .k(k)
+            .initial_centroids(Arc::new(c0))
+            .engine(EngineKind::MiniBatch)
+            .accel(Acceleration::DynamicM(2))
+            .chunk_size(512)
+            .threads(1)
+            .seed(seed)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(request).unwrap();
+        let report = session.run().unwrap();
+        assert!(report.iterations >= 1, "shape {n}x{d} k={k}: no epochs ran");
+        assert!(
+            report.energy <= 1.05 * lloyd.energy,
+            "shape {n}x{d} k={k}: minibatch energy {} vs lloyd {} exceeds the 5% band",
+            report.energy,
+            lloyd.energy
+        );
+    }
+}
+
+/// A shard-backed streaming session clusters out-of-core data (only one
+/// chunk resident at a time) and reruns deterministically on the warm
+/// workspace; Anderson-off runs flow through the same path.
+#[test]
+fn shard_session_streams_and_reruns() {
+    // Write a shard from a generator, never materializing the dataset.
+    let d = 6usize;
+    let shard_path = tmp("session_shard.fv");
+    let mut gen = SynthChunks::new(33, 20_000, d, 8, 2.5, 0.25);
+    let mut w = ShardWriter::create(&shard_path, d).unwrap();
+    let mut buf = DataMatrix::zeros(0, d);
+    while gen.next_chunk(1024, &mut buf).unwrap() > 0 {
+        w.append(&buf).unwrap();
+    }
+    assert_eq!(w.finish().unwrap(), 20_000);
+
+    for accel in [Acceleration::DynamicM(2), Acceleration::None] {
+        let request = ClusterRequest::builder()
+            .shard(&shard_path)
+            .k(8)
+            .engine(EngineKind::MiniBatch)
+            .accel(accel)
+            .chunk_size(2048)
+            .threads(1)
+            .seed(5)
+            .build()
+            .unwrap();
+        let mut session = ClusterSession::open(request).unwrap();
+        let r1 = session.run().unwrap();
+        assert!(r1.iterations >= 1, "{accel:?}");
+        assert!(r1.energy.is_finite() && r1.energy > 0.0);
+        assert_eq!(r1.centroids.n(), 8);
+        assert!(r1.assignment.is_empty(), "streamed runs carry no assignment");
+        let (it1, e1) = (r1.iterations, r1.energy);
+        session.recycle(r1);
+        let r2 = session.run().unwrap();
+        assert_eq!(r2.iterations, it1, "{accel:?}: warm rerun must be identical");
+        assert_eq!(r2.energy.to_bits(), e1.to_bits());
+        assert!(
+            !session.workspace().last_run_rebuilt_scratch(),
+            "{accel:?}: warm shard rerun must reuse the workspace"
+        );
+    }
+}
+
+/// Shard shape validation is typed: oversized k and mismatched explicit
+/// centroids are rejected before any clustering happens.
+#[test]
+fn shard_session_validates_shapes() {
+    let shard_path = tmp("validate_shard.fv");
+    let mut w = ShardWriter::create(&shard_path, 3).unwrap();
+    w.append(&DataMatrix::from_rows(&[&[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0]])).unwrap();
+    w.finish().unwrap();
+
+    let too_many = ClusterRequest::builder()
+        .shard(&shard_path)
+        .k(5)
+        .engine(EngineKind::MiniBatch)
+        .threads(1)
+        .build()
+        .unwrap();
+    let mut session = ClusterSession::open(too_many).unwrap();
+    match session.run() {
+        Err(aakm::ClusterError::InvalidRequest { field: "k", .. }) => {}
+        other => panic!("expected a typed k error, got ok={}", other.is_ok()),
+    }
+
+    let wrong_d = ClusterRequest::builder()
+        .shard(&shard_path)
+        .k(2)
+        .engine(EngineKind::MiniBatch)
+        .initial_centroids(Arc::new(DataMatrix::zeros(2, 4)))
+        .threads(1)
+        .build()
+        .unwrap();
+    let mut session = ClusterSession::open(wrong_d).unwrap();
+    match session.run() {
+        Err(aakm::ClusterError::InvalidRequest { field: "init", .. }) => {}
+        other => panic!("expected a typed init error, got ok={}", other.is_ok()),
+    }
+
+    let missing = ClusterRequest::builder()
+        .shard("/no/such/dir/missing.fv")
+        .k(2)
+        .engine(EngineKind::MiniBatch)
+        .threads(1)
+        .build()
+        .unwrap();
+    let mut session = ClusterSession::open(missing).unwrap();
+    assert!(matches!(session.run(), Err(aakm::ClusterError::Data { .. })));
+}
+
+/// The same generator stream clusters identically whether it is written
+/// to a shard first or streamed straight from memory — the chunk layer
+/// does not change the data.
+#[test]
+fn generator_and_shard_streams_agree() {
+    let d = 4usize;
+    let mut gen = SynthChunks::new(77, 6000, d, 5, 3.0, 0.2);
+    let collected = collect_source(&mut gen, 512, usize::MAX).unwrap();
+    assert_eq!(collected.n(), 6000);
+    let shard_path = tmp("agree_shard.fv");
+    let mut w = ShardWriter::create(&shard_path, d).unwrap();
+    w.append(&collected).unwrap();
+    w.finish().unwrap();
+
+    let run = |request: ClusterRequest| {
+        let mut session = ClusterSession::open(request).unwrap();
+        session.run().unwrap()
+    };
+    let inline_req = ClusterRequest::builder()
+        .inline(Arc::new(collected.clone()))
+        .k(5)
+        .engine(EngineKind::MiniBatch)
+        .chunk_size(600)
+        .threads(1)
+        .seed(9)
+        .build()
+        .unwrap();
+    let shard_req = ClusterRequest::builder()
+        .shard(&shard_path)
+        .k(5)
+        .engine(EngineKind::MiniBatch)
+        .chunk_size(600)
+        .threads(1)
+        .seed(9)
+        .build()
+        .unwrap();
+    let inline = run(inline_req);
+    let shard = run(shard_req);
+    // Same data, same chunking, same seeding → identical clustering. The
+    // only difference is how the initial centroids are seeded (full
+    // matrix vs bounded prefix), so compare energies rather than bits.
+    assert!(inline.energy.is_finite() && shard.energy.is_finite());
+    let rel = (inline.energy - shard.energy).abs() / inline.energy.max(1e-12);
+    assert!(
+        rel < 0.10,
+        "inline {} vs shard {} (rel {rel})",
+        inline.energy,
+        shard.energy
+    );
+}

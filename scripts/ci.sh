@@ -60,3 +60,27 @@ else
   exit 1
 fi
 rm -f "$probe_log"
+
+# Quick-mode mini-batch smoke: run the streaming sweep on one small shape
+# and fail if the machine-readable trail is missing any engine variant
+# (Lloyd target, minibatch+AA, minibatch plain) or the epochs-to-target
+# columns. Same probe pattern as perf_hotpath above.
+mb_probe_log=$(mktemp)
+if PERF_MINIBATCH_QUICK=1 cargo bench --bench perf_minibatch --no-run >"$mb_probe_log" 2>&1; then
+  PERF_MINIBATCH_QUICK=1 cargo bench --bench perf_minibatch
+  for key in lloyd_energy minibatch_aa minibatch_plain epochs_to_target \
+             aa_beats_plain; do
+    if ! grep -q "\"$key\"" BENCH_minibatch.json; then
+      echo "ci.sh: BENCH_minibatch.json is missing '$key' entries" >&2
+      exit 1
+    fi
+  done
+  echo "ci.sh: perf_minibatch smoke leg OK (BENCH_minibatch.json has all engine variants)"
+elif grep -qi "no bench target named" "$mb_probe_log"; then
+  echo "ci.sh: perf_minibatch bench target not declared in this manifest; skipping smoke leg" >&2
+else
+  echo "ci.sh: perf_minibatch bench failed to build:" >&2
+  cat "$mb_probe_log" >&2
+  exit 1
+fi
+rm -f "$mb_probe_log"
