@@ -41,6 +41,7 @@ fn minibatch_cfg(accel: Acceleration, chunk: usize, max_epochs: usize) -> MiniBa
         // Tight tolerance: the sweep measures epochs-to-target, so the
         // run must not plateau-stop above the target band.
         convergence_tol: 1e-7,
+        ..MiniBatchConfig::default()
     }
 }
 

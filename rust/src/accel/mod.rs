@@ -1,0 +1,687 @@
+//! The shared safeguarded-Anderson fixed-point driver.
+//!
+//! The paper describes *one* scheme — Anderson extrapolation of a
+//! monotone fixed-point map, guarded by the map's own merit energy, with
+//! the dynamic-`m` trust-region rule — yet the repo grew three hand-rolled
+//! copies of that loop (the full-batch accelerated solver, the plain Lloyd
+//! baseline, and the streaming mini-batch epoch loop). This module is the
+//! single audited implementation: [`FixedPointDriver`] owns the iteration
+//! loop — history management through
+//! [`AndersonAccelerator`](crate::anderson::AndersonAccelerator) and
+//! [`MController`](crate::anderson::MController), the energy-guarded
+//! accept/reject decision, restart-after-rejections, per-iteration trace
+//! recording, [`Observer`] emission and cancel/time-budget bookkeeping —
+//! parameterized over a small [`Step`] trait that supplies the map
+//! application itself.
+//!
+//! Two guard disciplines cover every solver in the crate
+//! ([`GuardMode`]):
+//!
+//! * **Deferred** (Algorithm 1, the full-batch solver): a proposal's
+//!   energy is measured by the *next* iteration's fused assign+update
+//!   pass, so the guard costs nothing extra; a rejected proposal reverts
+//!   to the retained plain iterate (and the assignment engine rolls its
+//!   bound state back to the pre-jump checkpoint).
+//! * **Immediate** (the streaming epoch loop): one application of the map
+//!   is a whole pass over the data, far too expensive to spend on an
+//!   unguarded extrapolation, so the candidate's energy is measured by a
+//!   dedicated checkpoint pass and the plain iterate is kept on
+//!   non-decrease. Repeated rejections restart the Anderson history
+//!   (epoch-level residuals are noisy; a stale history that keeps
+//!   proposing uphill is worse than starting fresh).
+//!
+//! A new solver shape plugs in by implementing [`Step`]: provide the map
+//! application ([`Step::advance`]), the revert/measure primitives for the
+//! guard discipline it uses, and the driver contributes the entire
+//! safeguarded-AA superstructure — which is how the three existing loops
+//! ([`crate::kmeans::Solver`]'s two paths and
+//! [`crate::stream::MiniBatchSolver`]) are built.
+
+use crate::anderson::{AndersonAccelerator, MController};
+use crate::config::Acceleration;
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::metrics::{PhaseTimer, Stopwatch};
+use crate::observe::{CancelToken, IterationInfo, Observer, ObserverControl};
+use std::time::Duration;
+
+/// The run's interruption sources, bundled: wall-clock budget plus the
+/// cooperative [`CancelToken`]. Steps and the driver consult the same
+/// value, so "what counts as interrupted" cannot drift between loops.
+#[derive(Clone, Copy)]
+pub struct Budget<'a> {
+    sw: &'a Stopwatch,
+    limit: Option<Duration>,
+    cancel: &'a CancelToken,
+}
+
+impl<'a> Budget<'a> {
+    /// Bundle a running stopwatch, an optional wall-clock limit and a
+    /// cancel token.
+    pub fn new(sw: &'a Stopwatch, limit: Option<Duration>, cancel: &'a CancelToken) -> Self {
+        Self { sw, limit, cancel }
+    }
+
+    /// `Some(cancelled)` when the run must stop — `true` for an explicit
+    /// cancellation, `false` for an exhausted time budget — `None` to
+    /// keep iterating. Cancellation wins when both apply.
+    pub fn interrupted(&self) -> Option<bool> {
+        if self.cancel.is_cancelled() {
+            return Some(true);
+        }
+        if self.limit.is_some_and(|l| self.sw.elapsed() >= l) {
+            return Some(false);
+        }
+        None
+    }
+
+    /// Whether the cancel token has tripped (used to attribute an
+    /// interruption observed elsewhere, e.g. inside a checkpoint pass).
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
+/// Outcome of one application of the fixed-point map ([`Step::advance`]).
+pub enum Advance {
+    /// The map was applied; the merit energy of the resulting iterate is
+    /// attached (`None` only for un-accelerated runs that were not asked
+    /// to measure it).
+    Evaluated(Option<f64>),
+    /// The map's own convergence criterion fired (same assignment twice
+    /// for the full-batch solvers; an empty source for the epoch step).
+    Converged,
+    /// Deferred-guard only: an accelerated iterate reproduced the
+    /// previous assignment. The step reverted to the plain iterate and
+    /// rolled the engine back — re-run the check without counting an
+    /// iteration, per the paper's "fall-back iterate" convergence
+    /// narrative.
+    RetryPlain,
+    /// The budget tripped at a step-defined boundary (`cancelled` is
+    /// [`Budget::interrupted`]'s attribution). The step has already
+    /// restored a consistent iterate.
+    Interrupted {
+        /// `true` for an explicit cancellation, `false` for budget.
+        cancelled: bool,
+    },
+    /// The data source failed mid-pass (streaming). Carried in the
+    /// outcome rather than thrown so callers can restore their buffers
+    /// before surfacing it.
+    Failed(ClusterError),
+}
+
+/// Outcome of reverting a rejected deferred-guard proposal
+/// ([`Step::reject`]).
+pub enum Rejection {
+    /// Reverted to the plain iterate; its (re-measured) energy.
+    Reverted(f64),
+    /// The reverted iterate reproduced the previous assignment — the
+    /// fall-back Lloyd step changed nothing, which is Algorithm 1's
+    /// terminal state. The probe is not a productive iteration.
+    Converged,
+}
+
+/// When the energy guard measures an accelerated candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardMode {
+    /// Algorithm 1 (full batch): the candidate becomes the next iterate
+    /// unguarded, and the next [`Step::advance`] measures it for free;
+    /// non-decrease triggers [`Step::reject`].
+    Deferred,
+    /// Streaming: the candidate is measured immediately with
+    /// [`Step::evaluate_candidate`] and only committed
+    /// ([`Step::accept_candidate`]) when it strictly decreases the
+    /// checkpoint energy.
+    Immediate,
+}
+
+/// What the driver needs to know about a run, beyond the step itself.
+pub struct DriverConfig {
+    /// Acceleration mode (window size + dynamic-`m` on/off); `None`
+    /// disables the accelerator, the controller and both guards.
+    pub accel: Acceleration,
+    /// History cap m̄ for the dynamic-`m` controller.
+    pub m_max: usize,
+    /// ε₁ from Algorithm 1 (shrink threshold).
+    pub epsilon1: f64,
+    /// ε₂ from Algorithm 1 (grow threshold).
+    pub epsilon2: f64,
+    /// Iteration (or epoch) cap.
+    pub max_iters: usize,
+    /// Record the per-iteration energy trace.
+    pub record_trace: bool,
+    /// Also record the per-iteration `m` trace (the full-batch Lloyd
+    /// baseline records energies only; the epoch step records both even
+    /// for un-accelerated runs, where `m` is constant 0).
+    pub trace_m: bool,
+    /// Guard discipline (see [`GuardMode`]).
+    pub guard: GuardMode,
+    /// Immediate-guard only: drop the Anderson history after this many
+    /// consecutive rejections.
+    pub restart_after_rejects: Option<u32>,
+    /// Check the budget at the top of every driver iteration. The Lloyd
+    /// baseline turns this off: it checks inside [`Step::advance`],
+    /// *after* the assignment that may prove convergence, so a cancelled
+    /// run still returns a consistent `(centroids, assignment)` pair.
+    pub check_at_top: bool,
+}
+
+/// What one driver run produced; the caller combines it with its own
+/// buffers (centroids, assignment, phase timings) into a
+/// [`crate::kmeans::RunReport`].
+pub struct DriverOutcome {
+    /// Productive iterations (epochs for the streaming step).
+    pub iterations: usize,
+    /// Iterations whose accelerated candidate passed the energy guard.
+    pub accepted: usize,
+    /// Whether the step's convergence criterion fired.
+    pub converged: bool,
+    /// Whether a [`CancelToken`] ended the run.
+    pub cancelled: bool,
+    /// Whether the time budget or an [`Observer`] ended the run.
+    pub stopped_early: bool,
+    /// Per-iteration energies (only when `record_trace`).
+    pub energy_trace: Vec<f64>,
+    /// Per-iteration `m` values (only when `record_trace && trace_m`).
+    pub m_trace: Vec<usize>,
+    /// The last committed iterate's energy (`+inf` before the first);
+    /// the epoch step's exact checkpoint energy for its final state.
+    pub last_energy: f64,
+    /// A carried data-source failure (streaming); the caller restores
+    /// its buffers, then surfaces this.
+    pub error: Option<ClusterError>,
+}
+
+/// One solver shape, pluggable into the [`FixedPointDriver`]: the
+/// fixed-point map application plus the revert/measure primitives of its
+/// guard discipline. Everything else — accept/reject decisions, `m`
+/// control, history restarts, traces, observers, budgets — lives in the
+/// driver, once.
+pub trait Step {
+    /// Apply the fixed-point map once (one assign+update for the
+    /// full-batch solvers, one training pass + energy checkpoint for the
+    /// epoch step) and report what happened.
+    fn advance(&mut self) -> Advance;
+
+    /// Deferred guard: the outstanding candidate failed to decrease the
+    /// energy. Revert to the retained plain iterate (rolling engine
+    /// bound state back to its checkpoint) and re-measure.
+    fn reject(&mut self) -> Rejection {
+        unreachable!("this step does not use the deferred guard")
+    }
+
+    /// Form the Anderson residual, ask the accelerator for a proposal
+    /// (using at most `m_use` history columns), and stage it. Returns
+    /// whether the proposal actually differs from the plain iterate.
+    /// Deferred-guard steps checkpoint their engine's bound state here so
+    /// a rejected jump can roll back.
+    fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool;
+
+    /// Immediate guard: measure the staged candidate's energy.
+    /// `Ok(None)` means the measurement was interrupted — keep the plain
+    /// iterate and let the next boundary check end the run.
+    fn evaluate_candidate(&mut self) -> Result<Option<f64>, ClusterError> {
+        unreachable!("this step does not use the immediate guard")
+    }
+
+    /// Immediate guard: commit the staged candidate as the new iterate.
+    fn accept_candidate(&mut self) {
+        unreachable!("this step does not use the immediate guard")
+    }
+
+    /// An interruption or observer stop landed while an unguarded
+    /// candidate was outstanding (deferred guard): restore the plain
+    /// iterate so the returned state is always guarded.
+    fn discard_candidate(&mut self) {}
+
+    /// Step-specific plateau convergence, checked after the observer
+    /// using the previous (`e_prev`) and current (`e`) committed
+    /// energies. The full-batch solvers converge on repeated assignments
+    /// inside [`Step::advance`] instead and return `false` here.
+    fn plateaued(&self, _e_prev: f64, _e: f64) -> bool {
+        false
+    }
+
+    /// The centroids and phase timings shown to the [`Observer`] (the
+    /// proposed next iterate for deferred-guard steps, the committed
+    /// epoch iterate for the streaming step).
+    fn observe(&self) -> (&DataMatrix, &PhaseTimer);
+}
+
+/// The single safeguarded-Anderson iteration loop (see the module docs).
+pub struct FixedPointDriver<'a> {
+    cfg: DriverConfig,
+    acc: Option<&'a mut AndersonAccelerator>,
+    budget: Budget<'a>,
+    energy_trace: Vec<f64>,
+    m_trace: Vec<usize>,
+}
+
+impl<'a> FixedPointDriver<'a> {
+    /// Driver over a config, an optional accelerator (required whenever
+    /// `cfg.accel` is not `Acceleration::None` — typically borrowed from
+    /// the workspace scratch so history columns stay warm across runs)
+    /// and the run's budget. The trace buffers are taken over (and handed
+    /// back through the outcome) so callers can pool them.
+    pub fn new(
+        cfg: DriverConfig,
+        acc: Option<&'a mut AndersonAccelerator>,
+        budget: Budget<'a>,
+        energy_trace: Vec<f64>,
+        m_trace: Vec<usize>,
+    ) -> Self {
+        Self { cfg, acc, budget, energy_trace, m_trace }
+    }
+
+    /// Run the loop to convergence, the iteration cap, the budget, or an
+    /// observer stop.
+    pub fn run(mut self, step: &mut dyn Step, observer: &mut dyn Observer) -> DriverOutcome {
+        let (use_aa, m0, dynamic) = match self.cfg.accel {
+            Acceleration::None => (false, 0, false),
+            Acceleration::FixedM(m) => (true, m, false),
+            Acceleration::DynamicM(m) => (true, m, true),
+        };
+        let mut controller = use_aa.then(|| {
+            MController::new(
+                m0.min(self.cfg.m_max),
+                self.cfg.m_max,
+                self.cfg.epsilon1,
+                self.cfg.epsilon2,
+            )
+        });
+        let mut out = DriverOutcome {
+            iterations: 0,
+            accepted: 0,
+            converged: false,
+            cancelled: false,
+            stopped_early: false,
+            energy_trace: self.energy_trace,
+            m_trace: self.m_trace,
+            last_energy: f64::INFINITY,
+            error: None,
+        };
+        let mut e_prev = f64::INFINITY; // E^{t-1}
+        let mut decrease_prev = f64::INFINITY; // E^{t-2} − E^{t-1}
+        // Deferred guard: whether the current iterate is an unguarded
+        // accelerated proposal from the previous iteration.
+        let mut outstanding = false;
+        let mut rejects = 0u32;
+        let restart_after = self.cfg.restart_after_rejects.unwrap_or(u32::MAX);
+
+        for _t in 0..self.cfg.max_iters {
+            let at_top = if self.cfg.check_at_top {
+                self.budget.interrupted()
+            } else {
+                None
+            };
+            if let Some(cancelled) = at_top {
+                if outstanding {
+                    step.discard_candidate();
+                }
+                out.cancelled = cancelled;
+                out.stopped_early = !cancelled;
+                break;
+            }
+            let mut energy = match step.advance() {
+                Advance::Evaluated(e) => e,
+                Advance::Converged => {
+                    out.converged = true;
+                    break;
+                }
+                Advance::RetryPlain => {
+                    outstanding = false;
+                    continue;
+                }
+                Advance::Interrupted { cancelled } => {
+                    out.cancelled = cancelled;
+                    out.stopped_early = !cancelled;
+                    break;
+                }
+                Advance::Failed(e) => {
+                    out.error = Some(e);
+                    break;
+                }
+            };
+            out.iterations += 1;
+            let mut accepted_this = false;
+            let mut candidate = false;
+            if use_aa {
+                let mut e = energy.expect("accelerated steps always measure energy");
+                let controller = controller.as_mut().expect("accelerated runs have a controller");
+                // Lines 8–12: adjust m from the energy-decrease ratio.
+                if dynamic {
+                    controller.adjust(e_prev - e, decrease_prev);
+                }
+                let acc = self.acc.as_deref_mut().expect("accelerated runs carry an accelerator");
+                match self.cfg.guard {
+                    // Lines 13–15: the previous proposal is measured by
+                    // this iteration's pass; revert on non-decrease.
+                    GuardMode::Deferred => {
+                        if e >= e_prev {
+                            match step.reject() {
+                                Rejection::Converged => {
+                                    // Terminal probe, not a productive
+                                    // iteration.
+                                    out.iterations -= 1;
+                                    out.converged = true;
+                                    break;
+                                }
+                                Rejection::Reverted(e_plain) => e = e_plain,
+                            }
+                        } else if outstanding {
+                            out.accepted += 1;
+                            accepted_this = true;
+                        }
+                        // Lines 17–19: stage the next proposal (unguarded
+                        // until the next pass measures it).
+                        outstanding = step.propose(acc, controller.m());
+                        candidate = outstanding;
+                    }
+                    // Immediate guard: measure the fresh proposal with a
+                    // dedicated pass; commit only on strict decrease.
+                    GuardMode::Immediate => {
+                        candidate = step.propose(acc, controller.m());
+                        if candidate {
+                            match step.evaluate_candidate() {
+                                Ok(Some(e_cand)) if e_cand < e => {
+                                    step.accept_candidate();
+                                    e = e_cand;
+                                    out.accepted += 1;
+                                    accepted_this = true;
+                                    rejects = 0;
+                                }
+                                Ok(Some(_)) => {
+                                    rejects += 1;
+                                    if rejects >= restart_after {
+                                        acc.reset();
+                                        rejects = 0;
+                                    }
+                                }
+                                // Interrupted mid-guard: keep the plain
+                                // iterate (its energy is exact); the next
+                                // boundary check ends the run.
+                                Ok(None) => {}
+                                Err(err) => {
+                                    out.error = Some(err);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                energy = Some(e);
+            }
+            if self.cfg.record_trace {
+                out.energy_trace.push(energy.expect("record_trace runs measure energy"));
+                if self.cfg.trace_m {
+                    out.m_trace.push(controller.as_ref().map_or(0, MController::m));
+                }
+            }
+            // Plateau test uses the *previous* committed energy; compute
+            // it before rolling e_prev forward.
+            let plateaued = match energy {
+                Some(e) => step.plateaued(e_prev, e),
+                None => false,
+            };
+            if let Some(e) = energy {
+                decrease_prev = e_prev - e;
+                e_prev = e;
+            }
+            let (centroids, phases) = step.observe();
+            let control = observer.on_iteration(&IterationInfo {
+                iteration: out.iterations,
+                energy,
+                m: controller.as_ref().map_or(0, MController::m),
+                accelerated_candidate: candidate,
+                accepted: accepted_this,
+                centroids,
+                phases,
+            });
+            if control == ObserverControl::Stop {
+                if outstanding {
+                    step.discard_candidate();
+                }
+                out.stopped_early = true;
+                break;
+            }
+            if plateaued {
+                out.converged = true;
+                break;
+            }
+        }
+        out.last_energy = e_prev;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observe::NoopObserver;
+
+    /// A scalar contraction step x ← a·x + b with energy |x − fix|²,
+    /// exercising the deferred guard without any engine machinery.
+    struct Contraction {
+        a: f64,
+        b: f64,
+        x: f64, // current iterate (possibly an unguarded proposal)
+        g: f64, // retained plain iterate G(x_prev)
+        g_next: f64,
+        centroids: DataMatrix,
+        phases: PhaseTimer,
+        f_t: Vec<f64>,
+    }
+
+    impl Contraction {
+        fn new(a: f64, b: f64, x0: f64) -> Self {
+            let g = a * x0 + b;
+            Self {
+                a,
+                b,
+                x: g,
+                g,
+                g_next: 0.0,
+                centroids: DataMatrix::zeros(1, 1),
+                phases: PhaseTimer::new(),
+                f_t: vec![0.0],
+            }
+        }
+
+        fn fixed_point(&self) -> f64 {
+            self.b / (1.0 - self.a)
+        }
+
+        fn energy_of(&self, x: f64) -> f64 {
+            let d = x - self.fixed_point();
+            d * d
+        }
+    }
+
+    impl Step for Contraction {
+        fn advance(&mut self) -> Advance {
+            let e = self.energy_of(self.x);
+            if e < 1e-24 {
+                return Advance::Converged;
+            }
+            self.g_next = self.a * self.x + self.b;
+            Advance::Evaluated(Some(e))
+        }
+
+        fn reject(&mut self) -> Rejection {
+            std::mem::swap(&mut self.x, &mut self.g);
+            let e = self.energy_of(self.x);
+            self.g_next = self.a * self.x + self.b;
+            Rejection::Reverted(e)
+        }
+
+        fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool {
+            std::mem::swap(&mut self.g, &mut self.g_next);
+            self.f_t[0] = self.g - self.x;
+            let g = [self.g];
+            let mut out = [0.0];
+            let candidate = acc.propose_into(&g, &self.f_t, m_use, &mut out);
+            self.x = out[0];
+            candidate
+        }
+
+        fn discard_candidate(&mut self) {
+            self.x = self.g;
+        }
+
+        fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+            (&self.centroids, &self.phases)
+        }
+    }
+
+    /// The un-accelerated shape (mirroring `LloydStep`): the step commits
+    /// its own next iterate inside `advance`, since the driver never
+    /// calls `propose` when acceleration is off.
+    struct PlainContraction {
+        a: f64,
+        b: f64,
+        x: f64,
+        centroids: DataMatrix,
+        phases: PhaseTimer,
+    }
+
+    impl Step for PlainContraction {
+        fn advance(&mut self) -> Advance {
+            let fix = self.b / (1.0 - self.a);
+            let e = (self.x - fix) * (self.x - fix);
+            if e < 1e-24 {
+                return Advance::Converged;
+            }
+            self.x = self.a * self.x + self.b;
+            Advance::Evaluated(Some(e))
+        }
+
+        fn propose(&mut self, _acc: &mut AndersonAccelerator, _m_use: usize) -> bool {
+            unreachable!("plain iteration never proposes")
+        }
+
+        fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+            (&self.centroids, &self.phases)
+        }
+    }
+
+    fn driver_cfg(accel: Acceleration, max_iters: usize) -> DriverConfig {
+        DriverConfig {
+            accel,
+            m_max: 5,
+            epsilon1: 0.02,
+            epsilon2: 0.5,
+            max_iters,
+            record_trace: true,
+            trace_m: true,
+            guard: GuardMode::Deferred,
+            restart_after_rejects: None,
+            check_at_top: true,
+        }
+    }
+
+    #[test]
+    fn deferred_guard_converges_faster_than_plain_iteration() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        let budget = Budget::new(&sw, None, &token);
+        let mut acc = AndersonAccelerator::new(5, 1);
+        let mut step = Contraction::new(0.95, 1.0, 0.0);
+        let driver = FixedPointDriver::new(
+            driver_cfg(Acceleration::DynamicM(2), 10_000),
+            Some(&mut acc),
+            budget,
+            Vec::new(),
+            Vec::new(),
+        );
+        let out = driver.run(&mut step, &mut NoopObserver);
+        assert!(out.converged, "driver must reach the fixed point");
+        assert!(out.error.is_none());
+        // Plain iteration contracts by 0.95 per step: reaching 1e-12 of
+        // the gap takes hundreds of iterations; AA needs a handful.
+        assert!(
+            out.iterations < 100,
+            "AA should beat plain contraction: {} iterations",
+            out.iterations
+        );
+        assert!(out.accepted > 0, "some proposals must be accepted");
+        assert_eq!(out.energy_trace.len(), out.iterations);
+        assert_eq!(out.m_trace.len(), out.iterations);
+        // The guard's contract: committed energies never increase.
+        for w in out.energy_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "energy increased: {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn disabled_acceleration_is_plain_iteration() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        let budget = Budget::new(&sw, None, &token);
+        let mut step = PlainContraction {
+            a: 0.5,
+            b: 1.0,
+            x: 0.0,
+            centroids: DataMatrix::zeros(1, 1),
+            phases: PhaseTimer::new(),
+        };
+        let driver = FixedPointDriver::new(
+            driver_cfg(Acceleration::None, 200),
+            None,
+            budget,
+            Vec::new(),
+            Vec::new(),
+        );
+        let out = driver.run(&mut step, &mut NoopObserver);
+        assert!(out.converged);
+        assert_eq!(out.accepted, 0);
+        assert!(out.iterations > 10, "a 0.5-contraction needs dozens of halvings");
+        assert!(out.m_trace.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn cancelled_budget_stops_at_the_top() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        token.cancel();
+        let budget = Budget::new(&sw, None, &token);
+        let mut acc = AndersonAccelerator::new(5, 1);
+        let mut step = Contraction::new(0.9, 1.0, 0.0);
+        let driver = FixedPointDriver::new(
+            driver_cfg(Acceleration::DynamicM(2), 100),
+            Some(&mut acc),
+            budget,
+            Vec::new(),
+            Vec::new(),
+        );
+        let out = driver.run(&mut step, &mut NoopObserver);
+        assert!(out.cancelled && !out.stopped_early && !out.converged);
+        assert_eq!(out.iterations, 0);
+    }
+
+    #[test]
+    fn zero_time_budget_reports_stopped_early() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        let budget = Budget::new(&sw, Some(Duration::ZERO), &token);
+        let mut step = Contraction::new(0.9, 1.0, 0.0);
+        let driver = FixedPointDriver::new(
+            driver_cfg(Acceleration::None, 100),
+            None,
+            budget,
+            Vec::new(),
+            Vec::new(),
+        );
+        let out = driver.run(&mut step, &mut NoopObserver);
+        assert!(out.stopped_early && !out.cancelled);
+    }
+
+    #[test]
+    fn budget_attribution_prefers_cancellation() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        token.cancel();
+        let budget = Budget::new(&sw, Some(Duration::ZERO), &token);
+        assert_eq!(budget.interrupted(), Some(true));
+        assert!(budget.is_cancelled());
+    }
+}

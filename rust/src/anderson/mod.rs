@@ -13,8 +13,9 @@
 //!   (Algorithm 1 lines 8–12, §2.2).
 //!
 //! [`accelerated_fixed_point`] glues both onto an arbitrary map + energy
-//! function; the K-Means solver in [`crate::kmeans`] instantiates the same
-//! loop with engine-aware assignment reuse.
+//! function through the shared safeguarded loop in [`crate::accel`]; the
+//! K-Means solver in [`crate::kmeans`] drives the same
+//! [`crate::accel::FixedPointDriver`] with engine-aware assignment reuse.
 
 use crate::linalg::AndersonLsWorkspace;
 
@@ -46,6 +47,16 @@ impl MController {
     /// History cap m̄.
     pub fn m_max(&self) -> usize {
         self.m_max
+    }
+
+    /// Shrink threshold ε₁.
+    pub fn epsilon1(&self) -> f64 {
+        self.epsilon1
+    }
+
+    /// Grow threshold ε₂.
+    pub fn epsilon2(&self) -> f64 {
+        self.epsilon2
     }
 
     /// Apply Algorithm 1 lines 8–12 given the last two energy decreases.
@@ -202,59 +213,150 @@ pub struct FixedPointReport {
 /// Generic stabilized-AA driver for any fixed-point map `g` with a merit
 /// function `energy` that `g` monotonically decreases (the MM property
 /// Lloyd's algorithm has). Demonstrates that the paper's scheme transfers
-/// beyond K-Means; the K-Means solver uses a specialized loop.
+/// beyond K-Means — and runs on the same safeguarded-Anderson loop as the
+/// K-Means solvers ([`crate::accel::FixedPointDriver`], deferred guard):
+/// the map is wrapped as a tiny [`crate::accel::Step`] whose iterate
+/// converges when the residual `‖G(x) − x‖` drops below `tol`.
+///
+/// The `controller` supplies the dynamic-`m` parameters (`m`, m̄, ε₁, ε₂);
+/// the driver evolves its own copy following Algorithm 1's ordering
+/// (adjust from the measured energy, then guard), so the caller's value is
+/// read, never mutated. In the returned report, `iterations` counts
+/// completed guarded iterations (the terminal residual probe is not
+/// counted) and `trace` carries exactly one committed energy per counted
+/// iteration — the same accounting as [`crate::kmeans::RunReport`].
+///
+/// Cost note: the deferred guard measures a proposal with the *next* map
+/// application, so a rejected iteration applies `g` twice (once on the
+/// rejected proposal, once on the reverted plain iterate). The K-Means
+/// solvers avoid this by fusing energy and update into one data pass;
+/// a generic map has no such fusion to exploit.
 pub fn accelerated_fixed_point(
     x0: &[f64],
-    mut g: impl FnMut(&[f64]) -> Vec<f64>,
-    mut energy: impl FnMut(&[f64]) -> f64,
-    controller: &mut MController,
+    g: impl FnMut(&[f64]) -> Vec<f64>,
+    energy: impl FnMut(&[f64]) -> f64,
+    controller: &MController,
     max_iters: usize,
     tol: f64,
 ) -> FixedPointReport {
-    let dim = x0.len();
-    let mut acc = AndersonAccelerator::new(controller.m_max(), dim);
-    let mut x = x0.to_vec();
-    let mut g_x = g(&x);
-    let mut e_prev = f64::INFINITY;
-    let mut decrease_prev = f64::INFINITY;
-    let mut accepted = 0;
-    let mut trace = Vec::new();
-    let mut candidate_was_accel = false;
-    for t in 0..max_iters {
-        let mut e = energy(&x);
-        // Energy guard: revert to the plain iterate when the accelerated
-        // candidate failed to decrease.
-        if candidate_was_accel && e >= e_prev {
-            x = g_x.clone();
-            e = energy(&x);
-        } else if candidate_was_accel {
-            accepted += 1;
-        }
-        trace.push(e);
-        controller.adjust(e_prev - e, decrease_prev);
-        decrease_prev = e_prev - e;
-        e_prev = e;
-        g_x = g(&x);
-        let f_t: Vec<f64> = g_x.iter().zip(&x).map(|(a, b)| a - b).collect();
-        let res: f64 = f_t.iter().map(|v| v * v).sum::<f64>().sqrt();
-        if res < tol {
-            let e_final = energy(&g_x);
-            return FixedPointReport {
-                solution: g_x,
-                energy: e_final,
-                iterations: t + 1,
-                accepted,
-                trace,
-            };
-        }
-        let m_use = controller.m();
-        let next = acc.propose(&g_x, &f_t, m_use);
-        candidate_was_accel = m_use > 0 && next != g_x;
-        x = next;
+    use crate::accel::{
+        Advance, Budget, DriverConfig, FixedPointDriver, GuardMode, Rejection, Step,
+    };
+    use crate::config::Acceleration;
+    use crate::data::DataMatrix;
+    use crate::metrics::{PhaseTimer, Stopwatch};
+    use crate::observe::{CancelToken, NoopObserver};
+
+    /// `x` is the current iterate (possibly an unguarded proposal), `g_x`
+    /// the retained plain iterate, `g_next` the freshly applied map;
+    /// `outstanding` mirrors whether `x` is an unguarded extrapolation.
+    struct FnStep<G, E> {
+        g: G,
+        energy: E,
+        x: Vec<f64>,
+        g_x: Vec<f64>,
+        g_next: Vec<f64>,
+        f_t: Vec<f64>,
+        tol: f64,
+        outstanding: bool,
+        shape: DataMatrix,
+        phases: PhaseTimer,
     }
-    let e = energy(&x);
-    trace.push(e);
-    FixedPointReport { solution: x, energy: e, iterations: max_iters, accepted, trace }
+
+    impl<G: FnMut(&[f64]) -> Vec<f64>, E: FnMut(&[f64]) -> f64> Step for FnStep<G, E> {
+        fn advance(&mut self) -> Advance {
+            let e = (self.energy)(&self.x);
+            self.g_next = (self.g)(&self.x);
+            crate::linalg::sub(&self.g_next, &self.x, &mut self.f_t);
+            let res: f64 = self.f_t.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if res < self.tol {
+                if self.outstanding {
+                    // An unguarded extrapolation may sit near a *worse*
+                    // fixed point; fall back to the retained plain
+                    // iterate and re-verify, exactly as the solvers'
+                    // accelerated-convergence retry does.
+                    self.x.copy_from_slice(&self.g_x);
+                    self.outstanding = false;
+                    return Advance::RetryPlain;
+                }
+                // The map barely moves this guarded iterate: commit its
+                // plain image as the solution.
+                self.x.copy_from_slice(&self.g_next);
+                return Advance::Converged;
+            }
+            Advance::Evaluated(Some(e))
+        }
+
+        fn reject(&mut self) -> Rejection {
+            std::mem::swap(&mut self.x, &mut self.g_x);
+            self.outstanding = false;
+            let e = (self.energy)(&self.x);
+            self.g_next = (self.g)(&self.x);
+            Rejection::Reverted(e)
+        }
+
+        fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool {
+            std::mem::swap(&mut self.g_x, &mut self.g_next);
+            crate::linalg::sub(&self.g_x, &self.x, &mut self.f_t);
+            let candidate = acc.propose_into(&self.g_x, &self.f_t, m_use, &mut self.x);
+            self.outstanding = candidate;
+            candidate
+        }
+
+        fn discard_candidate(&mut self) {
+            self.x.copy_from_slice(&self.g_x);
+            self.outstanding = false;
+        }
+
+        fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+            (&self.shape, &self.phases)
+        }
+    }
+
+    let dim = x0.len();
+    let mut acc = AndersonAccelerator::new(controller.m_max().max(1), dim);
+    let mut step = FnStep {
+        g,
+        energy,
+        x: x0.to_vec(),
+        g_x: vec![0.0; dim],
+        g_next: vec![0.0; dim],
+        f_t: vec![0.0; dim],
+        tol,
+        outstanding: false,
+        shape: DataMatrix::zeros(1, 1),
+        phases: PhaseTimer::new(),
+    };
+    let sw = Stopwatch::start();
+    let cancel = CancelToken::new();
+    let driver = FixedPointDriver::new(
+        DriverConfig {
+            accel: Acceleration::DynamicM(controller.m()),
+            m_max: controller.m_max(),
+            epsilon1: controller.epsilon1(),
+            epsilon2: controller.epsilon2(),
+            max_iters,
+            record_trace: true,
+            trace_m: false,
+            guard: GuardMode::Deferred,
+            restart_after_rejects: None,
+            check_at_top: false,
+        },
+        Some(&mut acc),
+        Budget::new(&sw, None, &cancel),
+        Vec::new(),
+        Vec::new(),
+    );
+    let outcome = driver.run(&mut step, &mut NoopObserver);
+    let FnStep { mut energy, x, .. } = step;
+    let e_final = energy(&x);
+    FixedPointReport {
+        solution: x,
+        energy: e_final,
+        iterations: outcome.iterations,
+        accepted: outcome.accepted,
+        trace: outcome.energy_trace,
+    }
 }
 
 #[cfg(test)]
@@ -335,9 +437,8 @@ mod tests {
             plain_iters += 1;
         }
         // Accelerated.
-        let mut ctl = MController::new(4, 10, 0.02, 0.5);
-        let report =
-            accelerated_fixed_point(&[0.0; 4], g, energy, &mut ctl, 1000, 1e-10);
+        let ctl = MController::new(4, 10, 0.02, 0.5);
+        let report = accelerated_fixed_point(&[0.0; 4], g, energy, &ctl, 1000, 1e-10);
         assert!(
             report.iterations * 5 < plain_iters,
             "AA {} iters vs plain {plain_iters}",
@@ -364,8 +465,8 @@ mod tests {
             proj([0.2, 1.0], &y)
         };
         let energy = |x: &[f64]| -> f64 { x[0] * x[0] + x[1] * x[1] };
-        let mut ctl = MController::new(2, 5, 0.02, 0.5);
-        let report = accelerated_fixed_point(&[3.0, 4.0], g, energy, &mut ctl, 200, 1e-12);
+        let ctl = MController::new(2, 5, 0.02, 0.5);
+        let report = accelerated_fixed_point(&[3.0, 4.0], g, energy, &ctl, 200, 1e-12);
         // Trace must be monotonically non-increasing (the guard's contract).
         for w in report.trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-12, "energy increased: {} -> {}", w[0], w[1]);

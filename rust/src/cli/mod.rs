@@ -43,6 +43,9 @@ COMMANDS:
              --batches-per-epoch <n>   0 = full pass per epoch (default 0;
                a positive cap trains each epoch on only the FIRST n chunks
                of the source — meant for unbounded generators)
+             --sampling <sequential|replacement>   how mini-batch epochs
+               draw batches (default sequential — deterministic pass;
+               replacement = uniform draws with replacement, seeded)
              --accel <none|fixed:M|dynamic:M>             (default dynamic:2;
                with minibatch this is the epoch-level Anderson step)
              --precision <f64|f32>                        (default f64; f32
@@ -146,6 +149,10 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("chunk-size") {
         cfg.chunk_size = v.parse().context("--chunk-size")?;
     }
+    if let Some(v) = args.get("sampling") {
+        cfg.sampling = crate::config::BatchSampling::parse(v)
+            .with_context(|| format!("bad --sampling {v} (sequential|replacement)"))?;
+    }
     if let Some(v) = args.get("batches-per-epoch") {
         cfg.batches_per_epoch = v.parse().context("--batches-per-epoch")?;
     }
@@ -175,6 +182,7 @@ fn request_from_experiment(
         .record_trace(trace)
         .chunk_size(cfg.chunk_size)
         .batches_per_epoch(cfg.batches_per_epoch)
+        .batch_sampling(cfg.sampling)
         .artifact_dir(artifacts)
         .build()?;
     Ok(request)
@@ -211,12 +219,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         let shard = data::MmapShardSource::open(shard_path)?;
         println!(
-            "dataset {} (shard, n={}, d={}), k={}, engine=minibatch, chunk={}, seed={}",
+            "dataset {} (shard, n={}, d={}), k={}, engine=minibatch, chunk={}, sampling={}, \
+             seed={}",
             cfg.dataset,
             shard.n(),
             shard.d(),
             cfg.k,
             cfg.chunk_size,
+            cfg.sampling.name(),
             cfg.seed
         );
         (DataSource::Shard(shard_path.to_path_buf()), None)
@@ -229,8 +239,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         // below.
         let centering = args.flag("center") || cfg.precision == Precision::F32;
         let mean = if centering { Some(data::center(&mut x)) } else { None };
+        let sampling = if cfg.engine == EngineKind::MiniBatch {
+            format!(", sampling={}", cfg.sampling.name())
+        } else {
+            String::new()
+        };
         println!(
-            "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}, seed={}",
+            "dataset {} (n={}, d={}), k={}, init={}, engine={}, precision={}{}{}, seed={}",
             cfg.dataset,
             x.n(),
             x.d(),
@@ -239,6 +254,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.engine.name(),
             cfg.precision.name(),
             if centering { ", pre-centered" } else { "" },
+            sampling,
             cfg.seed
         );
         (DataSource::Inline(Arc::new(x)), mean)

@@ -14,6 +14,10 @@ pub use toml_lite::{ConfigDoc, ConfigError, Value};
 /// in [`crate::linalg::kernel`]; re-exported here as the config surface).
 pub use crate::linalg::kernel::Precision;
 
+/// Mini-batch epoch sampling mode (defined next to the streaming solver
+/// in [`crate::stream`]; re-exported here as the config surface).
+pub use crate::stream::BatchSampling;
+
 use crate::init::InitMethod;
 
 /// Which assignment engine backs the solver.
@@ -156,6 +160,10 @@ pub struct ExperimentConfig {
     pub chunk_size: usize,
     /// Mini-batches per epoch; 0 = one full pass over the source.
     pub batches_per_epoch: usize,
+    /// How mini-batch epochs draw their batches (`--engine minibatch`
+    /// only): the deterministic sequential pass, or uniform draws with
+    /// replacement.
+    pub sampling: BatchSampling,
 }
 
 impl Default for ExperimentConfig {
@@ -176,6 +184,7 @@ impl Default for ExperimentConfig {
             precision: Precision::F64,
             chunk_size: 4096,
             batches_per_epoch: 0,
+            sampling: BatchSampling::Sequential,
         }
     }
 }
@@ -239,6 +248,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = sect("batches_per_epoch") {
             cfg.batches_per_epoch = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("sampling") {
+            let s = v.as_str()?;
+            cfg.sampling = BatchSampling::parse(s).ok_or_else(|| {
+                ConfigError::new(format!("unknown sampling '{s}' (sequential|replacement)"))
+            })?;
         }
         Ok(cfg)
     }
@@ -323,6 +338,18 @@ mod tests {
         assert_eq!(cfg.m_max, 30);
         assert_eq!(cfg.accel, Acceleration::DynamicM(2));
         assert_eq!(cfg.precision, Precision::F64);
+    }
+
+    #[test]
+    fn sampling_from_doc() {
+        let doc = ConfigDoc::parse("sampling = \"replacement\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sampling, BatchSampling::Replacement);
+        let empty = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&empty).unwrap();
+        assert_eq!(cfg.sampling, BatchSampling::Sequential);
+        let bad = ConfigDoc::parse("sampling = \"shuffled\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -109,6 +109,21 @@ impl JobSpec {
     }
 }
 
+/// Phase in which a job's deadline expired. A request's `time_limit` is a
+/// true per-job deadline measured from *submission*, so time spent queued
+/// counts against it — the worker deducts the queue wait before starting
+/// the solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlinePhase {
+    /// The deadline was already spent while the job waited in the queue;
+    /// the solver ran with a zero budget and returned the initial
+    /// (consistent) state.
+    Queue,
+    /// The solver consumed the remaining budget mid-run and stopped at an
+    /// iteration boundary.
+    Solver,
+}
+
 /// Completed-job summary (the heavy centroid payload is kept; callers that
 /// only need metrics can drop it).
 #[derive(Debug)]
@@ -117,7 +132,8 @@ pub struct JobResult {
     pub id: u64,
     /// Typed outcome; [`ClusterError::Cancelled`] for cancelled jobs.
     pub outcome: Result<JobOutcome, ClusterError>,
-    /// Time spent queued before a worker picked the job up.
+    /// Time spent queued before a worker picked the job up (counted
+    /// against the request's `time_limit` deadline).
     pub queue_wait: Duration,
     /// Time spent inside the solver.
     pub service_time: Duration,
@@ -138,6 +154,10 @@ pub struct JobOutcome {
     pub precision: Precision,
     /// Engine that served the job.
     pub engine: EngineKind,
+    /// Which phase exhausted the request's submission-measured
+    /// `time_limit` deadline, if any (`None` when the job finished inside
+    /// its deadline or had none).
+    pub timed_out: Option<DeadlinePhase>,
     pub centroids: DataMatrix,
 }
 

@@ -46,6 +46,12 @@ pub trait ChunkSource {
     /// sources; all built-ins are bounded).
     fn len(&self) -> Option<usize>;
 
+    /// Whether a pass over this source yields no samples (unknown-length
+    /// sources report `false`).
+    fn is_empty(&self) -> bool {
+        self.len() == Some(0)
+    }
+
     /// Fill `out` with the next `≤ max_rows` samples (resizing it to the
     /// produced row count) and return that count; `0` means the pass is
     /// exhausted. `out` must already have this source's dimensionality
@@ -59,6 +65,58 @@ pub trait ChunkSource {
 
     /// Restart the stream from the beginning of the pass.
     fn rewind(&mut self);
+
+    /// Fill `out` with the rows at `indices` (ascending order required;
+    /// duplicates allowed — the shape sampling-with-replacement batches
+    /// draw), resizing `out` to `indices.len()`. The default
+    /// implementation streams one rewound pass and copies requested rows
+    /// as their chunks go by, which works for any rewindable source;
+    /// random-access sources override it with direct row reads. The
+    /// stream cursor afterwards is unspecified — callers rewind before
+    /// the next sequential use.
+    ///
+    /// Cost note: the default re-streams from the start (up to the
+    /// largest requested row) and allocates a transient decode buffer on
+    /// every call — fine for seeding and tests, but a per-batch hot loop
+    /// (replacement-sampling epochs) should prefer a source with a
+    /// random-access override (in-memory, mmap shard) over a pure
+    /// generator, where each epoch costs roughly one extra generator
+    /// pass per batch.
+    fn gather_rows(
+        &mut self,
+        indices: &[usize],
+        out: &mut DataMatrix,
+    ) -> Result<(), ClusterError> {
+        debug_assert!(
+            indices.windows(2).all(|w| w[0] <= w[1]),
+            "gather_rows indices must be ascending"
+        );
+        let d = self.d();
+        assert_eq!(out.d(), d, "chunk buffer dimensionality mismatch");
+        out.resize_rows(indices.len());
+        if indices.is_empty() {
+            return Ok(());
+        }
+        self.rewind();
+        let mut buf = DataMatrix::zeros(0, d);
+        // Absolute index of `buf`'s first row, and its row count.
+        let mut row0 = 0usize;
+        let mut got = 0usize;
+        for (slot, &want) in indices.iter().enumerate() {
+            while want >= row0 + got {
+                row0 += got;
+                got = self.next_chunk(1024, &mut buf)?;
+                if got == 0 {
+                    return Err(ClusterError::invalid(
+                        "sampling",
+                        format!("row {want} is beyond the source ({row0} rows streamed)"),
+                    ));
+                }
+            }
+            out.row_mut(slot).copy_from_slice(buf.row(want - row0));
+        }
+        Ok(())
+    }
 }
 
 /// Stream an in-memory matrix chunk by chunk — the bridge that runs the
@@ -106,6 +164,25 @@ impl ChunkSource for InMemoryChunks {
 
     fn rewind(&mut self) {
         self.cursor = 0;
+    }
+
+    fn gather_rows(
+        &mut self,
+        indices: &[usize],
+        out: &mut DataMatrix,
+    ) -> Result<(), ClusterError> {
+        assert_eq!(out.d(), self.data.d(), "chunk buffer dimensionality mismatch");
+        out.resize_rows(indices.len());
+        for (slot, &i) in indices.iter().enumerate() {
+            if i >= self.data.n() {
+                return Err(ClusterError::invalid(
+                    "sampling",
+                    format!("row {i} is beyond the source ({} rows)", self.data.n()),
+                ));
+            }
+            out.row_mut(slot).copy_from_slice(self.data.row(i));
+        }
+        Ok(())
     }
 }
 
@@ -411,6 +488,38 @@ impl MmapShardSource {
     fn data_error(&self, reason: String) -> ClusterError {
         ClusterError::Data { source: self.path.display().to_string(), reason }
     }
+
+    /// Decode row `i` (caller-validated) into `dst` — the single site
+    /// that knows the `AAKMFV01` row layout, shared by the sequential
+    /// chunk reader and the random-access gather.
+    fn read_row(&mut self, i: usize, dst: &mut [f64]) -> Result<(), ClusterError> {
+        debug_assert!(i < self.n);
+        debug_assert_eq!(dst.len(), self.d);
+        #[cfg(unix)]
+        {
+            let start = SHARD_HEADER_BYTES + i * self.d * 8;
+            let bytes = &self.map.as_bytes()[start..start + self.d * 8];
+            for (v, raw) in dst.iter_mut().zip(bytes.chunks_exact(8)) {
+                *v = f64::from_le_bytes(raw.try_into().expect("chunks_exact(8)"));
+            }
+            Ok(())
+        }
+        #[cfg(not(unix))]
+        {
+            let start = SHARD_HEADER_BYTES as u64 + (i * self.d * 8) as u64;
+            self.file
+                .seek(SeekFrom::Start(start))
+                .map_err(|e| self.data_error(format!("seek: {e}")))?;
+            let mut raw = [0u8; 8];
+            for v in dst.iter_mut() {
+                self.file
+                    .read_exact(&mut raw)
+                    .map_err(|e| self.data_error(format!("read: {e}")))?;
+                *v = f64::from_le_bytes(raw);
+            }
+            Ok(())
+        }
+    }
 }
 
 impl ChunkSource for MmapShardSource {
@@ -434,30 +543,9 @@ impl ChunkSource for MmapShardSource {
         if rows == 0 {
             return Ok(0);
         }
-        let values = rows * self.d;
-        #[cfg(unix)]
-        {
-            let start = SHARD_HEADER_BYTES + self.cursor * self.d * 8;
-            let bytes = &self.map.as_bytes()[start..start + values * 8];
-            let dst = out.as_mut_slice();
-            for (slot, raw) in dst.iter_mut().zip(bytes.chunks_exact(8)) {
-                *slot = f64::from_le_bytes(raw.try_into().expect("chunks_exact(8)"));
-            }
-        }
-        #[cfg(not(unix))]
-        {
-            let start = SHARD_HEADER_BYTES as u64 + (self.cursor * self.d * 8) as u64;
-            self.file
-                .seek(SeekFrom::Start(start))
-                .map_err(|e| self.data_error(format!("seek: {e}")))?;
-            let mut raw = [0u8; 8];
-            let dst = out.as_mut_slice();
-            for slot in dst.iter_mut().take(values) {
-                self.file
-                    .read_exact(&mut raw)
-                    .map_err(|e| self.data_error(format!("read: {e}")))?;
-                *slot = f64::from_le_bytes(raw);
-            }
+        for r in 0..rows {
+            let row = self.cursor + r;
+            self.read_row(row, out.row_mut(r))?;
         }
         self.cursor += rows;
         Ok(rows)
@@ -465,6 +553,25 @@ impl ChunkSource for MmapShardSource {
 
     fn rewind(&mut self) {
         self.cursor = 0;
+    }
+
+    fn gather_rows(
+        &mut self,
+        indices: &[usize],
+        out: &mut DataMatrix,
+    ) -> Result<(), ClusterError> {
+        assert_eq!(out.d(), self.d, "chunk buffer dimensionality mismatch");
+        out.resize_rows(indices.len());
+        for (slot, &i) in indices.iter().enumerate() {
+            if i >= self.n {
+                return Err(ClusterError::invalid(
+                    "sampling",
+                    format!("row {i} is beyond the shard ({} rows)", self.n),
+                ));
+            }
+            self.read_row(i, out.row_mut(slot))?;
+        }
+        Ok(())
     }
 }
 
@@ -595,5 +702,44 @@ mod tests {
         let path = tmp("dmismatch.fv");
         let mut w = ShardWriter::create(&path, 3).unwrap();
         assert!(w.append(&DataMatrix::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn gather_rows_agrees_across_sources_and_with_streaming_default() {
+        // The overridden random-access gathers (in-memory, mmap shard)
+        // and the streaming default (exercised via SynthChunks) must all
+        // return exactly the rows a full collect yields.
+        let mut synth = SynthChunks::new(31, 400, 3, 4, 2.0, 0.25);
+        let full = collect_source(&mut synth, 128, usize::MAX).unwrap();
+        let indices = vec![0usize, 0, 7, 7, 7, 128, 129, 255, 399, 399];
+
+        let mut expect = DataMatrix::zeros(0, 3);
+        for &i in &indices {
+            expect.append(&full.gather_rows(&[i]));
+        }
+
+        let mut out = DataMatrix::zeros(0, 3);
+        synth.gather_rows(&indices, &mut out).unwrap();
+        assert_eq!(out, expect, "streaming default gather");
+
+        let mut in_mem = InMemoryChunks::new(Arc::new(full.clone()));
+        synth.rewind();
+        in_mem.gather_rows(&indices, &mut out).unwrap();
+        assert_eq!(out, expect, "in-memory gather");
+
+        let path = tmp("gather.fv");
+        let mut w = ShardWriter::create(&path, 3).unwrap();
+        w.append(&full).unwrap();
+        w.finish().unwrap();
+        let mut shard = MmapShardSource::open(&path).unwrap();
+        shard.gather_rows(&indices, &mut out).unwrap();
+        assert_eq!(out, expect, "mmap shard gather");
+
+        // Out-of-range rows fail typed on every implementation.
+        let bad = vec![0usize, 400];
+        assert!(in_mem.gather_rows(&bad, &mut out).is_err());
+        assert!(shard.gather_rows(&bad, &mut out).is_err());
+        let mut synth2 = SynthChunks::new(31, 400, 3, 4, 2.0, 0.25);
+        assert!(synth2.gather_rows(&bad, &mut out).is_err());
     }
 }

@@ -14,32 +14,35 @@
 //! timings, proposed centroids) and a [`CancelToken`] checked at iteration
 //! boundaries. Timings are broken down per phase so the benches can report
 //! the paper's overhead claims.
+//!
+//! Both loops are [`crate::accel::Step`] implementations (the private
+//! `steps` submodule) driven by the shared safeguarded-Anderson
+//! [`crate::accel::FixedPointDriver`]: this module only sets up the
+//! workspace buffers, hands the map application to the driver, and folds
+//! the outcome into a [`RunReport`].
 
 mod report;
+mod steps;
 mod workspace;
 
 pub use report::RunReport;
 pub use workspace::{Workspace, WorkspaceSpec};
 
-use crate::anderson::{AndersonAccelerator, MController};
+use crate::accel::{Budget, DriverConfig, FixedPointDriver, GuardMode};
+use crate::anderson::AndersonAccelerator;
 use crate::config::Acceleration;
 pub use crate::config::SolverConfig;
 use crate::data::DataMatrix;
 use crate::error::ClusterError;
 use crate::lloyd::{self, AssignmentEngine};
 use crate::metrics::{PhaseTimer, Stopwatch};
-use crate::observe::{CancelToken, IterationInfo, NoopObserver, Observer, ObserverControl};
+use crate::observe::{CancelToken, NoopObserver, Observer};
+use steps::{AndersonStep, LloydStep};
 
 /// Algorithm 1 driver over a reusable [`Workspace`].
 pub struct Solver {
     cfg: SolverConfig,
     ws: Workspace,
-}
-
-/// Whether the configured wall-clock budget is exhausted (shared with the
-/// streaming mini-batch solver in [`crate::stream`]).
-pub(crate) fn over_budget(sw: &Stopwatch, limit: Option<std::time::Duration>) -> bool {
-    limit.is_some_and(|l| sw.elapsed() >= l)
 }
 
 impl Solver {
@@ -109,7 +112,8 @@ impl Solver {
     /// [`CancelToken`] checked at iteration boundaries. A cancelled run
     /// returns its report with [`RunReport::cancelled`] set and the last
     /// guarded (Lloyd-consistent) iterate as centroids; an observer
-    /// [`ObserverControl::Stop`] sets [`RunReport::stopped_early`].
+    /// [`crate::observe::ObserverControl::Stop`] sets
+    /// [`RunReport::stopped_early`].
     pub fn run_observed(
         &mut self,
         x: &DataMatrix,
@@ -130,7 +134,8 @@ impl Solver {
         report
     }
 
-    /// Plain Lloyd: assignment + update until the assignment repeats.
+    /// Plain Lloyd: assignment + update until the assignment repeats,
+    /// run as a [`LloydStep`] over the shared driver (acceleration off).
     fn run_lloyd(
         &mut self,
         x: &DataMatrix,
@@ -139,7 +144,6 @@ impl Solver {
         cancel: &CancelToken,
     ) -> RunReport {
         let sw = Stopwatch::start();
-        let mut phases = PhaseTimer::new();
         let evals0 = self.ws.engine.distance_evals();
         self.ws.engine.reset();
         let (k, d) = (c0.n(), c0.d());
@@ -147,63 +151,52 @@ impl Solver {
         // steady state, and a warm workspace reuses them across runs.
         let mut c = self.ws.scratch.take_output_mat(k, d);
         c.as_mut_slice().copy_from_slice(c0.as_slice());
-        let mut c_next = self.ws.scratch.take_mat(k, d);
-        let mut assign = self.ws.scratch.take_assign();
-        let mut prev_assign = self.ws.scratch.take_assign();
-        let mut update = self.ws.scratch.take_update();
-        let mut trace = if self.cfg.record_trace {
+        let c_next = self.ws.scratch.take_mat(k, d);
+        let assign = self.ws.scratch.take_assign();
+        let prev_assign = self.ws.scratch.take_assign();
+        let update = self.ws.scratch.take_update();
+        let trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_f64()
         } else {
             Vec::new()
         };
         let need_energy = self.cfg.record_trace || observer.wants_energy();
-        let mut iterations = 0;
-        let mut converged = false;
-        let mut cancelled = false;
-        let mut stopped_early = false;
-        for _t in 0..self.cfg.max_iters {
-            phases.time("assign", || self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign));
-            if prev_assign.as_slice() == assign.as_slice() {
-                converged = true;
-                break;
-            }
-            // Iteration boundary: the freshly computed assignment pairs
-            // with `c`, so an interrupted run still returns a consistent
-            // (centroids, assignment) state.
-            if cancel.is_cancelled() || over_budget(&sw, self.cfg.time_limit) {
-                cancelled = cancel.is_cancelled();
-                stopped_early = !cancelled;
-                std::mem::swap(&mut prev_assign, &mut assign);
-                break;
-            }
-            iterations += 1;
-            let mut iter_energy = None;
-            if need_energy {
-                let e = phases.time("energy", || lloyd::energy(x, &c, &assign, &self.ws.pool));
-                if self.cfg.record_trace {
-                    trace.push(e);
-                }
-                iter_energy = Some(e);
-            }
-            phases.time("update", || {
-                lloyd::update_step_with(x, &assign, &c, &mut c_next, &self.ws.pool, &mut update)
-            });
-            std::mem::swap(&mut prev_assign, &mut assign);
-            std::mem::swap(&mut c, &mut c_next);
-            let control = observer.on_iteration(&IterationInfo {
-                iteration: iterations,
-                energy: iter_energy,
-                m: 0,
-                accelerated_candidate: false,
-                accepted: false,
-                centroids: &c,
-                phases: &phases,
-            });
-            if control == ObserverControl::Stop {
-                stopped_early = true;
-                break;
-            }
-        }
+        let budget = Budget::new(&sw, self.cfg.time_limit, cancel);
+        let mut step = LloydStep {
+            x,
+            engine: self.ws.engine.as_mut(),
+            pool: &self.ws.pool,
+            budget,
+            phases: PhaseTimer::new(),
+            c,
+            c_next,
+            assign,
+            prev_assign,
+            update,
+            need_energy,
+        };
+        let driver = FixedPointDriver::new(
+            DriverConfig {
+                accel: Acceleration::None,
+                m_max: self.cfg.m_max,
+                epsilon1: self.cfg.epsilon1,
+                epsilon2: self.cfg.epsilon2,
+                max_iters: self.cfg.max_iters,
+                record_trace: self.cfg.record_trace,
+                trace_m: false,
+                guard: GuardMode::Deferred,
+                restart_after_rejects: None,
+                // The Lloyd step checks the budget itself, after the
+                // assignment that may prove convergence.
+                check_at_top: false,
+            },
+            None,
+            budget,
+            trace,
+            Vec::new(),
+        );
+        let outcome = driver.run(&mut step, observer);
+        let LloydStep { phases, c, c_next, assign, prev_assign, update, .. } = step;
         let final_assign = if !prev_assign.is_empty() {
             self.ws.scratch.put_assign(assign);
             prev_assign
@@ -215,16 +208,16 @@ impl Solver {
         self.ws.scratch.put_mat(c_next);
         self.ws.scratch.put_update(update);
         RunReport {
-            iterations,
-            accepted: 0,
+            iterations: outcome.iterations,
+            accepted: outcome.accepted,
             seconds: sw.seconds(),
             energy,
             mse: energy / x.n() as f64,
-            converged,
-            cancelled,
-            stopped_early,
-            energy_trace: trace,
-            m_trace: Vec::new(),
+            converged: outcome.converged,
+            cancelled: outcome.cancelled,
+            stopped_early: outcome.stopped_early,
+            energy_trace: outcome.energy_trace,
+            m_trace: outcome.m_trace,
             dist_evals: self.ws.engine.distance_evals() - evals0,
             phases,
             centroids: c,
@@ -233,7 +226,8 @@ impl Solver {
     }
 
     /// Algorithm 1: Anderson-accelerated Lloyd with the energy guard and
-    /// (optionally) the dynamic-m controller.
+    /// (optionally) the dynamic-m controller — an [`AndersonStep`] over
+    /// the shared deferred-guard driver.
     fn run_accelerated(
         &mut self,
         x: &DataMatrix,
@@ -251,12 +245,6 @@ impl Solver {
         let dim = k * d;
         let mut acc: AndersonAccelerator =
             self.ws.scratch.take_accelerator(self.cfg.m_max.max(1), dim);
-        let mut controller = MController::new(
-            m0.min(self.cfg.m_max),
-            self.cfg.m_max,
-            self.cfg.epsilon1,
-            self.cfg.epsilon2,
-        );
 
         // Line 1: C^1 = C_AU^1 = G(C^0).
         let mut assign = self.ws.scratch.take_assign();
@@ -271,159 +259,64 @@ impl Solver {
         // Steady-state scratch, all drawn from the workspace: the fused
         // update+energy output matrix, the Anderson residual `f_t`, and the
         // pair of assignment buffers that rotate through `prev_assign`. The
-        // hot loop below performs no heap allocation — buffers are swapped
-        // or overwritten in place, and a warm workspace carries them (plus
+        // hot loop performs no heap allocation — buffers are swapped or
+        // overwritten in place, and a warm workspace carries them (plus
         // the accelerator's history columns) across runs.
-        let mut c_next = self.ws.scratch.take_mat(k, d);
-        let mut f_t = self.ws.scratch.take_f_t(dim);
-        let mut prev_assign = std::mem::replace(&mut assign, self.ws.scratch.take_assign());
+        let c_next = self.ws.scratch.take_mat(k, d);
+        let f_t = self.ws.scratch.take_f_t(dim);
+        let prev_assign = std::mem::replace(&mut assign, self.ws.scratch.take_assign());
         assign.reserve(x.n());
-        let mut trace = if self.cfg.record_trace {
+        let trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_f64()
         } else {
             Vec::new()
         };
-        let mut m_trace = if self.cfg.record_trace {
+        let m_trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_usize()
         } else {
             Vec::new()
         };
 
-        let mut e_prev = f64::INFINITY; // E^{t-1}
-        let mut decrease_prev = f64::INFINITY; // E^{t-2} − E^{t-1}
-        let mut candidate_was_accel = false;
-        let mut iterations = 0;
-        let mut accepted = 0;
-        let mut converged = false;
-        let mut cancelled = false;
-        let mut stopped_early = false;
-
-        for _t in 1..=self.cfg.max_iters {
-            // Iteration boundary: on cancellation / budget exhaustion fall
-            // back from an unguarded accelerated proposal to the last
-            // Lloyd iterate so the returned state is always guarded.
-            if cancel.is_cancelled() || over_budget(&sw, self.cfg.time_limit) {
-                if candidate_was_accel {
-                    c.as_mut_slice().copy_from_slice(c_au.as_slice());
-                }
-                cancelled = cancel.is_cancelled();
-                stopped_early = !cancelled;
-                break;
-            }
-            // Line 3: P^t = Assignment-Step(X, C^t).
-            phases.time("assign", || self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign));
-            // Lines 4–6: converged when assignments repeat. The paper's own
-            // convergence narrative ("… until the fall-back iterate using
-            // Lloyd's algorithm results in the same assignment …") requires
-            // the terminal iterate to be a *Lloyd* iterate: if the repeat
-            // was produced by an accelerated C^t, fall back to C_AU (the
-            // means of the same assignment — energy ≤ the accelerated
-            // iterate's) and keep iterating until the joint fixed point is
-            // verified. This makes the returned (C, P) exact: P is the
-            // nearest-assignment of C and C the means of P.
-            if prev_assign.as_slice() == assign.as_slice() {
-                if !candidate_was_accel {
-                    converged = true;
-                    break;
-                }
-                c.as_mut_slice().copy_from_slice(c_au.as_slice());
-                self.ws.engine.rollback();
-                candidate_was_accel = false;
-                continue;
-            }
-            iterations += 1;
-            // Line 7 + line 16, fused: one O(N·d) pass yields both
-            // E^t = E(P^t, C^t) (energy at the *input* centroids) and
-            // C_AU^{t+1} = Update-Step(X, P^t) — the accelerated solver then
-            // touches the samples exactly as often per iteration as Lloyd.
-            let mut e = phases.time("update+energy", || {
-                lloyd::update_and_energy_with(
-                    x,
-                    &assign,
-                    &c,
-                    &mut c_next,
-                    &self.ws.pool,
-                    &mut update,
-                )
-            });
-            // Lines 8–12: adjust m from the decrease ratio.
-            if dynamic {
-                controller.adjust(e_prev - e, decrease_prev);
-            }
-            // Lines 13–15: energy guard — revert to the Lloyd iterate. The
-            // engine rolls back to the bound state it had *before* the
-            // rejected jump, so the revert assignment only drifts the bounds
-            // by one small Lloyd step instead of the jump there-and-back.
-            let mut accepted_this_iter = false;
-            if e >= e_prev {
-                std::mem::swap(&mut c, &mut c_au); // C^t = C_AU^t
-                self.ws.engine.rollback();
-                phases.time("assign", || {
-                    self.ws.engine.assign(x, &c, &self.ws.pool, &mut assign)
-                });
-                // A reverted iterate might still match the previous
-                // assignment — that is Algorithm 1's terminal state (the
-                // fall-back Lloyd step changed nothing).
-                if prev_assign.as_slice() == assign.as_slice() {
-                    converged = true;
-                    // Terminal probe, not a productive iteration.
-                    iterations -= 1;
-                    break;
-                }
-                e = phases.time("update+energy", || {
-                    lloyd::update_and_energy_with(
-                        x,
-                        &assign,
-                        &c,
-                        &mut c_next,
-                        &self.ws.pool,
-                        &mut update,
-                    )
-                });
-            } else if candidate_was_accel {
-                accepted += 1;
-                accepted_this_iter = true;
-            }
-            if self.cfg.record_trace {
-                trace.push(e);
-                m_trace.push(controller.m());
-            }
-            decrease_prev = e_prev - e;
-            e_prev = e;
-            // c_next currently holds C_AU^{t+1}; rotate it into c_au.
-            std::mem::swap(&mut c_au, &mut c_next);
-            // Lines 17–19: Anderson extrapolation, written straight into
-            // `c` (which becomes C^{t+1} — its old contents, C^t, are only
-            // needed to form the residual f_t = G(C^t) − C^t first).
-            candidate_was_accel = phases.time("anderson", || {
-                crate::linalg::sub(c_au.as_slice(), c.as_slice(), &mut f_t);
-                let m_use = controller.m();
-                acc.propose_into(c_au.as_slice(), &f_t, m_use, c.as_mut_slice())
-            });
-            if candidate_was_accel {
-                // Save the bound state at C^t so a rejected jump can roll
-                // back instead of paying two large bound drifts.
-                self.ws.engine.checkpoint();
-            }
-            std::mem::swap(&mut prev_assign, &mut assign);
-            // `c` now holds the proposal for the next iteration.
-            let control = observer.on_iteration(&IterationInfo {
-                iteration: iterations,
-                energy: Some(e),
-                m: controller.m(),
-                accelerated_candidate: candidate_was_accel,
-                accepted: accepted_this_iter,
-                centroids: &c,
-                phases: &phases,
-            });
-            if control == ObserverControl::Stop {
-                if candidate_was_accel {
-                    c.as_mut_slice().copy_from_slice(c_au.as_slice());
-                }
-                stopped_early = true;
-                break;
-            }
-        }
+        let budget = Budget::new(&sw, self.cfg.time_limit, cancel);
+        let mut step = AndersonStep {
+            x,
+            engine: self.ws.engine.as_mut(),
+            pool: &self.ws.pool,
+            phases,
+            c,
+            c_au,
+            c_next,
+            f_t,
+            assign,
+            prev_assign,
+            update,
+            candidate_was_accel: false,
+        };
+        let accel_mode = if dynamic {
+            Acceleration::DynamicM(m0)
+        } else {
+            Acceleration::FixedM(m0)
+        };
+        let driver = FixedPointDriver::new(
+            DriverConfig {
+                accel: accel_mode,
+                m_max: self.cfg.m_max,
+                epsilon1: self.cfg.epsilon1,
+                epsilon2: self.cfg.epsilon2,
+                max_iters: self.cfg.max_iters,
+                record_trace: self.cfg.record_trace,
+                trace_m: true,
+                guard: GuardMode::Deferred,
+                restart_after_rejects: None,
+                check_at_top: true,
+            },
+            Some(&mut acc),
+            budget,
+            trace,
+            m_trace,
+        );
+        let outcome = driver.run(&mut step, observer);
+        let AndersonStep { phases, c, c_au, c_next, f_t, assign, prev_assign, update, .. } = step;
 
         let final_assign = if !prev_assign.is_empty() {
             self.ws.scratch.put_assign(assign);
@@ -439,16 +332,16 @@ impl Solver {
         self.ws.scratch.put_accelerator(acc);
         self.ws.scratch.put_update(update);
         RunReport {
-            iterations,
-            accepted,
+            iterations: outcome.iterations,
+            accepted: outcome.accepted,
             seconds: sw.seconds(),
             energy,
             mse: energy / x.n() as f64,
-            converged,
-            cancelled,
-            stopped_early,
-            energy_trace: trace,
-            m_trace,
+            converged: outcome.converged,
+            cancelled: outcome.cancelled,
+            stopped_early: outcome.stopped_early,
+            energy_trace: outcome.energy_trace,
+            m_trace: outcome.m_trace,
             dist_evals: self.ws.engine.distance_evals() - evals0,
             phases,
             centroids: c,

@@ -1,0 +1,219 @@
+//! The full-batch [`Step`] implementations behind [`super::Solver`].
+//!
+//! Both of the solver's paths are thin map applications over the shared
+//! safeguarded-Anderson driver in [`crate::accel`]:
+//!
+//! * [`AndersonStep`] — Algorithm 1's map: one fused assign+update pass
+//!   that yields `E(P^t, C^t)` and `C_AU^{t+1}` together, plus the
+//!   deferred-guard primitives (revert to `C_AU`, engine bound rollback)
+//!   and the Anderson residual/proposal staging.
+//! * [`LloydStep`] — the plain Lloyd baseline: assign, optional energy,
+//!   update. No acceleration state at all; the driver runs it with
+//!   `Acceleration::None`.
+//!
+//! The steps own only borrowed workspace pieces (engine, pool) and the
+//! per-run buffers taken from the workspace scratch; the solver takes the
+//! buffers out before a run and puts them back after, so the warm-run
+//! allocation contract (`tests/alloc_reuse.rs`) is unchanged.
+
+use crate::accel::{Advance, Budget, Rejection, Step};
+use crate::anderson::AndersonAccelerator;
+use crate::data::DataMatrix;
+use crate::lloyd::{self, Assignment, AssignmentEngine};
+use crate::metrics::PhaseTimer;
+use crate::par::ThreadPool;
+
+/// Algorithm 1's fixed-point map over the workspace engine (deferred
+/// guard). Buffer roles mirror the paper: `c` is the current iterate
+/// (possibly an unguarded proposal), `c_au` the retained plain iterate
+/// `C_AU^t`, `c_next` the freshly computed `C_AU^{t+1}`.
+pub(super) struct AndersonStep<'a> {
+    pub x: &'a DataMatrix,
+    pub engine: &'a mut dyn AssignmentEngine,
+    pub pool: &'a ThreadPool,
+    pub phases: PhaseTimer,
+    pub c: DataMatrix,
+    pub c_au: DataMatrix,
+    pub c_next: DataMatrix,
+    pub f_t: Vec<f64>,
+    pub assign: Assignment,
+    pub prev_assign: Assignment,
+    pub update: lloyd::UpdateScratch,
+    pub candidate_was_accel: bool,
+}
+
+impl Step for AndersonStep<'_> {
+    fn advance(&mut self) -> Advance {
+        let Self {
+            x,
+            engine,
+            pool,
+            phases,
+            c,
+            c_au,
+            c_next,
+            assign,
+            prev_assign,
+            update,
+            candidate_was_accel,
+            ..
+        } = self;
+        // Line 3: P^t = Assignment-Step(X, C^t).
+        phases.time("assign", || engine.assign(x, c, pool, assign));
+        // Lines 4–6: converged when assignments repeat. The paper's own
+        // convergence narrative ("… until the fall-back iterate using
+        // Lloyd's algorithm results in the same assignment …") requires
+        // the terminal iterate to be a *Lloyd* iterate: if the repeat
+        // was produced by an accelerated C^t, fall back to C_AU (the
+        // means of the same assignment — energy ≤ the accelerated
+        // iterate's) and keep iterating until the joint fixed point is
+        // verified. This makes the returned (C, P) exact: P is the
+        // nearest-assignment of C and C the means of P.
+        if prev_assign.as_slice() == assign.as_slice() {
+            if !*candidate_was_accel {
+                return Advance::Converged;
+            }
+            c.as_mut_slice().copy_from_slice(c_au.as_slice());
+            engine.rollback();
+            *candidate_was_accel = false;
+            return Advance::RetryPlain;
+        }
+        // Line 7 + line 16, fused: one O(N·d) pass yields both
+        // E^t = E(P^t, C^t) (energy at the *input* centroids) and
+        // C_AU^{t+1} = Update-Step(X, P^t) — the accelerated solver
+        // touches the samples exactly as often per iteration as Lloyd.
+        let e = phases.time("update+energy", || {
+            lloyd::update_and_energy_with(x, assign, c, c_next, pool, update)
+        });
+        Advance::Evaluated(Some(e))
+    }
+
+    fn reject(&mut self) -> Rejection {
+        let Self { x, engine, pool, phases, c, c_au, c_next, assign, prev_assign, update, .. } =
+            self;
+        // Lines 13–15: energy guard — revert to the Lloyd iterate. The
+        // engine rolls back to the bound state it had *before* the
+        // rejected jump, so the revert assignment only drifts the bounds
+        // by one small Lloyd step instead of the jump there-and-back.
+        std::mem::swap(c, c_au); // C^t = C_AU^t
+        engine.rollback();
+        phases.time("assign", || engine.assign(x, c, pool, assign));
+        // A reverted iterate might still match the previous assignment —
+        // that is Algorithm 1's terminal state (the fall-back Lloyd step
+        // changed nothing).
+        if prev_assign.as_slice() == assign.as_slice() {
+            return Rejection::Converged;
+        }
+        let e = phases.time("update+energy", || {
+            lloyd::update_and_energy_with(x, assign, c, c_next, pool, update)
+        });
+        Rejection::Reverted(e)
+    }
+
+    fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool {
+        let Self {
+            engine,
+            phases,
+            c,
+            c_au,
+            c_next,
+            f_t,
+            assign,
+            prev_assign,
+            candidate_was_accel,
+            ..
+        } = self;
+        // c_next currently holds C_AU^{t+1}; rotate it into c_au.
+        std::mem::swap(c_au, c_next);
+        // Lines 17–19: Anderson extrapolation, written straight into `c`
+        // (which becomes C^{t+1} — its old contents, C^t, are only needed
+        // to form the residual f_t = G(C^t) − C^t first).
+        let candidate = phases.time("anderson", || {
+            crate::linalg::sub(c_au.as_slice(), c.as_slice(), f_t);
+            acc.propose_into(c_au.as_slice(), f_t, m_use, c.as_mut_slice())
+        });
+        if candidate {
+            // Save the bound state at C^t so a rejected jump can roll
+            // back instead of paying two large bound drifts.
+            engine.checkpoint();
+        }
+        std::mem::swap(prev_assign, assign);
+        *candidate_was_accel = candidate;
+        candidate
+    }
+
+    fn discard_candidate(&mut self) {
+        // Fall back from an unguarded accelerated proposal to the last
+        // Lloyd iterate so the returned state is always guarded.
+        self.c.as_mut_slice().copy_from_slice(self.c_au.as_slice());
+        self.candidate_was_accel = false;
+    }
+
+    fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+        (&self.c, &self.phases)
+    }
+}
+
+/// Plain Lloyd's algorithm as a driver step: assignment + update until the
+/// assignment repeats. The budget is checked *after* the assignment (and
+/// its convergence test), so an interrupted run still returns a consistent
+/// `(centroids, assignment)` state — hence `check_at_top: false`.
+pub(super) struct LloydStep<'a> {
+    pub x: &'a DataMatrix,
+    pub engine: &'a mut dyn AssignmentEngine,
+    pub pool: &'a ThreadPool,
+    pub budget: Budget<'a>,
+    pub phases: PhaseTimer,
+    pub c: DataMatrix,
+    pub c_next: DataMatrix,
+    pub assign: Assignment,
+    pub prev_assign: Assignment,
+    pub update: lloyd::UpdateScratch,
+    pub need_energy: bool,
+}
+
+impl Step for LloydStep<'_> {
+    fn advance(&mut self) -> Advance {
+        let Self {
+            x,
+            engine,
+            pool,
+            budget,
+            phases,
+            c,
+            c_next,
+            assign,
+            prev_assign,
+            update,
+            need_energy,
+        } = self;
+        phases.time("assign", || engine.assign(x, c, pool, assign));
+        if prev_assign.as_slice() == assign.as_slice() {
+            return Advance::Converged;
+        }
+        // Iteration boundary: the freshly computed assignment pairs with
+        // `c`, so an interrupted run still returns a consistent
+        // (centroids, assignment) state.
+        if let Some(cancelled) = budget.interrupted() {
+            std::mem::swap(prev_assign, assign);
+            return Advance::Interrupted { cancelled };
+        }
+        let energy = if *need_energy {
+            Some(phases.time("energy", || lloyd::energy(x, c, assign, pool)))
+        } else {
+            None
+        };
+        phases.time("update", || lloyd::update_step_with(x, assign, c, c_next, pool, update));
+        std::mem::swap(prev_assign, assign);
+        std::mem::swap(c, c_next);
+        Advance::Evaluated(energy)
+    }
+
+    fn propose(&mut self, _acc: &mut AndersonAccelerator, _m_use: usize) -> bool {
+        unreachable!("the Lloyd baseline runs with Acceleration::None")
+    }
+
+    fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+        (&self.c, &self.phases)
+    }
+}

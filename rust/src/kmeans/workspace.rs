@@ -306,6 +306,14 @@ impl Scratch {
         t.clear();
         t
     }
+
+    /// Return a `usize` buffer to the spare pool (e.g. the mini-batch
+    /// solver's replacement-sampling index scratch).
+    pub(crate) fn put_trace_usize(&mut self, t: Vec<usize>) {
+        if t.capacity() > 0 {
+            self.spare_usize.push(t);
+        }
+    }
 }
 
 #[cfg(test)]

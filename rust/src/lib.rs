@@ -17,6 +17,12 @@
 //! The [`runtime`] module loads the AOT artifacts via PJRT (`xla` crate) so
 //! the Rust hot path can execute the JAX-defined G-step without Python.
 //!
+//! Every solver loop in the crate — the accelerated full-batch path, the
+//! Lloyd baseline and the streaming mini-batch epochs — drives the single
+//! safeguarded-Anderson implementation in [`accel`]
+//! ([`accel::FixedPointDriver`] over the [`accel::Step`] trait), so the
+//! paper's accept/reject scheme exists exactly once.
+//!
 //! ## Quickstart
 //!
 //! Every layer consumes one job description, [`ClusterRequest`]; opening it
@@ -53,6 +59,13 @@
 //! through the mini-batch solver in [`stream`], with Anderson acceleration
 //! applied to the per-epoch centroid sequence.
 
+// Kernel-style numeric code throughout this crate indexes several parallel
+// arrays per loop; rewriting those loops as iterator chains would obscure
+// the arithmetic the paper specifies, so this one pedantic lint stays off
+// crate-wide (the remaining clippy set runs with -D warnings in CI).
+#![allow(clippy::needless_range_loop)]
+
+pub mod accel;
 pub mod anderson;
 pub mod cli;
 pub mod config;

@@ -1,0 +1,164 @@
+//! Shared checkpoint/rollback store for bound-based assignment engines.
+//!
+//! Hamerly, Elkan and Yinyang all keep the same restorable state shape —
+//! the previous centroid set, a per-sample upper-bound vector, a flat
+//! lower-bound vector (per sample, per sample×centroid and per
+//! sample×group respectively) and the current assignment — and all three
+//! grew structurally identical save/restore implementations for the
+//! accelerated solver's rejected-jump rollback. [`SavedBounds`] is that
+//! machinery extracted once: engines call [`SavedBounds::checkpoint`]
+//! with borrows of their live state and [`SavedBounds::rollback_into`]
+//! to restore it, so the next bounds-state fix (or a new bound engine)
+//! lands in one place.
+//!
+//! The retained buffers are overwritten in place whenever the shapes
+//! match, so checkpoints on warm same-shape runs allocate nothing —
+//! exactly the contract the per-engine copies enforced (see
+//! `tests/alloc_reuse.rs`).
+
+use crate::data::DataMatrix;
+
+/// Saved `(prev_c, upper, lower, assign)` engine state plus a validity
+/// flag. The buffers persist (and are reused) across checkpoints and
+/// runs; `valid` marks whether they currently hold a restorable state.
+#[derive(Debug, Default)]
+pub struct SavedBounds {
+    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
+    valid: bool,
+}
+
+impl SavedBounds {
+    /// Mark any held state as non-restorable (engine `reset`). The
+    /// buffers keep their capacity for the next checkpoint.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Whether a rollback would currently restore state.
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Save the engine's live state. Reuses the retained buffers in
+    /// place when every shape matches; reallocates otherwise (first
+    /// checkpoint, or a problem-shape change).
+    pub fn checkpoint(
+        &mut self,
+        prev_c: &DataMatrix,
+        upper: &[f64],
+        lower: &[f64],
+        assign: &[u32],
+    ) {
+        match &mut self.saved {
+            Some((sc, su, sl, sa))
+                if sc.n() == prev_c.n()
+                    && sc.d() == prev_c.d()
+                    && su.len() == upper.len()
+                    && sl.len() == lower.len() =>
+            {
+                sc.as_mut_slice().copy_from_slice(prev_c.as_slice());
+                su.copy_from_slice(upper);
+                sl.copy_from_slice(lower);
+                sa.copy_from_slice(assign);
+            }
+            _ => {
+                self.saved =
+                    Some((prev_c.clone(), upper.to_vec(), lower.to_vec(), assign.to_vec()));
+            }
+        }
+        self.valid = true;
+    }
+
+    /// Restore the saved state into the engine's live buffers, consuming
+    /// the validity flag. Returns `false` (leaving the live state
+    /// untouched) when no restorable state is held — callers then
+    /// proceed with drifted bounds, which is correct but prunes less.
+    pub fn rollback_into(
+        &mut self,
+        prev_c: &mut Option<DataMatrix>,
+        upper: &mut Vec<f64>,
+        lower: &mut Vec<f64>,
+        assign: &mut Vec<u32>,
+    ) -> bool {
+        if !self.valid {
+            return false;
+        }
+        self.valid = false;
+        let Some((sc, su, sl, sa)) = &self.saved else { return false };
+        match prev_c {
+            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
+                p.as_mut_slice().copy_from_slice(sc.as_slice());
+            }
+            _ => *prev_c = Some(sc.clone()),
+        }
+        upper.clear();
+        upper.extend_from_slice(su);
+        lower.clear();
+        lower.extend_from_slice(sl);
+        assign.clear();
+        assign.extend_from_slice(sa);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_then_rollback_roundtrips() {
+        let mut sb = SavedBounds::default();
+        let c = DataMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let upper = vec![0.5, 0.25, 0.75];
+        let lower = vec![1.5, 1.25, 1.75];
+        let assign = vec![0u32, 1, 1];
+        assert!(!sb.is_valid());
+        sb.checkpoint(&c, &upper, &lower, &assign);
+        assert!(sb.is_valid());
+
+        let mut prev_c = Some(DataMatrix::zeros(2, 2));
+        let mut u = vec![9.0; 3];
+        let mut l = vec![9.0; 3];
+        let mut a = vec![7u32; 3];
+        assert!(sb.rollback_into(&mut prev_c, &mut u, &mut l, &mut a));
+        assert_eq!(prev_c.as_ref().unwrap().as_slice(), c.as_slice());
+        assert_eq!(u, upper);
+        assert_eq!(l, lower);
+        assert_eq!(a, assign);
+        // The flag is consumed: a second rollback is a no-op.
+        u[0] = -1.0;
+        assert!(!sb.rollback_into(&mut prev_c, &mut u, &mut l, &mut a));
+        assert_eq!(u[0], -1.0);
+    }
+
+    #[test]
+    fn invalidate_blocks_rollback_but_keeps_buffers() {
+        let mut sb = SavedBounds::default();
+        let c = DataMatrix::zeros(2, 3);
+        sb.checkpoint(&c, &[1.0, 2.0], &[3.0, 4.0], &[0, 1]);
+        sb.invalidate();
+        let mut prev_c = None;
+        let (mut u, mut l, mut a) = (Vec::new(), Vec::new(), Vec::new());
+        assert!(!sb.rollback_into(&mut prev_c, &mut u, &mut l, &mut a));
+        assert!(prev_c.is_none());
+        // A fresh checkpoint revalidates without reallocating shape-matched
+        // buffers.
+        sb.checkpoint(&c, &[5.0, 6.0], &[7.0, 8.0], &[1, 0]);
+        assert!(sb.rollback_into(&mut prev_c, &mut u, &mut l, &mut a));
+        assert_eq!(u, vec![5.0, 6.0]);
+        assert_eq!(a, vec![1, 0]);
+    }
+
+    #[test]
+    fn shape_change_reallocates() {
+        let mut sb = SavedBounds::default();
+        sb.checkpoint(&DataMatrix::zeros(2, 2), &[1.0], &[2.0], &[0]);
+        // Different shapes force the fallback path.
+        sb.checkpoint(&DataMatrix::zeros(3, 2), &[1.0, 2.0], &[3.0, 4.0], &[0, 1]);
+        let mut prev_c = None;
+        let (mut u, mut l, mut a) = (Vec::new(), Vec::new(), Vec::new());
+        assert!(sb.rollback_into(&mut prev_c, &mut u, &mut l, &mut a));
+        assert_eq!(prev_c.unwrap().n(), 3);
+        assert_eq!(u.len(), 2);
+    }
+}

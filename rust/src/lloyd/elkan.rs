@@ -4,7 +4,7 @@
 //! distance evaluations for large `K` — provided as the paper's suggested
 //! "even faster assignment" extension point.
 
-use super::{Assignment, AssignmentEngine};
+use super::{Assignment, AssignmentEngine, SavedBounds};
 use crate::data::DataMatrix;
 use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
@@ -25,11 +25,9 @@ pub struct ElkanEngine {
     lower: Vec<f64>,
     assign: Vec<u32>,
     /// Saved state for [`AssignmentEngine::rollback`] after rejected
-    /// accelerated jumps: `(prev_c, upper, lower, assign)`. The buffers
-    /// are kept (and overwritten in place) across checkpoints and runs;
-    /// `saved_valid` marks whether they currently hold a restorable state.
-    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
-    saved_valid: bool,
+    /// accelerated jumps (shared store/checkpoint/rollback machinery —
+    /// see [`SavedBounds`]).
+    saved: SavedBounds,
     /// Per-call scratch (per-centroid motion, the K×K centroid-centroid
     /// distances and the half nearest-centroid distances), persistent so
     /// warm calls stay allocation-free.
@@ -59,6 +57,13 @@ impl ElkanEngine {
             _ => self.prev_c = Some(c.clone()),
         }
         self.prev_valid = true;
+    }
+
+    /// Live bound state (bounds + assignment) for the checkpoint/rollback
+    /// property tests.
+    #[cfg(test)]
+    pub(crate) fn bound_state(&self) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+        (self.upper.clone(), self.lower.clone(), self.assign.clone())
     }
 
     fn initialize(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
@@ -218,7 +223,7 @@ impl AssignmentEngine for ElkanEngine {
         self.upper.clear();
         self.lower.clear();
         self.assign.clear();
-        self.saved_valid = false;
+        self.saved.invalidate();
     }
 
     fn distance_evals(&self) -> u64 {
@@ -230,51 +235,16 @@ impl AssignmentEngine for ElkanEngine {
             return;
         }
         let Some(prev) = &self.prev_c else { return };
-        match &mut self.saved {
-            // Overwrite the retained buffers in place when shapes match —
-            // checkpoints on warm same-shape runs allocate nothing.
-            Some((sc, su, sl, sa))
-                if sc.n() == prev.n()
-                    && sc.d() == prev.d()
-                    && su.len() == self.upper.len()
-                    && sl.len() == self.lower.len() =>
-            {
-                sc.as_mut_slice().copy_from_slice(prev.as_slice());
-                su.copy_from_slice(&self.upper);
-                sl.copy_from_slice(&self.lower);
-                sa.copy_from_slice(&self.assign);
-            }
-            _ => {
-                self.saved = Some((
-                    prev.clone(),
-                    self.upper.clone(),
-                    self.lower.clone(),
-                    self.assign.clone(),
-                ));
-            }
-        }
-        self.saved_valid = true;
+        self.saved.checkpoint(prev, &self.upper, &self.lower, &self.assign);
     }
 
     fn rollback(&mut self) -> bool {
-        if !self.saved_valid {
-            return false;
-        }
-        self.saved_valid = false;
-        let Some((sc, su, sl, sa)) = &self.saved else { return false };
-        match &mut self.prev_c {
-            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
-                p.as_mut_slice().copy_from_slice(sc.as_slice());
-            }
-            _ => self.prev_c = Some(sc.clone()),
-        }
-        self.upper.clear();
-        self.upper.extend_from_slice(su);
-        self.lower.clear();
-        self.lower.extend_from_slice(sl);
-        self.assign.clear();
-        self.assign.extend_from_slice(sa);
-        true
+        self.saved.rollback_into(
+            &mut self.prev_c,
+            &mut self.upper,
+            &mut self.lower,
+            &mut self.assign,
+        )
     }
 }
 
@@ -287,6 +257,15 @@ mod tests {
     #[test]
     fn matches_brute_force_over_rounds() {
         engine_matches_brute_force(&mut ElkanEngine::new());
+    }
+
+    #[test]
+    fn checkpoint_rollback_reproduces_fresh_engine_state() {
+        crate::lloyd::test_support::checkpoint_rollback_matches_fresh(
+            ElkanEngine::new(),
+            ElkanEngine::new(),
+            ElkanEngine::bound_state,
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! only needs how far each centroid moved), so they survive accelerated
 //! iterates and the occasional revert-to-`C_AU` fall-back.
 
-use super::{Assignment, AssignmentEngine};
+use super::{Assignment, AssignmentEngine, SavedBounds};
 use crate::data::DataMatrix;
 use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
@@ -29,11 +29,9 @@ pub struct HamerlyEngine {
     /// Current assignment.
     assign: Vec<u32>,
     /// Saved state for [`AssignmentEngine::rollback`] after rejected
-    /// accelerated jumps: `(prev_c, upper, lower, assign)`. The buffers are
-    /// kept (and overwritten in place) across checkpoints and runs;
-    /// `saved_valid` marks whether they currently hold a restorable state.
-    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
-    saved_valid: bool,
+    /// accelerated jumps (shared store/checkpoint/rollback machinery —
+    /// see [`SavedBounds`]).
+    saved: SavedBounds,
     /// Per-call scratch (per-centroid motion and half nearest-centroid
     /// distances), persistent so warm calls stay allocation-free.
     moved: Vec<f64>,
@@ -61,6 +59,13 @@ impl HamerlyEngine {
             _ => self.prev_c = Some(c.clone()),
         }
         self.prev_valid = true;
+    }
+
+    /// Live bound state (bounds + assignment) for the checkpoint/rollback
+    /// property tests.
+    #[cfg(test)]
+    pub(crate) fn bound_state(&self) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+        (self.upper.clone(), self.lower.clone(), self.assign.clone())
     }
 
     /// Full O(NK) initialization of bounds + assignment.
@@ -196,7 +201,7 @@ impl AssignmentEngine for HamerlyEngine {
         self.upper.clear();
         self.lower.clear();
         self.assign.clear();
-        self.saved_valid = false;
+        self.saved.invalidate();
     }
 
     fn distance_evals(&self) -> u64 {
@@ -208,50 +213,16 @@ impl AssignmentEngine for HamerlyEngine {
             return;
         }
         let Some(prev) = &self.prev_c else { return };
-        match &mut self.saved {
-            // Overwrite the retained buffers in place when shapes match —
-            // checkpoints on warm same-shape runs allocate nothing.
-            Some((sc, su, sl, sa))
-                if sc.n() == prev.n()
-                    && sc.d() == prev.d()
-                    && su.len() == self.upper.len() =>
-            {
-                sc.as_mut_slice().copy_from_slice(prev.as_slice());
-                su.copy_from_slice(&self.upper);
-                sl.copy_from_slice(&self.lower);
-                sa.copy_from_slice(&self.assign);
-            }
-            _ => {
-                self.saved = Some((
-                    prev.clone(),
-                    self.upper.clone(),
-                    self.lower.clone(),
-                    self.assign.clone(),
-                ));
-            }
-        }
-        self.saved_valid = true;
+        self.saved.checkpoint(prev, &self.upper, &self.lower, &self.assign);
     }
 
     fn rollback(&mut self) -> bool {
-        if !self.saved_valid {
-            return false;
-        }
-        self.saved_valid = false;
-        let Some((sc, su, sl, sa)) = &self.saved else { return false };
-        match &mut self.prev_c {
-            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
-                p.as_mut_slice().copy_from_slice(sc.as_slice());
-            }
-            _ => self.prev_c = Some(sc.clone()),
-        }
-        self.upper.clear();
-        self.upper.extend_from_slice(su);
-        self.lower.clear();
-        self.lower.extend_from_slice(sl);
-        self.assign.clear();
-        self.assign.extend_from_slice(sa);
-        true
+        self.saved.rollback_into(
+            &mut self.prev_c,
+            &mut self.upper,
+            &mut self.lower,
+            &mut self.assign,
+        )
     }
 }
 
@@ -264,6 +235,15 @@ mod tests {
     #[test]
     fn matches_brute_force_over_rounds() {
         engine_matches_brute_force(&mut HamerlyEngine::new());
+    }
+
+    #[test]
+    fn checkpoint_rollback_reproduces_fresh_engine_state() {
+        crate::lloyd::test_support::checkpoint_rollback_matches_fresh(
+            HamerlyEngine::new(),
+            HamerlyEngine::new(),
+            HamerlyEngine::bound_state,
+        );
     }
 
     #[test]

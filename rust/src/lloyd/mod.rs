@@ -10,11 +10,13 @@
 //! al. 2015, for the large-K columns) — plus the PJRT engine in
 //! [`crate::runtime`] that executes the AOT-compiled JAX G-step.
 
+mod bounds;
 mod elkan;
 mod hamerly;
 mod naive;
 mod yinyang;
 
+pub use bounds::SavedBounds;
 pub use elkan::ElkanEngine;
 pub use hamerly::HamerlyEngine;
 pub use naive::NaiveEngine;
@@ -415,6 +417,75 @@ pub(crate) mod test_support {
         let x = synth::gaussian_blobs(&mut rng, n, d, k, 2.0, 0.3);
         let c = x.gather_rows(&crate::rng::sample_indices(n, k, &mut rng));
         (x, c)
+    }
+
+    /// Property test for the shared [`SavedBounds`] machinery: for a bound
+    /// engine, `checkpoint → assign(perturbed centroids) → rollback →
+    /// assign(original)` must reproduce bit-identical assignments *and*
+    /// bounds versus a fresh engine that never jumped, across several
+    /// random problems and perturbations — and stay bit-identical through
+    /// a subsequent Lloyd step.
+    pub fn checkpoint_rollback_matches_fresh<E: AssignmentEngine>(
+        mut engine: E,
+        mut fresh: E,
+        state: impl Fn(&E) -> (Vec<f64>, Vec<f64>, Vec<u32>),
+    ) {
+        use crate::rng::Rng;
+        let pool = ThreadPool::new(1);
+        let mut rng = Pcg32::seed_from_u64(0xB0B5);
+        for round in 0..4u64 {
+            let (x, c) = small_problem(600 + round, 400, 4, 12);
+            engine.reset();
+            fresh.reset();
+            let mut out = Assignment::new();
+            let mut out_fresh = Assignment::new();
+            engine.assign(&x, &c, &pool, &mut out);
+            fresh.assign(&x, &c, &pool, &mut out_fresh);
+            engine.checkpoint();
+            // Jump to a random perturbation (an accelerated candidate)...
+            let mut c_jump = c.clone();
+            for j in 0..c_jump.n() {
+                for t in 0..c_jump.d() {
+                    c_jump[(j, t)] += 0.5 * rng.next_gaussian();
+                }
+            }
+            engine.assign(&x, &c_jump, &pool, &mut out);
+            // ...and roll back, as the solver does on a rejected jump.
+            assert!(engine.rollback(), "round {round}: rollback must restore");
+            // Re-assigning the original centroids must look exactly like a
+            // fresh engine re-assigning them (zero drift both ways).
+            engine.assign(&x, &c, &pool, &mut out);
+            fresh.assign(&x, &c, &pool, &mut out_fresh);
+            assert_eq!(out, out_fresh, "round {round}: assignments diverged after rollback");
+            assert_bound_state_eq(&state(&engine), &state(&fresh), round, "post-rollback");
+            // One real Lloyd step keeps the two engines in lock-step.
+            let mut c_next = c.clone();
+            update_step(&x, &out_fresh, &c, &mut c_next, &pool);
+            engine.assign(&x, &c_next, &pool, &mut out);
+            fresh.assign(&x, &c_next, &pool, &mut out_fresh);
+            assert_eq!(out, out_fresh, "round {round}: assignments diverged after update");
+            assert_bound_state_eq(&state(&engine), &state(&fresh), round, "post-update");
+        }
+    }
+
+    fn assert_bound_state_eq(
+        got: &(Vec<f64>, Vec<f64>, Vec<u32>),
+        want: &(Vec<f64>, Vec<f64>, Vec<u32>),
+        round: u64,
+        stage: &str,
+    ) {
+        assert_eq!(got.2, want.2, "round {round} {stage}: stored assignments diverged");
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&got.0),
+            bits(&want.0),
+            "round {round} {stage}: upper bounds diverged"
+        );
+        assert_eq!(
+            bits(&got.1),
+            bits(&want.1),
+            "round {round} {stage}: lower bounds diverged"
+        );
     }
 
     /// Assert an engine agrees with brute force across several rounds of

@@ -9,7 +9,7 @@
 //! which is exactly what an accepted Anderson jump looks like — and they
 //! scale to the paper's K=100 / K=1000 columns.
 
-use super::{Assignment, AssignmentEngine};
+use super::{Assignment, AssignmentEngine, SavedBounds};
 use crate::data::DataMatrix;
 use crate::linalg::{dist_sq, DistanceKernel};
 use crate::par::{SyncSliceMut, ThreadPool};
@@ -38,10 +38,9 @@ pub struct YinyangEngine {
     /// any centroid of the group **other than the assigned centroid**.
     lower: Vec<f64>,
     assign: Vec<u32>,
-    /// Saved state for [`AssignmentEngine::rollback`], overwritten in
-    /// place across checkpoints (see `saved_valid`, mirroring Hamerly).
-    saved: Option<(DataMatrix, Vec<f64>, Vec<f64>, Vec<u32>)>,
-    saved_valid: bool,
+    /// Saved state for [`AssignmentEngine::rollback`] (shared
+    /// store/checkpoint/rollback machinery — see [`SavedBounds`]).
+    saved: SavedBounds,
     /// Per-call scratch (per-centroid and per-group motion, plus the
     /// group-Lloyd buffers of `build_groups`), persistent so warm calls
     /// stay allocation-free.
@@ -73,6 +72,13 @@ impl YinyangEngine {
             _ => self.prev_c = Some(c.clone()),
         }
         self.prev_valid = true;
+    }
+
+    /// Live bound state (bounds + assignment) for the checkpoint/rollback
+    /// property tests.
+    #[cfg(test)]
+    pub(crate) fn bound_state(&self) -> (Vec<f64>, Vec<f64>, Vec<u32>) {
+        (self.upper.clone(), self.lower.clone(), self.assign.clone())
     }
 
     /// Cluster the centroids into groups with a few Lloyd rounds (groups
@@ -337,7 +343,7 @@ impl AssignmentEngine for YinyangEngine {
         self.lower.clear();
         self.assign.clear();
         self.group_of.clear();
-        self.saved_valid = false;
+        self.saved.invalidate();
     }
 
     fn distance_evals(&self) -> u64 {
@@ -349,51 +355,16 @@ impl AssignmentEngine for YinyangEngine {
             return;
         }
         let Some(prev) = &self.prev_c else { return };
-        match &mut self.saved {
-            // Overwrite the retained buffers in place when shapes match —
-            // checkpoints on warm same-shape runs allocate nothing.
-            Some((sc, su, sl, sa))
-                if sc.n() == prev.n()
-                    && sc.d() == prev.d()
-                    && su.len() == self.upper.len()
-                    && sl.len() == self.lower.len() =>
-            {
-                sc.as_mut_slice().copy_from_slice(prev.as_slice());
-                su.copy_from_slice(&self.upper);
-                sl.copy_from_slice(&self.lower);
-                sa.copy_from_slice(&self.assign);
-            }
-            _ => {
-                self.saved = Some((
-                    prev.clone(),
-                    self.upper.clone(),
-                    self.lower.clone(),
-                    self.assign.clone(),
-                ));
-            }
-        }
-        self.saved_valid = true;
+        self.saved.checkpoint(prev, &self.upper, &self.lower, &self.assign);
     }
 
     fn rollback(&mut self) -> bool {
-        if !self.saved_valid {
-            return false;
-        }
-        self.saved_valid = false;
-        let Some((sc, su, sl, sa)) = &self.saved else { return false };
-        match &mut self.prev_c {
-            Some(p) if p.n() == sc.n() && p.d() == sc.d() => {
-                p.as_mut_slice().copy_from_slice(sc.as_slice());
-            }
-            _ => self.prev_c = Some(sc.clone()),
-        }
-        self.upper.clear();
-        self.upper.extend_from_slice(su);
-        self.lower.clear();
-        self.lower.extend_from_slice(sl);
-        self.assign.clear();
-        self.assign.extend_from_slice(sa);
-        true
+        self.saved.rollback_into(
+            &mut self.prev_c,
+            &mut self.upper,
+            &mut self.lower,
+            &mut self.assign,
+        )
     }
 }
 
@@ -406,6 +377,15 @@ mod tests {
     #[test]
     fn matches_brute_force_over_rounds() {
         engine_matches_brute_force(&mut YinyangEngine::new());
+    }
+
+    #[test]
+    fn checkpoint_rollback_reproduces_fresh_engine_state() {
+        crate::lloyd::test_support::checkpoint_rollback_matches_fresh(
+            YinyangEngine::new(),
+            YinyangEngine::new(),
+            YinyangEngine::bound_state,
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::data::DataMatrix;
 use crate::error::ClusterError;
 use crate::init::InitMethod;
 use crate::kmeans::WorkspaceSpec;
+use crate::stream::BatchSampling;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -162,6 +163,7 @@ pub struct ClusterRequest {
     priority: i32,
     chunk_size: usize,
     batches_per_epoch: usize,
+    batch_sampling: BatchSampling,
 }
 
 impl ClusterRequest {
@@ -246,6 +248,12 @@ impl ClusterRequest {
         self.batches_per_epoch
     }
 
+    /// How mini-batch epochs draw their batches
+    /// (`EngineKind::MiniBatch` only).
+    pub fn batch_sampling(&self) -> BatchSampling {
+        self.batch_sampling
+    }
+
     /// Project the streaming mini-batch configuration (used when
     /// [`ClusterRequest::engine`] is `EngineKind::MiniBatch`).
     pub fn minibatch_config(&self) -> crate::stream::MiniBatchConfig {
@@ -253,6 +261,8 @@ impl ClusterRequest {
             solver: self.solver_config(),
             chunk_size: self.chunk_size,
             batches_per_epoch: self.batches_per_epoch,
+            sampling: self.batch_sampling,
+            seed: self.seed,
             ..crate::stream::MiniBatchConfig::default()
         }
     }
@@ -281,6 +291,15 @@ impl ClusterRequest {
             threads: self.threads,
             artifact_dir: self.artifact_dir.clone(),
         }
+    }
+
+    /// Replace the wall-clock budget with the remaining portion of a
+    /// deadline (coordinator-internal: `time_limit` is a per-job deadline
+    /// measured from submission, so queue wait is deducted before the
+    /// solver starts).
+    pub(crate) fn with_time_limit(mut self, limit: Duration) -> Self {
+        self.time_limit = Some(limit);
+        self
     }
 
     /// Apply service-side defaults: a zero thread count takes the
@@ -324,6 +343,7 @@ pub struct ClusterRequestBuilder {
     priority: i32,
     chunk_size: usize,
     batches_per_epoch: usize,
+    batch_sampling: BatchSampling,
 }
 
 impl Default for ClusterRequestBuilder {
@@ -348,6 +368,7 @@ impl Default for ClusterRequestBuilder {
             priority: 0,
             chunk_size: 4096,
             batches_per_epoch: 0,
+            batch_sampling: BatchSampling::Sequential,
         }
     }
 }
@@ -492,6 +513,17 @@ impl ClusterRequestBuilder {
         self
     }
 
+    /// How mini-batch epochs draw their batches (default
+    /// [`BatchSampling::Sequential`] — the deterministic pass that keeps
+    /// the epoch map AA-friendly). [`BatchSampling::Replacement`] draws
+    /// each batch uniformly with replacement (seeded from
+    /// [`ClusterRequestBuilder::seed`]) for classic mini-batch gradient
+    /// shuffling; it requires a bounded source.
+    pub fn batch_sampling(mut self, sampling: BatchSampling) -> Self {
+        self.batch_sampling = sampling;
+        self
+    }
+
     /// Validate and produce the request.
     pub fn build(self) -> Result<ClusterRequest, ClusterError> {
         let source = self
@@ -556,6 +588,7 @@ impl ClusterRequestBuilder {
             priority: self.priority,
             chunk_size: self.chunk_size,
             batches_per_epoch: self.batches_per_epoch,
+            batch_sampling: self.batch_sampling,
         })
     }
 }
@@ -666,18 +699,24 @@ mod tests {
         assert_eq!(req.priority(), 0);
         assert_eq!(req.chunk_size(), 4096);
         assert_eq!(req.batches_per_epoch(), 0);
+        assert_eq!(req.batch_sampling(), BatchSampling::Sequential);
         let req = ClusterRequest::builder()
             .inline(tiny())
             .k(2)
             .priority(7)
             .chunk_size(128)
             .batches_per_epoch(3)
+            .batch_sampling(BatchSampling::Replacement)
+            .seed(17)
             .build()
             .unwrap();
         assert_eq!(req.priority(), 7);
+        assert_eq!(req.batch_sampling(), BatchSampling::Replacement);
         let mb = req.minibatch_config();
         assert_eq!(mb.chunk_size, 128);
         assert_eq!(mb.batches_per_epoch, 3);
+        assert_eq!(mb.sampling, BatchSampling::Replacement);
+        assert_eq!(mb.seed, 17, "the draw stream seeds from the request seed");
         let bad = ClusterRequest::builder().inline(tiny()).k(2).chunk_size(0).build();
         assert!(matches!(
             bad,

@@ -6,14 +6,29 @@
 //! datasets far larger than RAM stream through the same SIMD assign
 //! kernels the full-batch engines use. On top of the batch loop it applies
 //! the paper's machinery at *epoch* granularity: one pass over the source
-//! is one application of a deterministic fixed-point map `C_e = G(C_{e-1})`
-//! (all built-in sources replay identical chunks after a rewind), and the
+//! is one application of a fixed-point map `C_e = G(C_{e-1})` (exactly
+//! deterministic for the default [`BatchSampling::Sequential`] — all
+//! built-in sources replay identical chunks after a rewind), and the
 //! smoothed per-epoch centroid sequence is Anderson-extrapolated with the
 //! dynamic-`m` safeguard from [`crate::anderson`]. Every epoch ends with a
 //! full-energy checkpoint over the source; the checkpoint guards AA
 //! proposals (reject on non-decrease, Algorithm 1 lines 13–15), drives the
 //! dynamic-`m` controller, restarts the AA history after repeated
 //! rejections, and decides convergence.
+//!
+//! The epoch loop itself is a private `EpochStep` driven by the shared
+//! safeguarded-Anderson [`crate::accel::FixedPointDriver`] (immediate
+//! guard: an epoch is a full pass over the data, far too expensive to
+//! spend on an unguarded extrapolation) — the same audited accept/reject
+//! implementation the full-batch solver uses.
+//!
+//! [`BatchSampling::Replacement`] switches the per-epoch batches from the
+//! deterministic sequential pass to sampling-with-replacement draws (the
+//! classic mini-batch regime: gradient shuffling at the cost of an
+//! epoch map that is no longer the same map every epoch). The checkpoint
+//! energies stay exact full passes, so the guard, the dynamic-`m` rule
+//! and the convergence test are unaffected; the draw stream is seeded
+//! from the request, so reruns stay reproducible.
 //!
 //! The solver runs on the same reusable [`Workspace`] as the full-batch
 //! path — chunk buffer, assignment buffer, Anderson history and the
@@ -23,15 +38,17 @@
 //! `EngineKind::MiniBatch`, which routes [`crate::ClusterSession`] (and
 //! therefore the coordinator) through this module.
 
-use crate::anderson::{AndersonAccelerator, MController};
+use crate::accel::{Advance, Budget, DriverConfig, FixedPointDriver, GuardMode, Step};
+use crate::anderson::AndersonAccelerator;
 use crate::config::{Acceleration, SolverConfig};
 use crate::data::chunks::ChunkSource;
 use crate::data::DataMatrix;
 use crate::error::ClusterError;
-use crate::kmeans::{over_budget, RunReport, Workspace, WorkspaceSpec};
+use crate::kmeans::{RunReport, Workspace, WorkspaceSpec};
 use crate::lloyd;
 use crate::metrics::{PhaseTimer, Stopwatch};
-use crate::observe::{CancelToken, IterationInfo, NoopObserver, Observer, ObserverControl};
+use crate::observe::{CancelToken, NoopObserver, Observer};
+use crate::rng::{Pcg32, Rng};
 
 /// Batch cap per epoch for custom unbounded sources that neither report a
 /// length nor run out (all built-in sources are bounded per pass).
@@ -42,6 +59,44 @@ const UNBOUNDED_EPOCH_BATCHES: usize = 64;
 /// ones, and a stale history that keeps proposing uphill extrapolations
 /// is worse than starting fresh.
 const RESTART_AFTER_REJECTS: u32 = 2;
+
+/// How each epoch draws its mini-batches from the source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchSampling {
+    /// One deterministic pass: the epoch streams the source's chunks in
+    /// order. The epoch map is the same map every epoch, which is the
+    /// friendliest regime for the epoch-level Anderson step — the
+    /// default, and the pre-knob behavior.
+    #[default]
+    Sequential,
+    /// Each batch draws `chunk_size` rows uniformly with replacement
+    /// (seeded from the request): Sculley's i.i.d. mini-batch regime,
+    /// trading epoch-map determinism for gradient shuffling. Requires a
+    /// bounded source ([`ChunkSource::len`] = `Some`); prefer sources
+    /// with random-access [`ChunkSource::gather_rows`] overrides
+    /// (in-memory, mmap shards) — generator sources fall back to a
+    /// re-streaming gather that costs roughly one extra pass per batch.
+    Replacement,
+}
+
+impl BatchSampling {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" => Some(Self::Sequential),
+            "replacement" => Some(Self::Replacement),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::Replacement => "replacement",
+        }
+    }
+}
 
 /// Configuration of one streaming mini-batch run.
 #[derive(Debug, Clone)]
@@ -59,6 +114,12 @@ pub struct MiniBatchConfig {
     pub batches_per_epoch: usize,
     /// Relative epoch-energy change below which the run converges.
     pub convergence_tol: f64,
+    /// How each epoch draws its batches (see [`BatchSampling`]).
+    pub sampling: BatchSampling,
+    /// Seed for the replacement-sampling draw stream (ignored by
+    /// [`BatchSampling::Sequential`]); re-seeded per run so warm reruns
+    /// stay deterministic.
+    pub seed: u64,
 }
 
 impl Default for MiniBatchConfig {
@@ -71,6 +132,8 @@ impl Default for MiniBatchConfig {
             chunk_size: 4096,
             batches_per_epoch: 0,
             convergence_tol: 1e-4,
+            sampling: BatchSampling::Sequential,
+            seed: 42,
         }
     }
 }
@@ -139,54 +202,226 @@ impl MiniBatchSolver {
     }
 }
 
-/// One full-energy checkpoint pass: rewind the source and accumulate the
-/// exact clustering energy of `c` over up to `max_batches` chunks (every
-/// chunk for bounded sources). Returns `Some((energy, samples))`, or
-/// `None` when the cancel token trips or the time budget expires mid-pass
-/// — like the training pass, the checkpoint yields at batch boundaries so
-/// cancellation latency on out-of-core data is one chunk, not one full
-/// dataset scan.
-#[allow(clippy::too_many_arguments)]
-fn checkpoint_energy(
-    ws: &mut Workspace,
-    source: &mut dyn ChunkSource,
-    c: &DataMatrix,
-    chunk: &mut DataMatrix,
-    assign: &mut lloyd::Assignment,
+/// One epoch of the mini-batch map plus its exact-energy checkpoint, as a
+/// [`Step`] for the shared safeguarded-Anderson driver (immediate guard).
+struct EpochStep<'a> {
+    ws: &'a mut Workspace,
+    source: &'a mut dyn ChunkSource,
+    budget: Budget<'a>,
+    phases: PhaseTimer,
+    /// Committed iterate (mutated in place by the mini-batch pass).
+    c: DataMatrix,
+    /// Iterate at the top of the current epoch (partial-epoch revert
+    /// target, and the Anderson residual's base point).
+    c_prev: DataMatrix,
+    /// Staged Anderson proposal awaiting the immediate guard.
+    c_prop: DataMatrix,
+    chunk: DataMatrix,
+    assign: lloyd::Assignment,
+    /// Anderson residual buffer (`None` for un-accelerated runs, which
+    /// never allocate AA state).
+    f_t: Option<Vec<f64>>,
+    /// Per-centroid assigned-sample counts (learning-rate denominators).
+    counts: Vec<f64>,
     chunk_rows: usize,
-    max_batches: usize,
-    phases: &mut PhaseTimer,
-    cancel: &CancelToken,
-    sw: &Stopwatch,
-    limit: Option<std::time::Duration>,
-) -> Result<Option<(f64, u64)>, ClusterError> {
-    source.rewind();
-    let mut energy = 0.0;
-    let mut samples = 0u64;
-    let mut batches = 0usize;
-    while batches < max_batches {
-        if cancel.is_cancelled() || over_budget(sw, limit) {
-            return Ok(None);
+    epoch_batches: usize,
+    eval_batches: usize,
+    /// Samples covered by the last epoch checkpoint (for the report MSE).
+    eval_samples: u64,
+    convergence_tol: f64,
+    sampling: BatchSampling,
+    /// Draw stream + index scratch for [`BatchSampling::Replacement`].
+    sample_rng: Pcg32,
+    sample_idx: Vec<usize>,
+    source_len: Option<usize>,
+}
+
+impl EpochStep<'_> {
+    /// Produce the next training batch into the chunk buffer: the next
+    /// sequential chunk, or a sorted with-replacement draw.
+    fn next_train_chunk(&mut self) -> Result<usize, ClusterError> {
+        match self.sampling {
+            BatchSampling::Sequential => self.source.next_chunk(self.chunk_rows, &mut self.chunk),
+            BatchSampling::Replacement => {
+                let n = self.source_len.expect("replacement sampling requires a bounded source");
+                if n == 0 {
+                    // An empty source has nothing to draw from; report an
+                    // exhausted pass so the epoch converges on the initial
+                    // centroids, exactly like the sequential path.
+                    return Ok(0);
+                }
+                self.sample_idx.clear();
+                for _ in 0..self.chunk_rows {
+                    let i = self.sample_rng.next_below(n);
+                    self.sample_idx.push(i);
+                }
+                // Ascending order lets every source gather in one forward
+                // sweep; the multiset of drawn rows is what matters to the
+                // update, not their order.
+                self.sample_idx.sort_unstable();
+                self.source.gather_rows(&self.sample_idx, &mut self.chunk)?;
+                Ok(self.chunk_rows)
+            }
         }
-        let got = source.next_chunk(chunk_rows, chunk)?;
-        if got == 0 {
-            break;
-        }
-        // Per-chunk reset, as in the training pass: never let bound state
-        // from one chunk's samples prune another's.
-        ws.engine.reset();
-        phases.time("energy", || {
-            ws.engine.assign(chunk, c, &ws.pool, assign);
-            energy += lloyd::energy(chunk, c, assign, &ws.pool);
-        });
-        samples += got as u64;
-        batches += 1;
     }
-    Ok(Some((energy, samples)))
+
+    /// One full-energy checkpoint pass: rewind the source and accumulate
+    /// the exact clustering energy of the committed iterate (or, for the
+    /// immediate guard, the staged candidate) over up to `eval_batches`
+    /// chunks. Returns `Ok(None)` when the budget trips mid-pass — like
+    /// the training pass, the checkpoint yields at batch boundaries so
+    /// cancellation latency on out-of-core data is one chunk, not one
+    /// full dataset scan.
+    fn checkpoint_pass(&mut self, of_candidate: bool) -> Result<Option<(f64, u64)>, ClusterError> {
+        let Self {
+            ws,
+            source,
+            budget,
+            phases,
+            chunk,
+            assign,
+            c,
+            c_prop,
+            chunk_rows,
+            eval_batches,
+            ..
+        } = self;
+        let target: &DataMatrix = if of_candidate { c_prop } else { c };
+        source.rewind();
+        let mut energy = 0.0;
+        let mut samples = 0u64;
+        let mut batches = 0usize;
+        while batches < *eval_batches {
+            if budget.interrupted().is_some() {
+                return Ok(None);
+            }
+            let got = source.next_chunk(*chunk_rows, chunk)?;
+            if got == 0 {
+                break;
+            }
+            // Per-chunk reset, as in the training pass: never let bound
+            // state from one chunk's samples prune another's.
+            ws.engine.reset();
+            phases.time("energy", || {
+                ws.engine.assign(chunk, target, &ws.pool, assign);
+                energy += lloyd::energy(chunk, target, assign, &ws.pool);
+            });
+            samples += got as u64;
+            batches += 1;
+        }
+        Ok(Some((energy, samples)))
+    }
+}
+
+impl Step for EpochStep<'_> {
+    fn advance(&mut self) -> Advance {
+        let (k, d) = (self.c.n(), self.c.d());
+        // ---- Mini-batch pass: one application of the epoch map G.
+        self.c_prev.as_mut_slice().copy_from_slice(self.c.as_slice());
+        self.source.rewind();
+        let mut batches = 0usize;
+        while batches < self.epoch_batches {
+            let got = match self.next_train_chunk() {
+                Ok(got) => got,
+                // Source failures abort the run but are carried out so
+                // the caller restores the workspace buffers first (a
+                // transient IO error must not strip the warm scratch).
+                Err(e) => return Advance::Failed(e),
+            };
+            if got == 0 {
+                break;
+            }
+            // Every chunk is a fresh sample set: drop any per-sample
+            // bound state first. The default mini-batch engine (Naive)
+            // keeps no state and only re-derives small per-chunk norm
+            // caches, but a caller-configured bound engine
+            // (Hamerly/Elkan/Yinyang) would otherwise prune the new chunk
+            // with the previous chunk's bounds — same shapes, different
+            // samples — and silently mis-assign.
+            self.ws.engine.reset();
+            let Self { ws, phases, chunk, c, assign, counts, .. } = self;
+            phases.time("assign", || ws.engine.assign(chunk, c, &ws.pool, assign));
+            phases.time("update", || {
+                for i in 0..got {
+                    let j = assign[i] as usize;
+                    debug_assert!(j < k, "assignment out of range");
+                    counts[j] += 1.0;
+                    let eta = 1.0 / counts[j];
+                    let row = chunk.row(i);
+                    let dst = c.row_mut(j);
+                    for t in 0..d {
+                        dst[t] += eta * (row[t] - dst[t]);
+                    }
+                }
+            });
+            batches += 1;
+            // Batch boundary: cancellation and budgets land within one
+            // chunk. The partial epoch is discarded so the returned state
+            // is always an epoch-boundary iterate with an exact
+            // checkpoint energy.
+            if let Some(cancelled) = self.budget.interrupted() {
+                self.c.as_mut_slice().copy_from_slice(self.c_prev.as_slice());
+                return Advance::Interrupted { cancelled };
+            }
+        }
+        if batches == 0 {
+            // Empty source: the initial centroids are already the answer.
+            return Advance::Converged;
+        }
+        // ---- Full-energy checkpoint at the smoothed iterate G_e (it
+        // yields at batch boundaries exactly like the training pass).
+        match self.checkpoint_pass(false) {
+            Ok(Some((e_g, n_eval))) => {
+                self.eval_samples = n_eval;
+                Advance::Evaluated(Some(e_g))
+            }
+            Ok(None) => {
+                // Interrupted before this epoch's energy was measured:
+                // the epoch is discarded like any other mid-pass break.
+                self.c.as_mut_slice().copy_from_slice(self.c_prev.as_slice());
+                Advance::Interrupted { cancelled: self.budget.is_cancelled() }
+            }
+            Err(e) => Advance::Failed(e),
+        }
+    }
+
+    fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool {
+        let Self { phases, c, c_prev, c_prop, f_t, .. } = self;
+        let f_t = f_t.as_mut().expect("accelerated runs carry the residual buffer");
+        // Anderson step on the epoch sequence: residual against the
+        // epoch's starting point, proposal staged for the immediate
+        // guard.
+        phases.time("anderson", || {
+            crate::linalg::sub(c.as_slice(), c_prev.as_slice(), f_t);
+            acc.propose_into(c.as_slice(), f_t, m_use, c_prop.as_mut_slice())
+        })
+    }
+
+    fn evaluate_candidate(&mut self) -> Result<Option<f64>, ClusterError> {
+        // The guard's measurement is a full checkpoint pass over the
+        // staged candidate; its sample count is discarded (the epoch
+        // checkpoint already set `eval_samples`).
+        self.checkpoint_pass(true).map(|r| r.map(|(e, _)| e))
+    }
+
+    fn accept_candidate(&mut self) {
+        self.c.as_mut_slice().copy_from_slice(self.c_prop.as_slice());
+    }
+
+    fn plateaued(&self, e_prev: f64, e: f64) -> bool {
+        e_prev.is_finite()
+            && (e_prev - e).abs() <= self.convergence_tol * e_prev.abs().max(f64::MIN_POSITIVE)
+    }
+
+    fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+        (&self.c, &self.phases)
+    }
 }
 
 /// The mini-batch epoch loop, shared by [`MiniBatchSolver`] and the
-/// session/coordinator path (which hands in the session's warm workspace).
+/// session/coordinator path (which hands in the session's warm workspace):
+/// buffer setup from the workspace scratch, an [`EpochStep`] over the
+/// shared driver, and report assembly.
 pub(crate) fn run_on_workspace(
     cfg: &MiniBatchConfig,
     ws: &mut Workspace,
@@ -210,30 +445,32 @@ pub(crate) fn run_on_workspace(
     if c0.n() == 0 {
         return Err(ClusterError::invalid("k", "at least one centroid is required"));
     }
+    let source_len = source.len();
+    if cfg.sampling == BatchSampling::Replacement && source_len.is_none() {
+        return Err(ClusterError::invalid(
+            "sampling",
+            "sampling-with-replacement requires a bounded source (ChunkSource::len = Some)",
+        ));
+    }
     let sw = Stopwatch::start();
-    let mut phases = PhaseTimer::new();
     let (k, d) = (c0.n(), c0.d());
     let dim = k * d;
     let chunk_rows = cfg.chunk_size.max(1);
-    let (use_aa, m0, dynamic) = match cfg.solver.accel {
-        Acceleration::None => (false, 0, false),
-        Acceleration::FixedM(m) => (true, m, false),
-        Acceleration::DynamicM(m) => (true, m, true),
-    };
+    let use_aa = !matches!(cfg.solver.accel, Acceleration::None);
     // Epoch batch budget: an explicit cap, a full pass for bounded
-    // sources, or the defensive cap for custom unbounded generators.
+    // sources (one forward pass sequentially; the same number of draws
+    // under replacement sampling), or the defensive cap for custom
+    // unbounded generators.
     let epoch_batches = if cfg.batches_per_epoch > 0 {
         cfg.batches_per_epoch
-    } else if source.len().is_some() {
-        usize::MAX
     } else {
-        UNBOUNDED_EPOCH_BATCHES
+        match (cfg.sampling, source_len) {
+            (BatchSampling::Sequential, Some(_)) => usize::MAX,
+            (BatchSampling::Replacement, Some(n)) => n.div_ceil(chunk_rows).max(1),
+            _ => UNBOUNDED_EPOCH_BATCHES,
+        }
     };
-    let eval_batches = if source.len().is_some() {
-        usize::MAX
-    } else {
-        epoch_batches
-    };
+    let eval_batches = if source_len.is_some() { usize::MAX } else { epoch_batches };
 
     ws.scratch.begin_run();
     ws.engine.reset();
@@ -247,254 +484,96 @@ pub(crate) fn run_on_workspace(
     // Take order mirrors the put order below (LIFO pool): the chunk
     // buffer keeps its large allocation across runs instead of rotating
     // into a centroid-sized slot.
-    let mut chunk = ws.scratch.take_mat(chunk_rows, d);
-    let mut c_prev = ws.scratch.take_mat(k, d);
-    let mut c_prop = ws.scratch.take_mat(k, d);
-    let mut assign = ws.scratch.take_assign();
+    let chunk = ws.scratch.take_mat(chunk_rows, d);
+    let c_prev = ws.scratch.take_mat(k, d);
+    let c_prop = ws.scratch.take_mat(k, d);
+    let assign = ws.scratch.take_assign();
     // Anderson state only exists for accelerated runs: a plain mini-batch
     // run neither allocates the m̄ history columns nor the residual.
-    let mut aa_state: Option<(AndersonAccelerator, Vec<f64>)> = if use_aa {
-        let acc = ws.scratch.take_accelerator(cfg.solver.m_max.max(1), dim);
-        Some((acc, ws.scratch.take_f_t(dim)))
+    let mut acc: Option<AndersonAccelerator> = None;
+    let f_t = if use_aa {
+        acc = Some(ws.scratch.take_accelerator(cfg.solver.m_max.max(1), dim));
+        Some(ws.scratch.take_f_t(dim))
     } else {
         None
     };
     let mut counts = ws.scratch.take_trace_f64();
     counts.clear();
     counts.resize(k, 0.0);
-    let mut trace = if cfg.solver.record_trace {
+    let trace = if cfg.solver.record_trace {
         ws.scratch.take_trace_f64()
     } else {
         Vec::new()
     };
-    let mut m_trace = if cfg.solver.record_trace {
+    let m_trace = if cfg.solver.record_trace {
         ws.scratch.take_trace_usize()
     } else {
         Vec::new()
     };
-    let mut controller = MController::new(
-        m0.min(cfg.solver.m_max),
-        cfg.solver.m_max,
-        cfg.solver.epsilon1,
-        cfg.solver.epsilon2,
+    let sample_idx = if cfg.sampling == BatchSampling::Replacement {
+        ws.scratch.take_trace_usize()
+    } else {
+        Vec::new()
+    };
+
+    let budget = Budget::new(&sw, cfg.solver.time_limit, cancel);
+    let mut step = EpochStep {
+        ws,
+        source,
+        budget,
+        phases: PhaseTimer::new(),
+        c,
+        c_prev,
+        c_prop,
+        chunk,
+        assign,
+        f_t,
+        counts,
+        chunk_rows,
+        epoch_batches,
+        eval_batches,
+        eval_samples: 0,
+        convergence_tol: cfg.convergence_tol,
+        sampling: cfg.sampling,
+        sample_rng: Pcg32::seed_from_u64(cfg.seed),
+        sample_idx,
+        source_len,
+    };
+    let driver = FixedPointDriver::new(
+        DriverConfig {
+            accel: cfg.solver.accel,
+            m_max: cfg.solver.m_max,
+            epsilon1: cfg.solver.epsilon1,
+            epsilon2: cfg.solver.epsilon2,
+            max_iters: cfg.solver.max_iters,
+            record_trace: cfg.solver.record_trace,
+            trace_m: true,
+            guard: GuardMode::Immediate,
+            restart_after_rejects: Some(RESTART_AFTER_REJECTS),
+            check_at_top: true,
+        },
+        acc.as_mut(),
+        budget,
+        trace,
+        m_trace,
     );
+    let outcome = driver.run(&mut step, observer);
 
-    let mut e_prev = f64::INFINITY;
-    let mut decrease_prev = f64::INFINITY;
-    let mut epochs = 0usize;
-    let mut accepted = 0usize;
-    let mut rejects = 0u32;
-    let mut eval_samples = 0u64;
-    let mut converged = false;
-    let mut cancelled = false;
-    let mut stopped_early = false;
-    let mut mid_epoch_break = false;
-    // Source failures abort the run but must still flow past the buffer
-    // put-backs below (a transient IO error must not strip the workspace
-    // of its warm scratch), so they are carried out of the loop instead
-    // of early-returned.
-    let mut stream_error: Option<ClusterError> = None;
-
-    'epochs: for _epoch in 1..=cfg.solver.max_iters {
-        if cancel.is_cancelled() || over_budget(&sw, cfg.solver.time_limit) {
-            cancelled = cancel.is_cancelled();
-            stopped_early = !cancelled;
-            break;
-        }
-        // ---- Mini-batch pass: one application of the epoch map G.
-        c_prev.as_mut_slice().copy_from_slice(c.as_slice());
-        source.rewind();
-        let mut batches = 0usize;
-        while batches < epoch_batches {
-            let got = match source.next_chunk(chunk_rows, &mut chunk) {
-                Ok(got) => got,
-                Err(e) => {
-                    stream_error = Some(e);
-                    break 'epochs;
-                }
-            };
-            if got == 0 {
-                break;
-            }
-            // Every chunk is a fresh sample set: drop any per-sample bound
-            // state first. The default mini-batch engine (Naive) keeps no
-            // state and only re-derives small per-chunk norm caches, but a
-            // caller-configured bound engine (Hamerly/Elkan/Yinyang) would
-            // otherwise prune the new chunk with the previous chunk's
-            // bounds — same shapes, different samples — and silently
-            // mis-assign.
-            ws.engine.reset();
-            phases.time("assign", || ws.engine.assign(&chunk, &c, &ws.pool, &mut assign));
-            phases.time("update", || {
-                for i in 0..got {
-                    let j = assign[i] as usize;
-                    debug_assert!(j < k, "assignment out of range");
-                    counts[j] += 1.0;
-                    let eta = 1.0 / counts[j];
-                    let row = chunk.row(i);
-                    let dst = c.row_mut(j);
-                    for t in 0..d {
-                        dst[t] += eta * (row[t] - dst[t]);
-                    }
-                }
-            });
-            batches += 1;
-            // Batch boundary: cancellation and budgets land within one
-            // chunk. The partial epoch is discarded below so the returned
-            // state is always an epoch-boundary iterate with an exact
-            // checkpoint energy.
-            if cancel.is_cancelled() || over_budget(&sw, cfg.solver.time_limit) {
-                cancelled = cancel.is_cancelled();
-                stopped_early = !cancelled;
-                mid_epoch_break = true;
-                break 'epochs;
-            }
-        }
-        if batches == 0 {
-            // Empty source: the initial centroids are already the answer.
-            converged = true;
-            break;
-        }
-        // ---- Full-energy checkpoint at the smoothed iterate G_e (it
-        // yields at batch boundaries exactly like the training pass).
-        let (e_g, n_eval) = match checkpoint_energy(
-            ws,
-            source,
-            &c,
-            &mut chunk,
-            &mut assign,
-            chunk_rows,
-            eval_batches,
-            &mut phases,
-            cancel,
-            &sw,
-            cfg.solver.time_limit,
-        ) {
-            Ok(Some(measured)) => measured,
-            Ok(None) => {
-                // Interrupted before this epoch's energy was measured: the
-                // epoch is discarded like any other mid-pass break.
-                cancelled = cancel.is_cancelled();
-                stopped_early = !cancelled;
-                mid_epoch_break = true;
-                break;
-            }
-            Err(e) => {
-                stream_error = Some(e);
-                break;
-            }
-        };
-        epochs += 1;
-        eval_samples = n_eval;
-        let mut e = e_g;
-        // Dynamic-m safeguard on the epoch-energy decrease ratio.
-        if dynamic {
-            controller.adjust(e_prev - e_g, decrease_prev);
-        }
-        // ---- Anderson step on the epoch sequence, guarded by the
-        // checkpoint energy (reject ⇒ keep the plain mini-batch iterate).
-        let mut candidate = false;
-        let mut accepted_this = false;
-        if let Some((acc, f_t)) = aa_state.as_mut() {
-            candidate = phases.time("anderson", || {
-                crate::linalg::sub(c.as_slice(), c_prev.as_slice(), f_t);
-                acc.propose_into(c.as_slice(), f_t, controller.m(), c_prop.as_mut_slice())
-            });
-            if candidate {
-                match checkpoint_energy(
-                    ws,
-                    source,
-                    &c_prop,
-                    &mut chunk,
-                    &mut assign,
-                    chunk_rows,
-                    eval_batches,
-                    &mut phases,
-                    cancel,
-                    &sw,
-                    cfg.solver.time_limit,
-                ) {
-                    Ok(Some((e_p, _))) if e_p < e_g => {
-                        c.as_mut_slice().copy_from_slice(c_prop.as_slice());
-                        e = e_p;
-                        accepted += 1;
-                        accepted_this = true;
-                        rejects = 0;
-                    }
-                    Ok(Some(_)) => {
-                        rejects += 1;
-                        if rejects >= RESTART_AFTER_REJECTS {
-                            acc.reset();
-                            rejects = 0;
-                        }
-                    }
-                    // Interrupted mid-guard: keep the plain iterate (its
-                    // energy e_g is exact); the next epoch-top check ends
-                    // the run before any further work.
-                    Ok(None) => {}
-                    Err(e) => {
-                        stream_error = Some(e);
-                        break;
-                    }
-                }
-            }
-        }
-        if cfg.solver.record_trace {
-            trace.push(e);
-            m_trace.push(controller.m());
-        }
-        let plateaued = e_prev.is_finite()
-            && (e_prev - e).abs() <= cfg.convergence_tol * e_prev.abs().max(f64::MIN_POSITIVE);
-        decrease_prev = e_prev - e;
-        e_prev = e;
-        let control = observer.on_iteration(&IterationInfo {
-            iteration: epochs,
-            energy: Some(e),
-            m: controller.m(),
-            accelerated_candidate: candidate,
-            accepted: accepted_this,
-            centroids: &c,
-            phases: &phases,
-        });
-        if control == ObserverControl::Stop {
-            stopped_early = true;
-            break;
-        }
-        if plateaued {
-            converged = true;
-            break;
-        }
-    }
-
-    // An interrupted epoch is discarded: revert to the last epoch-boundary
-    // iterate, whose checkpoint energy (`e_prev`) is exact.
-    if mid_epoch_break {
-        c.as_mut_slice().copy_from_slice(c_prev.as_slice());
-    }
+    // The final energy is the last epoch's exact checkpoint; runs that
+    // never completed an epoch measure the returned centroids once —
+    // unless the budget is already gone, in which case the interruptible
+    // pass bails on its first batch. Source failures are carried past the
+    // buffer put-backs below.
+    let mut stream_error = outcome.error;
     let (energy, n_eval) = if stream_error.is_some() {
         (f64::INFINITY, 1)
-    } else if epochs > 0 {
-        (e_prev, eval_samples.max(1))
-    } else if cancelled {
+    } else if outcome.iterations > 0 {
+        (outcome.last_energy, step.eval_samples.max(1))
+    } else if outcome.cancelled {
         // Fast cancel before the first checkpoint: no energy measured.
         (f64::INFINITY, 1)
     } else {
-        // No epoch completed (empty source / immediate stop): measure the
-        // returned centroids once — unless the budget is already gone, in
-        // which case the interruptible pass bails on its first batch.
-        match checkpoint_energy(
-            ws,
-            source,
-            &c,
-            &mut chunk,
-            &mut assign,
-            chunk_rows,
-            eval_batches,
-            &mut phases,
-            cancel,
-            &sw,
-            cfg.solver.time_limit,
-        ) {
+        match step.checkpoint_pass(false) {
             Ok(Some((e0, n0))) => (e0, n0.max(1)),
             Ok(None) => (f64::INFINITY, 1),
             Err(e) => {
@@ -504,30 +583,37 @@ pub(crate) fn run_on_workspace(
         }
     };
 
+    let EpochStep { ws, phases, c, c_prev, c_prop, chunk, assign, f_t, counts, sample_idx, .. } =
+        step;
     ws.scratch.put_mat(c_prop);
     ws.scratch.put_mat(c_prev);
     ws.scratch.put_mat(chunk);
     ws.scratch.put_assign(assign);
-    if let Some((acc, f_t)) = aa_state {
+    if let Some(f_t) = f_t {
         ws.scratch.put_f_t(f_t);
+    }
+    if let Some(acc) = acc {
         ws.scratch.put_accelerator(acc);
     }
     ws.scratch.put_trace_f64(counts);
+    if sample_idx.capacity() > 0 {
+        ws.scratch.put_trace_usize(sample_idx);
+    }
     // Buffers are home; only now may a carried source failure surface.
     if let Some(e) = stream_error {
         return Err(e);
     }
     let report = RunReport {
-        iterations: epochs,
-        accepted,
+        iterations: outcome.iterations,
+        accepted: outcome.accepted,
         seconds: sw.seconds(),
         energy,
         mse: energy / n_eval as f64,
-        converged,
-        cancelled,
-        stopped_early,
-        energy_trace: trace,
-        m_trace,
+        converged: outcome.converged,
+        cancelled: outcome.cancelled,
+        stopped_early: outcome.stopped_early,
+        energy_trace: outcome.energy_trace,
+        m_trace: outcome.m_trace,
         dist_evals: ws.engine.distance_evals() - evals0,
         phases,
         centroids: c,
@@ -561,6 +647,8 @@ mod tests {
             chunk_size: chunk,
             batches_per_epoch: 0,
             convergence_tol: 1e-5,
+            sampling: BatchSampling::Sequential,
+            seed: 42,
         }
     }
 
@@ -679,5 +767,130 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn replacement_sampling_matches_manual_draws() {
+        // One epoch with replacement sampling equals a hand transcription
+        // drawing the same seeded index stream.
+        let mut rng = Pcg32::seed_from_u64(14);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 500, 2, 3, 2.0, 0.3));
+        let c0 = x.gather_rows(&[0, 200, 400]);
+        let mut config = cfg(Acceleration::None, 100);
+        config.solver.max_iters = 1;
+        config.sampling = BatchSampling::Replacement;
+        config.seed = 99;
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let report = solver.run(&mut source, &c0).unwrap();
+
+        // Reference: 500 / 100 = 5 batches of 100 sorted draws each.
+        let mut draw_rng = Pcg32::seed_from_u64(99);
+        let mut c = c0.clone();
+        let mut counts = vec![0.0f64; 3];
+        for _batch in 0..5 {
+            let mut idx: Vec<usize> = (0..100).map(|_| draw_rng.next_below(500)).collect();
+            idx.sort_unstable();
+            let chunk = x.gather_rows(&idx);
+            let assign = brute_force_assign(&chunk, &c);
+            for i in 0..chunk.n() {
+                let j = assign[i] as usize;
+                counts[j] += 1.0;
+                let eta = 1.0 / counts[j];
+                for t in 0..2 {
+                    c[(j, t)] += eta * (chunk[(i, t)] - c[(j, t)]);
+                }
+            }
+        }
+        for j in 0..3 {
+            for t in 0..2 {
+                assert!(
+                    (report.centroids[(j, t)] - c[(j, t)]).abs() < 1e-9,
+                    "centroid {j} dim {t}: {} vs reference {}",
+                    report.centroids[(j, t)],
+                    c[(j, t)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replacement_sampling_reruns_deterministically() {
+        let mut rng = Pcg32::seed_from_u64(15);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 1500, 3, 4, 2.5, 0.25));
+        let mut srng = Pcg32::seed_from_u64(15);
+        let c0 = seed_centroids(&x, 4, InitMethod::KMeansPlusPlus, &mut srng);
+        let mut config = cfg(Acceleration::DynamicM(2), 256);
+        config.sampling = BatchSampling::Replacement;
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let r1 = solver.run(&mut source, &c0).unwrap();
+        assert!(r1.energy.is_finite() && r1.iterations >= 1);
+        let (it1, e1) = (r1.iterations, r1.energy);
+        solver.ws.recycle(r1);
+        source.rewind();
+        let r2 = solver.run(&mut source, &c0).unwrap();
+        assert_eq!(r2.iterations, it1, "seeded draw stream ⇒ identical reruns");
+        assert_eq!(r2.energy.to_bits(), e1.to_bits());
+    }
+
+    #[test]
+    fn empty_source_converges_with_initial_centroids_in_both_sampling_modes() {
+        let x = Arc::new(DataMatrix::zeros(0, 2));
+        let c0 = DataMatrix::from_rows(&[&[0.5, -0.5]]);
+        for sampling in [BatchSampling::Sequential, BatchSampling::Replacement] {
+            let mut config = cfg(Acceleration::DynamicM(2), 8);
+            config.sampling = sampling;
+            let mut solver = MiniBatchSolver::try_new(config).unwrap();
+            let mut source = InMemoryChunks::new(Arc::clone(&x));
+            let report = solver.run(&mut source, &c0).unwrap();
+            assert!(report.converged, "{sampling:?}: empty source must converge");
+            assert_eq!(report.iterations, 0, "{sampling:?}");
+            assert_eq!(
+                report.centroids.as_slice(),
+                c0.as_slice(),
+                "{sampling:?}: the initial centroids are already the answer"
+            );
+        }
+    }
+
+    #[test]
+    fn replacement_sampling_rejects_unbounded_sources() {
+        /// A source that never reports a length.
+        struct Endless;
+        impl ChunkSource for Endless {
+            fn d(&self) -> usize {
+                2
+            }
+            fn len(&self) -> Option<usize> {
+                None
+            }
+            fn next_chunk(
+                &mut self,
+                max_rows: usize,
+                out: &mut DataMatrix,
+            ) -> Result<usize, ClusterError> {
+                out.resize_rows(max_rows.max(1));
+                Ok(max_rows.max(1))
+            }
+            fn rewind(&mut self) {}
+        }
+        let c0 = DataMatrix::zeros(2, 2);
+        let mut config = cfg(Acceleration::None, 16);
+        config.sampling = BatchSampling::Replacement;
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        match solver.run(&mut Endless, &c0) {
+            Err(ClusterError::InvalidRequest { field: "sampling", .. }) => {}
+            other => panic!("expected a typed sampling error, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn batch_sampling_parses_and_names() {
+        assert_eq!(BatchSampling::parse("sequential"), Some(BatchSampling::Sequential));
+        assert_eq!(BatchSampling::parse("Replacement"), Some(BatchSampling::Replacement));
+        assert_eq!(BatchSampling::parse("iid"), None);
+        assert_eq!(BatchSampling::default(), BatchSampling::Sequential);
+        assert_eq!(BatchSampling::Replacement.name(), "replacement");
     }
 }

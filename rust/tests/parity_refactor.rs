@@ -1,0 +1,421 @@
+//! Parity harness for the `accel::FixedPointDriver` refactor.
+//!
+//! The reference functions below are *verbatim transcriptions* of the
+//! pre-refactor solver loops (the hand-rolled `run_accelerated` /
+//! `run_lloyd` bodies in `kmeans`, and the epoch loop in `stream`, as of
+//! PR 4), rebuilt from the crate's public primitives — the same engines,
+//! the same `update_and_energy` arithmetic, the same
+//! `AndersonAccelerator` / `MController` sequence, the same
+//! checkpoint/rollback calls in the same order. With one thread, every
+//! floating-point operation happens in the same order as the old loops,
+//! so the refactored solvers must reproduce the references **bit for
+//! bit**: identical final energies (compared via `to_bits`), identical
+//! iteration/epoch counts, identical acceptance counts.
+//!
+//! If a driver change alters any accept/reject decision, guard ordering,
+//! convergence test or controller update, these tests fail — they are the
+//! "behavior preserved exactly" contract of the refactor.
+
+use aakm::anderson::{AndersonAccelerator, MController};
+use aakm::config::{Acceleration, EngineKind, Precision, SolverConfig};
+use aakm::data::chunks::{ChunkSource, InMemoryChunks};
+use aakm::data::{synth, DataMatrix};
+use aakm::init::{seed_centroids, InitMethod};
+use aakm::kmeans::Solver;
+use aakm::lloyd::{self, Assignment, AssignmentEngine};
+use aakm::par::ThreadPool;
+use aakm::rng::Pcg32;
+use aakm::stream::{BatchSampling, MiniBatchConfig, MiniBatchSolver};
+use std::sync::Arc;
+
+/// Paper-default solver knobs the references hard-code (the library runs
+/// use `SolverConfig::default()`, which carries the same values).
+const M_MAX: usize = 30;
+const EPSILON1: f64 = 0.02;
+const EPSILON2: f64 = 0.5;
+const MAX_ITERS: usize = 5000;
+
+fn problem(seed: u64, n: usize, d: usize, k: usize) -> (DataMatrix, DataMatrix) {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let x = synth::gaussian_blobs(&mut rng, n, d, k, 2.0, 0.4);
+    let c0 = seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut rng);
+    (x, c0)
+}
+
+/// Pre-refactor `Solver::run_accelerated`, transcribed: Algorithm 1 with
+/// the fused update+energy pass, the deferred energy guard with engine
+/// checkpoint/rollback, the accelerated-convergence retry, and the
+/// (optional) dynamic-m controller.
+fn reference_accelerated(
+    x: &DataMatrix,
+    c0: &DataMatrix,
+    engine_kind: EngineKind,
+    m0: usize,
+    dynamic: bool,
+) -> (f64, usize, usize, bool) {
+    let pool = ThreadPool::new(1);
+    let mut engine = lloyd::try_make_engine(engine_kind, Precision::F64).unwrap();
+    let (k, d) = (c0.n(), c0.d());
+    let dim = k * d;
+    let mut acc = AndersonAccelerator::new(M_MAX.max(1), dim);
+    let mut controller = MController::new(m0.min(M_MAX), M_MAX, EPSILON1, EPSILON2);
+
+    // Line 1: C^1 = C_AU^1 = G(C^0).
+    let mut assign = Assignment::new();
+    engine.assign(x, c0, &pool, &mut assign);
+    let mut c_au = DataMatrix::zeros(k, d);
+    lloyd::update_step(x, &assign, c0, &mut c_au, &pool);
+    let mut c = c_au.clone();
+    let mut c_next = DataMatrix::zeros(k, d);
+    let mut f_t = vec![0.0; dim];
+    let mut prev_assign = std::mem::take(&mut assign);
+
+    let mut e_prev = f64::INFINITY;
+    let mut decrease_prev = f64::INFINITY;
+    let mut candidate_was_accel = false;
+    let mut iterations = 0usize;
+    let mut accepted = 0usize;
+    let mut converged = false;
+
+    for _t in 1..=MAX_ITERS {
+        engine.assign(x, &c, &pool, &mut assign);
+        if prev_assign.as_slice() == assign.as_slice() {
+            if !candidate_was_accel {
+                converged = true;
+                break;
+            }
+            c.as_mut_slice().copy_from_slice(c_au.as_slice());
+            engine.rollback();
+            candidate_was_accel = false;
+            continue;
+        }
+        iterations += 1;
+        let (_, mut e) = lloyd::update_and_energy(x, &assign, &c, &mut c_next, &pool);
+        if dynamic {
+            controller.adjust(e_prev - e, decrease_prev);
+        }
+        if e >= e_prev {
+            std::mem::swap(&mut c, &mut c_au);
+            engine.rollback();
+            engine.assign(x, &c, &pool, &mut assign);
+            if prev_assign.as_slice() == assign.as_slice() {
+                converged = true;
+                iterations -= 1;
+                break;
+            }
+            let (_, e2) = lloyd::update_and_energy(x, &assign, &c, &mut c_next, &pool);
+            e = e2;
+        } else if candidate_was_accel {
+            accepted += 1;
+        }
+        decrease_prev = e_prev - e;
+        e_prev = e;
+        std::mem::swap(&mut c_au, &mut c_next);
+        aakm::linalg::sub(c_au.as_slice(), c.as_slice(), &mut f_t);
+        candidate_was_accel =
+            acc.propose_into(c_au.as_slice(), &f_t, controller.m(), c.as_mut_slice());
+        if candidate_was_accel {
+            engine.checkpoint();
+        }
+        std::mem::swap(&mut prev_assign, &mut assign);
+    }
+
+    let final_assign = if !prev_assign.is_empty() { prev_assign } else { assign };
+    let energy = lloyd::energy(x, &c, &final_assign, &pool);
+    (energy, iterations, accepted, converged)
+}
+
+/// Pre-refactor `Solver::run_lloyd`, transcribed (no trace, no budget).
+fn reference_lloyd(
+    x: &DataMatrix,
+    c0: &DataMatrix,
+    engine_kind: EngineKind,
+) -> (f64, usize, bool) {
+    let pool = ThreadPool::new(1);
+    let mut engine = lloyd::try_make_engine(engine_kind, Precision::F64).unwrap();
+    let (k, d) = (c0.n(), c0.d());
+    let mut c = c0.clone();
+    let mut c_next = DataMatrix::zeros(k, d);
+    let mut assign = Assignment::new();
+    let mut prev_assign = Assignment::new();
+    let mut iterations = 0usize;
+    let mut converged = false;
+    for _t in 0..MAX_ITERS {
+        engine.assign(x, &c, &pool, &mut assign);
+        if prev_assign.as_slice() == assign.as_slice() {
+            converged = true;
+            break;
+        }
+        iterations += 1;
+        lloyd::update_step(x, &assign, &c, &mut c_next, &pool);
+        std::mem::swap(&mut prev_assign, &mut assign);
+        std::mem::swap(&mut c, &mut c_next);
+    }
+    let final_assign = if !prev_assign.is_empty() { prev_assign } else { assign };
+    let energy = lloyd::energy(x, &c, &final_assign, &pool);
+    (energy, iterations, converged)
+}
+
+/// One exact full-energy checkpoint pass (the pre-refactor
+/// `checkpoint_energy`, without budget yields).
+fn reference_checkpoint(
+    engine: &mut dyn AssignmentEngine,
+    source: &mut InMemoryChunks,
+    c: &DataMatrix,
+    chunk: &mut DataMatrix,
+    assign: &mut Assignment,
+    chunk_rows: usize,
+    pool: &ThreadPool,
+) -> f64 {
+    source.rewind();
+    let mut energy = 0.0;
+    loop {
+        let got = source.next_chunk(chunk_rows, chunk).unwrap();
+        if got == 0 {
+            break;
+        }
+        engine.reset();
+        engine.assign(chunk, c, pool, assign);
+        energy += lloyd::energy(chunk, c, assign, pool);
+    }
+    energy
+}
+
+/// Pre-refactor `stream::run_on_workspace`, transcribed for an in-memory
+/// source: sequential epochs, full checkpoint per epoch, immediate AA
+/// guard with restart after two consecutive rejections, plateau
+/// convergence.
+fn reference_minibatch(
+    x: &Arc<DataMatrix>,
+    c0: &DataMatrix,
+    chunk_rows: usize,
+    accel: Acceleration,
+    max_epochs: usize,
+    tol: f64,
+) -> (f64, usize, usize, bool) {
+    let pool = ThreadPool::new(1);
+    let mut engine = lloyd::try_make_engine(EngineKind::MiniBatch, Precision::F64).unwrap();
+    let (k, d) = (c0.n(), c0.d());
+    let dim = k * d;
+    let (use_aa, m0, dynamic) = match accel {
+        Acceleration::None => (false, 0, false),
+        Acceleration::FixedM(m) => (true, m, false),
+        Acceleration::DynamicM(m) => (true, m, true),
+    };
+    let mut c = c0.clone();
+    let mut chunk = DataMatrix::zeros(0, d);
+    let mut c_prev = DataMatrix::zeros(k, d);
+    let mut c_prop = DataMatrix::zeros(k, d);
+    let mut assign = Assignment::new();
+    let mut acc = AndersonAccelerator::new(M_MAX.max(1), dim);
+    let mut f_t = vec![0.0; dim];
+    let mut counts = vec![0.0f64; k];
+    let mut controller = MController::new(m0.min(M_MAX), M_MAX, EPSILON1, EPSILON2);
+    let mut source = InMemoryChunks::new(Arc::clone(x));
+
+    let mut e_prev = f64::INFINITY;
+    let mut decrease_prev = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut accepted = 0usize;
+    let mut rejects = 0u32;
+    let mut converged = false;
+
+    for _epoch in 1..=max_epochs {
+        // ---- Mini-batch pass: one application of the epoch map G.
+        c_prev.as_mut_slice().copy_from_slice(c.as_slice());
+        source.rewind();
+        let mut batches = 0usize;
+        loop {
+            let got = source.next_chunk(chunk_rows, &mut chunk).unwrap();
+            if got == 0 {
+                break;
+            }
+            engine.reset();
+            engine.assign(&chunk, &c, &pool, &mut assign);
+            for i in 0..got {
+                let j = assign[i] as usize;
+                counts[j] += 1.0;
+                let eta = 1.0 / counts[j];
+                for t in 0..d {
+                    let v = chunk[(i, t)];
+                    c[(j, t)] += eta * (v - c[(j, t)]);
+                }
+            }
+            batches += 1;
+        }
+        if batches == 0 {
+            converged = true;
+            break;
+        }
+        // ---- Full-energy checkpoint at the smoothed iterate.
+        let e_g = reference_checkpoint(
+            engine.as_mut(),
+            &mut source,
+            &c,
+            &mut chunk,
+            &mut assign,
+            chunk_rows,
+            &pool,
+        );
+        epochs += 1;
+        let mut e = e_g;
+        if dynamic {
+            controller.adjust(e_prev - e_g, decrease_prev);
+        }
+        // ---- Immediate AA guard on the epoch sequence.
+        if use_aa {
+            aakm::linalg::sub(c.as_slice(), c_prev.as_slice(), &mut f_t);
+            let candidate =
+                acc.propose_into(c.as_slice(), &f_t, controller.m(), c_prop.as_mut_slice());
+            if candidate {
+                let e_p = reference_checkpoint(
+                    engine.as_mut(),
+                    &mut source,
+                    &c_prop,
+                    &mut chunk,
+                    &mut assign,
+                    chunk_rows,
+                    &pool,
+                );
+                if e_p < e_g {
+                    c.as_mut_slice().copy_from_slice(c_prop.as_slice());
+                    e = e_p;
+                    accepted += 1;
+                    rejects = 0;
+                } else {
+                    rejects += 1;
+                    if rejects >= 2 {
+                        acc.reset();
+                        rejects = 0;
+                    }
+                }
+            }
+        }
+        let plateaued =
+            e_prev.is_finite() && (e_prev - e).abs() <= tol * e_prev.abs().max(f64::MIN_POSITIVE);
+        decrease_prev = e_prev - e;
+        e_prev = e;
+        if plateaued {
+            converged = true;
+            break;
+        }
+    }
+    (e_prev, epochs, accepted, converged)
+}
+
+fn solver_cfg(engine: EngineKind, accel: Acceleration) -> SolverConfig {
+    SolverConfig { engine, accel, threads: 1, ..SolverConfig::default() }
+}
+
+#[test]
+fn accelerated_parity_per_engine() {
+    // Yinyang gets K > 10 so its group machinery actually engages.
+    let cases = [
+        (EngineKind::Hamerly, 1500, 4, 8, 0xAA01u64),
+        (EngineKind::Elkan, 1500, 4, 8, 0xAA02),
+        (EngineKind::Yinyang, 1200, 4, 24, 0xAA03),
+    ];
+    for (engine, n, d, k, seed) in cases {
+        let (x, c0) = problem(seed, n, d, k);
+        let (ref_energy, ref_iters, ref_accepted, ref_converged) =
+            reference_accelerated(&x, &c0, engine, 2, true);
+        let report = Solver::try_new(solver_cfg(engine, Acceleration::DynamicM(2)))
+            .unwrap()
+            .run(&x, c0);
+        assert_eq!(
+            report.iterations,
+            ref_iters,
+            "{}: iteration count diverged from the pre-refactor loop",
+            engine.name()
+        );
+        assert_eq!(
+            report.accepted,
+            ref_accepted,
+            "{}: acceptance count diverged",
+            engine.name()
+        );
+        assert_eq!(report.converged, ref_converged, "{}: convergence diverged", engine.name());
+        assert_eq!(
+            report.energy.to_bits(),
+            ref_energy.to_bits(),
+            "{}: final energy diverged ({} vs {})",
+            engine.name(),
+            report.energy,
+            ref_energy
+        );
+    }
+}
+
+#[test]
+fn fixed_m_parity() {
+    let (x, c0) = problem(0xAA04, 900, 3, 6);
+    let (ref_energy, ref_iters, ref_accepted, ref_converged) =
+        reference_accelerated(&x, &c0, EngineKind::Hamerly, 5, false);
+    let report = Solver::try_new(solver_cfg(EngineKind::Hamerly, Acceleration::FixedM(5)))
+        .unwrap()
+        .run(&x, c0);
+    assert_eq!(report.iterations, ref_iters);
+    assert_eq!(report.accepted, ref_accepted);
+    assert_eq!(report.converged, ref_converged);
+    assert_eq!(report.energy.to_bits(), ref_energy.to_bits());
+}
+
+#[test]
+fn lloyd_parity_per_engine() {
+    for (engine, seed) in [(EngineKind::Naive, 0xAA05u64), (EngineKind::Hamerly, 0xAA06)] {
+        let (x, c0) = problem(seed, 1000, 4, 7);
+        let (ref_energy, ref_iters, ref_converged) = reference_lloyd(&x, &c0, engine);
+        let report =
+            Solver::try_new(solver_cfg(engine, Acceleration::None)).unwrap().run(&x, c0);
+        assert_eq!(report.iterations, ref_iters, "{}: iterations", engine.name());
+        assert_eq!(report.converged, ref_converged, "{}: convergence", engine.name());
+        assert_eq!(report.accepted, 0, "{}: Lloyd never accepts proposals", engine.name());
+        assert_eq!(
+            report.energy.to_bits(),
+            ref_energy.to_bits(),
+            "{}: energy ({} vs {})",
+            engine.name(),
+            report.energy,
+            ref_energy
+        );
+    }
+}
+
+#[test]
+fn minibatch_parity() {
+    let mut rng = Pcg32::seed_from_u64(0xAA07);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, 3000, 4, 5, 3.0, 0.2));
+    let mut srng = Pcg32::seed_from_u64(0xAA08);
+    let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
+    for accel in [Acceleration::DynamicM(2), Acceleration::FixedM(3), Acceleration::None] {
+        let (ref_energy, ref_epochs, ref_accepted, ref_converged) =
+            reference_minibatch(&x, &c0, 512, accel, 60, 1e-5);
+        let cfg = MiniBatchConfig {
+            solver: SolverConfig {
+                engine: EngineKind::MiniBatch,
+                accel,
+                threads: 1,
+                max_iters: 60,
+                ..SolverConfig::default()
+            },
+            chunk_size: 512,
+            batches_per_epoch: 0,
+            convergence_tol: 1e-5,
+            sampling: BatchSampling::Sequential,
+            seed: 42,
+        };
+        let mut solver = MiniBatchSolver::try_new(cfg).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let report = solver.run(&mut source, &c0).unwrap();
+        assert!(ref_epochs > 0, "{accel:?}: the reference must run at least one epoch");
+        assert_eq!(report.iterations, ref_epochs, "{accel:?}: epoch count diverged");
+        assert_eq!(report.accepted, ref_accepted, "{accel:?}: acceptance count diverged");
+        assert_eq!(report.converged, ref_converged, "{accel:?}: convergence diverged");
+        assert_eq!(
+            report.energy.to_bits(),
+            ref_energy.to_bits(),
+            "{accel:?}: final checkpoint energy diverged ({} vs {ref_energy})",
+            report.energy
+        );
+    }
+}
