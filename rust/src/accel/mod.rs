@@ -309,6 +309,17 @@ impl<'a> FixedPointDriver<'a> {
         let restart_after = self.cfg.restart_after_rejects.unwrap_or(u32::MAX);
 
         for _t in 0..self.cfg.max_iters {
+            // Fault-injection point: inert unless a `FaultPlan` arms the
+            // solver-iteration site (robustness tests). Fires before the
+            // iteration does any work, so the partial state stays exactly
+            // the previous iterate's.
+            if let Err(e) = crate::fault::check(crate::fault::FaultSite::SolverIteration) {
+                if outstanding {
+                    step.discard_candidate();
+                }
+                out.error = Some(e);
+                break;
+            }
             let at_top = if self.cfg.check_at_top {
                 self.budget.interrupted()
             } else {

@@ -61,6 +61,13 @@ COMMANDS:
     serve    Run the coordinator service demo
              --workers <n> --jobs <n> --k <clusters> --engine <...>
              --precision <f64|f32> --scale <0..1>
+             --policy <block|shed|wait:<ms>>   full-queue admission control
+               (default block = backpressure; shed fails fast with a typed
+               overload error; wait:<ms> bounds the wait, then sheds)
+             --retries <n>   total attempts for transiently failing jobs
+               (default 1 = no retry; backoff is seeded-deterministic)
+             --cpu-fallback  serve pjrt jobs on the CPU engine when the
+               runtime fails to load (degradation echoed per job)
     inspect  Print the artifact manifest
              --artifacts <dir>
     help     This message
@@ -315,6 +322,9 @@ fn cmd_datagen(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::SubmitPolicy;
+    use crate::error::ClusterError;
+    use crate::request::RetryPolicy;
     let workers: usize = args.get("workers").unwrap_or("2").parse()?;
     let jobs: usize = args.get("jobs").unwrap_or("8").parse()?;
     let k: usize = args.get("k").unwrap_or("10").parse()?;
@@ -323,17 +333,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let precision = Precision::parse(args.get("precision").unwrap_or("f64"))
         .context("bad --precision (f64|f32)")?;
     let scale: f64 = args.get("scale").unwrap_or("0.05").parse()?;
+    let policy = match args.get("policy").unwrap_or("block") {
+        "block" => SubmitPolicy::Block,
+        "shed" => SubmitPolicy::Shed,
+        other => match other.strip_prefix("wait:") {
+            Some(ms) => SubmitPolicy::TrySubmitFor(std::time::Duration::from_millis(
+                ms.parse().context("--policy wait:<ms>")?,
+            )),
+            None => bail!("bad --policy '{other}' (block|shed|wait:<ms>)"),
+        },
+    };
+    let retries: u32 = args.get("retries").unwrap_or("1").parse()?;
+    if retries == 0 {
+        bail!("--retries counts total attempts and must be >= 1");
+    }
+    let cpu_fallback = args.flag("cpu-fallback");
     let coord = Coordinator::start(CoordinatorConfig {
         workers,
         queue_depth: jobs.max(4),
         solver_threads: 1,
         artifact_dir: args.get("artifacts").unwrap_or("artifacts").into(),
+        submit_policy: policy,
     });
     let sw = crate::metrics::Stopwatch::start();
     let names = ["HTRU2", "Birch", "Shuttle", "Eb"];
     let mut handles = Vec::new();
     for id in 0..jobs as u64 {
-        let request = ClusterRequest::builder()
+        let mut builder = ClusterRequest::builder()
             .registry(names[id as usize % names.len()], scale)
             .k(k)
             .init(InitMethod::KMeansPlusPlus)
@@ -341,9 +367,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .accel(Acceleration::DynamicM(2))
             .engine(engine)
             .precision(precision)
-            .build()?;
-        handles.push(coord.submit(request)?);
+            // Tag alternating clients so the fair queue has lanes to
+            // interleave (a demo of per-client fairness, not a real tenant
+            // model).
+            .client(format!("client-{}", id % 2))
+            .cpu_fallback(cpu_fallback);
+        if retries > 1 {
+            builder = builder.retry(RetryPolicy::transient(
+                retries,
+                std::time::Duration::from_millis(10),
+            ));
+        }
+        match coord.submit(builder.build()?) {
+            Ok(h) => handles.push(h),
+            Err(ClusterError::Overloaded) => {
+                println!("job {id:>3} SHED: queue full under --policy {policy:?}")
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
+    let admitted = handles.len();
     let results = Coordinator::wait_all(handles);
     let total = sw.seconds();
     let mut ok = 0;
@@ -351,8 +394,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match &r.outcome {
             Ok(out) => {
                 ok += 1;
+                let attempts = if out.attempts > 1 {
+                    format!("  ({}x attempts)", out.attempts)
+                } else {
+                    String::new()
+                };
+                let degraded = if out.degraded.is_some() {
+                    "  [degraded to cpu]"
+                } else {
+                    ""
+                };
                 println!(
-                    "job {:>3} worker {} wait {:>9.1?} service {:>9.1?}  {} iters  mse {:.4}  [{}/{}]",
+                    "job {:>3} worker {} wait {:>9.1?} service {:>9.1?}  {} iters  mse {:.4}  [{}/{}]{attempts}{degraded}",
                     r.id,
                     r.worker,
                     r.queue_wait,
@@ -366,9 +419,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => println!("job {:>3} FAILED: {e}", r.id),
         }
     }
+    let stats = coord.stats();
     println!(
-        "served {ok}/{jobs} jobs in {total:.2}s ({:.2} jobs/s)",
-        jobs as f64 / total
+        "served {ok}/{admitted} admitted jobs in {total:.2}s ({:.2} jobs/s)",
+        admitted as f64 / total.max(1e-9)
+    );
+    println!(
+        "admission: {} submitted, {} shed; {} retries, {} worker respawns",
+        stats.submitted, stats.shed, stats.retries, stats.respawns
     );
     coord.shutdown();
     Ok(())
@@ -488,6 +546,24 @@ mod tests {
         ])
         .is_ok());
         assert!(dispatch(&["serve", "--jobs", "1", "--precision", "f16"]).is_err());
+    }
+
+    #[test]
+    fn serve_smoke_with_admission_and_retry_flags() {
+        // Shed admission + retry budget + CPU fallback, end-to-end at
+        // smoke scale (no PJRT jobs here, so fallback stays dormant).
+        assert!(dispatch(&[
+            "serve", "--workers", "1", "--jobs", "3", "--k", "3", "--scale", "0.005",
+            "--policy", "shed", "--retries", "2", "--cpu-fallback"
+        ])
+        .is_ok());
+        assert!(dispatch(&[
+            "serve", "--workers", "1", "--jobs", "2", "--k", "3", "--scale", "0.005",
+            "--policy", "wait:50"
+        ])
+        .is_ok());
+        assert!(dispatch(&["serve", "--jobs", "1", "--policy", "sometimes"]).is_err());
+        assert!(dispatch(&["serve", "--jobs", "1", "--retries", "0"]).is_err());
     }
 
     #[test]

@@ -158,6 +158,18 @@ pub struct JobOutcome {
     /// `time_limit` deadline, if any (`None` when the job finished inside
     /// its deadline or had none).
     pub timed_out: Option<DeadlinePhase>,
+    /// Attempts the worker ran to produce this outcome (`1` when the first
+    /// try succeeded; `> 1` only for requests with a
+    /// [`crate::request::RetryPolicy`]).
+    pub attempts: u32,
+    /// Typed error of each failed attempt that was retried, in order —
+    /// empty when the first attempt succeeded.
+    pub attempt_errors: Vec<ClusterError>,
+    /// When graceful degradation fired, the engine the request *asked*
+    /// for (the `engine` field above reports what actually served it).
+    /// Today this is only ever `Some(EngineKind::Pjrt)`: a PJRT job whose
+    /// runtime failed to load and which opted into `cpu_fallback`.
+    pub degraded: Option<EngineKind>,
     pub centroids: DataMatrix,
 }
 

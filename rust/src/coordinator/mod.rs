@@ -5,24 +5,47 @@
 //! session API consumes, `Precision` included) and returns a [`JobHandle`]
 //! with poll / wait / cancel. Worker pickup honors
 //! [`ClusterRequest::priority`]: the highest-priority queued job runs
-//! first, FIFO within equal priorities. Each worker owns its solver stack
+//! first, FIFO within equal priorities — and interleaves *clients*
+//! round-robin (the [`ClusterRequest::client`] tag keys a per-client
+//! queue lane), so one client flooding the queue cannot starve the
+//! rest. Each worker owns its solver stack
 //! and keeps the [`Workspace`](crate::kmeans::Workspace) of its previous
 //! job warm: a stream of same-spec jobs reuses the engine, thread pool,
 //! kernel caches and solver scratch job over job (and, for
 //! `EngineKind::Pjrt`, the PJRT runtime with its compiled-executable
-//! cache, since PJRT handles are not `Send`). Submission applies
-//! backpressure when the queue is full; cancellation is cooperative —
-//! queued jobs are dropped at pickup, running jobs stop at the next
-//! iteration boundary. A request `time_limit` is a true per-job deadline
-//! measured from submission: queue wait is deducted from the solver's
-//! budget at pickup, and a deadline that expires (in queue or mid-solve)
-//! is echoed in [`JobOutcome::timed_out`] with the phase that spent it.
+//! cache, since PJRT handles are not `Send`). What a full queue does to
+//! `submit` is the [`SubmitPolicy`]: block (backpressure, the default),
+//! shed immediately with [`ClusterError::Overloaded`], or wait a bounded
+//! time and then shed. Cancellation is cooperative — queued jobs are
+//! dropped at pickup, running jobs stop at the next iteration boundary.
+//! A request `time_limit` is a true per-job deadline measured from
+//! submission: queue wait is deducted from the solver's budget at
+//! pickup, and a deadline that expires (in queue or mid-solve) is echoed
+//! in [`JobOutcome::timed_out`] with the phase that spent it.
+//!
+//! The fault-tolerance layer on top of dispatch:
+//!
+//! * **Retry-with-backoff** — a request carrying a
+//!   [`crate::request::RetryPolicy`] is re-run when it fails with a
+//!   transient [`crate::error::FaultClass`], sleeping a
+//!   seeded-deterministic jittered exponential backoff between attempts;
+//!   the attempt count and each retried error are echoed in the
+//!   [`JobOutcome`].
+//! * **Worker supervision** — a supervisor thread respawns any worker
+//!   whose thread dies (a panic escaping the per-job isolation), with a
+//!   fresh warm workspace; [`CoordinatorStats::respawns`] counts them.
+//! * **Graceful degradation** — a PJRT job whose runtime fails to load
+//!   falls back to the equivalent CPU engine when the request opted in
+//!   via [`crate::request::ClusterRequestBuilder::cpu_fallback`], with
+//!   the degradation recorded in [`JobOutcome::degraded`].
 //!
 //! The paper's contribution is the solver itself, so this layer is kept
 //! deliberately thin (lifecycle + dispatch) — but it is a real service:
-//! bounded queues, graceful shutdown, per-job failure isolation (worker
-//! panics are caught and surfaced as typed results), and per-worker warm
-//! workspace reuse.
+//! bounded fair queues, admission control, graceful shutdown, per-job
+//! failure isolation (worker panics are caught and surfaced as typed
+//! results), supervision, and per-worker warm workspace reuse. The
+//! deterministic fault-injection harness in [`crate::fault`] drives all
+//! of it in `tests/fault_injection.rs`.
 
 mod job;
 pub mod stream;
@@ -38,26 +61,46 @@ use crate::kmeans::Workspace;
 use crate::metrics::Stopwatch;
 use crate::observe::{CancelToken, NoopObserver};
 use crate::request::ClusterRequest;
+use crate::rng::{Pcg32, Rng};
 use crate::session::ClusterSession;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// What [`Coordinator::submit`] does when the bounded queue is full —
+/// the service's admission-control knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SubmitPolicy {
+    /// Block the submitter until the queue has room (backpressure).
+    #[default]
+    Block,
+    /// Shed load: reject immediately with [`ClusterError::Overloaded`],
+    /// keeping the submitter responsive under overload.
+    Shed,
+    /// Wait up to the given bound for room, then shed with
+    /// [`ClusterError::Overloaded`].
+    TrySubmitFor(Duration),
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Worker threads (each runs one job at a time).
     pub workers: usize,
-    /// Bounded queue depth; `submit` blocks when full (backpressure).
+    /// Bounded queue depth; `submit_policy` decides what a full queue
+    /// does to submitters.
     pub queue_depth: usize,
     /// Threads each worker's solver may use for the assignment step
     /// (applied to jobs that leave `threads` at 0).
     pub solver_threads: usize,
     /// Artifact directory for PJRT-engine jobs without an explicit one.
     pub artifact_dir: std::path::PathBuf,
+    /// Admission control for [`Coordinator::submit`] on a full queue.
+    pub submit_policy: SubmitPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +110,46 @@ impl Default for CoordinatorConfig {
             queue_depth: 16,
             solver_threads: 1,
             artifact_dir: crate::runtime::default_artifact_dir(),
+            submit_policy: SubmitPolicy::Block,
+        }
+    }
+}
+
+/// Point-in-time service counters (monotonic over the coordinator's
+/// life), snapshot via [`Coordinator::stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CoordinatorStats {
+    /// Jobs admitted into the queue.
+    pub submitted: u64,
+    /// Submissions rejected by admission control ([`SubmitPolicy::Shed`]
+    /// or a [`SubmitPolicy::TrySubmitFor`] bound expiring).
+    pub shed: u64,
+    /// Jobs a worker fulfilled (any outcome, including typed errors).
+    pub completed: u64,
+    /// Extra attempts run under a [`crate::request::RetryPolicy`].
+    pub retries: u64,
+    /// Dead workers the supervisor replaced.
+    pub respawns: u64,
+}
+
+/// Shared counter cells behind [`CoordinatorStats`].
+#[derive(Default)]
+struct Stats {
+    submitted: AtomicU64,
+    shed: AtomicU64,
+    completed: AtomicU64,
+    retries: AtomicU64,
+    respawns: AtomicU64,
+}
+
+impl Stats {
+    fn snapshot(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
         }
     }
 }
@@ -103,12 +186,19 @@ impl JobShared {
         }
     }
 
+    /// Poison-tolerant lock: a panicking worker must never wedge the
+    /// submitter side of a handle (the slot state is a plain enum, always
+    /// consistent between assignments).
+    fn lock_state(&self) -> MutexGuard<'_, SlotState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     fn set_running(&self) {
-        *self.state.lock().unwrap() = SlotState::Running;
+        *self.lock_state() = SlotState::Running;
     }
 
     fn fulfill(&self, result: JobResult) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         *st = SlotState::Done(Some(result));
         drop(st);
         self.cv.notify_all();
@@ -132,7 +222,7 @@ impl JobHandle {
 
     /// Current lifecycle state (non-blocking poll).
     pub fn status(&self) -> JobStatus {
-        match &*self.shared.state.lock().unwrap() {
+        match &*self.shared.lock_state() {
             SlotState::Queued => JobStatus::Queued,
             SlotState::Running => JobStatus::Running,
             SlotState::Done(_) => JobStatus::Done,
@@ -149,14 +239,27 @@ impl JobHandle {
         self.shared.cancel.clone()
     }
 
-    /// Block until the job finishes and take its result.
-    pub fn wait(self) -> JobResult {
-        let mut st = self.shared.state.lock().unwrap();
+    /// Block until the job finishes and take its result. The payload is
+    /// consumed by the first `wait`; a later `wait` on the same job (the
+    /// handle is clonable through its token, and `&self` allows repeats)
+    /// resolves immediately with a typed
+    /// [`ClusterError::ResultTaken`] instead of panicking.
+    pub fn wait(&self) -> JobResult {
+        let mut st = self.shared.lock_state();
         loop {
             if let SlotState::Done(result) = &mut *st {
-                return result.take().expect("JobHandle::wait consumes the handle");
+                return match result.take() {
+                    Some(r) => r,
+                    None => JobResult {
+                        id: self.id,
+                        outcome: Err(ClusterError::ResultTaken),
+                        queue_wait: Duration::ZERO,
+                        service_time: Duration::ZERO,
+                        worker: usize::MAX,
+                    },
+                };
             }
-            st = self.shared.cv.wait(st).unwrap();
+            st = self.shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -169,11 +272,15 @@ struct JobTicket {
     enqueued_at: Instant,
 }
 
-/// One queued job with its scheduling key. Max-heap order: higher
-/// priority first, then FIFO by submission sequence within a priority.
+/// One queued job with its scheduling key. Max-heap order within a
+/// client lane: higher priority first, then FIFO by submission sequence
+/// within a priority.
 struct QueuedJob {
     priority: i32,
     seq: u64,
+    /// Fairness lane key ([`ClusterRequest::client`]; untagged requests
+    /// share the anonymous `""` lane).
+    client: String,
     ticket: Box<JobTicket>,
 }
 
@@ -199,19 +306,61 @@ impl Ord for QueuedJob {
     }
 }
 
-/// Bounded, closable priority queue: `push` blocks on a full queue
-/// (backpressure), `pop` blocks on an empty one, `close` stops intake —
-/// workers drain whatever is already queued, then exit.
+/// Bounded, closable, client-fair priority queue: `push` blocks on a
+/// full queue (backpressure), `pop` blocks on an empty one, `close`
+/// stops intake — workers drain whatever is already queued, then exit.
 struct JobQueue {
     state: Mutex<QueueState>,
     not_empty: Condvar,
     not_full: Condvar,
 }
 
-struct QueueState {
+/// One client's pending jobs (priority heap, FIFO within a priority).
+struct Lane {
+    client: String,
     heap: BinaryHeap<QueuedJob>,
+}
+
+struct QueueState {
+    /// Per-client lanes; the small-vector linear scan is fine at service
+    /// client counts (lanes are never removed, only drained).
+    lanes: Vec<Lane>,
+    /// Round-robin pickup order over the currently non-empty lanes
+    /// (indices into `lanes`): a lane yields one job per rotation turn,
+    /// so a flooding client cannot starve the others.
+    rotation: VecDeque<usize>,
+    /// Total queued jobs across lanes (the bounded capacity is global,
+    /// not per lane).
+    len: usize,
     capacity: usize,
     closed: bool,
+}
+
+impl QueueState {
+    fn push_job(&mut self, job: QueuedJob) {
+        let idx = match self.lanes.iter().position(|l| l.client == job.client) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane { client: job.client.clone(), heap: BinaryHeap::new() });
+                self.lanes.len() - 1
+            }
+        };
+        if self.lanes[idx].heap.is_empty() {
+            self.rotation.push_back(idx);
+        }
+        self.lanes[idx].heap.push(job);
+        self.len += 1;
+    }
+
+    fn pop_job(&mut self) -> Option<Box<JobTicket>> {
+        let idx = self.rotation.pop_front()?;
+        let job = self.lanes[idx].heap.pop().expect("rotated lanes are non-empty");
+        if !self.lanes[idx].heap.is_empty() {
+            self.rotation.push_back(idx);
+        }
+        self.len -= 1;
+        Some(job.ticket)
+    }
 }
 
 /// Outcome of a non-blocking push attempt.
@@ -224,7 +373,9 @@ impl JobQueue {
     fn new(capacity: usize) -> Self {
         Self {
             state: Mutex::new(QueueState {
-                heap: BinaryHeap::new(),
+                lanes: Vec::new(),
+                rotation: VecDeque::new(),
+                len: 0,
                 capacity: capacity.max(1),
                 closed: false,
             }),
@@ -233,16 +384,23 @@ impl JobQueue {
         }
     }
 
+    /// Poison-tolerant lock: lane bookkeeping is updated atomically under
+    /// the guard, so the state a panicking thread leaves behind is still
+    /// coherent and the queue must keep serving the survivors.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Blocking push (backpressure); fails only on a closed queue.
     fn push(&self, job: QueuedJob) -> Result<(), ClusterError> {
-        let mut st = self.state.lock().unwrap();
-        while st.heap.len() >= st.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+        let mut st = self.lock_state();
+        while st.len >= st.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if st.closed {
             return Err(ClusterError::Shutdown);
         }
-        st.heap.push(job);
+        st.push_job(job);
         drop(st);
         self.not_empty.notify_one();
         Ok(())
@@ -250,39 +408,70 @@ impl JobQueue {
 
     /// Non-blocking push; hands the ticket back when the queue is full.
     fn try_push(&self, job: QueuedJob) -> Result<TryPush, ClusterError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if st.closed {
             return Err(ClusterError::Shutdown);
         }
-        if st.heap.len() >= st.capacity {
+        if st.len >= st.capacity {
             return Ok(TryPush::Full(job.ticket));
         }
-        st.heap.push(job);
+        st.push_job(job);
         drop(st);
         self.not_empty.notify_one();
         Ok(TryPush::Queued)
     }
 
-    /// Take the highest-priority job, blocking while the queue is empty
-    /// and open; `None` once the queue is closed *and* drained.
+    /// Bounded-wait push: like `push`, but gives up (handing the ticket
+    /// back) once `timeout` elapses with the queue still full — the
+    /// [`SubmitPolicy::TrySubmitFor`] admission path.
+    fn push_timeout(&self, job: QueuedJob, timeout: Duration) -> Result<TryPush, ClusterError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock_state();
+        while st.len >= st.capacity && !st.closed {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(TryPush::Full(job.ticket));
+            }
+            let (guard, _) = self
+                .not_full
+                .wait_timeout(st, left)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+        if st.closed {
+            return Err(ClusterError::Shutdown);
+        }
+        st.push_job(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(TryPush::Queued)
+    }
+
+    /// Take the next job — rotating over client lanes, highest priority
+    /// within the chosen lane — blocking while the queue is empty and
+    /// open; `None` once the queue is closed *and* drained.
     fn pop(&self) -> Option<Box<JobTicket>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
-            if let Some(job) = st.heap.pop() {
+            if let Some(ticket) = st.pop_job() {
                 drop(st);
                 self.not_full.notify_one();
-                return Some(job.ticket);
+                return Some(ticket);
             }
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
+    }
+
+    fn is_closed(&self) -> bool {
+        self.lock_state().closed
     }
 
     /// Stop intake and wake everyone (pushers fail, poppers drain).
     fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();
@@ -295,7 +484,7 @@ impl JobQueue {
 /// hang, mirroring the pre-handle API's "all workers exited" error.
 impl Drop for JobTicket {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock_state();
         if !matches!(*st, SlotState::Done(_)) {
             *st = SlotState::Done(Some(JobResult {
                 id: self.id,
@@ -310,29 +499,143 @@ impl Drop for JobTicket {
     }
 }
 
+/// How a submission waits for queue room (resolved from the
+/// [`SubmitPolicy`] or the explicit `try_submit` entry point).
+enum SubmitMode {
+    Block,
+    TryNow,
+    WaitFor(Duration),
+}
+
+/// Supervisor mailbox traffic.
+enum SupervisorMsg {
+    /// Worker `widx`'s thread died (its death sentinel fired mid-unwind).
+    Died(usize),
+    /// Coordinator teardown: stop supervising.
+    Shutdown,
+}
+
+/// Shared, slot-indexed worker join handles (the supervisor swaps dead
+/// workers out; teardown drains whatever is left).
+type WorkerSlots = Arc<Mutex<Vec<Option<std::thread::JoinHandle<()>>>>>;
+
+fn lock_slots(slots: &WorkerSlots) -> MutexGuard<'_, Vec<Option<std::thread::JoinHandle<()>>>> {
+    slots.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Sends [`SupervisorMsg::Died`] from a worker thread that is dying —
+/// the drop runs during unwind, after the panic escaped the per-job
+/// isolation, which is exactly the condition supervision exists for.
+struct DeathNotice {
+    widx: usize,
+    tx: mpsc::Sender<SupervisorMsg>,
+}
+
+impl Drop for DeathNotice {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.tx.send(SupervisorMsg::Died(self.widx));
+        }
+    }
+}
+
+fn spawn_worker(
+    widx: usize,
+    cfg: CoordinatorConfig,
+    queue: Arc<JobQueue>,
+    stats: Arc<Stats>,
+    tx: mpsc::Sender<SupervisorMsg>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let _sentinel = DeathNotice { widx, tx };
+        worker_loop(widx, &cfg, &queue, &stats);
+    })
+}
+
+/// Supervisor loop: reap each dead worker and, while the queue is still
+/// open, respawn it in the same slot with a fresh (cold) workspace.
+fn supervise(
+    rx: mpsc::Receiver<SupervisorMsg>,
+    tx: mpsc::Sender<SupervisorMsg>,
+    slots: WorkerSlots,
+    queue: Arc<JobQueue>,
+    stats: Arc<Stats>,
+    cfg: CoordinatorConfig,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            SupervisorMsg::Died(widx) => {
+                // Take the handle out before joining so teardown cannot
+                // double-join; join outside the lock.
+                let dead = lock_slots(&slots)[widx].take();
+                if let Some(h) = dead {
+                    let _ = h.join();
+                }
+                if queue.is_closed() {
+                    continue;
+                }
+                stats.respawns.fetch_add(1, Ordering::Relaxed);
+                let fresh = spawn_worker(
+                    widx,
+                    cfg.clone(),
+                    Arc::clone(&queue),
+                    Arc::clone(&stats),
+                    tx.clone(),
+                );
+                lock_slots(&slots)[widx] = Some(fresh);
+            }
+            SupervisorMsg::Shutdown => break,
+        }
+    }
+}
+
 /// The running service.
 pub struct Coordinator {
     queue: Arc<JobQueue>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    submitted: AtomicU64,
+    slots: WorkerSlots,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+    super_tx: mpsc::Sender<SupervisorMsg>,
+    stats: Arc<Stats>,
+    policy: SubmitPolicy,
     next_id: AtomicU64,
     next_seq: AtomicU64,
 }
 
 impl Coordinator {
-    /// Start the worker pool.
+    /// Start the worker pool (and its supervisor).
     pub fn start(cfg: CoordinatorConfig) -> Self {
         let queue = Arc::new(JobQueue::new(cfg.queue_depth));
-        let mut workers = Vec::new();
-        for widx in 0..cfg.workers.max(1) {
-            let queue = Arc::clone(&queue);
-            let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(widx, &cfg, &queue)));
+        let stats = Arc::new(Stats::default());
+        let (tx, rx) = mpsc::channel();
+        let worker_count = cfg.workers.max(1);
+        let slots: WorkerSlots = Arc::new(Mutex::new(Vec::with_capacity(worker_count)));
+        {
+            let mut guard = lock_slots(&slots);
+            for widx in 0..worker_count {
+                guard.push(Some(spawn_worker(
+                    widx,
+                    cfg.clone(),
+                    Arc::clone(&queue),
+                    Arc::clone(&stats),
+                    tx.clone(),
+                )));
+            }
         }
+        let supervisor = {
+            let slots = Arc::clone(&slots);
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let tx = tx.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || supervise(rx, tx, slots, queue, stats, cfg))
+        };
         Self {
             queue,
-            workers,
-            submitted: AtomicU64::new(0),
+            slots,
+            supervisor: Some(supervisor),
+            super_tx: tx,
+            stats,
+            policy: cfg.submit_policy,
             next_id: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
         }
@@ -342,10 +645,11 @@ impl Coordinator {
         &self,
         id: u64,
         request: ClusterRequest,
-        blocking: bool,
+        mode: SubmitMode,
     ) -> Result<Option<JobHandle>, ClusterError> {
         let shared = Arc::new(JobShared::new());
         let priority = request.priority();
+        let client = request.client().unwrap_or_default().to_string();
         let ticket = Box::new(JobTicket {
             id,
             request: Some(request),
@@ -353,31 +657,50 @@ impl Coordinator {
             enqueued_at: Instant::now(),
         });
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        let job = QueuedJob { priority, seq, ticket };
-        if blocking {
-            self.queue.push(job)?;
-        } else {
-            match self.queue.try_push(job)? {
-                TryPush::Queued => {}
-                // A rejected ticket must not resolve its handle: dropping
-                // it here (without the handle ever escaping) is fine.
-                TryPush::Full(_ticket) => return Ok(None),
+        let job = QueuedJob { priority, seq, client, ticket };
+        let pushed = match mode {
+            SubmitMode::Block => {
+                self.queue.push(job)?;
+                TryPush::Queued
             }
+            SubmitMode::TryNow => self.queue.try_push(job)?,
+            SubmitMode::WaitFor(limit) => self.queue.push_timeout(job, limit)?,
+        };
+        match pushed {
+            TryPush::Queued => {}
+            // A rejected ticket must not resolve its handle: dropping
+            // it here (without the handle ever escaping) is fine.
+            TryPush::Full(_ticket) => return Ok(None),
         }
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(Some(JobHandle { id, shared }))
     }
 
-    /// Submit a request; blocks when the queue is full (backpressure).
+    /// Submit a request under the configured [`SubmitPolicy`]: block
+    /// until queued (the default), or — for the shedding policies — fail
+    /// fast with [`ClusterError::Overloaded`] when the queue stays full.
     pub fn submit(&self, request: ClusterRequest) -> Result<JobHandle, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Ok(self.enqueue(id, request, true)?.expect("blocking submit always enqueues"))
+        let mode = match self.policy {
+            SubmitPolicy::Block => SubmitMode::Block,
+            SubmitPolicy::Shed => SubmitMode::TryNow,
+            SubmitPolicy::TrySubmitFor(limit) => SubmitMode::WaitFor(limit),
+        };
+        match self.enqueue(id, request, mode)? {
+            Some(handle) => Ok(handle),
+            None => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ClusterError::Overloaded)
+            }
+        }
     }
 
-    /// Try to submit without blocking; `None` when the queue is full.
+    /// Try to submit without blocking; `None` when the queue is full
+    /// (caller-driven backpressure, independent of the configured
+    /// [`SubmitPolicy`] and not counted as shed).
     pub fn try_submit(&self, request: ClusterRequest) -> Result<Option<JobHandle>, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.enqueue(id, request, false)
+        self.enqueue(id, request, SubmitMode::TryNow)
     }
 
     /// Submit a legacy [`JobSpec`] (converted through the request builder).
@@ -392,25 +715,46 @@ impl Coordinator {
         let id = job.id;
         self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
         let request = job.into_request()?;
-        Ok(self.enqueue(id, request, true)?.expect("blocking submit always enqueues"))
+        Ok(self
+            .enqueue(id, request, SubmitMode::Block)?
+            .expect("blocking submit always enqueues"))
     }
 
-    /// Number of jobs submitted so far.
+    /// Number of jobs admitted so far.
     pub fn submitted(&self) -> u64 {
-        self.submitted.load(Ordering::Relaxed)
+        self.stats.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the service counters (admissions, sheds, completions,
+    /// retries, worker respawns).
+    pub fn stats(&self) -> CoordinatorStats {
+        self.stats.snapshot()
     }
 
     /// Wait for a batch of handles, in submission order.
     pub fn wait_all(handles: impl IntoIterator<Item = JobHandle>) -> Vec<JobResult> {
-        handles.into_iter().map(JobHandle::wait).collect()
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    /// Close the queue, stop the supervisor, join every worker. Safe to
+    /// run twice (shutdown followed by drop): all steps are idempotent.
+    fn teardown(&mut self) {
+        self.queue.close();
+        let _ = self.super_tx.send(SupervisorMsg::Shutdown);
+        // Join the supervisor *first*: afterwards nobody else mutates the
+        // slots, so draining them below races with nothing.
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        let workers: Vec<_> = lock_slots(&self.slots).iter_mut().filter_map(Option::take).collect();
+        for w in workers {
+            let _ = w.join();
+        }
     }
 
     /// Stop accepting jobs, finish the queue, join the workers.
     pub fn shutdown(mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.teardown();
     }
 }
 
@@ -420,10 +764,7 @@ impl Coordinator {
 /// the pre-priority-queue implementation.
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.teardown();
     }
 }
 
@@ -438,14 +779,25 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue) {
+/// Deterministic jittered exponential backoff before retry `attempt + 1`:
+/// `base · 2^(attempt-1)`, scaled into 50–100 % of that span by a PRNG
+/// seeded from (request seed, job id, attempt) — identical for a fixed
+/// seed (replayable tests), decorrelated across concurrent retriers.
+fn backoff_delay(base: Duration, seed: u64, id: u64, attempt: u32) -> Duration {
+    let span = base.as_secs_f64() * f64::from(1u32 << attempt.saturating_sub(1).min(16));
+    let mut rng = Pcg32::seed_from_u64(seed ^ id.rotate_left(17) ^ u64::from(attempt));
+    let jitter = 0.5 + 0.5 * rng.next_f64();
+    Duration::from_secs_f64(span * jitter)
+}
+
+fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue, stats: &Stats) {
     // Warm state reused across this worker's jobs: the previous job's
     // workspace (reused whenever the next job's spec matches) and the PJRT
     // runtime (not `Send`, so it must be born on this thread).
     let mut warm: Option<Workspace> = None;
     let mut pjrt: Option<(PathBuf, Rc<crate::runtime::PjrtRuntime>)> = None;
-    // Pickup pops the highest-priority queued job; `None` means the queue
-    // is closed and fully drained.
+    // Pickup rotates over client lanes (highest priority within the
+    // lane); `None` means the queue is closed and fully drained.
     while let Some(mut ticket) = queue.pop() {
         let id = ticket.id;
         let request = ticket.request.take().expect("every ticket carries a request");
@@ -454,23 +806,75 @@ fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue) {
         shared.set_running();
         let sw = Stopwatch::start();
         let cancel = shared.cancel.clone();
-        let outcome = if cancel.is_cancelled() {
-            Err(ClusterError::Cancelled)
-        } else {
+        let retry = request.retry().cloned();
+        let max_attempts = retry.as_ref().map_or(1, |r| r.max_attempts.max(1));
+        let mut attempt_errors: Vec<ClusterError> = Vec::new();
+        let mut attempt = 0u32;
+        let outcome = loop {
+            attempt += 1;
+            if cancel.is_cancelled() {
+                break Err(ClusterError::Cancelled);
+            }
             let warm_slot = warm.take();
+            let attempt_request = request.clone();
             let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_job(request, cfg, warm_slot, &mut pjrt, &cancel, queue_wait)
+                run_job(attempt_request, cfg, warm_slot, &mut pjrt, &cancel, queue_wait)
             }));
-            match caught {
+            let result = match caught {
                 Ok((outcome, ws)) => {
                     warm = ws;
                     outcome
                 }
-                // A panicking job must not take the worker down (failure
-                // isolation); its workspace is dropped as suspect.
-                Err(panic) => Err(ClusterError::Internal(panic_message(panic))),
+                Err(panic) => {
+                    // An injected worker kill is the one panic meant to
+                    // *escape* the per-job isolation (it exercises the
+                    // supervisor). Resolve the handle first — waiters must
+                    // never hang on a dying worker — then keep unwinding so
+                    // the death sentinel fires and the supervisor respawns
+                    // this slot.
+                    if panic.downcast_ref::<crate::fault::WorkerKilled>().is_some() {
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        shared.fulfill(JobResult {
+                            id,
+                            outcome: Err(ClusterError::Internal(
+                                "worker killed by injected fault".into(),
+                            )),
+                            queue_wait,
+                            service_time: sw.elapsed(),
+                            worker: widx,
+                        });
+                        std::panic::resume_unwind(panic);
+                    }
+                    // Any other panicking job must not take the worker down
+                    // (failure isolation); its workspace is dropped as
+                    // suspect.
+                    Err(ClusterError::Internal(panic_message(panic)))
+                }
+            };
+            match result {
+                Ok(mut out) => {
+                    out.attempts = attempt;
+                    out.attempt_errors = std::mem::take(&mut attempt_errors);
+                    break Ok(out);
+                }
+                Err(e) => {
+                    let transient = retry
+                        .as_ref()
+                        .is_some_and(|r| attempt < max_attempts && r.retries(e.fault_class()));
+                    if !transient {
+                        break Err(e);
+                    }
+                    attempt_errors.push(e);
+                    stats.retries.fetch_add(1, Ordering::Relaxed);
+                    let base = retry.as_ref().expect("transient implies a policy").backoff;
+                    let delay = backoff_delay(base, request.seed(), id, attempt);
+                    if cancel.sleep_unless_cancelled(delay) {
+                        break Err(ClusterError::Cancelled);
+                    }
+                }
             }
         };
+        stats.completed.fetch_add(1, Ordering::Relaxed);
         shared.fulfill(JobResult {
             id,
             outcome,
@@ -512,6 +916,7 @@ fn run_job(
         request = request.with_time_limit(remaining);
     }
     let spec = request.workspace_spec();
+    let mut degraded: Option<EngineKind> = None;
     let session = match warm {
         Some(ws) if ws.matches(&spec) => ClusterSession::with_workspace(request, ws),
         _ if spec.engine == EngineKind::Pjrt => {
@@ -522,26 +927,35 @@ fn run_job(
                 .clone()
                 .unwrap_or_else(crate::runtime::default_artifact_dir);
             let rt = match pjrt {
-                Some((cached_dir, rt)) if *cached_dir == dir => Rc::clone(rt),
-                _ => match crate::runtime::PjrtRuntime::open(&dir) {
-                    Ok(rt) => {
-                        let rt = Rc::new(rt);
-                        *pjrt = Some((dir, Rc::clone(&rt)));
-                        rt
-                    }
-                    Err(e) => {
-                        return (
-                            Err(ClusterError::Engine {
-                                engine: "pjrt",
-                                reason: format!("{e:#}"),
-                            }),
-                            None,
-                        )
-                    }
-                },
+                Some((cached_dir, rt)) if *cached_dir == dir => Ok(Rc::clone(rt)),
+                _ => crate::runtime::PjrtRuntime::open(&dir).map(|rt| {
+                    let rt = Rc::new(rt);
+                    *pjrt = Some((dir, Rc::clone(&rt)));
+                    rt
+                }),
             };
-            let engine = Box::new(crate::runtime::PjrtEngine::new(rt));
-            ClusterSession::with_workspace(request, Workspace::from_engine(engine, spec))
+            match rt {
+                Ok(rt) => {
+                    let engine = Box::new(crate::runtime::PjrtEngine::new(rt));
+                    ClusterSession::with_workspace(request, Workspace::from_engine(engine, spec))
+                }
+                // Graceful degradation: the runtime would not load and the
+                // request opted in, so serve it on the equivalent CPU
+                // engine instead of failing — recorded in the outcome.
+                Err(_) if request.cpu_fallback() => {
+                    degraded = Some(EngineKind::Pjrt);
+                    ClusterSession::open(request.with_engine(EngineKind::Naive))
+                }
+                Err(e) => {
+                    return (
+                        Err(ClusterError::Engine {
+                            engine: "pjrt",
+                            reason: format!("{e:#}"),
+                        }),
+                        None,
+                    )
+                }
+            }
         }
         _ => ClusterSession::open(request),
     };
@@ -595,6 +1009,11 @@ fn run_job(
             precision,
             engine,
             timed_out,
+            // The worker's retry loop overwrites the attempt bookkeeping;
+            // a single successful pass is attempt 1 with no errors.
+            attempts: 1,
+            attempt_errors: Vec::new(),
+            degraded,
             centroids,
         })
     };
@@ -633,17 +1052,80 @@ mod tests {
                 enqueued_at: Instant::now(),
             })
         };
-        queue.push(QueuedJob { priority: 0, seq: 0, ticket: mk(10) }).unwrap();
-        queue.push(QueuedJob { priority: 5, seq: 1, ticket: mk(11) }).unwrap();
-        queue.push(QueuedJob { priority: 5, seq: 2, ticket: mk(12) }).unwrap();
-        queue.push(QueuedJob { priority: -3, seq: 3, ticket: mk(13) }).unwrap();
+        let q = |priority: i32, seq: u64, id: u64| QueuedJob {
+            priority,
+            seq,
+            client: String::new(),
+            ticket: mk(id),
+        };
+        queue.push(q(0, 0, 10)).unwrap();
+        queue.push(q(5, 1, 11)).unwrap();
+        queue.push(q(5, 2, 12)).unwrap();
+        queue.push(q(-3, 3, 13)).unwrap();
         let order: Vec<u64> = (0..4).map(|_| queue.pop().unwrap().id).collect();
         assert_eq!(order, vec![11, 12, 10, 13], "priority desc, FIFO within a priority");
         queue.close();
         assert!(queue.pop().is_none(), "closed + drained queue ends the worker");
+        assert!(matches!(queue.push(q(0, 4, 14)), Err(ClusterError::Shutdown)));
+    }
+
+    #[test]
+    fn fair_pickup_interleaves_clients() {
+        // Client "a" floods the queue before "b" submits anything; pickup
+        // still alternates lanes so "b" is served from its first turn.
+        let queue = JobQueue::new(16);
+        let mk = |id: u64| {
+            Box::new(JobTicket {
+                id,
+                request: None,
+                shared: Arc::new(JobShared::new()),
+                enqueued_at: Instant::now(),
+            })
+        };
+        for seq in 0..4u64 {
+            queue
+                .push(QueuedJob { priority: 0, seq, client: "a".into(), ticket: mk(seq) })
+                .unwrap();
+        }
+        queue
+            .push(QueuedJob { priority: 0, seq: 4, client: "b".into(), ticket: mk(100) })
+            .unwrap();
+        queue
+            .push(QueuedJob { priority: 0, seq: 5, client: "b".into(), ticket: mk(101) })
+            .unwrap();
+        let order: Vec<u64> = (0..6).map(|_| queue.pop().unwrap().id).collect();
+        assert_eq!(order, vec![0, 100, 1, 101, 2, 3], "round-robin across client lanes");
+    }
+
+    #[test]
+    fn bounded_wait_push_gives_up_on_a_full_queue() {
+        let queue = JobQueue::new(1);
+        let mk = |id: u64| {
+            Box::new(JobTicket {
+                id,
+                request: None,
+                shared: Arc::new(JobShared::new()),
+                enqueued_at: Instant::now(),
+            })
+        };
+        let q = |seq: u64, id: u64| QueuedJob {
+            priority: 0,
+            seq,
+            client: String::new(),
+            ticket: mk(id),
+        };
+        queue.push(q(0, 1)).unwrap();
+        let sw = Instant::now();
+        match queue.push_timeout(q(1, 2), Duration::from_millis(20)).unwrap() {
+            TryPush::Full(ticket) => assert_eq!(ticket.id, 2, "the ticket comes back"),
+            TryPush::Queued => panic!("queue was full; push_timeout must give up"),
+        }
+        assert!(sw.elapsed() >= Duration::from_millis(20), "the bound was honored");
+        // Room frees up: the bounded wait succeeds.
+        assert_eq!(queue.pop().unwrap().id, 1);
         assert!(matches!(
-            queue.push(QueuedJob { priority: 0, seq: 4, ticket: mk(14) }),
-            Err(ClusterError::Shutdown)
+            queue.push_timeout(q(2, 3), Duration::from_millis(20)).unwrap(),
+            TryPush::Queued
         ));
     }
 
@@ -658,8 +1140,12 @@ mod tests {
                 enqueued_at: Instant::now(),
             })
         };
-        queue.push(QueuedJob { priority: 1, seq: 0, ticket: mk(1) }).unwrap();
-        queue.push(QueuedJob { priority: 2, seq: 1, ticket: mk(2) }).unwrap();
+        queue
+            .push(QueuedJob { priority: 1, seq: 0, client: String::new(), ticket: mk(1) })
+            .unwrap();
+        queue
+            .push(QueuedJob { priority: 2, seq: 1, client: String::new(), ticket: mk(2) })
+            .unwrap();
         queue.close();
         assert_eq!(queue.pop().unwrap().id, 2);
         assert_eq!(queue.pop().unwrap().id, 1);
@@ -748,6 +1234,49 @@ mod tests {
         // On a 1-core box the worker rarely keeps up; but even if it does,
         // the test only requires that try_submit never blocked.
         let _ = rejected;
+    }
+
+    #[test]
+    fn shed_policy_rejects_typed_without_blocking() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 1,
+            submit_policy: SubmitPolicy::Shed,
+            ..CoordinatorConfig::default()
+        });
+        let mut handles = Vec::new();
+        let mut shed = 0u64;
+        for seed in 0..32 {
+            match coord.submit(inline_request(seed % 2, 8)) {
+                Ok(h) => handles.push(h),
+                Err(ClusterError::Overloaded) => shed += 1,
+                Err(e) => panic!("shed policy must only shed, got {e}"),
+            }
+        }
+        assert!(!handles.is_empty(), "an idle queue admits");
+        let stats = coord.stats();
+        assert_eq!(stats.shed, shed);
+        assert_eq!(stats.submitted, handles.len() as u64);
+        // Every admitted job still resolves.
+        for h in &handles {
+            assert!(h.wait().outcome.is_ok());
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn second_wait_returns_result_taken() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let h = coord.submit(inline_request(9, 4)).unwrap();
+        let first = h.wait();
+        let out = first.outcome.expect("job should succeed");
+        assert_eq!(out.attempts, 1, "no retry policy means one attempt");
+        assert!(out.attempt_errors.is_empty());
+        assert_eq!(out.degraded, None);
+        let second = h.wait();
+        assert!(matches!(second.outcome, Err(ClusterError::ResultTaken)));
+        assert_eq!(second.id, first.id);
+        coord.shutdown();
     }
 
     #[test]

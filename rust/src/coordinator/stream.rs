@@ -10,6 +10,7 @@
 
 use crate::config::SolverConfig;
 use crate::data::DataMatrix;
+use crate::error::ClusterError;
 use crate::init::{seed_centroids, InitMethod};
 use crate::kmeans::{RunReport, Solver};
 use crate::lloyd::brute_force_assign;
@@ -89,6 +90,36 @@ impl StreamingClusterer {
                 }
             }
         }
+    }
+
+    /// Validating variant of [`StreamingClusterer::push_chunk`]: rejects
+    /// a chunk carrying non-finite samples with a typed
+    /// [`ClusterError::InvalidData`] (offending row and column in the
+    /// error) *before* folding anything, so one poisoned chunk cannot
+    /// corrupt the running centroid estimate. Dimensionality mismatches
+    /// come back typed too, instead of panicking.
+    pub fn try_push_chunk(&mut self, chunk: &DataMatrix) -> Result<(), ClusterError> {
+        if chunk.d() != self.d {
+            return Err(ClusterError::invalid(
+                "chunk",
+                format!(
+                    "chunk is {}-dimensional but the stream holds d={}",
+                    chunk.d(),
+                    self.d
+                ),
+            ));
+        }
+        for i in 0..chunk.n() {
+            if let Some(j) = chunk.row(i).iter().position(|v| !v.is_finite()) {
+                return Err(ClusterError::InvalidData {
+                    source: "stream chunk".to_string(),
+                    row: i,
+                    reason: format!("non-finite value at column {j}"),
+                });
+            }
+        }
+        self.push_chunk(chunk);
+        Ok(())
     }
 
     fn push_row(&mut self, row: &[f64]) {
@@ -175,6 +206,27 @@ mod tests {
         sc.push_chunk(&x);
         assert!(sc.centroids().is_none());
         assert!(sc.finalize().is_none());
+    }
+
+    #[test]
+    fn poisoned_chunk_is_rejected_before_folding() {
+        let mut sc = StreamingClusterer::new(2, 2, 16, 3, cfg());
+        let good = DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0], &[2.0, 2.0]]);
+        sc.try_push_chunk(&good).unwrap();
+        let before = sc.centroids().cloned();
+        let bad = DataMatrix::from_rows(&[&[3.0, 3.0], &[f64::NAN, 4.0]]);
+        match sc.try_push_chunk(&bad).unwrap_err() {
+            ClusterError::InvalidData { row, .. } => assert_eq!(row, 1),
+            other => panic!("expected InvalidData, got {other}"),
+        }
+        assert_eq!(sc.seen(), 3, "rejected chunks are not consumed");
+        assert_eq!(sc.centroids().cloned(), before, "estimate is untouched");
+        // A wrong-shape chunk fails typed instead of panicking.
+        let skewed = DataMatrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        assert!(matches!(
+            sc.try_push_chunk(&skewed),
+            Err(ClusterError::InvalidRequest { field: "chunk", .. })
+        ));
     }
 
     #[test]

@@ -149,6 +149,9 @@ impl ChunkSource for InMemoryChunks {
         out: &mut DataMatrix,
     ) -> Result<usize, ClusterError> {
         assert_eq!(out.d(), self.data.d(), "chunk buffer dimensionality mismatch");
+        // Fault-injection point: inert unless a `FaultPlan` arms the
+        // chunk-read site (robustness tests).
+        crate::fault::check(crate::fault::FaultSite::ChunkRead)?;
         let remaining = self.data.n().saturating_sub(self.cursor);
         let rows = remaining.min(max_rows.max(1));
         out.resize_rows(rows);
@@ -431,44 +434,54 @@ const SHARD_HEADER_BYTES: usize = 24;
 
 impl MmapShardSource {
     /// Open a shard, validating magic and shape against the file length.
-    pub fn open(path: &Path) -> crate::Result<Self> {
-        use anyhow::Context;
-        let mut file = std::fs::File::open(path)
-            .with_context(|| format!("open shard {}", path.display()))?;
+    ///
+    /// Every rejection — missing file, foreign magic, empty or overflowing
+    /// declared shape, truncation, trailing bytes past the declared rows —
+    /// surfaces as a typed [`ClusterError::Data`], so the coordinator's
+    /// retry classifier sees shard corruption as an I/O-class fault.
+    pub fn open(path: &Path) -> Result<Self, ClusterError> {
+        let fail = |reason: String| ClusterError::Data {
+            source: format!("shard {}", path.display()),
+            reason,
+        };
+        let mut file =
+            std::fs::File::open(path).map_err(|e| fail(format!("open: {e}")))?;
         let mut header = [0u8; SHARD_HEADER_BYTES];
         file.read_exact(&mut header)
-            .with_context(|| format!("read shard header of {}", path.display()))?;
-        anyhow::ensure!(
-            &header[..8] == FVECS_MAGIC,
-            "{} is not an AAKMFV01 shard",
-            path.display()
-        );
+            .map_err(|e| fail(format!("read header: {e}")))?;
+        if &header[..8] != FVECS_MAGIC {
+            return Err(fail("not an AAKMFV01 shard (bad magic)".into()));
+        }
         let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
         let d = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
-        anyhow::ensure!(n > 0 && d > 0, "{} declares an empty shard", path.display());
-        let need = SHARD_HEADER_BYTES as u64
-            + (n as u64)
-                .checked_mul(d as u64)
-                .and_then(|v| v.checked_mul(8))
-                .ok_or_else(|| anyhow::anyhow!("shard shape overflows"))?;
-        let actual = file.metadata()?.len();
-        anyhow::ensure!(
-            actual >= need,
-            "{} is truncated: {} bytes for a {}x{} shard ({} needed)",
-            path.display(),
-            actual,
-            n,
-            d,
-            need
-        );
+        if n == 0 || d == 0 {
+            return Err(fail(format!("declares an empty {n}x{d} shard")));
+        }
+        let need = (n as u64)
+            .checked_mul(d as u64)
+            .and_then(|v| v.checked_mul(8))
+            .and_then(|v| v.checked_add(SHARD_HEADER_BYTES as u64))
+            .ok_or_else(|| fail(format!("{n}x{d} shape overflows the file length")))?;
+        let actual = file.metadata().map_err(|e| fail(format!("stat: {e}")))?.len();
+        // Strict equality: a short file means truncated rows, a long one
+        // means the header's row count disagrees with the payload stride —
+        // both are corruption, not data to silently read past.
+        if actual != need {
+            let what = if actual < need { "truncated" } else { "has trailing bytes" };
+            return Err(fail(format!(
+                "{what}: {actual} bytes for a {n}x{d} shard ({need} expected)"
+            )));
+        }
         #[cfg(unix)]
         {
-            let map = Mmap::map(&file, need as usize)?;
+            let map =
+                Mmap::map(&file, need as usize).map_err(|e| fail(format!("mmap: {e}")))?;
             Ok(Self { path: path.to_path_buf(), n, d, cursor: 0, map })
         }
         #[cfg(not(unix))]
         {
-            file.seek(SeekFrom::Start(SHARD_HEADER_BYTES as u64))?;
+            file.seek(SeekFrom::Start(SHARD_HEADER_BYTES as u64))
+                .map_err(|e| fail(format!("seek: {e}")))?;
             let file = std::io::BufReader::new(file);
             Ok(Self { path: path.to_path_buf(), n, d, cursor: 0, file })
         }
@@ -502,7 +515,6 @@ impl MmapShardSource {
             for (v, raw) in dst.iter_mut().zip(bytes.chunks_exact(8)) {
                 *v = f64::from_le_bytes(raw.try_into().expect("chunks_exact(8)"));
             }
-            Ok(())
         }
         #[cfg(not(unix))]
         {
@@ -517,8 +529,18 @@ impl MmapShardSource {
                     .map_err(|e| self.data_error(format!("read: {e}")))?;
                 *v = f64::from_le_bytes(raw);
             }
-            Ok(())
         }
+        // A corrupt shard can hold any bit pattern; rejecting non-finite
+        // values here — the single decode site — covers the sequential and
+        // random-access paths alike, with the offending row in the error.
+        if let Some(j) = dst.iter().position(|v| !v.is_finite()) {
+            return Err(ClusterError::InvalidData {
+                source: format!("shard {}", self.path.display()),
+                row: i,
+                reason: format!("non-finite value at column {j}"),
+            });
+        }
+        Ok(())
     }
 }
 
@@ -537,6 +559,8 @@ impl ChunkSource for MmapShardSource {
         out: &mut DataMatrix,
     ) -> Result<usize, ClusterError> {
         assert_eq!(out.d(), self.d, "chunk buffer dimensionality mismatch");
+        // Fault-injection point, mirroring `InMemoryChunks::next_chunk`.
+        crate::fault::check(crate::fault::FaultSite::ChunkRead)?;
         let remaining = self.n.saturating_sub(self.cursor);
         let rows = remaining.min(max_rows.max(1));
         out.resize_rows(rows);
@@ -686,6 +710,51 @@ mod tests {
         let bytes = std::fs::read(&trunc).unwrap();
         std::fs::write(&trunc, &bytes[..bytes.len() - 8]).unwrap();
         assert!(MmapShardSource::open(&trunc).is_err());
+    }
+
+    #[test]
+    fn shard_open_rejects_trailing_bytes_typed() {
+        let path = tmp("trailing.fv");
+        let mut w = ShardWriter::create(&path, 2).unwrap();
+        w.append(&DataMatrix::zeros(3, 2)).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = MmapShardSource::open(&path).unwrap_err();
+        assert!(matches!(err, ClusterError::Data { .. }), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn shard_rows_with_non_finite_values_fail_typed() {
+        let path = tmp("nonfinite.fv");
+        let mut w = ShardWriter::create(&path, 2).unwrap();
+        let mut chunk = DataMatrix::zeros(3, 2);
+        chunk[(1, 1)] = f64::NAN;
+        w.append(&chunk).unwrap();
+        w.finish().unwrap();
+        let mut shard = MmapShardSource::open(&path).unwrap();
+        let mut buf = DataMatrix::zeros(0, 2);
+        match shard.next_chunk(16, &mut buf).unwrap_err() {
+            ClusterError::InvalidData { row, .. } => assert_eq!(row, 1),
+            other => panic!("expected InvalidData, got {other}"),
+        }
+    }
+
+    #[test]
+    fn injected_chunk_read_faults_fire_on_schedule() {
+        use crate::fault::{FaultKind, FaultPlan, FaultSite};
+        let x = Arc::new(DataMatrix::zeros(8, 2));
+        let mut src = InMemoryChunks::new(x);
+        let mut buf = DataMatrix::zeros(0, 2);
+        let _guard = FaultPlan::new()
+            .fail_next(FaultSite::ChunkRead, FaultKind::Error, 1)
+            .install_for_current_thread();
+        let err = src.next_chunk(4, &mut buf).unwrap_err();
+        assert_eq!(err.fault_class(), Some(crate::error::FaultClass::Io));
+        // The single-shot budget is spent: the next read succeeds.
+        assert_eq!(src.next_chunk(4, &mut buf).unwrap(), 4);
     }
 
     #[test]

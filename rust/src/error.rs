@@ -23,6 +23,17 @@ pub enum ClusterError {
         /// Human-readable explanation.
         reason: String,
     },
+    /// The data source materialized, but a sample value is unusable
+    /// (non-finite): admission-time validation rejects it before NaN can
+    /// poison energies and assignments.
+    InvalidData {
+        /// Label of the offending source (registry name, path, ...).
+        source: String,
+        /// Zero-based row index of the first offending sample.
+        row: usize,
+        /// Human-readable explanation.
+        reason: String,
+    },
     /// An assignment engine could not be constructed or failed fatally.
     Engine {
         /// Canonical engine name (`"pjrt"`, ...).
@@ -34,8 +45,27 @@ pub enum ClusterError {
     Cancelled,
     /// The coordinator no longer accepts jobs.
     Shutdown,
+    /// The coordinator's admission policy shed the submission because the
+    /// queue was full (see `SubmitPolicy::Shed` / `SubmitPolicy::TrySubmitFor`).
+    Overloaded,
+    /// The job's result was already taken by an earlier `wait` on the
+    /// same handle.
+    ResultTaken,
     /// A worker failed unexpectedly (panic isolated per job).
     Internal(String),
+}
+
+/// Coarse classification of transient failures, used by
+/// `RetryPolicy::retry_on` to decide which errors are worth re-running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Data-source I/O faults (mmap page-in, registry materialization).
+    Io,
+    /// Engine construction / runtime-artifact load faults (PJRT manifest,
+    /// client bring-up).
+    EngineLoad,
+    /// A worker panic isolated into a typed result.
+    Panic,
 }
 
 impl std::fmt::Display for ClusterError {
@@ -50,8 +80,13 @@ impl std::fmt::Display for ClusterError {
             Self::Engine { engine, reason } => {
                 write!(f, "engine '{engine}': {reason}")
             }
+            Self::InvalidData { source, row, reason } => {
+                write!(f, "invalid data in '{source}' at row {row}: {reason}")
+            }
             Self::Cancelled => write!(f, "run cancelled"),
             Self::Shutdown => write!(f, "coordinator is shut down"),
+            Self::Overloaded => write!(f, "coordinator overloaded: submission shed"),
+            Self::ResultTaken => write!(f, "job result already taken by an earlier wait"),
             Self::Internal(reason) => write!(f, "internal failure: {reason}"),
         }
     }
@@ -68,6 +103,23 @@ impl ClusterError {
     /// True for [`ClusterError::Cancelled`].
     pub fn is_cancelled(&self) -> bool {
         matches!(self, Self::Cancelled)
+    }
+
+    /// Transient-fault classification for retry decisions. `None` means
+    /// the failure is deterministic (validation, cancellation, shutdown)
+    /// and re-running the job cannot help.
+    pub fn fault_class(&self) -> Option<FaultClass> {
+        match self {
+            Self::Data { .. } => Some(FaultClass::Io),
+            Self::Engine { .. } => Some(FaultClass::EngineLoad),
+            Self::Internal(_) => Some(FaultClass::Panic),
+            Self::InvalidRequest { .. }
+            | Self::InvalidData { .. }
+            | Self::Cancelled
+            | Self::Shutdown
+            | Self::Overloaded
+            | Self::ResultTaken => None,
+        }
     }
 }
 
@@ -87,5 +139,19 @@ mod tests {
     fn converts_into_anyhow() {
         let e: anyhow::Error = ClusterError::Shutdown.into();
         assert!(e.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn fault_classes_split_transient_from_deterministic() {
+        let io = ClusterError::Data { source: "s".into(), reason: "mmap".into() };
+        assert_eq!(io.fault_class(), Some(FaultClass::Io));
+        let load = ClusterError::Engine { engine: "pjrt", reason: "no manifest".into() };
+        assert_eq!(load.fault_class(), Some(FaultClass::EngineLoad));
+        assert_eq!(ClusterError::Internal("boom".into()).fault_class(), Some(FaultClass::Panic));
+        assert_eq!(ClusterError::Overloaded.fault_class(), None);
+        assert_eq!(ClusterError::Cancelled.fault_class(), None);
+        let bad = ClusterError::InvalidData { source: "s".into(), row: 3, reason: "NaN".into() };
+        assert_eq!(bad.fault_class(), None);
+        assert!(bad.to_string().contains("row 3"));
     }
 }

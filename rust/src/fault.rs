@@ -1,0 +1,311 @@
+//! Deterministic fault-injection harness for robustness testing.
+//!
+//! The coordinator's fault-tolerance contract — every submitted job
+//! resolves to a typed outcome, never a hang — is only worth anything if
+//! it is exercised against real failures. This module plants cheap,
+//! normally-inert injection points at the three places transient faults
+//! actually enter the system:
+//!
+//! * [`FaultSite::ChunkRead`] — a [`crate::data::ChunkSource`] read
+//!   (mmap page-in, in-memory chunk handoff),
+//! * [`FaultSite::PjrtOpen`] — PJRT runtime / artifact-manifest load,
+//! * [`FaultSite::SolverIteration`] — the top of the shared
+//!   fixed-point driver loop.
+//!
+//! A [`FaultPlan`] describes *when* each site fires and *how*
+//! ([`FaultKind`]): a typed error, an ordinary panic (caught by the
+//! worker's per-job isolation), or a worker kill (a panic that escapes
+//! isolation so the supervisor's respawn path runs). Plans are
+//! deterministic: counted rules fire on exact hit indices, rate-based
+//! rules draw from a [`crate::rng::Pcg32`] seeded by the caller, so a
+//! fixed seed replays the identical fault schedule.
+//!
+//! The harness is process-global (the injection points live on hot paths
+//! with no plumbing to thread a handle through) and serialized:
+//! [`FaultPlan::install`] holds a global lock until the returned
+//! [`FaultGuard`] drops, so concurrent tests cannot interleave plans.
+//! Unit tests that hit sites from the test thread itself should prefer
+//! [`FaultPlan::install_for_current_thread`], which additionally scopes
+//! firing to the installing thread — a concurrently running bystander
+//! test cannot steal (or be broken by) the armed schedule. With no plan
+//! installed the per-site cost is one relaxed atomic load.
+
+use crate::error::ClusterError;
+use crate::rng::{Pcg32, Rng};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Where a fault is injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A `ChunkSource::next_chunk` read.
+    ChunkRead,
+    /// `PjrtRuntime::open` (manifest + client bring-up).
+    PjrtOpen,
+    /// The top of one fixed-point driver iteration.
+    SolverIteration,
+}
+
+/// How an armed site fails when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return the site's typed error (e.g. a chunk read comes back as
+    /// [`ClusterError::Data`]).
+    Error,
+    /// Panic with a string payload — exercises the worker's per-job
+    /// `catch_unwind` isolation.
+    Panic,
+    /// Panic with the [`WorkerKilled`] payload — the worker resolves the
+    /// job's handle and then dies, exercising supervisor respawn.
+    KillWorker,
+}
+
+/// Panic payload of [`FaultKind::KillWorker`]: a worker that catches it
+/// resolves the in-flight job and then resumes unwinding so the thread
+/// genuinely dies.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerKilled;
+
+/// One injection rule: after `skip` hits at `site`, the next `count`
+/// qualifying hits fire `kind`. A rate-based rule qualifies a hit by a
+/// seeded Bernoulli draw instead of unconditionally.
+#[derive(Debug, Clone)]
+struct FaultRule {
+    site: FaultSite,
+    kind: FaultKind,
+    skip: u64,
+    remaining: u64,
+    rate: Option<(f64, Pcg32)>,
+}
+
+/// A deterministic schedule of injected faults. Build one with the
+/// chainable constructors, then [`FaultPlan::install`] it; it stays
+/// active until the returned [`FaultGuard`] drops.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no site ever fires).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fire `kind` on the next `count` hits at `site`.
+    pub fn fail_next(self, site: FaultSite, kind: FaultKind, count: u64) -> Self {
+        self.fail_after(site, kind, 0, count)
+    }
+
+    /// Skip the first `skip` hits at `site`, then fire `kind` on the
+    /// following `count` hits.
+    pub fn fail_after(mut self, site: FaultSite, kind: FaultKind, skip: u64, count: u64) -> Self {
+        self.rules.push(FaultRule { site, kind, skip, remaining: count, rate: None });
+        self
+    }
+
+    /// Fire `kind` on each hit at `site` with probability `rate`, drawn
+    /// from a [`Pcg32`] seeded with `seed` (so a fixed seed replays the
+    /// identical schedule), for at most `count` firings.
+    pub fn fail_with_rate(
+        mut self,
+        site: FaultSite,
+        kind: FaultKind,
+        rate: f64,
+        seed: u64,
+        count: u64,
+    ) -> Self {
+        self.rules.push(FaultRule {
+            site,
+            kind,
+            skip: 0,
+            remaining: count,
+            rate: Some((rate.clamp(0.0, 1.0), Pcg32::seed_from_u64(seed))),
+        });
+        self
+    }
+
+    /// Arm the plan process-wide (any thread's site hits can fire it —
+    /// what the coordinator integration harness needs, where worker
+    /// threads are the ones reaching the sites). Serialized: the call
+    /// blocks while another plan is installed, and the plan disarms when
+    /// the returned guard drops.
+    pub fn install(self) -> FaultGuard {
+        self.install_scoped(Scope::Process)
+    }
+
+    /// Arm the plan for site hits made by the *calling thread* only.
+    /// Other threads see every site inert, so a unit test that consumes
+    /// its schedule synchronously cannot interfere with (or be robbed
+    /// by) tests running in parallel. Same serialization as
+    /// [`FaultPlan::install`].
+    pub fn install_for_current_thread(self) -> FaultGuard {
+        self.install_scoped(Scope::Thread(std::thread::current().id()))
+    }
+
+    fn install_scoped(self, scope: Scope) -> FaultGuard {
+        let permit = INSTALL_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        *state().lock().unwrap_or_else(PoisonError::into_inner) =
+            Some(Installed { rules: self.rules, scope });
+        ACTIVE.store(true, Ordering::Release);
+        FaultGuard { _permit: permit }
+    }
+}
+
+/// Which threads an installed plan fires for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// Any thread (integration harness: coordinator workers hit sites).
+    Process,
+    /// Only the installing thread (unit tests, contamination-proof).
+    Thread(std::thread::ThreadId),
+}
+
+/// An armed plan plus its firing scope.
+struct Installed {
+    rules: Vec<FaultRule>,
+    scope: Scope,
+}
+
+/// Keeps a [`FaultPlan`] armed; dropping it disarms the plan and releases
+/// the global install lock.
+pub struct FaultGuard {
+    _permit: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::Release);
+        *state().lock().unwrap_or_else(PoisonError::into_inner) = None;
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+static STATE: Mutex<Option<Installed>> = Mutex::new(None);
+
+fn state() -> &'static Mutex<Option<Installed>> {
+    &STATE
+}
+
+/// Consume one hit at `site`, returning the kind to fire, if any.
+fn fire(site: FaultSite) -> Option<FaultKind> {
+    if !ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    let mut guard = state().lock().unwrap_or_else(PoisonError::into_inner);
+    let installed = guard.as_mut()?;
+    if let Scope::Thread(owner) = installed.scope {
+        if owner != std::thread::current().id() {
+            return None;
+        }
+    }
+    for rule in installed.rules.iter_mut().filter(|r| r.site == site) {
+        if rule.skip > 0 {
+            rule.skip -= 1;
+            continue;
+        }
+        if rule.remaining == 0 {
+            continue;
+        }
+        let fires = match &mut rule.rate {
+            None => true,
+            Some((rate, rng)) => rng.next_f64() < *rate,
+        };
+        if fires {
+            rule.remaining -= 1;
+            return Some(rule.kind);
+        }
+    }
+    None
+}
+
+/// Injection point: called by instrumented sites on every hit. Returns
+/// `Ok(())` when inert, the site's typed error for [`FaultKind::Error`],
+/// and panics for the panic kinds.
+pub(crate) fn check(site: FaultSite) -> Result<(), ClusterError> {
+    match fire(site) {
+        None => Ok(()),
+        Some(FaultKind::Error) => Err(injected_error(site)),
+        Some(FaultKind::Panic) => panic!("injected fault: panic at {site:?}"),
+        Some(FaultKind::KillWorker) => std::panic::panic_any(WorkerKilled),
+    }
+}
+
+/// The typed error each site surfaces for [`FaultKind::Error`], shaped
+/// like the real failure at that site so retry classification matches.
+fn injected_error(site: FaultSite) -> ClusterError {
+    match site {
+        FaultSite::ChunkRead => ClusterError::Data {
+            source: "fault-injection".to_string(),
+            reason: "injected chunk-read failure".to_string(),
+        },
+        FaultSite::PjrtOpen => ClusterError::Engine {
+            engine: "pjrt",
+            reason: "injected runtime-load failure".to_string(),
+        },
+        FaultSite::SolverIteration => {
+            ClusterError::Internal("injected solver-iteration failure".to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counted_rules_fire_exactly_on_schedule() {
+        let guard = FaultPlan::new()
+            .fail_after(FaultSite::ChunkRead, FaultKind::Error, 2, 1)
+            .install_for_current_thread();
+        assert_eq!(fire(FaultSite::PjrtOpen), None, "other sites stay inert");
+        assert_eq!(fire(FaultSite::ChunkRead), None);
+        assert_eq!(fire(FaultSite::ChunkRead), None);
+        assert_eq!(fire(FaultSite::ChunkRead), Some(FaultKind::Error));
+        assert_eq!(fire(FaultSite::ChunkRead), None, "budget consumed");
+        drop(guard);
+        assert_eq!(fire(FaultSite::ChunkRead), None, "disarmed after drop");
+    }
+
+    #[test]
+    fn rate_rules_replay_identically_for_a_seed() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            let _guard = FaultPlan::new()
+                .fail_with_rate(FaultSite::SolverIteration, FaultKind::Error, 0.3, seed, u64::MAX)
+                .install_for_current_thread();
+            (0..64).map(|_| fire(FaultSite::SolverIteration).is_some()).collect()
+        };
+        let a = schedule(7);
+        let b = schedule(7);
+        assert_eq!(a, b, "same seed, same fault schedule");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "rate is neither 0 nor 1");
+        assert_ne!(a, schedule(8), "different seed, different schedule");
+    }
+
+    #[test]
+    fn error_kind_surfaces_the_site_typed() {
+        let _guard = FaultPlan::new()
+            .fail_next(FaultSite::ChunkRead, FaultKind::Error, 1)
+            .install_for_current_thread();
+        let err = check(FaultSite::ChunkRead).unwrap_err();
+        assert!(matches!(err, ClusterError::Data { .. }));
+        assert!(check(FaultSite::ChunkRead).is_ok());
+    }
+
+    #[test]
+    fn thread_scoped_plans_are_inert_elsewhere() {
+        let _guard = FaultPlan::new()
+            .fail_next(FaultSite::ChunkRead, FaultKind::Error, 1)
+            .install_for_current_thread();
+        let stolen = std::thread::spawn(|| fire(FaultSite::ChunkRead).is_some())
+            .join()
+            .expect("probe thread must not panic");
+        assert!(!stolen, "another thread cannot consume a thread-scoped fault");
+        assert_eq!(
+            fire(FaultSite::ChunkRead),
+            Some(FaultKind::Error),
+            "the schedule is intact for the installer"
+        );
+    }
+}

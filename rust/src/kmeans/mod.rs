@@ -216,6 +216,7 @@ impl Solver {
             converged: outcome.converged,
             cancelled: outcome.cancelled,
             stopped_early: outcome.stopped_early,
+            error: outcome.error,
             energy_trace: outcome.energy_trace,
             m_trace: outcome.m_trace,
             dist_evals: self.ws.engine.distance_evals() - evals0,
@@ -340,6 +341,7 @@ impl Solver {
             converged: outcome.converged,
             cancelled: outcome.cancelled,
             stopped_early: outcome.stopped_early,
+            error: outcome.error,
             energy_trace: outcome.energy_trace,
             m_trace: outcome.m_trace,
             dist_evals: self.ws.engine.distance_evals() - evals0,

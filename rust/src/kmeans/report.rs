@@ -1,6 +1,7 @@
 //! Run report: everything the paper's tables print about one solver run.
 
 use crate::data::DataMatrix;
+use crate::error::ClusterError;
 use crate::lloyd::Assignment;
 use crate::metrics::PhaseTimer;
 
@@ -25,6 +26,10 @@ pub struct RunReport {
     /// True when an [`crate::observe::Observer`] or the configured time
     /// budget ended the run before the convergence criterion fired.
     pub stopped_early: bool,
+    /// Typed error that ended the run mid-iteration, if any (the partial
+    /// state above is still consistent). `ClusterSession` surfaces it as
+    /// an `Err` after recycling the report's buffers.
+    pub error: Option<ClusterError>,
     /// Per-iteration energy (only when `record_trace`).
     pub energy_trace: Vec<f64>,
     /// Per-iteration value of `m` (only for dynamic-m runs with trace).
@@ -91,6 +96,7 @@ mod tests {
             converged: true,
             cancelled: false,
             stopped_early: false,
+            error: None,
             energy_trace: vec![],
             m_trace: vec![],
             dist_evals: 10,

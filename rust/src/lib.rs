@@ -51,7 +51,11 @@
 //! ([`Observer`], [`CancelToken`]); the service coordinator
 //! ([`coordinator::Coordinator`]) accepts the same requests and returns
 //! [`coordinator::JobHandle`]s with poll / wait / cancel — worker pickup
-//! honors [`ClusterRequest`] priorities.
+//! honors [`ClusterRequest`] priorities and interleaves clients fairly.
+//! The coordinator's fault-tolerance layer (admission policies with
+//! load-shedding, retry-with-backoff, worker supervision, graceful
+//! PJRT→CPU degradation) is exercised by the deterministic
+//! fault-injection harness in [`fault`].
 //!
 //! Datasets larger than RAM run through the streaming engine: a request
 //! with `EngineKind::MiniBatch` (and, for out-of-core files, a
@@ -72,6 +76,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fault;
 pub mod init;
 pub mod kmeans;
 pub mod linalg;

@@ -39,6 +39,25 @@ impl CancelToken {
     pub fn is_cancelled(&self) -> bool {
         self.flag.load(Ordering::Acquire)
     }
+
+    /// Sleep for up to `dur`, waking early when the token trips (polled
+    /// in small slices). Returns `true` when the sleep ended because of
+    /// cancellation — used by the coordinator's retry backoff so a
+    /// cancelled job never sits out its full backoff window.
+    pub fn sleep_unless_cancelled(&self, dur: std::time::Duration) -> bool {
+        const SLICE: std::time::Duration = std::time::Duration::from_millis(5);
+        let deadline = std::time::Instant::now() + dur;
+        loop {
+            if self.is_cancelled() {
+                return true;
+            }
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return self.is_cancelled();
+            }
+            std::thread::sleep(left.min(SLICE));
+        }
+    }
 }
 
 /// Per-iteration snapshot handed to [`Observer::on_iteration`].
@@ -227,6 +246,17 @@ mod tests {
         assert!(!a.is_cancelled() && !b.is_cancelled());
         b.cancel();
         assert!(a.is_cancelled() && b.is_cancelled());
+    }
+
+    #[test]
+    fn cancellable_sleep_cuts_out_early() {
+        use std::time::{Duration, Instant};
+        let t = CancelToken::new();
+        assert!(!t.sleep_unless_cancelled(Duration::from_millis(1)), "uncancelled sleep runs out");
+        t.cancel();
+        let sw = Instant::now();
+        assert!(t.sleep_unless_cancelled(Duration::from_secs(30)), "cancelled sleep returns true");
+        assert!(sw.elapsed() < Duration::from_secs(5), "and does not sit out the window");
     }
 
     fn info<'a>(

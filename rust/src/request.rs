@@ -16,7 +16,7 @@
 
 use crate::config::{Acceleration, EngineKind, Precision, SolverConfig};
 use crate::data::DataMatrix;
-use crate::error::ClusterError;
+use crate::error::{ClusterError, FaultClass};
 use crate::init::InitMethod;
 use crate::kmeans::WorkspaceSpec;
 use crate::stream::BatchSampling;
@@ -101,9 +101,21 @@ pub(crate) fn validate_against_data(
     x: &DataMatrix,
     k: usize,
     init: &InitSpec,
+    label: &str,
 ) -> Result<(), ClusterError> {
     if x.n() == 0 || x.d() == 0 {
         return Err(ClusterError::invalid("source", "data must be non-empty"));
+    }
+    // Admission-time finiteness check: one NaN/∞ sample would otherwise
+    // poison every distance, energy and centroid downstream of it.
+    for i in 0..x.n() {
+        if let Some(j) = x.row(i).iter().position(|v| !v.is_finite()) {
+            return Err(ClusterError::InvalidData {
+                source: label.to_string(),
+                row: i,
+                reason: format!("non-finite value at column {j}"),
+            });
+        }
     }
     if k > x.n() {
         return Err(ClusterError::invalid(
@@ -141,6 +153,39 @@ pub enum InitSpec {
     Centroids(Arc<DataMatrix>),
 }
 
+/// Retry discipline for service jobs that fail with a *transient*
+/// [`FaultClass`]: the coordinator re-runs the job up to
+/// `max_attempts` times total, sleeping a seeded-deterministic jittered
+/// exponential backoff between attempts. Deterministic failures
+/// (validation, cancellation) are never retried regardless of policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (must be ≥ 1).
+    pub max_attempts: u32,
+    /// Base backoff before attempt 2; attempt `a` waits
+    /// `backoff · 2^(a-2)`, jittered to 50–100 % of that span by a PRNG
+    /// seeded from (request seed, job id, attempt).
+    pub backoff: Duration,
+    /// Which transient classes are worth re-running.
+    pub retry_on: Vec<FaultClass>,
+}
+
+impl RetryPolicy {
+    /// Retry every transient class (I/O, engine load, worker panic).
+    pub fn transient(max_attempts: u32, backoff: Duration) -> Self {
+        Self {
+            max_attempts,
+            backoff,
+            retry_on: vec![FaultClass::Io, FaultClass::EngineLoad, FaultClass::Panic],
+        }
+    }
+
+    /// Whether an error of class `class` qualifies for another attempt.
+    pub fn retries(&self, class: Option<FaultClass>) -> bool {
+        class.is_some_and(|c| self.retry_on.contains(&c))
+    }
+}
+
 /// A fully validated clustering job description. Construct through
 /// [`ClusterRequest::builder`]; every field has a getter.
 #[derive(Debug, Clone)]
@@ -164,6 +209,9 @@ pub struct ClusterRequest {
     chunk_size: usize,
     batches_per_epoch: usize,
     batch_sampling: BatchSampling,
+    client: Option<String>,
+    retry: Option<RetryPolicy>,
+    cpu_fallback: bool,
 }
 
 impl ClusterRequest {
@@ -254,6 +302,23 @@ impl ClusterRequest {
         self.batch_sampling
     }
 
+    /// Client tag for per-client fair queue pickup (`None` = the shared
+    /// anonymous lane).
+    pub fn client(&self) -> Option<&str> {
+        self.client.as_deref()
+    }
+
+    /// Retry policy for transient service-side failures, if any.
+    pub fn retry(&self) -> Option<&RetryPolicy> {
+        self.retry.as_ref()
+    }
+
+    /// Whether a PJRT job whose runtime fails to load may degrade to the
+    /// equivalent CPU engine (recorded in `JobOutcome::degraded`).
+    pub fn cpu_fallback(&self) -> bool {
+        self.cpu_fallback
+    }
+
     /// Project the streaming mini-batch configuration (used when
     /// [`ClusterRequest::engine`] is `EngineKind::MiniBatch`).
     pub fn minibatch_config(&self) -> crate::stream::MiniBatchConfig {
@@ -302,6 +367,13 @@ impl ClusterRequest {
         self
     }
 
+    /// Swap the engine (coordinator-internal: graceful degradation of a
+    /// PJRT job to a CPU engine after a runtime-load failure).
+    pub(crate) fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
     /// Apply service-side defaults: a zero thread count takes the
     /// coordinator's per-worker thread budget (host-sizing every job would
     /// oversubscribe the workers), and jobs without an explicit artifact
@@ -344,6 +416,9 @@ pub struct ClusterRequestBuilder {
     chunk_size: usize,
     batches_per_epoch: usize,
     batch_sampling: BatchSampling,
+    client: Option<String>,
+    retry: Option<RetryPolicy>,
+    cpu_fallback: bool,
 }
 
 impl Default for ClusterRequestBuilder {
@@ -369,6 +444,9 @@ impl Default for ClusterRequestBuilder {
             chunk_size: 4096,
             batches_per_epoch: 0,
             batch_sampling: BatchSampling::Sequential,
+            client: None,
+            retry: None,
+            cpu_fallback: false,
         }
     }
 }
@@ -524,6 +602,30 @@ impl ClusterRequestBuilder {
         self
     }
 
+    /// Tag service submissions with a client identity: the coordinator's
+    /// queue interleaves pickup across clients (round-robin between
+    /// lanes, priority-then-FIFO within one), so one client's flood
+    /// cannot starve the rest. Untagged requests share one lane.
+    pub fn client(mut self, client: impl Into<String>) -> Self {
+        self.client = Some(client.into());
+        self
+    }
+
+    /// Retry transient service-side failures under `policy` (see
+    /// [`RetryPolicy`]). In-process sessions ignore it.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Allow a `EngineKind::Pjrt` job whose runtime fails to load to fall
+    /// back to the equivalent CPU engine instead of failing (the
+    /// degradation is recorded in the job outcome). Default off.
+    pub fn cpu_fallback(mut self, allow: bool) -> Self {
+        self.cpu_fallback = allow;
+        self
+    }
+
     /// Validate and produce the request.
     pub fn build(self) -> Result<ClusterRequest, ClusterError> {
         let source = self
@@ -552,12 +654,17 @@ impl ClusterRequestBuilder {
         if self.chunk_size == 0 {
             return Err(ClusterError::invalid("chunk_size", "must be at least 1"));
         }
+        if let Some(retry) = &self.retry {
+            if retry.max_attempts == 0 {
+                return Err(ClusterError::invalid("retry", "max_attempts must be at least 1"));
+            }
+        }
         // Inline sources get the full shape checks right now; lazy sources
         // get the identical checks (same helper) from the session at first
         // materialization — only the data-independent centroid-count check
         // can run for them here.
         match &source {
-            DataSource::Inline(x) => validate_against_data(x, self.k, &self.init)?,
+            DataSource::Inline(x) => validate_against_data(x, self.k, &self.init, &source.label())?,
             _ => {
                 if let InitSpec::Centroids(c0) = &self.init {
                     if c0.n() != self.k {
@@ -589,6 +696,9 @@ impl ClusterRequestBuilder {
             chunk_size: self.chunk_size,
             batches_per_epoch: self.batches_per_epoch,
             batch_sampling: self.batch_sampling,
+            client: self.client,
+            retry: self.retry,
+            cpu_fallback: self.cpu_fallback,
         })
     }
 }
@@ -721,6 +831,58 @@ mod tests {
         assert!(matches!(
             bad,
             Err(ClusterError::InvalidRequest { field: "chunk_size", .. })
+        ));
+    }
+
+    #[test]
+    fn robustness_fields_default_off_and_validate() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert_eq!(req.client(), None);
+        assert!(req.retry().is_none());
+        assert!(!req.cpu_fallback());
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .client("tenant-a")
+            .retry(RetryPolicy::transient(3, Duration::from_millis(5)))
+            .cpu_fallback(true)
+            .build()
+            .unwrap();
+        assert_eq!(req.client(), Some("tenant-a"));
+        assert!(req.cpu_fallback());
+        let policy = req.retry().unwrap();
+        assert_eq!(policy.max_attempts, 3);
+        assert!(policy.retries(Some(FaultClass::Io)));
+        assert!(policy.retries(Some(FaultClass::Panic)));
+        assert!(!policy.retries(None), "deterministic failures never retry");
+        let bad = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .retry(RetryPolicy { max_attempts: 0, backoff: Duration::ZERO, retry_on: vec![] })
+            .build();
+        assert!(matches!(bad, Err(ClusterError::InvalidRequest { field: "retry", .. })));
+    }
+
+    #[test]
+    fn non_finite_inline_data_is_rejected_with_row_index() {
+        let x = Arc::new(DataMatrix::from_rows(&[
+            &[0.0, 0.0],
+            &[1.0, 0.0],
+            &[0.5, f64::NAN],
+            &[1.0, 1.0],
+        ]));
+        let err = ClusterRequest::builder().inline(x).k(2).build().unwrap_err();
+        match err {
+            ClusterError::InvalidData { row, ref reason, .. } => {
+                assert_eq!(row, 2);
+                assert!(reason.contains("column 1"), "{reason}");
+            }
+            other => panic!("expected InvalidData, got {other:?}"),
+        }
+        let inf = Arc::new(DataMatrix::from_rows(&[&[f64::INFINITY, 0.0], &[1.0, 1.0]]));
+        assert!(matches!(
+            ClusterRequest::builder().inline(inf).k(1).build(),
+            Err(ClusterError::InvalidData { row: 0, .. })
         ));
     }
 

@@ -60,6 +60,9 @@ pub struct PjrtRuntime {
 impl PjrtRuntime {
     /// Open the artifact directory (expects `manifest.txt` inside).
     pub fn open(artifact_dir: &Path) -> Result<Self> {
+        // Fault-injection point: inert unless a `FaultPlan` arms the
+        // runtime-load site (robustness tests).
+        crate::fault::check(crate::fault::FaultSite::PjrtOpen)?;
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(Self {

@@ -99,7 +99,15 @@ impl ClusterSession {
         self.ensure_data()?;
         let x = self.data.as_ref().expect("ensure_data just set it");
         let c0 = self.c0.as_ref().expect("ensure_data just set it");
-        Ok(self.solver.run_observed(x, c0, observer, cancel))
+        let mut report = self.solver.run_observed(x, c0, observer, cancel);
+        if let Some(e) = report.error.take() {
+            // A mid-iteration failure (today only the fault-injection
+            // harness produces one on the full-batch path): recycle the
+            // partial report's buffers and surface the typed error.
+            self.solver.workspace_mut().recycle(report);
+            return Err(e);
+        }
+        Ok(report)
     }
 
     /// The streaming path (`EngineKind::MiniBatch`): build a
@@ -123,8 +131,10 @@ impl ClusterSession {
         };
         let mut source: Box<dyn ChunkSource> = match shard_path {
             Some(path) => {
-                // One mapping serves both the seeding prefix and the run.
-                let mut shard = Self::open_shard(&path)?;
+                // One mapping serves both the seeding prefix and the run
+                // (`MmapShardSource::open` is typed: IO and format faults
+                // arrive as `ClusterError::Data`).
+                let mut shard = MmapShardSource::open(&path)?;
                 self.ensure_shard_seed(&mut shard)?;
                 shard.rewind();
                 Box::new(shard)
@@ -144,15 +154,6 @@ impl ClusterSession {
             observer,
             cancel,
         )
-    }
-
-    /// Open a shard with its IO/format failures folded into the typed
-    /// [`ClusterError::Data`] variant (the single wrap site for sessions).
-    fn open_shard(path: &std::path::Path) -> Result<MmapShardSource, ClusterError> {
-        MmapShardSource::open(path).map_err(|e| ClusterError::Data {
-            source: format!("shard {}", path.display()),
-            reason: format!("{e:#}"),
-        })
     }
 
     /// Seed the initial centroids for a shard-backed streaming run from a
@@ -217,7 +218,8 @@ impl ClusterSession {
         }
         let x = self.request.source().materialize()?;
         let k = self.request.k();
-        crate::request::validate_against_data(&x, k, self.request.init())?;
+        let label = self.request.source().label();
+        crate::request::validate_against_data(&x, k, self.request.init(), &label)?;
         let c0 = match self.request.init() {
             InitSpec::Method(method) => {
                 let mut rng = Pcg32::seed_from_u64(self.request.seed());

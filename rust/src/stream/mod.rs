@@ -612,6 +612,8 @@ pub(crate) fn run_on_workspace(
         converged: outcome.converged,
         cancelled: outcome.cancelled,
         stopped_early: outcome.stopped_early,
+        // A carried stream error already surfaced above, typed.
+        error: None,
         energy_trace: outcome.energy_trace,
         m_trace: outcome.m_trace,
         dist_evals: ws.engine.distance_evals() - evals0,

@@ -14,8 +14,7 @@ fn coordinator() -> Coordinator {
     Coordinator::start(CoordinatorConfig {
         workers: 2,
         queue_depth: 16,
-        solver_threads: 1,
-        artifact_dir: aakm::runtime::default_artifact_dir(),
+        ..CoordinatorConfig::default()
     })
 }
 
@@ -86,8 +85,7 @@ fn priority_jobs_jump_the_queue() {
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
         queue_depth: 8,
-        solver_threads: 1,
-        artifact_dir: aakm::runtime::default_artifact_dir(),
+        ..CoordinatorConfig::default()
     });
     let mut rng = Pcg32::seed_from_u64(60);
     let slow_data = Arc::new(synth::noisy_curve(&mut rng, 40_000, 4, 0.3));
@@ -163,8 +161,7 @@ fn cancellation_reaches_a_running_job() {
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
         queue_depth: 4,
-        solver_threads: 1,
-        artifact_dir: aakm::runtime::default_artifact_dir(),
+        ..CoordinatorConfig::default()
     });
     let mut rng = Pcg32::seed_from_u64(50);
     // A big, poorly separated instance: hundreds of ms of solve time.

@@ -97,3 +97,24 @@ else
   exit 1
 fi
 rm -f "$mb_probe_log"
+
+# Fault-injection smoke: replay the coordinator robustness sweep
+# (tests/fault_injection.rs) on a wider fixed seed set than the 0..8
+# default `cargo test` already ran — injected chunk-read faults, PJRT
+# load failures, worker panics/kills, shed admission — proving every
+# job handle resolves typed and shutdown completes under each schedule.
+# Deterministic by construction (seeded schedules), so failures replay.
+# Same probe pattern as the bench legs: a manifest without the test
+# target is a legitimate skip, a broken build is a hard failure.
+fi_probe_log=$(mktemp)
+if cargo test --test fault_injection --no-run >"$fi_probe_log" 2>&1; then
+  AAKM_FAULT_SEEDS=0,1,2,3,4,5,6,7,11,29 cargo test -q --test fault_injection
+  echo "ci.sh: fault-injection smoke leg OK (fixed 10-seed sweep)"
+elif grep -qi "no test target named" "$fi_probe_log"; then
+  echo "ci.sh: fault_injection test target not declared in this manifest; skipping smoke leg" >&2
+else
+  echo "ci.sh: fault_injection tests failed to build:" >&2
+  cat "$fi_probe_log" >&2
+  exit 1
+fi
+rm -f "$fi_probe_log"
