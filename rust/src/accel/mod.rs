@@ -43,6 +43,7 @@ use crate::data::DataMatrix;
 use crate::error::ClusterError;
 use crate::metrics::{PhaseTimer, Stopwatch};
 use crate::observe::{CancelToken, IterationInfo, Observer, ObserverControl};
+use crate::persist::DriverSnap;
 use std::time::Duration;
 
 /// The run's interruption sources, bundled: wall-clock budget plus the
@@ -164,6 +165,12 @@ pub struct DriverConfig {
     /// *after* the assignment that may prove convergence, so a cancelled
     /// run still returns a consistent `(centroids, assignment)` pair.
     pub check_at_top: bool,
+    /// Call [`Step::save_checkpoint`] after every this-many productive
+    /// iterations (`0` disables checkpointing). An interruption — cancel
+    /// token, time budget, observer stop — also flushes one final
+    /// best-effort snapshot at the last committed boundary, so a stopped
+    /// run is resumable without waiting for the next multiple.
+    pub checkpoint_every: usize,
 }
 
 /// What one driver run produced; the caller combines it with its own
@@ -246,6 +253,20 @@ pub trait Step {
     /// proposed next iterate for deferred-guard steps, the committed
     /// epoch iterate for the streaming step).
     fn observe(&self) -> (&DataMatrix, &PhaseTimer);
+
+    /// Write a durable snapshot of the step's state (centroids, solver
+    /// buffers, RNG streams) together with the driver state and Anderson
+    /// history handed in. Called at every `checkpoint_every` boundary; an
+    /// error aborts the run typed (a checkpointed run that silently stops
+    /// checkpointing is worse than one that stops). The default is a
+    /// no-op for steps without a durable backing.
+    fn save_checkpoint(
+        &mut self,
+        _driver: &DriverSnap,
+        _acc: Option<&AndersonAccelerator>,
+    ) -> Result<(), ClusterError> {
+        Ok(())
+    }
 }
 
 /// The single safeguarded-Anderson iteration loop (see the module docs).
@@ -255,6 +276,7 @@ pub struct FixedPointDriver<'a> {
     budget: Budget<'a>,
     energy_trace: Vec<f64>,
     m_trace: Vec<usize>,
+    resume: Option<DriverSnap>,
 }
 
 impl<'a> FixedPointDriver<'a> {
@@ -270,7 +292,18 @@ impl<'a> FixedPointDriver<'a> {
         energy_trace: Vec<f64>,
         m_trace: Vec<usize>,
     ) -> Self {
-        Self { cfg, acc, budget, energy_trace, m_trace }
+        Self { cfg, acc, budget, energy_trace, m_trace, resume: None }
+    }
+
+    /// Continue a run from a snapshot's driver state instead of from
+    /// iteration zero: the loop locals (committed energy, decrease
+    /// history, counters, the dynamic-`m` window, the deferred guard's
+    /// outstanding flag) are seeded from the snapshot, and the iteration
+    /// budget picks up where the saved run stopped. The caller is
+    /// responsible for restoring the matching step buffers and Anderson
+    /// history before calling [`FixedPointDriver::run`].
+    pub fn resume_from(&mut self, snap: DriverSnap) {
+        self.resume = Some(snap);
     }
 
     /// Run the loop to convergence, the iteration cap, the budget, or an
@@ -307,8 +340,36 @@ impl<'a> FixedPointDriver<'a> {
         let mut outstanding = false;
         let mut rejects = 0u32;
         let restart_after = self.cfg.restart_after_rejects.unwrap_or(u32::MAX);
+        // Resuming: seed every loop local from the snapshot so the next
+        // iteration continues the saved trajectory exactly.
+        if let Some(snap) = self.resume.take() {
+            out.iterations = snap.iterations as usize;
+            out.accepted = snap.accepted as usize;
+            e_prev = snap.energy;
+            decrease_prev = snap.decrease_prev;
+            outstanding = snap.outstanding;
+            rejects = snap.rejects;
+            if let Some(c) = controller.as_mut() {
+                c.set_m(snap.m as usize);
+            }
+        }
+        let mk_snap = |iterations: usize,
+                       accepted: usize,
+                       energy: f64,
+                       decrease_prev: f64,
+                       rejects: u32,
+                       m: usize,
+                       outstanding: bool| DriverSnap {
+            iterations: iterations as u64,
+            accepted: accepted as u64,
+            energy,
+            decrease_prev,
+            rejects,
+            m: m as u64,
+            outstanding,
+        };
 
-        for _t in 0..self.cfg.max_iters {
+        for _t in out.iterations..self.cfg.max_iters {
             // Fault-injection point: inert unless a `FaultPlan` arms the
             // solver-iteration site (robustness tests). Fires before the
             // iteration does any work, so the partial state stays exactly
@@ -329,6 +390,14 @@ impl<'a> FixedPointDriver<'a> {
                 if outstanding {
                     step.discard_candidate();
                 }
+                // Best-effort final flush: the discarded candidate leaves
+                // the step at its last committed (guarded) boundary.
+                if self.cfg.checkpoint_every > 0 {
+                    let m = controller.as_ref().map_or(0, MController::m);
+                    let snap =
+                        mk_snap(out.iterations, out.accepted, e_prev, decrease_prev, rejects, m, false);
+                    let _ = step.save_checkpoint(&snap, self.acc.as_deref());
+                }
                 out.cancelled = cancelled;
                 out.stopped_early = !cancelled;
                 break;
@@ -344,6 +413,21 @@ impl<'a> FixedPointDriver<'a> {
                     continue;
                 }
                 Advance::Interrupted { cancelled } => {
+                    // The step has already restored its last committed
+                    // boundary; flush it so the run is resumable.
+                    if self.cfg.checkpoint_every > 0 {
+                        let m = controller.as_ref().map_or(0, MController::m);
+                        let snap = mk_snap(
+                            out.iterations,
+                            out.accepted,
+                            e_prev,
+                            decrease_prev,
+                            rejects,
+                            m,
+                            false,
+                        );
+                        let _ = step.save_checkpoint(&snap, self.acc.as_deref());
+                    }
                     out.cancelled = cancelled;
                     out.stopped_early = !cancelled;
                     break;
@@ -452,12 +536,40 @@ impl<'a> FixedPointDriver<'a> {
                 if outstanding {
                     step.discard_candidate();
                 }
+                if self.cfg.checkpoint_every > 0 {
+                    let m = controller.as_ref().map_or(0, MController::m);
+                    let snap =
+                        mk_snap(out.iterations, out.accepted, e_prev, decrease_prev, rejects, m, false);
+                    let _ = step.save_checkpoint(&snap, self.acc.as_deref());
+                }
                 out.stopped_early = true;
                 break;
             }
             if plateaued {
                 out.converged = true;
                 break;
+            }
+            // Periodic durable snapshot at a committed iteration boundary.
+            // A failed write aborts the run typed: the old snapshot (if
+            // any) is still intact on disk, and a retry resumes from it.
+            if self.cfg.checkpoint_every > 0 && out.iterations % self.cfg.checkpoint_every == 0 {
+                let m = controller.as_ref().map_or(0, MController::m);
+                let snap = mk_snap(
+                    out.iterations,
+                    out.accepted,
+                    e_prev,
+                    decrease_prev,
+                    rejects,
+                    m,
+                    outstanding,
+                );
+                if let Err(err) = step.save_checkpoint(&snap, self.acc.as_deref()) {
+                    if outstanding {
+                        step.discard_candidate();
+                    }
+                    out.error = Some(err);
+                    break;
+                }
             }
         }
         out.last_energy = e_prev;
@@ -587,6 +699,7 @@ mod tests {
             guard: GuardMode::Deferred,
             restart_after_rejects: None,
             check_at_top: true,
+            checkpoint_every: 0,
         }
     }
 
@@ -684,6 +797,116 @@ mod tests {
         );
         let out = driver.run(&mut step, &mut NoopObserver);
         assert!(out.stopped_early && !out.cancelled);
+    }
+
+    /// In-memory checkpoint sink: records the driver state, the step's
+    /// iterate pair and the Anderson history at every snapshot boundary.
+    struct CheckpointingContraction {
+        inner: Contraction,
+        saved: Option<(DriverSnap, f64, f64, Option<crate::persist::AndersonSnap>)>,
+    }
+
+    impl Step for CheckpointingContraction {
+        fn advance(&mut self) -> Advance {
+            self.inner.advance()
+        }
+
+        fn reject(&mut self) -> Rejection {
+            self.inner.reject()
+        }
+
+        fn propose(&mut self, acc: &mut AndersonAccelerator, m_use: usize) -> bool {
+            self.inner.propose(acc, m_use)
+        }
+
+        fn discard_candidate(&mut self) {
+            self.inner.discard_candidate();
+        }
+
+        fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
+            self.inner.observe()
+        }
+
+        fn save_checkpoint(
+            &mut self,
+            driver: &DriverSnap,
+            acc: Option<&AndersonAccelerator>,
+        ) -> Result<(), ClusterError> {
+            self.saved =
+                Some((driver.clone(), self.inner.x, self.inner.g, acc.map(|a| a.snapshot())));
+            Ok(())
+        }
+    }
+
+    /// Truncate a run at iteration 6 with per-iteration checkpoints,
+    /// resume from the snapshot in fresh buffers, and demand the stitched
+    /// trajectory equals the uninterrupted reference bit for bit — the
+    /// driver-level core of the crate's resume-parity guarantee.
+    #[test]
+    fn resumed_run_is_bit_identical_to_uninterrupted() {
+        let sw = Stopwatch::start();
+        let token = CancelToken::new();
+        let budget = Budget::new(&sw, None, &token);
+
+        // Uninterrupted reference.
+        let mut acc_full = AndersonAccelerator::new(5, 1);
+        let mut step_full = Contraction::new(0.95, 1.0, 0.0);
+        let full = FixedPointDriver::new(
+            driver_cfg(Acceleration::DynamicM(2), 10_000),
+            Some(&mut acc_full),
+            budget,
+            Vec::new(),
+            Vec::new(),
+        )
+        .run(&mut step_full, &mut NoopObserver);
+        assert!(full.converged);
+
+        // Same run truncated at 6 iterations, checkpointing every one.
+        let mut cfg = driver_cfg(Acceleration::DynamicM(2), 6);
+        cfg.checkpoint_every = 1;
+        let mut acc_a = AndersonAccelerator::new(5, 1);
+        let mut step_a = CheckpointingContraction {
+            inner: Contraction::new(0.95, 1.0, 0.0),
+            saved: None,
+        };
+        let truncated = FixedPointDriver::new(cfg, Some(&mut acc_a), budget, Vec::new(), Vec::new())
+            .run(&mut step_a, &mut NoopObserver);
+        assert!(!truncated.converged, "6 iterations must not finish a 0.95-contraction");
+        assert_eq!(truncated.iterations, 6);
+        let (snap, x, g, aa) = step_a.saved.expect("checkpoint_every=1 must have saved");
+        assert_eq!(snap.iterations, 6);
+
+        // Resume in completely fresh buffers.
+        let mut acc_b = AndersonAccelerator::new(5, 1);
+        acc_b.restore(&aa.expect("accelerated run saves its history"));
+        let mut step_b = Contraction::new(0.95, 1.0, 0.0);
+        step_b.x = x;
+        step_b.g = g;
+        let mut driver =
+            FixedPointDriver::new(driver_cfg(Acceleration::DynamicM(2), 10_000), Some(&mut acc_b), budget, Vec::new(), Vec::new());
+        driver.resume_from(snap);
+        let resumed = driver.run(&mut step_b, &mut NoopObserver);
+        assert!(resumed.converged);
+
+        // Stitch the truncated prefix to the resumed suffix: identical to
+        // the uninterrupted reference, bit for bit.
+        assert_eq!(full.iterations, resumed.iterations, "total iteration counts must agree");
+        assert_eq!(full.accepted, resumed.accepted, "acceptance counters must agree");
+        let stitched: Vec<u64> = truncated
+            .energy_trace
+            .iter()
+            .chain(resumed.energy_trace.iter())
+            .map(|e| e.to_bits())
+            .collect();
+        let reference: Vec<u64> = full.energy_trace.iter().map(|e| e.to_bits()).collect();
+        assert_eq!(stitched, reference, "energy trajectories must match bit-exactly");
+        assert_eq!(
+            truncated.m_trace.iter().chain(resumed.m_trace.iter()).collect::<Vec<_>>(),
+            full.m_trace.iter().collect::<Vec<_>>(),
+            "dynamic-m trajectories must match"
+        );
+        assert_eq!(full.last_energy.to_bits(), resumed.last_energy.to_bits());
+        assert_eq!(step_full.x.to_bits(), step_b.x.to_bits(), "final iterates must agree");
     }
 
     #[test]

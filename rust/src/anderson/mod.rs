@@ -59,6 +59,13 @@ impl MController {
         self.epsilon2
     }
 
+    /// Restore the window size from a checkpoint (clamped to m̄) so a
+    /// resumed run continues with the exact trust-region state the
+    /// snapshot captured.
+    pub fn set_m(&mut self, m: usize) {
+        self.m = m.min(self.m_max);
+    }
+
     /// Apply Algorithm 1 lines 8–12 given the last two energy decreases.
     /// Non-finite or non-positive denominators (start-up, plateau) leave
     /// `m` unchanged.
@@ -178,6 +185,54 @@ impl AndersonAccelerator {
     /// Number of proposals that used extrapolation (vs pass-through).
     pub fn accelerated_steps(&self) -> u64 {
         self.accelerated_steps
+    }
+
+    /// Export the accelerator's history for a durable snapshot: the
+    /// previous `(f, g)` pair plus the ΔF/ΔG columns oldest-first (the
+    /// replay order [`AndersonAccelerator::restore`] needs).
+    pub fn snapshot(&self) -> crate::persist::AndersonSnap {
+        crate::persist::AndersonSnap {
+            prev: match (&self.prev_f, &self.prev_g) {
+                (Some(f), Some(g)) => Some((f.clone(), g.clone())),
+                _ => None,
+            },
+            cols: self
+                .ws
+                .history_oldest_first()
+                .map(|(f, g)| (f.to_vec(), g.to_vec()))
+                .collect(),
+            accelerated_steps: self.accelerated_steps,
+        }
+    }
+
+    /// Rebuild the history from a snapshot by replaying the same
+    /// incremental `push` sequence the original run made — the cached
+    /// Gram matrix comes out bit-identical to the uninterrupted run's,
+    /// so every subsequent proposal matches it exactly. The snapshot's
+    /// columns must have this accelerator's dimension (the resume path
+    /// validates shapes before calling).
+    pub fn restore(&mut self, snap: &crate::persist::AndersonSnap) {
+        let dim = self.ws.dim();
+        self.reset();
+        let claim = |src: &[f64], free: &mut Vec<Vec<f64>>| -> Vec<f64> {
+            assert_eq!(src.len(), dim, "snapshot column dimension mismatch");
+            let mut buf = free.pop().unwrap_or_else(|| vec![0.0; dim]);
+            buf.copy_from_slice(src);
+            buf
+        };
+        for (df, dg) in &snap.cols {
+            let f = claim(df, &mut self.free_cols);
+            let g = claim(dg, &mut self.free_cols);
+            if let Some((ef, eg)) = self.ws.push(f, g) {
+                self.free_cols.push(ef);
+                self.free_cols.push(eg);
+            }
+        }
+        if let Some((pf, pg)) = &snap.prev {
+            self.prev_f = Some(claim(pf, &mut self.free_cols));
+            self.prev_g = Some(claim(pg, &mut self.free_cols));
+        }
+        self.accelerated_steps = snap.accelerated_steps;
     }
 
     /// Drop all history (restart). Buffers are recycled into the internal
@@ -341,6 +396,7 @@ pub fn accelerated_fixed_point(
             guard: GuardMode::Deferred,
             restart_after_rejects: None,
             check_at_top: false,
+            checkpoint_every: 0,
         },
         Some(&mut acc),
         Budget::new(&sw, None, &cancel),
@@ -416,6 +472,43 @@ mod tests {
         let g2 = vec![1.5, 1.2];
         let out = acc.propose(&g2, &[0.2, 0.3], 0);
         assert_eq!(out, g2);
+    }
+
+    /// Snapshot/restore replays the incremental history pushes, so a
+    /// restored accelerator's proposals are bit-identical to one that
+    /// never stopped — the property the durable-checkpoint parity tests
+    /// lean on.
+    #[test]
+    fn snapshot_restore_is_bit_identical() {
+        use crate::rng::{Pcg32, Rng};
+        let dim = 12;
+        let mut rng = Pcg32::seed_from_u64(77);
+        let mut feed = |acc: &mut AndersonAccelerator, out: &mut Vec<f64>, rng: &mut Pcg32| {
+            let g: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let f: Vec<f64> = (0..dim).map(|_| rng.next_gaussian() * 0.1).collect();
+            acc.propose_into(&g, &f, 3, out);
+        };
+        let mut live = AndersonAccelerator::new(4, dim);
+        let mut out = vec![0.0; dim];
+        for _ in 0..6 {
+            feed(&mut live, &mut out, &mut rng);
+        }
+        let snap = live.snapshot();
+        let mut restored = AndersonAccelerator::new(4, dim);
+        restored.restore(&snap);
+        assert_eq!(restored.accelerated_steps(), live.accelerated_steps());
+        // Same future inputs => exactly the same proposals, bit for bit.
+        let mut rng_a = rng.clone();
+        let mut rng_b = rng;
+        let mut out_a = vec![0.0; dim];
+        let mut out_b = vec![0.0; dim];
+        for step in 0..5 {
+            feed(&mut live, &mut out_a, &mut rng_a);
+            feed(&mut restored, &mut out_b, &mut rng_b);
+            let bits_a: Vec<u64> = out_a.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u64> = out_b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "step {step} diverged after restore");
+        }
     }
 
     /// AA solves a linear contraction dramatically faster than plain

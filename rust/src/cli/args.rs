@@ -11,7 +11,8 @@ pub struct Args {
 }
 
 /// Boolean flags the CLI understands (everything else expects a value).
-const BOOL_FLAGS: &[&str] = &["compare", "trace", "verbose", "quiet", "center"];
+const BOOL_FLAGS: &[&str] =
+    &["compare", "trace", "verbose", "quiet", "center", "reseed-empty", "cpu-fallback"];
 
 impl Args {
     /// Parse an argv slice (after the subcommand).

@@ -12,6 +12,7 @@
 //! [`ClusterRequest`] / [`ClusterSession`] API the library exposes.
 
 mod args;
+pub mod signals;
 
 pub use args::Args;
 
@@ -19,6 +20,8 @@ use crate::config::{Acceleration, EngineKind, ExperimentConfig, Precision};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::data::{self, DataMatrix};
 use crate::init::InitMethod;
+use crate::observe::NoopObserver;
+use crate::persist::CheckpointPolicy;
 use crate::request::ClusterRequest;
 use crate::session::ClusterSession;
 use anyhow::{bail, Context, Result};
@@ -54,6 +57,14 @@ COMMANDS:
              --center     pre-center data (subtract the per-dimension mean;
                reported centroids are mapped back — always safe, distances
                are translation-invariant)
+             --checkpoint-dir <dir>    write a crash-safe snapshot of the
+               solver state into <dir> as the run progresses; re-running
+               the same command resumes bit-identically from it (SIGINT /
+               SIGTERM also flush one final snapshot before exiting)
+             --checkpoint-every <n>    snapshot cadence in iterations
+               (epochs for minibatch; default 1, needs --checkpoint-dir)
+             --reseed-empty  deterministically re-seed clusters that go
+               empty instead of carrying a dead centroid
              --seed <u64>  --scale <0..1>  --threads <n>
              --config <file.toml>   --compare   --trace
     datagen  Write a registry dataset to disk
@@ -68,6 +79,10 @@ COMMANDS:
                (default 1 = no retry; backoff is seeded-deterministic)
              --cpu-fallback  serve pjrt jobs on the CPU engine when the
                runtime fails to load (degradation echoed per job)
+             --journal <dir>   write-ahead job journal: every submission
+               is recorded before it runs, and on startup incomplete
+               jobs from a previous (crashed or interrupted) serve are
+               re-enqueued and counted in the final stats line
     inspect  Print the artifact manifest
              --artifacts <dir>
     help     This message
@@ -173,8 +188,10 @@ fn request_from_experiment(
     source: crate::request::DataSource,
     trace: bool,
     artifacts: &str,
+    checkpoint: Option<CheckpointPolicy>,
+    reseed_empty: bool,
 ) -> Result<ClusterRequest> {
-    let request = ClusterRequest::builder()
+    let mut builder = ClusterRequest::builder()
         .source(source)
         .k(cfg.k)
         .init(cfg.init)
@@ -190,9 +207,27 @@ fn request_from_experiment(
         .chunk_size(cfg.chunk_size)
         .batches_per_epoch(cfg.batches_per_epoch)
         .batch_sampling(cfg.sampling)
-        .artifact_dir(artifacts)
-        .build()?;
-    Ok(request)
+        .reseed_empty(reseed_empty)
+        .artifact_dir(artifacts);
+    if let Some(policy) = checkpoint {
+        builder = builder.checkpoint(policy);
+    }
+    Ok(builder.build()?)
+}
+
+/// Parse `--checkpoint-dir` / `--checkpoint-every` into a policy.
+fn checkpoint_from_args(args: &Args) -> Result<Option<CheckpointPolicy>> {
+    match (args.get("checkpoint-dir"), args.get("checkpoint-every")) {
+        (Some(dir), every) => {
+            let every: usize = every.unwrap_or("1").parse().context("--checkpoint-every")?;
+            if every == 0 {
+                bail!("--checkpoint-every must be >= 1");
+            }
+            Ok(Some(CheckpointPolicy::new(dir, every)))
+        }
+        (None, Some(_)) => bail!("--checkpoint-every needs --checkpoint-dir"),
+        (None, None) => Ok(None),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -266,9 +301,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         (DataSource::Inline(Arc::new(x)), mean)
     };
-    let request = request_from_experiment(&cfg, source.clone(), trace, artifacts)?;
+    let checkpoint = checkpoint_from_args(args)?;
+    let reseed_empty = args.flag("reseed-empty");
+    let request = request_from_experiment(
+        &cfg,
+        source.clone(),
+        trace,
+        artifacts,
+        checkpoint.clone(),
+        reseed_empty,
+    )?;
     let mut session = ClusterSession::open(request)?;
-    let mut report = session.run()?;
+    // First SIGINT/SIGTERM stops the solver at an iteration boundary
+    // (flushing a final snapshot when checkpointing); a second hard-exits.
+    let cancel = signals::interrupt_token();
+    let mut report = session.run_with(&mut NoopObserver, &cancel)?;
     if let Some(mean) = &mean {
         data::uncenter(&mut report.centroids, mean);
     }
@@ -283,6 +330,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("  energy trace: {:?}", &report.energy_trace);
         println!("  m trace:      {:?}", &report.m_trace);
     }
+    if report.cancelled {
+        match &checkpoint {
+            Some(ck) => println!(
+                "interrupted — final snapshot flushed to {}; re-run the same command to \
+                 resume where this left off",
+                ck.dir.display()
+            ),
+            None => println!(
+                "interrupted — no --checkpoint-dir was set, so this partial run is not \
+                 resumable"
+            ),
+        }
+        return Ok(());
+    }
     if args.flag("compare") {
         // The baseline differs only in acceleration, so it can reuse the
         // warm workspace (same engine / precision / threads). Under the
@@ -290,7 +351,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         // epochs on the same stream.
         let mut base_cfg = cfg.clone();
         base_cfg.accel = Acceleration::None;
-        let base_req = request_from_experiment(&base_cfg, source, false, artifacts)?;
+        // The baseline never checkpoints: its fingerprint differs (accel
+        // off), so sharing the directory would only clobber the main
+        // run's snapshot.
+        let base_req =
+            request_from_experiment(&base_cfg, source, false, artifacts, None, reseed_empty)?;
         let mut base_session =
             ClusterSession::with_workspace(base_req, session.into_workspace())?;
         let base = base_session.run()?;
@@ -348,16 +413,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--retries counts total attempts and must be >= 1");
     }
     let cpu_fallback = args.flag("cpu-fallback");
-    let coord = Coordinator::start(CoordinatorConfig {
+    let journal = args.get("journal").map(std::path::PathBuf::from);
+    let coord = Coordinator::try_start(CoordinatorConfig {
         workers,
         queue_depth: jobs.max(4),
         solver_threads: 1,
         artifact_dir: args.get("artifacts").unwrap_or("artifacts").into(),
         submit_policy: policy,
-    });
+        journal_dir: journal.clone(),
+    })?;
+    // Bridge the process-wide signal token to the coordinator: the first
+    // SIGINT/SIGTERM cancels every queued and running job, which resolves
+    // all handles (incomplete jobs stay journaled for the next serve).
+    let sig = signals::interrupt_token();
+    let watcher_done = crate::observe::CancelToken::new();
+    {
+        let (sig, done, coord_cancel) =
+            (sig.clone(), watcher_done.clone(), coord.cancel_token());
+        std::thread::spawn(move || loop {
+            if sig.is_cancelled() {
+                coord_cancel.cancel();
+                return;
+            }
+            if done.is_cancelled() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        });
+    }
     let sw = crate::metrics::Stopwatch::start();
     let names = ["HTRU2", "Birch", "Shuttle", "Eb"];
     let mut handles = Vec::new();
+    if let Some(dir) = &journal {
+        let recovered = coord.recover(dir)?;
+        if !recovered.is_empty() {
+            println!(
+                "recovered {} incomplete job(s) from the journal at {}",
+                recovered.len(),
+                dir.display()
+            );
+        }
+        handles.extend(recovered);
+    }
     for id in 0..jobs as u64 {
         let mut builder = ClusterRequest::builder()
             .registry(names[id as usize % names.len()], scale)
@@ -425,10 +522,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         admitted as f64 / total.max(1e-9)
     );
     println!(
-        "admission: {} submitted, {} shed; {} retries, {} worker respawns",
-        stats.submitted, stats.shed, stats.retries, stats.respawns
+        "admission: {} submitted, {} shed, {} recovered; {} retries, {} worker respawns",
+        stats.submitted, stats.shed, stats.recovered, stats.retries, stats.respawns
     );
+    watcher_done.cancel();
     coord.shutdown();
+    if signals::interrupted() {
+        match &journal {
+            Some(dir) => println!(
+                "interrupted — unfinished jobs stay journaled; restart with --journal {} \
+                 to re-enqueue them",
+                dir.display()
+            ),
+            None => println!("interrupted — no --journal dir, unfinished jobs are dropped"),
+        }
+    }
     Ok(())
 }
 
@@ -564,6 +672,46 @@ mod tests {
         .is_ok());
         assert!(dispatch(&["serve", "--jobs", "1", "--policy", "sometimes"]).is_err());
         assert!(dispatch(&["serve", "--jobs", "1", "--retries", "0"]).is_err());
+    }
+
+    #[test]
+    fn run_with_checkpoint_flags() {
+        let dir = std::env::temp_dir().join("aakm_cli_tests").join("ck_run");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap();
+        assert!(dispatch(&[
+            "run", "--dataset", "HTRU2", "--scale", "0.01", "--k", "4", "--threads", "1",
+            "--checkpoint-dir", d, "--checkpoint-every", "2", "--reseed-empty"
+        ])
+        .is_ok());
+        // A converged run consumes its snapshot: nothing stale is left to
+        // confuse a later run with the same flags.
+        assert!(!crate::persist::snapshot_path(&dir).exists());
+        // Flag validation: cadence without a directory, and a zero cadence.
+        assert!(dispatch(&["run", "--checkpoint-every", "3"]).is_err());
+        assert!(dispatch(&[
+            "run", "--checkpoint-dir", d, "--checkpoint-every", "0"
+        ])
+        .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_with_journal_leaves_no_incomplete_jobs() {
+        let dir = std::env::temp_dir().join("aakm_cli_tests").join("serve_journal");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(dispatch(&[
+            "serve", "--workers", "1", "--jobs", "2", "--k", "3", "--scale", "0.005",
+            "--journal", dir.to_str().unwrap(),
+        ])
+        .is_ok());
+        // A clean drain closes every journaled record; a restart over the
+        // same journal therefore recovers nothing (the crashed-serve case
+        // is exercised end-to-end in tests/recovery.rs).
+        let events = crate::persist::read_journal(&dir).unwrap();
+        assert!(!events.is_empty(), "serve must have journaled its jobs");
+        assert!(crate::persist::incomplete_jobs(&events).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

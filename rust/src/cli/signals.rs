@@ -1,0 +1,92 @@
+//! Graceful SIGINT / SIGTERM handling for the long-running subcommands.
+//!
+//! The first signal trips a process-wide [`CancelToken`]; every solver
+//! and the coordinator's workers stop at their next iteration boundary,
+//! which lets a checkpointed run flush one final snapshot (the driver
+//! writes it on any interruption) so the command can be re-run to
+//! resume. A second signal means "stop now": the handler hard-exits
+//! with the conventional `128 + signum` status without unwinding.
+//!
+//! The handler is declared directly against libc's `signal(2)` — which
+//! std always links on unix — so no crate dependency is needed (same
+//! idiom as the `mmap` bindings in `data::chunks`). Everything it does
+//! is async-signal-safe: one atomic counter bump, one atomic store
+//! through the token, or `_exit`.
+
+use crate::observe::CancelToken;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+/// Signals received so far (0 → none, 1 → graceful stop in progress).
+static SIGNALS_SEEN: AtomicU32 = AtomicU32::new(0);
+
+/// The token the handler trips. Installed once per process; read-only
+/// from the handler (a `OnceLock` load is a plain atomic read).
+static TOKEN: OnceLock<CancelToken> = OnceLock::new();
+
+#[cfg(unix)]
+const SIGINT: i32 = 2;
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+unsafe extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+    fn _exit(status: i32) -> !;
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(signum: i32) {
+    let prior = SIGNALS_SEEN.fetch_add(1, Ordering::AcqRel);
+    if prior == 0 {
+        if let Some(token) = TOKEN.get() {
+            token.cancel();
+        }
+    } else {
+        // Second signal: the user wants out *now*. `_exit` skips
+        // destructors and buffered-IO flushes by design — the snapshot
+        // format is torn-write-safe, so an interrupted flush is
+        // detected (and the previous snapshot kept) on the next run.
+        unsafe { _exit(128 + signum) };
+    }
+}
+
+/// The process-wide interruption token, installing the SIGINT/SIGTERM
+/// handlers on first use. Subsequent calls return the same token. On
+/// non-unix targets (or when the handlers cannot be installed) the
+/// token is still returned — it simply never trips.
+pub fn interrupt_token() -> CancelToken {
+    let token = TOKEN.get_or_init(CancelToken::new).clone();
+    #[cfg(unix)]
+    {
+        static INSTALLED: OnceLock<()> = OnceLock::new();
+        INSTALLED.get_or_init(|| unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        });
+    }
+    token
+}
+
+/// Whether a graceful stop is in progress (at least one signal seen).
+pub fn interrupted() -> bool {
+    SIGNALS_SEEN.load(Ordering::Acquire) > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // CancelToken is one-way and this token is process-wide, so the test
+    // must never actually trip it (it would cancel every other test's
+    // runs). Repeated installation being idempotent and the token staying
+    // clear is all that can be checked in-process; the end-to-end signal
+    // behavior is exercised by the crash-recovery leg of scripts/ci.sh.
+    #[test]
+    fn token_is_shared_and_initially_clear() {
+        let a = interrupt_token();
+        let b = interrupt_token();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        assert!(!interrupted());
+    }
+}

@@ -79,6 +79,18 @@ pub enum Acceleration {
     DynamicM(usize),
 }
 
+impl Acceleration {
+    /// Canonical text form — the inverse of [`parse_accel`], used by
+    /// checkpoint fingerprints and the coordinator journal.
+    pub fn label(&self) -> String {
+        match self {
+            Self::None => "none".to_string(),
+            Self::FixedM(m) => format!("fixed:{m}"),
+            Self::DynamicM(m) => format!("dynamic:{m}"),
+        }
+    }
+}
+
 /// Solver-level configuration (what [`crate::kmeans::Solver`] needs; the
 /// dataset/seeding fields live in [`ExperimentConfig`]).
 #[derive(Debug, Clone)]
@@ -107,6 +119,19 @@ pub struct SolverConfig {
     /// and energies stay `f64`. Pair with [`crate::data::center`] — see the
     /// accuracy notes in [`crate::linalg::kernel`].
     pub precision: Precision,
+    /// Durable-snapshot policy: `Some` makes the solver write crash-safe
+    /// `AAKMCK01` checkpoints into the policy's directory and resume from
+    /// an existing matching snapshot found there (see [`crate::persist`]).
+    pub checkpoint: Option<crate::persist::CheckpointPolicy>,
+    /// Opt-in empty-cluster recovery: when a centroid loses all samples,
+    /// re-seed it deterministically by splitting the highest-energy
+    /// cluster (see [`crate::lloyd::reseed_empty_clusters`]). Off by
+    /// default — the classical behavior keeps empty centroids in place.
+    pub reseed_empty: bool,
+    /// Run identity: seeds the re-seed RNG stream and is baked into the
+    /// checkpoint fingerprint so a snapshot from a differently-seeded run
+    /// is rejected instead of silently resumed.
+    pub seed: u64,
 }
 
 impl Default for SolverConfig {
@@ -122,6 +147,9 @@ impl Default for SolverConfig {
             threads: 0,
             record_trace: false,
             precision: Precision::F64,
+            checkpoint: None,
+            reseed_empty: false,
+            seed: 42,
         }
     }
 }
@@ -164,6 +192,16 @@ pub struct ExperimentConfig {
     /// only): the deterministic sequential pass, or uniform draws with
     /// replacement.
     pub sampling: BatchSampling,
+    /// Directory for durable `AAKMCK01` snapshots (`None` = no
+    /// checkpointing). A run started with an existing matching snapshot
+    /// in this directory resumes from it.
+    pub checkpoint_dir: Option<String>,
+    /// Snapshot cadence in iterations/epochs (used when `checkpoint_dir`
+    /// is set).
+    pub checkpoint_every: usize,
+    /// Opt-in deterministic empty-cluster re-seeding (split the
+    /// highest-energy cluster).
+    pub reseed_empty: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -185,6 +223,9 @@ impl Default for ExperimentConfig {
             chunk_size: 4096,
             batches_per_epoch: 0,
             sampling: BatchSampling::Sequential,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            reseed_empty: false,
         }
     }
 }
@@ -255,6 +296,15 @@ impl ExperimentConfig {
                 ConfigError::new(format!("unknown sampling '{s}' (sequential|replacement)"))
             })?;
         }
+        if let Some(v) = sect("checkpoint_dir") {
+            cfg.checkpoint_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = sect("checkpoint_every") {
+            cfg.checkpoint_every = v.as_int()? as usize;
+        }
+        if let Some(v) = sect("reseed_empty") {
+            cfg.reseed_empty = v.as_bool()?;
+        }
         Ok(cfg)
     }
 }
@@ -273,7 +323,17 @@ impl ExperimentConfig {
             threads: self.threads,
             record_trace: false,
             precision: self.precision,
+            checkpoint: self.checkpoint_policy(),
+            reseed_empty: self.reseed_empty,
+            seed: self.seed,
         }
+    }
+
+    /// The durable-snapshot policy this experiment asked for, if any.
+    pub fn checkpoint_policy(&self) -> Option<crate::persist::CheckpointPolicy> {
+        self.checkpoint_dir
+            .as_ref()
+            .map(|dir| crate::persist::CheckpointPolicy::new(dir, self.checkpoint_every.max(1)))
     }
 }
 

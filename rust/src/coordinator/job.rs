@@ -90,6 +90,7 @@ impl JobSpec {
             max_iters: self.max_iters,
             threads,
             record_trace: false,
+            seed: self.seed,
             ..SolverConfig::default()
         }
     }

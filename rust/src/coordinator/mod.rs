@@ -60,11 +60,12 @@ use crate::error::ClusterError;
 use crate::kmeans::Workspace;
 use crate::metrics::Stopwatch;
 use crate::observe::{CancelToken, NoopObserver};
+use crate::persist::{self, JournalEvent, JournalWriter};
 use crate::request::ClusterRequest;
 use crate::rng::{Pcg32, Rng};
 use crate::session::ClusterSession;
 use std::collections::{BinaryHeap, VecDeque};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -101,6 +102,11 @@ pub struct CoordinatorConfig {
     pub artifact_dir: std::path::PathBuf,
     /// Admission control for [`Coordinator::submit`] on a full queue.
     pub submit_policy: SubmitPolicy,
+    /// Write-ahead job journal directory. `Some` makes the coordinator
+    /// record every job's submitted/started/completed lifecycle durably
+    /// (see [`crate::persist::JournalEvent`]), so a later process can
+    /// [`Coordinator::recover`] the jobs this one lost to a crash.
+    pub journal_dir: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -111,6 +117,7 @@ impl Default for CoordinatorConfig {
             solver_threads: 1,
             artifact_dir: crate::runtime::default_artifact_dir(),
             submit_policy: SubmitPolicy::Block,
+            journal_dir: None,
         }
     }
 }
@@ -130,6 +137,8 @@ pub struct CoordinatorStats {
     pub retries: u64,
     /// Dead workers the supervisor replaced.
     pub respawns: u64,
+    /// Incomplete journaled jobs [`Coordinator::recover`] re-submitted.
+    pub recovered: u64,
 }
 
 /// Shared counter cells behind [`CoordinatorStats`].
@@ -140,6 +149,7 @@ struct Stats {
     completed: AtomicU64,
     retries: AtomicU64,
     respawns: AtomicU64,
+    recovered: AtomicU64,
 }
 
 impl Stats {
@@ -150,7 +160,21 @@ impl Stats {
             completed: self.completed.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
+            recovered: self.recovered.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Shared handle to the coordinator's journal writer (submitters and
+/// workers append from different threads).
+type Journal = Option<Arc<Mutex<JournalWriter>>>;
+
+/// Best-effort durable append: a failing journal disk must not take the
+/// live service down — recovery is a durability upgrade, not a gate on
+/// serving jobs.
+fn journal_append(journal: &Journal, ev: &JournalEvent) {
+    if let Some(j) = journal {
+        let _ = j.lock().unwrap_or_else(PoisonError::into_inner).append(ev);
     }
 }
 
@@ -544,11 +568,12 @@ fn spawn_worker(
     cfg: CoordinatorConfig,
     queue: Arc<JobQueue>,
     stats: Arc<Stats>,
+    journal: Journal,
     tx: mpsc::Sender<SupervisorMsg>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let _sentinel = DeathNotice { widx, tx };
-        worker_loop(widx, &cfg, &queue, &stats);
+        worker_loop(widx, &cfg, &queue, &stats, &journal);
     })
 }
 
@@ -560,6 +585,7 @@ fn supervise(
     slots: WorkerSlots,
     queue: Arc<JobQueue>,
     stats: Arc<Stats>,
+    journal: Journal,
     cfg: CoordinatorConfig,
 ) {
     while let Ok(msg) = rx.recv() {
@@ -580,6 +606,7 @@ fn supervise(
                     cfg.clone(),
                     Arc::clone(&queue),
                     Arc::clone(&stats),
+                    journal.clone(),
                     tx.clone(),
                 );
                 lock_slots(&slots)[widx] = Some(fresh);
@@ -597,13 +624,26 @@ pub struct Coordinator {
     super_tx: mpsc::Sender<SupervisorMsg>,
     stats: Arc<Stats>,
     policy: SubmitPolicy,
+    journal: Journal,
     next_id: AtomicU64,
     next_seq: AtomicU64,
 }
 
 impl Coordinator {
-    /// Start the worker pool (and its supervisor).
+    /// Start the worker pool (and its supervisor). Panics only when a
+    /// configured `journal_dir` cannot be opened — use
+    /// [`Coordinator::try_start`] to handle that case typed.
     pub fn start(cfg: CoordinatorConfig) -> Self {
+        Self::try_start(cfg).expect("journal directory must be creatable and writable")
+    }
+
+    /// [`Coordinator::start`] with the journal-open failure surfaced as a
+    /// typed error instead of a panic.
+    pub fn try_start(cfg: CoordinatorConfig) -> Result<Self, ClusterError> {
+        let journal: Journal = match &cfg.journal_dir {
+            Some(dir) => Some(Arc::new(Mutex::new(JournalWriter::open(dir)?))),
+            None => None,
+        };
         let queue = Arc::new(JobQueue::new(cfg.queue_depth));
         let stats = Arc::new(Stats::default());
         let (tx, rx) = mpsc::channel();
@@ -617,6 +657,7 @@ impl Coordinator {
                     cfg.clone(),
                     Arc::clone(&queue),
                     Arc::clone(&stats),
+                    journal.clone(),
                     tx.clone(),
                 )));
             }
@@ -625,20 +666,22 @@ impl Coordinator {
             let slots = Arc::clone(&slots);
             let queue = Arc::clone(&queue);
             let stats = Arc::clone(&stats);
+            let journal = journal.clone();
             let tx = tx.clone();
             let cfg = cfg.clone();
-            std::thread::spawn(move || supervise(rx, tx, slots, queue, stats, cfg))
+            std::thread::spawn(move || supervise(rx, tx, slots, queue, stats, journal, cfg))
         };
-        Self {
+        Ok(Self {
             queue,
             slots,
             supervisor: Some(supervisor),
             super_tx: tx,
             stats,
             policy: cfg.submit_policy,
+            journal,
             next_id: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
-        }
+        })
     }
 
     fn enqueue(
@@ -650,6 +693,13 @@ impl Coordinator {
         let shared = Arc::new(JobShared::new());
         let priority = request.priority();
         let client = request.client().unwrap_or_default().to_string();
+        // Write-ahead: the journal learns about the job before the queue
+        // does, so a crash right after admission still leaves a record to
+        // recover. Rejected admissions are closed out below.
+        journal_append(
+            &self.journal,
+            &JournalEvent::Submitted { job: id, spec: request.journal_spec() },
+        );
         let ticket = Box::new(JobTicket {
             id,
             request: Some(request),
@@ -659,18 +709,26 @@ impl Coordinator {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let job = QueuedJob { priority, seq, client, ticket };
         let pushed = match mode {
-            SubmitMode::Block => {
-                self.queue.push(job)?;
-                TryPush::Queued
+            SubmitMode::Block => self.queue.push(job).map(|()| TryPush::Queued),
+            SubmitMode::TryNow => self.queue.try_push(job),
+            SubmitMode::WaitFor(limit) => self.queue.push_timeout(job, limit),
+        };
+        let pushed = match pushed {
+            Ok(p) => p,
+            Err(e) => {
+                // Closed queue: the job never entered service.
+                journal_append(&self.journal, &JournalEvent::Completed { job: id });
+                return Err(e);
             }
-            SubmitMode::TryNow => self.queue.try_push(job)?,
-            SubmitMode::WaitFor(limit) => self.queue.push_timeout(job, limit)?,
         };
         match pushed {
             TryPush::Queued => {}
             // A rejected ticket must not resolve its handle: dropping
             // it here (without the handle ever escaping) is fine.
-            TryPush::Full(_ticket) => return Ok(None),
+            TryPush::Full(_ticket) => {
+                journal_append(&self.journal, &JournalEvent::Completed { job: id });
+                return Ok(None);
+            }
         }
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(Some(JobHandle { id, shared }))
@@ -726,9 +784,41 @@ impl Coordinator {
     }
 
     /// Snapshot the service counters (admissions, sheds, completions,
-    /// retries, worker respawns).
+    /// retries, worker respawns, recoveries).
     pub fn stats(&self) -> CoordinatorStats {
         self.stats.snapshot()
+    }
+
+    /// Replay the write-ahead journal in `dir` and re-submit every job
+    /// that was admitted but never completed, in submission order.
+    /// Re-submittable jobs go back through [`Coordinator::submit`] under
+    /// fresh ids — a request that carried a
+    /// [`crate::persist::CheckpointPolicy`] therefore resumes from its
+    /// latest snapshot rather than from scratch; jobs whose requests
+    /// cannot be reconstructed (inline data, explicit centroids — see
+    /// [`ClusterRequest::journal_spec`]) are closed out and skipped.
+    /// Every processed job is then marked completed in the journal, so
+    /// recovery is idempotent. The old record is closed only *after* the
+    /// re-submission is journaled: a crash mid-recovery duplicates work,
+    /// it never loses it. Returns the re-submitted handles;
+    /// [`CoordinatorStats::recovered`] counts them.
+    pub fn recover(&self, dir: &Path) -> Result<Vec<JobHandle>, ClusterError> {
+        let events = persist::read_journal(dir)?;
+        let incomplete = persist::incomplete_jobs(&events);
+        if incomplete.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut writer = JournalWriter::open(dir)?;
+        let mut handles = Vec::new();
+        for job in incomplete {
+            if let Some(spec) = &job.spec {
+                let request = ClusterRequest::from_journal_spec(spec)?;
+                handles.push(self.submit(request)?);
+                self.stats.recovered.fetch_add(1, Ordering::Relaxed);
+            }
+            writer.append(&JournalEvent::Completed { job: job.job })?;
+        }
+        Ok(handles)
     }
 
     /// Wait for a batch of handles, in submission order.
@@ -790,7 +880,13 @@ fn backoff_delay(base: Duration, seed: u64, id: u64, attempt: u32) -> Duration {
     Duration::from_secs_f64(span * jitter)
 }
 
-fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue, stats: &Stats) {
+fn worker_loop(
+    widx: usize,
+    cfg: &CoordinatorConfig,
+    queue: &JobQueue,
+    stats: &Stats,
+    journal: &Journal,
+) {
     // Warm state reused across this worker's jobs: the previous job's
     // workspace (reused whenever the next job's spec matches) and the PJRT
     // runtime (not `Send`, so it must be born on this thread).
@@ -815,6 +911,7 @@ fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue, stats: &S
             if cancel.is_cancelled() {
                 break Err(ClusterError::Cancelled);
             }
+            journal_append(journal, &JournalEvent::Started { job: id, attempt });
             let warm_slot = warm.take();
             let attempt_request = request.clone();
             let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -843,6 +940,9 @@ fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue, stats: &S
                             service_time: sw.elapsed(),
                             worker: widx,
                         });
+                        // The handle resolved, so the job is settled for
+                        // recovery purposes too.
+                        journal_append(journal, &JournalEvent::Completed { job: id });
                         std::panic::resume_unwind(panic);
                     }
                     // Any other panicking job must not take the worker down
@@ -882,6 +982,7 @@ fn worker_loop(widx: usize, cfg: &CoordinatorConfig, queue: &JobQueue, stats: &S
             service_time: sw.elapsed(),
             worker: widx,
         });
+        journal_append(journal, &JournalEvent::Completed { job: id });
     }
 }
 
@@ -1406,6 +1507,84 @@ mod tests {
             assert_eq!(out.timed_out, Some(DeadlinePhase::Queue));
         }
         coord.shutdown();
+    }
+
+    fn journal_tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("aakm_coord_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn journaling_coordinator_records_lifecycle() {
+        let dir = journal_tmp("lifecycle");
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 4,
+            journal_dir: Some(dir.clone()),
+            ..CoordinatorConfig::default()
+        });
+        let req = ClusterRequest::builder().registry("Birch", 0.001).k(4).seed(5).build().unwrap();
+        let h = coord.submit(req).unwrap();
+        assert!(h.wait().outcome.is_ok());
+        // Inline jobs journal too — spec-less, so recovery will skip them.
+        let h2 = coord.submit(inline_request(1, 4)).unwrap();
+        assert!(h2.wait().outcome.is_ok());
+        coord.shutdown();
+        let events = persist::read_journal(&dir).unwrap();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, JournalEvent::Submitted { job: 0, spec: Some(_) })));
+        assert!(events.iter().any(|e| matches!(e, JournalEvent::Started { job: 0, attempt: 1 })));
+        assert!(events.iter().any(|e| matches!(e, JournalEvent::Completed { job: 0 })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, JournalEvent::Submitted { job: 1, spec: None })));
+        assert!(
+            persist::incomplete_jobs(&events).is_empty(),
+            "a cleanly drained coordinator leaves no open records"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_resubmits_only_incomplete_journaled_jobs() {
+        let dir = journal_tmp("recovery");
+        // A coordinator that died mid-flight: two recoverable jobs
+        // journaled, only the first completed.
+        let spec = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(4)
+            .seed(3)
+            .build()
+            .unwrap()
+            .journal_spec()
+            .unwrap();
+        {
+            let mut w = JournalWriter::open(&dir).unwrap();
+            w.append(&JournalEvent::Submitted { job: 0, spec: Some(spec.clone()) }).unwrap();
+            w.append(&JournalEvent::Submitted { job: 1, spec: Some(spec) }).unwrap();
+            w.append(&JournalEvent::Submitted { job: 2, spec: None }).unwrap();
+            w.append(&JournalEvent::Started { job: 0, attempt: 1 }).unwrap();
+            w.append(&JournalEvent::Completed { job: 0 }).unwrap();
+            w.append(&JournalEvent::Started { job: 1, attempt: 1 }).unwrap();
+        }
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..CoordinatorConfig::default()
+        });
+        let handles = coord.recover(&dir).unwrap();
+        assert_eq!(handles.len(), 1, "one incomplete job had a recoverable spec");
+        let r = handles.into_iter().next().expect("one handle").wait();
+        assert!(r.outcome.expect("recovered job runs to completion").converged);
+        assert_eq!(coord.stats().recovered, 1);
+        // Idempotent: every journal record is closed now (the spec-less
+        // job was closed out as unrecoverable).
+        assert!(coord.recover(&dir).unwrap().is_empty());
+        assert_eq!(coord.stats().recovered, 1);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -51,6 +51,15 @@ pub enum ClusterError {
     /// The job's result was already taken by an earlier `wait` on the
     /// same handle.
     ResultTaken,
+    /// A checkpoint snapshot or job-journal file could not be written,
+    /// or an existing one was rejected on load (torn write, corruption,
+    /// fingerprint mismatch with the resuming request).
+    Snapshot {
+        /// Path of the offending snapshot / journal file.
+        path: String,
+        /// Human-readable explanation.
+        reason: String,
+    },
     /// A worker failed unexpectedly (panic isolated per job).
     Internal(String),
 }
@@ -87,6 +96,9 @@ impl std::fmt::Display for ClusterError {
             Self::Shutdown => write!(f, "coordinator is shut down"),
             Self::Overloaded => write!(f, "coordinator overloaded: submission shed"),
             Self::ResultTaken => write!(f, "job result already taken by an earlier wait"),
+            Self::Snapshot { path, reason } => {
+                write!(f, "snapshot '{path}': {reason}")
+            }
             Self::Internal(reason) => write!(f, "internal failure: {reason}"),
         }
     }
@@ -110,7 +122,7 @@ impl ClusterError {
     /// and re-running the job cannot help.
     pub fn fault_class(&self) -> Option<FaultClass> {
         match self {
-            Self::Data { .. } => Some(FaultClass::Io),
+            Self::Data { .. } | Self::Snapshot { .. } => Some(FaultClass::Io),
             Self::Engine { .. } => Some(FaultClass::EngineLoad),
             Self::Internal(_) => Some(FaultClass::Panic),
             Self::InvalidRequest { .. }

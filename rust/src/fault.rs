@@ -10,7 +10,10 @@
 //!   (mmap page-in, in-memory chunk handoff),
 //! * [`FaultSite::PjrtOpen`] — PJRT runtime / artifact-manifest load,
 //! * [`FaultSite::SolverIteration`] — the top of the shared
-//!   fixed-point driver loop.
+//!   fixed-point driver loop,
+//! * [`FaultSite::CheckpointWrite`] — a durable snapshot write in
+//!   [`crate::persist`] (clean failure, torn temp file, or a kill between
+//!   the write and the atomic rename).
 //!
 //! A [`FaultPlan`] describes *when* each site fires and *how*
 //! ([`FaultKind`]): a typed error, an ordinary panic (caught by the
@@ -44,6 +47,13 @@ pub enum FaultSite {
     PjrtOpen,
     /// The top of one fixed-point driver iteration.
     SolverIteration,
+    /// A checkpoint snapshot write (`persist::write_snapshot`). The site is
+    /// hit twice per write — once before the temp file is written (a clean
+    /// failure leaves no new bytes on disk) and once between the write and
+    /// the atomic rename (an error there truncates the temp file to a torn
+    /// prefix, a kill dies with the rename never performed) — so a plan can
+    /// target either window.
+    CheckpointWrite,
 }
 
 /// How an armed site fails when it fires.
@@ -247,6 +257,10 @@ fn injected_error(site: FaultSite) -> ClusterError {
         FaultSite::SolverIteration => {
             ClusterError::Internal("injected solver-iteration failure".to_string())
         }
+        FaultSite::CheckpointWrite => ClusterError::Snapshot {
+            path: "fault-injection".to_string(),
+            reason: "injected checkpoint-write failure".to_string(),
+        },
     }
 }
 

@@ -37,7 +37,90 @@ use crate::error::ClusterError;
 use crate::lloyd::{self, AssignmentEngine};
 use crate::metrics::{PhaseTimer, Stopwatch};
 use crate::observe::{CancelToken, NoopObserver, Observer};
-use steps::{AndersonStep, LloydStep};
+use crate::persist::{self, CheckpointPolicy, SolverSnapshot};
+use steps::{AndersonStep, CheckpointCtx, LloydStep};
+
+/// Checkpoint context resolved once per run by [`Solver::run_observed`]:
+/// the policy from the config, the fingerprint identifying this exact run,
+/// and a validated snapshot to resume from (if one was found on disk).
+struct PersistCtx {
+    policy: CheckpointPolicy,
+    fingerprint: String,
+    resume: Option<SolverSnapshot>,
+}
+
+/// Identity string baked into full-batch snapshots. Deliberately excludes
+/// `max_iters` (a capped run may be resumed with a larger budget) and the
+/// trace/observability knobs (they never alter the iterate trajectory);
+/// everything that does — shape, seed, engine, precision, acceleration,
+/// guard thresholds, re-seed policy — is included.
+fn full_batch_fingerprint(cfg: &SolverConfig, k: usize, d: usize) -> String {
+    format!(
+        "aakm-full-v1 k={k} d={d} seed={} engine={} precision={} accel={} \
+         m_max={} eps1={} eps2={} reseed={}",
+        cfg.seed,
+        cfg.engine.name(),
+        cfg.precision.name(),
+        cfg.accel.label(),
+        cfg.m_max,
+        cfg.epsilon1,
+        cfg.epsilon2,
+        cfg.reseed_empty,
+    )
+}
+
+/// Load and validate the snapshot (if any) under the policy's directory
+/// for a run with the given fingerprint over `n` samples. `Ok(None)` means
+/// a fresh start; any defect in an existing snapshot is a typed error, so
+/// a corrupt or mismatched resume point aborts instead of silently
+/// restarting from scratch.
+fn load_resume(
+    policy: &CheckpointPolicy,
+    fingerprint: &str,
+    n: usize,
+) -> Result<Option<SolverSnapshot>, ClusterError> {
+    let Some(snap) = persist::load_snapshot(&policy.dir)? else {
+        return Ok(None);
+    };
+    snap.check_fingerprint(fingerprint, &policy.dir)?;
+    let path = persist::snapshot_path(&policy.dir).display().to_string();
+    let fb = snap.full_batch.as_ref().ok_or_else(|| ClusterError::Snapshot {
+        path: path.clone(),
+        reason: "snapshot carries no full-batch solver state".into(),
+    })?;
+    if !fb.assign.is_empty() && fb.assign.len() != n {
+        return Err(ClusterError::Snapshot {
+            path,
+            reason: format!(
+                "snapshot assignments cover {} samples but the data has {n}",
+                fb.assign.len()
+            ),
+        });
+    }
+    Ok(Some(snap))
+}
+
+/// A typed-abort report for a failed snapshot load: nothing ran, and the
+/// failure surfaces through [`RunReport::error`].
+fn snapshot_error_report(c0: &DataMatrix, err: ClusterError) -> RunReport {
+    RunReport {
+        iterations: 0,
+        accepted: 0,
+        seconds: 0.0,
+        energy: f64::INFINITY,
+        mse: f64::INFINITY,
+        converged: false,
+        cancelled: false,
+        stopped_early: false,
+        error: Some(err),
+        energy_trace: Vec::new(),
+        m_trace: Vec::new(),
+        dist_evals: 0,
+        phases: PhaseTimer::new(),
+        centroids: c0.clone(),
+        assignment: Vec::new(),
+    }
+}
 
 /// Algorithm 1 driver over a reusable [`Workspace`].
 pub struct Solver {
@@ -125,10 +208,25 @@ impl Solver {
         assert!(c0.n() >= 1 && c0.n() <= x.n(), "bad K");
         self.ws.scratch.begin_run();
         observer.on_start(x, c0);
+        // Durable checkpointing: resolve the policy and load + validate any
+        // existing snapshot before dispatching. A corrupt, torn or
+        // mismatched snapshot aborts typed here — it never half-restores.
+        let mut persist_ctx: Option<PersistCtx> = None;
+        if let Some(policy) = self.cfg.checkpoint.clone() {
+            let fingerprint = full_batch_fingerprint(&self.cfg, c0.n(), c0.d());
+            let resume = match load_resume(&policy, &fingerprint, x.n()) {
+                Ok(resume) => resume,
+                Err(err) => {
+                    let report = snapshot_error_report(c0, err);
+                    observer.on_finish(&report);
+                    return report;
+                }
+            };
+            persist_ctx = Some(PersistCtx { policy, fingerprint, resume });
+        }
         let report = match self.cfg.accel {
-            Acceleration::None => self.run_lloyd(x, c0, observer, cancel),
-            Acceleration::FixedM(m0) => self.run_accelerated(x, c0, m0, false, observer, cancel),
-            Acceleration::DynamicM(m0) => self.run_accelerated(x, c0, m0, true, observer, cancel),
+            Acceleration::None => self.run_lloyd(x, c0, observer, cancel, persist_ctx),
+            mode => self.run_accelerated(x, c0, mode, observer, cancel, persist_ctx),
         };
         observer.on_finish(&report);
         report
@@ -142,19 +240,42 @@ impl Solver {
         c0: &DataMatrix,
         observer: &mut dyn Observer,
         cancel: &CancelToken,
+        persist_ctx: Option<PersistCtx>,
     ) -> RunReport {
         let sw = Stopwatch::start();
         let evals0 = self.ws.engine.distance_evals();
         self.ws.engine.reset();
         let (k, d) = (c0.n(), c0.d());
+        let checkpoint_every = persist_ctx.as_ref().map_or(0, |p| p.policy.every);
+        let ck_dir = persist_ctx.as_ref().map(|p| p.policy.dir.clone());
+        let (ckpt, resume) = match persist_ctx {
+            Some(p) => (
+                Some(CheckpointCtx { dir: p.policy.dir, fingerprint: p.fingerprint }),
+                p.resume,
+            ),
+            None => (None, None),
+        };
         // Workspace-held buffers: the loop itself allocates nothing at
         // steady state, and a warm workspace reuses them across runs.
         let mut c = self.ws.scratch.take_output_mat(k, d);
         c.as_mut_slice().copy_from_slice(c0.as_slice());
         let c_next = self.ws.scratch.take_mat(k, d);
-        let assign = self.ws.scratch.take_assign();
-        let prev_assign = self.ws.scratch.take_assign();
+        let mut assign = self.ws.scratch.take_assign();
+        let mut prev_assign = self.ws.scratch.take_assign();
         let update = self.ws.scratch.take_update();
+        let mut resume_driver = None;
+        if let Some(snap) = resume {
+            // Mid-trajectory restore: committed centroids plus the
+            // assignment pair. The engine stays cold (reset above) — its
+            // next full assignment rebuilds any bounds bit-identically.
+            c.as_mut_slice().copy_from_slice(&snap.centroids);
+            let fb = snap.full_batch.expect("validated in run_observed");
+            assign.clear();
+            assign.extend_from_slice(&fb.assign);
+            prev_assign.clear();
+            prev_assign.extend_from_slice(&fb.prev_assign);
+            resume_driver = Some(snap.driver);
+        }
         let trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_f64()
         } else {
@@ -174,8 +295,11 @@ impl Solver {
             prev_assign,
             update,
             need_energy,
+            ckpt,
+            reseed_seed: self.cfg.reseed_empty.then_some(self.cfg.seed),
+            interrupted_swap: false,
         };
-        let driver = FixedPointDriver::new(
+        let mut driver = FixedPointDriver::new(
             DriverConfig {
                 accel: Acceleration::None,
                 m_max: self.cfg.m_max,
@@ -189,13 +313,22 @@ impl Solver {
                 // The Lloyd step checks the budget itself, after the
                 // assignment that may prove convergence.
                 check_at_top: false,
+                checkpoint_every,
             },
             None,
             budget,
             trace,
             Vec::new(),
         );
+        if let Some(ds) = resume_driver {
+            driver.resume_from(ds);
+        }
         let outcome = driver.run(&mut step, observer);
+        if let Some(dir) = ck_dir.filter(|_| outcome.converged) {
+            // A converged run needs no resume point; interrupted, errored
+            // or capped runs keep theirs.
+            persist::remove_snapshot(&dir);
+        }
         let LloydStep { phases, c, c_next, assign, prev_assign, update, .. } = step;
         let final_assign = if !prev_assign.is_empty() {
             self.ws.scratch.put_assign(assign);
@@ -233,10 +366,10 @@ impl Solver {
         &mut self,
         x: &DataMatrix,
         c0: &DataMatrix,
-        m0: usize,
-        dynamic: bool,
+        accel_mode: Acceleration,
         observer: &mut dyn Observer,
         cancel: &CancelToken,
+        persist_ctx: Option<PersistCtx>,
     ) -> RunReport {
         let sw = Stopwatch::start();
         let mut phases = PhaseTimer::new();
@@ -244,19 +377,24 @@ impl Solver {
         self.ws.engine.reset();
         let (k, d) = (c0.n(), c0.d());
         let dim = k * d;
+        let checkpoint_every = persist_ctx.as_ref().map_or(0, |p| p.policy.every);
+        let ck_dir = persist_ctx.as_ref().map(|p| p.policy.dir.clone());
+        let (ckpt, resume) = match persist_ctx {
+            Some(p) => (
+                Some(CheckpointCtx { dir: p.policy.dir, fingerprint: p.fingerprint }),
+                p.resume,
+            ),
+            None => (None, None),
+        };
+        // Taken before any restore: on cached reuse this resets the
+        // accelerator, so a snapshot's history must be replayed after.
         let mut acc: AndersonAccelerator =
             self.ws.scratch.take_accelerator(self.cfg.m_max.max(1), dim);
 
-        // Line 1: C^1 = C_AU^1 = G(C^0).
         let mut assign = self.ws.scratch.take_assign();
         let mut update = self.ws.scratch.take_update();
-        phases.time("assign", || self.ws.engine.assign(x, c0, &self.ws.pool, &mut assign));
         let mut c_au = self.ws.scratch.take_mat(k, d);
-        phases.time("update", || {
-            lloyd::update_step_with(x, &assign, c0, &mut c_au, &self.ws.pool, &mut update)
-        });
         let mut c = self.ws.scratch.take_output_mat(k, d);
-        c.as_mut_slice().copy_from_slice(c_au.as_slice());
         // Steady-state scratch, all drawn from the workspace: the fused
         // update+energy output matrix, the Anderson residual `f_t`, and the
         // pair of assignment buffers that rotate through `prev_assign`. The
@@ -265,8 +403,38 @@ impl Solver {
         // the accelerator's history columns) across runs.
         let c_next = self.ws.scratch.take_mat(k, d);
         let f_t = self.ws.scratch.take_f_t(dim);
-        let prev_assign = std::mem::replace(&mut assign, self.ws.scratch.take_assign());
-        assign.reserve(x.n());
+        let mut prev_assign;
+        let mut candidate_was_accel = false;
+        let mut resume_driver = None;
+        if let Some(snap) = resume {
+            // Mid-trajectory restore: every buffer the step serialized
+            // comes back byte-for-byte, the Anderson history is replayed
+            // into the freshly-reset accelerator, and the engine rebuilds
+            // its bounds from a cold full assignment (bit-identical to the
+            // bounds the uninterrupted run carried).
+            c.as_mut_slice().copy_from_slice(&snap.centroids);
+            let fb = snap.full_batch.expect("validated in run_observed");
+            c_au.as_mut_slice().copy_from_slice(&fb.c_au);
+            prev_assign = self.ws.scratch.take_assign();
+            prev_assign.clear();
+            prev_assign.extend_from_slice(&fb.prev_assign);
+            assign.clear();
+            assign.extend_from_slice(&fb.assign);
+            candidate_was_accel = fb.candidate_was_accel;
+            if let Some(aa) = &snap.anderson {
+                acc.restore(aa);
+            }
+            resume_driver = Some(snap.driver);
+        } else {
+            // Line 1: C^1 = C_AU^1 = G(C^0).
+            phases.time("assign", || self.ws.engine.assign(x, c0, &self.ws.pool, &mut assign));
+            phases.time("update", || {
+                lloyd::update_step_with(x, &assign, c0, &mut c_au, &self.ws.pool, &mut update)
+            });
+            c.as_mut_slice().copy_from_slice(c_au.as_slice());
+            prev_assign = std::mem::replace(&mut assign, self.ws.scratch.take_assign());
+            assign.reserve(x.n());
+        }
         let trace = if self.cfg.record_trace {
             self.ws.scratch.take_trace_f64()
         } else {
@@ -291,14 +459,11 @@ impl Solver {
             assign,
             prev_assign,
             update,
-            candidate_was_accel: false,
+            candidate_was_accel,
+            ckpt,
+            reseed_seed: self.cfg.reseed_empty.then_some(self.cfg.seed),
         };
-        let accel_mode = if dynamic {
-            Acceleration::DynamicM(m0)
-        } else {
-            Acceleration::FixedM(m0)
-        };
-        let driver = FixedPointDriver::new(
+        let mut driver = FixedPointDriver::new(
             DriverConfig {
                 accel: accel_mode,
                 m_max: self.cfg.m_max,
@@ -310,13 +475,22 @@ impl Solver {
                 guard: GuardMode::Deferred,
                 restart_after_rejects: None,
                 check_at_top: true,
+                checkpoint_every,
             },
             Some(&mut acc),
             budget,
             trace,
             m_trace,
         );
+        if let Some(ds) = resume_driver {
+            driver.resume_from(ds);
+        }
         let outcome = driver.run(&mut step, observer);
+        if let Some(dir) = ck_dir.filter(|_| outcome.converged) {
+            // A converged run needs no resume point; interrupted, errored
+            // or capped runs keep theirs.
+            persist::remove_snapshot(&dir);
+        }
         let AndersonStep { phases, c, c_au, c_next, f_t, assign, prev_assign, update, .. } = step;
 
         let final_assign = if !prev_assign.is_empty() {
@@ -615,6 +789,71 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn checkpointed_run_resumes_bit_identical() {
+        let dir = std::env::temp_dir().join("aakm_kmeans_tests").join("resume_parity");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (x, c0) = problem(21, 1200, 4, 8);
+        // Reference: one uninterrupted accelerated run.
+        let full = solver(base_cfg()).run(&x, c0.clone());
+        assert!(full.converged);
+        assert!(full.iterations >= 4, "need room to truncate: {}", full.iterations);
+        // Truncated run: checkpoint every iteration, cap halfway through.
+        let policy = crate::persist::CheckpointPolicy::new(&dir, 1);
+        let cut = full.iterations / 2;
+        let cfg = SolverConfig { max_iters: cut, checkpoint: Some(policy.clone()), ..base_cfg() };
+        let first = solver(cfg).run(&x, c0.clone());
+        assert!(!first.converged);
+        assert_eq!(first.iterations, cut);
+        assert!(
+            crate::persist::load_snapshot(&dir).unwrap().is_some(),
+            "a capped run must leave its snapshot behind"
+        );
+        // Resume with the full budget: the stitched trajectory must match
+        // the uninterrupted one bit for bit.
+        let cfg = SolverConfig { checkpoint: Some(policy), ..base_cfg() };
+        let resumed = solver(cfg).run(&x, c0.clone());
+        assert!(resumed.converged);
+        assert_eq!(resumed.iterations, full.iterations, "iteration count carries across resume");
+        assert_eq!(resumed.energy.to_bits(), full.energy.to_bits());
+        assert_eq!(resumed.centroids.as_slice(), full.centroids.as_slice());
+        assert_eq!(resumed.assignment, full.assignment);
+        let mut stitched = first.energy_trace.clone();
+        stitched.extend_from_slice(&resumed.energy_trace);
+        assert_eq!(stitched.len(), full.energy_trace.len());
+        for (i, (a, b)) in stitched.iter().zip(&full.energy_trace).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "trace diverges at iteration {i}");
+        }
+        // Convergence drops the resume point.
+        assert!(crate::persist::load_snapshot(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_snapshot_is_rejected_typed() {
+        let dir = std::env::temp_dir().join("aakm_kmeans_tests").join("stale_reject");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (x, c0) = problem(22, 600, 3, 5);
+        let policy = crate::persist::CheckpointPolicy::new(&dir, 1);
+        let cfg = SolverConfig { max_iters: 2, checkpoint: Some(policy.clone()), ..base_cfg() };
+        let report = solver(cfg).run(&x, c0.clone());
+        assert!(report.error.is_none());
+        // A different seed is a different run identity: the leftover
+        // snapshot must be rejected typed, not silently resumed.
+        let cfg = SolverConfig { seed: 7, checkpoint: Some(policy), ..base_cfg() };
+        let report = solver(cfg).run(&x, c0);
+        match report.error {
+            Some(ClusterError::Snapshot { ref reason, .. }) => {
+                assert!(reason.contains("fingerprint"), "unexpected reason: {reason}")
+            }
+            other => panic!("expected a typed snapshot rejection, got {other:?}"),
+        }
+        assert_eq!(report.iterations, 0, "a rejected resume must not run");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

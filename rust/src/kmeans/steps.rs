@@ -19,9 +19,34 @@
 use crate::accel::{Advance, Budget, Rejection, Step};
 use crate::anderson::AndersonAccelerator;
 use crate::data::DataMatrix;
+use crate::error::ClusterError;
 use crate::lloyd::{self, Assignment, AssignmentEngine};
 use crate::metrics::PhaseTimer;
 use crate::par::ThreadPool;
+use crate::persist::{self, DriverSnap, FullBatchSnap, SolverSnapshot};
+use std::path::PathBuf;
+
+/// Where a step persists its durable snapshots, plus the request
+/// fingerprint that gates resuming them
+/// ([`SolverSnapshot::check_fingerprint`]). `None` disables the
+/// [`Step::save_checkpoint`] hook entirely.
+pub(super) struct CheckpointCtx {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+}
+
+/// Both assignment buffers for a snapshot. The snapshot format requires
+/// the pair to have equal lengths; before the first iteration completes
+/// the scratch buffer is still empty, in which case the committed
+/// assignment is stored twice (the scratch contents are never read on
+/// resume before being overwritten by the next assignment pass).
+fn assign_pair(committed: &Assignment, scratch: &Assignment) -> (Vec<u32>, Vec<u32>) {
+    if scratch.len() == committed.len() {
+        (scratch.clone(), committed.clone())
+    } else {
+        (committed.clone(), committed.clone())
+    }
+}
 
 /// Algorithm 1's fixed-point map over the workspace engine (deferred
 /// guard). Buffer roles mirror the paper: `c` is the current iterate
@@ -40,6 +65,36 @@ pub(super) struct AndersonStep<'a> {
     pub prev_assign: Assignment,
     pub update: lloyd::UpdateScratch,
     pub candidate_was_accel: bool,
+    pub ckpt: Option<CheckpointCtx>,
+    pub reseed_seed: Option<u64>,
+}
+
+/// Salt for the opt-in empty-cluster re-seed policy: an FNV-1a hash of
+/// the freshly updated centroid bits. Tying the salt to the iterate
+/// (rather than an iteration counter) makes the policy deterministic
+/// across thread counts *and* checkpoint/resume boundaries without any
+/// extra persisted state — a resumed run reaches the same centroids and
+/// therefore draws the same donor member.
+fn reseed_salt(c: &DataMatrix) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in c.as_slice() {
+        h = (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Apply [`lloyd::reseed_empty_clusters`] to a freshly updated iterate
+/// when the policy is enabled.
+fn maybe_reseed(
+    reseed_seed: Option<u64>,
+    x: &DataMatrix,
+    assign: &Assignment,
+    c_next: &mut DataMatrix,
+) {
+    if let Some(seed) = reseed_seed {
+        let salt = reseed_salt(c_next);
+        lloyd::reseed_empty_clusters(x, assign, c_next, seed, salt);
+    }
 }
 
 impl Step for AndersonStep<'_> {
@@ -56,6 +111,7 @@ impl Step for AndersonStep<'_> {
             prev_assign,
             update,
             candidate_was_accel,
+            reseed_seed,
             ..
         } = self;
         // Line 3: P^t = Assignment-Step(X, C^t).
@@ -85,12 +141,25 @@ impl Step for AndersonStep<'_> {
         let e = phases.time("update+energy", || {
             lloyd::update_and_energy_with(x, assign, c, c_next, pool, update)
         });
+        maybe_reseed(*reseed_seed, x, assign, c_next);
         Advance::Evaluated(Some(e))
     }
 
     fn reject(&mut self) -> Rejection {
-        let Self { x, engine, pool, phases, c, c_au, c_next, assign, prev_assign, update, .. } =
-            self;
+        let Self {
+            x,
+            engine,
+            pool,
+            phases,
+            c,
+            c_au,
+            c_next,
+            assign,
+            prev_assign,
+            update,
+            reseed_seed,
+            ..
+        } = self;
         // Lines 13–15: energy guard — revert to the Lloyd iterate. The
         // engine rolls back to the bound state it had *before* the
         // rejected jump, so the revert assignment only drifts the bounds
@@ -107,6 +176,7 @@ impl Step for AndersonStep<'_> {
         let e = phases.time("update+energy", || {
             lloyd::update_and_energy_with(x, assign, c, c_next, pool, update)
         });
+        maybe_reseed(*reseed_seed, x, assign, c_next);
         Rejection::Reverted(e)
     }
 
@@ -152,6 +222,31 @@ impl Step for AndersonStep<'_> {
     fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
         (&self.c, &self.phases)
     }
+
+    fn save_checkpoint(
+        &mut self,
+        driver: &DriverSnap,
+        acc: Option<&AndersonAccelerator>,
+    ) -> Result<(), ClusterError> {
+        let Some(ck) = &self.ckpt else { return Ok(()) };
+        let (assign, prev_assign) = assign_pair(&self.prev_assign, &self.assign);
+        let snap = SolverSnapshot {
+            fingerprint: ck.fingerprint.clone(),
+            driver: driver.clone(),
+            k: self.c.n(),
+            d: self.c.d(),
+            centroids: self.c.as_slice().to_vec(),
+            anderson: acc.map(|a| a.snapshot()),
+            full_batch: Some(FullBatchSnap {
+                c_au: self.c_au.as_slice().to_vec(),
+                assign,
+                prev_assign,
+                candidate_was_accel: self.candidate_was_accel,
+            }),
+            stream: None,
+        };
+        persist::write_snapshot(&ck.dir, &snap).map(|_| ())
+    }
 }
 
 /// Plain Lloyd's algorithm as a driver step: assignment + update until the
@@ -170,6 +265,13 @@ pub(super) struct LloydStep<'a> {
     pub prev_assign: Assignment,
     pub update: lloyd::UpdateScratch,
     pub need_energy: bool,
+    pub ckpt: Option<CheckpointCtx>,
+    pub reseed_seed: Option<u64>,
+    /// Set when a mid-advance interruption swapped the fresh (not yet
+    /// committed) assignment into `prev_assign` for the return-state
+    /// contract; the final checkpoint flush must then read the committed
+    /// boundary out of `assign` instead.
+    pub interrupted_swap: bool,
 }
 
 impl Step for LloydStep<'_> {
@@ -186,6 +288,9 @@ impl Step for LloydStep<'_> {
             prev_assign,
             update,
             need_energy,
+            reseed_seed,
+            interrupted_swap,
+            ..
         } = self;
         phases.time("assign", || engine.assign(x, c, pool, assign));
         if prev_assign.as_slice() == assign.as_slice() {
@@ -196,6 +301,7 @@ impl Step for LloydStep<'_> {
         // (centroids, assignment) state.
         if let Some(cancelled) = budget.interrupted() {
             std::mem::swap(prev_assign, assign);
+            *interrupted_swap = true;
             return Advance::Interrupted { cancelled };
         }
         let energy = if *need_energy {
@@ -204,6 +310,7 @@ impl Step for LloydStep<'_> {
             None
         };
         phases.time("update", || lloyd::update_step_with(x, assign, c, c_next, pool, update));
+        maybe_reseed(*reseed_seed, x, assign, c_next);
         std::mem::swap(prev_assign, assign);
         std::mem::swap(c, c_next);
         Advance::Evaluated(energy)
@@ -215,5 +322,38 @@ impl Step for LloydStep<'_> {
 
     fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
         (&self.c, &self.phases)
+    }
+
+    fn save_checkpoint(
+        &mut self,
+        driver: &DriverSnap,
+        _acc: Option<&AndersonAccelerator>,
+    ) -> Result<(), ClusterError> {
+        let Some(ck) = &self.ckpt else { return Ok(()) };
+        let (committed, scratch) = if self.interrupted_swap {
+            (&self.assign, &self.prev_assign)
+        } else {
+            (&self.prev_assign, &self.assign)
+        };
+        let (assign, prev_assign) = assign_pair(committed, scratch);
+        let snap = SolverSnapshot {
+            fingerprint: ck.fingerprint.clone(),
+            driver: driver.clone(),
+            k: self.c.n(),
+            d: self.c.d(),
+            centroids: self.c.as_slice().to_vec(),
+            anderson: None,
+            // The Lloyd baseline has no retained plain iterate; its
+            // committed centroids stand in so the snapshot keeps the
+            // full-batch record's k×d shape invariant.
+            full_batch: Some(FullBatchSnap {
+                c_au: self.c.as_slice().to_vec(),
+                assign,
+                prev_assign,
+                candidate_was_accel: false,
+            }),
+            stream: None,
+        };
+        persist::write_snapshot(&ck.dir, &snap).map(|_| ())
     }
 }

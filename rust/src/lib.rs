@@ -62,6 +62,12 @@
 //! `DataSource::Shard`) streams chunks from a [`data::ChunkSource`]
 //! through the mini-batch solver in [`stream`], with Anderson acceleration
 //! applied to the per-epoch centroid sequence.
+//!
+//! Long runs survive process death through the durable-checkpoint layer in
+//! [`persist`]: a [`persist::CheckpointPolicy`] on the request makes the
+//! solver write crash-safe `AAKMCK01` snapshots it can resume from
+//! bit-identically, and a journaled coordinator replays its write-ahead
+//! job log on restart to re-enqueue incomplete jobs.
 
 // Kernel-style numeric code throughout this crate indexes several parallel
 // arrays per loop; rewriting those loops as iterator chains would obscure
@@ -84,6 +90,7 @@ pub mod lloyd;
 pub mod metrics;
 pub mod observe;
 pub mod par;
+pub mod persist;
 pub mod request;
 pub mod rng;
 pub mod runtime;

@@ -27,6 +27,12 @@ const BASE_REG: f64 = 1e-10;
 const REG_ESCALATION: f64 = 1e4;
 /// Give up after this many escalations and use QR instead.
 const MAX_REG_ROUNDS: usize = 3;
+/// Reject a solution whose coefficients exceed this magnitude: a nearly
+/// rank-deficient history (duplicated iterates, stalled map) produces
+/// exploding mixing weights that extrapolate garbage even when every
+/// entry is technically finite. The solve then retries with the oldest
+/// columns dropped (see [`AndersonLsWorkspace::solve_into`]).
+const THETA_MAX: f64 = 1e8;
 
 /// Reusable workspace holding the ΔF/ΔG column history and the cached Gram
 /// matrix. Columns are indexed by recency: index 0 is `F^t − F^{t-1}`.
@@ -97,6 +103,18 @@ impl AndersonLsWorkspace {
         free.extend(self.delta_g.drain(..));
     }
 
+    /// The stored `(ΔF, ΔG)` column pairs **oldest first** — the order a
+    /// checkpoint restore must re-[`push`](AndersonLsWorkspace::push)
+    /// them so the incremental Gram cache is rebuilt bit-identically to
+    /// the uninterrupted run's.
+    pub fn history_oldest_first(&self) -> impl Iterator<Item = (&[f64], &[f64])> + '_ {
+        self.delta_f
+            .iter()
+            .rev()
+            .zip(self.delta_g.iter().rev())
+            .map(|(f, g)| (f.as_slice(), g.as_slice()))
+    }
+
     /// Push the newest difference columns `ΔF = f_new − f_old`,
     /// `ΔG = g_new − g_old`. Updates the Gram cache with `len` inner
     /// products (the paper's stated per-iteration cost). When the history
@@ -143,16 +161,33 @@ impl AndersonLsWorkspace {
     }
 
     /// Allocation-free variant of [`AndersonLsWorkspace::solve`]: writes
-    /// `θ*` into `theta_out` (cleared first) and returns whether a finite
-    /// solution was found. The Cholesky path reuses internal scratch; only
-    /// the rare ill-conditioned QR fall-back allocates.
+    /// `θ*` into `theta_out` (cleared first) and returns whether a finite,
+    /// bounded solution was found. The Cholesky path reuses internal
+    /// scratch; only the rare ill-conditioned QR fall-back allocates.
+    ///
+    /// Rank-deficiency guard: when the history is ill-conditioned enough
+    /// that the weights come out non-finite or larger than [`THETA_MAX`]
+    /// in magnitude (duplicated iterates make ΔF columns collinear), the
+    /// solve retries with the window shrunk by one — dropping the oldest
+    /// columns, which are the stalest directions — until a usable
+    /// solution appears or the history is exhausted. The caller then
+    /// falls through to the plain iterate instead of extrapolating NaNs.
     pub fn solve_into(&mut self, f_t: &[f64], m_use: usize, theta_out: &mut Vec<f64>) -> bool {
         assert_eq!(f_t.len(), self.dim);
         theta_out.clear();
-        let m = m_use.min(self.delta_f.len());
-        if m == 0 {
-            return false;
+        let mut m = m_use.min(self.delta_f.len());
+        while m > 0 {
+            if self.solve_window(f_t, m, theta_out) {
+                return true;
+            }
+            m -= 1;
         }
+        false
+    }
+
+    /// One solve attempt over exactly the `m` most recent columns.
+    fn solve_window(&mut self, f_t: &[f64], m: usize, theta_out: &mut Vec<f64>) -> bool {
+        let usable = |v: &f64| v.is_finite() && v.abs() <= THETA_MAX;
         // RHS: b_j = <ΔF_j, F^t>.
         for j in 0..m {
             self.scratch_b[j] = dot(&self.delta_f[j], f_t);
@@ -175,7 +210,7 @@ impl AndersonLsWorkspace {
             let (rhs, sol) = (&self.scratch_b[..m], &mut self.scratch_x[..m]);
             sol.copy_from_slice(rhs);
             if cholesky_solve_in_place(&mut self.scratch_a[..m * m], sol, m)
-                && sol.iter().all(|v| v.is_finite())
+                && sol.iter().all(usable)
             {
                 theta_out.extend_from_slice(sol);
                 return true;
@@ -191,7 +226,7 @@ impl AndersonLsWorkspace {
         }
         let a = Mat::from_rows(self.dim, m, &cols);
         let theta = householder_lstsq(&a, f_t);
-        if theta.iter().all(|v| v.is_finite()) {
+        if theta.iter().all(usable) {
             theta_out.extend_from_slice(&theta);
             true
         } else {
@@ -365,6 +400,71 @@ mod tests {
         let f_t: Vec<f64> = (0..dim).map(|i| (i as f64).cos()).collect();
         let theta = ws.solve(&f_t, 3).expect("should solve with regularization");
         assert!(theta.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn degenerate_duplicated_iterates_never_explode() {
+        // A stalled map repeats its iterate: ΔF columns are tiny exact
+        // duplicates while the residual stays O(1). The unregularizable
+        // normal equations then produce coefficients ~1/‖ΔF‖ ≈ 1e9 —
+        // finite, but garbage to extrapolate with. The bounded-θ guard
+        // must refuse (pass-through), not hand back exploding weights.
+        let dim = 6;
+        let base: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.7).sin() + 1.5).collect();
+        let tiny: Vec<f64> = base.iter().map(|v| v * 1e-9).collect();
+        let mut ws = AndersonLsWorkspace::new(3, dim);
+        for _ in 0..3 {
+            let _ = ws.push(tiny.clone(), tiny.clone());
+        }
+        assert!(
+            ws.solve(&base, 3).is_none(),
+            "degenerate history must be refused, not extrapolated"
+        );
+        // End to end: the accelerator passes the plain iterate through.
+        let mut acc = crate::anderson::AndersonAccelerator::new(3, dim);
+        let g1: Vec<f64> = base.clone();
+        acc.propose(&g1, &base, 3);
+        // Second call pushes a near-zero ΔF column (duplicated iterate).
+        let f2: Vec<f64> = base.iter().map(|v| v + 1e-12).collect();
+        let out = acc.propose(&g1, &f2, 3);
+        assert!(out.iter().all(|v| v.is_finite()), "proposal must stay finite");
+    }
+
+    #[test]
+    fn non_finite_oldest_column_is_dropped() {
+        // A NaN-poisoned oldest column defeats Cholesky and QR at m = 2;
+        // the window-shrinking retry must fall back to the healthy newest
+        // column and match the single-column reference solve.
+        let dim = 5;
+        let healthy: Vec<f64> = (0..dim).map(|i| 1.0 + i as f64).collect();
+        let poisoned = vec![f64::NAN; dim];
+        let mut ws = AndersonLsWorkspace::new(2, dim);
+        let _ = ws.push(poisoned.clone(), poisoned);
+        let _ = ws.push(healthy.clone(), healthy.clone());
+        let f_t: Vec<f64> = (0..dim).map(|i| (i as f64).cos()).collect();
+        let theta = ws.solve(&f_t, 2).expect("healthy newest column should solve");
+        assert_eq!(theta.len(), 1, "the poisoned oldest column must be dropped");
+        assert!(theta[0].is_finite() && theta[0].abs() <= THETA_MAX);
+
+        let mut reference = AndersonLsWorkspace::new(1, dim);
+        let _ = reference.push(healthy.clone(), healthy);
+        let expect = reference.solve(&f_t, 1).unwrap();
+        assert!((theta[0] - expect[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn history_export_is_oldest_first() {
+        let dim = 3;
+        let mut ws = AndersonLsWorkspace::new(2, dim);
+        for v in 1..=3 {
+            let _ = ws.push(vec![v as f64; dim], vec![-(v as f64); dim]);
+        }
+        let cols: Vec<(Vec<f64>, Vec<f64>)> =
+            ws.history_oldest_first().map(|(f, g)| (f.to_vec(), g.to_vec())).collect();
+        assert_eq!(cols.len(), 2);
+        assert_eq!(cols[0].0, vec![2.0; dim], "first exported column is the oldest kept");
+        assert_eq!(cols[1].0, vec![3.0; dim]);
+        assert_eq!(cols[1].1, vec![-3.0; dim]);
     }
 
     #[test]

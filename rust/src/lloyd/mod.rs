@@ -362,6 +362,93 @@ pub fn update_and_energy_with(
     update_reduce_with(x, assign, c_t, out_c, pool, scratch, true)
 }
 
+/// Deterministic empty-cluster re-seeding: split the highest-energy cluster.
+///
+/// The default policy everywhere in the crate (and the paper's implicit
+/// choice) is that an empty cluster keeps its previous centroid. Opting in
+/// via `SolverConfig::reseed_empty` instead moves each empty centroid onto a
+/// member of the current *highest-energy* donor cluster, which converts a
+/// dead centroid into an immediate energy reduction on the next assignment
+/// pass. The policy is deliberately engine-agnostic and runs after the
+/// update step on the freshly updated centroids.
+///
+/// Determinism: member selection draws from a [`Pcg32`] seeded by
+/// `seed ^ iteration·φ64`, and every scan is a serial pass in sample order,
+/// so the result is bit-identical across thread counts and across a
+/// checkpoint/resume boundary (the caller passes the committed iteration
+/// counter). Donor ties break toward the lowest cluster index.
+///
+/// Returns the number of centroids that were re-seeded (0 when no cluster
+/// is empty, which is the common case and costs one O(N) counting pass).
+pub fn reseed_empty_clusters(
+    x: &DataMatrix,
+    assign: &Assignment,
+    c: &mut DataMatrix,
+    seed: u64,
+    iteration: u64,
+) -> usize {
+    use crate::rng::{Pcg32, Rng};
+    let n = x.n();
+    let k = c.n();
+    debug_assert_eq!(assign.len(), n);
+    let mut counts = vec![0usize; k];
+    for &j in assign {
+        counts[j as usize] += 1;
+    }
+    if counts.iter().all(|&cnt| cnt > 0) {
+        return 0;
+    }
+    // Per-cluster energy at the current centroids. Empty clusters contribute
+    // nothing, so mutating their rows below never invalidates donor energies.
+    let mut e = vec![0.0f64; k];
+    for i in 0..n {
+        let j = assign[i] as usize;
+        e[j] += dist_sq(x.row(i), c.row(j));
+    }
+    let mut taken = vec![false; n];
+    let mut rng = Pcg32::seed_from_u64(seed ^ iteration.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut reseeded = 0usize;
+    for j in 0..k {
+        if counts[j] != 0 {
+            continue;
+        }
+        // Donor: highest-energy cluster that can spare a member.
+        let mut donor = usize::MAX;
+        for cand in 0..k {
+            if counts[cand] >= 2 && (donor == usize::MAX || e[cand] > e[donor]) {
+                donor = cand;
+            }
+        }
+        if donor == usize::MAX {
+            break; // fewer samples than clusters; leave the rest in place
+        }
+        let r = rng.next_u32() as usize % counts[donor];
+        let mut seen = 0usize;
+        let mut pick = usize::MAX;
+        for i in 0..n {
+            if assign[i] as usize == donor && !taken[i] {
+                if seen == r {
+                    pick = i;
+                    break;
+                }
+                seen += 1;
+            }
+        }
+        debug_assert_ne!(pick, usize::MAX, "donor count out of sync");
+        if pick == usize::MAX {
+            break;
+        }
+        taken[pick] = true;
+        e[donor] -= dist_sq(x.row(pick), c.row(donor));
+        counts[donor] -= 1;
+        counts[j] = 1;
+        e[j] = 0.0;
+        c.row_mut(j).copy_from_slice(x.row(pick));
+        reseeded += 1;
+    }
+    reseeded
+}
+
 /// Clustering energy (paper Eq. 1) with a precomputed assignment —
 /// `E(P, C)` in Algorithm 1. O(N·d).
 pub fn energy(x: &DataMatrix, c: &DataMatrix, assign: &Assignment, pool: &ThreadPool) -> f64 {
@@ -607,6 +694,121 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reseed_fills_empties_deterministically() {
+        // Adversarial init: sample two tight blobs, then park three of the
+        // five centroids far outside the data so they capture nothing. The
+        // two live anchors sit 1e-6 off their seed samples so no data point
+        // ever coincides with a surviving centroid (ties break by index and
+        // would otherwise starve a reseeded cluster of its own seed sample).
+        let mut rng = Pcg32::seed_from_u64(1234);
+        let x = synth::gaussian_blobs(&mut rng, 400, 3, 2, 3.0, 0.2);
+        let mut c = DataMatrix::zeros(5, 3);
+        c.row_mut(0).copy_from_slice(x.row(0));
+        c.row_mut(1).copy_from_slice(x.row(200));
+        for j in 0..2 {
+            for v in c.row_mut(j) {
+                *v += 1e-6;
+            }
+        }
+        for j in 2..5 {
+            for v in c.row_mut(j) {
+                *v = 1.0e6 + j as f64;
+            }
+        }
+        let assign = brute_force_assign(&x, &c);
+        let mut counts = vec![0usize; 5];
+        for &a in &assign {
+            counts[a as usize] += 1;
+        }
+        assert_eq!(&counts[2..], &[0, 0, 0], "init must leave clusters 2..5 empty");
+
+        let mut c_a = c.clone();
+        let got = reseed_empty_clusters(&x, &assign, &mut c_a, 42, 7);
+        assert_eq!(got, 3);
+        // Same seed/iteration → bit-identical outcome.
+        let mut c_b = c.clone();
+        reseed_empty_clusters(&x, &assign, &mut c_b, 42, 7);
+        for j in 0..5 {
+            let bits = |r: &[f64]| r.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(c_a.row(j)), bits(c_b.row(j)), "cluster {j} not deterministic");
+        }
+        // Non-empty clusters are untouched; each reseeded centroid sits on a
+        // distinct data sample, so the next assignment pass gives everyone
+        // at least one member.
+        for j in 0..2 {
+            assert_eq!(c_a.row(j), c.row(j));
+        }
+        let re = brute_force_assign(&x, &c_a);
+        let mut re_counts = vec![0usize; 5];
+        for &a in &re {
+            re_counts[a as usize] += 1;
+        }
+        assert!(re_counts.iter().all(|&cnt| cnt > 0), "still empty: {re_counts:?}");
+        // And the split strictly reduced energy.
+        let pool = ThreadPool::new(1);
+        let before = energy(&x, &c, &assign, &pool);
+        let after = energy(&x, &c_a, &re, &pool);
+        assert!(after < before, "reseed must reduce energy: {after} vs {before}");
+        // No-op when nothing is empty.
+        let mut c_c = c_a.clone();
+        assert_eq!(reseed_empty_clusters(&x, &re, &mut c_c, 42, 8), 0);
+        for j in 0..5 {
+            assert_eq!(c_c.row(j), c_a.row(j));
+        }
+    }
+
+    #[test]
+    fn reseed_property_random_adversarial_inits() {
+        // Property sweep: random problems with deliberately colliding
+        // centroids (duplicates guarantee empties under min-distance
+        // tie-breaking). After reseed + reassign, no cluster may be empty
+        // as long as there are enough samples, and repeated invocation is
+        // stable (idempotent once nothing is empty).
+        for trial in 0..6u64 {
+            let mut rng = Pcg32::seed_from_u64(900 + trial);
+            let x = synth::gaussian_blobs(&mut rng, 300, 4, 3, 2.5, 0.3);
+            let k = 6usize;
+            // All centroids start on the same off-sample point (1e-6 past a
+            // sample, so no data point ties with a surviving centroid):
+            // index-order tie-breaking sends every sample to cluster 0 and
+            // leaves the other k-1 clusters empty.
+            let mut c = DataMatrix::zeros(k, 4);
+            for j in 0..k {
+                c.row_mut(j).copy_from_slice(x.row(5));
+                for v in c.row_mut(j) {
+                    *v += 1e-6;
+                }
+            }
+            let assign = brute_force_assign(&x, &c);
+            let reseeded = reseed_empty_clusters(&x, &assign, &mut c, trial, trial * 3);
+            assert_eq!(reseeded, k - 1, "trial {trial}");
+            let re = brute_force_assign(&x, &c);
+            let mut counts = vec![0usize; k];
+            for &a in &re {
+                counts[a as usize] += 1;
+            }
+            assert!(
+                counts.iter().all(|&cnt| cnt > 0),
+                "trial {trial}: empties survived reseed: {counts:?}"
+            );
+            assert_eq!(reseed_empty_clusters(&x, &re, &mut c, trial, trial * 3 + 1), 0);
+        }
+    }
+
+    #[test]
+    fn reseed_leaves_surplus_empties_when_samples_run_out() {
+        // Fewer samples than clusters: the policy reseeds what it can and
+        // leaves the rest untouched rather than duplicating points.
+        let x = DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0]]);
+        let mut c = DataMatrix::from_rows(&[&[0.4, 0.0], &[9.0, 9.0], &[8.0, 8.0], &[7.0, 7.0]]);
+        let assign = vec![0u32, 0];
+        let reseeded = reseed_empty_clusters(&x, &assign, &mut c, 1, 1);
+        assert_eq!(reseeded, 1, "only one member can be donated");
+        assert_eq!(c.row(2), &[8.0, 8.0]);
+        assert_eq!(c.row(3), &[7.0, 7.0]);
     }
 
     #[test]

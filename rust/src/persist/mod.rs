@@ -1,0 +1,1088 @@
+//! Durable checkpoint/resume: crash-safe solver snapshots and the
+//! coordinator's write-ahead job journal.
+//!
+//! Two on-disk artifacts live here, both following the validation
+//! discipline the `AAKMFV01` shard format established (magic, explicit
+//! shape, strict length accounting, typed rejection of anything torn):
+//!
+//! * **`AAKMCK01` snapshots** — one file per run
+//!   ([`SNAPSHOT_FILE`] inside the [`CheckpointPolicy::dir`]) holding
+//!   everything the safeguarded-Anderson driver needs to resume a run
+//!   mid-trajectory *bit-identically*: the committed centroids, the
+//!   driver's energy/counter state, the Anderson ΔF/ΔG history (stored
+//!   oldest-first so the Gram matrix is rebuilt by replaying the same
+//!   incremental pushes), and the solver-shape extras (retained plain
+//!   iterate + assignments for the full-batch path; Sculley counts,
+//!   sampler RNG raw state and evaluation totals for the mini-batch
+//!   path). The payload is framed as tagged records, each carrying its
+//!   own CRC-32, and every write goes to a temp file that is atomically
+//!   renamed over the previous snapshot — a crash at any instant leaves
+//!   either the old complete snapshot or the new complete snapshot,
+//!   never a torn one. Torn, truncated, bit-flipped or
+//!   wrong-fingerprint files are rejected with
+//!   [`ClusterError::Snapshot`], never a panic or a silent wrong read.
+//! * **`AAKMJL01` job journals** — an append-only record stream
+//!   ([`JOURNAL_FILE`]) of coordinator job lifecycle events
+//!   (submitted / started / completed). Each record is CRC-framed; a
+//!   torn tail (the crash case an append-only log is designed for) is
+//!   silently dropped on read, while a corrupt header or foreign magic
+//!   is rejected typed. `Coordinator::recover` replays the journal and
+//!   re-enqueues every job that was submitted but never completed,
+//!   pointing it at its per-job snapshot directory so the re-run
+//!   resumes from the last durable iterate instead of from scratch.
+//!
+//! Fault injection: [`crate::fault::FaultSite::CheckpointWrite`] is
+//! checked twice inside [`write_snapshot`] — before the temp file is
+//! written (a clean failure: no new bytes on disk) and between the
+//! write and the rename (an injected error truncates the temp file to
+//! a torn prefix and leaves it behind; a worker kill dies with the
+//! rename never performed). In every case the previous snapshot stays
+//! intact, which is exactly the property `tests/recovery.rs` sweeps.
+
+use crate::error::ClusterError;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of a snapshot file.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"AAKMCK01";
+/// Magic prefix of a job-journal file.
+pub const JOURNAL_MAGIC: &[u8; 8] = b"AAKMJL01";
+/// Snapshot file name inside a checkpoint directory (one live snapshot
+/// per run; every write atomically replaces the previous one, so "the
+/// latest snapshot" is simply this file).
+pub const SNAPSHOT_FILE: &str = "snapshot.ck";
+/// Journal file name inside a coordinator journal directory.
+pub const JOURNAL_FILE: &str = "journal.wal";
+
+/// Where and how often a run writes durable snapshots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Directory holding the run's [`SNAPSHOT_FILE`] (created on the
+    /// first write). A run whose directory already holds a snapshot
+    /// with a matching fingerprint resumes from it.
+    pub dir: PathBuf,
+    /// Snapshot every `every` productive iterations (epochs for the
+    /// mini-batch engine). Must be ≥ 1.
+    pub every: usize,
+}
+
+impl CheckpointPolicy {
+    /// Policy snapshotting into `dir` every `every` iterations.
+    pub fn new(dir: impl Into<PathBuf>, every: usize) -> Self {
+        Self { dir: dir.into(), every }
+    }
+}
+
+/// Path of the (single, latest) snapshot inside a checkpoint directory.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join(SNAPSHOT_FILE)
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, the ubiquitous zlib polynomial), table-driven and
+// dependency-free. Snapshots are small (centroids + m history columns);
+// the table keeps even the n-sized assignment records cheap.
+// ---------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 over a concatenation of byte slices (streamed, no joining).
+fn crc32_parts(parts: &[&[u8]]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------
+// Record framing: [u32 tag][u64 len][payload][u32 crc], where the CRC
+// covers tag, length and payload — a bit flip anywhere in the record
+// (including its header) fails verification.
+// ---------------------------------------------------------------------
+
+const TAG_END: u32 = 0xFFFF_FFFF;
+const TAG_FINGERPRINT: u32 = 1;
+const TAG_DRIVER: u32 = 2;
+const TAG_CENTROIDS: u32 = 3;
+const TAG_ANDERSON: u32 = 4;
+const TAG_FULL_BATCH: u32 = 5;
+const TAG_STREAM: u32 = 6;
+// Journal record tags share the framing but live in their own file.
+const TAG_JOB_SUBMITTED: u32 = 0x10;
+const TAG_JOB_STARTED: u32 = 0x11;
+const TAG_JOB_COMPLETED: u32 = 0x12;
+
+fn push_record(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    let tag_b = tag.to_le_bytes();
+    let len_b = (payload.len() as u64).to_le_bytes();
+    let crc = crc32_parts(&[&tag_b, &len_b, payload]);
+    out.extend_from_slice(&tag_b);
+    out.extend_from_slice(&len_b);
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// One parsed `(tag, payload)` record.
+type RawRecord<'a> = (u32, &'a [u8]);
+
+/// Parse the record stream after the magic. `strict` (snapshots)
+/// rejects any malformed byte; lenient mode (journals) stops at the
+/// first malformed record and returns the valid prefix — the torn tail
+/// an append-only log accumulates when the process dies mid-append.
+fn parse_records<'a>(mut bytes: &'a [u8], strict: bool) -> Result<Vec<RawRecord<'a>>, String> {
+    let mut records = Vec::new();
+    while !bytes.is_empty() {
+        if bytes.len() < 12 {
+            if strict {
+                return Err(format!("truncated record header ({} trailing bytes)", bytes.len()));
+            }
+            break;
+        }
+        let tag = u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes"));
+        let len = u64::from_le_bytes(bytes[4..12].try_into().expect("8 bytes"));
+        let Ok(len) = usize::try_from(len) else {
+            if strict {
+                return Err(format!("record length {len} overflows"));
+            }
+            break;
+        };
+        let total = match len.checked_add(16) {
+            Some(t) if t <= bytes.len() => t,
+            _ => {
+                if strict {
+                    return Err(format!(
+                        "record (tag {tag}) declares {len} payload bytes but only {} remain",
+                        bytes.len().saturating_sub(16)
+                    ));
+                }
+                break;
+            }
+        };
+        let payload = &bytes[12..12 + len];
+        let stored = u32::from_le_bytes(bytes[12 + len..total].try_into().expect("4 bytes"));
+        let computed = crc32_parts(&[&bytes[0..12], payload]);
+        if stored != computed {
+            if strict {
+                return Err(format!(
+                    "record (tag {tag}) CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+                ));
+            }
+            break;
+        }
+        records.push((tag, payload));
+        bytes = &bytes[total..];
+        if strict && tag == TAG_END && !bytes.is_empty() {
+            return Err(format!("{} bytes after the end record", bytes.len()));
+        }
+    }
+    Ok(records)
+}
+
+// ---------------------------------------------------------------------
+// Little-endian payload encoding/decoding helpers.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() < n {
+            return Err(format!("payload truncated: wanted {n} bytes, {} left", self.buf.len()));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn boolean(&mut self) -> Result<bool, String> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(format!("bad boolean byte {other:#04x}")),
+        }
+    }
+
+    /// Length-prefixed `f64` vector; the declared length is bounded by
+    /// the remaining payload before allocating, so a corrupt length
+    /// cannot request an absurd allocation.
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let len = self.u64()? as usize;
+        if len.checked_mul(8).is_none_or(|b| b > self.buf.len()) {
+            return Err(format!("f64 vector declares {len} items past the payload end"));
+        }
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, String> {
+        let len = self.u64()? as usize;
+        if len.checked_mul(4).is_none_or(|b| b > self.buf.len()) {
+            return Err(format!("u32 vector declares {len} items past the payload end"));
+        }
+        (0..len).map(|_| self.u32()).collect()
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let len = self.u64()? as usize;
+        if len > self.buf.len() {
+            return Err(format!("string declares {len} bytes past the payload end"));
+        }
+        String::from_utf8(self.take(len)?.to_vec()).map_err(|e| format!("bad utf-8: {e}"))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} unconsumed payload bytes", self.buf.len()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot contents.
+// ---------------------------------------------------------------------
+
+/// The fixed-point driver's loop state at a committed iteration
+/// boundary — everything [`crate::accel::FixedPointDriver`] needs to
+/// continue a trajectory exactly where the snapshot left it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriverSnap {
+    /// Productive iterations completed (epochs for the streaming step).
+    pub iterations: u64,
+    /// Iterations whose accelerated candidate passed the energy guard.
+    pub accepted: u64,
+    /// The committed iterate's energy (`e_prev` in the driver loop).
+    pub energy: f64,
+    /// Energy decrease of the previous iteration (`E^{t-2} − E^{t-1}`),
+    /// which the dynamic-`m` controller's next adjustment consumes.
+    pub decrease_prev: f64,
+    /// Consecutive immediate-guard rejections toward the restart cap.
+    pub rejects: u32,
+    /// The dynamic-`m` controller's current window size.
+    pub m: u64,
+    /// Deferred guard: whether the current iterate is an unguarded
+    /// accelerated proposal awaiting the next pass's measurement.
+    pub outstanding: bool,
+}
+
+/// The Anderson accelerator's history: the previous `(f, g)` pair plus
+/// the ΔF/ΔG difference columns **oldest-first**. Restoring replays the
+/// same incremental `push` calls the original run made, so the Gram
+/// matrix is rebuilt bit-identically rather than deserialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AndersonSnap {
+    /// The last `(f_t, g_t)` pair fed to the accelerator, if any.
+    pub prev: Option<(Vec<f64>, Vec<f64>)>,
+    /// `(ΔF, ΔG)` history columns, oldest first.
+    pub cols: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Lifetime accelerated-proposal count (reporting only).
+    pub accelerated_steps: u64,
+}
+
+/// Full-batch solver extras: the retained plain iterate and the
+/// assignment pair the deferred guard compares. Engine bound caches are
+/// deliberately *not* stored — a resumed run re-assigns once from
+/// scratch, and since bounds only prune (they never change an
+/// assignment), the trajectory stays bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FullBatchSnap {
+    /// The retained plain iterate `C_AU` (reverted to on rejection).
+    pub c_au: Vec<f64>,
+    /// Scratch assignment buffer (the previous iteration's assignment).
+    pub assign: Vec<u32>,
+    /// The latest committed assignment.
+    pub prev_assign: Vec<u32>,
+    /// Whether the current iterate came from an accelerated proposal.
+    pub candidate_was_accel: bool,
+}
+
+/// Mini-batch solver extras: the Sculley per-cluster counts and the raw
+/// sampler RNG state, so a resumed run replays the exact batch sequence
+/// the uninterrupted run would have drawn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSnap {
+    /// Per-cluster Sculley update counts (learning-rate denominators).
+    pub counts: Vec<f64>,
+    /// Raw PCG state of the batch sampler (`Pcg32::state_parts`).
+    pub rng_state: u64,
+    /// Raw PCG increment of the batch sampler.
+    pub rng_inc: u64,
+    /// Samples behind the last checkpoint energy (MSE denominator).
+    pub eval_samples: u64,
+}
+
+/// A complete solver snapshot: request fingerprint, driver state,
+/// committed centroids, and the optional per-solver-shape extras.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverSnapshot {
+    /// Human-readable digest of the request shape (k, d, seed, engine,
+    /// acceleration, sampling, ...). A resuming run must present the
+    /// identical fingerprint; anything else is a stale snapshot and is
+    /// rejected typed.
+    pub fingerprint: String,
+    /// Driver loop state at the snapshot boundary.
+    pub driver: DriverSnap,
+    /// Number of centroids.
+    pub k: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Committed centroids, row-major `k × d`.
+    pub centroids: Vec<f64>,
+    /// Anderson history (accelerated runs only).
+    pub anderson: Option<AndersonSnap>,
+    /// Full-batch solver extras.
+    pub full_batch: Option<FullBatchSnap>,
+    /// Mini-batch solver extras.
+    pub stream: Option<StreamSnap>,
+}
+
+impl SolverSnapshot {
+    /// Reject this snapshot unless its fingerprint matches the resuming
+    /// request's — the typed "stale snapshot" rejection.
+    pub fn check_fingerprint(&self, expected: &str, dir: &Path) -> Result<(), ClusterError> {
+        if self.fingerprint == expected {
+            Ok(())
+        } else {
+            Err(ClusterError::Snapshot {
+                path: snapshot_path(dir).display().to_string(),
+                reason: format!(
+                    "fingerprint mismatch: snapshot was written by [{}], this request is [{expected}]",
+                    self.fingerprint
+                ),
+            })
+        }
+    }
+}
+
+/// Serialize a snapshot to its on-disk byte layout (exposed for the
+/// corruption fuzz tests; production callers use [`write_snapshot`]).
+pub fn encode_snapshot(s: &SolverSnapshot) -> Vec<u8> {
+    let mut out = SNAPSHOT_MAGIC.to_vec();
+    let mut e = Enc::default();
+    e.str(&s.fingerprint);
+    push_record(&mut out, TAG_FINGERPRINT, &e.buf);
+
+    let mut e = Enc::default();
+    e.u64(s.driver.iterations);
+    e.u64(s.driver.accepted);
+    e.f64(s.driver.energy);
+    e.f64(s.driver.decrease_prev);
+    e.u32(s.driver.rejects);
+    e.u64(s.driver.m);
+    e.boolean(s.driver.outstanding);
+    push_record(&mut out, TAG_DRIVER, &e.buf);
+
+    let mut e = Enc::default();
+    e.u64(s.k as u64);
+    e.u64(s.d as u64);
+    e.f64s(&s.centroids);
+    push_record(&mut out, TAG_CENTROIDS, &e.buf);
+
+    if let Some(aa) = &s.anderson {
+        let mut e = Enc::default();
+        e.boolean(aa.prev.is_some());
+        if let Some((f, g)) = &aa.prev {
+            e.f64s(f);
+            e.f64s(g);
+        }
+        e.u64(aa.cols.len() as u64);
+        for (df, dg) in &aa.cols {
+            e.f64s(df);
+            e.f64s(dg);
+        }
+        e.u64(aa.accelerated_steps);
+        push_record(&mut out, TAG_ANDERSON, &e.buf);
+    }
+
+    if let Some(fb) = &s.full_batch {
+        let mut e = Enc::default();
+        e.f64s(&fb.c_au);
+        e.u32s(&fb.assign);
+        e.u32s(&fb.prev_assign);
+        e.boolean(fb.candidate_was_accel);
+        push_record(&mut out, TAG_FULL_BATCH, &e.buf);
+    }
+
+    if let Some(st) = &s.stream {
+        let mut e = Enc::default();
+        e.f64s(&st.counts);
+        e.u64(st.rng_state);
+        e.u64(st.rng_inc);
+        e.u64(st.eval_samples);
+        push_record(&mut out, TAG_STREAM, &e.buf);
+    }
+
+    push_record(&mut out, TAG_END, &[]);
+    out
+}
+
+/// Decode and validate a snapshot byte stream. Every structural defect
+/// — foreign magic, truncation, CRC mismatch, shape inconsistencies,
+/// missing or duplicate records, unknown tags — is a typed error.
+pub fn decode_snapshot(bytes: &[u8], path: &Path) -> Result<SolverSnapshot, ClusterError> {
+    let fail = |reason: String| ClusterError::Snapshot {
+        path: path.display().to_string(),
+        reason,
+    };
+    if bytes.len() < SNAPSHOT_MAGIC.len() || &bytes[..8] != SNAPSHOT_MAGIC {
+        return Err(fail("not an AAKMCK01 snapshot (bad magic)".into()));
+    }
+    let records = parse_records(&bytes[8..], true).map_err(&fail)?;
+    if records.last().map(|(t, _)| *t) != Some(TAG_END) {
+        return Err(fail("missing end record (torn write)".into()));
+    }
+
+    let mut fingerprint = None;
+    let mut driver = None;
+    let mut shape = None;
+    let mut anderson = None;
+    let mut full_batch = None;
+    let mut stream = None;
+    for &(tag, payload) in &records[..records.len() - 1] {
+        let mut d = Dec::new(payload);
+        let dup = |name: &str| fail(format!("duplicate {name} record"));
+        match tag {
+            TAG_FINGERPRINT => {
+                if fingerprint.replace(d.str().map_err(&fail)?).is_some() {
+                    return Err(dup("fingerprint"));
+                }
+            }
+            TAG_DRIVER => {
+                let snap = DriverSnap {
+                    iterations: d.u64().map_err(&fail)?,
+                    accepted: d.u64().map_err(&fail)?,
+                    energy: d.f64().map_err(&fail)?,
+                    decrease_prev: d.f64().map_err(&fail)?,
+                    rejects: d.u32().map_err(&fail)?,
+                    m: d.u64().map_err(&fail)?,
+                    outstanding: d.boolean().map_err(&fail)?,
+                };
+                if driver.replace(snap).is_some() {
+                    return Err(dup("driver"));
+                }
+            }
+            TAG_CENTROIDS => {
+                let k = d.u64().map_err(&fail)? as usize;
+                let dim = d.u64().map_err(&fail)? as usize;
+                let c = d.f64s().map_err(&fail)?;
+                if k.checked_mul(dim) != Some(c.len()) {
+                    return Err(fail(format!(
+                        "centroid record declares {k}x{dim} but holds {} values",
+                        c.len()
+                    )));
+                }
+                if shape.replace((k, dim, c)).is_some() {
+                    return Err(dup("centroid"));
+                }
+            }
+            TAG_ANDERSON => {
+                let prev = if d.boolean().map_err(&fail)? {
+                    Some((d.f64s().map_err(&fail)?, d.f64s().map_err(&fail)?))
+                } else {
+                    None
+                };
+                let ncols = d.u64().map_err(&fail)? as usize;
+                let mut cols = Vec::new();
+                for _ in 0..ncols {
+                    cols.push((d.f64s().map_err(&fail)?, d.f64s().map_err(&fail)?));
+                }
+                let snap = AndersonSnap {
+                    prev,
+                    cols,
+                    accelerated_steps: d.u64().map_err(&fail)?,
+                };
+                if anderson.replace(snap).is_some() {
+                    return Err(dup("anderson"));
+                }
+            }
+            TAG_FULL_BATCH => {
+                let snap = FullBatchSnap {
+                    c_au: d.f64s().map_err(&fail)?,
+                    assign: d.u32s().map_err(&fail)?,
+                    prev_assign: d.u32s().map_err(&fail)?,
+                    candidate_was_accel: d.boolean().map_err(&fail)?,
+                };
+                if full_batch.replace(snap).is_some() {
+                    return Err(dup("full-batch"));
+                }
+            }
+            TAG_STREAM => {
+                let snap = StreamSnap {
+                    counts: d.f64s().map_err(&fail)?,
+                    rng_state: d.u64().map_err(&fail)?,
+                    rng_inc: d.u64().map_err(&fail)?,
+                    eval_samples: d.u64().map_err(&fail)?,
+                };
+                if stream.replace(snap).is_some() {
+                    return Err(dup("stream"));
+                }
+            }
+            TAG_END => return Err(fail("end record before the end of the file".into())),
+            other => return Err(fail(format!("unknown record tag {other} (newer format?)"))),
+        }
+        d.done().map_err(&fail)?;
+    }
+
+    let fingerprint = fingerprint.ok_or_else(|| fail("missing fingerprint record".into()))?;
+    let driver = driver.ok_or_else(|| fail("missing driver record".into()))?;
+    let (k, d, centroids) = shape.ok_or_else(|| fail("missing centroid record".into()))?;
+    let dim = k * d;
+    if let Some(aa) = &anderson {
+        let col_ok = |v: &Vec<f64>| v.len() == dim;
+        let prev_ok = aa.prev.as_ref().is_none_or(|(f, g)| col_ok(f) && col_ok(g));
+        if !prev_ok || !aa.cols.iter().all(|(f, g)| col_ok(f) && col_ok(g)) {
+            return Err(fail(format!("anderson history columns disagree with k*d = {dim}")));
+        }
+    }
+    if let Some(fb) = &full_batch {
+        if fb.c_au.len() != dim {
+            return Err(fail(format!(
+                "plain-iterate record holds {} values, expected k*d = {dim}",
+                fb.c_au.len()
+            )));
+        }
+        if fb.assign.len() != fb.prev_assign.len() {
+            return Err(fail(format!(
+                "assignment records disagree: {} vs {} rows",
+                fb.assign.len(),
+                fb.prev_assign.len()
+            )));
+        }
+    }
+    if let Some(st) = &stream {
+        if st.counts.len() != k {
+            return Err(fail(format!(
+                "stream counts record holds {} clusters, expected k = {k}",
+                st.counts.len()
+            )));
+        }
+    }
+    Ok(SolverSnapshot { fingerprint, driver, k, d, centroids, anderson, full_batch, stream })
+}
+
+/// Write a snapshot durably: serialize, write to a temp file, fsync,
+/// then atomically rename over the previous snapshot. A crash (or an
+/// injected [`crate::fault::FaultSite::CheckpointWrite`] fault) at any
+/// point leaves either the old complete snapshot or the new complete
+/// snapshot on disk — never a torn one.
+pub fn write_snapshot(dir: &Path, snap: &SolverSnapshot) -> Result<PathBuf, ClusterError> {
+    let path = snapshot_path(dir);
+    let fail = |reason: String| ClusterError::Snapshot {
+        path: path.display().to_string(),
+        reason,
+    };
+    // Fault window 1: a clean write failure before any bytes land.
+    crate::fault::check(crate::fault::FaultSite::CheckpointWrite)
+        .map_err(|e| fail(format!("write failed: {e}")))?;
+    std::fs::create_dir_all(dir).map_err(|e| fail(format!("create dir: {e}")))?;
+    let bytes = encode_snapshot(snap);
+    let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp).map_err(|e| fail(format!("create temp: {e}")))?;
+        f.write_all(&bytes).map_err(|e| fail(format!("write temp: {e}")))?;
+        f.sync_all().map_err(|e| fail(format!("sync temp: {e}")))?;
+    }
+    // Fault window 2: between the write and the rename. An injected
+    // error truncates the temp file to a torn prefix (what a real crash
+    // mid-write leaves) and keeps the previous snapshot in place; an
+    // injected kill unwinds with the rename never performed.
+    if let Err(e) = crate::fault::check(crate::fault::FaultSite::CheckpointWrite) {
+        let _ = std::fs::File::options()
+            .write(true)
+            .open(&tmp)
+            .and_then(|f| f.set_len(bytes.len() as u64 / 2));
+        return Err(fail(format!("write failed before rename: {e}")));
+    }
+    std::fs::rename(&tmp, &path).map_err(|e| fail(format!("rename: {e}")))?;
+    // Best-effort directory sync so the rename itself is durable.
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(path)
+}
+
+/// Load the latest snapshot from a checkpoint directory. `Ok(None)`
+/// when no snapshot exists (a fresh run); typed errors for anything
+/// unreadable or corrupt.
+pub fn load_snapshot(dir: &Path) -> Result<Option<SolverSnapshot>, ClusterError> {
+    let path = snapshot_path(dir);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(ClusterError::Snapshot {
+                path: path.display().to_string(),
+                reason: format!("read: {e}"),
+            })
+        }
+    };
+    decode_snapshot(&bytes, &path).map(Some)
+}
+
+/// Remove a run's snapshot (called when the run completes, so "a
+/// snapshot exists" always means "this run is resumable"). Missing
+/// files and removal failures are ignored — a stale snapshot is
+/// rejected by its fingerprint or replaced by the next write.
+pub fn remove_snapshot(dir: &Path) {
+    let _ = std::fs::remove_file(snapshot_path(dir));
+}
+
+// ---------------------------------------------------------------------
+// The coordinator's write-ahead job journal.
+// ---------------------------------------------------------------------
+
+/// One job-lifecycle event in the coordinator journal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JournalEvent {
+    /// A job was admitted. `spec` is the re-submittable request
+    /// description (`ClusterRequest::journal_spec`); `None` for
+    /// requests that cannot be reconstructed after a restart (inline
+    /// data, explicit centroid inits), which recovery skips.
+    Submitted {
+        /// Coordinator job id.
+        job: u64,
+        /// Serialized request spec, when recoverable.
+        spec: Option<String>,
+    },
+    /// A worker picked the job up (attempt numbers count retries).
+    Started {
+        /// Coordinator job id.
+        job: u64,
+        /// 1-based attempt number.
+        attempt: u32,
+    },
+    /// The job resolved (success, typed failure, or cancellation) —
+    /// recovery has nothing left to do for it.
+    Completed {
+        /// Coordinator job id.
+        job: u64,
+    },
+}
+
+/// Path of the journal inside a journal directory.
+pub fn journal_path(dir: &Path) -> PathBuf {
+    dir.join(JOURNAL_FILE)
+}
+
+/// Append-only journal writer. Every append is CRC-framed and flushed,
+/// so the journal never loses more than the record being written when
+/// the process dies.
+pub struct JournalWriter {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl JournalWriter {
+    /// Open (or create) the journal in `dir`, validating the magic of
+    /// an existing file before appending to it.
+    pub fn open(dir: &Path) -> Result<Self, ClusterError> {
+        let path = journal_path(dir);
+        let fail = |reason: String| ClusterError::Snapshot {
+            path: path.display().to_string(),
+            reason,
+        };
+        std::fs::create_dir_all(dir).map_err(|e| fail(format!("create dir: {e}")))?;
+        let mut file = std::fs::File::options()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| fail(format!("open: {e}")))?;
+        let len = file.metadata().map_err(|e| fail(format!("stat: {e}")))?.len();
+        if len == 0 {
+            file.write_all(JOURNAL_MAGIC).map_err(|e| fail(format!("write magic: {e}")))?;
+            file.sync_all().map_err(|e| fail(format!("sync: {e}")))?;
+        } else {
+            let mut magic = [0u8; 8];
+            use std::io::Seek;
+            file.seek(std::io::SeekFrom::Start(0)).map_err(|e| fail(format!("seek: {e}")))?;
+            let ok = file.read_exact(&mut magic).is_ok() && &magic == JOURNAL_MAGIC;
+            if !ok {
+                return Err(fail("not an AAKMJL01 journal (bad magic)".into()));
+            }
+        }
+        Ok(Self { path, file })
+    }
+
+    /// Append one event durably (framed, CRC'd, flushed to disk).
+    pub fn append(&mut self, ev: &JournalEvent) -> Result<(), ClusterError> {
+        let fail = |reason: String| ClusterError::Snapshot {
+            path: self.path.display().to_string(),
+            reason,
+        };
+        let mut e = Enc::default();
+        let tag = match ev {
+            JournalEvent::Submitted { job, spec } => {
+                e.u64(*job);
+                e.boolean(spec.is_some());
+                if let Some(s) = spec {
+                    e.str(s);
+                }
+                TAG_JOB_SUBMITTED
+            }
+            JournalEvent::Started { job, attempt } => {
+                e.u64(*job);
+                e.u32(*attempt);
+                TAG_JOB_STARTED
+            }
+            JournalEvent::Completed { job } => {
+                e.u64(*job);
+                TAG_JOB_COMPLETED
+            }
+        };
+        let mut rec = Vec::new();
+        push_record(&mut rec, tag, &e.buf);
+        self.file.write_all(&rec).map_err(|err| fail(format!("append: {err}")))?;
+        self.file.sync_data().map_err(|err| fail(format!("sync: {err}")))?;
+        Ok(())
+    }
+}
+
+/// Read every valid event from a journal. A missing file is an empty
+/// journal; a torn tail (the crash-mid-append case) is dropped
+/// silently; foreign magic is rejected typed.
+pub fn read_journal(dir: &Path) -> Result<Vec<JournalEvent>, ClusterError> {
+    let path = journal_path(dir);
+    let fail = |reason: String| ClusterError::Snapshot {
+        path: path.display().to_string(),
+        reason,
+    };
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(fail(format!("read: {e}"))),
+    };
+    if bytes.len() < 8 || &bytes[..8] != JOURNAL_MAGIC {
+        return Err(fail("not an AAKMJL01 journal (bad magic)".into()));
+    }
+    let records = parse_records(&bytes[8..], false).map_err(&fail)?;
+    let mut events = Vec::new();
+    for (tag, payload) in records {
+        let mut d = Dec::new(payload);
+        let ev = match tag {
+            TAG_JOB_SUBMITTED => {
+                let job = d.u64().map_err(&fail)?;
+                let spec = if d.boolean().map_err(&fail)? {
+                    Some(d.str().map_err(&fail)?)
+                } else {
+                    None
+                };
+                JournalEvent::Submitted { job, spec }
+            }
+            TAG_JOB_STARTED => JournalEvent::Started {
+                job: d.u64().map_err(&fail)?,
+                attempt: d.u32().map_err(&fail)?,
+            },
+            TAG_JOB_COMPLETED => JournalEvent::Completed { job: d.u64().map_err(&fail)? },
+            // A valid-CRC record with an unknown tag is a newer writer;
+            // recovery stops at the first record it cannot interpret.
+            _ => break,
+        };
+        d.done().map_err(&fail)?;
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// A journaled job that was submitted but never completed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IncompleteJob {
+    /// The original coordinator job id.
+    pub job: u64,
+    /// Serialized request spec, when the job is re-submittable.
+    pub spec: Option<String>,
+    /// How many worker attempts the journal recorded.
+    pub attempts: u32,
+}
+
+/// Fold a journal into its incomplete jobs, in submission order.
+pub fn incomplete_jobs(events: &[JournalEvent]) -> Vec<IncompleteJob> {
+    let mut open: Vec<IncompleteJob> = Vec::new();
+    for ev in events {
+        match ev {
+            JournalEvent::Submitted { job, spec } => {
+                open.push(IncompleteJob { job: *job, spec: spec.clone(), attempts: 0 });
+            }
+            JournalEvent::Started { job, attempt } => {
+                if let Some(j) = open.iter_mut().find(|j| j.job == *job) {
+                    j.attempts = j.attempts.max(*attempt);
+                }
+            }
+            JournalEvent::Completed { job } => {
+                open.retain(|j| j.job != *job);
+            }
+        }
+    }
+    open
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("aakm_persist_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_snapshot() -> SolverSnapshot {
+        SolverSnapshot {
+            fingerprint: "k=2 d=3 seed=42 engine=hamerly".into(),
+            driver: DriverSnap {
+                iterations: 7,
+                accepted: 3,
+                energy: 12.5,
+                decrease_prev: 0.25,
+                rejects: 1,
+                m: 4,
+                outstanding: true,
+            },
+            k: 2,
+            d: 3,
+            centroids: vec![1.0, 2.0, 3.0, -1.0, -2.0, -3.0],
+            anderson: Some(AndersonSnap {
+                prev: Some((vec![0.5; 6], vec![0.25; 6])),
+                cols: vec![(vec![1.0; 6], vec![2.0; 6]), (vec![3.0; 6], vec![4.0; 6])],
+                accelerated_steps: 5,
+            }),
+            full_batch: Some(FullBatchSnap {
+                c_au: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+                assign: vec![0, 1, 1, 0],
+                prev_assign: vec![0, 1, 0, 0],
+                candidate_was_accel: true,
+            }),
+            stream: None,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exact() {
+        let dir = tmp("roundtrip");
+        let snap = sample_snapshot();
+        let path = write_snapshot(&dir, &snap).unwrap();
+        assert_eq!(path, snapshot_path(&dir));
+        let back = load_snapshot(&dir).unwrap().expect("snapshot exists");
+        assert_eq!(back, snap);
+        // NaN-safe energies roundtrip through bits too.
+        let mut with_inf = snap.clone();
+        with_inf.driver.energy = f64::INFINITY;
+        with_inf.driver.decrease_prev = f64::INFINITY;
+        write_snapshot(&dir, &with_inf).unwrap();
+        let back = load_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(back.driver.energy, f64::INFINITY);
+    }
+
+    #[test]
+    fn missing_snapshot_is_none_not_error() {
+        let dir = tmp("missing");
+        assert_eq!(load_snapshot(&dir).unwrap(), None);
+        remove_snapshot(&dir); // no-op on nothing
+    }
+
+    #[test]
+    fn writes_replace_atomically_and_fingerprint_gates_resume() {
+        let dir = tmp("replace");
+        let snap = sample_snapshot();
+        write_snapshot(&dir, &snap).unwrap();
+        let mut newer = snap.clone();
+        newer.driver.iterations = 99;
+        write_snapshot(&dir, &newer).unwrap();
+        let back = load_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(back.driver.iterations, 99);
+        assert!(back.check_fingerprint("k=2 d=3 seed=42 engine=hamerly", &dir).is_ok());
+        let err = back.check_fingerprint("k=9 d=3 seed=42 engine=hamerly", &dir).unwrap_err();
+        assert!(matches!(err, ClusterError::Snapshot { .. }), "{err}");
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn every_bit_flip_and_truncation_is_rejected_typed() {
+        let snap = sample_snapshot();
+        let bytes = encode_snapshot(&snap);
+        let path = Path::new("fuzz.ck");
+        assert!(decode_snapshot(&bytes, path).is_ok());
+        // Bit flips across the whole file (every byte, one bit each).
+        for i in 0..bytes.len() {
+            let mut mutated = bytes.clone();
+            mutated[i] ^= 1 << (i % 8);
+            match decode_snapshot(&mutated, path) {
+                Err(ClusterError::Snapshot { .. }) => {}
+                Err(other) => panic!("byte {i}: wrong error type {other}"),
+                Ok(_) => panic!("byte {i}: bit flip accepted silently"),
+            }
+        }
+        // Truncations at every prefix length.
+        for cut in 0..bytes.len() {
+            match decode_snapshot(&bytes[..cut], path) {
+                Err(ClusterError::Snapshot { .. }) => {}
+                Err(other) => panic!("cut {cut}: wrong error type {other}"),
+                Ok(_) => panic!("cut {cut}: truncation accepted silently"),
+            }
+        }
+    }
+
+    #[test]
+    fn injected_faults_never_corrupt_the_previous_snapshot() {
+        use crate::fault::{FaultKind, FaultPlan, FaultSite};
+        let dir = tmp("faulted");
+        let snap = sample_snapshot();
+        write_snapshot(&dir, &snap).unwrap();
+
+        // Window 1: clean failure before the write.
+        {
+            let _guard = FaultPlan::new()
+                .fail_next(FaultSite::CheckpointWrite, FaultKind::Error, 1)
+                .install_for_current_thread();
+            let mut newer = snap.clone();
+            newer.driver.iterations = 100;
+            let err = write_snapshot(&dir, &newer).unwrap_err();
+            assert!(matches!(err, ClusterError::Snapshot { .. }), "{err}");
+        }
+        assert_eq!(load_snapshot(&dir).unwrap().unwrap().driver.iterations, 7);
+
+        // Window 2: torn write between the temp write and the rename.
+        {
+            let _guard = FaultPlan::new()
+                .fail_after(FaultSite::CheckpointWrite, FaultKind::Error, 1, 1)
+                .install_for_current_thread();
+            let mut newer = snap.clone();
+            newer.driver.iterations = 101;
+            let err = write_snapshot(&dir, &newer).unwrap_err();
+            assert!(err.to_string().contains("before rename"), "{err}");
+        }
+        // The torn temp file exists, but the live snapshot is intact.
+        assert!(dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        assert_eq!(load_snapshot(&dir).unwrap().unwrap().driver.iterations, 7);
+
+        // And a clean retry replaces it wholesale.
+        let mut newer = snap.clone();
+        newer.driver.iterations = 102;
+        write_snapshot(&dir, &newer).unwrap();
+        assert_eq!(load_snapshot(&dir).unwrap().unwrap().driver.iterations, 102);
+    }
+
+    #[test]
+    fn journal_roundtrips_and_folds_incomplete_jobs() {
+        let dir = tmp("journal");
+        let mut w = JournalWriter::open(&dir).unwrap();
+        w.append(&JournalEvent::Submitted { job: 1, spec: Some("k=3".into()) }).unwrap();
+        w.append(&JournalEvent::Submitted { job: 2, spec: None }).unwrap();
+        w.append(&JournalEvent::Started { job: 1, attempt: 1 }).unwrap();
+        w.append(&JournalEvent::Completed { job: 1 }).unwrap();
+        w.append(&JournalEvent::Started { job: 2, attempt: 1 }).unwrap();
+        w.append(&JournalEvent::Started { job: 2, attempt: 2 }).unwrap();
+        drop(w);
+        // Reopen and keep appending (restart-append path).
+        let mut w = JournalWriter::open(&dir).unwrap();
+        w.append(&JournalEvent::Submitted { job: 3, spec: Some("k=4".into()) }).unwrap();
+        drop(w);
+
+        let events = read_journal(&dir).unwrap();
+        assert_eq!(events.len(), 7);
+        let open = incomplete_jobs(&events);
+        assert_eq!(open.len(), 2);
+        assert_eq!(open[0], IncompleteJob { job: 2, spec: None, attempts: 2 });
+        assert_eq!(open[1], IncompleteJob { job: 3, spec: Some("k=4".into()), attempts: 0 });
+    }
+
+    #[test]
+    fn journal_tolerates_a_torn_tail_but_rejects_bad_magic() {
+        let dir = tmp("torn");
+        let mut w = JournalWriter::open(&dir).unwrap();
+        w.append(&JournalEvent::Submitted { job: 1, spec: None }).unwrap();
+        w.append(&JournalEvent::Completed { job: 1 }).unwrap();
+        drop(w);
+        // Tear the last record mid-way: the valid prefix still reads.
+        let path = journal_path(&dir);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let events = read_journal(&dir).unwrap();
+        assert_eq!(events, vec![JournalEvent::Submitted { job: 1, spec: None }]);
+        assert_eq!(incomplete_jobs(&events).len(), 1);
+        // Foreign magic is not a journal.
+        std::fs::write(&path, b"NOTAMAGICFILE").unwrap();
+        assert!(read_journal(&dir).is_err());
+        // An empty dir is an empty journal.
+        let empty = tmp("torn_empty");
+        assert_eq!(read_journal(&empty).unwrap(), Vec::new());
+    }
+}

@@ -19,6 +19,7 @@ use crate::data::DataMatrix;
 use crate::error::{ClusterError, FaultClass};
 use crate::init::InitMethod;
 use crate::kmeans::WorkspaceSpec;
+use crate::persist::CheckpointPolicy;
 use crate::stream::BatchSampling;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -212,6 +213,8 @@ pub struct ClusterRequest {
     client: Option<String>,
     retry: Option<RetryPolicy>,
     cpu_fallback: bool,
+    checkpoint: Option<CheckpointPolicy>,
+    reseed_empty: bool,
 }
 
 impl ClusterRequest {
@@ -319,6 +322,19 @@ impl ClusterRequest {
         self.cpu_fallback
     }
 
+    /// Durable-snapshot policy, if any: the solver writes crash-safe
+    /// checkpoints under the policy's directory and resumes from a
+    /// matching snapshot found there (see [`crate::persist`]).
+    pub fn checkpoint(&self) -> Option<&CheckpointPolicy> {
+        self.checkpoint.as_ref()
+    }
+
+    /// Whether clusters that lose every sample are deterministically
+    /// re-seeded mid-run (see [`crate::lloyd::reseed_empty_clusters`]).
+    pub fn reseed_empty(&self) -> bool {
+        self.reseed_empty
+    }
+
     /// Project the streaming mini-batch configuration (used when
     /// [`ClusterRequest::engine`] is `EngineKind::MiniBatch`).
     pub fn minibatch_config(&self) -> crate::stream::MiniBatchConfig {
@@ -345,6 +361,9 @@ impl ClusterRequest {
             threads: self.threads,
             record_trace: self.record_trace,
             precision: self.precision,
+            checkpoint: self.checkpoint.clone(),
+            reseed_empty: self.reseed_empty,
+            seed: self.seed,
         }
     }
 
@@ -356,6 +375,208 @@ impl ClusterRequest {
             threads: self.threads,
             artifact_dir: self.artifact_dir.clone(),
         }
+    }
+
+    /// Serialize the request as the coordinator journal's flat `key=value`
+    /// payload (one key per line), or `None` when the request cannot be
+    /// journaled: inline matrices and explicit initial centroids live only
+    /// in the submitting process's memory, so a recovering coordinator
+    /// could not reconstruct them.
+    ///
+    /// `time_limit` is deliberately dropped — it is a deadline measured
+    /// from submission, and a recovered job is a new submission.
+    pub fn journal_spec(&self) -> Option<String> {
+        let source = match &self.source {
+            DataSource::Inline(_) => return None,
+            DataSource::Registry { name, scale } => format!("registry:{scale}:{name}"),
+            DataSource::Path(p) => format!("path:{}", p.display()),
+            DataSource::Shard(p) => format!("shard:{}", p.display()),
+        };
+        let init = match &self.init {
+            InitSpec::Method(m) => m.name().to_string(),
+            InitSpec::Centroids(_) => return None,
+        };
+        let mut kv: Vec<(&str, String)> = vec![
+            ("source", source),
+            ("k", self.k.to_string()),
+            ("init", init),
+            ("engine", self.engine.name().to_string()),
+            ("precision", self.precision.name().to_string()),
+            ("accel", self.accel.label()),
+            ("eps1", self.epsilon1.to_string()),
+            ("eps2", self.epsilon2.to_string()),
+            ("m_max", self.m_max.to_string()),
+            ("max_iters", self.max_iters.to_string()),
+            ("threads", self.threads.to_string()),
+            ("record_trace", self.record_trace.to_string()),
+            ("seed", self.seed.to_string()),
+            ("priority", self.priority.to_string()),
+            ("chunk_size", self.chunk_size.to_string()),
+            ("batches_per_epoch", self.batches_per_epoch.to_string()),
+            ("sampling", self.batch_sampling.name().to_string()),
+            ("reseed_empty", self.reseed_empty.to_string()),
+            ("cpu_fallback", self.cpu_fallback.to_string()),
+        ];
+        if let Some(client) = &self.client {
+            kv.push(("client", client.clone()));
+        }
+        if let Some(dir) = &self.artifact_dir {
+            kv.push(("artifact_dir", dir.display().to_string()));
+        }
+        if let Some(ck) = &self.checkpoint {
+            kv.push(("checkpoint_dir", ck.dir.display().to_string()));
+            kv.push(("checkpoint_every", ck.every.to_string()));
+        }
+        if let Some(retry) = &self.retry {
+            let classes: Vec<&str> = retry
+                .retry_on
+                .iter()
+                .map(|c| match c {
+                    FaultClass::Io => "io",
+                    FaultClass::EngineLoad => "engine-load",
+                    FaultClass::Panic => "panic",
+                })
+                .collect();
+            kv.push((
+                "retry",
+                format!("{}:{}:{}", retry.max_attempts, retry.backoff.as_millis(), classes.join(",")),
+            ));
+        }
+        let mut spec = String::new();
+        for (key, val) in kv {
+            // A newline inside a value (a pathological path or client tag)
+            // would shear the line format — such requests don't journal.
+            if val.contains('\n') {
+                return None;
+            }
+            spec.push_str(key);
+            spec.push('=');
+            spec.push_str(&val);
+            spec.push('\n');
+        }
+        Some(spec)
+    }
+
+    /// Parse a [`ClusterRequest::journal_spec`] payload back into a
+    /// validated request. Unknown keys are rejected: the journal is read
+    /// back by the binary that wrote it, so an unrecognized key means a
+    /// corrupt record, not version skew to paper over.
+    pub fn from_journal_spec(spec: &str) -> Result<Self, ClusterError> {
+        fn bad(reason: impl Into<String>) -> ClusterError {
+            ClusterError::invalid("journal", reason)
+        }
+        fn num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, ClusterError> {
+            val.parse().map_err(|_| bad(format!("bad value for {key}: '{val}'")))
+        }
+        let defaults = SolverConfig::default();
+        let mut eps = (defaults.epsilon1, defaults.epsilon2);
+        let mut ck_dir: Option<PathBuf> = None;
+        let mut ck_every: Option<usize> = None;
+        let mut b = ClusterRequest::builder();
+        for line in spec.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) =
+                line.split_once('=').ok_or_else(|| bad(format!("malformed line '{line}'")))?;
+            b = match key {
+                "source" => {
+                    let (kind, rest) = val
+                        .split_once(':')
+                        .ok_or_else(|| bad(format!("malformed source '{val}'")))?;
+                    match kind {
+                        "registry" => {
+                            let (scale, name) = rest
+                                .split_once(':')
+                                .ok_or_else(|| bad(format!("malformed source '{val}'")))?;
+                            b.registry(name, num::<f64>("registry scale", scale)?)
+                        }
+                        "path" => b.path(rest),
+                        "shard" => b.shard(rest),
+                        other => return Err(bad(format!("unknown source kind '{other}'"))),
+                    }
+                }
+                "k" => b.k(num("k", val)?),
+                "init" => b.init(
+                    InitMethod::parse(val).ok_or_else(|| bad(format!("unknown init '{val}'")))?,
+                ),
+                "engine" => b.engine(
+                    EngineKind::parse(val)
+                        .ok_or_else(|| bad(format!("unknown engine '{val}'")))?,
+                ),
+                "precision" => b.precision(
+                    Precision::parse(val)
+                        .ok_or_else(|| bad(format!("unknown precision '{val}'")))?,
+                ),
+                "accel" => b.accel(
+                    crate::config::parse_accel(val)
+                        .ok_or_else(|| bad(format!("unknown accel '{val}'")))?,
+                ),
+                "eps1" => {
+                    eps.0 = num("eps1", val)?;
+                    b
+                }
+                "eps2" => {
+                    eps.1 = num("eps2", val)?;
+                    b
+                }
+                "m_max" => b.m_max(num("m_max", val)?),
+                "max_iters" => b.max_iters(num("max_iters", val)?),
+                "threads" => b.threads(num("threads", val)?),
+                "record_trace" => b.record_trace(num("record_trace", val)?),
+                "seed" => b.seed(num("seed", val)?),
+                "priority" => b.priority(num("priority", val)?),
+                "chunk_size" => b.chunk_size(num("chunk_size", val)?),
+                "batches_per_epoch" => b.batches_per_epoch(num("batches_per_epoch", val)?),
+                "sampling" => b.batch_sampling(
+                    BatchSampling::parse(val)
+                        .ok_or_else(|| bad(format!("unknown sampling '{val}'")))?,
+                ),
+                "reseed_empty" => b.reseed_empty(num("reseed_empty", val)?),
+                "cpu_fallback" => b.cpu_fallback(num("cpu_fallback", val)?),
+                "client" => b.client(val),
+                "artifact_dir" => b.artifact_dir(val),
+                "checkpoint_dir" => {
+                    ck_dir = Some(PathBuf::from(val));
+                    b
+                }
+                "checkpoint_every" => {
+                    ck_every = Some(num("checkpoint_every", val)?);
+                    b
+                }
+                "retry" => {
+                    let mut parts = val.splitn(3, ':');
+                    let (Some(max), Some(backoff), Some(classes)) =
+                        (parts.next(), parts.next(), parts.next())
+                    else {
+                        return Err(bad(format!("malformed retry '{val}'")));
+                    };
+                    let retry_on = classes
+                        .split(',')
+                        .filter(|c| !c.is_empty())
+                        .map(|c| match c {
+                            "io" => Ok(FaultClass::Io),
+                            "engine-load" => Ok(FaultClass::EngineLoad),
+                            "panic" => Ok(FaultClass::Panic),
+                            other => Err(bad(format!("unknown fault class '{other}'"))),
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    b.retry(RetryPolicy {
+                        max_attempts: num("retry attempts", max)?,
+                        backoff: Duration::from_millis(num("retry backoff", backoff)?),
+                        retry_on,
+                    })
+                }
+                other => return Err(bad(format!("unknown key '{other}'"))),
+            };
+        }
+        match (ck_dir, ck_every) {
+            (Some(dir), Some(every)) => b = b.checkpoint(CheckpointPolicy { dir, every }),
+            (None, None) => {}
+            _ => return Err(bad("checkpoint_dir and checkpoint_every must appear together")),
+        }
+        b.epsilons(eps.0, eps.1).build()
     }
 
     /// Replace the wall-clock budget with the remaining portion of a
@@ -419,6 +640,8 @@ pub struct ClusterRequestBuilder {
     client: Option<String>,
     retry: Option<RetryPolicy>,
     cpu_fallback: bool,
+    checkpoint: Option<CheckpointPolicy>,
+    reseed_empty: bool,
 }
 
 impl Default for ClusterRequestBuilder {
@@ -447,6 +670,8 @@ impl Default for ClusterRequestBuilder {
             client: None,
             retry: None,
             cpu_fallback: false,
+            checkpoint: None,
+            reseed_empty: false,
         }
     }
 }
@@ -626,6 +851,21 @@ impl ClusterRequestBuilder {
         self
     }
 
+    /// Write crash-safe solver snapshots under `policy` and resume from a
+    /// matching one if present (see [`crate::persist`]). Default off.
+    pub fn checkpoint(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
+    }
+
+    /// Deterministically re-seed clusters that lose every sample instead
+    /// of leaving their centroid frozen in place (seeded from the request
+    /// seed, so runs stay reproducible). Default off.
+    pub fn reseed_empty(mut self, reseed: bool) -> Self {
+        self.reseed_empty = reseed;
+        self
+    }
+
     /// Validate and produce the request.
     pub fn build(self) -> Result<ClusterRequest, ClusterError> {
         let source = self
@@ -657,6 +897,14 @@ impl ClusterRequestBuilder {
         if let Some(retry) = &self.retry {
             if retry.max_attempts == 0 {
                 return Err(ClusterError::invalid("retry", "max_attempts must be at least 1"));
+            }
+        }
+        if let Some(ck) = &self.checkpoint {
+            if ck.every == 0 {
+                return Err(ClusterError::invalid(
+                    "checkpoint",
+                    "snapshot cadence must be at least 1",
+                ));
             }
         }
         // Inline sources get the full shape checks right now; lazy sources
@@ -699,6 +947,8 @@ impl ClusterRequestBuilder {
             client: self.client,
             retry: self.retry,
             cpu_fallback: self.cpu_fallback,
+            checkpoint: self.checkpoint,
+            reseed_empty: self.reseed_empty,
         })
     }
 }
@@ -861,6 +1111,142 @@ mod tests {
             .retry(RetryPolicy { max_attempts: 0, backoff: Duration::ZERO, retry_on: vec![] })
             .build();
         assert!(matches!(bad, Err(ClusterError::InvalidRequest { field: "retry", .. })));
+    }
+
+    #[test]
+    fn checkpoint_and_reseed_fields_default_off_and_validate() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert!(req.checkpoint().is_none());
+        assert!(!req.reseed_empty());
+        let cfg = req.solver_config();
+        assert!(cfg.checkpoint.is_none());
+        assert!(!cfg.reseed_empty);
+        assert_eq!(cfg.seed, 42, "the solver seed defaults with the request seed");
+
+        let policy = CheckpointPolicy::new("ck/dir", 3);
+        let req = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .checkpoint(policy.clone())
+            .reseed_empty(true)
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(req.checkpoint(), Some(&policy));
+        assert!(req.reseed_empty());
+        let cfg = req.solver_config();
+        assert_eq!(cfg.checkpoint, Some(policy));
+        assert!(cfg.reseed_empty);
+        assert_eq!(cfg.seed, 9, "the snapshot fingerprint seeds from the request seed");
+
+        let bad = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .checkpoint(CheckpointPolicy::new("ck/dir", 0))
+            .build();
+        assert!(matches!(
+            bad,
+            Err(ClusterError::InvalidRequest { field: "checkpoint", .. })
+        ));
+    }
+
+    #[test]
+    fn journal_spec_roundtrips() {
+        let req = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(7)
+            .init(InitMethod::AfkMc2)
+            .engine(EngineKind::MiniBatch)
+            .precision(Precision::F32)
+            .accel(Acceleration::FixedM(3))
+            .epsilons(0.01, 0.4)
+            .m_max(12)
+            .max_iters(77)
+            .threads(2)
+            .record_trace(true)
+            .seed(1234)
+            .priority(-3)
+            .chunk_size(256)
+            .batches_per_epoch(5)
+            .batch_sampling(BatchSampling::Replacement)
+            .client("tenant-a")
+            .retry(RetryPolicy::transient(3, Duration::from_millis(25)))
+            .cpu_fallback(true)
+            .checkpoint(CheckpointPolicy::new("ck/dir", 2))
+            .reseed_empty(true)
+            .build()
+            .unwrap();
+        let spec = req.journal_spec().expect("registry sources journal");
+        let back = ClusterRequest::from_journal_spec(&spec).unwrap();
+        match back.source() {
+            DataSource::Registry { name, scale } => {
+                assert_eq!(name, "Birch");
+                assert_eq!(*scale, 0.001);
+            }
+            other => panic!("expected registry source, got {other:?}"),
+        }
+        assert_eq!(back.k(), 7);
+        assert!(matches!(back.init(), InitSpec::Method(InitMethod::AfkMc2)));
+        assert_eq!(back.engine(), EngineKind::MiniBatch);
+        assert_eq!(back.precision(), Precision::F32);
+        assert_eq!(back.accel(), Acceleration::FixedM(3));
+        assert_eq!(back.max_iters(), 77);
+        assert_eq!(back.threads(), 2);
+        assert!(back.record_trace());
+        assert_eq!(back.seed(), 1234);
+        assert_eq!(back.priority(), -3);
+        assert_eq!(back.chunk_size(), 256);
+        assert_eq!(back.batches_per_epoch(), 5);
+        assert_eq!(back.batch_sampling(), BatchSampling::Replacement);
+        assert_eq!(back.client(), Some("tenant-a"));
+        assert_eq!(back.retry(), Some(&RetryPolicy::transient(3, Duration::from_millis(25))));
+        assert!(back.cpu_fallback());
+        assert_eq!(back.checkpoint(), Some(&CheckpointPolicy::new("ck/dir", 2)));
+        assert!(back.reseed_empty());
+        let cfg = back.solver_config();
+        assert_eq!(cfg.epsilon1, 0.01);
+        assert_eq!(cfg.epsilon2, 0.4);
+        assert_eq!(cfg.m_max, 12);
+    }
+
+    #[test]
+    fn inline_and_explicit_centroid_requests_do_not_journal() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).build().unwrap();
+        assert!(req.journal_spec().is_none(), "inline data lives only in memory");
+        let c0 = Arc::new(DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]));
+        let req = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(2)
+            .initial_centroids(c0)
+            .build()
+            .unwrap();
+        assert!(req.journal_spec().is_none(), "explicit centroids live only in memory");
+    }
+
+    #[test]
+    fn journal_spec_rejects_corruption_typed() {
+        let spec = ClusterRequest::builder()
+            .shard("/tmp/x.fv")
+            .k(3)
+            .build()
+            .unwrap()
+            .journal_spec()
+            .unwrap();
+        for torn in [
+            spec.replace("k=3", "k3"),
+            spec.replace("k=3", "k=three"),
+            format!("{spec}mystery=1\n"),
+            format!("{spec}checkpoint_dir=ck\n"),
+            spec.replace("sampling=sequential", "sampling=psychic"),
+        ] {
+            assert!(
+                matches!(
+                    ClusterRequest::from_journal_spec(&torn),
+                    Err(ClusterError::InvalidRequest { field: "journal", .. })
+                ),
+                "accepted corrupt spec:\n{torn}"
+            );
+        }
     }
 
     #[test]

@@ -68,6 +68,21 @@ impl Pcg32 {
         Self::new(Rng::next_u64(self), Rng::next_u64(self))
     }
 
+    /// The raw `(state, inc)` pair — what a checkpoint must persist to
+    /// resume this stream mid-sequence. [`Pcg32::new`] transforms its
+    /// arguments (it seeds, it does not restore), so round-tripping goes
+    /// through [`Pcg32::from_parts`] instead.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from raw `(state, inc)` parts previously read
+    /// with [`Pcg32::state_parts`]; the restored stream continues exactly
+    /// where the saved one left off.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     #[inline]
     fn step(&mut self) {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);

@@ -393,6 +393,40 @@ mod tests {
     }
 
     #[test]
+    fn checkpointed_session_resumes_after_interrupt() {
+        use crate::persist::CheckpointPolicy;
+        let dir = std::env::temp_dir().join("aakm_session_tests/resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let data = blob_data(6, 900);
+        let mut session = ClusterSession::open(request(Arc::clone(&data))).unwrap();
+        let full = session.run().unwrap();
+        assert!(full.converged);
+        let cut = full.iterations / 2;
+        assert!(cut >= 1, "need a multi-iteration run for the resume test");
+
+        let make = |iters: usize| {
+            ClusterRequest::builder()
+                .inline(Arc::clone(&data))
+                .k(6)
+                .threads(1)
+                .seed(7)
+                .max_iters(iters)
+                .checkpoint(CheckpointPolicy::new(&dir, 1))
+                .build()
+                .unwrap()
+        };
+        let mut first = ClusterSession::open(make(cut)).unwrap();
+        let r1 = first.run().unwrap();
+        assert!(!r1.converged, "the capped run must stop early");
+        let mut resumed = ClusterSession::open(make(5000)).unwrap();
+        let r2 = resumed.run().unwrap();
+        assert!(r2.converged);
+        assert_eq!(r2.iterations, full.iterations, "resume continues the trajectory");
+        assert_eq!(r2.energy.to_bits(), full.energy.to_bits(), "bit-identical resume");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn all_engine_kinds_flow_through_the_builder() {
         let data = blob_data(5, 500);
         for engine in [

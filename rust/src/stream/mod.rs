@@ -48,6 +48,7 @@ use crate::kmeans::{RunReport, Workspace, WorkspaceSpec};
 use crate::lloyd;
 use crate::metrics::{PhaseTimer, Stopwatch};
 use crate::observe::{CancelToken, NoopObserver, Observer};
+use crate::persist::{self, DriverSnap, SolverSnapshot, StreamSnap};
 use crate::rng::{Pcg32, Rng};
 
 /// Batch cap per epoch for custom unbounded sources that neither report a
@@ -136,6 +137,37 @@ impl Default for MiniBatchConfig {
             seed: 42,
         }
     }
+}
+
+/// Where the epoch loop writes its durable snapshots (resolved from
+/// [`crate::persist::CheckpointPolicy`] once per run).
+struct StreamCkpt {
+    dir: std::path::PathBuf,
+    every: usize,
+    fingerprint: String,
+}
+
+/// Identity string baked into mini-batch snapshots. Excludes `max_iters`
+/// (a capped run may be resumed with a larger epoch budget) and the trace
+/// knobs; everything that shapes the epoch trajectory — including the
+/// batch layout and the seeded draw stream — is included, so a snapshot
+/// resumed under the same fingerprint replays the exact batch sequence.
+fn stream_fingerprint(cfg: &MiniBatchConfig, k: usize, d: usize) -> String {
+    format!(
+        "aakm-stream-v1 k={k} d={d} seed={} precision={} accel={} m_max={} eps1={} \
+         eps2={} chunk={} bpe={} tol={} sampling={} reseed={}",
+        cfg.seed,
+        cfg.solver.precision.name(),
+        cfg.solver.accel.label(),
+        cfg.solver.m_max,
+        cfg.solver.epsilon1,
+        cfg.solver.epsilon2,
+        cfg.chunk_size,
+        cfg.batches_per_epoch,
+        cfg.convergence_tol,
+        cfg.sampling.name(),
+        cfg.solver.reseed_empty,
+    )
 }
 
 /// Anderson-accelerated mini-batch solver over a reusable [`Workspace`].
@@ -234,6 +266,16 @@ struct EpochStep<'a> {
     sample_rng: Pcg32,
     sample_idx: Vec<usize>,
     source_len: Option<usize>,
+    /// Epoch-start copies of the learning-rate counters and the draw
+    /// stream: a mid-epoch interrupt reverts to them (alongside `c_prev`)
+    /// so the committed state is always an exact epoch boundary — which
+    /// is also what makes a resumed run replay the same batch sequence.
+    counts_prev: Vec<f64>,
+    rng_prev: (u64, u64),
+    /// Durable-snapshot destination (`None` = checkpointing off).
+    ckpt: Option<StreamCkpt>,
+    /// `Some(seed)` turns on the streaming empty-cluster re-seed policy.
+    reseed_seed: Option<u64>,
 }
 
 impl EpochStep<'_> {
@@ -311,13 +353,70 @@ impl EpochStep<'_> {
         }
         Ok(Some((energy, samples)))
     }
+
+    /// Throw away a partial epoch: centroids, learning-rate counters and
+    /// the draw stream all return to their epoch-start values.
+    fn revert_epoch(&mut self) {
+        self.c.as_mut_slice().copy_from_slice(self.c_prev.as_slice());
+        self.counts.copy_from_slice(&self.counts_prev);
+        self.sample_rng = Pcg32::from_parts(self.rng_prev.0, self.rng_prev.1);
+    }
+
+    /// Streaming variant of the empty-cluster re-seed policy: a centroid
+    /// that has absorbed no samples is moved next to the heaviest donor
+    /// centroid with a small deterministic jitter, and the donor's mass is
+    /// split between the two. The full dataset is never resident here, so
+    /// unlike [`crate::lloyd::reseed_empty_clusters`] the new centroid
+    /// adopts a perturbed donor *position* rather than a member sample —
+    /// the jitter stream is seeded from the run seed and the current
+    /// centroid bits, so reruns and checkpoint-resumed runs make the same
+    /// choice.
+    fn reseed_empty(&mut self) {
+        let Some(seed) = self.reseed_seed else { return };
+        if self.counts.iter().all(|&cnt| cnt > 0.0) {
+            return;
+        }
+        let (k, d) = (self.c.n(), self.c.d());
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &v in self.c.as_slice() {
+            h = (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let mut rng = Pcg32::seed_from_u64(seed ^ h);
+        for j in 0..k {
+            if self.counts[j] > 0.0 {
+                continue;
+            }
+            let mut donor = j;
+            for cand in 0..k {
+                if self.counts[cand] > self.counts[donor] {
+                    donor = cand;
+                }
+            }
+            if self.counts[donor] < 2.0 {
+                // Nothing heavy enough to split; later epochs may feed it.
+                break;
+            }
+            for t in 0..d {
+                let u = rng.next_u32() as f64 / u32::MAX as f64 - 0.5;
+                let v = self.c[(donor, t)];
+                self.c[(j, t)] = v + v.abs().max(1.0) * u * 1e-6;
+            }
+            let half = self.counts[donor] / 2.0;
+            self.counts[donor] = half;
+            self.counts[j] = half;
+        }
+    }
 }
 
 impl Step for EpochStep<'_> {
     fn advance(&mut self) -> Advance {
         let (k, d) = (self.c.n(), self.c.d());
         // ---- Mini-batch pass: one application of the epoch map G.
+        // Everything a mid-epoch interrupt must revert is saved first:
+        // the iterate, the learning-rate counters and the draw stream.
         self.c_prev.as_mut_slice().copy_from_slice(self.c.as_slice());
+        self.counts_prev.copy_from_slice(&self.counts);
+        self.rng_prev = self.sample_rng.state_parts();
         self.source.rewind();
         let mut batches = 0usize;
         while batches < self.epoch_batches {
@@ -360,7 +459,7 @@ impl Step for EpochStep<'_> {
             // is always an epoch-boundary iterate with an exact
             // checkpoint energy.
             if let Some(cancelled) = self.budget.interrupted() {
-                self.c.as_mut_slice().copy_from_slice(self.c_prev.as_slice());
+                self.revert_epoch();
                 return Advance::Interrupted { cancelled };
             }
         }
@@ -368,6 +467,10 @@ impl Step for EpochStep<'_> {
             // Empty source: the initial centroids are already the answer.
             return Advance::Converged;
         }
+        // Opt-in recovery for centroids that have never absorbed a sample
+        // (reverted with the rest of the epoch if the checkpoint below is
+        // interrupted).
+        self.reseed_empty();
         // ---- Full-energy checkpoint at the smoothed iterate G_e (it
         // yields at batch boundaries exactly like the training pass).
         match self.checkpoint_pass(false) {
@@ -378,7 +481,7 @@ impl Step for EpochStep<'_> {
             Ok(None) => {
                 // Interrupted before this epoch's energy was measured:
                 // the epoch is discarded like any other mid-pass break.
-                self.c.as_mut_slice().copy_from_slice(self.c_prev.as_slice());
+                self.revert_epoch();
                 Advance::Interrupted { cancelled: self.budget.is_cancelled() }
             }
             Err(e) => Advance::Failed(e),
@@ -415,6 +518,35 @@ impl Step for EpochStep<'_> {
 
     fn observe(&self) -> (&DataMatrix, &PhaseTimer) {
         (&self.c, &self.phases)
+    }
+
+    fn save_checkpoint(
+        &mut self,
+        driver: &DriverSnap,
+        acc: Option<&AndersonAccelerator>,
+    ) -> Result<(), ClusterError> {
+        let Some(ck) = &self.ckpt else { return Ok(()) };
+        // Epoch boundaries are the only snapshot points (the immediate
+        // guard resolves every proposal within its epoch, so there is
+        // never an outstanding candidate): the committed iterate, the
+        // learning-rate counters and the draw stream pin the trajectory.
+        let (rng_state, rng_inc) = self.sample_rng.state_parts();
+        let snap = SolverSnapshot {
+            fingerprint: ck.fingerprint.clone(),
+            driver: driver.clone(),
+            k: self.c.n(),
+            d: self.c.d(),
+            centroids: self.c.as_slice().to_vec(),
+            anderson: acc.map(|a| a.snapshot()),
+            full_batch: None,
+            stream: Some(StreamSnap {
+                counts: self.counts.clone(),
+                rng_state,
+                rng_inc,
+                eval_samples: self.eval_samples,
+            }),
+        };
+        persist::write_snapshot(&ck.dir, &snap).map(|_| ())
     }
 }
 
@@ -472,6 +604,28 @@ pub(crate) fn run_on_workspace(
     };
     let eval_batches = if source_len.is_some() { usize::MAX } else { epoch_batches };
 
+    // Durable checkpointing: resolve the policy and load + validate any
+    // existing snapshot before touching the workspace. A corrupt, torn or
+    // mismatched snapshot is a typed error, never a silent fresh start.
+    let mut ckpt: Option<StreamCkpt> = None;
+    let mut resume: Option<SolverSnapshot> = None;
+    if let Some(policy) = cfg.solver.checkpoint.clone() {
+        let fingerprint = stream_fingerprint(cfg, k, d);
+        if let Some(snap) = persist::load_snapshot(&policy.dir)? {
+            snap.check_fingerprint(&fingerprint, &policy.dir)?;
+            if snap.stream.is_none() {
+                return Err(ClusterError::Snapshot {
+                    path: persist::snapshot_path(&policy.dir).display().to_string(),
+                    reason: "snapshot carries no mini-batch solver state".into(),
+                });
+            }
+            resume = Some(snap);
+        }
+        ckpt = Some(StreamCkpt { dir: policy.dir, every: policy.every, fingerprint });
+    }
+    let checkpoint_every = ckpt.as_ref().map_or(0, |c| c.every);
+    let ck_dir = ckpt.as_ref().map(|c| c.dir.clone());
+
     ws.scratch.begin_run();
     ws.engine.reset();
     let evals0 = ws.engine.distance_evals();
@@ -500,6 +654,9 @@ pub(crate) fn run_on_workspace(
     let mut counts = ws.scratch.take_trace_f64();
     counts.clear();
     counts.resize(k, 0.0);
+    let mut counts_prev = ws.scratch.take_trace_f64();
+    counts_prev.clear();
+    counts_prev.resize(k, 0.0);
     let trace = if cfg.solver.record_trace {
         ws.scratch.take_trace_f64()
     } else {
@@ -515,6 +672,27 @@ pub(crate) fn run_on_workspace(
     } else {
         Vec::new()
     };
+
+    // Mid-trajectory restore: the committed iterate, the learning-rate
+    // counters and the draw stream come back byte-for-byte, and the
+    // Anderson history is replayed into the freshly-taken (and therefore
+    // reset) accelerator — the resumed run replays the exact batch
+    // sequence the interrupted one would have seen.
+    let mut sample_rng = Pcg32::seed_from_u64(cfg.seed);
+    let mut eval_samples = 0u64;
+    let mut resume_driver = None;
+    if let Some(snap) = resume {
+        c.as_mut_slice().copy_from_slice(&snap.centroids);
+        let st = snap.stream.expect("validated above");
+        counts.copy_from_slice(&st.counts);
+        sample_rng = Pcg32::from_parts(st.rng_state, st.rng_inc);
+        eval_samples = st.eval_samples;
+        if let (Some(aa), Some(acc)) = (&snap.anderson, acc.as_mut()) {
+            acc.restore(aa);
+        }
+        resume_driver = Some(snap.driver);
+    }
+    let rng_prev = sample_rng.state_parts();
 
     let budget = Budget::new(&sw, cfg.solver.time_limit, cancel);
     let mut step = EpochStep {
@@ -532,14 +710,18 @@ pub(crate) fn run_on_workspace(
         chunk_rows,
         epoch_batches,
         eval_batches,
-        eval_samples: 0,
+        eval_samples,
         convergence_tol: cfg.convergence_tol,
         sampling: cfg.sampling,
-        sample_rng: Pcg32::seed_from_u64(cfg.seed),
+        sample_rng,
         sample_idx,
         source_len,
+        counts_prev,
+        rng_prev,
+        ckpt,
+        reseed_seed: cfg.solver.reseed_empty.then_some(cfg.seed),
     };
-    let driver = FixedPointDriver::new(
+    let mut driver = FixedPointDriver::new(
         DriverConfig {
             accel: cfg.solver.accel,
             m_max: cfg.solver.m_max,
@@ -551,13 +733,22 @@ pub(crate) fn run_on_workspace(
             guard: GuardMode::Immediate,
             restart_after_rejects: Some(RESTART_AFTER_REJECTS),
             check_at_top: true,
+            checkpoint_every,
         },
         acc.as_mut(),
         budget,
         trace,
         m_trace,
     );
+    if let Some(ds) = resume_driver {
+        driver.resume_from(ds);
+    }
     let outcome = driver.run(&mut step, observer);
+    if let Some(dir) = ck_dir.filter(|_| outcome.converged) {
+        // A converged run needs no resume point; interrupted, errored or
+        // capped runs keep theirs.
+        persist::remove_snapshot(&dir);
+    }
 
     // The final energy is the last epoch's exact checkpoint; runs that
     // never completed an epoch measure the returned centroids once —
@@ -583,8 +774,9 @@ pub(crate) fn run_on_workspace(
         }
     };
 
-    let EpochStep { ws, phases, c, c_prev, c_prop, chunk, assign, f_t, counts, sample_idx, .. } =
-        step;
+    let EpochStep {
+        ws, phases, c, c_prev, c_prop, chunk, assign, f_t, counts, counts_prev, sample_idx, ..
+    } = step;
     ws.scratch.put_mat(c_prop);
     ws.scratch.put_mat(c_prev);
     ws.scratch.put_mat(chunk);
@@ -595,6 +787,7 @@ pub(crate) fn run_on_workspace(
     if let Some(acc) = acc {
         ws.scratch.put_accelerator(acc);
     }
+    ws.scratch.put_trace_f64(counts_prev);
     ws.scratch.put_trace_f64(counts);
     if sample_idx.capacity() > 0 {
         ws.scratch.put_trace_usize(sample_idx);
@@ -885,6 +1078,91 @@ mod tests {
             Err(ClusterError::InvalidRequest { field: "sampling", .. }) => {}
             other => panic!("expected a typed sampling error, got ok={}", other.is_ok()),
         }
+    }
+
+    #[test]
+    fn checkpointed_minibatch_run_resumes_bit_identical() {
+        let dir = std::env::temp_dir().join("aakm_stream_tests").join("resume_parity");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Pcg32::seed_from_u64(31);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 3000, 3, 5, 2.5, 0.3));
+        let mut srng = Pcg32::seed_from_u64(31);
+        let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
+        // Replacement sampling so the resumed draw stream is exercised too.
+        let mut config = cfg(Acceleration::DynamicM(2), 512);
+        config.sampling = BatchSampling::Replacement;
+        // Reference: one uninterrupted run.
+        let mut solver = MiniBatchSolver::try_new(config.clone()).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let full = solver.run(&mut source, &c0).unwrap();
+        assert!(full.converged, "reference must converge");
+        assert!(full.iterations >= 2, "need room to truncate: {}", full.iterations);
+        // Truncated run: checkpoint every epoch, cap halfway through.
+        let policy = crate::persist::CheckpointPolicy::new(&dir, 1);
+        let mut tcfg = config.clone();
+        tcfg.solver.max_iters = full.iterations / 2;
+        tcfg.solver.checkpoint = Some(policy.clone());
+        let mut solver = MiniBatchSolver::try_new(tcfg).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let first = solver.run(&mut source, &c0).unwrap();
+        assert!(!first.converged);
+        assert!(
+            crate::persist::load_snapshot(&dir).unwrap().is_some(),
+            "a capped run must leave its snapshot behind"
+        );
+        // Resume with the full epoch budget: stitched trajectory must
+        // land on the same bits as the uninterrupted run.
+        let mut rcfg = config;
+        rcfg.solver.checkpoint = Some(policy);
+        let mut solver = MiniBatchSolver::try_new(rcfg).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let resumed = solver.run(&mut source, &c0).unwrap();
+        assert!(resumed.converged);
+        assert_eq!(resumed.iterations, full.iterations, "epoch count carries across resume");
+        assert_eq!(resumed.energy.to_bits(), full.energy.to_bits());
+        assert_eq!(resumed.centroids.as_slice(), full.centroids.as_slice());
+        let mut stitched = first.energy_trace.clone();
+        stitched.extend_from_slice(&resumed.energy_trace);
+        assert_eq!(stitched.len(), full.energy_trace.len());
+        for (i, (a, b)) in stitched.iter().zip(&full.energy_trace).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "trace diverges at epoch {i}");
+        }
+        assert!(
+            crate::persist::load_snapshot(&dir).unwrap().is_none(),
+            "a converged run drops its snapshot"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_reseed_revives_never_fed_centroids() {
+        let mut rng = Pcg32::seed_from_u64(44);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 1000, 2, 3, 3.0, 0.2));
+        // Three centroids on the data, one far outside it: the far one
+        // never absorbs a sample and stays put without the policy.
+        let far = [1e6, 1e6];
+        let c0 = DataMatrix::from_rows(&[x.row(0), x.row(400), x.row(800), &far]);
+        let mut config = cfg(Acceleration::None, 256);
+        config.solver.reseed_empty = true;
+        let mut solver = MiniBatchSolver::try_new(config.clone()).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let report = solver.run(&mut source, &c0).unwrap();
+        for j in 0..4 {
+            for t in 0..2 {
+                assert!(
+                    report.centroids[(j, t)].abs() < 1e5,
+                    "centroid {j} dim {t} still at the far seed: {}",
+                    report.centroids[(j, t)]
+                );
+            }
+        }
+        // The policy is deterministic: a rerun lands on the same bits.
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let again = solver.run(&mut source, &c0).unwrap();
+        assert_eq!(report.centroids.as_slice(), again.centroids.as_slice());
+        assert_eq!(report.energy.to_bits(), again.energy.to_bits());
     }
 
     #[test]

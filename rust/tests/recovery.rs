@@ -1,0 +1,450 @@
+//! Durable checkpoint/resume: crash-safety contract of `aakm::persist`
+//! end-to-end through sessions and the coordinator.
+//!
+//! Proven here, per ISSUE acceptance:
+//!
+//! * resuming from a snapshot is **bit-identical** to the uninterrupted
+//!   run — same iteration count, same final energy bits, same centroid
+//!   bits — for every full-batch engine, with and without Anderson
+//!   acceleration, and for the mini-batch engine under both sampling
+//!   modes;
+//! * a seed sweep of injected [`FaultSite::CheckpointWrite`] failures
+//!   (typed error, panic, worker kill — in both write windows) never
+//!   leaves a partial snapshot: the directory always loads clean, and
+//!   the retried run lands exactly on the reference trajectory;
+//! * corrupting `AAKMCK01` snapshots (bit flips, truncation, foreign
+//!   magic, stale fingerprints) and `AAKMFV01` shards (magic, shape,
+//!   truncation, trailing bytes, non-finite payloads) surfaces typed
+//!   errors — never a panic, never a silent fresh restart;
+//! * a crashed coordinator's write-ahead journal re-enqueues the
+//!   incomplete job, the recovered handle resolves (no hang), and the
+//!   job resumes from its snapshot instead of starting over.
+//!
+//! Tests that write snapshots install a [`FaultPlan`] (empty where no
+//! faults are wanted): the guard holds the harness's global lock, so
+//! tests in this binary serialize instead of stealing each other's
+//! fault schedules.
+
+use aakm::config::{Acceleration, BatchSampling, EngineKind};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
+use aakm::data::{self, synth, DataMatrix};
+use aakm::fault::{FaultKind, FaultPlan, FaultSite};
+use aakm::kmeans::RunReport;
+use aakm::persist::{self, CheckpointPolicy, JournalEvent, JournalWriter};
+use aakm::rng::Pcg32;
+use aakm::{ClusterError, ClusterRequest, ClusterSession};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Fresh scratch directory under the system temp dir.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("aakm_recovery_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir
+}
+
+/// A slow-converging manifold instance: enough iterations that a run can
+/// be cut in half and meaningfully resumed.
+fn curve(seed: u64, n: usize) -> Arc<DataMatrix> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    Arc::new(synth::noisy_curve(&mut rng, n, 3, 0.3))
+}
+
+fn run(req: ClusterRequest) -> Result<RunReport, ClusterError> {
+    ClusterSession::open(req).expect("session opens").run()
+}
+
+/// The sweep's fault seeds: 0..8 unless `AAKM_FAULT_SEEDS` overrides.
+fn seeds() -> Vec<u64> {
+    let parsed: Vec<u64> = std::env::var("AAKM_FAULT_SEEDS")
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    if parsed.is_empty() {
+        (0..8).collect()
+    } else {
+        parsed
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_across_engines_and_acceleration() {
+    let _quiesce = FaultPlan::new().install();
+    let data = curve(17, 1800);
+    for engine in
+        [EngineKind::Naive, EngineKind::Hamerly, EngineKind::Elkan, EngineKind::Yinyang]
+    {
+        for accel in [Acceleration::None, Acceleration::DynamicM(2)] {
+            let label = format!("{} / {}", engine.name(), accel.label());
+            let dir = tmp(&format!("parity_{}_{}", engine.name(), accel.label()));
+            let make = |iters: usize, checkpointed: bool| {
+                let mut b = ClusterRequest::builder()
+                    .inline(Arc::clone(&data))
+                    .k(8)
+                    .engine(engine)
+                    .accel(accel)
+                    .threads(1)
+                    .seed(11)
+                    .max_iters(iters);
+                if checkpointed {
+                    b = b.checkpoint(CheckpointPolicy::new(&dir, 1));
+                }
+                b.build().expect("valid request")
+            };
+            let full = run(make(600, false)).expect("reference run");
+            assert!(full.converged, "{label}: reference must converge");
+            let cut = full.iterations / 2;
+            assert!(cut >= 1, "{label}: need a multi-iteration run");
+
+            let r1 = run(make(cut, true)).expect("capped run");
+            assert!(!r1.converged, "{label}: the capped run must stop early");
+            let r2 = run(make(600, true)).expect("resumed run");
+            assert!(r2.converged, "{label}: the resumed run must finish");
+            assert_eq!(r2.iterations, full.iterations, "{label}: same total trajectory");
+            assert_eq!(
+                r2.energy.to_bits(),
+                full.energy.to_bits(),
+                "{label}: bit-identical final energy"
+            );
+            let same_centroids = r2
+                .centroids
+                .as_slice()
+                .iter()
+                .zip(full.centroids.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same_centroids, "{label}: bit-identical centroids");
+            // A converged run consumes its snapshot.
+            assert!(
+                persist::load_snapshot(&dir).expect("clean directory").is_none(),
+                "{label}: converged runs leave no stale snapshot behind"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn minibatch_resume_is_bit_identical_under_both_sampling_modes() {
+    let _quiesce = FaultPlan::new().install();
+    let data = curve(23, 2400);
+    for sampling in [BatchSampling::Sequential, BatchSampling::Replacement] {
+        let label = sampling.name();
+        let dir = tmp(&format!("parity_minibatch_{label}"));
+        let make = |epochs: usize, checkpointed: bool| {
+            let mut b = ClusterRequest::builder()
+                .inline(Arc::clone(&data))
+                .k(6)
+                .engine(EngineKind::MiniBatch)
+                .chunk_size(256)
+                .batch_sampling(sampling)
+                .threads(1)
+                .seed(9)
+                .max_iters(epochs);
+            if checkpointed {
+                b = b.checkpoint(CheckpointPolicy::new(&dir, 1));
+            }
+            b.build().expect("valid request")
+        };
+        let full = run(make(60, false)).expect("reference run");
+        let cut = full.iterations / 2;
+        assert!(cut >= 1, "{label}: need a multi-epoch run");
+
+        let r1 = run(make(cut, true)).expect("capped run");
+        assert_eq!(r1.iterations, cut, "{label}: the cap lands on an epoch boundary");
+        let r2 = run(make(60, true)).expect("resumed run");
+        assert_eq!(r2.iterations, full.iterations, "{label}: same total epochs");
+        assert_eq!(
+            r2.energy.to_bits(),
+            full.energy.to_bits(),
+            "{label}: bit-identical final energy (sampler + RNG state restored)"
+        );
+        let same_centroids = r2
+            .centroids
+            .as_slice()
+            .iter()
+            .zip(full.centroids.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same_centroids, "{label}: bit-identical centroids");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn checkpoint_write_fault_sweep_never_tears_a_snapshot() {
+    let data = curve(31, 1500);
+    let make = |dir: Option<&PathBuf>, iters: usize| {
+        let mut b = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(8)
+            .threads(1)
+            .seed(13)
+            .max_iters(iters);
+        if let Some(dir) = dir {
+            b = b.checkpoint(CheckpointPolicy::new(dir, 1));
+        }
+        b.build().expect("valid request")
+    };
+    let full = {
+        let _quiesce = FaultPlan::new().install();
+        run(make(None, 600)).expect("reference run")
+    };
+    assert!(full.converged, "reference must converge");
+
+    for &seed in &seeds() {
+        let kind = match seed % 3 {
+            0 => FaultKind::Error,
+            1 => FaultKind::Panic,
+            _ => FaultKind::KillWorker,
+        };
+        // The site is hit twice per write (before the temp file, and
+        // between write and rename), so sweeping `skip` covers clean
+        // failures, torn temp files and kills in both windows across
+        // several checkpoints.
+        let skip = seed % 5;
+        let dir = tmp(&format!("fault_{seed}"));
+        {
+            let _plan = FaultPlan::new()
+                .fail_after(FaultSite::CheckpointWrite, kind, skip, 1)
+                .install();
+            let attempt = catch_unwind(AssertUnwindSafe(|| run(make(Some(&dir), 600))));
+            match attempt {
+                // A failed snapshot write aborts the run typed — never
+                // silently keeps going without durability.
+                Ok(Err(e)) => assert!(
+                    matches!(e, ClusterError::Snapshot { .. }),
+                    "seed {seed}: expected a typed snapshot error, got {e}"
+                ),
+                // Panic / kill kinds unwind through the solver.
+                Err(_) => assert!(
+                    kind != FaultKind::Error,
+                    "seed {seed}: an Error-kind fault must not panic"
+                ),
+                Ok(Ok(report)) => {
+                    panic!(
+                        "seed {seed}: the injected fault never fired \
+                         (converged={}, iters={})",
+                        report.converged, report.iterations
+                    )
+                }
+            }
+        }
+        // The contract under any of those failures: the directory loads
+        // clean — either no snapshot yet, or a complete valid one. A
+        // torn temp file left behind must be invisible.
+        let _quiesce = FaultPlan::new().install();
+        let snap = persist::load_snapshot(&dir)
+            .unwrap_or_else(|e| panic!("seed {seed}: partial snapshot surfaced: {e}"));
+        let had_snapshot = snap.is_some();
+        // And the retry lands exactly on the reference trajectory,
+        // whether it resumes from a kept snapshot or starts fresh.
+        let retried = run(make(Some(&dir), 600)).expect("retry after fault");
+        assert!(retried.converged, "seed {seed}: retry converges");
+        assert_eq!(
+            retried.iterations, full.iterations,
+            "seed {seed}: same trajectory (resumed from snapshot: {had_snapshot})"
+        );
+        assert_eq!(
+            retried.energy.to_bits(),
+            full.energy.to_bits(),
+            "seed {seed}: bit-identical final energy"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn snapshot_corruption_fuzz_is_typed_and_never_restarts_silently() {
+    let _quiesce = FaultPlan::new().install();
+    let dir = tmp("snap_fuzz");
+    let data = curve(41, 1200);
+    let make = |iters: usize, seed: u64| {
+        ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(6)
+            .threads(1)
+            .seed(seed)
+            .max_iters(iters)
+            .checkpoint(CheckpointPolicy::new(&dir, 1))
+            .build()
+            .expect("valid request")
+    };
+    // A capped run leaves a genuine mid-trajectory snapshot behind.
+    let r1 = run(make(3, 5)).expect("capped run");
+    assert!(!r1.converged);
+    let path = persist::snapshot_path(&dir);
+    let good = std::fs::read(&path).expect("snapshot bytes");
+    assert!(persist::load_snapshot(&dir).expect("valid snapshot").is_some());
+
+    // Single-byte corruption across the file: every mutation must be
+    // rejected typed (magic check or per-record CRC), never panic.
+    for i in (0..good.len()).step_by(7) {
+        let mut bad = good.clone();
+        bad[i] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        match persist::load_snapshot(&dir) {
+            Err(ClusterError::Snapshot { .. }) => {}
+            Err(other) => panic!("byte {i}: wrong error type: {other}"),
+            Ok(_) => panic!("byte {i}: corruption loaded as a valid snapshot"),
+        }
+    }
+    // Truncations — including a headerless stump and a torn tail.
+    for len in [0, 4, 8, 12, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..len]).unwrap();
+        assert!(
+            matches!(persist::load_snapshot(&dir), Err(ClusterError::Snapshot { .. })),
+            "truncation to {len} bytes must be rejected typed"
+        );
+    }
+    // Foreign magic (a journal file is not a snapshot).
+    let mut bad = good.clone();
+    bad[..8].copy_from_slice(persist::JOURNAL_MAGIC);
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(persist::load_snapshot(&dir), Err(ClusterError::Snapshot { .. })));
+
+    // End-to-end: a run pointed at a corrupt snapshot aborts typed — it
+    // must never silently restart from scratch over bad durable state.
+    std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+    match run(make(600, 5)) {
+        Err(ClusterError::Snapshot { .. }) => {}
+        other => panic!("corrupt resume point must abort typed, got ok={}", other.is_ok()),
+    }
+    // Same for a stale snapshot: a different seed means a different
+    // fingerprint, which is corruption from the resuming run's view.
+    std::fs::write(&path, &good).unwrap();
+    match run(make(600, 6)) {
+        Err(ClusterError::Snapshot { .. }) => {}
+        other => panic!("stale fingerprint must abort typed, got ok={}", other.is_ok()),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_corruption_fuzz_is_typed_never_panics() {
+    let _quiesce = FaultPlan::new().install();
+    let dir = tmp("shard_fuzz");
+    let path = dir.join("data.fv");
+    let mut rng = Pcg32::seed_from_u64(47);
+    let x = synth::gaussian_blobs(&mut rng, 400, 3, 4, 2.5, 0.3);
+    data::save_fvecs(&path, &x).expect("write shard");
+    let good = std::fs::read(&path).unwrap();
+    let streamed = |max_epochs: usize| {
+        let req = ClusterRequest::builder()
+            .shard(&path)
+            .k(4)
+            .engine(EngineKind::MiniBatch)
+            .chunk_size(64)
+            .threads(1)
+            .seed(3)
+            .max_iters(max_epochs)
+            .build()
+            .expect("valid request");
+        run(req)
+    };
+    assert!(streamed(3).is_ok(), "the intact shard streams fine");
+
+    let expect_data_err = |what: &str| match streamed(3) {
+        Err(ClusterError::Data { .. }) => {}
+        Err(other) => panic!("{what}: wrong error type: {other}"),
+        Ok(_) => panic!("{what}: corruption must not stream successfully"),
+    };
+    // Foreign magic.
+    let mut bad = good.clone();
+    bad[..8].copy_from_slice(b"NOTAFMT0");
+    std::fs::write(&path, &bad).unwrap();
+    expect_data_err("bad magic");
+    // Truncations: inside the header, and mid-row.
+    for len in [0, 7, 16, 24, good.len() - 5] {
+        std::fs::write(&path, &good[..len]).unwrap();
+        expect_data_err("truncation");
+    }
+    // Trailing bytes past the declared rows.
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 8]);
+    std::fs::write(&path, &bad).unwrap();
+    expect_data_err("trailing bytes");
+    // Header shape lies: row count inflated, and an empty shape.
+    let mut bad = good.clone();
+    bad[8..16].copy_from_slice(&(x.n() as u64 + 1).to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    expect_data_err("inflated row count");
+    let mut bad = good.clone();
+    bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    expect_data_err("empty shape");
+    // Structurally valid but numerically poisoned: a NaN payload cell is
+    // caught at chunk-read time, typed.
+    let mut bad = good.clone();
+    let cell = 24 + 17 * 8;
+    bad[cell..cell + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    expect_data_err("non-finite payload");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_recovery_resumes_from_snapshot_without_hung_handles() {
+    let _quiesce = FaultPlan::new().install();
+    let ck_dir = tmp("journal_ck");
+    let jr_dir = tmp("journal_wal");
+    let make = |iters: usize, checkpointed: bool| {
+        let mut b = ClusterRequest::builder()
+            .registry("HTRU2", 0.02)
+            .k(5)
+            .threads(1)
+            .seed(3)
+            .max_iters(iters);
+        if checkpointed {
+            b = b.checkpoint(CheckpointPolicy::new(&ck_dir, 1));
+        }
+        b.build().expect("valid request")
+    };
+    let reference = run(make(600, false)).expect("reference run");
+    assert!(reference.converged);
+    let cut = reference.iterations / 2;
+    assert!(cut >= 1, "need a multi-iteration run");
+
+    // "Crash": a capped run leaves its snapshot mid-trajectory, and the
+    // journal records the job as submitted + started but never completed
+    // — exactly what a killed serve process leaves on disk.
+    let r1 = run(make(cut, true)).expect("interrupted attempt");
+    assert!(!r1.converged);
+    {
+        let mut w = JournalWriter::open(&jr_dir).expect("journal opens");
+        w.append(&JournalEvent::Submitted {
+            job: 7,
+            spec: make(600, true).journal_spec(),
+        })
+        .unwrap();
+        w.append(&JournalEvent::Started { job: 7, attempt: 1 }).unwrap();
+    }
+
+    let coord = Coordinator::try_start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        journal_dir: Some(jr_dir.clone()),
+        ..CoordinatorConfig::default()
+    })
+    .expect("journaling coordinator starts");
+    let handles = coord.recover(&jr_dir).expect("recovery replays the journal");
+    assert_eq!(handles.len(), 1, "one incomplete job to re-enqueue");
+    // The recovered handle resolves — no hang — and the job picked up
+    // from the snapshot: its total iteration count matches the
+    // uninterrupted reference, not a from-scratch run plus the stub.
+    let result = handles.into_iter().next().expect("one handle").wait();
+    let out = result.outcome.expect("recovered job completes");
+    assert!(out.converged);
+    assert_eq!(
+        out.iterations, reference.iterations,
+        "recovery resumed mid-trajectory instead of restarting"
+    );
+    assert_eq!(coord.stats().recovered, 1);
+    coord.shutdown();
+
+    // After the drain every journaled record is closed: a second recovery
+    // pass would find nothing to do.
+    let events = persist::read_journal(&jr_dir).expect("journal reads back");
+    assert!(persist::incomplete_jobs(&events).is_empty());
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let _ = std::fs::remove_dir_all(&jr_dir);
+}
