@@ -1,0 +1,138 @@
+//! Model-lifecycle sweep: cold fit vs warm-start refresh, plus batch
+//! prediction throughput against the registered model, with the
+//! machine-readable trail in `BENCH_registry.json`.
+//!
+//! For each shape the harness cold-fits a model into a scratch
+//! [`aakm::ModelRegistry`], refreshes it on the *same* data (the paper's
+//! best-case regime — the iterate starts at the fixed point, so the
+//! refresh should converge in no more iterations than the cold fit, and
+//! for the full-batch engines in exactly one round trip), and then
+//! measures steady-state predict throughput (rows/sec) on the SIMD
+//! fused-argmin kernels with recycled prediction buffers.
+//!
+//! Set `PERF_REGISTRY_QUICK=1` for the CI smoke leg: smaller shapes, the
+//! same two-shape `BENCH_registry.json` (that is what CI asserts on).
+
+use aakm::config::{EngineKind, Precision};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
+use aakm::data::{synth, DataMatrix};
+use aakm::kmeans::{Workspace, WorkspaceSpec};
+use aakm::metrics::Stopwatch;
+use aakm::registry::{predict, ModelRegistry};
+use aakm::rng::Pcg32;
+use aakm::ClusterRequest;
+use std::sync::Arc;
+
+struct ShapeResult {
+    row: String,
+    warm_no_slower: bool,
+}
+
+fn run_shape(
+    coord: &Coordinator,
+    registry_dir: &std::path::Path,
+    name: &str,
+    x: Arc<DataMatrix>,
+    k: usize,
+) -> ShapeResult {
+    let builder = || {
+        ClusterRequest::builder()
+            .inline(Arc::clone(&x))
+            .k(k)
+            .seed(0x5EED)
+            .engine(EngineKind::Hamerly)
+            .threads(1)
+    };
+    // Cold fit: full solve from a k-means++ seeding, registered.
+    let fit = builder().fit_into(registry_dir, name).build().expect("fit request");
+    let cold = coord.submit(fit).expect("submit fit").wait();
+    let cold_out = cold.outcome.expect("cold fit");
+    let cold_ms = cold.service_time.as_secs_f64() * 1000.0;
+    // Warm refresh on unchanged data: seeded from the stored centroids.
+    let refresh = builder().refresh_model(registry_dir, name).build().expect("refresh");
+    let warm = coord.submit(refresh).expect("submit refresh").wait();
+    let warm_out = warm.outcome.expect("warm refresh");
+    let warm_ms = warm.service_time.as_secs_f64() * 1000.0;
+    let warm_no_slower = warm_out.iterations <= cold_out.iterations;
+
+    // Predict throughput: one cold call builds the kernel + buffers, then
+    // the measured reps rerun on recycled pools (the serving steady state).
+    let record = ModelRegistry::open(registry_dir)
+        .and_then(|r| r.load(name))
+        .expect("registered model loads");
+    let mut ws = Workspace::open(&WorkspaceSpec {
+        engine: EngineKind::Naive,
+        precision: Precision::F64,
+        threads: 1,
+        artifact_dir: None,
+    })
+    .expect("CPU workspace");
+    let p = predict(&record, &x, &mut ws).expect("cold predict");
+    ws.recycle_prediction(p.labels, p.distances);
+    let reps = 5;
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let p = predict(&record, &x, &mut ws).expect("warm predict");
+        ws.recycle_prediction(p.labels, p.distances);
+    }
+    let predict_secs = sw.seconds();
+    let rows_per_sec = (x.n() * reps) as f64 / predict_secs;
+
+    println!(
+        "{name:<16} cold: {} it ({cold_ms:.0} ms) | warm refresh: {} it \
+         ({warm_ms:.0} ms) | predict: {rows_per_sec:.3e} rows/s \
+         | warm_no_slower={warm_no_slower}",
+        cold_out.iterations, warm_out.iterations,
+    );
+    let row = format!(
+        "    {{\"shape\": \"{name}\", \"n\": {}, \"d\": {}, \"k\": {k}, \
+         \"cold\": {{\"iterations\": {}, \"ms\": {cold_ms:.2}}}, \
+         \"warm\": {{\"iterations\": {}, \"ms\": {warm_ms:.2}}}, \
+         \"predict_rows_per_sec\": {rows_per_sec:.3}, \
+         \"warm_no_slower\": {warm_no_slower}}}",
+        x.n(),
+        x.d(),
+        cold_out.iterations,
+        warm_out.iterations,
+    );
+    ShapeResult { row, warm_no_slower }
+}
+
+fn main() {
+    let quick = std::env::var("PERF_REGISTRY_QUICK").is_ok();
+    println!("## Model lifecycle — cold fit vs warm refresh vs predict (quick={quick})\n");
+    let registry_dir = std::env::temp_dir().join("aakm_perf_registry");
+    let _ = std::fs::remove_dir_all(&registry_dir);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 2,
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Pcg32::seed_from_u64(0x9E61);
+    let (n_blobs, n_curve) = if quick { (10_000, 8_000) } else { (60_000, 40_000) };
+    let blobs = Arc::new(synth::gaussian_blobs(&mut rng, n_blobs, 8, 16, 2.0, 0.4));
+    let curve = Arc::new(synth::noisy_curve(&mut rng, n_curve, 4, 0.3));
+    let results = vec![
+        run_shape(&coord, &registry_dir, "blobs", blobs, 16),
+        run_shape(&coord, &registry_dir, "curve", curve, 12),
+    ];
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&registry_dir);
+
+    let all_no_slower = results.iter().all(|r| r.warm_no_slower);
+    println!(
+        "\nwarm refresh converged in <= cold iterations on {} of {} shapes",
+        results.iter().filter(|r| r.warm_no_slower).count(),
+        results.len()
+    );
+    let rows: Vec<String> = results.into_iter().map(|r| r.row).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"perf_registry\",\n  \"quick\": {quick},\n  \
+         \"warm_no_slower_everywhere\": {all_no_slower},\n  \"shapes\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_registry.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_registry.json"),
+        Err(e) => println!("\ncould not write BENCH_registry.json: {e}"),
+    }
+}

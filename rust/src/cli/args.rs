@@ -11,8 +11,16 @@ pub struct Args {
 }
 
 /// Boolean flags the CLI understands (everything else expects a value).
-const BOOL_FLAGS: &[&str] =
-    &["compare", "trace", "verbose", "quiet", "center", "reseed-empty", "cpu-fallback"];
+const BOOL_FLAGS: &[&str] = &[
+    "compare",
+    "trace",
+    "verbose",
+    "quiet",
+    "center",
+    "reseed-empty",
+    "cpu-fallback",
+    "gc",
+];
 
 impl Args {
     /// Parse an argv slice (after the subcommand).

@@ -5,6 +5,11 @@
 //! * `run`     — one clustering experiment (paper method and/or baseline).
 //! * `datagen` — materialize a registry dataset to CSV / binary.
 //! * `serve`   — run the coordinator service on a synthetic job stream.
+//! * `fit`     — fit a model and register it in a model registry.
+//! * `predict` — batch-assign a dataset against a registered model.
+//! * `refresh` — re-cluster warm-started from a registered model.
+//! * `sweep`   — fit a ladder of k values, registering each model.
+//! * `models`  — list / delete / gc registered models.
 //! * `inspect` — show the AOT artifact manifest.
 //! * `help`    — usage.
 //!
@@ -83,6 +88,23 @@ COMMANDS:
                is recorded before it runs, and on startup incomplete
                jobs from a previous (crashed or interrupted) serve are
                re-enqueued and counted in the final stats line
+    fit      Fit a model and register it
+             --registry <dir> --model <id>  plus the `run` data/solver
+             flags (--dataset --k --engine --precision --accel --seed
+             --threads --scale --checkpoint-dir ...)
+    predict  Batch-assign a dataset against a registered model (no solver
+             run; served on the SIMD distance kernels)
+             --registry <dir> --model <id> --dataset <...> [--scale <s>]
+             --out <path.csv>   write per-sample `label,distance` rows
+    refresh  Re-cluster warm-started from a registered model and save it
+             back with a centroid-drift report (--k defaults to the
+             model's k); flags as `fit`
+    sweep    Fit a ladder of cluster counts over one dataset, sharing the
+             warm workspace and sample-norm cache, registering each model
+             as <id>-k<K>; prints the elbow table
+             --registry <dir> --model <base-id> --ks 2,4,8  plus run flags
+    models   List registered models
+             --registry <dir> [--delete <id>] [--gc]
     inspect  Print the artifact manifest
              --artifacts <dir>
     help     This message
@@ -105,6 +127,11 @@ pub fn dispatch(argv: &[&str]) -> Result<()> {
         "run" => cmd_run(&args),
         "datagen" => cmd_datagen(&args),
         "serve" => cmd_serve(&args),
+        "fit" => cmd_fit(&args, false),
+        "refresh" => cmd_fit(&args, true),
+        "predict" => cmd_predict(&args),
+        "sweep" => cmd_sweep(&args),
+        "models" => cmd_models(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -181,16 +208,16 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-/// Project an [`ExperimentConfig`] + pre-loaded data into the unified
-/// request shape (the single job description every layer consumes).
-fn request_from_experiment(
+/// Project an [`ExperimentConfig`] + pre-loaded data into a request
+/// builder (callers may still attach a model job before building).
+fn builder_from_experiment(
     cfg: &ExperimentConfig,
     source: crate::request::DataSource,
     trace: bool,
     artifacts: &str,
     checkpoint: Option<CheckpointPolicy>,
     reseed_empty: bool,
-) -> Result<ClusterRequest> {
+) -> crate::request::ClusterRequestBuilder {
     let mut builder = ClusterRequest::builder()
         .source(source)
         .k(cfg.k)
@@ -212,7 +239,20 @@ fn request_from_experiment(
     if let Some(policy) = checkpoint {
         builder = builder.checkpoint(policy);
     }
-    Ok(builder.build()?)
+    builder
+}
+
+/// Project an [`ExperimentConfig`] + pre-loaded data into the unified
+/// request shape (the single job description every layer consumes).
+fn request_from_experiment(
+    cfg: &ExperimentConfig,
+    source: crate::request::DataSource,
+    trace: bool,
+    artifacts: &str,
+    checkpoint: Option<CheckpointPolicy>,
+    reseed_empty: bool,
+) -> Result<ClusterRequest> {
+    Ok(builder_from_experiment(cfg, source, trace, artifacts, checkpoint, reseed_empty).build()?)
 }
 
 /// Parse `--checkpoint-dir` / `--checkpoint-every` into a policy.
@@ -540,6 +580,191 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run one model-lifecycle request through a single-worker coordinator —
+/// the same dispatch path `serve` uses, so fit/predict/refresh exercise
+/// the service plumbing (admission, journal hooks, retry classification)
+/// even from the CLI.
+fn run_model_request(request: ClusterRequest) -> Result<crate::coordinator::JobOutcome> {
+    let coord = Coordinator::try_start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 1,
+        ..CoordinatorConfig::default()
+    })?;
+    let handle = coord.submit(request)?;
+    let result = handle.wait();
+    coord.shutdown();
+    Ok(result.outcome?)
+}
+
+/// `fit` and `refresh` share one implementation: both run the solver and
+/// persist the converged model; refresh additionally warm-starts from the
+/// stored centroids and records a drift report.
+fn cmd_fit(args: &Args, refresh: bool) -> Result<()> {
+    use crate::request::DataSource;
+    let registry = args.get("registry").context("--registry required")?;
+    let model = args.get("model").context("--model required")?;
+    let mut cfg = experiment_from_args(args)?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    if refresh && args.get("k").is_none() {
+        // A refresh re-clusters at the model's own k unless overridden.
+        let rec = crate::registry::ModelRegistry::open(registry)?.load(model)?;
+        cfg.k = rec.centroids.n();
+    }
+    let x = load_dataset(&cfg.dataset, cfg.scale)?;
+    println!(
+        "{} model '{model}' on {} (n={}, d={}), k={}, engine={}, precision={}, seed={}",
+        if refresh { "refresh" } else { "fit" },
+        cfg.dataset,
+        x.n(),
+        x.d(),
+        cfg.k,
+        cfg.engine.name(),
+        cfg.precision.name(),
+        cfg.seed
+    );
+    let checkpoint = checkpoint_from_args(args)?;
+    let builder = builder_from_experiment(
+        &cfg,
+        DataSource::Inline(Arc::new(x)),
+        false,
+        artifacts,
+        checkpoint,
+        args.flag("reseed-empty"),
+    );
+    let builder = if refresh {
+        builder.refresh_model(registry, model)
+    } else {
+        builder.fit_into(registry, model)
+    };
+    let out = run_model_request(builder.build()?)?;
+    println!(
+        "registered '{model}': {} iters ({} accepted), energy {:.6e}, mse {:.6e}, converged={}",
+        out.iterations, out.accepted, out.energy, out.mse, out.converged
+    );
+    if let Some(d) = &out.drift {
+        println!(
+            "drift vs previous: max displacement {:.4e}, mean {:.4e}, energy {:.6e} -> {:.6e}",
+            d.max_displacement, d.mean_displacement, d.energy_before, d.energy_after
+        );
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let registry = args.get("registry").context("--registry required")?;
+    let model = args.get("model").context("--model required")?;
+    let cfg = experiment_from_args(args)?;
+    let x = load_dataset(&cfg.dataset, cfg.scale)?;
+    let n = x.n();
+    // k is irrelevant to serving (the model pins it) but the builder
+    // validates it; the naive engine keeps the workspace cheap — predict
+    // only uses its thread pool and kernel scratch.
+    let request = ClusterRequest::builder()
+        .inline(Arc::new(x))
+        .k(1)
+        .engine(EngineKind::Naive)
+        .threads(cfg.threads)
+        .predict_with(registry, model)
+        .build()?;
+    let out = run_model_request(request)?;
+    let p = out.prediction.context("predict jobs return a prediction")?;
+    println!(
+        "predicted {n} samples against '{model}' [{}]: energy {:.6e}, mse {:.6e}",
+        out.precision.name(),
+        out.energy,
+        out.mse
+    );
+    if let Some(path) = args.get("out") {
+        let mut s = String::with_capacity(p.labels.len() * 12 + 16);
+        s.push_str("label,distance\n");
+        for (l, d) in p.labels.iter().zip(&p.distances) {
+            s.push_str(&format!("{l},{d:.17e}\n"));
+        }
+        std::fs::write(path, s).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use crate::request::DataSource;
+    let registry = args.get("registry").context("--registry required")?;
+    let base_id = args.get("model").context("--model required")?;
+    let ks: Vec<usize> = args
+        .get("ks")
+        .context("--ks required (comma-separated cluster counts, e.g. 2,4,8)")?
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .context("--ks")?;
+    let cfg = experiment_from_args(args)?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let x = load_dataset(&cfg.dataset, cfg.scale)?;
+    println!(
+        "sweep '{base_id}' on {} (n={}, d={}) over k in {ks:?}, engine={}, seed={}",
+        cfg.dataset,
+        x.n(),
+        x.d(),
+        cfg.engine.name(),
+        cfg.seed
+    );
+    let base = builder_from_experiment(
+        &cfg,
+        DataSource::Inline(Arc::new(x)),
+        false,
+        artifacts,
+        None,
+        args.flag("reseed-empty"),
+    )
+    .build()?;
+    let reg = crate::registry::ModelRegistry::open(registry)?;
+    let report = crate::registry::sweep(&reg, &base, &ks, base_id)?;
+    print!("{}", report.table());
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let dir = args.get("registry").context("--registry required")?;
+    let reg = crate::registry::ModelRegistry::open(dir)?;
+    if let Some(id) = args.get("delete") {
+        println!(
+            "{}",
+            if reg.delete(id)? { "deleted" } else { "no such model" }
+        );
+        return Ok(());
+    }
+    if args.flag("gc") {
+        let removed = reg.gc()?;
+        println!("gc removed {} file(s)", removed.len());
+        for f in &removed {
+            println!("  {f}");
+        }
+        return Ok(());
+    }
+    let models = reg.list()?;
+    if models.is_empty() {
+        println!("no models registered in {dir}");
+        return Ok(());
+    }
+    println!(
+        "{:<24} {:>5} {:>4}  {:<9} {:<5} {:>9}  energy",
+        "model", "k", "d", "engine", "prec", "refreshes"
+    );
+    for m in &models {
+        println!(
+            "{:<24} {:>5} {:>4}  {:<9} {:<5} {:>9}  {:.6e}",
+            m.id,
+            m.k,
+            m.d,
+            m.engine,
+            m.precision.name(),
+            m.refreshes,
+            m.energy
+        );
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     let manifest = crate::runtime::Manifest::load(std::path::Path::new(dir))?;
@@ -711,6 +936,49 @@ mod tests {
         let events = crate::persist::read_journal(&dir).unwrap();
         assert!(!events.is_empty(), "serve must have journaled its jobs");
         assert!(crate::persist::incomplete_jobs(&events).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn model_lifecycle_fit_predict_refresh_sweep_models() {
+        let dir = std::env::temp_dir().join("aakm_cli_tests").join("registry");
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = dir.to_str().unwrap();
+        assert!(dispatch(&[
+            "fit", "--registry", reg, "--model", "m1", "--dataset", "Birch", "--scale",
+            "0.005", "--k", "4", "--threads", "1", "--seed", "7"
+        ])
+        .is_ok());
+        let out = dir.join("pred.csv");
+        assert!(dispatch(&[
+            "predict", "--registry", reg, "--model", "m1", "--dataset", "Birch", "--scale",
+            "0.005", "--out", out.to_str().unwrap()
+        ])
+        .is_ok());
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.starts_with("label,distance\n"));
+        assert!(text.lines().count() > 1, "one row per sample");
+        // Refresh without --k re-clusters at the model's own k.
+        assert!(dispatch(&[
+            "refresh", "--registry", reg, "--model", "m1", "--dataset", "Birch", "--scale",
+            "0.005", "--threads", "1", "--seed", "7"
+        ])
+        .is_ok());
+        assert!(dispatch(&[
+            "sweep", "--registry", reg, "--model", "lad", "--ks", "2,3", "--dataset",
+            "Birch", "--scale", "0.005", "--threads", "1"
+        ])
+        .is_ok());
+        assert!(dispatch(&["models", "--registry", reg]).is_ok());
+        assert!(dispatch(&["models", "--registry", reg, "--delete", "lad-k2"]).is_ok());
+        assert!(dispatch(&["models", "--registry", reg, "--gc"]).is_ok());
+        // Missing / bad inputs are loud, typed errors.
+        assert!(dispatch(&["fit", "--model", "x"]).is_err());
+        assert!(dispatch(&[
+            "predict", "--registry", reg, "--model", "absent", "--dataset", "Birch",
+            "--scale", "0.005"
+        ])
+        .is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -172,6 +172,14 @@ pub struct JobOutcome {
     /// runtime failed to load and which opted into `cpu_fallback`.
     pub degraded: Option<EngineKind>,
     pub centroids: DataMatrix,
+    /// Registered model id this job fitted, refreshed or served, when the
+    /// request carried a [`crate::request::ModelJob`].
+    pub model: Option<String>,
+    /// Batch inference output for predict jobs (`None` for fits).
+    pub prediction: Option<crate::registry::Prediction>,
+    /// Centroid-drift report for refresh jobs: how far the refreshed model
+    /// moved from the registered one it warm-started from.
+    pub drift: Option<crate::registry::DriftReport>,
 }
 
 #[cfg(test)]

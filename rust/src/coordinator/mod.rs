@@ -1004,6 +1004,15 @@ fn run_job(
     queue_wait: Duration,
 ) -> (Result<JobOutcome, ClusterError>, Option<Workspace>) {
     let mut request = request.with_service_defaults(cfg.solver_threads, &cfg.artifact_dir);
+    // Predict jobs never run the solver: the registered model is loaded
+    // and the batch is served straight off the (warm) workspace's kernel
+    // and buffer pools.
+    if request
+        .model_job()
+        .is_some_and(|j| j.kind == crate::request::ModelJobKind::Predict)
+    {
+        return run_predict_job(&request, warm);
+    }
     let deadline = request.time_limit();
     let mut queued_out = false;
     if let Some(limit) = deadline {
@@ -1070,6 +1079,8 @@ fn run_job(
     };
     let precision = session.request().precision();
     let engine = session.request().engine();
+    let model_job = session.request().model_job().cloned();
+    let fit_request = model_job.as_ref().map(|_| session.request().clone());
     let mut ws = session.into_workspace();
     // Recycle the report buffers the outcome does not keep, so the warm
     // workspace serves same-spec job streams allocation-free — the
@@ -1088,6 +1099,25 @@ fn run_job(
         } else {
             Some(DeadlinePhase::Solver)
         };
+        // Fit and refresh jobs persist the converged model *before* the
+        // report buffers are recycled (the per-cluster counts read the
+        // assignment). A failed registry write is a Snapshot error —
+        // retryable I/O under a RetryPolicy.
+        let mut model = None;
+        let mut drift = None;
+        if let Some(job) = &model_job {
+            let req = fit_request.as_ref().expect("model jobs keep their request");
+            match persist_model(job, req, &report) {
+                Ok((id, d)) => {
+                    model = Some(id);
+                    drift = d;
+                }
+                Err(e) => {
+                    ws.recycle(report);
+                    return (Err(e), Some(ws));
+                }
+            }
+        }
         let crate::kmeans::RunReport {
             iterations,
             accepted,
@@ -1116,9 +1146,93 @@ fn run_job(
             attempt_errors: Vec::new(),
             degraded,
             centroids,
+            model,
+            prediction: None,
+            drift,
         })
     };
     (outcome, Some(ws))
+}
+
+/// Serve a predict job: load the registered model and batch-assign the
+/// request's source against it on the worker's warm workspace. No solver
+/// run — the outcome reports zero iterations and the batch energy.
+fn run_predict_job(
+    request: &ClusterRequest,
+    warm: Option<Workspace>,
+) -> (Result<JobOutcome, ClusterError>, Option<Workspace>) {
+    let job = request.model_job().expect("predict path requires a model job").clone();
+    let spec = request.workspace_spec();
+    let mut ws = match warm {
+        Some(w) if w.matches(&spec) => w,
+        _ => match Workspace::open(&spec) {
+            Ok(w) => w,
+            Err(e) => return (Err(e), None),
+        },
+    };
+    let outcome = (|| {
+        let record = crate::registry::ModelRegistry::open(&job.registry)?.load(&job.model)?;
+        let x = request.source().materialize()?;
+        let prediction = crate::registry::predict(&record, &x, &mut ws)?;
+        let energy = prediction.energy();
+        Ok(JobOutcome {
+            iterations: 0,
+            accepted: 0,
+            energy,
+            mse: energy / x.n() as f64,
+            converged: true,
+            precision: record.precision,
+            engine: request.engine(),
+            timed_out: None,
+            attempts: 1,
+            attempt_errors: Vec::new(),
+            degraded: None,
+            centroids: record.centroids.clone(),
+            model: Some(record.id),
+            prediction: Some(prediction),
+            drift: None,
+        })
+    })();
+    (outcome, Some(ws))
+}
+
+/// Persist a fit/refresh job's converged model into its registry. Returns
+/// the registered id plus, for refreshes, the drift of the new centroids
+/// against the record the run warm-started from.
+fn persist_model(
+    job: &crate::request::ModelJob,
+    request: &ClusterRequest,
+    report: &crate::kmeans::RunReport,
+) -> Result<(String, Option<crate::registry::DriftReport>), ClusterError> {
+    use crate::registry::{self, ModelMetrics, ModelRecord, ModelRegistry};
+    let reg = ModelRegistry::open(&job.registry)?;
+    let previous = match job.kind {
+        crate::request::ModelJobKind::Refresh => Some(reg.load(&job.model)?),
+        _ => None,
+    };
+    let drift = previous.as_ref().and_then(|old| {
+        registry::drift_between(&old.centroids, &report.centroids, old.metrics.energy, report.energy)
+    });
+    let record = ModelRecord {
+        id: job.model.clone(),
+        fingerprint: registry::request_fingerprint(request, report.centroids.d()),
+        engine: request.engine().name().to_string(),
+        precision: request.precision(),
+        seed: request.seed(),
+        refreshes: previous.as_ref().map_or(0, |p| p.refreshes + 1),
+        centroids: report.centroids.clone(),
+        metrics: ModelMetrics {
+            energy: report.energy,
+            mse: report.mse,
+            iterations: report.iterations as u64,
+            accepted: report.accepted as u64,
+            seconds: report.seconds,
+            cluster_counts: registry::cluster_counts(&report.assignment, report.centroids.n()),
+        },
+        drift,
+    };
+    reg.save(&record)?;
+    Ok((record.id, drift))
 }
 
 #[cfg(test)]

@@ -13,7 +13,11 @@
 //!   fixed-point driver loop,
 //! * [`FaultSite::CheckpointWrite`] — a durable snapshot write in
 //!   [`crate::persist`] (clean failure, torn temp file, or a kill between
-//!   the write and the atomic rename).
+//!   the write and the atomic rename),
+//! * [`FaultSite::RegistryWrite`] — a model-registry save in
+//!   [`crate::registry`], with the same two write windows as
+//!   `CheckpointWrite` (the registry reuses the atomic
+//!   temp-write-fsync-rename discipline).
 //!
 //! A [`FaultPlan`] describes *when* each site fires and *how*
 //! ([`FaultKind`]): a typed error, an ordinary panic (caught by the
@@ -54,6 +58,13 @@ pub enum FaultSite {
     /// prefix, a kill dies with the rename never performed) — so a plan can
     /// target either window.
     CheckpointWrite,
+    /// A model-registry save (`registry::ModelRegistry::save`). Like
+    /// `CheckpointWrite`, the site is hit twice per save — before the temp
+    /// file is written and between the write and the atomic rename (an
+    /// error there truncates the temp file to a torn prefix) — so a
+    /// previously registered model always survives an injected failure
+    /// intact.
+    RegistryWrite,
 }
 
 /// How an armed site fails when it fires.
@@ -260,6 +271,10 @@ fn injected_error(site: FaultSite) -> ClusterError {
         FaultSite::CheckpointWrite => ClusterError::Snapshot {
             path: "fault-injection".to_string(),
             reason: "injected checkpoint-write failure".to_string(),
+        },
+        FaultSite::RegistryWrite => ClusterError::Snapshot {
+            path: "fault-injection".to_string(),
+            reason: "injected registry-write failure".to_string(),
         },
     }
 }

@@ -19,6 +19,7 @@ use crate::config::{EngineKind, Precision, SolverConfig};
 use crate::data::DataMatrix;
 use crate::error::ClusterError;
 use crate::kmeans::RunReport;
+use crate::linalg::DistanceKernel;
 use crate::lloyd::{self, Assignment, AssignmentEngine};
 use crate::par::ThreadPool;
 use std::path::PathBuf;
@@ -79,6 +80,9 @@ pub(crate) struct Scratch {
     /// Per-lane accumulators for the update-step reduces (persist across
     /// runs; the last per-iteration allocator transients lived here).
     update: lloyd::UpdateScratch,
+    /// Inference kernel for [`crate::registry::predict`], cached with the
+    /// precision it was built at so warm predicts reuse its norm caches.
+    predict_kernel: Option<(Precision, DistanceKernel)>,
     /// Whether the last run had to (re)allocate internal scratch.
     rebuilt: bool,
     runs: u64,
@@ -163,6 +167,13 @@ impl Workspace {
         let RunReport { centroids, assignment, energy_trace, m_trace, .. } = report;
         self.scratch.spare_centroids.push(centroids);
         self.recycle_buffers(assignment, energy_trace, m_trace);
+    }
+
+    /// Return a finished [`crate::registry::Prediction`]'s buffers so the
+    /// next same-shape predict on this workspace is allocation-free.
+    pub fn recycle_prediction(&mut self, labels: Assignment, distances: Vec<f64>) {
+        self.scratch.put_assign(labels);
+        self.scratch.put_trace_f64(distances);
     }
 
     /// Recycle the non-centroid output buffers of a finished run — for
@@ -283,6 +294,21 @@ impl Scratch {
     /// Return the update-reduce lane accumulators.
     pub(crate) fn put_update(&mut self, update: lloyd::UpdateScratch) {
         self.update = update;
+    }
+
+    /// Take the inference kernel for `precision` (a cached one at another
+    /// precision is discarded — registries mixing precisions per model pay
+    /// one rebuild per switch, never a wrong-precision sweep).
+    pub(crate) fn take_predict_kernel(&mut self, precision: Precision) -> DistanceKernel {
+        match self.predict_kernel.take() {
+            Some((p, kernel)) if p == precision => kernel,
+            _ => DistanceKernel::with_precision(precision),
+        }
+    }
+
+    /// Return the inference kernel (with the precision it serves).
+    pub(crate) fn put_predict_kernel(&mut self, precision: Precision, kernel: DistanceKernel) {
+        self.predict_kernel = Some((precision, kernel));
     }
 
     /// Take a cleared `f64` trace buffer.

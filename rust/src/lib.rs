@@ -68,6 +68,14 @@
 //! solver write crash-safe `AAKMCK01` snapshots it can resume from
 //! bit-identically, and a journaled coordinator replays its write-ahead
 //! job log on restart to re-enqueue incomplete jobs.
+//!
+//! Fitted clusterings persist as *models* in a [`registry::ModelRegistry`]:
+//! `fit` registers the converged centroids (with quality metrics and a
+//! request fingerprint), `predict` batch-assigns new samples against a
+//! registered model on the SIMD distance kernels, and `refresh` re-clusters
+//! drifted data warm-started from the stored centroids — the paper's
+//! best-case regime for Anderson acceleration, since the iterate starts
+//! near the fixed point — recording a centroid-drift report on the model.
 
 // Kernel-style numeric code throughout this crate indexes several parallel
 // arrays per loop; rewriting those loops as iterator chains would obscure
@@ -91,6 +99,7 @@ pub mod metrics;
 pub mod observe;
 pub mod par;
 pub mod persist;
+pub mod registry;
 pub mod request;
 pub mod rng;
 pub mod runtime;
@@ -99,7 +108,8 @@ pub mod stream;
 
 pub use error::ClusterError;
 pub use observe::{CancelToken, Observer};
-pub use request::{ClusterRequest, DataSource, InitSpec};
+pub use registry::ModelRegistry;
+pub use request::{ClusterRequest, DataSource, InitSpec, ModelJob, ModelJobKind};
 pub use session::ClusterSession;
 
 /// Crate-wide result alias (internal plumbing; the public request/session

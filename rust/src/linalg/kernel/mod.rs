@@ -75,9 +75,11 @@
 //! never copied by `clone`, and every `&mut` accessor bumps the count — so,
 //! unlike the buffer pointer this cache used to key on, a
 //! freed-and-reallocated matrix at the same address, or an in-place
-//! mutation, can never alias a stale cache entry.
-//! [`DistanceKernel::invalidate`] remains as a belt-and-braces reset used
-//! by the engines.
+//! mutation, can never alias a stale cache entry. Because the stamp alone
+//! proves validity, engine `reset()` keeps the cache alive across runs:
+//! a same-data rerun at a different `k` (a multi-k sweep, a warm-start
+//! refresh) skips the O(N·d) norm pass entirely.
+//! [`DistanceKernel::invalidate`] remains for explicit cold starts.
 
 pub mod scalar;
 pub mod simd;
@@ -167,6 +169,10 @@ pub struct DistanceKernel {
     x32: Vec<f32>,
     /// f32 centroid mirror (F32 precision only; refreshed per `prepare`).
     c32: Vec<f32>,
+    /// How many times the sample-norm pass (the O(N·d) side of `prepare`)
+    /// actually ran — the observable for "same-data reruns reuse the
+    /// cache" regression tests.
+    norm_builds: u64,
 }
 
 impl Default for DistanceKernel {
@@ -203,6 +209,7 @@ impl DistanceKernel {
             c_norms: Vec::new(),
             x32: Vec::new(),
             c32: Vec::new(),
+            norm_builds: 0,
         }
     }
 
@@ -224,6 +231,7 @@ impl DistanceKernel {
     pub fn prepare(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool) {
         let key = (x.generation(), x.n(), x.d());
         if self.x_key != Some(key) {
+            self.norm_builds += 1;
             let d = x.d();
             self.x_norms.clear();
             self.x_norms.resize(x.n(), 0.0);
@@ -277,9 +285,19 @@ impl DistanceKernel {
         }
     }
 
-    /// Drop the cached sample norms (engines call this from `reset`).
+    /// Drop the cached sample norms. Engines no longer call this from
+    /// `reset` — the generation-stamp key already proves cache validity,
+    /// so same-data reruns (a different `k`, a multi-k sweep, a warm
+    /// re-clustering) skip the O(N·d) norm pass — but it remains for
+    /// callers that want an explicit cold start.
     pub fn invalidate(&mut self) {
         self.x_key = None;
+    }
+
+    /// How many times the O(N·d) sample-norm pass has run over this
+    /// kernel's lifetime. A warm same-data rerun must not grow this.
+    pub fn norm_builds(&self) -> u64 {
+        self.norm_builds
     }
 
     /// Centroid rows per cache tile: as many as fit the L1 budget, rounded

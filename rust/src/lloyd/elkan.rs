@@ -217,8 +217,9 @@ impl AssignmentEngine for ElkanEngine {
     }
 
     fn reset(&mut self) {
-        self.kernel.invalidate();
-        // Keep the buffers (capacity) but mark the state unusable.
+        // Keep the buffers (capacity) but mark the bound state unusable.
+        // The kernel's sample-norm cache stays: it is keyed on the data's
+        // generation stamp, so same-data reruns skip the norm pass.
         self.prev_valid = false;
         self.upper.clear();
         self.lower.clear();

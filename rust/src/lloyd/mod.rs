@@ -46,7 +46,11 @@ pub trait AssignmentEngine {
     /// is what lets the paper reuse them for accelerated iterates.
     fn assign(&mut self, x: &DataMatrix, c: &DataMatrix, pool: &ThreadPool, out: &mut Assignment);
 
-    /// Forget all cached bound state.
+    /// Forget all cached bound state. Norm caches keyed by the data's
+    /// generation stamp ([`crate::linalg::DistanceKernel`]) survive a
+    /// reset — the stamp already proves their validity — so a same-data
+    /// rerun at a different `k` (multi-k sweeps, warm-start refreshes)
+    /// skips the O(N·d) sample-norm pass.
     fn reset(&mut self);
 
     /// Number of full point–centroid distance evaluations since creation

@@ -51,7 +51,9 @@ impl AssignmentEngine for NaiveEngine {
     }
 
     fn reset(&mut self) {
-        self.kernel.invalidate();
+        // The kernel's sample-norm cache is keyed on the data's
+        // generation stamp, so it survives the reset: a same-data rerun
+        // (different k, warm-start refresh) skips the O(N·d) norm pass.
     }
 
     fn distance_evals(&self) -> u64 {
@@ -67,6 +69,26 @@ mod tests {
     #[test]
     fn matches_brute_force() {
         engine_matches_brute_force(&mut NaiveEngine::new());
+    }
+
+    #[test]
+    fn norm_cache_survives_reset_on_same_data() {
+        let mut e = NaiveEngine::new();
+        let pool = ThreadPool::new(1);
+        let x = DataMatrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0], &[2.0, 2.0]]);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0], &[2.0, 2.0]]);
+        let mut out = Assignment::new();
+        e.assign(&x, &c, &pool, &mut out);
+        assert_eq!(e.kernel.norm_builds(), 1);
+        e.reset();
+        // Same data (same generation stamp) after a reset: the cached
+        // sample norms are still keyed correctly and must not rebuild.
+        e.assign(&x, &c, &pool, &mut out);
+        assert_eq!(e.kernel.norm_builds(), 1);
+        // Different data forces a rebuild.
+        let y = DataMatrix::from_rows(&[&[5.0, 5.0], &[6.0, 6.0]]);
+        e.assign(&y, &c, &pool, &mut out);
+        assert_eq!(e.kernel.norm_builds(), 2);
     }
 
     #[test]

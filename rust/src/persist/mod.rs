@@ -101,7 +101,7 @@ const CRC_TABLE: [u32; 256] = {
 };
 
 /// CRC-32 over a concatenation of byte slices (streamed, no joining).
-fn crc32_parts(parts: &[&[u8]]) -> u32 {
+pub(crate) fn crc32_parts(parts: &[&[u8]]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
     for part in parts {
         for &b in *part {
@@ -129,7 +129,7 @@ const TAG_JOB_SUBMITTED: u32 = 0x10;
 const TAG_JOB_STARTED: u32 = 0x11;
 const TAG_JOB_COMPLETED: u32 = 0x12;
 
-fn push_record(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+pub(crate) fn push_record(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
     let tag_b = tag.to_le_bytes();
     let len_b = (payload.len() as u64).to_le_bytes();
     let crc = crc32_parts(&[&tag_b, &len_b, payload]);
@@ -140,13 +140,16 @@ fn push_record(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
 }
 
 /// One parsed `(tag, payload)` record.
-type RawRecord<'a> = (u32, &'a [u8]);
+pub(crate) type RawRecord<'a> = (u32, &'a [u8]);
 
 /// Parse the record stream after the magic. `strict` (snapshots)
 /// rejects any malformed byte; lenient mode (journals) stops at the
 /// first malformed record and returns the valid prefix — the torn tail
 /// an append-only log accumulates when the process dies mid-append.
-fn parse_records<'a>(mut bytes: &'a [u8], strict: bool) -> Result<Vec<RawRecord<'a>>, String> {
+pub(crate) fn parse_records<'a>(
+    mut bytes: &'a [u8],
+    strict: bool,
+) -> Result<Vec<RawRecord<'a>>, String> {
     let mut records = Vec::new();
     while !bytes.is_empty() {
         if bytes.len() < 12 {
@@ -200,57 +203,64 @@ fn parse_records<'a>(mut bytes: &'a [u8], strict: bool) -> Result<Vec<RawRecord<
 // ---------------------------------------------------------------------
 
 #[derive(Default)]
-struct Enc {
-    buf: Vec<u8>,
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Enc {
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.u64(v.to_bits());
     }
 
-    fn boolean(&mut self, v: bool) {
+    pub(crate) fn boolean(&mut self, v: bool) {
         self.buf.push(v as u8);
     }
 
-    fn f64s(&mut self, v: &[f64]) {
+    pub(crate) fn f64s(&mut self, v: &[f64]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.f64(x);
         }
     }
 
-    fn u32s(&mut self, v: &[u32]) {
+    pub(crate) fn u32s(&mut self, v: &[u32]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.u32(x);
         }
     }
 
-    fn str(&mut self, s: &str) {
+    pub(crate) fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
     }
 }
 
-struct Dec<'a> {
+pub(crate) struct Dec<'a> {
     buf: &'a [u8],
 }
 
 impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         if self.buf.len() < n {
             return Err(format!("payload truncated: wanted {n} bytes, {} left", self.buf.len()));
         }
@@ -259,19 +269,19 @@ impl<'a> Dec<'a> {
         Ok(head)
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    fn f64(&mut self) -> Result<f64, String> {
+    pub(crate) fn f64(&mut self) -> Result<f64, String> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    fn boolean(&mut self) -> Result<bool, String> {
+    pub(crate) fn boolean(&mut self) -> Result<bool, String> {
         match self.take(1)?[0] {
             0 => Ok(false),
             1 => Ok(true),
@@ -282,7 +292,7 @@ impl<'a> Dec<'a> {
     /// Length-prefixed `f64` vector; the declared length is bounded by
     /// the remaining payload before allocating, so a corrupt length
     /// cannot request an absurd allocation.
-    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>, String> {
         let len = self.u64()? as usize;
         if len.checked_mul(8).is_none_or(|b| b > self.buf.len()) {
             return Err(format!("f64 vector declares {len} items past the payload end"));
@@ -290,7 +300,7 @@ impl<'a> Dec<'a> {
         (0..len).map(|_| self.f64()).collect()
     }
 
-    fn u32s(&mut self) -> Result<Vec<u32>, String> {
+    pub(crate) fn u32s(&mut self) -> Result<Vec<u32>, String> {
         let len = self.u64()? as usize;
         if len.checked_mul(4).is_none_or(|b| b > self.buf.len()) {
             return Err(format!("u32 vector declares {len} items past the payload end"));
@@ -298,7 +308,18 @@ impl<'a> Dec<'a> {
         (0..len).map(|_| self.u32()).collect()
     }
 
-    fn str(&mut self) -> Result<String, String> {
+    /// Length-prefixed `u64` vector, with the same declared-length bound
+    /// as [`Dec::f64s`] so a corrupt length cannot request an absurd
+    /// allocation (used by the model registry's per-cluster counts).
+    pub(crate) fn u64s(&mut self) -> Result<Vec<u64>, String> {
+        let len = self.u64()? as usize;
+        if len.checked_mul(8).is_none_or(|b| b > self.buf.len()) {
+            return Err(format!("u64 vector declares {len} items past the payload end"));
+        }
+        (0..len).map(|_| self.u64()).collect()
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String, String> {
         let len = self.u64()? as usize;
         if len > self.buf.len() {
             return Err(format!("string declares {len} bytes past the payload end"));
@@ -306,7 +327,7 @@ impl<'a> Dec<'a> {
         String::from_utf8(self.take(len)?.to_vec()).map_err(|e| format!("bad utf-8: {e}"))
     }
 
-    fn done(&self) -> Result<(), String> {
+    pub(crate) fn done(&self) -> Result<(), String> {
         if self.buf.is_empty() {
             Ok(())
         } else {

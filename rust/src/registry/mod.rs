@@ -1,0 +1,711 @@
+//! Model registry — fitted k-means models as durable, servable artifacts.
+//!
+//! A clustering run's product is its centroid set, but until now that
+//! product evaporated with the process: serving assignments or warm-starting
+//! a re-fit meant re-running the solver. The registry closes the
+//! fit/serve/refresh lifecycle the paper's warm-start observation begs for
+//! (Anderson acceleration is at its best when seeded near a fixed point):
+//!
+//! - [`ModelRegistry`] persists fitted models in the versioned `AAKMMR01`
+//!   format — centroids, precision, request fingerprint, seed and quality
+//!   metrics (final energy, iterations, wall time, per-cluster counts) —
+//!   addressable by model id with list / get / delete / gc. Writes reuse the
+//!   checkpoint discipline of [`crate::persist`]: temp file, fsync, atomic
+//!   rename, CRC-framed records — a crash (or an injected
+//!   [`crate::fault::FaultSite::RegistryWrite`] fault) at any point leaves
+//!   the previously registered model intact.
+//! - [`predict`] assigns a batch of samples to a loaded model's nearest
+//!   centroids on the SIMD fused-argmin kernel — zero allocations on warm
+//!   [`crate::kmeans::Workspace`] reruns — returning labels plus per-sample
+//!   squared distances.
+//! - `InitSpec::WarmStart` (see [`crate::request::InitSpec`]) seeds any
+//!   engine from registry centroids; a refresh records a [`DriftReport`]
+//!   (energy delta, centroid displacement) back onto the model.
+//! - [`sweep`] fits a ladder of k values over one materialized source,
+//!   sharing the sample-norm cache and the workspace across fits, registers
+//!   every model and reports an elbow table.
+//!
+//! Corruption never panics and never yields a silently wrong model: every
+//! record is CRC-framed, decode is strict (duplicate / missing / misshapen
+//! records are typed errors), and a loaded record must name the id it was
+//! requested by — a renamed or misplaced file is rejected as stale.
+
+mod predict;
+mod sweep;
+
+pub use predict::{predict, Prediction};
+pub use sweep::{sweep, ElbowRow, SweepReport};
+
+use crate::config::Precision;
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::persist::{parse_records, push_record, Dec, Enc};
+use crate::request::ClusterRequest;
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of a registry model file (format version 01).
+pub const MODEL_MAGIC: &[u8; 8] = b"AAKMMR01";
+
+/// File suffix of a registered model.
+const MODEL_EXT: &str = "aakm";
+
+const TAG_META: u32 = 1;
+const TAG_CENTROIDS: u32 = 2;
+const TAG_METRICS: u32 = 3;
+const TAG_DRIFT: u32 = 4;
+const TAG_END: u32 = 0xFFFF_FFFF;
+
+/// Quality metrics captured when a model is fitted (or refreshed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMetrics {
+    /// Final clustering energy (sum of squared distances).
+    pub energy: f64,
+    /// Energy normalized per sample.
+    pub mse: f64,
+    /// Solver iterations of the fitting run.
+    pub iterations: u64,
+    /// Accepted (non-rejected) Anderson steps.
+    pub accepted: u64,
+    /// Fitting wall time in seconds.
+    pub seconds: f64,
+    /// Samples per cluster at convergence; empty when the fitting run
+    /// carried no resident assignment (streamed mini-batch sources).
+    pub cluster_counts: Vec<u64>,
+}
+
+/// What a refresh did to a model: recorded on the record so `models` can
+/// show how far a re-fit moved from the previous centroids.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftReport {
+    /// Energy of the model before the refresh.
+    pub energy_before: f64,
+    /// Energy after the refresh.
+    pub energy_after: f64,
+    /// Largest per-centroid displacement (Euclidean).
+    pub max_displacement: f64,
+    /// Mean per-centroid displacement.
+    pub mean_displacement: f64,
+}
+
+/// One fitted model: everything needed to serve predictions or warm-start
+/// a re-fit.
+#[derive(Debug, Clone)]
+pub struct ModelRecord {
+    /// Registry-unique id (see [`validate_model_id`]).
+    pub id: String,
+    /// Fingerprint of the fitting request (see [`request_fingerprint`]).
+    pub fingerprint: String,
+    /// Engine that fitted the model (canonical name).
+    pub engine: String,
+    /// Kernel precision the model was fitted at.
+    pub precision: Precision,
+    /// RNG seed of the fitting request.
+    pub seed: u64,
+    /// How many refreshes this model has absorbed.
+    pub refreshes: u64,
+    /// The `k × d` centroid set.
+    pub centroids: DataMatrix,
+    /// Quality metrics of the most recent fit/refresh.
+    pub metrics: ModelMetrics,
+    /// Drift of the most recent refresh, if any.
+    pub drift: Option<DriftReport>,
+}
+
+/// One row of [`ModelRegistry::list`].
+#[derive(Debug, Clone)]
+pub struct ModelSummary {
+    /// Model id.
+    pub id: String,
+    /// Cluster count.
+    pub k: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Fitting engine name.
+    pub engine: String,
+    /// Kernel precision.
+    pub precision: Precision,
+    /// Final energy.
+    pub energy: f64,
+    /// Refresh count.
+    pub refreshes: u64,
+}
+
+/// Validate a model id: non-empty, at most 128 characters, ASCII
+/// alphanumerics plus `-`/`_`/`.`, not starting with a dot (ids double as
+/// file stems, so a leading dot would hide the model from `list`).
+pub fn validate_model_id(id: &str) -> Result<(), ClusterError> {
+    if id.is_empty() {
+        return Err(ClusterError::invalid("model", "model id must be non-empty"));
+    }
+    if id.len() > 128 {
+        return Err(ClusterError::invalid(
+            "model",
+            format!("model id is {} characters (max 128)", id.len()),
+        ));
+    }
+    if id.starts_with('.') {
+        return Err(ClusterError::invalid("model", "model id must not start with '.'"));
+    }
+    if let Some(c) =
+        id.chars().find(|c| !(c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')))
+    {
+        return Err(ClusterError::invalid(
+            "model",
+            format!("model id contains '{c}' (allowed: alphanumerics, '-', '_', '.')"),
+        ));
+    }
+    Ok(())
+}
+
+/// The fingerprint a fitted model records: the request facts that define
+/// what the centroids *are* (shape, seed, engine, precision, acceleration)
+/// — budgets and init are excluded, since two runs differing only there
+/// still describe the same model family.
+pub fn request_fingerprint(req: &ClusterRequest, d: usize) -> String {
+    format!(
+        "aakm-model-v1 k={} d={} seed={} engine={} precision={} accel={}",
+        req.k(),
+        d,
+        req.seed(),
+        req.engine().name(),
+        req.precision().name(),
+        req.accel().label()
+    )
+}
+
+/// Per-cluster sample counts from a resident assignment (empty in, empty
+/// out — streamed runs carry no assignment). Out-of-range labels are
+/// ignored rather than panicking: the counts are metrics, not invariants.
+pub(crate) fn cluster_counts(assignment: &[u32], k: usize) -> Vec<u64> {
+    if assignment.is_empty() {
+        return Vec::new();
+    }
+    let mut counts = vec![0u64; k];
+    for &a in assignment {
+        if let Some(c) = counts.get_mut(a as usize) {
+            *c += 1;
+        }
+    }
+    counts
+}
+
+/// Drift between two same-shape centroid sets (`None` on shape mismatch —
+/// a refresh that changed k has no per-centroid correspondence).
+pub fn drift_between(
+    before: &DataMatrix,
+    after: &DataMatrix,
+    energy_before: f64,
+    energy_after: f64,
+) -> Option<DriftReport> {
+    if before.n() != after.n() || before.d() != after.d() || before.n() == 0 {
+        return None;
+    }
+    let mut max_displacement = 0.0f64;
+    let mut sum = 0.0f64;
+    for j in 0..before.n() {
+        let dj = crate::linalg::dist_sq(before.row(j), after.row(j)).sqrt();
+        max_displacement = max_displacement.max(dj);
+        sum += dj;
+    }
+    Some(DriftReport {
+        energy_before,
+        energy_after,
+        max_displacement,
+        mean_displacement: sum / before.n() as f64,
+    })
+}
+
+/// A directory of fitted models, one `<id>.aakm` file per model.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    dir: PathBuf,
+}
+
+impl ModelRegistry {
+    /// Open (creating if needed) the registry at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self, ClusterError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(|e| ClusterError::Snapshot {
+            path: dir.display().to_string(),
+            reason: format!("create registry dir: {e}"),
+        })?;
+        Ok(Self { dir })
+    }
+
+    /// The registry directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Where a model id lives on disk.
+    pub fn model_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.{MODEL_EXT}"))
+    }
+
+    /// Persist `record` durably: serialize, write to a temp file, fsync,
+    /// atomically rename over any previous version of the model. A crash
+    /// (or an injected [`crate::fault::FaultSite::RegistryWrite`] fault) at
+    /// any point leaves either the old complete record or the new complete
+    /// record on disk — never a torn one.
+    pub fn save(&self, record: &ModelRecord) -> Result<PathBuf, ClusterError> {
+        validate_model_id(&record.id)?;
+        let path = self.model_path(&record.id);
+        let fail = |reason: String| ClusterError::Snapshot {
+            path: path.display().to_string(),
+            reason,
+        };
+        // Fault window 1: a clean write failure before any bytes land.
+        crate::fault::check(crate::fault::FaultSite::RegistryWrite)
+            .map_err(|e| fail(format!("write failed: {e}")))?;
+        let bytes = encode_model(record);
+        let tmp = self.dir.join(format!("{}.{MODEL_EXT}.tmp", record.id));
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::File::create(&tmp).map_err(|e| fail(format!("create temp: {e}")))?;
+            f.write_all(&bytes).map_err(|e| fail(format!("write temp: {e}")))?;
+            f.sync_all().map_err(|e| fail(format!("sync temp: {e}")))?;
+        }
+        // Fault window 2: between the write and the rename. An injected
+        // error truncates the temp file to a torn prefix (what a real crash
+        // mid-write leaves) and keeps the previous record in place; an
+        // injected kill unwinds with the rename never performed.
+        if let Err(e) = crate::fault::check(crate::fault::FaultSite::RegistryWrite) {
+            let _ = std::fs::File::options()
+                .write(true)
+                .open(&tmp)
+                .and_then(|f| f.set_len(bytes.len() as u64 / 2));
+            return Err(fail(format!("write failed before rename: {e}")));
+        }
+        std::fs::rename(&tmp, &path).map_err(|e| fail(format!("rename: {e}")))?;
+        // Make the rename itself durable (best-effort: not all platforms
+        // support fsync on directories).
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(path)
+    }
+
+    /// Load a model by id. A missing model is a deterministic
+    /// [`ClusterError::InvalidRequest`] (never retried); a corrupt file is
+    /// a typed [`ClusterError::Snapshot`]. A file whose decoded id differs
+    /// from the requested one (a renamed or misplaced copy) is rejected —
+    /// serving a stale model silently is the one failure mode this layer
+    /// must never have.
+    pub fn load(&self, id: &str) -> Result<ModelRecord, ClusterError> {
+        validate_model_id(id)?;
+        let path = self.model_path(id);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(ClusterError::invalid(
+                    "model",
+                    format!("no model '{id}' in {}", self.dir.display()),
+                ));
+            }
+            Err(e) => {
+                return Err(ClusterError::Snapshot {
+                    path: path.display().to_string(),
+                    reason: format!("read: {e}"),
+                });
+            }
+        };
+        let record = decode_model(&bytes).map_err(|reason| ClusterError::Snapshot {
+            path: path.display().to_string(),
+            reason,
+        })?;
+        if record.id != id {
+            return Err(ClusterError::Snapshot {
+                path: path.display().to_string(),
+                reason: format!(
+                    "model file names itself '{}' — stale or misplaced copy",
+                    record.id
+                ),
+            });
+        }
+        Ok(record)
+    }
+
+    /// Summaries of every readable model, sorted by id. Corrupt files are
+    /// skipped (use [`ModelRegistry::gc`] to remove them); a listing must
+    /// not fail because one artifact is damaged.
+    pub fn list(&self) -> Result<Vec<ModelSummary>, ClusterError> {
+        let mut out = Vec::new();
+        for id in self.model_ids()? {
+            if let Ok(r) = self.load(&id) {
+                out.push(ModelSummary {
+                    id: r.id,
+                    k: r.centroids.n(),
+                    d: r.centroids.d(),
+                    engine: r.engine,
+                    precision: r.precision,
+                    energy: r.metrics.energy,
+                    refreshes: r.refreshes,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(out)
+    }
+
+    /// Delete a model; `Ok(false)` when it did not exist.
+    pub fn delete(&self, id: &str) -> Result<bool, ClusterError> {
+        validate_model_id(id)?;
+        match std::fs::remove_file(self.model_path(id)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(ClusterError::Snapshot {
+                path: self.model_path(id).display().to_string(),
+                reason: format!("delete: {e}"),
+            }),
+        }
+    }
+
+    /// Remove unreadable model files and stray temp files left by crashed
+    /// writes; returns the removed file names.
+    pub fn gc(&self) -> Result<Vec<String>, ClusterError> {
+        let mut removed = Vec::new();
+        let entries = std::fs::read_dir(&self.dir).map_err(|e| ClusterError::Snapshot {
+            path: self.dir.display().to_string(),
+            reason: format!("read dir: {e}"),
+        })?;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()).map(String::from)
+            else {
+                continue;
+            };
+            let stale_tmp = name.ends_with(".tmp");
+            let corrupt = path.extension().is_some_and(|e| e == MODEL_EXT)
+                && path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .is_none_or(|id| self.load(id).is_err());
+            if stale_tmp || corrupt {
+                if std::fs::remove_file(&path).is_ok() {
+                    removed.push(name);
+                }
+            }
+        }
+        removed.sort();
+        Ok(removed)
+    }
+
+    /// Ids of every `.aakm` file present (readable or not), sorted.
+    fn model_ids(&self) -> Result<Vec<String>, ClusterError> {
+        let entries = std::fs::read_dir(&self.dir).map_err(|e| ClusterError::Snapshot {
+            path: self.dir.display().to_string(),
+            reason: format!("read dir: {e}"),
+        })?;
+        let mut ids: Vec<String> = entries
+            .flatten()
+            .filter_map(|e| {
+                let path = e.path();
+                if path.extension().is_some_and(|x| x == MODEL_EXT) {
+                    path.file_stem().and_then(|s| s.to_str()).map(String::from)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        ids.sort();
+        Ok(ids)
+    }
+}
+
+/// Serialize a record into the `AAKMMR01` byte format.
+fn encode_model(r: &ModelRecord) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MODEL_MAGIC);
+    {
+        let mut e = Enc::default();
+        e.str(&r.id);
+        e.str(&r.fingerprint);
+        e.str(&r.engine);
+        e.str(r.precision.name());
+        e.u64(r.seed);
+        e.u64(r.refreshes);
+        push_record(&mut out, TAG_META, &e.buf);
+    }
+    {
+        let mut e = Enc::default();
+        e.u64(r.centroids.n() as u64);
+        e.u64(r.centroids.d() as u64);
+        e.f64s(r.centroids.as_slice());
+        push_record(&mut out, TAG_CENTROIDS, &e.buf);
+    }
+    {
+        let mut e = Enc::default();
+        e.f64(r.metrics.energy);
+        e.f64(r.metrics.mse);
+        e.u64(r.metrics.iterations);
+        e.u64(r.metrics.accepted);
+        e.f64(r.metrics.seconds);
+        e.u64s(&r.metrics.cluster_counts);
+        push_record(&mut out, TAG_METRICS, &e.buf);
+    }
+    if let Some(d) = &r.drift {
+        let mut e = Enc::default();
+        e.f64(d.energy_before);
+        e.f64(d.energy_after);
+        e.f64(d.max_displacement);
+        e.f64(d.mean_displacement);
+        push_record(&mut out, TAG_DRIFT, &e.buf);
+    }
+    push_record(&mut out, TAG_END, &[]);
+    out
+}
+
+/// Decode and validate a model byte stream. Every structural defect —
+/// foreign magic, truncation, CRC mismatch, duplicate / missing /
+/// misshapen records — is a typed error, never a panic and never a
+/// silently wrong model.
+fn decode_model(bytes: &[u8]) -> Result<ModelRecord, String> {
+    if bytes.len() < MODEL_MAGIC.len() || &bytes[..8] != MODEL_MAGIC {
+        return Err("not an AAKMMR01 model (bad magic)".to_string());
+    }
+    let records = parse_records(&bytes[8..], true)?;
+    if records.last().map(|(t, _)| *t) != Some(TAG_END) {
+        return Err("missing end record (torn write)".to_string());
+    }
+    let dup = |what: &str| format!("duplicate {what} record");
+
+    let mut meta: Option<(String, String, String, Precision, u64, u64)> = None;
+    let mut centroids: Option<DataMatrix> = None;
+    let mut metrics: Option<ModelMetrics> = None;
+    let mut drift: Option<DriftReport> = None;
+    for &(tag, payload) in &records[..records.len() - 1] {
+        let mut d = Dec::new(payload);
+        match tag {
+            TAG_META => {
+                let id = d.str()?;
+                let fingerprint = d.str()?;
+                let engine = d.str()?;
+                let precision = d.str()?;
+                let precision = Precision::parse(&precision)
+                    .ok_or_else(|| format!("unknown precision '{precision}'"))?;
+                let seed = d.u64()?;
+                let refreshes = d.u64()?;
+                if meta.replace((id, fingerprint, engine, precision, seed, refreshes)).is_some()
+                {
+                    return Err(dup("meta"));
+                }
+            }
+            TAG_CENTROIDS => {
+                let k = d.u64()? as usize;
+                let dim = d.u64()? as usize;
+                let vals = d.f64s()?;
+                if k == 0 || dim == 0 {
+                    return Err(format!("degenerate centroid shape {k}×{dim}"));
+                }
+                if vals.len() != k * dim {
+                    return Err(format!(
+                        "centroid payload holds {} values for a {k}×{dim} model",
+                        vals.len()
+                    ));
+                }
+                if centroids.replace(DataMatrix::from_vec(vals, k, dim)).is_some() {
+                    return Err(dup("centroids"));
+                }
+            }
+            TAG_METRICS => {
+                let m = ModelMetrics {
+                    energy: d.f64()?,
+                    mse: d.f64()?,
+                    iterations: d.u64()?,
+                    accepted: d.u64()?,
+                    seconds: d.f64()?,
+                    cluster_counts: d.u64s()?,
+                };
+                if metrics.replace(m).is_some() {
+                    return Err(dup("metrics"));
+                }
+            }
+            TAG_DRIFT => {
+                let r = DriftReport {
+                    energy_before: d.f64()?,
+                    energy_after: d.f64()?,
+                    max_displacement: d.f64()?,
+                    mean_displacement: d.f64()?,
+                };
+                if drift.replace(r).is_some() {
+                    return Err(dup("drift"));
+                }
+            }
+            TAG_END => return Err("end record before the end of the file".to_string()),
+            other => return Err(format!("unknown record tag {other} (newer format?)")),
+        }
+        d.done()?;
+    }
+    let (id, fingerprint, engine, precision, seed, refreshes) =
+        meta.ok_or("missing meta record")?;
+    let centroids = centroids.ok_or("missing centroids record")?;
+    let metrics = metrics.ok_or("missing metrics record")?;
+    if !metrics.cluster_counts.is_empty() && metrics.cluster_counts.len() != centroids.n() {
+        return Err(format!(
+            "{} cluster counts for a k={} model",
+            metrics.cluster_counts.len(),
+            centroids.n()
+        ));
+    }
+    Ok(ModelRecord {
+        id,
+        fingerprint,
+        engine,
+        precision,
+        seed,
+        refreshes,
+        centroids,
+        metrics,
+        drift,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("aakm_registry_unit").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_record(id: &str) -> ModelRecord {
+        ModelRecord {
+            id: id.to_string(),
+            fingerprint: "aakm-model-v1 k=2 d=2 seed=7 engine=hamerly precision=f64 \
+                          accel=dynamic:2"
+                .to_string(),
+            engine: "hamerly".to_string(),
+            precision: Precision::F64,
+            seed: 7,
+            refreshes: 1,
+            centroids: DataMatrix::from_rows(&[&[0.25, -1.5], &[3.0, 4.0]]),
+            metrics: ModelMetrics {
+                energy: 12.5,
+                mse: 0.125,
+                iterations: 9,
+                accepted: 4,
+                seconds: 0.031,
+                cluster_counts: vec![60, 40],
+            },
+            drift: Some(DriftReport {
+                energy_before: 13.0,
+                energy_after: 12.5,
+                max_displacement: 0.4,
+                mean_displacement: 0.2,
+            }),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let reg = ModelRegistry::open(tmp("roundtrip")).unwrap();
+        let rec = sample_record("m1");
+        reg.save(&rec).unwrap();
+        let back = reg.load("m1").unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.fingerprint, rec.fingerprint);
+        assert_eq!(back.engine, rec.engine);
+        assert_eq!(back.precision, rec.precision);
+        assert_eq!(back.seed, rec.seed);
+        assert_eq!(back.refreshes, rec.refreshes);
+        assert_eq!(back.centroids, rec.centroids);
+        assert_eq!(back.metrics, rec.metrics);
+        assert_eq!(back.drift, rec.drift);
+    }
+
+    #[test]
+    fn missing_model_is_a_deterministic_typed_error() {
+        let reg = ModelRegistry::open(tmp("missing")).unwrap();
+        match reg.load("nope") {
+            Err(ClusterError::InvalidRequest { field: "model", .. }) => {}
+            other => panic!("expected InvalidRequest, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn bad_ids_are_rejected() {
+        for bad in ["", ".hidden", "a/b", "a b", "a\nb", &"x".repeat(200)] {
+            assert!(
+                matches!(
+                    validate_model_id(bad),
+                    Err(ClusterError::InvalidRequest { field: "model", .. })
+                ),
+                "accepted bad id {bad:?}"
+            );
+        }
+        for good in ["m1", "model-2.v3", "A_B.c-d"] {
+            validate_model_id(good).unwrap();
+        }
+    }
+
+    #[test]
+    fn renamed_file_is_rejected_as_stale() {
+        let reg = ModelRegistry::open(tmp("stale")).unwrap();
+        reg.save(&sample_record("original")).unwrap();
+        std::fs::rename(reg.model_path("original"), reg.model_path("imposter")).unwrap();
+        match reg.load("imposter") {
+            Err(ClusterError::Snapshot { reason, .. }) => {
+                assert!(reason.contains("original"), "{reason}");
+            }
+            other => panic!("expected Snapshot error, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn list_skips_corrupt_and_gc_removes_it() {
+        let reg = ModelRegistry::open(tmp("gc")).unwrap();
+        reg.save(&sample_record("good")).unwrap();
+        std::fs::write(reg.model_path("broken"), b"AAKMMR01 then garbage").unwrap();
+        std::fs::write(reg.dir().join("crashed.aakm.tmp"), b"torn").unwrap();
+        let listing = reg.list().unwrap();
+        assert_eq!(listing.len(), 1);
+        assert_eq!(listing[0].id, "good");
+        assert_eq!(listing[0].k, 2);
+        let removed = reg.gc().unwrap();
+        assert_eq!(removed, vec!["broken.aakm".to_string(), "crashed.aakm.tmp".to_string()]);
+        assert_eq!(reg.list().unwrap().len(), 1, "gc must keep readable models");
+        assert!(reg.delete("good").unwrap());
+        assert!(!reg.delete("good").unwrap(), "second delete reports absence");
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught() {
+        let rec = sample_record("fuzz");
+        let bytes = encode_model(&rec);
+        decode_model(&bytes).unwrap();
+        for i in 0..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x01;
+            assert!(
+                decode_model(&flipped).is_err(),
+                "flip at byte {i} of {} decoded successfully",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_prefixes_never_decode() {
+        let bytes = encode_model(&sample_record("trunc"));
+        for cut in 0..bytes.len() {
+            assert!(decode_model(&bytes[..cut]).is_err(), "prefix of {cut} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn cluster_counts_and_drift_helpers() {
+        assert!(cluster_counts(&[], 4).is_empty());
+        assert_eq!(cluster_counts(&[0, 1, 1, 3, 9], 4), vec![1, 2, 0, 1]);
+        let a = DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0]]);
+        let b = DataMatrix::from_rows(&[&[0.0, 3.0], &[1.0, 1.0]]);
+        let d = drift_between(&a, &b, 10.0, 8.0).unwrap();
+        assert_eq!(d.max_displacement, 3.0);
+        assert_eq!(d.mean_displacement, 2.0);
+        assert_eq!(d.energy_before, 10.0);
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0]]);
+        assert!(drift_between(&a, &c, 1.0, 1.0).is_none(), "shape mismatch has no drift");
+    }
+}

@@ -1,0 +1,160 @@
+//! Batch nearest-centroid inference on a registered model.
+//!
+//! Serving is an assignment sweep with the centroids pinned: one
+//! [`crate::linalg::DistanceKernel::prepare`] then a parallel fused-argmin
+//! pass over the batch. The kernel, label and distance buffers all come
+//! from the [`Workspace`] scratch pools, so a warm same-shape rerun —
+//! after the caller returns the previous [`Prediction`]'s buffers via
+//! [`Workspace::recycle_prediction`] — touches the allocator not at all
+//! (the contract test lives in `tests/alloc_reuse.rs`). Because the
+//! kernel's sample-norm cache is keyed on the data's generation stamp,
+//! repeated predicts over the same batch also skip the O(N·d) norm pass.
+
+use super::ModelRecord;
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use crate::kmeans::Workspace;
+use crate::lloyd::Assignment;
+use crate::par::SyncSliceMut;
+
+/// Labels + per-sample squared distances for one predicted batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Nearest-centroid index per sample.
+    pub labels: Assignment,
+    /// Squared Euclidean distance to that centroid, per sample.
+    pub distances: Vec<f64>,
+}
+
+impl Prediction {
+    /// Sum of the per-sample squared distances — the clustering energy of
+    /// the batch under the model.
+    pub fn energy(&self) -> f64 {
+        self.distances.iter().sum()
+    }
+}
+
+/// Assign every row of `x` to its nearest centroid of `record`, at the
+/// model's stored precision. Buffers are drawn from (and the kernel is
+/// returned to) `ws`; hand the finished [`Prediction`]'s buffers back via
+/// [`Workspace::recycle_prediction`] to make the next same-shape call
+/// allocation-free.
+pub fn predict(
+    record: &ModelRecord,
+    x: &DataMatrix,
+    ws: &mut Workspace,
+) -> Result<Prediction, ClusterError> {
+    let c = &record.centroids;
+    if x.d() != c.d() {
+        return Err(ClusterError::invalid(
+            "predict",
+            format!(
+                "batch is {}-dimensional but model '{}' is {}-dimensional",
+                x.d(),
+                record.id,
+                c.d()
+            ),
+        ));
+    }
+    if x.n() == 0 {
+        return Err(ClusterError::invalid("predict", "no samples to assign"));
+    }
+    let n = x.n();
+    let mut kernel = ws.scratch.take_predict_kernel(record.precision);
+    kernel.prepare(x, c, &ws.pool);
+    let mut labels = ws.scratch.take_assign();
+    labels.resize(n, 0);
+    let mut distances = ws.scratch.take_trace_f64();
+    distances.resize(n, 0.0);
+    {
+        let labels_s = SyncSliceMut::new(labels.as_mut_slice());
+        let dist_s = SyncSliceMut::new(distances.as_mut_slice());
+        let kernel = &kernel;
+        ws.pool.parallel_for(n, 512, |range| {
+            kernel.argmin2_range(x, c, range, |i, b| {
+                *labels_s.at(i) = b.best;
+                *dist_s.at(i) = b.best_d;
+            });
+        });
+    }
+    ws.scratch.put_predict_kernel(record.precision, kernel);
+    Ok(Prediction { labels, distances })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, Precision};
+    use crate::kmeans::WorkspaceSpec;
+    use crate::registry::{ModelMetrics, ModelRecord};
+
+    fn model(c: DataMatrix, precision: Precision) -> ModelRecord {
+        ModelRecord {
+            id: "m".to_string(),
+            fingerprint: String::new(),
+            engine: "naive".to_string(),
+            precision,
+            seed: 0,
+            refreshes: 0,
+            centroids: c,
+            metrics: ModelMetrics {
+                energy: 0.0,
+                mse: 0.0,
+                iterations: 0,
+                accepted: 0,
+                seconds: 0.0,
+                cluster_counts: Vec::new(),
+            },
+            drift: None,
+        }
+    }
+
+    fn workspace() -> Workspace {
+        Workspace::open(&WorkspaceSpec {
+            engine: EngineKind::Naive,
+            precision: Precision::F64,
+            threads: 1,
+            artifact_dir: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn assigns_nearest_centroid_with_distances() {
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0], &[10.0, 0.0]]);
+        let x = DataMatrix::from_rows(&[&[1.0, 0.0], &[9.0, 0.0], &[4.0, 3.0]]);
+        let mut ws = workspace();
+        let p = predict(&model(c, Precision::F64), &x, &mut ws).unwrap();
+        assert_eq!(p.labels, vec![0, 1, 0]);
+        assert!((p.distances[0] - 1.0).abs() < 1e-9);
+        assert!((p.distances[1] - 1.0).abs() < 1e-9);
+        assert!((p.distances[2] - 25.0).abs() < 1e-9);
+        assert!((p.energy() - 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_typed() {
+        let c = DataMatrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        let x = DataMatrix::from_rows(&[&[1.0, 0.0]]);
+        let mut ws = workspace();
+        match predict(&model(c, Precision::F64), &x, &mut ws) {
+            Err(ClusterError::InvalidRequest { field: "predict", .. }) => {}
+            other => panic!("expected typed mismatch, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn f32_model_predicts_and_reuses_its_kernel() {
+        let c = DataMatrix::from_rows(&[&[0.0], &[100.0]]);
+        let x = DataMatrix::from_rows(&[&[1.0], &[99.0], &[49.0]]);
+        let mut ws = workspace();
+        let m = model(c, Precision::F32);
+        let p1 = predict(&m, &x, &mut ws).unwrap();
+        assert_eq!(p1.labels, vec![0, 1, 0]);
+        let (labels, distances) = (p1.labels.clone(), p1.distances.clone());
+        ws.recycle_prediction(p1.labels, p1.distances);
+        let p2 = predict(&m, &x, &mut ws).unwrap();
+        assert_eq!(p2.labels, labels, "warm rerun is deterministic");
+        assert_eq!(p2.distances, distances);
+    }
+}

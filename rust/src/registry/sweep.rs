@@ -1,0 +1,203 @@
+//! Multi-k sweep: fit a ladder of cluster counts over one source, register
+//! every model, report an elbow table.
+//!
+//! The sweep materializes the source **once** and re-targets the same
+//! in-memory matrix at every k, so the kernel's generation-stamped
+//! sample-norm cache — which survives engine `reset()` — is computed for
+//! the first fit and shared by all the rest; the warm [`Workspace`] is
+//! chained from fit to fit the same way the coordinator chains it from job
+//! to job. Every fitted model lands in the registry as `<base>-k<K>`.
+
+use super::{cluster_counts, request_fingerprint, validate_model_id};
+use super::{ModelMetrics, ModelRecord, ModelRegistry};
+use crate::error::ClusterError;
+use crate::kmeans::Workspace;
+use crate::request::ClusterRequest;
+use crate::session::ClusterSession;
+
+/// One fitted k of a sweep.
+#[derive(Debug, Clone)]
+pub struct ElbowRow {
+    /// Cluster count.
+    pub k: usize,
+    /// Registered model id (`<base>-k<K>`).
+    pub model_id: String,
+    /// Final energy at this k.
+    pub energy: f64,
+    /// Energy per sample.
+    pub mse: f64,
+    /// Iterations to converge.
+    pub iterations: usize,
+    /// Fitting wall time in seconds.
+    pub seconds: f64,
+}
+
+/// Result of [`sweep`]: one row per k, in the requested order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Elbow table rows.
+    pub rows: Vec<ElbowRow>,
+}
+
+impl SweepReport {
+    /// Render the elbow table as aligned text.
+    pub fn table(&self) -> String {
+        let mut out = String::from("k      model                    iters  energy           mse\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<6} {:<24} {:<6} {:<16.6e} {:.6e}\n",
+                r.k, r.model_id, r.iterations, r.energy, r.mse
+            ));
+        }
+        out
+    }
+}
+
+/// Fit `base` at every k in `ks`, registering each fitted model into
+/// `registry` as `<base_id>-k<K>`. The source is materialized once and
+/// shared (same data generation) across fits, and the workspace — engine,
+/// thread pool, kernel caches, solver scratch — is recycled from k to k.
+pub fn sweep(
+    registry: &ModelRegistry,
+    base: &ClusterRequest,
+    ks: &[usize],
+    base_id: &str,
+) -> Result<SweepReport, ClusterError> {
+    validate_model_id(base_id)?;
+    if ks.is_empty() {
+        return Err(ClusterError::invalid("sweep", "at least one k is required"));
+    }
+    // One materialization for the whole ladder: every per-k request holds
+    // the same Arc'd matrix, so the generation-stamped norm cache built by
+    // the first fit serves all of them.
+    let x = base.source().materialize()?;
+    let mut ws: Option<Workspace> = None;
+    let mut rows = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let req = base.with_k(k)?.with_inline_source(std::sync::Arc::clone(&x));
+        let ws_for_run = match ws.take() {
+            Some(w) if w.matches(&req.workspace_spec()) => w,
+            _ => Workspace::open(&req.workspace_spec())?,
+        };
+        let mut session = ClusterSession::with_workspace(req.clone(), ws_for_run)?;
+        let report = session.run()?;
+        let model_id = format!("{base_id}-k{k}");
+        let record = ModelRecord {
+            id: model_id.clone(),
+            fingerprint: request_fingerprint(&req, report.centroids.d()),
+            engine: session.workspace().engine_name().to_string(),
+            precision: req.precision(),
+            seed: req.seed(),
+            refreshes: 0,
+            centroids: report.centroids.clone(),
+            metrics: ModelMetrics {
+                energy: report.energy,
+                mse: report.mse,
+                iterations: report.iterations as u64,
+                accepted: report.accepted as u64,
+                seconds: report.seconds,
+                cluster_counts: cluster_counts(&report.assignment, k),
+            },
+            drift: None,
+        };
+        registry.save(&record)?;
+        rows.push(ElbowRow {
+            k,
+            model_id,
+            energy: report.energy,
+            mse: report.mse,
+            iterations: report.iterations,
+            seconds: report.seconds,
+        });
+        session.recycle(report);
+        ws = Some(session.into_workspace());
+    }
+    Ok(SweepReport { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DataMatrix};
+    use crate::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("aakm_registry_sweep").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn blobs(seed: u64, n: usize) -> Arc<DataMatrix> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        Arc::new(synth::gaussian_blobs(&mut rng, n, 4, 8, 2.5, 0.3))
+    }
+
+    #[test]
+    fn sweep_registers_every_k_and_energy_is_monotone() {
+        let reg = ModelRegistry::open(tmp("ladder")).unwrap();
+        let base = ClusterRequest::builder()
+            .inline(blobs(11, 1500))
+            .k(2)
+            .threads(1)
+            .seed(3)
+            .build()
+            .unwrap();
+        let ks = [2usize, 4, 8];
+        let report = sweep(&reg, &base, &ks, "elbow").unwrap();
+        assert_eq!(report.rows.len(), 3);
+        for (row, &k) in report.rows.iter().zip(&ks) {
+            assert_eq!(row.k, k);
+            assert_eq!(row.model_id, format!("elbow-k{k}"));
+            let rec = reg.load(&row.model_id).unwrap();
+            assert_eq!(rec.centroids.n(), k);
+            assert_eq!(rec.metrics.energy.to_bits(), row.energy.to_bits());
+            assert_eq!(rec.metrics.cluster_counts.len(), k);
+            assert_eq!(
+                rec.metrics.cluster_counts.iter().sum::<u64>(),
+                1500,
+                "counts cover every sample"
+            );
+        }
+        // More clusters never increase the optimal-assignment energy.
+        for pair in report.rows.windows(2) {
+            assert!(
+                pair[1].energy <= pair[0].energy + 1e-9,
+                "k={} energy {} > k={} energy {}",
+                pair[1].k,
+                pair[1].energy,
+                pair[0].k,
+                pair[0].energy
+            );
+        }
+        assert!(report.table().contains("elbow-k4"));
+    }
+
+    #[test]
+    fn sweep_rejects_empty_ladder_and_fixed_centroids() {
+        let reg = ModelRegistry::open(tmp("reject")).unwrap();
+        let base = ClusterRequest::builder()
+            .inline(blobs(1, 100))
+            .k(2)
+            .threads(1)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            sweep(&reg, &base, &[], "x"),
+            Err(ClusterError::InvalidRequest { field: "sweep", .. })
+        ));
+        let data = blobs(2, 100);
+        let c0 = Arc::new(data.gather_rows(&[0, 50]));
+        let pinned = ClusterRequest::builder()
+            .inline(data)
+            .k(2)
+            .initial_centroids(c0)
+            .threads(1)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            sweep(&reg, &pinned, &[2, 3], "x"),
+            Err(ClusterError::InvalidRequest { field: "init", .. })
+        ));
+    }
+}

@@ -152,6 +152,64 @@ pub enum InitSpec {
     Method(InitMethod),
     /// Explicit initial centroids (`k × d`).
     Centroids(Arc<DataMatrix>),
+    /// Seed from a registered model's centroids (warm-start re-clustering:
+    /// Anderson acceleration near a fixed point is the paper's best case).
+    /// The model's k and d are validated against the request when the
+    /// session first touches the data.
+    WarmStart {
+        /// Registry directory holding the model.
+        registry: PathBuf,
+        /// Model id to seed from.
+        model: String,
+    },
+}
+
+/// What a service job does with the model registry (see
+/// [`crate::registry`]): fit-and-register, batch predict, or warm-start
+/// refresh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelJobKind {
+    /// Run the fit and register the result under the job's model id.
+    Fit,
+    /// Load the model and assign the request's samples to it (no solver
+    /// run — the request's iteration budget is ignored).
+    Predict,
+    /// Warm-start from the model, re-fit, and save the result back with a
+    /// drift report and a bumped refresh count.
+    Refresh,
+}
+
+impl ModelJobKind {
+    /// Canonical journal / CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fit => "fit",
+            Self::Predict => "predict",
+            Self::Refresh => "refresh",
+        }
+    }
+
+    /// Parse a canonical name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fit" => Some(Self::Fit),
+            "predict" => Some(Self::Predict),
+            "refresh" => Some(Self::Refresh),
+            _ => None,
+        }
+    }
+}
+
+/// A registry action attached to a [`ClusterRequest`], executed by the
+/// coordinator when the job runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelJob {
+    /// Registry directory.
+    pub registry: PathBuf,
+    /// Model id to register / load / refresh.
+    pub model: String,
+    /// What to do.
+    pub kind: ModelJobKind,
 }
 
 /// Retry discipline for service jobs that fail with a *transient*
@@ -215,6 +273,7 @@ pub struct ClusterRequest {
     cpu_fallback: bool,
     checkpoint: Option<CheckpointPolicy>,
     reseed_empty: bool,
+    model_job: Option<ModelJob>,
 }
 
 impl ClusterRequest {
@@ -335,6 +394,37 @@ impl ClusterRequest {
         self.reseed_empty
     }
 
+    /// The registry action attached to this request, if any.
+    pub fn model_job(&self) -> Option<&ModelJob> {
+        self.model_job.as_ref()
+    }
+
+    /// Re-target the request at a different cluster count (registry
+    /// multi-k sweeps). The seeding must be a method — explicit centroids
+    /// and warm-start models pin k.
+    pub fn with_k(&self, k: usize) -> Result<Self, ClusterError> {
+        if k == 0 {
+            return Err(ClusterError::invalid("k", "must be at least 1"));
+        }
+        if !matches!(self.init, InitSpec::Method(_)) {
+            return Err(ClusterError::invalid(
+                "init",
+                "multi-k sweeps need a seeding method, not fixed centroids",
+            ));
+        }
+        let mut req = self.clone();
+        req.k = k;
+        Ok(req)
+    }
+
+    /// Swap in an already-materialized copy of the source (registry sweeps
+    /// materialize once and share the matrix — and therefore the kernel's
+    /// generation-stamped norm cache — across every k).
+    pub(crate) fn with_inline_source(mut self, data: Arc<DataMatrix>) -> Self {
+        self.source = DataSource::Inline(data);
+        self
+    }
+
     /// Project the streaming mini-batch configuration (used when
     /// [`ClusterRequest::engine`] is `EngineKind::MiniBatch`).
     pub fn minibatch_config(&self) -> crate::stream::MiniBatchConfig {
@@ -395,6 +485,10 @@ impl ClusterRequest {
         let init = match &self.init {
             InitSpec::Method(m) => m.name().to_string(),
             InitSpec::Centroids(_) => return None,
+            // Warm-start seeds load from the registry by id, so — unlike
+            // explicit centroid matrices — they round-trip through the
+            // journal and a recovering coordinator can re-seed them.
+            InitSpec::WarmStart { .. } => "warm-start".to_string(),
         };
         let mut kv: Vec<(&str, String)> = vec![
             ("source", source),
@@ -417,6 +511,15 @@ impl ClusterRequest {
             ("reseed_empty", self.reseed_empty.to_string()),
             ("cpu_fallback", self.cpu_fallback.to_string()),
         ];
+        if let InitSpec::WarmStart { registry, model } = &self.init {
+            kv.push(("warm_registry", registry.display().to_string()));
+            kv.push(("warm_model", model.clone()));
+        }
+        if let Some(job) = &self.model_job {
+            kv.push(("job", job.kind.name().to_string()));
+            kv.push(("job_registry", job.registry.display().to_string()));
+            kv.push(("job_model", job.model.clone()));
+        }
         if let Some(client) = &self.client {
             kv.push(("client", client.clone()));
         }
@@ -472,6 +575,12 @@ impl ClusterRequest {
         let mut eps = (defaults.epsilon1, defaults.epsilon2);
         let mut ck_dir: Option<PathBuf> = None;
         let mut ck_every: Option<usize> = None;
+        let mut init_warm = false;
+        let mut warm_registry: Option<PathBuf> = None;
+        let mut warm_model: Option<String> = None;
+        let mut job_kind: Option<ModelJobKind> = None;
+        let mut job_registry: Option<PathBuf> = None;
+        let mut job_model: Option<String> = None;
         let mut b = ClusterRequest::builder();
         for line in spec.lines() {
             let line = line.trim();
@@ -498,9 +607,36 @@ impl ClusterRequest {
                     }
                 }
                 "k" => b.k(num("k", val)?),
+                "init" if val == "warm-start" => {
+                    init_warm = true;
+                    b
+                }
                 "init" => b.init(
                     InitMethod::parse(val).ok_or_else(|| bad(format!("unknown init '{val}'")))?,
                 ),
+                "warm_registry" => {
+                    warm_registry = Some(PathBuf::from(val));
+                    b
+                }
+                "warm_model" => {
+                    warm_model = Some(val.to_string());
+                    b
+                }
+                "job" => {
+                    job_kind = Some(
+                        ModelJobKind::parse(val)
+                            .ok_or_else(|| bad(format!("unknown model job '{val}'")))?,
+                    );
+                    b
+                }
+                "job_registry" => {
+                    job_registry = Some(PathBuf::from(val));
+                    b
+                }
+                "job_model" => {
+                    job_model = Some(val.to_string());
+                    b
+                }
                 "engine" => b.engine(
                     EngineKind::parse(val)
                         .ok_or_else(|| bad(format!("unknown engine '{val}'")))?,
@@ -576,6 +712,22 @@ impl ClusterRequest {
             (None, None) => {}
             _ => return Err(bad("checkpoint_dir and checkpoint_every must appear together")),
         }
+        match (init_warm, warm_registry, warm_model) {
+            (true, Some(dir), Some(model)) => b = b.warm_start(dir, model),
+            (false, None, None) => {}
+            _ => {
+                return Err(bad(
+                    "warm-start init needs warm_registry and warm_model together",
+                ))
+            }
+        }
+        match (job_kind, job_registry, job_model) {
+            (Some(kind), Some(registry), Some(model)) => {
+                b = b.model_job(ModelJob { registry, model, kind });
+            }
+            (None, None, None) => {}
+            _ => return Err(bad("job, job_registry and job_model must appear together")),
+        }
         b.epsilons(eps.0, eps.1).build()
     }
 
@@ -642,6 +794,7 @@ pub struct ClusterRequestBuilder {
     cpu_fallback: bool,
     checkpoint: Option<CheckpointPolicy>,
     reseed_empty: bool,
+    model_job: Option<ModelJob>,
 }
 
 impl Default for ClusterRequestBuilder {
@@ -672,6 +825,7 @@ impl Default for ClusterRequestBuilder {
             cpu_fallback: false,
             checkpoint: None,
             reseed_empty: false,
+            model_job: None,
         }
     }
 }
@@ -720,6 +874,53 @@ impl ClusterRequestBuilder {
     pub fn initial_centroids(mut self, c0: Arc<DataMatrix>) -> Self {
         self.init = InitSpec::Centroids(c0);
         self
+    }
+
+    /// Seed from a registered model's centroids (warm-start
+    /// re-clustering). The model's shape is validated against the data
+    /// when the session first materializes it.
+    pub fn warm_start(mut self, registry: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        self.init = InitSpec::WarmStart { registry: registry.into(), model: model.into() };
+        self
+    }
+
+    /// Attach a raw model job (see the [`ClusterRequestBuilder::fit_into`],
+    /// [`ClusterRequestBuilder::predict_with`] and
+    /// [`ClusterRequestBuilder::refresh_model`] conveniences).
+    pub fn model_job(mut self, job: ModelJob) -> Self {
+        self.model_job = Some(job);
+        self
+    }
+
+    /// Fit and register the result under `model` in `registry`.
+    pub fn fit_into(self, registry: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        self.model_job(ModelJob {
+            registry: registry.into(),
+            model: model.into(),
+            kind: ModelJobKind::Fit,
+        })
+    }
+
+    /// Batch-predict the request's samples against the registered `model`
+    /// (no solver run).
+    pub fn predict_with(self, registry: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        self.model_job(ModelJob {
+            registry: registry.into(),
+            model: model.into(),
+            kind: ModelJobKind::Predict,
+        })
+    }
+
+    /// Warm-start from the registered `model`, re-fit, and save the result
+    /// back with a drift report (sets both the warm-start seeding and the
+    /// refresh job).
+    pub fn refresh_model(self, registry: impl Into<PathBuf>, model: impl Into<String>) -> Self {
+        let (registry, model) = (registry.into(), model.into());
+        self.warm_start(registry.clone(), model.clone()).model_job(ModelJob {
+            registry,
+            model,
+            kind: ModelJobKind::Refresh,
+        })
     }
 
     /// Assignment engine.
@@ -907,6 +1108,20 @@ impl ClusterRequestBuilder {
                 ));
             }
         }
+        if let InitSpec::WarmStart { model, .. } = &self.init {
+            crate::registry::validate_model_id(model)?;
+        }
+        if let Some(job) = &self.model_job {
+            crate::registry::validate_model_id(&job.model)?;
+            if job.kind == ModelJobKind::Refresh
+                && !matches!(self.init, InitSpec::WarmStart { .. })
+            {
+                return Err(ClusterError::invalid(
+                    "model",
+                    "a refresh job must warm-start from its model",
+                ));
+            }
+        }
         // Inline sources get the full shape checks right now; lazy sources
         // get the identical checks (same helper) from the session at first
         // materialization — only the data-independent centroid-count check
@@ -949,6 +1164,7 @@ impl ClusterRequestBuilder {
             cpu_fallback: self.cpu_fallback,
             checkpoint: self.checkpoint,
             reseed_empty: self.reseed_empty,
+            model_job: self.model_job,
         })
     }
 }
@@ -1207,6 +1423,81 @@ mod tests {
         assert_eq!(cfg.epsilon1, 0.01);
         assert_eq!(cfg.epsilon2, 0.4);
         assert_eq!(cfg.m_max, 12);
+    }
+
+    #[test]
+    fn warm_start_and_model_job_journal_roundtrip() {
+        let req = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(5)
+            .refresh_model("models/dir", "prod-model")
+            .threads(1)
+            .build()
+            .unwrap();
+        let spec = req.journal_spec().expect("warm-start seeds journal by id");
+        let back = ClusterRequest::from_journal_spec(&spec).unwrap();
+        match back.init() {
+            InitSpec::WarmStart { registry, model } => {
+                assert_eq!(registry, &PathBuf::from("models/dir"));
+                assert_eq!(model, "prod-model");
+            }
+            other => panic!("expected warm-start init, got {other:?}"),
+        }
+        let job = back.model_job().unwrap();
+        assert_eq!(job.kind, ModelJobKind::Refresh);
+        assert_eq!(job.registry, PathBuf::from("models/dir"));
+        assert_eq!(job.model, "prod-model");
+
+        // Predict jobs journal too — a recovered predict must re-run as a
+        // predict, never as a fit.
+        let req = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(5)
+            .predict_with("models/dir", "prod-model")
+            .build()
+            .unwrap();
+        let back = ClusterRequest::from_journal_spec(&req.journal_spec().unwrap()).unwrap();
+        assert_eq!(back.model_job().unwrap().kind, ModelJobKind::Predict);
+
+        // Shorn key pairs are typed corruption, not half-applied state.
+        let full = req.journal_spec().unwrap();
+        for torn in [
+            full.replace("job=predict\n", ""),
+            full.replace("job_model=prod-model\n", ""),
+        ] {
+            assert!(matches!(
+                ClusterRequest::from_journal_spec(&torn),
+                Err(ClusterError::InvalidRequest { field: "journal", .. })
+            ));
+        }
+
+        // Model ids are validated at build time.
+        let bad = ClusterRequest::builder()
+            .registry("Birch", 0.001)
+            .k(5)
+            .fit_into("models/dir", ".hidden")
+            .build();
+        assert!(matches!(bad, Err(ClusterError::InvalidRequest { field: "model", .. })));
+    }
+
+    #[test]
+    fn with_k_retargets_method_seeded_requests_only() {
+        let req = ClusterRequest::builder().inline(tiny()).k(2).seed(5).build().unwrap();
+        let re = req.with_k(3).unwrap();
+        assert_eq!(re.k(), 3);
+        assert_eq!(re.seed(), 5);
+        assert!(matches!(req.with_k(0), Err(ClusterError::InvalidRequest { field: "k", .. })));
+        let c0 = Arc::new(DataMatrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]));
+        let pinned = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .initial_centroids(c0)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            pinned.with_k(3),
+            Err(ClusterError::InvalidRequest { field: "init", .. })
+        ));
     }
 
     #[test]

@@ -194,6 +194,9 @@ impl ClusterSession {
                 }
                 DataMatrix::clone(c0)
             }
+            InitSpec::WarmStart { registry, model } => {
+                warm_start_centroids(registry, model, k, shard.d())?
+            }
         };
         self.c0 = Some(c0);
         Ok(())
@@ -226,11 +229,45 @@ impl ClusterSession {
                 seed_centroids(&x, k, *method, &mut rng)
             }
             InitSpec::Centroids(c0) => DataMatrix::clone(c0),
+            InitSpec::WarmStart { registry, model } => {
+                warm_start_centroids(registry, model, k, x.d())?
+            }
         };
         self.data = Some(x);
         self.c0 = Some(c0);
         Ok(())
     }
+}
+
+/// Load warm-start centroids from a registered model, validating its shape
+/// against the request (typed errors: a mismatched model is a caller bug,
+/// never a retry candidate).
+fn warm_start_centroids(
+    registry: &std::path::Path,
+    model: &str,
+    k: usize,
+    d: usize,
+) -> Result<DataMatrix, ClusterError> {
+    let record = crate::registry::ModelRegistry::open(registry)?.load(model)?;
+    if record.centroids.n() != k {
+        return Err(ClusterError::invalid(
+            "init",
+            format!(
+                "model '{model}' has k={} but the request asks for k={k}",
+                record.centroids.n()
+            ),
+        ));
+    }
+    if record.centroids.d() != d {
+        return Err(ClusterError::invalid(
+            "init",
+            format!(
+                "model '{model}' is {}-dimensional but the data is {d}-dimensional",
+                record.centroids.d()
+            ),
+        ));
+    }
+    Ok(record.centroids)
 }
 
 #[cfg(test)]

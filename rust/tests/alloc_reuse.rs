@@ -171,4 +171,65 @@ fn warm_session_runs_do_not_rebuild_the_workspace() {
              workspace reuse regressed"
         );
     }
+
+    // Batch prediction shares the contract: once the first prediction's
+    // buffers are recycled, a same-batch predict draws its kernel, label
+    // and distance buffers from the pools (and the generation-stamped
+    // sample-norm cache skips the norm pass), so the allocator traffic
+    // collapses the same way.
+    {
+        use aakm::config::Precision;
+        use aakm::kmeans::{Workspace, WorkspaceSpec};
+        use aakm::registry::{predict, ModelMetrics, ModelRecord};
+
+        let mut rngp = Pcg32::seed_from_u64(0xA110E);
+        let xp = synth::gaussian_blobs(&mut rngp, 4000, 4, 8, 2.0, 0.4);
+        let centroids = xp.gather_rows(&[0, 500, 1000, 1500, 2000, 2500, 3000, 3500]);
+        let record = ModelRecord {
+            id: "warm".into(),
+            fingerprint: String::new(),
+            engine: "naive".into(),
+            precision: Precision::F64,
+            seed: 0,
+            refreshes: 0,
+            centroids,
+            metrics: ModelMetrics {
+                energy: 0.0,
+                mse: 0.0,
+                iterations: 0,
+                accepted: 0,
+                seconds: 0.0,
+                cluster_counts: Vec::new(),
+            },
+            drift: None,
+        };
+        let mut ws = Workspace::open(&WorkspaceSpec {
+            engine: EngineKind::Naive,
+            precision: Precision::F64,
+            threads: 1,
+            artifact_dir: None,
+        })
+        .unwrap();
+        let (c0, b0) = counters();
+        let p1 = predict(&record, &xp, &mut ws).unwrap();
+        let (c1, b1) = counters();
+        let (cold_calls, cold_bytes) = (c1 - c0, b1 - b0);
+        let labels = p1.labels.clone();
+        ws.recycle_prediction(p1.labels, p1.distances);
+        let (c2, b2) = counters();
+        let p2 = predict(&record, &xp, &mut ws).unwrap();
+        let (c3, b3) = counters();
+        let (warm_calls, warm_bytes) = (c3 - c2, b3 - b2);
+        assert_eq!(p2.labels, labels, "predict: warm rerun diverged");
+        assert!(
+            warm_calls * 2 < cold_calls,
+            "predict: warm rerun made {warm_calls} allocations vs {cold_calls} cold — \
+             prediction buffer reuse regressed"
+        );
+        assert!(
+            warm_bytes * 4 < cold_bytes,
+            "predict: warm rerun allocated {warm_bytes} bytes vs {cold_bytes} cold — \
+             prediction buffer reuse regressed"
+        );
+    }
 }

@@ -331,6 +331,119 @@ fn mixed_fault_sweep_never_hangs_and_accounting_balances() {
     }
 }
 
+/// A fit job that registers its model into `dir` under `id`.
+fn fit_into(dir: &std::path::Path, id: &str, retries: u32) -> ClusterRequest {
+    let builder = ClusterRequest::builder()
+        .inline(blobs(71, 900, 4))
+        .k(4)
+        .seed(71)
+        .threads(1)
+        .fit_into(dir, id);
+    let builder = if retries > 0 {
+        builder.retry(RetryPolicy::transient(retries, Duration::from_millis(1)))
+    } else {
+        builder
+    };
+    builder.build().unwrap()
+}
+
+#[test]
+fn registry_write_fault_is_retried_and_the_model_lands() {
+    use aakm::registry::ModelRegistry;
+    let dir = std::env::temp_dir().join("aakm_fault_registry_retry");
+    let _ = std::fs::remove_dir_all(&dir);
+    // One injected save failure: the write dies *before* the model file
+    // exists (atomic tmp-rename), the job's retry budget re-fits, and the
+    // second attempt's save lands.
+    let plan = FaultPlan::new()
+        .fail_next(FaultSite::RegistryWrite, FaultKind::Error, 1)
+        .install();
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        ..CoordinatorConfig::default()
+    });
+    let out = coord
+        .submit(fit_into(&dir, "faulted", 3))
+        .unwrap()
+        .wait()
+        .outcome
+        .expect("the retry budget covers the injected save fault");
+    assert_eq!(out.attempts, 2, "one failed save, one successful re-fit");
+    assert_eq!(out.attempt_errors.len(), 1);
+    assert!(
+        out.attempt_errors.iter().all(|e| e.fault_class() == Some(FaultClass::Io)),
+        "an injected registry-write fault classifies as transient I/O"
+    );
+    let reg = ModelRegistry::open(&dir).unwrap();
+    let rec = reg.load("faulted").expect("the retried save registered the model");
+    assert_eq!(rec.centroids.n(), 4);
+    // Without a retry budget the same fault surfaces typed — and no model
+    // file (not even a corrupt one) is left behind.
+    drop(plan);
+    let _plan = FaultPlan::new()
+        .fail_next(FaultSite::RegistryWrite, FaultKind::Error, 1)
+        .install();
+    let strict = coord.submit(fit_into(&dir, "strict", 0)).unwrap().wait();
+    match strict.outcome {
+        Err(ClusterError::Snapshot { .. }) => {}
+        other => panic!("expected a typed snapshot error, got ok={}", other.is_ok()),
+    }
+    assert!(reg.load("strict").is_err(), "a failed save registers nothing");
+    assert!(!reg.model_path("strict").exists(), "no partial file is left behind");
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn registry_write_panic_is_isolated_and_kill_respawns() {
+    use aakm::registry::ModelRegistry;
+    let dir = std::env::temp_dir().join("aakm_fault_registry_panic");
+    let _ = std::fs::remove_dir_all(&dir);
+    // A panic inside the save is confined to the job: typed Internal
+    // error, the worker thread survives (no respawn), the next fit on the
+    // same worker lands its model.
+    let plan = FaultPlan::new()
+        .fail_next(FaultSite::RegistryWrite, FaultKind::Panic, 1)
+        .install();
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        ..CoordinatorConfig::default()
+    });
+    let panicked = coord.submit(fit_into(&dir, "panicked", 0)).unwrap().wait();
+    assert!(
+        matches!(panicked.outcome, Err(ClusterError::Internal(_))),
+        "a save panic resolves typed"
+    );
+    assert_eq!(coord.stats().respawns, 0, "the panic was caught in-job");
+    let reg = ModelRegistry::open(&dir).unwrap();
+    assert!(reg.load("panicked").is_err(), "the panicked save registered nothing");
+    let ok = coord.submit(fit_into(&dir, "after-panic", 0)).unwrap().wait();
+    assert!(ok.outcome.is_ok(), "the same worker serves the next fit");
+    assert!(reg.load("after-panic").is_ok());
+    // A kill during the save escapes isolation: the job still resolves
+    // typed, the supervisor respawns the slot, throughput recovers.
+    drop(plan);
+    let _plan = FaultPlan::new()
+        .fail_next(FaultSite::RegistryWrite, FaultKind::KillWorker, 1)
+        .install();
+    let killed = coord.submit(fit_into(&dir, "killed", 0)).unwrap().wait();
+    match killed.outcome {
+        Err(ClusterError::Internal(msg)) => {
+            assert!(msg.contains("killed"), "the kill is attributed: {msg}");
+        }
+        other => panic!("expected a typed Internal error, got ok={}", other.is_ok()),
+    }
+    assert!(reg.load("killed").is_err());
+    let revived = coord.submit(fit_into(&dir, "after-kill", 0)).unwrap().wait();
+    assert!(revived.outcome.is_ok(), "the respawned worker serves fits");
+    assert!(reg.load("after-kill").is_ok());
+    assert!(coord.stats().respawns >= 1, "the supervisor replaced the dead worker");
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn shutdown_under_load_resolves_every_handle() {
     // Drop the coordinator while jobs are in flight, others are queued

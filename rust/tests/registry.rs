@@ -1,0 +1,281 @@
+//! Model-registry lifecycle contract, end to end through the coordinator:
+//!
+//! * fit jobs round-trip through the `AAKMMR01` format for every engine ×
+//!   precision combination — what `load` returns is bit-identical to what
+//!   the job fitted;
+//! * corrupting a registered model file (byte flips, truncation, a stale
+//!   renamed copy) always surfaces a *typed* error — never a panic, never
+//!   a silently wrong model;
+//! * a warm-start refresh on unchanged data converges in no more
+//!   iterations than the cold fit for every engine, and — for the
+//!   full-batch engines, whose converged state is an exact joint fixed
+//!   point — reproduces the cold centroids bit for bit with a zero drift
+//!   report;
+//! * an interrupted predict job recovers from the journal as a predict
+//!   (model id round-trips through the spec): recovery serves the stored
+//!   model and never re-fits.
+
+use aakm::config::{EngineKind, Precision};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
+use aakm::data::{synth, DataMatrix};
+use aakm::persist::{JournalEvent, JournalWriter};
+use aakm::registry::ModelRegistry;
+use aakm::rng::Pcg32;
+use aakm::ClusterRequest;
+use std::sync::Arc;
+
+const ENGINES: [EngineKind; 5] = [
+    EngineKind::Naive,
+    EngineKind::Hamerly,
+    EngineKind::Elkan,
+    EngineKind::Yinyang,
+    EngineKind::MiniBatch,
+];
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("aakm_registry_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn blobs(seed: u64, n: usize, blobs: usize) -> Arc<DataMatrix> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    Arc::new(synth::gaussian_blobs(&mut rng, n, 4, blobs, 2.0, 0.45))
+}
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        ..CoordinatorConfig::default()
+    })
+}
+
+#[test]
+fn fit_roundtrips_for_every_engine_and_precision() {
+    let dir = tmp("roundtrip");
+    let reg = ModelRegistry::open(&dir).unwrap();
+    let data = blobs(1, 1200, 6);
+    let coord = coordinator();
+    for engine in ENGINES {
+        for precision in [Precision::F64, Precision::F32] {
+            let id = format!("rt-{}-{}", engine.name(), precision.name());
+            let req = ClusterRequest::builder()
+                .inline(Arc::clone(&data))
+                .k(6)
+                .seed(5)
+                .engine(engine)
+                .precision(precision)
+                .threads(1)
+                .chunk_size(256)
+                .fit_into(&dir, &id)
+                .build()
+                .unwrap();
+            let out = coord
+                .submit(req)
+                .unwrap()
+                .wait()
+                .outcome
+                .unwrap_or_else(|e| panic!("{id}: fit failed: {e}"));
+            assert_eq!(out.model.as_deref(), Some(id.as_str()));
+            let rec = reg.load(&id).unwrap();
+            assert_eq!(rec.centroids, out.centroids, "{id}: stored centroids are exact");
+            assert_eq!(rec.precision, precision);
+            assert_eq!(rec.engine, engine.name());
+            assert_eq!(rec.seed, 5);
+            assert_eq!(rec.refreshes, 0);
+            assert_eq!(rec.metrics.iterations, out.iterations as u64, "{id}");
+            assert_eq!(rec.metrics.energy.to_bits(), out.energy.to_bits(), "{id}");
+            if engine == EngineKind::MiniBatch {
+                // Streamed fits may not carry a final full assignment.
+                assert!(
+                    rec.metrics.cluster_counts.is_empty()
+                        || rec.metrics.cluster_counts.len() == 6,
+                    "{id}"
+                );
+            } else {
+                assert_eq!(rec.metrics.cluster_counts.len(), 6, "{id}");
+                assert_eq!(
+                    rec.metrics.cluster_counts.iter().sum::<u64>(),
+                    1200,
+                    "{id}: counts cover every sample"
+                );
+            }
+        }
+    }
+    assert_eq!(reg.list().unwrap().len(), ENGINES.len() * 2);
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupting_a_fitted_model_is_always_a_typed_error() {
+    let dir = tmp("corruption");
+    let reg = ModelRegistry::open(&dir).unwrap();
+    let coord = coordinator();
+    let req = ClusterRequest::builder()
+        .inline(blobs(2, 400, 4))
+        .k(4)
+        .seed(2)
+        .threads(1)
+        .fit_into(&dir, "target")
+        .build()
+        .unwrap();
+    assert!(coord.submit(req).unwrap().wait().outcome.is_ok());
+    coord.shutdown();
+    let path = reg.model_path("target");
+    let bytes = std::fs::read(&path).unwrap();
+    // Every single-byte flip is caught (magic check, record framing or
+    // per-record CRC): typed error, never a panic, never a wrong model.
+    for i in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(reg.load("target").is_err(), "byte {i} flip must not decode");
+    }
+    // Every strict truncation prefix fails closed too.
+    for len in 0..bytes.len() {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        assert!(reg.load("target").is_err(), "{len}-byte prefix must not decode");
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(reg.load("target").is_ok(), "the pristine bytes still load");
+    // A stale copy under another id is rejected, not silently served.
+    std::fs::copy(&path, reg.model_path("imposter")).unwrap();
+    assert!(reg.load("imposter").is_err(), "a renamed model file is stale");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_refresh_on_unchanged_data_converges_no_slower_for_every_engine() {
+    let dir = tmp("warm");
+    let reg = ModelRegistry::open(&dir).unwrap();
+    let data = blobs(9, 2000, 8);
+    let coord = coordinator();
+    for engine in ENGINES {
+        let id = format!("w-{}", engine.name());
+        let fit = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(8)
+            .seed(3)
+            .engine(engine)
+            .threads(1)
+            .chunk_size(256)
+            .fit_into(&dir, &id)
+            .build()
+            .unwrap();
+        let cold = coord
+            .submit(fit)
+            .unwrap()
+            .wait()
+            .outcome
+            .unwrap_or_else(|e| panic!("{id}: cold fit failed: {e}"));
+        assert!(cold.converged, "{id}: cold fit converges");
+        let refresh = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(8)
+            .seed(3)
+            .engine(engine)
+            .threads(1)
+            .chunk_size(256)
+            .refresh_model(&dir, &id)
+            .build()
+            .unwrap();
+        let warm = coord
+            .submit(refresh)
+            .unwrap()
+            .wait()
+            .outcome
+            .unwrap_or_else(|e| panic!("{id}: warm refresh failed: {e}"));
+        assert!(
+            warm.iterations <= cold.iterations,
+            "{id}: warm refresh took {} iterations vs {} cold — warm start regressed",
+            warm.iterations,
+            cold.iterations
+        );
+        let rec = reg.load(&id).unwrap();
+        assert_eq!(rec.refreshes, 1, "{id}: the refresh was recorded");
+        let drift = warm.drift.unwrap_or_else(|| panic!("{id}: refresh reports drift"));
+        assert_eq!(
+            drift.energy_before.to_bits(),
+            cold.energy.to_bits(),
+            "{id}: drift baseline is the stored model"
+        );
+        assert!(rec.drift.is_some(), "{id}: the drift report is persisted");
+        if engine != EngineKind::MiniBatch {
+            // The cold model is an exact joint fixed point (assignment of
+            // the centroids, centroids the means of the assignment), so a
+            // warm start reproduces it bit for bit.
+            assert_eq!(rec.centroids, cold.centroids, "{id}: warm-vs-cold bit parity");
+            assert_eq!(warm.energy.to_bits(), cold.energy.to_bits(), "{id}");
+            assert_eq!(
+                drift.max_displacement.to_bits(),
+                0f64.to_bits(),
+                "{id}: unchanged data means zero centroid drift"
+            );
+        }
+    }
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interrupted_predict_recovers_without_refitting() {
+    let dir = tmp("predict-recovery");
+    let registry_dir = dir.join("registry");
+    let journal_dir = dir.join("journal");
+    let coord = coordinator();
+    // Fit from a journal-able (registry-dataset) source so the predict
+    // spec round-trips through the write-ahead journal.
+    let fit = ClusterRequest::builder()
+        .registry("Birch", 0.002)
+        .k(4)
+        .seed(11)
+        .threads(1)
+        .fit_into(&registry_dir, "served")
+        .build()
+        .unwrap();
+    let cold = coord.submit(fit).unwrap().wait().outcome.expect("fit succeeds");
+    assert!(cold.iterations > 0, "the fit actually ran the solver");
+    // Simulate a process that journaled a predict job and died mid-serve:
+    // Submitted + Started, never Completed.
+    let predict_req = ClusterRequest::builder()
+        .registry("Birch", 0.002)
+        .k(1)
+        .engine(EngineKind::Naive)
+        .threads(1)
+        .predict_with(&registry_dir, "served")
+        .build()
+        .unwrap();
+    let spec = predict_req
+        .journal_spec()
+        .expect("model jobs journal a round-trippable spec");
+    {
+        let mut w = JournalWriter::open(&journal_dir).unwrap();
+        w.append(&JournalEvent::Submitted { job: 0, spec: Some(spec) }).unwrap();
+        w.append(&JournalEvent::Started { job: 0, attempt: 1 }).unwrap();
+    }
+    let handles = coord.recover(&journal_dir).unwrap();
+    assert_eq!(handles.len(), 1, "the interrupted predict is re-submitted");
+    let out = handles
+        .into_iter()
+        .next()
+        .unwrap()
+        .wait()
+        .outcome
+        .expect("recovered predict succeeds");
+    assert_eq!(out.iterations, 0, "recovery served the stored model — it never re-fit");
+    assert_eq!(out.model.as_deref(), Some("served"));
+    let p = out.prediction.expect("the recovered job returns its prediction");
+    assert!(!p.labels.is_empty());
+    assert_eq!(p.labels.len(), p.distances.len());
+    assert!(p.labels.iter().all(|&l| l < 4), "labels index the model's centroids");
+    // The refreshed registry still holds the untouched model.
+    let rec = ModelRegistry::open(&registry_dir).unwrap().load("served").unwrap();
+    assert_eq!(rec.refreshes, 0, "predict never rewrites the model");
+    assert_eq!(rec.centroids, cold.centroids);
+    // Idempotent: a second recovery finds nothing open.
+    assert!(coord.recover(&journal_dir).unwrap().is_empty());
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
