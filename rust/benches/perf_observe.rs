@@ -1,0 +1,162 @@
+//! Observability overhead sweep: the same jobs served three ways —
+//! telemetry off, metrics registry enabled, metrics + JSONL event log —
+//! with the machine-readable trail in `BENCH_observe.json`.
+//!
+//! Jobs run through a single-worker [`Coordinator`] (the real serve
+//! path: queue metrics, pickup instrumentation, the forwarding
+//! observer), warm after a discarded first job, and the per-iteration
+//! solver cost is taken from each outcome's `run_time` so queue time
+//! never pollutes the measurement. The event-log mode includes the
+//! per-iteration energy evaluation that live iteration events imply —
+//! that is the honest price of turning them on.
+//!
+//! Set `PERF_OBSERVE_QUICK=1` for the CI smoke leg: smaller shape and
+//! fewer jobs, `BENCH_observe.json` still written (what CI asserts on).
+
+use aakm::config::{Acceleration, EngineKind};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
+use aakm::data::{synth, DataMatrix};
+use aakm::rng::Pcg32;
+use aakm::telemetry::{self, events};
+use aakm::ClusterRequest;
+use std::sync::Arc;
+
+struct ModeStats {
+    /// Mean solver-reported run time per productive iteration, in µs.
+    iter_us: f64,
+    total_iterations: u64,
+    events_dropped: u64,
+}
+
+fn request(x: &Arc<DataMatrix>, engine: EngineKind, k: usize, seed: u64) -> ClusterRequest {
+    let mut builder = ClusterRequest::builder()
+        .inline(Arc::clone(x))
+        .k(k)
+        .seed(seed)
+        .accel(Acceleration::DynamicM(2))
+        .engine(engine)
+        .threads(1);
+    if engine == EngineKind::MiniBatch {
+        builder = builder.chunk_size(2048);
+    }
+    builder.build().expect("valid request")
+}
+
+/// Serve `jobs` identical-shape requests sequentially on one warm worker
+/// and average the solver's own run time per iteration.
+fn serve_mode(
+    x: &Arc<DataMatrix>,
+    engine: EngineKind,
+    k: usize,
+    jobs: usize,
+    events_path: Option<&std::path::Path>,
+) -> ModeStats {
+    let dropped_before = events::dropped();
+    let guard = events_path.map(|p| {
+        let _ = std::fs::remove_file(p);
+        events::install(p).expect("install event log")
+    });
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        solver_threads: 1,
+        ..CoordinatorConfig::default()
+    });
+    // Discarded warm-up job: builds the worker's workspace so the timed
+    // jobs all reuse warm scratch.
+    coord
+        .submit(request(x, engine, k, 1))
+        .unwrap()
+        .wait()
+        .outcome
+        .expect("warm-up job");
+    let mut run_secs = 0.0;
+    let mut iterations = 0u64;
+    for j in 0..jobs {
+        let out = coord
+            .submit(request(x, engine, k, 2 + j as u64))
+            .unwrap()
+            .wait()
+            .outcome
+            .expect("timed job");
+        run_secs += out.run_time.as_secs_f64();
+        iterations += out.iterations as u64;
+    }
+    coord.shutdown();
+    if let Some(g) = guard {
+        g.close();
+    }
+    ModeStats {
+        iter_us: run_secs * 1e6 / iterations.max(1) as f64,
+        total_iterations: iterations,
+        events_dropped: events::dropped() - dropped_before,
+    }
+}
+
+fn overhead_pct(mode: &ModeStats, off: &ModeStats) -> f64 {
+    if off.iter_us > 0.0 {
+        (mode.iter_us - off.iter_us) / off.iter_us * 100.0
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let quick = std::env::var("PERF_OBSERVE_QUICK").is_ok();
+    let (n, jobs) = if quick { (20_000, 3) } else { (100_000, 8) };
+    println!("## Telemetry overhead — off vs metrics vs metrics+events (quick={quick})\n");
+
+    let mut rng = Pcg32::seed_from_u64(0x0B5E);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, n, 8, 8, 2.0, 0.4));
+    let events_name = format!("aakm-perf-observe-{}.jsonl", std::process::id());
+    let events_path = std::env::temp_dir().join(events_name);
+
+    let mut rows: Vec<String> = Vec::new();
+    for (name, engine) in [("hamerly", EngineKind::Hamerly), ("minibatch", EngineKind::MiniBatch)] {
+        // Mode order matters: the event log is process-global, so it is
+        // installed only for the final mode of each engine.
+        telemetry::disable();
+        let off = serve_mode(&x, engine, 8, jobs, None);
+        telemetry::enable();
+        let metrics = serve_mode(&x, engine, 8, jobs, None);
+        let with_events = serve_mode(&x, engine, 8, jobs, Some(&events_path));
+        telemetry::disable();
+
+        let m_pct = overhead_pct(&metrics, &off);
+        let e_pct = overhead_pct(&with_events, &off);
+        println!(
+            "{name:<10} off {:.2} µs/it ({} it) | metrics {:.2} µs/it ({:+.2}%) | \
+             +events {:.2} µs/it ({:+.2}%, {} dropped)",
+            off.iter_us,
+            off.total_iterations,
+            metrics.iter_us,
+            m_pct,
+            with_events.iter_us,
+            e_pct,
+            with_events.events_dropped,
+        );
+        rows.push(format!(
+            "    {{\"engine\": \"{name}\", \"n\": {n}, \"jobs\": {jobs}, \
+             \"off_iter_us\": {:.3}, \"metrics_iter_us\": {:.3}, \
+             \"metrics_events_iter_us\": {:.3}, \"metrics_overhead_pct\": {m_pct:.2}, \
+             \"events_overhead_pct\": {e_pct:.2}, \"iterations\": {}, \
+             \"events_dropped\": {}}}",
+            off.iter_us,
+            metrics.iter_us,
+            with_events.iter_us,
+            off.total_iterations,
+            with_events.events_dropped,
+        ));
+    }
+    let _ = std::fs::remove_file(&events_path);
+
+    let json = format!(
+        "{{\n  \"bench\": \"perf_observe\",\n  \"quick\": {quick},\n  \
+         \"modes\": [\"off\", \"metrics\", \"metrics_events\"],\n  \"engines\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+    );
+    match std::fs::write("BENCH_observe.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_observe.json"),
+        Err(e) => println!("\ncould not write BENCH_observe.json: {e}"),
+    }
+}

@@ -369,6 +369,28 @@ impl<'a> FixedPointDriver<'a> {
             outstanding,
         };
 
+        // Telemetry is batched in plain locals and flushed once after the
+        // loop: the disabled path costs one relaxed load per run, and the
+        // enabled path adds no atomics (and no allocation) per iteration.
+        let telemetry_on = crate::telemetry::enabled();
+        let iters_at_entry = out.iterations;
+        let accepted_at_entry = out.accepted;
+        let mut aa_proposals = 0u64;
+        let mut aa_rejections = 0u64;
+        let mut aa_restarts = 0u64;
+        const PHASE_SNAP: usize = 32;
+        let mut phase_base = [0u64; PHASE_SNAP];
+        let mut phase_base_len = 0usize;
+        if telemetry_on {
+            // Phase totals may persist in warm workspaces, so record the
+            // run's contribution as a delta against the entry totals.
+            let (_, phases) = step.observe();
+            for (i, (_, total, _)) in phases.phases().iter().enumerate().take(PHASE_SNAP) {
+                phase_base[i] = total.as_micros() as u64;
+                phase_base_len = i + 1;
+            }
+        }
+
         for _t in out.iterations..self.cfg.max_iters {
             // Fault-injection point: inert unless a `FaultPlan` arms the
             // solver-iteration site (robustness tests). Fires before the
@@ -453,6 +475,9 @@ impl<'a> FixedPointDriver<'a> {
                     // this iteration's pass; revert on non-decrease.
                     GuardMode::Deferred => {
                         if e >= e_prev {
+                            if outstanding {
+                                aa_rejections += 1;
+                            }
                             match step.reject() {
                                 Rejection::Converged => {
                                     // Terminal probe, not a productive
@@ -471,12 +496,16 @@ impl<'a> FixedPointDriver<'a> {
                         // until the next pass measures it).
                         outstanding = step.propose(acc, controller.m());
                         candidate = outstanding;
+                        if candidate {
+                            aa_proposals += 1;
+                        }
                     }
                     // Immediate guard: measure the fresh proposal with a
                     // dedicated pass; commit only on strict decrease.
                     GuardMode::Immediate => {
                         candidate = step.propose(acc, controller.m());
                         if candidate {
+                            aa_proposals += 1;
                             match step.evaluate_candidate() {
                                 Ok(Some(e_cand)) if e_cand < e => {
                                     step.accept_candidate();
@@ -486,10 +515,12 @@ impl<'a> FixedPointDriver<'a> {
                                     rejects = 0;
                                 }
                                 Ok(Some(_)) => {
+                                    aa_rejections += 1;
                                     rejects += 1;
                                     if rejects >= restart_after {
                                         acc.reset();
                                         rejects = 0;
+                                        aa_restarts += 1;
                                     }
                                 }
                                 // Interrupted mid-guard: keep the plain
@@ -573,6 +604,26 @@ impl<'a> FixedPointDriver<'a> {
             }
         }
         out.last_energy = e_prev;
+        if telemetry_on {
+            let t = crate::telemetry::metrics();
+            t.solver_runs.inc();
+            let run_iters = out.iterations.saturating_sub(iters_at_entry) as u64;
+            t.solver_iterations.add(run_iters);
+            t.solver_run_iterations.observe(run_iters as f64);
+            t.aa_proposals.add(aa_proposals);
+            t.aa_accepted.add(out.accepted.saturating_sub(accepted_at_entry) as u64);
+            t.aa_rejected.add(aa_rejections);
+            t.aa_restarts.add(aa_restarts);
+            t.solver_m.set(controller.as_ref().map_or(0, MController::m) as i64);
+            let (_, phases) = step.observe();
+            for (i, (name, total, _)) in phases.phases().iter().enumerate() {
+                let base = if i < phase_base_len { phase_base[i] } else { 0 };
+                let micros = (total.as_micros() as u64).saturating_sub(base);
+                if micros > 0 {
+                    t.solver_phase_micros.add(name, micros);
+                }
+            }
+        }
         out
     }
 }

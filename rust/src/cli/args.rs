@@ -20,6 +20,7 @@ const BOOL_FLAGS: &[&str] = &[
     "reseed-empty",
     "cpu-fallback",
     "gc",
+    "json",
 ];
 
 impl Args {

@@ -11,6 +11,7 @@
 //! * `sweep`   — fit a ladder of k values, registering each model.
 //! * `models`  — list / delete / gc registered models.
 //! * `inspect` — show the AOT artifact manifest.
+//! * `telemetry` — dump the metrics registry / validate an event log.
 //! * `help`    — usage.
 //!
 //! Both `run` and `serve` are thin fronts over the same
@@ -88,6 +89,12 @@ COMMANDS:
                is recorded before it runs, and on startup incomplete
                jobs from a previous (crashed or interrupted) serve are
                re-enqueued and counted in the final stats line
+             --metrics-out <file>   enable the telemetry registry and
+               write the Prometheus text exposition there at exit (also
+               prints a p50/p99 queue-wait line in the stats)
+             --events-out <file.jsonl>   enable the structured event log:
+               one JSON object per line (job lifecycle + per-iteration
+               events), written by a non-blocking background writer
     fit      Fit a model and register it
              --registry <dir> --model <id>  plus the `run` data/solver
              flags (--dataset --k --engine --precision --accel --seed
@@ -107,6 +114,12 @@ COMMANDS:
              --registry <dir> [--delete <id>] [--gc]
     inspect  Print the artifact manifest
              --artifacts <dir>
+    telemetry  Observability tooling
+             dump [--json]         print this process's metrics registry
+               (Prometheus text exposition, or the JSON dump)
+             check --events <file.jsonl>   validate an event log against
+               the versioned schema; summarizes counts per event kind and
+               tolerates a torn final line (crash mid-write)
     help     This message
 ";
 
@@ -122,6 +135,11 @@ pub fn dispatch(argv: &[&str]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    // `telemetry` takes a positional action (`dump` / `check`) ahead of
+    // its flags, which the strict flag parser would reject.
+    if cmd == "telemetry" {
+        return cmd_telemetry(rest);
+    }
     let args = Args::parse(rest)?;
     match cmd {
         "run" => cmd_run(&args),
@@ -138,6 +156,54 @@ pub fn dispatch(argv: &[&str]) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command '{other}' (try `repro help`)"),
+    }
+}
+
+/// `telemetry dump` — render this process's metrics registry (Prometheus
+/// text by default, `--json` for the JSON dump); `telemetry check
+/// --events <file>` — validate a JSONL event log against the versioned
+/// schema and summarize it per event kind.
+fn cmd_telemetry(rest: &[&str]) -> Result<()> {
+    let Some((&action, rest)) = rest.split_first() else {
+        bail!("telemetry needs an action: dump | check (try `repro help`)");
+    };
+    let args = Args::parse(rest)?;
+    match action {
+        "dump" => {
+            // Enabling first guarantees every family renders (a disabled
+            // registry would still render, but enable() is what a scraper
+            // of a live process would see).
+            crate::telemetry::enable();
+            if args.flag("json") {
+                println!("{}", crate::telemetry::json_dump());
+            } else {
+                print!("{}", crate::telemetry::prometheus_text());
+            }
+            Ok(())
+        }
+        "check" => {
+            let path = args.get("events").context("--events <file.jsonl> required")?;
+            let (events, torn) =
+                crate::telemetry::events::read_events(std::path::Path::new(path))
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let mut counts: Vec<(String, usize)> = Vec::new();
+            for ev in &events {
+                match counts.iter_mut().find(|(k, _)| *k == ev.kind) {
+                    Some((_, c)) => *c += 1,
+                    None => counts.push((ev.kind.clone(), 1)),
+                }
+            }
+            println!(
+                "{path}: {} valid event(s){}",
+                events.len(),
+                if torn { ", torn final line tolerated" } else { "" }
+            );
+            for (kind, count) in counts {
+                println!("  {kind:>8}  {count}");
+            }
+            Ok(())
+        }
+        other => bail!("unknown telemetry action '{other}' (dump|check)"),
     }
 }
 
@@ -454,6 +520,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let cpu_fallback = args.flag("cpu-fallback");
     let journal = args.get("journal").map(std::path::PathBuf::from);
+    // Observability sinks: either flag turns the process-wide metrics
+    // registry on; --events-out additionally installs the JSONL event log
+    // for the whole serve (job lifecycle + per-iteration events).
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let events_out = args.get("events-out").map(std::path::PathBuf::from);
+    if metrics_out.is_some() || events_out.is_some() {
+        crate::telemetry::enable();
+    }
+    let events_guard = match &events_out {
+        Some(path) => Some(
+            crate::telemetry::events::install(path)
+                .map_err(|e| anyhow::anyhow!("--events-out {}: {e}", path.display()))?,
+        ),
+        None => None,
+    };
     let coord = Coordinator::try_start(CoordinatorConfig {
         workers,
         queue_depth: jobs.max(4),
@@ -562,11 +643,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         admitted as f64 / total.max(1e-9)
     );
     println!(
-        "admission: {} submitted, {} shed, {} recovered; {} retries, {} worker respawns",
-        stats.submitted, stats.shed, stats.recovered, stats.retries, stats.respawns
+        "admission: {} submitted, {} shed, {} recovered; {} retries, {} worker respawns, \
+         {} failed, {} degraded",
+        stats.submitted,
+        stats.shed,
+        stats.recovered,
+        stats.retries,
+        stats.respawns,
+        stats.failed,
+        stats.degraded
     );
+    if crate::telemetry::enabled() {
+        let qw = &crate::telemetry::metrics().job_queue_wait;
+        if qw.count() > 0 {
+            println!(
+                "queue wait: p50 {:.1}ms  p99 {:.1}ms over {} pickups",
+                qw.quantile(0.5) * 1e3,
+                qw.quantile(0.99) * 1e3,
+                qw.count()
+            );
+        }
+    }
     watcher_done.cancel();
     coord.shutdown();
+    if let Some(guard) = events_guard {
+        guard.close();
+        println!(
+            "events: JSONL log written to {} ({} dropped under backpressure)",
+            events_out.as_ref().expect("guard implies path").display(),
+            crate::telemetry::events::dropped()
+        );
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, crate::telemetry::prometheus_text())
+            .with_context(|| format!("--metrics-out {}", path.display()))?;
+        println!("metrics: Prometheus exposition written to {}", path.display());
+    }
     if signals::interrupted() {
         match &journal {
             Some(dir) => println!(
@@ -897,6 +1009,34 @@ mod tests {
         .is_ok());
         assert!(dispatch(&["serve", "--jobs", "1", "--policy", "sometimes"]).is_err());
         assert!(dispatch(&["serve", "--jobs", "1", "--retries", "0"]).is_err());
+    }
+
+    #[test]
+    fn serve_writes_telemetry_sinks_and_telemetry_subcommand_reads_them() {
+        let dir = std::env::temp_dir().join("aakm_cli_tests").join("telemetry");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics = dir.join("metrics.prom");
+        let events = dir.join("events.jsonl");
+        assert!(dispatch(&[
+            "serve", "--workers", "1", "--jobs", "2", "--k", "3", "--scale", "0.005",
+            "--metrics-out", metrics.to_str().unwrap(),
+            "--events-out", events.to_str().unwrap(),
+        ])
+        .is_ok());
+        let exposition = std::fs::read_to_string(&metrics).unwrap();
+        assert!(exposition.contains("aakm_jobs_submitted_total"));
+        assert!(exposition.contains("aakm_job_queue_wait_seconds_bucket"));
+        let (parsed, torn) = crate::telemetry::events::read_events(&events).unwrap();
+        assert!(!torn, "a drained serve closes its event log cleanly");
+        assert!(parsed.iter().filter(|e| e.kind == "outcome").count() >= 2);
+        // The read-side subcommand validates the same artifacts.
+        assert!(dispatch(&["telemetry", "check", "--events", events.to_str().unwrap()]).is_ok());
+        assert!(dispatch(&["telemetry", "dump"]).is_ok());
+        assert!(dispatch(&["telemetry", "dump", "--json"]).is_ok());
+        assert!(dispatch(&["telemetry", "check"]).is_err(), "check requires --events");
+        assert!(dispatch(&["telemetry", "bogus"]).is_err(), "unknown action is loud");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

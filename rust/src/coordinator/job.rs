@@ -180,6 +180,15 @@ pub struct JobOutcome {
     /// Centroid-drift report for refresh jobs: how far the refreshed model
     /// moved from the registered one it warm-started from.
     pub drift: Option<crate::registry::DriftReport>,
+    /// Time this attempt's job spent queued before pickup (mirrors
+    /// [`JobResult::queue_wait`] so the outcome is self-describing when it
+    /// travels without its result envelope).
+    pub queue_wait: Duration,
+    /// Wall-clock time of the successful solve itself (solver-reported for
+    /// clustering jobs, measured for predict jobs) — excludes queue wait,
+    /// failed attempts and retry backoff, which [`JobResult::service_time`]
+    /// includes.
+    pub run_time: Duration,
 }
 
 #[cfg(test)]

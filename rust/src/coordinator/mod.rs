@@ -59,11 +59,12 @@ use crate::config::EngineKind;
 use crate::error::ClusterError;
 use crate::kmeans::Workspace;
 use crate::metrics::Stopwatch;
-use crate::observe::{CancelToken, NoopObserver};
+use crate::observe::{CancelToken, IterationInfo, Observer, ObserverControl, TraceRecord};
 use crate::persist::{self, JournalEvent, JournalWriter};
 use crate::request::ClusterRequest;
 use crate::rng::{Pcg32, Rng};
 use crate::session::ClusterSession;
+use crate::telemetry::events::{self, Event};
 use std::collections::{BinaryHeap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -71,6 +72,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Default bounded channel depth for [`JobHandle::subscribe`] — deep
+/// enough that a subscriber polling at any reasonable cadence keeps the
+/// whole trace, small enough that an abandoned receiver caps its memory.
+pub const SUBSCRIBE_DEPTH: usize = 1024;
 
 /// What [`Coordinator::submit`] does when the bounded queue is full —
 /// the service's admission-control knob.
@@ -139,9 +145,17 @@ pub struct CoordinatorStats {
     pub respawns: u64,
     /// Incomplete journaled jobs [`Coordinator::recover`] re-submitted.
     pub recovered: u64,
+    /// Fulfilled jobs whose final outcome was a typed error (a subset of
+    /// `completed`).
+    pub failed: u64,
+    /// Jobs served on a fallback engine after graceful degradation.
+    pub degraded: u64,
 }
 
-/// Shared counter cells behind [`CoordinatorStats`].
+/// Shared counter cells behind [`CoordinatorStats`]: every field is an
+/// atomic updated in place, so [`Coordinator::stats`] is a lock-free
+/// snapshot and increments from workers, submitters and the supervisor
+/// can never be lost across thread (or respawn) boundaries.
 #[derive(Default)]
 struct Stats {
     submitted: AtomicU64,
@@ -150,6 +164,8 @@ struct Stats {
     retries: AtomicU64,
     respawns: AtomicU64,
     recovered: AtomicU64,
+    failed: AtomicU64,
+    degraded: AtomicU64,
 }
 
 impl Stats {
@@ -161,6 +177,8 @@ impl Stats {
             retries: self.retries.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
             recovered: self.recovered.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
     }
 }
@@ -195,10 +213,62 @@ enum SlotState {
     Done(Option<JobResult>),
 }
 
+/// Live per-iteration progress fan-out for one job. Subscribers attach
+/// bounded channels via [`JobHandle::subscribe`]; the worker-side
+/// observer publishes one [`TraceRecord`] per solver iteration with
+/// `try_send`, so a slow (or abandoned) subscriber can never stall the
+/// solver — overflowing records are dropped and counted instead.
+struct ProgressHub {
+    subscribers: Mutex<Vec<mpsc::SyncSender<TraceRecord>>>,
+    dropped: AtomicU64,
+}
+
+impl ProgressHub {
+    fn new() -> Self {
+        Self { subscribers: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) }
+    }
+
+    /// Poison-tolerant lock (the guarded value is a plain Vec of senders,
+    /// consistent between assignments).
+    fn lock(&self) -> MutexGuard<'_, Vec<mpsc::SyncSender<TraceRecord>>> {
+        self.subscribers.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn has_subscribers(&self) -> bool {
+        !self.lock().is_empty()
+    }
+
+    /// Fan one record out to every live subscriber. Never blocks: a full
+    /// channel drops the record (counted), a disconnected receiver is
+    /// pruned so abandoned subscriptions cost nothing.
+    fn publish(&self, rec: &TraceRecord) {
+        let mut subs = self.lock();
+        if subs.is_empty() {
+            return;
+        }
+        subs.retain(|tx| match tx.try_send(*rec) {
+            Ok(()) => true,
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                crate::telemetry::metrics().progress_dropped.inc();
+                true
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => false,
+        });
+    }
+
+    /// Drop all senders so subscribers observe end-of-stream (their
+    /// `recv` returns `Err`) once the job is resolved.
+    fn finish(&self) {
+        self.lock().clear();
+    }
+}
+
 struct JobShared {
     state: Mutex<SlotState>,
     cv: Condvar,
     cancel: CancelToken,
+    progress: ProgressHub,
 }
 
 impl JobShared {
@@ -207,6 +277,7 @@ impl JobShared {
             state: Mutex::new(SlotState::Queued),
             cv: Condvar::new(),
             cancel: CancelToken::new(),
+            progress: ProgressHub::new(),
         }
     }
 
@@ -226,6 +297,9 @@ impl JobShared {
         *st = SlotState::Done(Some(result));
         drop(st);
         self.cv.notify_all();
+        // Resolving the job ends its progress stream: live subscribers see
+        // channel disconnect right after the last iteration record.
+        self.progress.finish();
     }
 }
 
@@ -261,6 +335,44 @@ impl JobHandle {
     /// The job's cancel token (e.g. to wire several jobs to one switch).
     pub fn cancel_token(&self) -> CancelToken {
         self.shared.cancel.clone()
+    }
+
+    /// Subscribe to the job's live per-iteration progress with the
+    /// default channel depth ([`SUBSCRIBE_DEPTH`]).
+    ///
+    /// The worker running this job publishes one
+    /// [`TraceRecord`](crate::observe::TraceRecord) per solver iteration
+    /// (per epoch for mini-batch jobs — the granularity the driver sees).
+    /// Subscribing before pickup guarantees the full trace; the stream
+    /// ends (the receiver's `recv` returns `Err`) when the job resolves.
+    /// The publisher never blocks: if this subscriber falls behind its
+    /// channel depth, records are dropped and counted in
+    /// [`JobHandle::progress_dropped`]. A retried job streams each
+    /// attempt in sequence, so iteration numbers restart on retry.
+    pub fn subscribe(&self) -> mpsc::Receiver<TraceRecord> {
+        self.subscribe_with_depth(SUBSCRIBE_DEPTH)
+    }
+
+    /// [`JobHandle::subscribe`] with an explicit bounded channel depth
+    /// (clamped to at least 1).
+    pub fn subscribe_with_depth(&self, depth: usize) -> mpsc::Receiver<TraceRecord> {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        self.shared.progress.lock().push(tx);
+        // Subscribing to an already-resolved job must still yield an
+        // ended stream. Re-checking after the push makes the race with a
+        // concurrent resolution safe in both directions: either the
+        // resolver's `finish` saw our sender and cleared it, or we see
+        // the resolved state here and clear it ourselves.
+        if matches!(&*self.shared.lock_state(), SlotState::Done(_)) {
+            self.shared.progress.finish();
+        }
+        rx
+    }
+
+    /// Progress records dropped across this job's subscribers because a
+    /// bounded subscription channel was full at publish time.
+    pub fn progress_dropped(&self) -> u64 {
+        self.shared.progress.dropped.load(Ordering::Relaxed)
     }
 
     /// Block until the job finishes and take its result. The payload is
@@ -374,6 +486,9 @@ impl QueueState {
         }
         self.lanes[idx].heap.push(job);
         self.len += 1;
+        let t = crate::telemetry::metrics();
+        t.queue_depth.add(1);
+        t.queue_lane_depth.add(&self.lanes[idx].client, 1);
     }
 
     fn pop_job(&mut self) -> Option<Box<JobTicket>> {
@@ -383,6 +498,9 @@ impl QueueState {
             self.rotation.push_back(idx);
         }
         self.len -= 1;
+        let t = crate::telemetry::metrics();
+        t.queue_depth.add(-1);
+        t.queue_lane_depth.add(&self.lanes[idx].client, -1);
         Some(job.ticket)
     }
 }
@@ -519,6 +637,7 @@ impl Drop for JobTicket {
             }));
             drop(st);
             self.shared.cv.notify_all();
+            self.shared.progress.finish();
         }
     }
 }
@@ -601,6 +720,8 @@ fn supervise(
                     continue;
                 }
                 stats.respawns.fetch_add(1, Ordering::Relaxed);
+                crate::telemetry::metrics().worker_respawns.inc();
+                events::emit(&Event::Respawn { worker: widx as u64 });
                 let fresh = spawn_worker(
                     widx,
                     cfg.clone(),
@@ -707,6 +828,9 @@ impl Coordinator {
             enqueued_at: Instant::now(),
         });
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        // The lane key moves into the queue below; keep a copy for event
+        // emission only when the event log is actually on.
+        let client_tag = events::events_enabled().then(|| client.clone());
         let job = QueuedJob { priority, seq, client, ticket };
         let pushed = match mode {
             SubmitMode::Block => self.queue.push(job).map(|()| TryPush::Queued),
@@ -727,10 +851,17 @@ impl Coordinator {
             // it here (without the handle ever escaping) is fine.
             TryPush::Full(_ticket) => {
                 journal_append(&self.journal, &JournalEvent::Completed { job: id });
+                if let Some(client) = client_tag {
+                    events::emit(&Event::Shed { client });
+                }
                 return Ok(None);
             }
         }
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::metrics().jobs_submitted.inc();
+        if let Some(client) = client_tag {
+            events::emit(&Event::Submit { job: id, client });
+        }
         Ok(Some(JobHandle { id, shared }))
     }
 
@@ -748,6 +879,7 @@ impl Coordinator {
             Some(handle) => Ok(handle),
             None => {
                 self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                crate::telemetry::metrics().jobs_shed.inc();
                 Err(ClusterError::Overloaded)
             }
         }
@@ -815,6 +947,7 @@ impl Coordinator {
                 let request = ClusterRequest::from_journal_spec(spec)?;
                 handles.push(self.submit(request)?);
                 self.stats.recovered.fetch_add(1, Ordering::Relaxed);
+                crate::telemetry::metrics().jobs_recovered.inc();
             }
             writer.append(&JournalEvent::Completed { job: job.job })?;
         }
@@ -900,6 +1033,14 @@ fn worker_loop(
         let shared = Arc::clone(&ticket.shared);
         let queue_wait = ticket.enqueued_at.elapsed();
         shared.set_running();
+        let telemetry = crate::telemetry::metrics();
+        telemetry.job_queue_wait.observe_duration(queue_wait);
+        telemetry.jobs_inflight.add(1);
+        events::emit(&Event::Pickup {
+            job: id,
+            worker: widx as u64,
+            queue_wait_us: queue_wait.as_micros() as u64,
+        });
         let sw = Stopwatch::start();
         let cancel = shared.cancel.clone();
         let retry = request.retry().cloned();
@@ -912,10 +1053,20 @@ fn worker_loop(
                 break Err(ClusterError::Cancelled);
             }
             journal_append(journal, &JournalEvent::Started { job: id, attempt });
+            events::emit(&Event::Attempt { job: id, attempt: u64::from(attempt) });
             let warm_slot = warm.take();
             let attempt_request = request.clone();
             let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_job(attempt_request, cfg, warm_slot, &mut pjrt, &cancel, queue_wait)
+                run_job(
+                    id,
+                    attempt_request,
+                    cfg,
+                    warm_slot,
+                    &mut pjrt,
+                    &cancel,
+                    queue_wait,
+                    &shared.progress,
+                )
             }));
             let result = match caught {
                 Ok((outcome, ws)) => {
@@ -931,6 +1082,20 @@ fn worker_loop(
                     // this slot.
                     if panic.downcast_ref::<crate::fault::WorkerKilled>().is_some() {
                         stats.completed.fetch_add(1, Ordering::Relaxed);
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                        telemetry.jobs_inflight.add(-1);
+                        telemetry.jobs_completed.inc();
+                        telemetry.jobs_failed.inc();
+                        if events::events_enabled() {
+                            events::emit(&Event::Outcome {
+                                job: id,
+                                ok: false,
+                                error: "worker killed by injected fault".to_string(),
+                                iterations: 0,
+                                energy: f64::NAN,
+                                service_us: sw.elapsed().as_micros() as u64,
+                            });
+                        }
                         shared.fulfill(JobResult {
                             id,
                             outcome: Err(ClusterError::Internal(
@@ -964,8 +1129,16 @@ fn worker_loop(
                     if !transient {
                         break Err(e);
                     }
+                    if events::events_enabled() {
+                        events::emit(&Event::Retry {
+                            job: id,
+                            attempt: u64::from(attempt),
+                            error: e.to_string(),
+                        });
+                    }
                     attempt_errors.push(e);
                     stats.retries.fetch_add(1, Ordering::Relaxed);
+                    telemetry.job_retries.inc();
                     let base = retry.as_ref().expect("transient implies a policy").backoff;
                     let delay = backoff_delay(base, request.seed(), id, attempt);
                     if cancel.sleep_unless_cancelled(delay) {
@@ -975,14 +1148,108 @@ fn worker_loop(
             }
         };
         stats.completed.fetch_add(1, Ordering::Relaxed);
+        let service_time = sw.elapsed();
+        telemetry.jobs_inflight.add(-1);
+        telemetry.jobs_completed.inc();
+        telemetry.job_run.observe_duration(service_time);
+        match &outcome {
+            Ok(out) => {
+                if out.degraded.is_some() {
+                    stats.degraded.fetch_add(1, Ordering::Relaxed);
+                    telemetry.jobs_degraded.inc();
+                    if let Some(engine) = out.degraded {
+                        events::emit(&Event::Degraded {
+                            job: id,
+                            engine: engine.name().to_string(),
+                        });
+                    }
+                }
+                if events::events_enabled() {
+                    events::emit(&Event::Outcome {
+                        job: id,
+                        ok: true,
+                        error: String::new(),
+                        iterations: out.iterations as u64,
+                        energy: out.energy,
+                        service_us: service_time.as_micros() as u64,
+                    });
+                }
+            }
+            Err(e) => {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                telemetry.jobs_failed.inc();
+                if events::events_enabled() {
+                    events::emit(&Event::Outcome {
+                        job: id,
+                        ok: false,
+                        error: e.to_string(),
+                        iterations: 0,
+                        energy: f64::NAN,
+                        service_us: service_time.as_micros() as u64,
+                    });
+                }
+            }
+        }
         shared.fulfill(JobResult {
             id,
             outcome,
             queue_wait,
-            service_time: sw.elapsed(),
+            service_time,
             worker: widx,
         });
         journal_append(journal, &JournalEvent::Completed { job: id });
+    }
+}
+
+/// The observer `run_job` installs on the solver driver: forwards each
+/// iteration to the job's live subscribers (bounded, drop-and-count —
+/// see [`ProgressHub`]) and, when the JSONL event log is installed, to
+/// it as an `iter` event. With no subscribers and no event log it
+/// behaves exactly like the no-op observer — in particular it does not
+/// request the extra energy pass, so un-observed jobs keep their cost.
+struct ForwardObserver<'a> {
+    job: u64,
+    hub: &'a ProgressHub,
+    /// Decided at pickup: a subscriber attached before the run (or an
+    /// installed event log) turns on per-iteration energy measurement so
+    /// the streamed trace matches what [`crate::observe::TraceObserver`]
+    /// would record.
+    wants_energy: bool,
+    events_on: bool,
+}
+
+impl<'a> ForwardObserver<'a> {
+    fn new(job: u64, hub: &'a ProgressHub) -> Self {
+        let events_on = events::events_enabled();
+        Self { job, hub, wants_energy: hub.has_subscribers() || events_on, events_on }
+    }
+}
+
+impl Observer for ForwardObserver<'_> {
+    fn wants_energy(&self) -> bool {
+        self.wants_energy
+    }
+
+    fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ObserverControl {
+        let rec = TraceRecord {
+            iteration: info.iteration,
+            energy: info.energy.unwrap_or(f64::NAN),
+            m: info.m,
+            accelerated_candidate: info.accelerated_candidate,
+            accepted: info.accepted,
+        };
+        self.hub.publish(&rec);
+        if self.events_on {
+            events::emit(&Event::Iteration {
+                job: self.job,
+                iteration: rec.iteration as u64,
+                energy: rec.energy,
+                m: rec.m as u64,
+                accelerated: rec.accelerated_candidate,
+                accepted: rec.accepted,
+            });
+        }
+        ObserverControl::Continue
     }
 }
 
@@ -994,14 +1261,16 @@ fn worker_loop(
 /// past its deadline runs with a zero budget (returning a consistent
 /// initial state flagged [`DeadlinePhase::Queue`]) instead of getting a
 /// fresh full budget at pickup.
-#[allow(clippy::type_complexity)]
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
 fn run_job(
+    id: u64,
     request: ClusterRequest,
     cfg: &CoordinatorConfig,
     warm: Option<Workspace>,
     pjrt: &mut Option<(PathBuf, Rc<crate::runtime::PjrtRuntime>)>,
     cancel: &CancelToken,
     queue_wait: Duration,
+    progress: &ProgressHub,
 ) -> (Result<JobOutcome, ClusterError>, Option<Workspace>) {
     let mut request = request.with_service_defaults(cfg.solver_threads, &cfg.artifact_dir);
     // Predict jobs never run the solver: the registered model is loaded
@@ -1011,7 +1280,7 @@ fn run_job(
         .model_job()
         .is_some_and(|j| j.kind == crate::request::ModelJobKind::Predict)
     {
-        return run_predict_job(&request, warm);
+        return run_predict_job(&request, warm, queue_wait);
     }
     let deadline = request.time_limit();
     let mut queued_out = false;
@@ -1073,10 +1342,12 @@ fn run_job(
         Ok(s) => s,
         Err(e) => return (Err(e), None),
     };
-    let report = match session.run_with(&mut NoopObserver, cancel) {
+    let mut forward = ForwardObserver::new(id, progress);
+    let report = match session.run_with(&mut forward, cancel) {
         Ok(r) => r,
         Err(e) => return (Err(e), Some(session.into_workspace())),
     };
+    let run_time = Duration::from_secs_f64(report.seconds);
     let precision = session.request().precision();
     let engine = session.request().engine();
     let model_job = session.request().model_job().cloned();
@@ -1090,8 +1361,9 @@ fn run_job(
         Err(ClusterError::Cancelled)
     } else {
         // Attribute a budget stop to the phase that spent the deadline.
-        // The service path runs with a no-op observer, so `stopped_early`
-        // can only mean the (remaining) time budget expired.
+        // The forwarding observer never asks the driver to stop, so
+        // `stopped_early` can only mean the (remaining) time budget
+        // expired.
         let timed_out = if deadline.is_none() || !report.stopped_early {
             None
         } else if queued_out {
@@ -1149,6 +1421,8 @@ fn run_job(
             model,
             prediction: None,
             drift,
+            queue_wait,
+            run_time,
         })
     };
     (outcome, Some(ws))
@@ -1160,6 +1434,7 @@ fn run_job(
 fn run_predict_job(
     request: &ClusterRequest,
     warm: Option<Workspace>,
+    queue_wait: Duration,
 ) -> (Result<JobOutcome, ClusterError>, Option<Workspace>) {
     let job = request.model_job().expect("predict path requires a model job").clone();
     let spec = request.workspace_spec();
@@ -1170,6 +1445,7 @@ fn run_predict_job(
             Err(e) => return (Err(e), None),
         },
     };
+    let sw = Stopwatch::start();
     let outcome = (|| {
         let record = crate::registry::ModelRegistry::open(&job.registry)?.load(&job.model)?;
         let x = request.source().materialize()?;
@@ -1191,6 +1467,8 @@ fn run_predict_job(
             model: Some(record.id),
             prediction: Some(prediction),
             drift: None,
+            queue_wait,
+            run_time: sw.elapsed(),
         })
     })();
     (outcome, Some(ws))

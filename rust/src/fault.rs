@@ -247,9 +247,14 @@ fn fire(site: FaultSite) -> Option<FaultKind> {
 pub(crate) fn check(site: FaultSite) -> Result<(), ClusterError> {
     match fire(site) {
         None => Ok(()),
-        Some(FaultKind::Error) => Err(injected_error(site)),
-        Some(FaultKind::Panic) => panic!("injected fault: panic at {site:?}"),
-        Some(FaultKind::KillWorker) => std::panic::panic_any(WorkerKilled),
+        Some(kind) => {
+            crate::telemetry::metrics().fault_injections.inc();
+            match kind {
+                FaultKind::Error => Err(injected_error(site)),
+                FaultKind::Panic => panic!("injected fault: panic at {site:?}"),
+                FaultKind::KillWorker => std::panic::panic_any(WorkerKilled),
+            }
+        }
     }
 }
 

@@ -76,6 +76,13 @@
 //! drifted data warm-started from the stored centroids — the paper's
 //! best-case regime for Anderson acceleration, since the iterate starts
 //! near the fixed point — recording a centroid-drift report on the model.
+//!
+//! Runtime observability lives in [`telemetry`]: an opt-in process-wide
+//! metrics registry (Prometheus text exposition + JSON dump) fed by the
+//! solver driver, coordinator, streaming engine and durability layers; a
+//! bounded non-blocking JSONL event log ([`telemetry::events`]); and live
+//! per-iteration progress streamed out of the coordinator via
+//! [`coordinator::JobHandle::subscribe`].
 
 // Kernel-style numeric code throughout this crate indexes several parallel
 // arrays per loop; rewriting those loops as iterator chains would obscure
@@ -105,6 +112,7 @@ pub mod rng;
 pub mod runtime;
 pub mod session;
 pub mod stream;
+pub mod telemetry;
 
 pub use error::ClusterError;
 pub use observe::{CancelToken, Observer};

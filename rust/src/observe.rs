@@ -142,10 +142,14 @@ pub struct TraceRecord {
 
 /// Built-in observer that records one [`TraceRecord`] per iteration —
 /// the observer-API equivalent of `SolverConfig::record_trace`, without
-/// touching the report.
+/// touching the report. By default the trace is unbounded;
+/// [`TraceObserver::with_capacity_limit`] caps it as a newest-wins ring
+/// (long-running jobs keep the trace tail without unbounded memory).
 #[derive(Debug, Clone, Default)]
 pub struct TraceObserver {
     records: Vec<TraceRecord>,
+    /// `Some(cap)` bounds `records` to the most recent `cap` entries.
+    limit: Option<usize>,
 }
 
 impl TraceObserver {
@@ -154,7 +158,17 @@ impl TraceObserver {
         Self::default()
     }
 
-    /// Recorded iterations, in order.
+    /// Trace recorder that keeps only the most recent `limit` iterations
+    /// (clamped to at least 1): once full, each new record evicts the
+    /// oldest. [`TraceObserver::records`] still returns the kept tail
+    /// oldest-first, so downstream consumers are unaffected by the cap.
+    pub fn with_capacity_limit(limit: usize) -> Self {
+        let limit = limit.max(1);
+        Self { records: Vec::with_capacity(limit), limit: Some(limit) }
+    }
+
+    /// Recorded iterations, in order (the most recent `limit` of them
+    /// when a capacity limit is set).
     pub fn records(&self) -> &[TraceRecord] {
         &self.records
     }
@@ -171,13 +185,24 @@ impl Observer for TraceObserver {
     }
 
     fn on_iteration(&mut self, info: &IterationInfo<'_>) -> ObserverControl {
-        self.records.push(TraceRecord {
+        let rec = TraceRecord {
             iteration: info.iteration,
             energy: info.energy.unwrap_or(f64::NAN),
             m: info.m,
             accelerated_candidate: info.accelerated_candidate,
             accepted: info.accepted,
-        });
+        };
+        if let Some(cap) = self.limit {
+            if self.records.len() == cap {
+                // Shift-down eviction keeps `records()` a plain
+                // oldest-first slice; records are small `Copy` structs and
+                // the shift is allocation-free, so the O(cap) move per
+                // iteration is noise next to a data pass.
+                self.records.copy_within(1.., 0);
+                self.records.pop();
+            }
+        }
+        self.records.push(rec);
         ObserverControl::Continue
     }
 }
@@ -287,6 +312,25 @@ mod tests {
         assert_eq!(t.records().len(), 3);
         assert_eq!(t.energies(), vec![10.0, 8.0, 7.5]);
         assert_eq!(t.records()[1].iteration, 2);
+    }
+
+    #[test]
+    fn capacity_limited_trace_keeps_newest_records() {
+        let c = DataMatrix::zeros(1, 1);
+        let p = PhaseTimer::new();
+        let mut t = TraceObserver::with_capacity_limit(3);
+        for i in 1..=7 {
+            t.on_iteration(&info(i, 100.0 - i as f64, &c, &p));
+        }
+        let iters: Vec<usize> = t.records().iter().map(|r| r.iteration).collect();
+        assert_eq!(iters, vec![5, 6, 7], "ring keeps the newest, oldest-first");
+        assert_eq!(t.energies(), vec![95.0, 94.0, 93.0]);
+        // A zero limit is clamped rather than recording nothing.
+        let mut z = TraceObserver::with_capacity_limit(0);
+        z.on_iteration(&info(1, 1.0, &c, &p));
+        z.on_iteration(&info(2, 0.5, &c, &p));
+        assert_eq!(z.records().len(), 1);
+        assert_eq!(z.records()[0].iteration, 2);
     }
 
     #[test]

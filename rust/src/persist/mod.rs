@@ -664,6 +664,7 @@ pub fn decode_snapshot(bytes: &[u8], path: &Path) -> Result<SolverSnapshot, Clus
 /// point leaves either the old complete snapshot or the new complete
 /// snapshot on disk — never a torn one.
 pub fn write_snapshot(dir: &Path, snap: &SolverSnapshot) -> Result<PathBuf, ClusterError> {
+    let sw = crate::metrics::Stopwatch::start();
     let path = snapshot_path(dir);
     let fail = |reason: String| ClusterError::Snapshot {
         path: path.display().to_string(),
@@ -695,6 +696,12 @@ pub fn write_snapshot(dir: &Path, snap: &SolverSnapshot) -> Result<PathBuf, Clus
     // Best-effort directory sync so the rename itself is durable.
     if let Ok(d) = std::fs::File::open(dir) {
         let _ = d.sync_all();
+    }
+    if crate::telemetry::enabled() {
+        let t = crate::telemetry::metrics();
+        t.snapshot_writes.inc();
+        t.snapshot_bytes.add(bytes.len() as u64);
+        t.snapshot_write_seconds.observe(sw.seconds());
     }
     Ok(path)
 }

@@ -248,6 +248,7 @@ impl ModelRegistry {
     /// any point leaves either the old complete record or the new complete
     /// record on disk — never a torn one.
     pub fn save(&self, record: &ModelRecord) -> Result<PathBuf, ClusterError> {
+        let sw = crate::metrics::Stopwatch::start();
         validate_model_id(&record.id)?;
         let path = self.model_path(&record.id);
         let fail = |reason: String| ClusterError::Snapshot {
@@ -282,6 +283,12 @@ impl ModelRegistry {
         // support fsync on directories).
         if let Ok(d) = std::fs::File::open(&self.dir) {
             let _ = d.sync_all();
+        }
+        if crate::telemetry::enabled() {
+            let t = crate::telemetry::metrics();
+            t.model_writes.inc();
+            t.model_bytes.add(bytes.len() as u64);
+            t.model_write_seconds.observe(sw.seconds());
         }
         Ok(path)
     }

@@ -282,8 +282,8 @@ impl EpochStep<'_> {
     /// Produce the next training batch into the chunk buffer: the next
     /// sequential chunk, or a sorted with-replacement draw.
     fn next_train_chunk(&mut self) -> Result<usize, ClusterError> {
-        match self.sampling {
-            BatchSampling::Sequential => self.source.next_chunk(self.chunk_rows, &mut self.chunk),
+        let got = match self.sampling {
+            BatchSampling::Sequential => self.source.next_chunk(self.chunk_rows, &mut self.chunk)?,
             BatchSampling::Replacement => {
                 let n = self.source_len.expect("replacement sampling requires a bounded source");
                 if n == 0 {
@@ -302,9 +302,15 @@ impl EpochStep<'_> {
                 // update, not their order.
                 self.sample_idx.sort_unstable();
                 self.source.gather_rows(&self.sample_idx, &mut self.chunk)?;
-                Ok(self.chunk_rows)
+                self.chunk_rows
             }
+        };
+        if got > 0 && crate::telemetry::enabled() {
+            let t = crate::telemetry::metrics();
+            t.stream_chunks.inc();
+            t.stream_rows.add(got as u64);
         }
+        Ok(got)
     }
 
     /// One full-energy checkpoint pass: rewind the source and accumulate
@@ -340,6 +346,11 @@ impl EpochStep<'_> {
             let got = source.next_chunk(*chunk_rows, chunk)?;
             if got == 0 {
                 break;
+            }
+            if crate::telemetry::enabled() {
+                let t = crate::telemetry::metrics();
+                t.stream_chunks.inc();
+                t.stream_rows.add(got as u64);
             }
             // Per-chunk reset, as in the training pass: never let bound
             // state from one chunk's samples prune another's.

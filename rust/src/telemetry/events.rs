@@ -1,0 +1,632 @@
+//! Structured JSONL event log: one flat JSON object per line with a
+//! versioned schema (`"v"`), a wall-clock microsecond timestamp
+//! (`"ts_us"`) and a `"kind"` tag, covering the coordinator job
+//! lifecycle (submit → pickup → attempt → outcome, plus shed / retry /
+//! respawn / degraded) and per-iteration solver progress.
+//!
+//! The writer is **bounded and non-blocking**: [`emit`] hands the
+//! rendered line to a background thread over a bounded channel with
+//! `try_send`, and on a full buffer the line is dropped and counted
+//! ([`dropped`], `aakm_events_dropped_total`) instead of ever stalling
+//! the solver or a coordinator worker. [`read_events`] parses a log
+//! back with the persist idiom for durability files: strict on
+//! interior lines, lenient on a torn tail (a crash mid-append loses at
+//! most the final partial line).
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// Version stamped into (and required of) every event line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default bounded-buffer capacity (lines) for the background writer.
+pub const DEFAULT_BUFFER: usize = 4096;
+
+static EVENTS_ON: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Option<SyncSender<String>>> = Mutex::new(None);
+
+/// Whether an event log is installed (one relaxed load).
+#[inline(always)]
+pub fn events_enabled() -> bool {
+    EVENTS_ON.load(Ordering::Relaxed)
+}
+
+/// Lines dropped because the bounded buffer was full (process-wide,
+/// monotone — counted even when the metrics registry is disabled).
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// One telemetry event. Rendering is hand-rolled (flat objects only)
+/// so the hot path never needs an external serializer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Job admitted into the queue.
+    Submit { job: u64, client: String },
+    /// Job rejected by admission control.
+    Shed { client: String },
+    /// Worker picked the job off the queue.
+    Pickup { job: u64, worker: u64, queue_wait_us: u64 },
+    /// One execution attempt started.
+    Attempt { job: u64, attempt: u64 },
+    /// Attempt failed with a retryable fault; the job will re-run.
+    Retry { job: u64, attempt: u64, error: String },
+    /// Job degraded to a fallback engine after an engine-load fault.
+    Degraded { job: u64, engine: String },
+    /// Terminal outcome of a job.
+    Outcome { job: u64, ok: bool, error: String, iterations: u64, energy: f64, service_us: u64 },
+    /// Supervisor replaced a dead worker.
+    Respawn { worker: u64 },
+    /// One productive solver iteration of a coordinator job.
+    Iteration { job: u64, iteration: u64, energy: f64, m: u64, accelerated: bool, accepted: bool },
+}
+
+impl Event {
+    /// The `"kind"` tag of this event.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Submit { .. } => "submit",
+            Event::Shed { .. } => "shed",
+            Event::Pickup { .. } => "pickup",
+            Event::Attempt { .. } => "attempt",
+            Event::Retry { .. } => "retry",
+            Event::Degraded { .. } => "degraded",
+            Event::Outcome { .. } => "outcome",
+            Event::Respawn { .. } => "respawn",
+            Event::Iteration { .. } => "iter",
+        }
+    }
+
+    /// Render as one schema-versioned JSONL line (no trailing newline).
+    pub fn to_line(&self, ts_us: u64) -> String {
+        let mut w = LineWriter::new(self.kind(), ts_us);
+        match self {
+            Event::Submit { job, client } => {
+                w.unum("job", *job);
+                w.str("client", client);
+            }
+            Event::Shed { client } => w.str("client", client),
+            Event::Pickup { job, worker, queue_wait_us } => {
+                w.unum("job", *job);
+                w.unum("worker", *worker);
+                w.unum("queue_wait_us", *queue_wait_us);
+            }
+            Event::Attempt { job, attempt } => {
+                w.unum("job", *job);
+                w.unum("attempt", *attempt);
+            }
+            Event::Retry { job, attempt, error } => {
+                w.unum("job", *job);
+                w.unum("attempt", *attempt);
+                w.str("error", error);
+            }
+            Event::Degraded { job, engine } => {
+                w.unum("job", *job);
+                w.str("engine", engine);
+            }
+            Event::Outcome { job, ok, error, iterations, energy, service_us } => {
+                w.unum("job", *job);
+                w.boolean("ok", *ok);
+                w.str("error", error);
+                w.unum("iterations", *iterations);
+                w.fnum("energy", *energy);
+                w.unum("service_us", *service_us);
+            }
+            Event::Respawn { worker } => w.unum("worker", *worker),
+            Event::Iteration { job, iteration, energy, m, accelerated, accepted } => {
+                w.unum("job", *job);
+                w.unum("iteration", *iteration);
+                w.fnum("energy", *energy);
+                w.unum("m", *m);
+                w.boolean("accelerated", *accelerated);
+                w.boolean("accepted", *accepted);
+            }
+        }
+        w.finish()
+    }
+}
+
+/// Required non-header keys per kind, used by the schema validator.
+fn required_keys(kind: &str) -> Option<&'static [&'static str]> {
+    Some(match kind {
+        "submit" => &["job", "client"],
+        "shed" => &["client"],
+        "pickup" => &["job", "worker", "queue_wait_us"],
+        "attempt" => &["job", "attempt"],
+        "retry" => &["job", "attempt", "error"],
+        "degraded" => &["job", "engine"],
+        "outcome" => &["job", "ok", "error", "iterations", "energy", "service_us"],
+        "respawn" => &["worker"],
+        "iter" => &["job", "iteration", "energy", "m", "accelerated", "accepted"],
+        _ => return None,
+    })
+}
+
+struct LineWriter {
+    buf: String,
+}
+
+impl LineWriter {
+    fn new(kind: &str, ts_us: u64) -> Self {
+        Self { buf: format!("{{\"v\":{SCHEMA_VERSION},\"ts_us\":{ts_us},\"kind\":\"{kind}\"") }
+    }
+
+    fn unum(&mut self, key: &str, v: u64) {
+        self.buf.push_str(&format!(",\"{key}\":{v}"));
+    }
+
+    /// Finite floats render as numbers; NaN/inf (a mini-batch trace
+    /// without an energy sample) render as `null`.
+    fn fnum(&mut self, key: &str, v: f64) {
+        if v.is_finite() {
+            self.buf.push_str(&format!(",\"{key}\":{v:?}"));
+        } else {
+            self.buf.push_str(&format!(",\"{key}\":null"));
+        }
+    }
+
+    fn boolean(&mut self, key: &str, v: bool) {
+        self.buf.push_str(&format!(",\"{key}\":{v}"));
+    }
+
+    fn str(&mut self, key: &str, v: &str) {
+        self.buf.push_str(&format!(",\"{key}\":\"{}\"", escape_json(v)));
+    }
+
+    fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Owns the background writer. Dropping it (or calling
+/// [`EventLogGuard::close`]) disables [`emit`], flushes buffered lines
+/// and joins the writer thread.
+#[derive(Debug)]
+pub struct EventLogGuard {
+    path: PathBuf,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl EventLogGuard {
+    /// Where the log is being written.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Disable emission, flush and join the writer.
+    pub fn close(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        EVENTS_ON.store(false, Ordering::SeqCst);
+        // Dropping the sender closes the channel; the writer drains
+        // whatever is buffered, flushes and exits.
+        *SINK.lock().unwrap_or_else(|p| p.into_inner()) = None;
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EventLogGuard {
+    fn drop(&mut self) {
+        if self.thread.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+/// Install the process-wide event log writing to `path` (truncating),
+/// with the default buffer capacity.
+pub fn install(path: &Path) -> std::io::Result<EventLogGuard> {
+    install_with_capacity(path, DEFAULT_BUFFER)
+}
+
+/// Install the process-wide event log with an explicit bounded-buffer
+/// capacity. Errors if a log is already installed.
+pub fn install_with_capacity(path: &Path, capacity: usize) -> std::io::Result<EventLogGuard> {
+    let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    if sink.is_some() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::AlreadyExists,
+            "telemetry event log already installed",
+        ));
+    }
+    let file = std::fs::File::create(path)?;
+    let (tx, rx) = sync_channel::<String>(capacity.max(1));
+    let thread = std::thread::Builder::new().name("aakm-events".into()).spawn(move || {
+        let mut w = std::io::BufWriter::new(file);
+        while let Ok(line) = rx.recv() {
+            let _ = w.write_all(line.as_bytes());
+            let _ = w.write_all(b"\n");
+            // Drain opportunistically, then flush once the buffer is
+            // empty: batching under load, prompt lines when idle.
+            while let Ok(next) = rx.try_recv() {
+                let _ = w.write_all(next.as_bytes());
+                let _ = w.write_all(b"\n");
+            }
+            let _ = w.flush();
+        }
+        let _ = w.flush();
+    })?;
+    *sink = Some(tx);
+    drop(sink);
+    EVENTS_ON.store(true, Ordering::SeqCst);
+    Ok(EventLogGuard { path: path.to_path_buf(), thread: Some(thread) })
+}
+
+/// Emit one event. Never blocks: with no log installed this is one
+/// relaxed load; with a full buffer the line is dropped and counted.
+pub fn emit(ev: &Event) {
+    if !events_enabled() {
+        return;
+    }
+    let line = ev.to_line(unix_micros());
+    let sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(tx) = sink.as_ref() else {
+        return;
+    };
+    match tx.try_send(line) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+            super::metrics().events_dropped.inc();
+        }
+    }
+}
+
+fn unix_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// A parsed event line: the schema header plus every other field in
+/// line order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEvent {
+    pub v: u64,
+    pub ts_us: u64,
+    pub kind: String,
+    pub fields: Vec<(String, FieldValue)>,
+}
+
+impl ParsedEvent {
+    /// Numeric field by key.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+            FieldValue::Num(n) => Some(*n),
+            _ => None,
+        })
+    }
+
+    /// String field by key.
+    pub fn text(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+            FieldValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        })
+    }
+
+    /// Boolean field by key.
+    pub fn boolean(&self, key: &str) -> Option<bool> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+            FieldValue::Bool(b) => Some(*b),
+            _ => None,
+        })
+    }
+
+    /// Whether the field exists and is JSON `null`.
+    pub fn is_null(&self, key: &str) -> bool {
+        matches!(
+            self.fields.iter().find(|(k, _)| k == key),
+            Some((_, FieldValue::Null))
+        )
+    }
+}
+
+/// A flat JSON value as found in event lines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+/// Parse and schema-validate one event line: well-formed flat JSON,
+/// `v == 1`, a known `kind`, and that kind's required fields present.
+pub fn parse_line(line: &str) -> Result<ParsedEvent, String> {
+    let mut fields = parse_flat_object(line)?;
+    fn take_header_num(fields: &mut Vec<(String, FieldValue)>, key: &str) -> Result<u64, String> {
+        let idx = fields
+            .iter()
+            .position(|(k, _)| k == key)
+            .ok_or_else(|| format!("missing '{key}' header"))?;
+        match fields.remove(idx).1 {
+            FieldValue::Num(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as u64),
+            other => Err(format!("'{key}' must be a non-negative integer, got {other:?}")),
+        }
+    }
+    let v = take_header_num(&mut fields, "v")?;
+    if v != SCHEMA_VERSION {
+        return Err(format!("unsupported event schema version {v} (want {SCHEMA_VERSION})"));
+    }
+    let ts_us = take_header_num(&mut fields, "ts_us")?;
+    let kind_idx =
+        fields.iter().position(|(k, _)| k == "kind").ok_or("missing 'kind' header")?;
+    let kind = match fields.remove(kind_idx).1 {
+        FieldValue::Str(s) => s,
+        other => return Err(format!("'kind' must be a string, got {other:?}")),
+    };
+    let required =
+        required_keys(&kind).ok_or_else(|| format!("unknown event kind '{kind}'"))?;
+    for key in required {
+        if !fields.iter().any(|(k, _)| k == key) {
+            return Err(format!("event kind '{kind}' is missing required field '{key}'"));
+        }
+    }
+    Ok(ParsedEvent { v, ts_us, kind, fields })
+}
+
+/// Read a JSONL event log with torn-tail tolerance: every complete
+/// line must parse (an interior corruption is an error naming the line
+/// number), while a final line without a trailing newline — a torn
+/// append — is ignored and reported via the returned flag.
+pub fn read_events(path: &Path) -> Result<(Vec<ParsedEvent>, bool), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let torn = !text.is_empty() && !text.ends_with('\n');
+    let mut complete: Vec<&str> = text.lines().collect();
+    if torn {
+        complete.pop();
+    }
+    let mut out = Vec::with_capacity(complete.len());
+    for (i, line) in complete.iter().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let ev = parse_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(ev);
+    }
+    Ok((out, torn))
+}
+
+// ---- flat JSON object parsing ------------------------------------------
+
+fn parse_flat_object(s: &str) -> Result<Vec<(String, FieldValue)>, String> {
+    let mut p = Parser { bytes: s.trim().as_bytes(), i: 0 };
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            let value = p.value()?;
+            out.push((key, value));
+            p.skip_ws();
+            match p.next_byte() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+    p.skip_ws();
+    if p.i != p.bytes.len() {
+        return Err("trailing bytes after object".into());
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.i).copied()
+    }
+
+    fn next_byte(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.i += 1;
+        }
+        b
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next_byte() {
+            Some(b) if b == want => Ok(()),
+            other => Err(format!("expected '{}', got {other:?}", want as char)),
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next_byte() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next_byte() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.next_byte().ok_or("truncated \\u escape")?;
+                            code = code * 16
+                                + (d as char).to_digit(16).ok_or("bad \\u escape digit")?;
+                        }
+                        out.push(char::from_u32(code).ok_or("bad \\u code point")?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(b) if b < 0x20 => return Err("raw control byte in string".into()),
+                Some(b) => {
+                    // Re-assemble multi-byte UTF-8 sequences byte-wise.
+                    let start = self.i - 1;
+                    let width = utf8_width(b)?;
+                    let end = start + width;
+                    if end > self.bytes.len() {
+                        return Err("truncated UTF-8 sequence".into());
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| "invalid UTF-8 in string")?;
+                    out.push_str(chunk);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<FieldValue, String> {
+        match self.peek() {
+            Some(b'"') => Ok(FieldValue::Str(self.string()?)),
+            Some(b't') => self.literal("true").map(|()| FieldValue::Bool(true)),
+            Some(b'f') => self.literal("false").map(|()| FieldValue::Bool(false)),
+            Some(b'n') => self.literal("null").map(|()| FieldValue::Null),
+            Some(b'-' | b'0'..=b'9') => {
+                let start = self.i;
+                while matches!(self.peek(), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+                    self.i += 1;
+                }
+                let text = std::str::from_utf8(&self.bytes[start..self.i]).unwrap_or("");
+                text.parse::<f64>()
+                    .map(FieldValue::Num)
+                    .map_err(|_| format!("bad number '{text}'"))
+            }
+            other => Err(format!(
+                "unexpected value start {other:?} (not part of the flat event schema)"
+            )),
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Result<(), String> {
+        for b in word.bytes() {
+            self.expect(b)?;
+        }
+        Ok(())
+    }
+}
+
+fn utf8_width(b: u8) -> Result<usize, String> {
+    match b {
+        0x00..=0x7f => Ok(1),
+        0xc0..=0xdf => Ok(2),
+        0xe0..=0xef => Ok(3),
+        0xf0..=0xf7 => Ok(4),
+        _ => Err("invalid UTF-8 lead byte".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_round_trips_through_the_parser() {
+        let events = vec![
+            Event::Submit { job: 7, client: "tenant-a".into() },
+            Event::Shed { client: "tenant-\"b\"".into() },
+            Event::Pickup { job: 7, worker: 2, queue_wait_us: 1500 },
+            Event::Attempt { job: 7, attempt: 1 },
+            Event::Retry { job: 7, attempt: 1, error: "chunk read: injected\nfault".into() },
+            Event::Degraded { job: 7, engine: "naive".into() },
+            Event::Outcome {
+                job: 7,
+                ok: true,
+                error: String::new(),
+                iterations: 42,
+                energy: 1234.5,
+                service_us: 99_000,
+            },
+            Event::Respawn { worker: 2 },
+            Event::Iteration {
+                job: 7,
+                iteration: 3,
+                energy: f64::NAN,
+                m: 2,
+                accelerated: true,
+                accepted: false,
+            },
+        ];
+        for ev in &events {
+            let line = ev.to_line(123_456);
+            let parsed = parse_line(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(parsed.v, SCHEMA_VERSION);
+            assert_eq!(parsed.ts_us, 123_456);
+            assert_eq!(parsed.kind, ev.kind());
+        }
+        // Spot-check field fidelity, including escapes and NaN → null.
+        let retry = parse_line(&events[4].to_line(1)).unwrap();
+        assert_eq!(retry.text("error"), Some("chunk read: injected\nfault"));
+        assert_eq!(retry.num("attempt"), Some(1.0));
+        let iter = parse_line(&events[8].to_line(1)).unwrap();
+        assert!(iter.is_null("energy"), "NaN energy must serialize as null");
+        assert_eq!(iter.boolean("accelerated"), Some(true));
+        assert_eq!(iter.boolean("accepted"), Some(false));
+        let shed = parse_line(&events[1].to_line(1)).unwrap();
+        assert_eq!(shed.text("client"), Some("tenant-\"b\""));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_and_off_schema_lines() {
+        for bad in [
+            "",
+            "{",
+            "not json",
+            "{\"v\":1}",                                              // missing headers
+            "{\"v\":2,\"ts_us\":1,\"kind\":\"submit\",\"job\":1,\"client\":\"c\"}", // bad version
+            "{\"v\":1,\"ts_us\":1,\"kind\":\"mystery\"}",             // unknown kind
+            "{\"v\":1,\"ts_us\":1,\"kind\":\"submit\",\"job\":1}",    // missing required field
+            "{\"v\":1,\"ts_us\":1,\"kind\":\"submit\",\"job\":1,\"client\":\"c\"}x", // trailing
+            "{\"v\":1,\"ts_us\":1,\"kind\":\"submit\",\"job\":{},\"client\":\"c\"}", // nested
+        ] {
+            assert!(parse_line(bad).is_err(), "must reject: {bad}");
+        }
+    }
+}

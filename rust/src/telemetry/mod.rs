@@ -1,0 +1,664 @@
+//! Process-wide telemetry: a lock-cheap metrics registry plus a
+//! structured JSONL event log ([`events`]).
+//!
+//! The registry holds atomic [`Counter`]s, [`Gauge`]s and fixed-bucket
+//! [`Histogram`]s covering the solver driver (iterations, AA
+//! accept/reject, restarts, per-phase time), the coordinator (queue
+//! depth per client lane, queue-wait/run-time distributions, admission
+//! and supervision counters), the streaming engine (chunks, rows),
+//! durability (snapshot/model write latency + bytes) and fault
+//! injection. [`prometheus_text`] renders the whole registry in the
+//! Prometheus text exposition format; [`json_dump`] renders the same
+//! data as one JSON object.
+//!
+//! Collection is **off by default** and gated on a single relaxed
+//! atomic load ([`enabled`]): every mutation primitive early-returns
+//! when disabled, and the solver hot loop additionally batches its
+//! counts in locals and flushes once per run, so un-instrumented runs
+//! pay nothing (asserted by `benches/perf_observe.rs` and the counting
+//! allocator in `tests/alloc_reuse.rs`). Enabling is process-wide
+//! ([`enable`]) — the CLI does it for `serve --metrics-out` and
+//! `telemetry dump`.
+
+pub mod events;
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn metric collection on, process-wide. Forces registry
+/// initialization so later recording never allocates.
+pub fn enable() {
+    let _ = metrics();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn metric collection off again (recorded values are kept).
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Whether metric collection is on. One relaxed load — cheap enough
+/// for per-iteration checks; hot loops still batch in locals.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotonically increasing event count. All mutations are relaxed
+/// atomics: concurrent increments never lose counts (asserted by the
+/// registry concurrency test).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add 1 (no-op while telemetry is disabled).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (no-op while telemetry is disabled).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value (queue depths, in-flight jobs, last
+/// dynamic-m window).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set to `v` (no-op while telemetry is disabled).
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.value.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Add a signed delta (no-op while telemetry is disabled).
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        if enabled() {
+            self.value.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency bucket upper bounds in seconds (log-spaced 100µs..30s).
+pub const LATENCY_BOUNDS: &[f64] = &[
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0, 10.0, 30.0,
+];
+
+/// Iteration-count bucket upper bounds (powers of two).
+pub const ITERATION_BOUNDS: &[f64] =
+    &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+/// Fixed-bucket histogram: `bounds.len() + 1` atomic buckets (the last
+/// is the `+Inf` overflow), an atomic micro-unit sum and a count. All
+/// recording is lock- and allocation-free; the bucket bounds are static
+/// so a registry entry is built exactly once.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Box<[AtomicU64]>,
+    sum_micro: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// Histogram over the given ascending upper bounds.
+    pub fn with_bounds(bounds: &'static [f64]) -> Self {
+        let buckets: Box<[AtomicU64]> =
+            (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice();
+        Self { bounds, buckets, sum_micro: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    /// Record one sample (no-op while telemetry is disabled).
+    #[inline]
+    pub fn observe(&self, value: f64) {
+        if !enabled() {
+            return;
+        }
+        let v = if value.is_finite() && value > 0.0 { value } else { 0.0 };
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micro.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration, in seconds.
+    #[inline]
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded samples (micro-unit resolution).
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Bucket upper bounds.
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts, `bounds().len() + 1` entries (last = overflow).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Estimated q-quantile (`0.0..=1.0`) by linear interpolation within
+    /// the bucket containing the target rank. Returns 0 with no samples;
+    /// samples in the overflow bucket report the last finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            cum += c;
+            if c > 0 && cum >= target {
+                let last = self.bounds.last().copied().unwrap_or(0.0);
+                let hi = self.bounds.get(i).copied().unwrap_or(last);
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let into = (target - (cum - c)) as f64 / c as f64;
+                return lo + (hi - lo) * into;
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Small labelled family of signed gauges (per-client queue-lane
+/// depth). Mutations take a mutex but only ever run on queue push/pop —
+/// never inside the solver loop — and allocate only on first sight of a
+/// label.
+#[derive(Debug, Default)]
+pub struct LabeledGauges {
+    inner: Mutex<Vec<(String, i64)>>,
+}
+
+impl LabeledGauges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to the gauge for `label` (no-op while disabled).
+    pub fn add(&self, label: &str, delta: i64) {
+        if !enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(entry) = g.iter_mut().find(|(name, _)| name == label) {
+            entry.1 += delta;
+        } else {
+            g.push((label.to_string(), delta));
+        }
+    }
+
+    /// Snapshot of `(label, value)` pairs in first-seen order.
+    pub fn snapshot(&self) -> Vec<(String, i64)> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+/// Small labelled family of counters in micro-units (per-phase solver
+/// time). Flushed once per run, not per iteration.
+#[derive(Debug, Default)]
+pub struct LabeledCounters {
+    inner: Mutex<Vec<(String, u64)>>,
+}
+
+impl LabeledCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to the counter for `label` (no-op while disabled).
+    pub fn add(&self, label: &str, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(entry) = g.iter_mut().find(|(name, _)| name == label) {
+            entry.1 += v;
+        } else {
+            g.push((label.to_string(), v));
+        }
+    }
+
+    /// Snapshot of `(label, value)` pairs in first-seen order.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+/// The process-wide registry. Every metric is pre-registered here as a
+/// struct field, so recording never takes a registry lock or allocates.
+#[derive(Debug)]
+pub struct Metrics {
+    // Solver driver (accel::FixedPointDriver).
+    pub solver_runs: Counter,
+    pub solver_iterations: Counter,
+    pub aa_proposals: Counter,
+    pub aa_accepted: Counter,
+    pub aa_rejected: Counter,
+    pub aa_restarts: Counter,
+    pub solver_m: Gauge,
+    pub solver_run_iterations: Histogram,
+    pub solver_phase_micros: LabeledCounters,
+    // Coordinator.
+    pub jobs_submitted: Counter,
+    pub jobs_shed: Counter,
+    pub jobs_completed: Counter,
+    pub jobs_failed: Counter,
+    pub job_retries: Counter,
+    pub worker_respawns: Counter,
+    pub jobs_recovered: Counter,
+    pub jobs_degraded: Counter,
+    pub jobs_inflight: Gauge,
+    pub queue_depth: Gauge,
+    pub queue_lane_depth: LabeledGauges,
+    pub job_queue_wait: Histogram,
+    pub job_run: Histogram,
+    // Streaming engine.
+    pub stream_chunks: Counter,
+    pub stream_rows: Counter,
+    // Durability.
+    pub snapshot_writes: Counter,
+    pub snapshot_bytes: Counter,
+    pub snapshot_write_seconds: Histogram,
+    pub model_writes: Counter,
+    pub model_bytes: Counter,
+    pub model_write_seconds: Histogram,
+    // Fault injection + telemetry self-accounting.
+    pub fault_injections: Counter,
+    pub events_dropped: Counter,
+    pub progress_dropped: Counter,
+}
+
+impl Metrics {
+    fn new() -> Self {
+        Self {
+            solver_runs: Counter::new(),
+            solver_iterations: Counter::new(),
+            aa_proposals: Counter::new(),
+            aa_accepted: Counter::new(),
+            aa_rejected: Counter::new(),
+            aa_restarts: Counter::new(),
+            solver_m: Gauge::new(),
+            solver_run_iterations: Histogram::with_bounds(ITERATION_BOUNDS),
+            solver_phase_micros: LabeledCounters::new(),
+            jobs_submitted: Counter::new(),
+            jobs_shed: Counter::new(),
+            jobs_completed: Counter::new(),
+            jobs_failed: Counter::new(),
+            job_retries: Counter::new(),
+            worker_respawns: Counter::new(),
+            jobs_recovered: Counter::new(),
+            jobs_degraded: Counter::new(),
+            jobs_inflight: Gauge::new(),
+            queue_depth: Gauge::new(),
+            queue_lane_depth: LabeledGauges::new(),
+            job_queue_wait: Histogram::with_bounds(LATENCY_BOUNDS),
+            job_run: Histogram::with_bounds(LATENCY_BOUNDS),
+            stream_chunks: Counter::new(),
+            stream_rows: Counter::new(),
+            snapshot_writes: Counter::new(),
+            snapshot_bytes: Counter::new(),
+            snapshot_write_seconds: Histogram::with_bounds(LATENCY_BOUNDS),
+            model_writes: Counter::new(),
+            model_bytes: Counter::new(),
+            model_write_seconds: Histogram::with_bounds(LATENCY_BOUNDS),
+            fault_injections: Counter::new(),
+            events_dropped: Counter::new(),
+            progress_dropped: Counter::new(),
+        }
+    }
+
+    fn counters(&self) -> [(&'static str, &'static str, &Counter); 19] {
+        [
+            ("aakm_solver_runs_total", "Completed solver driver runs", &self.solver_runs),
+            ("aakm_solver_iterations_total", "Productive iterations", &self.solver_iterations),
+            ("aakm_aa_proposals_total", "Anderson candidates proposed", &self.aa_proposals),
+            ("aakm_aa_accepted_total", "Anderson candidates accepted", &self.aa_accepted),
+            ("aakm_aa_rejected_total", "Anderson candidates rejected", &self.aa_rejected),
+            ("aakm_aa_restarts_total", "Anderson history restarts", &self.aa_restarts),
+            ("aakm_jobs_submitted_total", "Jobs admitted to the queue", &self.jobs_submitted),
+            ("aakm_jobs_shed_total", "Jobs shed by admission control", &self.jobs_shed),
+            ("aakm_jobs_completed_total", "Jobs finished successfully", &self.jobs_completed),
+            ("aakm_jobs_failed_total", "Jobs finished with an error", &self.jobs_failed),
+            ("aakm_job_retries_total", "Job attempts retried", &self.job_retries),
+            ("aakm_worker_respawns_total", "Workers respawned", &self.worker_respawns),
+            ("aakm_jobs_recovered_total", "Jobs re-submitted on recovery", &self.jobs_recovered),
+            ("aakm_jobs_degraded_total", "Jobs degraded to a fallback engine", &self.jobs_degraded),
+            ("aakm_stream_chunks_total", "Streaming chunks read", &self.stream_chunks),
+            ("aakm_stream_rows_total", "Streaming rows read", &self.stream_rows),
+            ("aakm_snapshot_writes_total", "Checkpoint snapshots written", &self.snapshot_writes),
+            ("aakm_snapshot_bytes_total", "Snapshot bytes written", &self.snapshot_bytes),
+            ("aakm_model_writes_total", "Registry model records written", &self.model_writes),
+        ]
+    }
+
+    fn counters2(&self) -> [(&'static str, &'static str, &Counter); 4] {
+        [
+            ("aakm_model_bytes_total", "Registry model bytes written", &self.model_bytes),
+            ("aakm_fault_injections_total", "Injected faults fired", &self.fault_injections),
+            ("aakm_events_dropped_total", "Event lines dropped", &self.events_dropped),
+            ("aakm_progress_dropped_total", "Progress records dropped", &self.progress_dropped),
+        ]
+    }
+
+    fn gauges(&self) -> [(&'static str, &'static str, &Gauge); 3] {
+        [
+            ("aakm_solver_m", "Anderson window m after the latest run", &self.solver_m),
+            ("aakm_jobs_inflight", "Jobs being executed by workers", &self.jobs_inflight),
+            ("aakm_queue_depth", "Jobs waiting in the coordinator queue", &self.queue_depth),
+        ]
+    }
+
+    fn histograms(&self) -> [(&'static str, &'static str, &Histogram); 5] {
+        [
+            ("aakm_solver_run_iterations", "Iterations per run", &self.solver_run_iterations),
+            ("aakm_job_queue_wait_seconds", "Submit-to-pickup wait", &self.job_queue_wait),
+            ("aakm_job_run_seconds", "Solver run time per successful attempt", &self.job_run),
+            (
+                "aakm_snapshot_write_seconds",
+                "Checkpoint snapshot write latency",
+                &self.snapshot_write_seconds,
+            ),
+            ("aakm_model_write_seconds", "Registry model write latency", &self.model_write_seconds),
+        ]
+    }
+
+    /// Prometheus text exposition of every registered metric.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let all: Vec<_> =
+            self.counters().iter().chain(self.counters2().iter()).cloned().collect();
+        for (name, help, c) in all {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {}\n",
+                c.get()
+            ));
+        }
+        for (name, help, g) in self.gauges() {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {}\n",
+                g.get()
+            ));
+        }
+        {
+            let name = "aakm_queue_lane_depth";
+            out.push_str(&format!(
+                "# HELP {name} Jobs waiting per client lane\n# TYPE {name} gauge\n"
+            ));
+            for (label, v) in self.queue_lane_depth.snapshot() {
+                out.push_str(&format!("{name}{{client=\"{}\"}} {v}\n", escape_label(&label)));
+            }
+        }
+        {
+            let name = "aakm_solver_phase_seconds_total";
+            out.push_str(&format!(
+                "# HELP {name} Cumulative solver time per phase\n# TYPE {name} counter\n"
+            ));
+            for (label, micros) in self.solver_phase_micros.snapshot() {
+                out.push_str(&format!(
+                    "{name}{{phase=\"{}\"}} {}\n",
+                    escape_label(&label),
+                    micros as f64 / 1e6
+                ));
+            }
+        }
+        for (name, help, h) in self.histograms() {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, c) in counts.iter().enumerate() {
+                cum += c;
+                match h.bounds().get(i) {
+                    Some(le) => {
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    None => out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n")),
+                }
+            }
+            out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", h.sum(), h.count()));
+        }
+        out
+    }
+
+    /// The same registry as one JSON object.
+    pub fn render_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push('{');
+        let mut first = true;
+        let mut field = |out: &mut String, key: &str, value: String| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\"{key}\":{value}"));
+        };
+        for (name, _, c) in self.counters().iter().chain(self.counters2().iter()) {
+            field(&mut out, name, c.get().to_string());
+        }
+        for (name, _, g) in self.gauges() {
+            field(&mut out, name, g.get().to_string());
+        }
+        {
+            let lanes = self
+                .queue_lane_depth
+                .snapshot()
+                .iter()
+                .map(|(l, v)| format!("\"{}\":{v}", events::escape_json(l)))
+                .collect::<Vec<_>>()
+                .join(",");
+            field(&mut out, "aakm_queue_lane_depth", format!("{{{lanes}}}"));
+        }
+        {
+            let phases = self
+                .solver_phase_micros
+                .snapshot()
+                .iter()
+                .map(|(l, v)| format!("\"{}\":{}", events::escape_json(l), *v as f64 / 1e6))
+                .collect::<Vec<_>>()
+                .join(",");
+            field(&mut out, "aakm_solver_phase_seconds_total", format!("{{{phases}}}"));
+        }
+        for (name, _, h) in self.histograms() {
+            let counts = h.bucket_counts();
+            let buckets = counts
+                .iter()
+                .enumerate()
+                .map(|(i, c)| match h.bounds().get(i) {
+                    Some(le) => format!("[{le},{c}]"),
+                    None => format!("[null,{c}]"),
+                })
+                .collect::<Vec<_>>()
+                .join(",");
+            field(
+                &mut out,
+                name,
+                format!(
+                    "{{\"sum\":{},\"count\":{},\"buckets\":[{buckets}]}}",
+                    h.sum(),
+                    h.count()
+                ),
+            );
+        }
+        out.push('}');
+        out
+    }
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+static REGISTRY: OnceLock<Metrics> = OnceLock::new();
+
+/// The process-wide metrics registry (initialized on first use).
+pub fn metrics() -> &'static Metrics {
+    REGISTRY.get_or_init(Metrics::new)
+}
+
+/// Prometheus text exposition of the whole registry.
+pub fn prometheus_text() -> String {
+    metrics().render_prometheus()
+}
+
+/// JSON dump of the whole registry.
+pub fn json_dump() -> String {
+    metrics().render_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The enable flag is process-global and the crate's unit tests run
+    // in parallel threads, so every test that toggles it serializes here.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn with_enabled<T>(f: impl FnOnce() -> T) -> T {
+        enable();
+        let out = f();
+        disable();
+        out
+    }
+
+    #[test]
+    fn counter_and_gauge_gate_on_enable() {
+        let _gate = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let c = Counter::new();
+        let g = Gauge::new();
+        disable();
+        c.inc();
+        g.set(5);
+        assert_eq!(c.get(), 0, "disabled counter must not move");
+        assert_eq!(g.get(), 0, "disabled gauge must not move");
+        with_enabled(|| {
+            c.add(3);
+            g.set(5);
+            g.add(-2);
+        });
+        assert_eq!(c.get(), 3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_and_quantiles() {
+        let _gate = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let h = Histogram::with_bounds(&[0.001, 0.01, 0.1, 1.0]);
+        with_enabled(|| {
+            for _ in 0..90 {
+                h.observe(0.005); // bucket le=0.01
+            }
+            for _ in 0..10 {
+                h.observe(0.5); // bucket le=1.0
+            }
+            h.observe(99.0); // overflow
+        });
+        assert_eq!(h.count(), 101);
+        assert_eq!(h.bucket_counts(), vec![0, 90, 0, 10, 1]);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.001 && p50 <= 0.01, "p50 {p50} must fall in the 0.01 bucket");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 0.1 && p99 <= 1.0, "p99 {p99} must fall in the 1.0 bucket");
+        // Overflow samples report the last finite bound.
+        assert_eq!(h.quantile(1.0), 1.0);
+        // Empty histogram: 0.
+        assert_eq!(Histogram::with_bounds(LATENCY_BOUNDS).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn labelled_families_accumulate_per_label() {
+        let _gate = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let lanes = LabeledGauges::new();
+        let phases = LabeledCounters::new();
+        with_enabled(|| {
+            lanes.add("a", 2);
+            lanes.add("b", 1);
+            lanes.add("a", -1);
+            phases.add("assign", 100);
+            phases.add("assign", 50);
+        });
+        assert_eq!(lanes.snapshot(), vec![("a".into(), 1), ("b".into(), 1)]);
+        assert_eq!(phases.snapshot(), vec![("assign".into(), 150)]);
+    }
+
+    #[test]
+    fn prometheus_and_json_render_every_family() {
+        let _gate = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        with_enabled(|| {
+            metrics().solver_runs.inc();
+            metrics().queue_lane_depth.add("c0", 1);
+            metrics().solver_phase_micros.add("assign", 1_000_000);
+            metrics().job_queue_wait.observe(0.002);
+            metrics().queue_lane_depth.add("c0", -1);
+        });
+        let text = prometheus_text();
+        for family in [
+            "aakm_solver_runs_total",
+            "aakm_solver_iterations_total",
+            "aakm_jobs_submitted_total",
+            "aakm_queue_depth",
+            "aakm_queue_lane_depth",
+            "aakm_solver_phase_seconds_total",
+            "aakm_job_queue_wait_seconds_bucket",
+            "aakm_job_queue_wait_seconds_count",
+            "aakm_fault_injections_total",
+        ] {
+            assert!(text.contains(family), "exposition missing {family}:\n{text}");
+        }
+        // Every non-comment line is `name[{labels}] value` with a numeric value.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, value) = line.rsplit_once(' ').expect("metric line has a value");
+            value.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric value in '{line}'"));
+        }
+        let json = json_dump();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"aakm_solver_runs_total\":"));
+        assert!(json.contains("\"aakm_job_queue_wait_seconds\":{\"sum\":"));
+    }
+}

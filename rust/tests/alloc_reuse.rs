@@ -100,6 +100,13 @@ fn warm_session_runs_do_not_rebuild_the_workspace() {
     use aakm::data::synth;
     use aakm::rng::Pcg32;
 
+    // Telemetry stays enabled for the whole test: the metrics registry is
+    // pre-registered behind a OnceLock and the solver driver batches its
+    // counts in locals, so recording must add zero allocations to warm
+    // reruns — this is the acceptance check that instrumentation kept the
+    // hot loop allocation-free.
+    aakm::telemetry::enable();
+
     let mut rng = Pcg32::seed_from_u64(0xA110C);
     let x = Arc::new(synth::gaussian_blobs(&mut rng, 2000, 4, 8, 2.0, 0.4));
     // Yinyang only maintains several groups for K > 10; use a second

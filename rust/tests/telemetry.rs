@@ -1,0 +1,312 @@
+//! Integration tests for the observability layer: metrics registry
+//! concurrency, the JSONL event log (round-trip, torn tail, interior
+//! corruption), and live per-iteration progress streamed out of the
+//! coordinator via `JobHandle::subscribe`.
+//!
+//! Telemetry enablement and the event-log sink are process-global, so
+//! every test here serializes on one mutex.
+
+use aakm::config::{Acceleration, EngineKind};
+use aakm::coordinator::{Coordinator, CoordinatorConfig};
+use aakm::data::synth;
+use aakm::observe::{CancelToken, TraceObserver, TraceRecord};
+use aakm::rng::Pcg32;
+use aakm::telemetry::{self, events};
+use aakm::{ClusterRequest, ClusterSession};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "aakm-telemetry-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn blobs(seed: u64, n: usize) -> Arc<aakm::data::DataMatrix> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    Arc::new(synth::gaussian_blobs(&mut rng, n, 4, 6, 2.0, 0.4))
+}
+
+fn request(seed: u64, engine: EngineKind) -> ClusterRequest {
+    let mut builder = ClusterRequest::builder()
+        .inline(blobs(seed, 1500))
+        .k(6)
+        .seed(seed)
+        .accel(Acceleration::DynamicM(2))
+        .engine(engine)
+        .threads(1);
+    if engine == EngineKind::MiniBatch {
+        builder = builder.chunk_size(256);
+    }
+    builder.build().expect("valid request")
+}
+
+// ---- metrics registry ---------------------------------------------------
+
+#[test]
+fn concurrent_increments_are_never_lost() {
+    let _g = serialize();
+    telemetry::enable();
+    let counter = Arc::new(telemetry::Counter::new());
+    let histogram = Arc::new(telemetry::Histogram::with_bounds(telemetry::LATENCY_BOUNDS));
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = Arc::clone(&counter);
+            let h = Arc::clone(&histogram);
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.observe(1e-4 * ((t as u64 * PER_THREAD + i) % 100 + 1) as f64);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    telemetry::disable();
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(counter.get(), total, "relaxed-atomic counter lost increments");
+    assert_eq!(histogram.count(), total, "histogram lost observations");
+    let buckets: u64 = histogram.bucket_counts().iter().sum();
+    assert_eq!(buckets, total, "bucket counts must sum to the observation count");
+}
+
+// ---- JSONL event log ----------------------------------------------------
+
+#[test]
+fn event_log_round_trips_with_torn_tail_tolerance() {
+    let _g = serialize();
+    let dir = temp_dir("events");
+    let path = dir.join("events.jsonl");
+    {
+        let guard = events::install(&path).expect("fresh install");
+        events::emit(&events::Event::Submit { job: 1, client: "t-a".into() });
+        events::emit(&events::Event::Pickup { job: 1, worker: 0, queue_wait_us: 42 });
+        events::emit(&events::Event::Iteration {
+            job: 1,
+            iteration: 1,
+            energy: f64::NAN,
+            m: 2,
+            accelerated: true,
+            accepted: false,
+        });
+        events::emit(&events::Event::Outcome {
+            job: 1,
+            ok: true,
+            error: String::new(),
+            iterations: 1,
+            energy: 12.5,
+            service_us: 1000,
+        });
+        guard.close();
+    }
+    // Emission after close is a silent no-op, not a write.
+    events::emit(&events::Event::Respawn { worker: 9 });
+
+    let (parsed, torn) = events::read_events(&path).expect("clean log parses");
+    assert!(!torn, "a cleanly closed log has no torn tail");
+    let kinds: Vec<&str> = parsed.iter().map(|e| e.kind.as_str()).collect();
+    assert_eq!(kinds, vec!["submit", "pickup", "iter", "outcome"]);
+    assert_eq!(parsed[0].text("client"), Some("t-a"));
+    assert_eq!(parsed[1].num("queue_wait_us"), Some(42.0));
+    assert!(parsed[2].is_null("energy"), "NaN energy serializes as null");
+    assert_eq!(parsed[3].boolean("ok"), Some(true));
+    for ev in &parsed {
+        assert_eq!(ev.v, events::SCHEMA_VERSION);
+    }
+
+    // A crash mid-append leaves a partial final line: tolerated, flagged.
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(b"{\"v\":1,\"ts_us\":7,\"kind\":\"resp").unwrap();
+    drop(f);
+    let (parsed, torn) = events::read_events(&path).expect("torn tail is tolerated");
+    assert!(torn, "partial final line must be reported");
+    assert_eq!(parsed.len(), 4, "torn tail must not drop complete lines");
+
+    // An interior corruption is a hard, line-numbered error.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let corrupted = text.replacen("\"kind\":\"pickup\"", "\"kind\":\"nonsense\"", 1);
+    std::fs::write(&path, corrupted).unwrap();
+    let err = events::read_events(&path).expect_err("interior corruption must fail");
+    assert!(err.contains("line 2"), "error must name the corrupt line: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_writes_a_valid_event_log() {
+    let _g = serialize();
+    let dir = temp_dir("coord-events");
+    let path = dir.join("serve.jsonl");
+    telemetry::enable();
+    let guard = events::install(&path).expect("fresh install");
+    {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 8,
+            solver_threads: 1,
+            ..CoordinatorConfig::default()
+        });
+        let handles = vec![
+            coord.submit(request(11, EngineKind::Hamerly)).unwrap(),
+            coord.submit(request(12, EngineKind::Hamerly)).unwrap(),
+        ];
+        for r in Coordinator::wait_all(handles) {
+            r.outcome.expect("jobs succeed");
+        }
+        coord.shutdown();
+    }
+    guard.close();
+    telemetry::disable();
+
+    let (parsed, torn) = events::read_events(&path).expect("coordinator log parses");
+    assert!(!torn);
+    let count = |kind: &str| parsed.iter().filter(|e| e.kind == kind).count();
+    assert_eq!(count("submit"), 2, "one submit per admitted job");
+    assert_eq!(count("pickup"), 2);
+    assert_eq!(count("attempt"), 2);
+    assert_eq!(count("outcome"), 2);
+    assert!(count("iter") > 0, "per-iteration events must be streamed");
+    // Lifecycle order per job: submit before pickup before outcome.
+    for job in [0.0, 1.0] {
+        let idx = |kind: &str| {
+            parsed
+                .iter()
+                .position(|e| e.kind == kind && e.num("job") == Some(job))
+                .unwrap_or_else(|| panic!("missing {kind} for job {job}"))
+        };
+        assert!(idx("submit") < idx("pickup"));
+        assert!(idx("pickup") < idx("outcome"));
+    }
+    // Every outcome carries the schema's full field set.
+    for out in parsed.iter().filter(|e| e.kind == "outcome") {
+        assert_eq!(out.boolean("ok"), Some(true));
+        assert!(out.num("iterations").unwrap() > 0.0);
+        assert!(out.num("service_us").unwrap() > 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- live progress subscription -----------------------------------------
+
+/// Reference trace: the same request run directly through a session with
+/// a `TraceObserver` — what the coordinator's live stream must match.
+fn reference_trace(req: ClusterRequest) -> Vec<TraceRecord> {
+    let mut session = ClusterSession::open(req).expect("session opens");
+    let mut trace = TraceObserver::new();
+    session.run_with(&mut trace, &CancelToken::new()).expect("reference run");
+    trace.records().to_vec()
+}
+
+fn assert_bit_identical(live: &[TraceRecord], reference: &[TraceRecord], label: &str) {
+    assert_eq!(live.len(), reference.len(), "{label}: trace length diverged");
+    for (a, b) in live.iter().zip(reference) {
+        assert_eq!(a.iteration, b.iteration, "{label}: iteration index diverged");
+        assert_eq!(
+            a.energy.to_bits(),
+            b.energy.to_bits(),
+            "{label}: energy diverged at iteration {}",
+            a.iteration
+        );
+        assert_eq!(a.m, b.m, "{label}: window m diverged at iteration {}", a.iteration);
+        assert_eq!(a.accelerated_candidate, b.accelerated_candidate, "{label}");
+        assert_eq!(a.accepted, b.accepted, "{label}");
+    }
+}
+
+#[test]
+fn subscribed_stream_matches_trace_observer_bit_for_bit() {
+    let _g = serialize();
+    let cases = [("full-batch", EngineKind::Hamerly), ("mini-batch", EngineKind::MiniBatch)];
+    for (label, engine) in cases {
+        let reference = reference_trace(request(21, engine));
+        assert!(!reference.is_empty(), "{label}: reference run must iterate");
+
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 8,
+            solver_threads: 1,
+            ..CoordinatorConfig::default()
+        });
+        // A first job occupies the single worker, so the subscription to
+        // the second attaches strictly before its pickup — guaranteeing
+        // the full trace streams.
+        let warmup = coord.submit(request(20, engine)).unwrap();
+        let handle = coord.submit(request(21, engine)).unwrap();
+        let rx = handle.subscribe();
+        warmup.wait().outcome.expect("warm-up job succeeds");
+        let live: Vec<TraceRecord> = rx.iter().collect();
+        let result = handle.wait();
+        let out = result.outcome.expect("subscribed job succeeds");
+        coord.shutdown();
+
+        assert_eq!(handle.progress_dropped(), 0, "{label}: nothing may drop at this depth");
+        assert_bit_identical(&live, &reference, label);
+        assert_eq!(out.iterations, live.len(), "{label}: one record per productive iteration");
+        // Satellite: the outcome now carries its own timing fields.
+        assert!(out.run_time > std::time::Duration::ZERO, "{label}: run_time populated");
+        assert!(out.run_time <= result.service_time, "{label}: run_time within service_time");
+        assert_eq!(out.queue_wait, result.queue_wait, "{label}: queue_wait echoed");
+    }
+}
+
+#[test]
+fn slow_subscriber_never_blocks_the_job() {
+    let _g = serialize();
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 8,
+        solver_threads: 1,
+        ..CoordinatorConfig::default()
+    });
+    let warmup = coord.submit(request(30, EngineKind::Hamerly)).unwrap();
+    let handle = coord.submit(request(31, EngineKind::Hamerly)).unwrap();
+    // Depth-1 channel that nobody drains while the job runs: the
+    // publisher must drop (and count) overflowing records rather than
+    // ever stalling the solver.
+    let rx = handle.subscribe_with_depth(1);
+    warmup.wait().outcome.expect("warm-up job succeeds");
+    let result = handle.wait();
+    let out = result.outcome.expect("job completes despite the stalled subscriber");
+    // The stream ended (job resolved), so this drain terminates.
+    let received = rx.iter().count();
+    assert!(received >= 1, "at least one record fits the channel");
+    assert_eq!(
+        received as u64 + handle.progress_dropped(),
+        out.iterations as u64,
+        "every iteration is either delivered or counted as dropped"
+    );
+    assert!(handle.progress_dropped() > 0 || out.iterations as u64 == received as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn unsubscribed_jobs_still_resolve_and_disconnect_late_receivers() {
+    let _g = serialize();
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        solver_threads: 1,
+        ..CoordinatorConfig::default()
+    });
+    let handle = coord.submit(request(40, EngineKind::Hamerly)).unwrap();
+    handle.wait().outcome.expect("un-subscribed job runs normally");
+    // Subscribing after resolution yields an immediately-ended stream
+    // (sender already dropped) rather than a receiver that hangs forever.
+    let rx = handle.subscribe();
+    assert!(rx.recv().is_err(), "post-completion subscription must be disconnected");
+    coord.shutdown();
+}

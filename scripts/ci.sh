@@ -126,6 +126,34 @@ else
 fi
 rm -f "$rg_probe_log"
 
+# Quick-mode observability-overhead smoke: serve the same jobs with
+# telemetry off, metrics on, and metrics+events, and fail if the
+# machine-readable trail is missing the per-mode iteration costs or the
+# overhead columns. Same probe pattern as above.
+ob_probe_log=$(mktemp)
+if PERF_OBSERVE_QUICK=1 cargo bench --bench perf_observe --no-run >"$ob_probe_log" 2>&1; then
+  PERF_OBSERVE_QUICK=1 cargo bench --bench perf_observe
+  for key in off_iter_us metrics_iter_us metrics_events_iter_us \
+             metrics_overhead_pct events_overhead_pct; do
+    if ! grep -q "\"$key\"" BENCH_observe.json; then
+      echo "ci.sh: BENCH_observe.json is missing '$key' entries" >&2
+      exit 1
+    fi
+  done
+  if [ "$(grep -c '"engine"' BENCH_observe.json)" -lt 2 ]; then
+    echo "ci.sh: BENCH_observe.json must cover at least two engines" >&2
+    exit 1
+  fi
+  echo "ci.sh: perf_observe smoke leg OK (BENCH_observe.json has all telemetry modes)"
+elif grep -qi "no bench target named" "$ob_probe_log"; then
+  echo "ci.sh: perf_observe bench target not declared in this manifest; skipping smoke leg" >&2
+else
+  echo "ci.sh: perf_observe bench failed to build:" >&2
+  cat "$ob_probe_log" >&2
+  exit 1
+fi
+rm -f "$ob_probe_log"
+
 # Fault-injection smoke: replay the coordinator robustness sweep
 # (tests/fault_injection.rs) on a wider fixed seed set than the 0..8
 # default `cargo test` already ran — injected chunk-read faults, PJRT
@@ -283,4 +311,40 @@ else
   fi
   echo "ci.sh: model-lifecycle smoke leg OK (fit -> predict -> kill -9 mid-refresh -> recover -> predict parity)"
   rm -rf "$reg_dir" "$rck_dir"; rm -f "$ref_pred" "$int_pred" "$rfl_log"
+fi
+
+# Observability smoke: a telemetry-instrumented serve must leave behind a
+# scrapeable Prometheus exposition (with the solver and queue families
+# populated) and a schema-valid JSONL event log, and the `telemetry check`
+# subcommand must accept that log end-to-end.
+if [ -z "${crash_bin:-}" ]; then
+  echo "ci.sh: no release binary found under target/release; skipping observability smoke leg" >&2
+else
+  tel_dir=$(mktemp -d); tel_log=$(mktemp)
+  "$crash_bin" serve --workers 2 --jobs 4 --k 5 --scale 0.005 --engine hamerly \
+    --metrics-out "$tel_dir/metrics.prom" --events-out "$tel_dir/events.jsonl" > "$tel_log"
+  for fam in aakm_jobs_submitted_total aakm_solver_iterations_total \
+             aakm_job_queue_wait_seconds_bucket aakm_queue_depth; do
+    grep -q "^$fam" "$tel_dir/metrics.prom" || {
+      echo "ci.sh: serve exposition is missing the '$fam' family:" >&2
+      cat "$tel_dir/metrics.prom" >&2; exit 1
+    }
+  done
+  grep -q "queue wait: p50" "$tel_log" || {
+    echo "ci.sh: serve printed no queue-wait quantile line:" >&2
+    cat "$tel_log" >&2; exit 1
+  }
+  check_out=$("$crash_bin" telemetry check --events "$tel_dir/events.jsonl") || {
+    echo "ci.sh: telemetry check rejected the serve event log" >&2; exit 1
+  }
+  echo "$check_out" | grep -q "valid event(s)" || {
+    echo "ci.sh: telemetry check produced no summary: $check_out" >&2; exit 1
+  }
+  for kind in submit pickup outcome iter; do
+    echo "$check_out" | grep -q "$kind" || {
+      echo "ci.sh: serve event log has no '$kind' events: $check_out" >&2; exit 1
+    }
+  done
+  echo "ci.sh: observability smoke leg OK (metrics exposition + schema-valid event log)"
+  rm -rf "$tel_dir"; rm -f "$tel_log"
 fi
