@@ -12,13 +12,14 @@
 //! Set `PERF_MINIBATCH_QUICK=1` for the CI smoke leg: one small shape,
 //! `BENCH_minibatch.json` still written (that is what CI asserts on).
 
-use aakm::config::{Acceleration, EngineKind, SolverConfig};
-use aakm::data::{synth, DataMatrix, InMemoryChunks};
+use aakm::config::{Acceleration, EnergyGuard, EngineKind, SolverConfig};
+use aakm::data::{synth, DataMatrix, InMemoryChunks, ShardWriter};
 use aakm::init::{seed_centroids, InitMethod};
 use aakm::kmeans::Solver;
 use aakm::metrics::Stopwatch;
 use aakm::rng::Pcg32;
 use aakm::stream::{MiniBatchConfig, MiniBatchSolver};
+use aakm::{ClusterRequest, ClusterSession};
 use std::sync::Arc;
 
 struct ShapeResult {
@@ -133,6 +134,133 @@ fn run_shape(
     ShapeResult { row, aa_beats_plain }
 }
 
+/// Saturation sweep for the streaming engine: one mmap shard roughly 10×
+/// the chunk budget, streamed through the session path (which owns the
+/// prefetch pipeline), prefetch off/on × guard exact/sampled. Reports
+/// rows/sec per variant — the throughput acceptance trail for the
+/// pipelined prefetcher — and epochs-to-target per guard (the sampled
+/// guard must land within one epoch of the exact one). Prefetch is
+/// trajectory-neutral, so within a guard the off/on runs are bit-identical
+/// and the speedup column isolates pure overlap gains.
+fn run_stream_sweep(quick: bool) -> String {
+    let (n, d, k, chunk, max_epochs) = if quick {
+        (10_240usize, 8usize, 8usize, 1024usize, 25usize)
+    } else {
+        (40_960, 16, 12, 4096, 40)
+    };
+    let guard_rows = chunk; // one chunk's worth of reservoir rows
+    let mut rng = Pcg32::seed_from_u64(0x57EA);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, n, d, k, 2.5, 0.4));
+    let mut srng = Pcg32::seed_from_u64(0x5EED);
+    let c0 = Arc::new(seed_centroids(&x, k, InitMethod::KMeansPlusPlus, &mut srng));
+
+    // Shard the matrix to disk so the sweep exercises the mmap + madvise
+    // read path the prefetcher exists to hide.
+    let dir = std::env::temp_dir().join("aakm_bench");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let shard = dir.join(format!("stream_sweep_{n}x{d}.fv"));
+    let mut w = ShardWriter::create(&shard, d).expect("shard create");
+    w.append(&x).expect("shard append");
+    w.finish().expect("shard finish");
+
+    // Quality target from the same full-batch Lloyd baseline the shape
+    // sweep uses, expressed per-row so exact (sum over n) and sampled
+    // (sum over the reservoir) traces are comparable.
+    let lloyd = Solver::try_new(SolverConfig {
+        accel: Acceleration::None,
+        threads: 1,
+        ..SolverConfig::default()
+    })
+    .expect("CPU engine")
+    .run(&x, (*c0).clone());
+    let target_mse = 1.05 * lloyd.energy / n as f64;
+
+    let variant = |prefetch: bool, guard: EnergyGuard| {
+        let request = ClusterRequest::builder()
+            .shard(&shard)
+            .k(k)
+            .engine(EngineKind::MiniBatch)
+            .accel(Acceleration::DynamicM(2))
+            .chunk_size(chunk)
+            .prefetch(prefetch)
+            .guard(guard)
+            .initial_centroids(Arc::clone(&c0))
+            .max_iters(max_epochs)
+            .record_trace(true)
+            .threads(1)
+            .seed(0x57EA)
+            .build()
+            .expect("stream sweep request");
+        let mut session = ClusterSession::open(request).expect("stream sweep session");
+        let sw = Stopwatch::start();
+        let report = session.run().expect("stream sweep run");
+        let secs = sw.seconds();
+        let eval_rows = match guard {
+            EnergyGuard::Exact => n,
+            EnergyGuard::Sampled { rows } => rows.min(n),
+        };
+        let mse_trace: Vec<f64> =
+            report.energy_trace.iter().map(|e| e / eval_rows as f64).collect();
+        let reached = epochs_to_target(&mse_trace, target_mse);
+        let rows_per_sec = (n * report.iterations) as f64 / secs.max(1e-9);
+        (report, secs * 1000.0, rows_per_sec, reached)
+    };
+
+    let mut rows = Vec::new();
+    let mut rps = [[0.0f64; 2]; 2]; // [guard][prefetch]
+    let mut reached = [[None; 2]; 2];
+    for (gi, guard) in [EnergyGuard::Exact, EnergyGuard::Sampled { rows: guard_rows }]
+        .into_iter()
+        .enumerate()
+    {
+        for (pi, prefetch) in [false, true].into_iter().enumerate() {
+            let (report, ms, rows_per_sec, epochs) = variant(prefetch, guard);
+            rps[gi][pi] = rows_per_sec;
+            reached[gi][pi] = epochs;
+            let gname = match guard {
+                EnergyGuard::Exact => "exact".to_string(),
+                EnergyGuard::Sampled { rows } => format!("sampled:{rows}"),
+            };
+            println!(
+                "stream-sweep     guard={gname:<14} prefetch={prefetch:<5} \
+                 {rows_per_sec:>12.0} rows/s  {} epochs to 1.05E* ({} total, {ms:.0} ms)",
+                fmt_epochs(epochs),
+                report.iterations,
+            );
+            rows.push(format!(
+                "      {{\"guard\": \"{gname}\", \"prefetch\": {prefetch}, \
+                 \"rows_per_sec\": {rows_per_sec:.0}, \"ms\": {ms:.2}, \
+                 \"epochs\": {}, \"epochs_to_target\": {}, \"final_energy\": {:.6e}}}",
+                report.iterations,
+                fmt_epochs(epochs),
+                report.energy,
+            ));
+        }
+    }
+    let _ = std::fs::remove_file(&shard);
+
+    // Headline numbers: prefetch speedup on the exact-guard pair, and the
+    // sampled guard's epoch gap vs exact (prefetch does not change either
+    // trajectory, so the exact/on pairing is representative).
+    let prefetch_speedup = rps[0][1] / rps[0][0].max(1e-9);
+    let guard_epoch_delta = match (reached[0][1], reached[1][1]) {
+        (Some(e), Some(s)) => (s as i64 - e as i64).to_string(),
+        _ => "null".to_string(),
+    };
+    println!(
+        "stream-sweep     prefetch speedup {prefetch_speedup:.2}x (exact guard), \
+         sampled-vs-exact epoch delta {guard_epoch_delta}"
+    );
+    format!(
+        "    {{\"shard_rows\": {n}, \"d\": {d}, \"k\": {k}, \"chunk\": {chunk}, \
+         \"guard_rows\": {guard_rows}, \"lloyd_energy\": {:.6e}, \
+         \"prefetch_speedup\": {prefetch_speedup:.3}, \
+         \"guard_epoch_delta\": {guard_epoch_delta}, \"variants\": [\n{}\n    ]}}",
+        lloyd.energy,
+        rows.join(",\n"),
+    )
+}
+
 fn main() {
     let quick = std::env::var("PERF_MINIBATCH_QUICK").is_ok();
     println!(
@@ -156,15 +284,17 @@ fn main() {
     let any_aa_win = results.iter().any(|r| r.aa_beats_plain);
     println!(
         "\nAA reached the 5%-of-Lloyd target in fewer epochs than plain mini-batch on \
-         {} of {} shapes",
+         {} of {} shapes\n",
         results.iter().filter(|r| r.aa_beats_plain).count(),
         results.len()
     );
+    let stream_sweep = run_stream_sweep(quick);
     let rows: Vec<String> = results.into_iter().map(|r| r.row).collect();
     let json = format!(
         "{{\n  \"bench\": \"perf_minibatch\",\n  \"quick\": {quick},\n  \
          \"variants\": [\"lloyd\", \"minibatch_aa\", \"minibatch_plain\"],\n  \
-         \"aa_beats_plain_somewhere\": {any_aa_win},\n  \"shapes\": [\n{}\n  ]\n}}\n",
+         \"aa_beats_plain_somewhere\": {any_aa_win},\n  \"shapes\": [\n{}\n  ],\n  \
+         \"stream_sweep\":\n{stream_sweep}\n}}\n",
         rows.join(",\n"),
     );
     match std::fs::write("BENCH_minibatch.json", &json) {

@@ -21,6 +21,8 @@ const BOOL_FLAGS: &[&str] = &[
     "cpu-fallback",
     "gc",
     "json",
+    "prefetch",
+    "pin-threads",
 ];
 
 impl Args {

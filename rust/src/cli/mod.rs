@@ -55,6 +55,14 @@ COMMANDS:
              --sampling <sequential|replacement>   how mini-batch epochs
                draw batches (default sequential — deterministic pass;
                replacement = uniform draws with replacement, seeded)
+             --prefetch   overlap chunk reads with the sweep: a background
+               thread decodes chunk t+1 while the lanes sweep chunk t
+               (minibatch only; bit-identical results, just faster)
+             --guard <exact|sampled:N>   mini-batch energy checkpoint:
+               exact full pass per epoch (default) or a fixed seeded
+               reservoir of N rows — O(N) per epoch instead of O(n)
+             --pin-threads   pin sweep lanes (and the prefetcher) to
+               distinct CPUs via sched_setaffinity (Linux; no-op elsewhere)
              --accel <none|fixed:M|dynamic:M>             (default dynamic:2;
                with minibatch this is the epoch-level Anderson step)
              --precision <f64|f32>                        (default f64; f32
@@ -271,6 +279,16 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("batches-per-epoch") {
         cfg.batches_per_epoch = v.parse().context("--batches-per-epoch")?;
     }
+    if args.flag("prefetch") {
+        cfg.prefetch = true;
+    }
+    if let Some(v) = args.get("guard") {
+        cfg.guard = crate::config::EnergyGuard::parse(v)
+            .with_context(|| format!("bad --guard {v} (exact|sampled:N)"))?;
+    }
+    if args.flag("pin-threads") {
+        cfg.pin_threads = true;
+    }
     Ok(cfg)
 }
 
@@ -300,6 +318,9 @@ fn builder_from_experiment(
         .chunk_size(cfg.chunk_size)
         .batches_per_epoch(cfg.batches_per_epoch)
         .batch_sampling(cfg.sampling)
+        .prefetch(cfg.prefetch)
+        .guard(cfg.guard)
+        .pin_threads(cfg.pin_threads)
         .reseed_empty(reseed_empty)
         .artifact_dir(artifacts);
     if let Some(policy) = checkpoint {
@@ -967,6 +988,19 @@ mod tests {
             "--engine", "minibatch", "--chunk-size", "64"
         ])
         .is_ok());
+        // The saturation knobs end-to-end on the same shard: pipelined
+        // prefetch + sampled energy guard + pinned lanes.
+        assert!(dispatch(&[
+            "run", "--dataset", out.to_str().unwrap(), "--k", "3", "--threads", "1",
+            "--engine", "minibatch", "--chunk-size", "64", "--prefetch",
+            "--guard", "sampled:200", "--pin-threads"
+        ])
+        .is_ok());
+        assert!(dispatch(&[
+            "run", "--dataset", out.to_str().unwrap(), "--k", "3",
+            "--engine", "minibatch", "--guard", "approx"
+        ])
+        .is_err());
         // Pre-centering cannot be applied to a streamed shard: loud error
         // instead of silently un-centered f32 numerics.
         assert!(dispatch(&[
@@ -1143,5 +1177,21 @@ mod tests {
         assert_eq!(cfg.k, 25);
         assert_eq!(cfg.accel, Acceleration::FixedM(7));
         assert_eq!(cfg.init, InitMethod::Clarans);
+    }
+
+    #[test]
+    fn experiment_from_args_streaming_knobs() {
+        use crate::config::EnergyGuard;
+        let args =
+            Args::parse(&["--prefetch", "--guard", "sampled:4096", "--pin-threads"]).unwrap();
+        let cfg = experiment_from_args(&args).unwrap();
+        assert!(cfg.prefetch);
+        assert_eq!(cfg.guard, EnergyGuard::Sampled { rows: 4096 });
+        assert!(cfg.pin_threads);
+        let cfg = experiment_from_args(&Args::parse(&[]).unwrap()).unwrap();
+        assert!(!cfg.prefetch);
+        assert_eq!(cfg.guard, EnergyGuard::Exact);
+        assert!(!cfg.pin_threads);
+        assert!(experiment_from_args(&Args::parse(&["--guard", "sampled:"]).unwrap()).is_err());
     }
 }

@@ -18,6 +18,10 @@ pub use crate::linalg::kernel::Precision;
 /// in [`crate::stream`]; re-exported here as the config surface).
 pub use crate::stream::BatchSampling;
 
+/// Mini-batch energy-checkpoint mode (defined next to the streaming solver
+/// in [`crate::stream`]; re-exported here as the config surface).
+pub use crate::stream::EnergyGuard;
+
 use crate::init::InitMethod;
 
 /// Which assignment engine backs the solver.
@@ -192,6 +196,16 @@ pub struct ExperimentConfig {
     /// only): the deterministic sequential pass, or uniform draws with
     /// replacement.
     pub sampling: BatchSampling,
+    /// Overlap chunk reads with the sweep via the background prefetcher
+    /// (`--engine minibatch` only). Trajectory-neutral: the epoch math is
+    /// bit-identical with it on or off.
+    pub prefetch: bool,
+    /// Energy-checkpoint mode for mini-batch epochs: the exact full pass,
+    /// or a fixed reservoir sample of rows (`sampled:N`).
+    pub guard: EnergyGuard,
+    /// Pin worker lanes (and the prefetcher) to distinct CPUs on Linux;
+    /// a no-op elsewhere.
+    pub pin_threads: bool,
     /// Directory for durable `AAKMCK01` snapshots (`None` = no
     /// checkpointing). A run started with an existing matching snapshot
     /// in this directory resumes from it.
@@ -223,6 +237,9 @@ impl Default for ExperimentConfig {
             chunk_size: 4096,
             batches_per_epoch: 0,
             sampling: BatchSampling::Sequential,
+            prefetch: false,
+            guard: EnergyGuard::Exact,
+            pin_threads: false,
             checkpoint_dir: None,
             checkpoint_every: 1,
             reseed_empty: false,
@@ -295,6 +312,18 @@ impl ExperimentConfig {
             cfg.sampling = BatchSampling::parse(s).ok_or_else(|| {
                 ConfigError::new(format!("unknown sampling '{s}' (sequential|replacement)"))
             })?;
+        }
+        if let Some(v) = sect("prefetch") {
+            cfg.prefetch = v.as_bool()?;
+        }
+        if let Some(v) = sect("guard") {
+            let s = v.as_str()?;
+            cfg.guard = EnergyGuard::parse(s).ok_or_else(|| {
+                ConfigError::new(format!("unknown guard '{s}' (exact|sampled:N)"))
+            })?;
+        }
+        if let Some(v) = sect("pin_threads") {
+            cfg.pin_threads = v.as_bool()?;
         }
         if let Some(v) = sect("checkpoint_dir") {
             cfg.checkpoint_dir = Some(v.as_str()?.to_string());
@@ -409,6 +438,27 @@ mod tests {
         let cfg = ExperimentConfig::from_doc(&empty).unwrap();
         assert_eq!(cfg.sampling, BatchSampling::Sequential);
         let bad = ConfigDoc::parse("sampling = \"shuffled\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn streaming_knobs_from_doc() {
+        let text = r#"
+            prefetch = true
+            guard = "sampled:4096"
+            pin_threads = true
+        "#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(cfg.prefetch);
+        assert_eq!(cfg.guard, EnergyGuard::Sampled { rows: 4096 });
+        assert!(cfg.pin_threads);
+        let empty = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&empty).unwrap();
+        assert!(!cfg.prefetch);
+        assert_eq!(cfg.guard, EnergyGuard::Exact);
+        assert!(!cfg.pin_threads);
+        let bad = ConfigDoc::parse("guard = \"approx\"").unwrap();
         assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 

@@ -362,12 +362,16 @@ unsafe extern "C" {
         offset: i64,
     ) -> *mut core::ffi::c_void;
     fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    fn madvise(addr: *mut core::ffi::c_void, len: usize, advice: i32) -> i32;
 }
 
 #[cfg(unix)]
 impl Mmap {
     const PROT_READ: i32 = 1;
     const MAP_PRIVATE: i32 = 2;
+    // Same numeric values on Linux and the BSD family (incl. macOS).
+    const MADV_SEQUENTIAL: i32 = 2;
+    const MADV_WILLNEED: i32 = 3;
 
     fn map(file: &std::fs::File, len: usize) -> std::io::Result<Self> {
         use std::os::unix::io::AsRawFd;
@@ -396,15 +400,51 @@ impl Mmap {
         // underlying shard file is treated as immutable while sourced.
         unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
     }
+
+    /// Best-effort `madvise` over the whole mapping. Advice is a paging
+    /// hint, never correctness: a kernel that rejects it simply pages on
+    /// demand, so the result is ignored.
+    fn advise_all(&self, advice: i32) {
+        // SAFETY: exactly the region returned by mmap in `map`.
+        unsafe {
+            let _ = madvise(self.ptr, self.len, advice);
+        }
+    }
+
+    /// Best-effort `madvise` over a byte window of the mapping. The start
+    /// is rounded down to a 64 KiB boundary — page-aligned for every page
+    /// size in practical use, which `madvise` requires — and the window
+    /// is clamped to the mapping.
+    fn advise_window(&self, offset: usize, len: usize, advice: i32) {
+        const ALIGN: usize = 64 * 1024;
+        let start = offset.min(self.len) & !(ALIGN - 1);
+        let end = offset.saturating_add(len).min(self.len);
+        if end <= start {
+            return;
+        }
+        // SAFETY: `start..end` lies within the mapping and `start` is
+        // aligned; a rejected hint is ignored.
+        unsafe {
+            let _ = madvise(
+                (self.ptr as *mut u8).add(start) as *mut core::ffi::c_void,
+                end - start,
+                advice,
+            );
+        }
+    }
 }
 
 #[cfg(unix)]
 impl Drop for Mmap {
     fn drop(&mut self) {
         // SAFETY: exactly the region returned by mmap in `map`.
-        unsafe {
-            munmap(self.ptr, self.len);
-        }
+        let rc = unsafe { munmap(self.ptr, self.len) };
+        // A failed munmap leaks the mapping, which is survivable; what it
+        // must never do is panic inside Drop on an unwind path — shard
+        // sources are dropped by the prefetcher thread while *it* is
+        // panicking under fault injection, and a double panic would abort
+        // the process instead of surfacing a typed error.
+        debug_assert!(rc == 0 || std::thread::panicking(), "munmap failed");
     }
 }
 
@@ -476,6 +516,10 @@ impl MmapShardSource {
         {
             let map =
                 Mmap::map(&file, need as usize).map_err(|e| fail(format!("mmap: {e}")))?;
+            // The dominant access pattern is the epoch loop's forward
+            // scan: tell the kernel so read-ahead widens and behind-pages
+            // drop early, instead of the default mixed-access heuristics.
+            map.advise_all(Mmap::MADV_SEQUENTIAL);
             Ok(Self { path: path.to_path_buf(), n, d, cursor: 0, map })
         }
         #[cfg(not(unix))]
@@ -566,6 +610,19 @@ impl ChunkSource for MmapShardSource {
         out.resize_rows(rows);
         if rows == 0 {
             return Ok(0);
+        }
+        #[cfg(unix)]
+        {
+            // Prefetch-window touch: ask for the *next* chunk's pages
+            // while this one decodes, so the page-in overlaps the copy
+            // even without the prefetcher thread (and feeds it when the
+            // thread is running ahead).
+            let row_bytes = self.d * 8;
+            self.map.advise_window(
+                SHARD_HEADER_BYTES + (self.cursor + rows) * row_bytes,
+                rows * row_bytes,
+                Mmap::MADV_WILLNEED,
+            );
         }
         for r in 0..rows {
             let row = self.cursor + r;

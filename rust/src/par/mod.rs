@@ -21,9 +21,39 @@ mod slice;
 pub use slice::SyncSliceMut;
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Widest CPU id representable in the affinity mask handed to the kernel
+/// (16 × 64 bits — matches glibc's default `cpu_set_t`).
+const MAX_PIN_CPUS: usize = 16 * 64;
+
+/// Pin the calling thread to `cpu` (taken modulo [`MAX_PIN_CPUS`]).
+///
+/// Linux only — a raw `sched_setaffinity(0, …)` on the calling thread,
+/// bound here like the `mmap` binding in `data/chunks.rs` because the
+/// offline crate set has no `libc`. Everywhere else this is a no-op, and
+/// failures are deliberately ignored: affinity is a placement hint, never
+/// correctness — a restricted cpuset (containers) simply leaves the
+/// thread where the scheduler put it.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpu: usize) {
+    unsafe extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; MAX_PIN_CPUS / 64];
+    let cpu = cpu % MAX_PIN_CPUS;
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // SAFETY: pid 0 targets the calling thread; the mask outlives the call.
+    unsafe {
+        let _ = sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    }
+}
+
+/// Non-Linux stub: thread affinity is not portable; stay a no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpu: usize) {}
 
 /// Type-erased job: a closure invoked once per lane with the lane id.
 struct Job {
@@ -57,6 +87,8 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Whether `pin_lanes` already ran (it is idempotent per pool).
+    pinned: AtomicBool,
 }
 
 impl ThreadPool {
@@ -77,7 +109,26 @@ impl ThreadPool {
                 std::thread::spawn(move || worker_loop(&shared, lane))
             })
             .collect();
-        Self { shared, workers, threads }
+        Self { shared, workers, threads, pinned: AtomicBool::new(false) }
+    }
+
+    /// Pin every *worker* lane to a fixed CPU (`lane % cores`) so the
+    /// sweep lanes stop migrating across cores mid-run — Linux only, a
+    /// no-op elsewhere (see [`pin_current_thread`]). Lane 0 is the
+    /// caller's thread and is never pinned: the pool does not own it, and
+    /// hijacking the embedder's affinity would leak policy outward.
+    /// Idempotent per pool, and placement-only — pinning can never change
+    /// a result bit.
+    pub fn pin_lanes(&self) {
+        if self.threads == 1 || self.pinned.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        self.dispatch(&move |lane| {
+            if lane > 0 {
+                pin_current_thread(lane % cores);
+            }
+        });
     }
 
     /// Pool sized to the machine (`available_parallelism`).
@@ -546,6 +597,23 @@ mod tests {
             |acc| *acc,
         );
         assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn pinned_pool_still_computes_correctly_and_is_idempotent() {
+        for threads in [1, 3] {
+            let pool = ThreadPool::new(threads);
+            pool.pin_lanes();
+            pool.pin_lanes(); // second call must be a no-op, not a deadlock
+            let total = AtomicU64::new(0);
+            pool.parallel_for(1000, 8, |range| {
+                let s: u64 = range.map(|i| i as u64).sum();
+                total.fetch_add(s, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2, "threads={threads}");
+        }
+        // Pinning an arbitrary thread is safe even with an oversized id.
+        pin_current_thread(MAX_PIN_CPUS + 3);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::error::{ClusterError, FaultClass};
 use crate::init::InitMethod;
 use crate::kmeans::WorkspaceSpec;
 use crate::persist::CheckpointPolicy;
-use crate::stream::BatchSampling;
+use crate::stream::{BatchSampling, EnergyGuard};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -268,6 +268,9 @@ pub struct ClusterRequest {
     chunk_size: usize,
     batches_per_epoch: usize,
     batch_sampling: BatchSampling,
+    prefetch: bool,
+    guard: EnergyGuard,
+    pin_threads: bool,
     client: Option<String>,
     retry: Option<RetryPolicy>,
     cpu_fallback: bool,
@@ -364,6 +367,24 @@ impl ClusterRequest {
         self.batch_sampling
     }
 
+    /// Whether chunk reads run through the background prefetch pipeline
+    /// (`EngineKind::MiniBatch` streamed sources only).
+    pub fn prefetch(&self) -> bool {
+        self.prefetch
+    }
+
+    /// How mini-batch checkpoint energies are measured
+    /// (`EngineKind::MiniBatch` only).
+    pub fn guard(&self) -> EnergyGuard {
+        self.guard
+    }
+
+    /// Whether solver worker lanes (and the prefetcher) are pinned to
+    /// fixed CPUs (Linux; no-op elsewhere).
+    pub fn pin_threads(&self) -> bool {
+        self.pin_threads
+    }
+
     /// Client tag for per-client fair queue pickup (`None` = the shared
     /// anonymous lane).
     pub fn client(&self) -> Option<&str> {
@@ -434,6 +455,9 @@ impl ClusterRequest {
             batches_per_epoch: self.batches_per_epoch,
             sampling: self.batch_sampling,
             seed: self.seed,
+            prefetch: self.prefetch,
+            guard: self.guard,
+            pin_threads: self.pin_threads,
             ..crate::stream::MiniBatchConfig::default()
         }
     }
@@ -508,6 +532,9 @@ impl ClusterRequest {
             ("chunk_size", self.chunk_size.to_string()),
             ("batches_per_epoch", self.batches_per_epoch.to_string()),
             ("sampling", self.batch_sampling.name().to_string()),
+            ("prefetch", self.prefetch.to_string()),
+            ("guard", self.guard.name()),
+            ("pin_threads", self.pin_threads.to_string()),
             ("reseed_empty", self.reseed_empty.to_string()),
             ("cpu_fallback", self.cpu_fallback.to_string()),
         ];
@@ -669,6 +696,12 @@ impl ClusterRequest {
                     BatchSampling::parse(val)
                         .ok_or_else(|| bad(format!("unknown sampling '{val}'")))?,
                 ),
+                "prefetch" => b.prefetch(num("prefetch", val)?),
+                "guard" => b.guard(
+                    EnergyGuard::parse(val)
+                        .ok_or_else(|| bad(format!("unknown guard '{val}'")))?,
+                ),
+                "pin_threads" => b.pin_threads(num("pin_threads", val)?),
                 "reseed_empty" => b.reseed_empty(num("reseed_empty", val)?),
                 "cpu_fallback" => b.cpu_fallback(num("cpu_fallback", val)?),
                 "client" => b.client(val),
@@ -789,6 +822,9 @@ pub struct ClusterRequestBuilder {
     chunk_size: usize,
     batches_per_epoch: usize,
     batch_sampling: BatchSampling,
+    prefetch: bool,
+    guard: EnergyGuard,
+    pin_threads: bool,
     client: Option<String>,
     retry: Option<RetryPolicy>,
     cpu_fallback: bool,
@@ -820,6 +856,9 @@ impl Default for ClusterRequestBuilder {
             chunk_size: 4096,
             batches_per_epoch: 0,
             batch_sampling: BatchSampling::Sequential,
+            prefetch: false,
+            guard: EnergyGuard::Exact,
+            pin_threads: false,
             client: None,
             retry: None,
             cpu_fallback: false,
@@ -1028,6 +1067,35 @@ impl ClusterRequestBuilder {
         self
     }
 
+    /// Serve mini-batch chunk reads through the background prefetch
+    /// pipeline ([`crate::stream::prefetch::PrefetchSource`]): page-in
+    /// and decode of chunk *t+1* overlap the sweep of chunk *t*. Chunk
+    /// order is preserved exactly, so results (energy traces, resume)
+    /// are bit-identical with the flag on or off. Default off.
+    pub fn prefetch(mut self, prefetch: bool) -> Self {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// How mini-batch checkpoint energies are measured (default
+    /// [`EnergyGuard::Exact`] — a full pass per checkpoint).
+    /// [`EnergyGuard::Sampled`] estimates them from a seeded fixed
+    /// reservoir instead, removing the per-epoch full scans on
+    /// out-of-core shards; it changes the trajectory and requires a
+    /// bounded source.
+    pub fn guard(mut self, guard: EnergyGuard) -> Self {
+        self.guard = guard;
+        self
+    }
+
+    /// Pin the solver's worker lanes (and, with prefetch, the prefetcher
+    /// thread) to fixed CPUs — Linux only, a no-op elsewhere. Placement
+    /// only; never changes results. Default off.
+    pub fn pin_threads(mut self, pin: bool) -> Self {
+        self.pin_threads = pin;
+        self
+    }
+
     /// Tag service submissions with a client identity: the coordinator's
     /// queue interleaves pickup across clients (round-robin between
     /// lanes, priority-then-FIFO within one), so one client's flood
@@ -1095,6 +1163,12 @@ impl ClusterRequestBuilder {
         if self.chunk_size == 0 {
             return Err(ClusterError::invalid("chunk_size", "must be at least 1"));
         }
+        if self.guard == (EnergyGuard::Sampled { rows: 0 }) {
+            return Err(ClusterError::invalid(
+                "guard",
+                "the sampled energy guard needs at least one reservoir row (sampled:N, N >= 1)",
+            ));
+        }
         if let Some(retry) = &self.retry {
             if retry.max_attempts == 0 {
                 return Err(ClusterError::invalid("retry", "max_attempts must be at least 1"));
@@ -1159,6 +1233,9 @@ impl ClusterRequestBuilder {
             chunk_size: self.chunk_size,
             batches_per_epoch: self.batches_per_epoch,
             batch_sampling: self.batch_sampling,
+            prefetch: self.prefetch,
+            guard: self.guard,
+            pin_threads: self.pin_threads,
             client: self.client,
             retry: self.retry,
             cpu_fallback: self.cpu_fallback,
@@ -1276,6 +1353,9 @@ mod tests {
         assert_eq!(req.chunk_size(), 4096);
         assert_eq!(req.batches_per_epoch(), 0);
         assert_eq!(req.batch_sampling(), BatchSampling::Sequential);
+        assert!(!req.prefetch());
+        assert_eq!(req.guard(), EnergyGuard::Exact);
+        assert!(!req.pin_threads());
         let req = ClusterRequest::builder()
             .inline(tiny())
             .k(2)
@@ -1283,6 +1363,9 @@ mod tests {
             .chunk_size(128)
             .batches_per_epoch(3)
             .batch_sampling(BatchSampling::Replacement)
+            .prefetch(true)
+            .guard(EnergyGuard::Sampled { rows: 64 })
+            .pin_threads(true)
             .seed(17)
             .build()
             .unwrap();
@@ -1293,11 +1376,20 @@ mod tests {
         assert_eq!(mb.batches_per_epoch, 3);
         assert_eq!(mb.sampling, BatchSampling::Replacement);
         assert_eq!(mb.seed, 17, "the draw stream seeds from the request seed");
+        assert!(mb.prefetch);
+        assert_eq!(mb.guard, EnergyGuard::Sampled { rows: 64 });
+        assert!(mb.pin_threads);
         let bad = ClusterRequest::builder().inline(tiny()).k(2).chunk_size(0).build();
         assert!(matches!(
             bad,
             Err(ClusterError::InvalidRequest { field: "chunk_size", .. })
         ));
+        let bad = ClusterRequest::builder()
+            .inline(tiny())
+            .k(2)
+            .guard(EnergyGuard::Sampled { rows: 0 })
+            .build();
+        assert!(matches!(bad, Err(ClusterError::InvalidRequest { field: "guard", .. })));
     }
 
     #[test]
@@ -1385,6 +1477,9 @@ mod tests {
             .chunk_size(256)
             .batches_per_epoch(5)
             .batch_sampling(BatchSampling::Replacement)
+            .prefetch(true)
+            .guard(EnergyGuard::Sampled { rows: 2048 })
+            .pin_threads(true)
             .client("tenant-a")
             .retry(RetryPolicy::transient(3, Duration::from_millis(25)))
             .cpu_fallback(true)
@@ -1414,6 +1509,9 @@ mod tests {
         assert_eq!(back.chunk_size(), 256);
         assert_eq!(back.batches_per_epoch(), 5);
         assert_eq!(back.batch_sampling(), BatchSampling::Replacement);
+        assert!(back.prefetch());
+        assert_eq!(back.guard(), EnergyGuard::Sampled { rows: 2048 });
+        assert!(back.pin_threads());
         assert_eq!(back.client(), Some("tenant-a"));
         assert_eq!(back.retry(), Some(&RetryPolicy::transient(3, Duration::from_millis(25))));
         assert!(back.cpu_fallback());
@@ -1529,6 +1627,8 @@ mod tests {
             format!("{spec}mystery=1\n"),
             format!("{spec}checkpoint_dir=ck\n"),
             spec.replace("sampling=sequential", "sampling=psychic"),
+            spec.replace("guard=exact", "guard=sampled"),
+            spec.replace("prefetch=false", "prefetch=maybe"),
         ] {
             assert!(
                 matches!(

@@ -21,6 +21,7 @@ use crate::kmeans::{RunReport, Solver, Workspace};
 use crate::observe::{CancelToken, NoopObserver, Observer};
 use crate::request::{ClusterRequest, DataSource, InitSpec};
 use crate::rng::Pcg32;
+use crate::stream::prefetch::PrefetchSource;
 use std::sync::Arc;
 
 /// An open clustering job: request + warm workspace + cached data/seeding.
@@ -129,7 +130,7 @@ impl ClusterSession {
             DataSource::Shard(path) => Some(path.clone()),
             _ => None,
         };
-        let mut source: Box<dyn ChunkSource> = match shard_path {
+        let mut source: Box<dyn ChunkSource + Send> = match shard_path {
             Some(path) => {
                 // One mapping serves both the seeding prefix and the run
                 // (`MmapShardSource::open` is typed: IO and format faults
@@ -146,14 +147,42 @@ impl ClusterSession {
             }
         };
         let c0 = self.c0.as_ref().expect("seeding ran above");
-        crate::stream::run_on_workspace(
-            &cfg,
-            self.solver.workspace_mut(),
-            source.as_mut(),
-            c0,
-            observer,
-            cancel,
-        )
+        if !cfg.prefetch {
+            return crate::stream::run_on_workspace(
+                &cfg,
+                self.solver.workspace_mut(),
+                source.as_mut(),
+                c0,
+                observer,
+                cancel,
+            );
+        }
+        // Prefetch on: wrap the source behind the pipeline thread. The
+        // two chunk buffers come from (and go back to) the workspace
+        // scratch, so warm prefetched reruns allocate no chunk storage.
+        // Wrapping happens *after* seeding: the seeding prefix reads with
+        // varying chunk sizes, while the pipeline speculates at the
+        // engine's fixed chunk cadence.
+        let ws = self.solver.workspace_mut();
+        let chunk_rows = cfg.chunk_size.max(1);
+        let d = source.d();
+        let b0 = ws.scratch.take_mat(chunk_rows, d);
+        let b1 = ws.scratch.take_mat(chunk_rows, d);
+        // With pinning on, park the prefetcher on the first CPU past the
+        // sweep lanes (lanes pin to `lane % cores`, lane < threads) so it
+        // never contends with a pinned sweep lane for a core.
+        let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        let pin_cpu = cfg.pin_threads.then(|| ws.pool.threads() % cores);
+        let mut pf = PrefetchSource::with_buffers(source, chunk_rows, b0, b1, pin_cpu);
+        let result = crate::stream::run_on_workspace(&cfg, ws, &mut pf, c0, observer, cancel);
+        // Tear down and recycle the pipeline buffers regardless of the
+        // outcome — an error must not strip the warm scratch.
+        let (_inner, bufs) = pf.shutdown();
+        let ws = self.solver.workspace_mut();
+        for buf in bufs {
+            ws.scratch.put_mat(buf);
+        }
+        result
     }
 
     /// Seed the initial centroids for a shard-backed streaming run from a

@@ -38,6 +38,8 @@
 //! `EngineKind::MiniBatch`, which routes [`crate::ClusterSession`] (and
 //! therefore the coordinator) through this module.
 
+pub mod prefetch;
+
 use crate::accel::{Advance, Budget, DriverConfig, FixedPointDriver, GuardMode, Step};
 use crate::anderson::AndersonAccelerator;
 use crate::config::{Acceleration, SolverConfig};
@@ -99,6 +101,58 @@ impl BatchSampling {
     }
 }
 
+/// Seed salt for the sampled-guard reservoir draw: the reservoir must be
+/// decorrelated from the replacement-sampling draw stream, which is seeded
+/// from the same request seed.
+const GUARD_RESERVOIR_SALT: u64 = 0x5eed_9a7d_0f3b_c4e1;
+
+/// How the epoch-level energy checkpoints — the measurements behind the
+/// AA guard, the dynamic-`m` controller and the convergence test — are
+/// computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EnergyGuard {
+    /// One exact full pass over the source per checkpoint: the default,
+    /// and the pre-knob behavior. Two checkpoints per epoch under the
+    /// immediate guard — on out-of-core shards that is two extra scans of
+    /// the whole dataset per epoch.
+    #[default]
+    Exact,
+    /// Estimate every checkpoint from a fixed reservoir of `rows`
+    /// distinct samples, drawn once per run from the request seed
+    /// (Floyd's algorithm). The *same* reservoir scores the committed
+    /// iterate and each Anderson candidate, so the guard's accept/reject
+    /// comparisons see a common, unbiased estimator rather than fresh
+    /// noise per measurement. Requires a bounded source; `rows >= n`
+    /// degenerates to scoring every sample (bit-identical energies to
+    /// [`EnergyGuard::Exact`], in reservoir order).
+    Sampled {
+        /// Reservoir size in samples.
+        rows: usize,
+    },
+}
+
+impl EnergyGuard {
+    /// Parse from a config / CLI string: `exact` or `sampled:N`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        if s == "exact" {
+            return Some(Self::Exact);
+        }
+        if let Some(rows) = s.strip_prefix("sampled:") {
+            return rows.parse::<usize>().ok().map(|rows| Self::Sampled { rows });
+        }
+        None
+    }
+
+    /// Canonical name (round-trips through [`EnergyGuard::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Self::Exact => "exact".to_string(),
+            Self::Sampled { rows } => format!("sampled:{rows}"),
+        }
+    }
+}
+
 /// Configuration of one streaming mini-batch run.
 #[derive(Debug, Clone)]
 pub struct MiniBatchConfig {
@@ -121,6 +175,21 @@ pub struct MiniBatchConfig {
     /// [`BatchSampling::Sequential`]); re-seeded per run so warm reruns
     /// stay deterministic.
     pub seed: u64,
+    /// Serve chunks through the background prefetch pipeline
+    /// ([`prefetch::PrefetchSource`]). Consumed by the owners of the
+    /// source — the session path wraps its shard / in-memory source when
+    /// set; [`MiniBatchSolver::run`] borrows the source and leaves
+    /// wrapping to the caller. Off by default. Chunk order is preserved
+    /// exactly, so this knob never changes a trajectory.
+    pub prefetch: bool,
+    /// How checkpoint energies are measured (see [`EnergyGuard`]).
+    /// [`EnergyGuard::Sampled`] changes the trajectory and is baked into
+    /// the snapshot fingerprint; the default stays exact.
+    pub guard: EnergyGuard,
+    /// Pin the pool's worker lanes (and the prefetcher thread, when both
+    /// knobs are set) to distinct CPUs — Linux only, a no-op elsewhere.
+    /// Placement-only: never changes a trajectory.
+    pub pin_threads: bool,
 }
 
 impl Default for MiniBatchConfig {
@@ -135,6 +204,9 @@ impl Default for MiniBatchConfig {
             convergence_tol: 1e-4,
             sampling: BatchSampling::Sequential,
             seed: 42,
+            prefetch: false,
+            guard: EnergyGuard::Exact,
+            pin_threads: false,
         }
     }
 }
@@ -153,7 +225,7 @@ struct StreamCkpt {
 /// batch layout and the seeded draw stream — is included, so a snapshot
 /// resumed under the same fingerprint replays the exact batch sequence.
 fn stream_fingerprint(cfg: &MiniBatchConfig, k: usize, d: usize) -> String {
-    format!(
+    let mut fp = format!(
         "aakm-stream-v1 k={k} d={d} seed={} precision={} accel={} m_max={} eps1={} \
          eps2={} chunk={} bpe={} tol={} sampling={} reseed={}",
         cfg.seed,
@@ -167,7 +239,17 @@ fn stream_fingerprint(cfg: &MiniBatchConfig, k: usize, d: usize) -> String {
         cfg.convergence_tol,
         cfg.sampling.name(),
         cfg.solver.reseed_empty,
-    )
+    );
+    // The sampled guard changes the trajectory, so it must fence resume;
+    // the exact default appends nothing, keeping pre-knob snapshots
+    // loadable. Prefetch and pinning are deliberately excluded — neither
+    // affects a single bit of the trajectory, so a run may resume with
+    // either toggled.
+    if let EnergyGuard::Sampled { rows } = cfg.guard {
+        use std::fmt::Write;
+        let _ = write!(fp, " guard=sampled:{rows}");
+    }
+    fp
 }
 
 /// Anderson-accelerated mini-batch solver over a reusable [`Workspace`].
@@ -272,6 +354,12 @@ struct EpochStep<'a> {
     /// is also what makes a resumed run replay the same batch sequence.
     counts_prev: Vec<f64>,
     rng_prev: (u64, u64),
+    /// How checkpoint energies are measured.
+    guard: EnergyGuard,
+    /// Sorted reservoir indices scored by the sampled guard (empty under
+    /// the exact guard). Drawn once per run; both the committed iterate
+    /// and every Anderson candidate are scored on exactly these rows.
+    eval_idx: Vec<usize>,
     /// Durable-snapshot destination (`None` = checkpointing off).
     ckpt: Option<StreamCkpt>,
     /// `Some(seed)` turns on the streaming empty-cluster re-seed policy.
@@ -313,14 +401,23 @@ impl EpochStep<'_> {
         Ok(got)
     }
 
-    /// One full-energy checkpoint pass: rewind the source and accumulate
-    /// the exact clustering energy of the committed iterate (or, for the
-    /// immediate guard, the staged candidate) over up to `eval_batches`
-    /// chunks. Returns `Ok(None)` when the budget trips mid-pass — like
-    /// the training pass, the checkpoint yields at batch boundaries so
+    /// One energy checkpoint of the committed iterate (or, for the
+    /// immediate guard, the staged candidate): an exact full pass or the
+    /// fixed-reservoir estimate, per the configured [`EnergyGuard`].
+    /// Returns `Ok(None)` when the budget trips mid-pass — like the
+    /// training pass, the checkpoint yields at batch boundaries so
     /// cancellation latency on out-of-core data is one chunk, not one
     /// full dataset scan.
     fn checkpoint_pass(&mut self, of_candidate: bool) -> Result<Option<(f64, u64)>, ClusterError> {
+        match self.guard {
+            EnergyGuard::Exact => self.checkpoint_exact(of_candidate),
+            EnergyGuard::Sampled { .. } => self.checkpoint_sampled(of_candidate),
+        }
+    }
+
+    /// The exact checkpoint: rewind the source and accumulate the
+    /// clustering energy over up to `eval_batches` chunks.
+    fn checkpoint_exact(&mut self, of_candidate: bool) -> Result<Option<(f64, u64)>, ClusterError> {
         let Self {
             ws,
             source,
@@ -361,6 +458,54 @@ impl EpochStep<'_> {
             });
             samples += got as u64;
             batches += 1;
+        }
+        Ok(Some((energy, samples)))
+    }
+
+    /// The sampled checkpoint: score the fixed reservoir in chunk-sized
+    /// gathers instead of rescanning the whole source. This is the cost
+    /// [`EnergyGuard::Sampled`] removes — on a 10×-RAM shard the exact
+    /// guard's two checkpoint scans per epoch dominate wall-clock.
+    fn checkpoint_sampled(
+        &mut self,
+        of_candidate: bool,
+    ) -> Result<Option<(f64, u64)>, ClusterError> {
+        let Self {
+            ws,
+            source,
+            budget,
+            phases,
+            chunk,
+            assign,
+            c,
+            c_prop,
+            chunk_rows,
+            eval_idx,
+            ..
+        } = self;
+        let target: &DataMatrix = if of_candidate { c_prop } else { c };
+        let mut energy = 0.0;
+        let mut samples = 0u64;
+        let mut start = 0usize;
+        while start < eval_idx.len() {
+            if budget.interrupted().is_some() {
+                return Ok(None);
+            }
+            let end = (start + *chunk_rows).min(eval_idx.len());
+            source.gather_rows(&eval_idx[start..end], chunk)?;
+            let got = end - start;
+            if crate::telemetry::enabled() {
+                let t = crate::telemetry::metrics();
+                t.stream_chunks.inc();
+                t.stream_rows.add(got as u64);
+            }
+            ws.engine.reset();
+            phases.time("energy", || {
+                ws.engine.assign(chunk, target, &ws.pool, assign);
+                energy += lloyd::energy(chunk, target, assign, &ws.pool);
+            });
+            samples += got as u64;
+            start = end;
         }
         Ok(Some((energy, samples)))
     }
@@ -595,6 +740,23 @@ pub(crate) fn run_on_workspace(
             "sampling-with-replacement requires a bounded source (ChunkSource::len = Some)",
         ));
     }
+    if let EnergyGuard::Sampled { rows } = cfg.guard {
+        if rows == 0 {
+            return Err(ClusterError::invalid(
+                "guard",
+                "the sampled energy guard needs at least one reservoir row (sampled:N, N >= 1)",
+            ));
+        }
+        if source_len.is_none() {
+            return Err(ClusterError::invalid(
+                "guard",
+                "the sampled energy guard requires a bounded source (ChunkSource::len = Some)",
+            ));
+        }
+    }
+    if cfg.pin_threads {
+        ws.pool.pin_lanes();
+    }
     let sw = Stopwatch::start();
     let (k, d) = (c0.n(), c0.d());
     let dim = k * d;
@@ -683,6 +845,34 @@ pub(crate) fn run_on_workspace(
     } else {
         Vec::new()
     };
+    // The sampled guard's reservoir: `rows` distinct indices drawn once
+    // per run by Floyd's algorithm, kept sorted so every source gathers
+    // in one forward sweep. Seeded from the request (salted away from the
+    // replacement draw stream), so reruns and resumes score the exact
+    // same rows.
+    let mut eval_idx = if matches!(cfg.guard, EnergyGuard::Sampled { .. }) {
+        ws.scratch.take_trace_usize()
+    } else {
+        Vec::new()
+    };
+    if let EnergyGuard::Sampled { rows } = cfg.guard {
+        let n = source_len.expect("validated above");
+        eval_idx.clear();
+        if rows >= n {
+            eval_idx.extend(0..n);
+        } else {
+            let mut rng = Pcg32::seed_from_u64(cfg.seed ^ GUARD_RESERVOIR_SALT);
+            for j in (n - rows)..n {
+                let t = rng.next_below(j + 1);
+                match eval_idx.binary_search(&t) {
+                    // `t` already drawn: Floyd inserts `j` instead, which
+                    // exceeds every element drawn so far.
+                    Ok(_) => eval_idx.push(j),
+                    Err(pos) => eval_idx.insert(pos, t),
+                }
+            }
+        }
+    }
 
     // Mid-trajectory restore: the committed iterate, the learning-rate
     // counters and the draw stream come back byte-for-byte, and the
@@ -729,6 +919,8 @@ pub(crate) fn run_on_workspace(
         source_len,
         counts_prev,
         rng_prev,
+        guard: cfg.guard,
+        eval_idx,
         ckpt,
         reseed_seed: cfg.solver.reseed_empty.then_some(cfg.seed),
     };
@@ -786,7 +978,19 @@ pub(crate) fn run_on_workspace(
     };
 
     let EpochStep {
-        ws, phases, c, c_prev, c_prop, chunk, assign, f_t, counts, counts_prev, sample_idx, ..
+        ws,
+        phases,
+        c,
+        c_prev,
+        c_prop,
+        chunk,
+        assign,
+        f_t,
+        counts,
+        counts_prev,
+        sample_idx,
+        eval_idx,
+        ..
     } = step;
     ws.scratch.put_mat(c_prop);
     ws.scratch.put_mat(c_prev);
@@ -800,6 +1004,9 @@ pub(crate) fn run_on_workspace(
     }
     ws.scratch.put_trace_f64(counts_prev);
     ws.scratch.put_trace_f64(counts);
+    if eval_idx.capacity() > 0 {
+        ws.scratch.put_trace_usize(eval_idx);
+    }
     if sample_idx.capacity() > 0 {
         ws.scratch.put_trace_usize(sample_idx);
     }
@@ -855,6 +1062,7 @@ mod tests {
             convergence_tol: 1e-5,
             sampling: BatchSampling::Sequential,
             seed: 42,
+            ..MiniBatchConfig::default()
         }
     }
 
@@ -1174,6 +1382,152 @@ mod tests {
         let again = solver.run(&mut source, &c0).unwrap();
         assert_eq!(report.centroids.as_slice(), again.centroids.as_slice());
         assert_eq!(report.energy.to_bits(), again.energy.to_bits());
+    }
+
+    #[test]
+    fn full_reservoir_sampled_guard_matches_exact_bit_for_bit() {
+        // rows >= n degenerates to scoring every sample in index order —
+        // the same accumulation order as the exact sequential scan, so
+        // the whole trajectory must match to the bit.
+        let mut rng = Pcg32::seed_from_u64(21);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 1200, 3, 4, 2.5, 0.25));
+        let mut srng = Pcg32::seed_from_u64(21);
+        let c0 = seed_centroids(&x, 4, InitMethod::KMeansPlusPlus, &mut srng);
+        let exact = {
+            let mut solver = MiniBatchSolver::try_new(cfg(Acceleration::DynamicM(2), 256)).unwrap();
+            solver.run(&mut InMemoryChunks::new(Arc::clone(&x)), &c0).unwrap()
+        };
+        let mut config = cfg(Acceleration::DynamicM(2), 256);
+        config.guard = EnergyGuard::Sampled { rows: 5000 };
+        let sampled = {
+            let mut solver = MiniBatchSolver::try_new(config).unwrap();
+            solver.run(&mut InMemoryChunks::new(Arc::clone(&x)), &c0).unwrap()
+        };
+        assert_eq!(sampled.iterations, exact.iterations);
+        assert_eq!(sampled.energy.to_bits(), exact.energy.to_bits());
+        assert_eq!(sampled.centroids.as_slice(), exact.centroids.as_slice());
+        for (a, b) in sampled.energy_trace.iter().zip(&exact.energy_trace) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sampled_guard_runs_converge_and_rerun_deterministically() {
+        let mut rng = Pcg32::seed_from_u64(27);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 3000, 4, 5, 3.0, 0.25));
+        let mut srng = Pcg32::seed_from_u64(27);
+        let c0 = seed_centroids(&x, 5, InitMethod::KMeansPlusPlus, &mut srng);
+        let mut config = cfg(Acceleration::DynamicM(2), 512);
+        config.guard = EnergyGuard::Sampled { rows: 600 };
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let mut source = InMemoryChunks::new(Arc::clone(&x));
+        let r1 = solver.run(&mut source, &c0).unwrap();
+        assert!(r1.energy.is_finite() && r1.iterations >= 1);
+        let (it1, e1, c1) = (r1.iterations, r1.energy, r1.centroids.as_slice().to_vec());
+        solver.ws.recycle(r1);
+        source.rewind();
+        let r2 = solver.run(&mut source, &c0).unwrap();
+        assert!(
+            !solver.workspace().last_run_rebuilt_scratch(),
+            "sampled-guard reruns must reuse the workspace scratch (incl. the reservoir buffer)"
+        );
+        assert_eq!(r2.iterations, it1, "fixed seeded reservoir ⇒ identical reruns");
+        assert_eq!(r2.energy.to_bits(), e1.to_bits());
+        assert_eq!(r2.centroids.as_slice(), c1.as_slice());
+    }
+
+    #[test]
+    fn sampled_guard_rejects_bad_configs() {
+        let c0 = DataMatrix::zeros(2, 2);
+        let mut config = cfg(Acceleration::None, 16);
+        config.guard = EnergyGuard::Sampled { rows: 0 };
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let x = Arc::new(DataMatrix::zeros(64, 2));
+        match solver.run(&mut InMemoryChunks::new(x), &c0) {
+            Err(ClusterError::InvalidRequest { field: "guard", .. }) => {}
+            other => panic!("rows=0 must fail typed, got ok={}", other.is_ok()),
+        }
+
+        /// A source that never reports a length.
+        struct Endless;
+        impl ChunkSource for Endless {
+            fn d(&self) -> usize {
+                2
+            }
+            fn len(&self) -> Option<usize> {
+                None
+            }
+            fn next_chunk(
+                &mut self,
+                max_rows: usize,
+                out: &mut DataMatrix,
+            ) -> Result<usize, ClusterError> {
+                out.resize_rows(max_rows.max(1));
+                Ok(max_rows.max(1))
+            }
+            fn rewind(&mut self) {}
+        }
+        let mut config = cfg(Acceleration::None, 16);
+        config.guard = EnergyGuard::Sampled { rows: 32 };
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        match solver.run(&mut Endless, &c0) {
+            Err(ClusterError::InvalidRequest { field: "guard", .. }) => {}
+            other => panic!("unbounded source must fail typed, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn guard_reservoir_is_a_sorted_distinct_uniform_sample() {
+        // Drive the Floyd draw through a tiny run and check the invariant
+        // indirectly: a sampled run over a delta dataset (all rows equal)
+        // must measure zero energy regardless of which rows the reservoir
+        // picked, proving every index was in range.
+        let x = Arc::new(DataMatrix::from_vec(vec![1.5; 101 * 2], 101, 2));
+        let c0 = DataMatrix::from_rows(&[&[1.5, 1.5]]);
+        let mut config = cfg(Acceleration::None, 7);
+        config.guard = EnergyGuard::Sampled { rows: 37 };
+        config.solver.max_iters = 2;
+        let mut solver = MiniBatchSolver::try_new(config).unwrap();
+        let report = solver.run(&mut InMemoryChunks::new(x), &c0).unwrap();
+        assert_eq!(report.energy, 0.0);
+        // And the estimator's denominator is the reservoir size.
+        assert_eq!(report.mse, 0.0);
+    }
+
+    #[test]
+    fn energy_guard_parses_and_names() {
+        assert_eq!(EnergyGuard::parse("exact"), Some(EnergyGuard::Exact));
+        assert_eq!(EnergyGuard::parse("Sampled:4096"), Some(EnergyGuard::Sampled { rows: 4096 }));
+        assert_eq!(EnergyGuard::parse("sampled:"), None);
+        assert_eq!(EnergyGuard::parse("sampled"), None);
+        assert_eq!(EnergyGuard::parse("approx"), None);
+        assert_eq!(EnergyGuard::default(), EnergyGuard::Exact);
+        assert_eq!(EnergyGuard::Exact.name(), "exact");
+        assert_eq!(EnergyGuard::Sampled { rows: 512 }.name(), "sampled:512");
+        for s in ["exact", "sampled:512"] {
+            assert_eq!(EnergyGuard::parse(s).unwrap().name(), s, "round-trip");
+        }
+    }
+
+    #[test]
+    fn sampled_guard_fingerprint_fences_resume_but_exact_is_unchanged() {
+        let base = cfg(Acceleration::DynamicM(2), 256);
+        let exact_fp = stream_fingerprint(&base, 4, 3);
+        assert!(
+            !exact_fp.contains("guard="),
+            "the exact default must keep the pre-knob fingerprint: {exact_fp}"
+        );
+        let mut sampled = base.clone();
+        sampled.guard = EnergyGuard::Sampled { rows: 128 };
+        let sampled_fp = stream_fingerprint(&sampled, 4, 3);
+        assert!(sampled_fp.ends_with(" guard=sampled:128"), "{sampled_fp}");
+        assert_ne!(exact_fp, sampled_fp);
+        // Prefetch and pinning never change a trajectory, so they must
+        // not fence resume.
+        let mut pipelined = base.clone();
+        pipelined.prefetch = true;
+        pipelined.pin_threads = true;
+        assert_eq!(stream_fingerprint(&pipelined, 4, 3), exact_fp);
     }
 
     #[test]

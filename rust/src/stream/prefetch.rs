@@ -1,0 +1,483 @@
+//! Pipelined chunk prefetch — the I/O half of the streaming engine.
+//!
+//! [`PrefetchSource`] wraps any `Send` [`ChunkSource`] behind a background
+//! prefetcher thread and a **bounded two-slot buffer exchange**: while the
+//! consumer sweeps chunk *t*, the thread is already paging in and decoding
+//! chunk *t+1* into the second buffer. Exactly two chunk buffers ping-pong
+//! between the two threads for the lifetime of the source — the steady
+//! state allocates nothing (asserted by `tests/alloc_reuse.rs`) — and
+//! chunks are served in exactly the order the inner source produces them,
+//! so a prefetched run is bit-identical to a direct one (energy traces,
+//! checkpoints and resume included; `tests/integration_stream.rs` pins
+//! this down per sampling mode).
+//!
+//! The exchange is a hand-rolled `Mutex` + `Condvar` rendezvous rather
+//! than a channel: a channel send allocates queue nodes on the hot path,
+//! and the protocol here never needs more than one outstanding request.
+//! Faults inside the prefetcher — an injected [`FaultSite::ChunkRead`]
+//! error, a decode failure, even a panic — surface on the consumer side
+//! as typed [`ClusterError`]s (a dead thread is detected through the
+//! exchange, never waited on forever), and the thread is joined on drop.
+//!
+//! [`FaultSite::ChunkRead`]: crate::fault::FaultSite::ChunkRead
+
+use crate::data::chunks::ChunkSource;
+use crate::data::DataMatrix;
+use crate::error::ClusterError;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Consumer → prefetcher: the one outstanding operation.
+enum Request {
+    /// Read the next sequential chunk into `buf`.
+    Fill { max_rows: usize, buf: DataMatrix },
+    /// Random-access gather of `idx` into `buf` (replacement sampling and
+    /// the sampled energy guard).
+    Gather { idx: Vec<usize>, buf: DataMatrix },
+    /// Restart the inner stream.
+    Rewind,
+}
+
+/// Prefetcher → consumer: the operation's result, buffers returned.
+enum Reply {
+    Filled { buf: DataMatrix, res: Result<usize, ClusterError> },
+    Gathered { idx: Vec<usize>, buf: DataMatrix, res: Result<(), ClusterError> },
+    Rewound,
+}
+
+/// The two-slot exchange: at most one request and one reply in flight.
+struct Exchange {
+    state: Mutex<ExchangeState>,
+    cond: Condvar,
+}
+
+#[derive(Default)]
+struct ExchangeState {
+    request: Option<Request>,
+    reply: Option<Reply>,
+    /// Consumer asks the thread to exit.
+    shutdown: bool,
+    /// Set when the prefetcher thread exits for any reason (clean shutdown
+    /// or panic) so the consumer can never block on a reply that will not
+    /// come.
+    dead: bool,
+}
+
+impl Exchange {
+    fn lock(&self) -> MutexGuard<'_, ExchangeState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Marks the exchange dead when the prefetcher thread unwinds (or exits
+/// cleanly) — the consumer-side waits key off this instead of hanging.
+struct DeadGuard(Arc<Exchange>);
+
+impl Drop for DeadGuard {
+    fn drop(&mut self) {
+        let mut st = self.0.lock();
+        st.dead = true;
+        self.0.cond.notify_all();
+    }
+}
+
+/// The prefetcher thread: serve requests in order until shutdown.
+fn prefetch_loop(exchange: &Exchange, inner: &mut (dyn ChunkSource + Send)) {
+    loop {
+        let req = {
+            let mut st = exchange.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(req) = st.request.take() {
+                    break req;
+                }
+                st = exchange.cond.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // Execute outside the lock: the read (mmap page-in + decode) is
+        // the work this thread exists to overlap with the sweep.
+        let reply = match req {
+            Request::Fill { max_rows, mut buf } => {
+                let res = inner.next_chunk(max_rows, &mut buf);
+                Reply::Filled { buf, res }
+            }
+            Request::Gather { idx, mut buf } => {
+                let res = inner.gather_rows(&idx, &mut buf);
+                Reply::Gathered { idx, buf, res }
+            }
+            Request::Rewind => {
+                inner.rewind();
+                Reply::Rewound
+            }
+        };
+        let mut st = exchange.lock();
+        debug_assert!(st.reply.is_none(), "two-slot exchange: one reply at a time");
+        st.reply = Some(reply);
+        exchange.cond.notify_all();
+    }
+}
+
+/// A [`ChunkSource`] that double-buffers reads from an inner source on a
+/// background thread. See the module docs for the pipeline contract.
+///
+/// The pipeline speculates at a fixed chunk size (the `chunk_rows` it was
+/// spawned with): `next_chunk` panics on any other `max_rows`, matching
+/// the streaming engine's constant-chunk discipline. `gather_rows` and
+/// `rewind` are synchronous round-trips through the same thread, so the
+/// inner source never sees interleaved access.
+pub struct PrefetchSource {
+    d: usize,
+    len: Option<usize>,
+    chunk_rows: usize,
+    exchange: Arc<Exchange>,
+    thread: Option<std::thread::JoinHandle<Box<dyn ChunkSource + Send>>>,
+    /// Buffers currently on the consumer side (2 - in-flight).
+    spares: Vec<DataMatrix>,
+    /// Whether a speculative fill is outstanding.
+    inflight: bool,
+    /// Recycled index buffer for gather round-trips.
+    idx_buf: Vec<usize>,
+}
+
+impl PrefetchSource {
+    /// Spawn a prefetcher over `inner`, allocating the two pipeline
+    /// buffers (`chunk_rows × d`). Callers with a warm buffer pool should
+    /// prefer [`PrefetchSource::with_buffers`].
+    pub fn spawn(inner: Box<dyn ChunkSource + Send>, chunk_rows: usize) -> Self {
+        let d = inner.d();
+        let chunk_rows = chunk_rows.max(1);
+        let b0 = DataMatrix::zeros(chunk_rows, d);
+        let b1 = DataMatrix::zeros(chunk_rows, d);
+        Self::with_buffers(inner, chunk_rows, b0, b1, None)
+    }
+
+    /// Spawn a prefetcher reusing two caller-provided buffers (recycled
+    /// from the workspace scratch on the session path — warm reruns then
+    /// allocate no chunk storage). Buffers of the wrong shape are resized
+    /// in place, reusing their allocation where capacity allows.
+    /// `pin_cpu` pins the prefetcher thread to that CPU on Linux (no-op
+    /// elsewhere) so it stops migrating across the sweep lanes' cores.
+    pub fn with_buffers(
+        inner: Box<dyn ChunkSource + Send>,
+        chunk_rows: usize,
+        b0: DataMatrix,
+        b1: DataMatrix,
+        pin_cpu: Option<usize>,
+    ) -> Self {
+        let d = inner.d();
+        let len = inner.len();
+        let chunk_rows = chunk_rows.max(1);
+        let fit = |m: DataMatrix| -> DataMatrix {
+            if m.d() == d {
+                return m;
+            }
+            let mut v = m.into_vec();
+            v.clear();
+            v.resize(chunk_rows * d, 0.0);
+            DataMatrix::from_vec(v, chunk_rows, d)
+        };
+        let exchange = Arc::new(Exchange {
+            state: Mutex::new(ExchangeState::default()),
+            cond: Condvar::new(),
+        });
+        let thread_exchange = Arc::clone(&exchange);
+        let mut inner = inner;
+        let thread = std::thread::Builder::new()
+            .name("aakm-prefetch".into())
+            .spawn(move || {
+                if let Some(cpu) = pin_cpu {
+                    crate::par::pin_current_thread(cpu);
+                }
+                let _dead = DeadGuard(Arc::clone(&thread_exchange));
+                prefetch_loop(&thread_exchange, inner.as_mut());
+                inner
+            })
+            .expect("spawning the prefetcher thread");
+        Self {
+            d,
+            len,
+            chunk_rows,
+            exchange,
+            thread: Some(thread),
+            spares: vec![fit(b0), fit(b1)],
+            inflight: false,
+            idx_buf: Vec::new(),
+        }
+    }
+
+    /// The typed error a request gets when the prefetcher thread died
+    /// (e.g. an injected panic): classed as I/O like any other source
+    /// failure, so the coordinator's retry classifier treats it as
+    /// transient.
+    fn dead_error(&self) -> ClusterError {
+        ClusterError::Data {
+            source: "prefetch".to_string(),
+            reason: "prefetcher thread died before serving the request".to_string(),
+        }
+    }
+
+    /// Hand a request to the thread (the request slot is empty by the
+    /// one-outstanding-operation invariant).
+    fn post(&self, req: Request) {
+        let mut st = self.exchange.lock();
+        debug_assert!(st.request.is_none(), "two-slot exchange: one request at a time");
+        st.request = Some(req);
+        self.exchange.cond.notify_all();
+    }
+
+    /// Block until the thread posts its reply (or dies). `account` adds
+    /// the wait to the prefetch hit/stall telemetry — set only for the
+    /// chunk-serving path, so rewind/gather round-trips don't skew the
+    /// pipeline's hit rate.
+    fn wait_reply(&self, account: bool) -> Result<Reply, ClusterError> {
+        let mut st = self.exchange.lock();
+        let telemetry = account && crate::telemetry::enabled();
+        if st.reply.is_none() && !st.dead {
+            if telemetry {
+                crate::telemetry::metrics().stream_prefetch_stalls.inc();
+            }
+            let t0 = Instant::now();
+            while st.reply.is_none() && !st.dead {
+                st = self.exchange.cond.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            if telemetry {
+                crate::telemetry::metrics()
+                    .stream_prefetch_stall_seconds
+                    .observe_duration(t0.elapsed());
+            }
+        } else if telemetry && st.reply.is_some() {
+            crate::telemetry::metrics().stream_prefetch_hits.inc();
+        }
+        st.reply.take().ok_or_else(|| self.dead_error())
+    }
+
+    /// Launch the next speculative fill (requires a spare buffer).
+    fn arm(&mut self) {
+        let buf = self.spares.pop().expect("pipeline invariant: a spare buffer exists");
+        self.post(Request::Fill { max_rows: self.chunk_rows, buf });
+        self.inflight = true;
+    }
+
+    /// Absorb an outstanding speculative fill before a non-sequential
+    /// operation, reclaiming its buffer. The speculative result — data or
+    /// error — is discarded: the chunk was never requested, and a
+    /// persistent failure resurfaces on the next consumed read.
+    fn drain(&mut self) {
+        if !self.inflight {
+            return;
+        }
+        self.inflight = false;
+        match self.wait_reply(false) {
+            Ok(Reply::Filled { buf, .. }) | Ok(Reply::Gathered { buf, .. }) => {
+                self.spares.push(buf);
+            }
+            Ok(Reply::Rewound) | Err(_) => {}
+        }
+    }
+
+    /// Tear the pipeline down explicitly, returning the inner source
+    /// (`None` if the thread panicked) and the surviving chunk buffers —
+    /// the session path feeds these back into the workspace scratch so
+    /// warm reruns reuse them.
+    pub fn shutdown(mut self) -> (Option<Box<dyn ChunkSource + Send>>, Vec<DataMatrix>) {
+        self.drain();
+        let inner = self.join();
+        (inner, std::mem::take(&mut self.spares))
+    }
+
+    /// Signal shutdown and join the thread (idempotent).
+    fn join(&mut self) -> Option<Box<dyn ChunkSource + Send>> {
+        let handle = self.thread.take()?;
+        {
+            let mut st = self.exchange.lock();
+            st.shutdown = true;
+            self.exchange.cond.notify_all();
+        }
+        handle.join().ok()
+    }
+}
+
+impl Drop for PrefetchSource {
+    fn drop(&mut self) {
+        let _ = self.join();
+    }
+}
+
+impl ChunkSource for PrefetchSource {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn len(&self) -> Option<usize> {
+        self.len
+    }
+
+    fn next_chunk(
+        &mut self,
+        max_rows: usize,
+        out: &mut DataMatrix,
+    ) -> Result<usize, ClusterError> {
+        assert_eq!(out.d(), self.d, "chunk buffer dimensionality mismatch");
+        assert_eq!(
+            max_rows.max(1),
+            self.chunk_rows,
+            "PrefetchSource streams fixed-size chunks (spawned for {} rows)",
+            self.chunk_rows
+        );
+        if !self.inflight {
+            // Cold start (first read, or the read after an exhausted pass
+            // or a surfaced error): nothing to overlap yet.
+            self.arm();
+        }
+        self.inflight = false;
+        match self.wait_reply(true)? {
+            Reply::Filled { buf, res } => match res {
+                Ok(0) => {
+                    // Pass exhausted: stop speculating — the consumer's
+                    // next move is a rewind (which re-arms) or teardown.
+                    self.spares.push(buf);
+                    out.resize_rows(0);
+                    Ok(0)
+                }
+                Ok(got) => {
+                    // Re-arm with the other buffer *before* copying out,
+                    // so the next page-in/decode overlaps this chunk's
+                    // sweep — the pipeline.
+                    self.arm();
+                    out.resize_rows(got);
+                    out.as_mut_slice().copy_from_slice(buf.as_slice());
+                    self.spares.push(buf);
+                    if crate::telemetry::enabled() {
+                        crate::telemetry::metrics()
+                            .stream_prefetch_bytes
+                            .add((got * self.d * 8) as u64);
+                    }
+                    Ok(got)
+                }
+                Err(e) => {
+                    self.spares.push(buf);
+                    Err(e)
+                }
+            },
+            _ => Err(self.dead_error()),
+        }
+    }
+
+    fn rewind(&mut self) {
+        self.drain();
+        self.post(Request::Rewind);
+        match self.wait_reply(false) {
+            Ok(Reply::Rewound) => {
+                // The pass restarts at chunk 0 — speculate it immediately
+                // so even the first chunk of a sequential pass is a hit.
+                self.arm();
+            }
+            // A dead thread surfaces on the next read; buffers of any
+            // other (impossible) reply shape are reclaimed defensively.
+            Ok(Reply::Filled { buf, .. }) | Ok(Reply::Gathered { buf, .. }) => {
+                self.spares.push(buf);
+            }
+            Err(_) => {}
+        }
+    }
+
+    fn gather_rows(
+        &mut self,
+        indices: &[usize],
+        out: &mut DataMatrix,
+    ) -> Result<(), ClusterError> {
+        assert_eq!(out.d(), self.d, "chunk buffer dimensionality mismatch");
+        self.drain();
+        let mut idx = std::mem::take(&mut self.idx_buf);
+        idx.clear();
+        idx.extend_from_slice(indices);
+        let Some(buf) = self.spares.pop() else {
+            return Err(self.dead_error());
+        };
+        self.post(Request::Gather { idx, buf });
+        match self.wait_reply(false)? {
+            Reply::Gathered { idx, buf, res } => {
+                self.idx_buf = idx;
+                res?;
+                out.resize_rows(buf.n());
+                out.as_mut_slice().copy_from_slice(buf.as_slice());
+                self.spares.push(buf);
+                Ok(())
+            }
+            _ => Err(self.dead_error()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Injected-fault behavior (chunk-read errors and panics on the
+    // prefetcher thread) lives in `tests/fault_injection.rs`: those plans
+    // are process-scoped, and that binary's every-test-holds-a-plan
+    // convention is what keeps them from robbing parallel tests.
+    use super::*;
+    use crate::data::chunks::{collect_source, InMemoryChunks, SynthChunks};
+    use crate::data::synth;
+    use crate::rng::Pcg32;
+    use std::sync::Arc;
+
+    #[test]
+    fn prefetched_chunks_match_the_inner_source_exactly() {
+        let mut rng = Pcg32::seed_from_u64(17);
+        let x = Arc::new(synth::gaussian_blobs(&mut rng, 513, 3, 4, 2.0, 0.3));
+        for chunk_rows in [1usize, 7, 128, 513, 600] {
+            let mut direct = InMemoryChunks::new(Arc::clone(&x));
+            let mut pf =
+                PrefetchSource::spawn(Box::new(InMemoryChunks::new(Arc::clone(&x))), chunk_rows);
+            let mut a = DataMatrix::zeros(0, 3);
+            let mut b = DataMatrix::zeros(0, 3);
+            // Two passes: the second exercises rewind + the re-armed
+            // pipeline.
+            for pass in 0..2 {
+                loop {
+                    let got_d = direct.next_chunk(chunk_rows, &mut a).unwrap();
+                    let got_p = pf.next_chunk(chunk_rows, &mut b).unwrap();
+                    assert_eq!(got_d, got_p, "chunk_rows={chunk_rows} pass={pass}");
+                    assert_eq!(a.as_slice(), b.as_slice());
+                    if got_d == 0 {
+                        break;
+                    }
+                }
+                direct.rewind();
+                pf.rewind();
+            }
+            let (inner, bufs) = pf.shutdown();
+            assert!(inner.is_some(), "clean shutdown returns the inner source");
+            assert_eq!(bufs.len(), 2, "both pipeline buffers survive");
+        }
+    }
+
+    #[test]
+    fn gather_and_len_pass_through() {
+        let mut synth_direct = SynthChunks::new(23, 300, 3, 4, 2.0, 0.25);
+        let full = collect_source(&mut synth_direct, 64, usize::MAX).unwrap();
+        let mut pf =
+            PrefetchSource::spawn(Box::new(SynthChunks::new(23, 300, 3, 4, 2.0, 0.25)), 64);
+        assert_eq!(pf.len(), Some(300));
+        assert_eq!(pf.d(), 3);
+        let indices = [0usize, 5, 5, 64, 128, 299];
+        let mut out = DataMatrix::zeros(0, 3);
+        pf.gather_rows(&indices, &mut out).unwrap();
+        for (slot, &i) in indices.iter().enumerate() {
+            assert_eq!(out.row(slot), full.row(i));
+        }
+        // Gathers interleave with sequential reads: a rewind restores the
+        // sequential pass exactly.
+        pf.rewind();
+        let replay = collect_source(&mut pf, 64, usize::MAX).unwrap();
+        assert_eq!(replay, full);
+        // Out-of-range gathers fail typed, pipeline still usable.
+        assert!(pf.gather_rows(&[0, 300], &mut out).is_err());
+        pf.rewind();
+        let again = collect_source(&mut pf, 64, usize::MAX).unwrap();
+        assert_eq!(again, full);
+    }
+
+}

@@ -303,6 +303,10 @@ pub struct Metrics {
     // Streaming engine.
     pub stream_chunks: Counter,
     pub stream_rows: Counter,
+    pub stream_prefetch_hits: Counter,
+    pub stream_prefetch_stalls: Counter,
+    pub stream_prefetch_bytes: Counter,
+    pub stream_prefetch_stall_seconds: Histogram,
     // Durability.
     pub snapshot_writes: Counter,
     pub snapshot_bytes: Counter,
@@ -343,6 +347,10 @@ impl Metrics {
             job_run: Histogram::with_bounds(LATENCY_BOUNDS),
             stream_chunks: Counter::new(),
             stream_rows: Counter::new(),
+            stream_prefetch_hits: Counter::new(),
+            stream_prefetch_stalls: Counter::new(),
+            stream_prefetch_bytes: Counter::new(),
+            stream_prefetch_stall_seconds: Histogram::with_bounds(LATENCY_BOUNDS),
             snapshot_writes: Counter::new(),
             snapshot_bytes: Counter::new(),
             snapshot_write_seconds: Histogram::with_bounds(LATENCY_BOUNDS),
@@ -379,9 +387,24 @@ impl Metrics {
         ]
     }
 
-    fn counters2(&self) -> [(&'static str, &'static str, &Counter); 4] {
+    fn counters2(&self) -> [(&'static str, &'static str, &Counter); 7] {
         [
             ("aakm_model_bytes_total", "Registry model bytes written", &self.model_bytes),
+            (
+                "aakm_stream_prefetch_hits_total",
+                "Prefetched chunks ready on arrival",
+                &self.stream_prefetch_hits,
+            ),
+            (
+                "aakm_stream_prefetch_stalls_total",
+                "Chunk requests that waited on the prefetcher",
+                &self.stream_prefetch_stalls,
+            ),
+            (
+                "aakm_stream_prefetch_bytes_total",
+                "Sample bytes served through the prefetch pipeline",
+                &self.stream_prefetch_bytes,
+            ),
             ("aakm_fault_injections_total", "Injected faults fired", &self.fault_injections),
             ("aakm_events_dropped_total", "Event lines dropped", &self.events_dropped),
             ("aakm_progress_dropped_total", "Progress records dropped", &self.progress_dropped),
@@ -396,9 +419,14 @@ impl Metrics {
         ]
     }
 
-    fn histograms(&self) -> [(&'static str, &'static str, &Histogram); 5] {
+    fn histograms(&self) -> [(&'static str, &'static str, &Histogram); 6] {
         [
             ("aakm_solver_run_iterations", "Iterations per run", &self.solver_run_iterations),
+            (
+                "aakm_stream_prefetch_stall_seconds",
+                "Consumer wait on a prefetched chunk",
+                &self.stream_prefetch_stall_seconds,
+            ),
             ("aakm_job_queue_wait_seconds", "Submit-to-pickup wait", &self.job_queue_wait),
             ("aakm_job_run_seconds", "Solver run time per successful attempt", &self.job_run),
             (

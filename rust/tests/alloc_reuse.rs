@@ -15,7 +15,7 @@
 //! per-range scan buffers, which is why the assertions are a strict
 //! reduction bound rather than a literal zero.
 
-use aakm::config::{Acceleration, EngineKind};
+use aakm::config::{Acceleration, EnergyGuard, EngineKind};
 use aakm::{ClusterRequest, ClusterSession};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -155,6 +155,26 @@ fn warm_session_runs_do_not_rebuild_the_workspace() {
                 .engine(EngineKind::MiniBatch)
                 .accel(Acceleration::DynamicM(2))
                 .chunk_size(256)
+                .threads(1)
+                .seed(9)
+                .build()
+                .unwrap(),
+        ),
+        (
+            // The saturated streaming path: the two pipeline buffers come
+            // from (and return to) the workspace scratch, and the sampled
+            // guard's reservoir reuses a pooled index buffer, so the only
+            // added warm-run traffic is the per-run prefetcher thread
+            // spawn — well inside the reduction bounds below.
+            "minibatch+prefetch",
+            ClusterRequest::builder()
+                .inline(Arc::clone(&x))
+                .k(8)
+                .engine(EngineKind::MiniBatch)
+                .accel(Acceleration::DynamicM(2))
+                .chunk_size(256)
+                .prefetch(true)
+                .guard(EnergyGuard::Sampled { rows: 500 })
                 .threads(1)
                 .seed(9)
                 .build()

@@ -22,7 +22,9 @@
 
 use aakm::config::EngineKind;
 use aakm::coordinator::{Coordinator, CoordinatorConfig, SubmitPolicy};
-use aakm::data::{synth, DataMatrix};
+use aakm::data::chunks::ChunkSource;
+use aakm::data::{synth, DataMatrix, InMemoryChunks};
+use aakm::stream::prefetch::PrefetchSource;
 use aakm::error::FaultClass;
 use aakm::fault::{FaultKind, FaultPlan, FaultSite};
 use aakm::request::RetryPolicy;
@@ -327,6 +329,87 @@ fn mixed_fault_sweep_never_hangs_and_accounting_balances() {
         assert_eq!(stats.submitted, results.len() as u64, "seed {seed}");
         assert_eq!(stats.shed, shed, "seed {seed}");
         assert_eq!(stats.completed, stats.submitted, "seed {seed}: accounting balances");
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn injected_error_in_the_prefetcher_surfaces_typed() {
+    // Process-scoped plan: the chunk-read site fires on the prefetcher
+    // thread, not the test thread.
+    let guard = FaultPlan::new()
+        .fail_next(FaultSite::ChunkRead, FaultKind::Error, 1)
+        .install();
+    let x = Arc::new(DataMatrix::zeros(16, 2));
+    let mut pf = PrefetchSource::spawn(Box::new(InMemoryChunks::new(x)), 4);
+    let mut buf = DataMatrix::zeros(0, 2);
+    let err = pf.next_chunk(4, &mut buf).unwrap_err();
+    assert_eq!(err.fault_class(), Some(FaultClass::Io));
+    // Swap to an empty plan (still holding the harness lock) and verify
+    // the pipeline recovers: the next read re-arms and succeeds.
+    drop(guard);
+    let _quiet = FaultPlan::new().install();
+    assert_eq!(pf.next_chunk(4, &mut buf).unwrap(), 4);
+}
+
+#[test]
+fn prefetcher_panic_is_a_typed_error_not_a_hang() {
+    let guard = FaultPlan::new()
+        .fail_next(FaultSite::ChunkRead, FaultKind::Panic, 1)
+        .install();
+    let x = Arc::new(DataMatrix::zeros(16, 2));
+    let mut pf = PrefetchSource::spawn(Box::new(InMemoryChunks::new(x)), 4);
+    let mut buf = DataMatrix::zeros(0, 2);
+    let err = pf.next_chunk(4, &mut buf).unwrap_err();
+    assert!(matches!(err, ClusterError::Data { .. }), "{err}");
+    drop(guard);
+    let _quiet = FaultPlan::new().install();
+    // The thread is gone: every later operation stays typed.
+    assert!(pf.next_chunk(4, &mut buf).is_err());
+    assert!(pf.gather_rows(&[0], &mut buf).is_err());
+    let (inner, _) = pf.shutdown();
+    assert!(inner.is_none(), "a panicked thread cannot return the source");
+}
+
+#[test]
+fn prefetch_enabled_jobs_absorb_prefetcher_thread_faults() {
+    // The full service path with the pipeline on: injected chunk-read
+    // faults now fire on the *prefetcher* thread, surface as typed
+    // transient I/O on the consumer side, and the job's retry budget
+    // absorbs them — for an injected error and an injected panic alike
+    // (the panic kills the prefetcher thread; the retry spawns a fresh
+    // pipeline). The coordinator worker itself never dies.
+    for kind in [FaultKind::Error, FaultKind::Panic] {
+        let _plan = FaultPlan::new()
+            .fail_next(FaultSite::ChunkRead, kind, 1)
+            .install();
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..CoordinatorConfig::default()
+        });
+        let request = ClusterRequest::builder()
+            .inline(blobs(81, 1500, 4))
+            .k(4)
+            .seed(81)
+            .engine(EngineKind::MiniBatch)
+            .chunk_size(256)
+            .prefetch(true)
+            .retry(RetryPolicy::transient(3, Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        let out = coord
+            .submit(request)
+            .unwrap()
+            .wait()
+            .outcome
+            .unwrap_or_else(|e| panic!("{kind:?}: the retry budget covers the fault: {e}"));
+        assert_eq!(out.attempts, 2, "{kind:?}: one faulted attempt, one success");
+        assert!(
+            out.attempt_errors.iter().all(|e| e.fault_class() == Some(FaultClass::Io)),
+            "{kind:?}: prefetcher-thread faults classify as transient I/O"
+        );
+        assert_eq!(coord.stats().respawns, 0, "{kind:?}: the worker thread survived");
         coord.shutdown();
     }
 }

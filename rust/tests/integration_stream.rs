@@ -3,7 +3,7 @@
 //! full-batch quality parity, and the session/request plumbing for
 //! `EngineKind::MiniBatch` + `DataSource::Shard`.
 
-use aakm::config::{Acceleration, EngineKind};
+use aakm::config::{Acceleration, BatchSampling, EnergyGuard, EngineKind};
 use aakm::data::chunks::{collect_source, ChunkSource};
 use aakm::data::{synth, DataMatrix, InMemoryChunks, MmapShardSource, ShardWriter, SynthChunks};
 use aakm::rng::Pcg32;
@@ -251,4 +251,135 @@ fn generator_and_shard_streams_agree() {
         inline.energy,
         shard.energy
     );
+}
+
+/// Tentpole invariant: the prefetch pipeline is trajectory-neutral. For
+/// both sampling modes, and on both source kinds (mmap shard and
+/// in-memory), a prefetch-on run reproduces the prefetch-off run bit for
+/// bit — epoch count, energy trace, final energy, centroids.
+#[test]
+fn prefetch_runs_are_bit_identical_per_sampling_mode() {
+    let d = 5usize;
+    let k = 6usize;
+    let mut gen = SynthChunks::new(41, 9000, d, k, 2.5, 0.25);
+    let x = Arc::new(collect_source(&mut gen, 1024, usize::MAX).unwrap());
+    let shard_path = tmp("prefetch_parity.fv");
+    let mut w = ShardWriter::create(&shard_path, d).unwrap();
+    w.append(&x).unwrap();
+    assert_eq!(w.finish().unwrap(), 9000);
+
+    for sampling in [BatchSampling::Sequential, BatchSampling::Replacement] {
+        for shard in [true, false] {
+            let run = |prefetch: bool| {
+                let mut b = ClusterRequest::builder();
+                b = if shard {
+                    b.shard(&shard_path)
+                } else {
+                    b.inline(Arc::clone(&x))
+                };
+                let request = b
+                    .k(k)
+                    .engine(EngineKind::MiniBatch)
+                    .chunk_size(768)
+                    .batch_sampling(sampling)
+                    .prefetch(prefetch)
+                    .record_trace(true)
+                    .threads(1)
+                    .seed(11)
+                    .build()
+                    .unwrap();
+                ClusterSession::open(request).unwrap().run().unwrap()
+            };
+            let off = run(false);
+            let on = run(true);
+            let tag = format!("{sampling:?} shard={shard}");
+            assert!(off.iterations >= 1, "{tag}");
+            assert_eq!(on.iterations, off.iterations, "{tag}: epoch count diverged");
+            assert_eq!(on.energy.to_bits(), off.energy.to_bits(), "{tag}: energy diverged");
+            assert_eq!(on.energy_trace.len(), off.energy_trace.len(), "{tag}");
+            for (i, (a, b)) in on.energy_trace.iter().zip(&off.energy_trace).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: trace[{i}] diverged");
+            }
+            for r in 0..k {
+                assert_eq!(on.centroids.row(r), off.centroids.row(r), "{tag}: centroid {r}");
+            }
+        }
+    }
+}
+
+/// The sampled energy guard tracks the exact guard: per-sample checkpoint
+/// energies stay inside a tight envelope of the exact trace, and the run
+/// reaches the 5%-of-Lloyd quality band within one epoch of the exact
+/// run. (Bit-parity of a full reservoir, determinism, and validation live
+/// in the `stream` unit tests.)
+#[test]
+#[allow(deprecated)]
+fn sampled_guard_tracks_the_exact_guard() {
+    use aakm::init::{seed_centroids, InitMethod};
+    let n = 6000usize;
+    let rows = 1500usize;
+    let mut rng = Pcg32::seed_from_u64(0x6AA3D);
+    let x = Arc::new(synth::gaussian_blobs(&mut rng, n, 4, 6, 3.0, 0.2));
+    let mut srng = Pcg32::seed_from_u64(0x6AA3E);
+    let c0 = seed_centroids(&x, 6, InitMethod::KMeansPlusPlus, &mut srng);
+    let lloyd = aakm::kmeans::run_lloyd_baseline(&x, c0.clone());
+    // The quality target in per-sample (mse) terms: sampled checkpoints
+    // sum energy over the reservoir only, so traces are compared after
+    // normalizing each by its own evaluated-row count.
+    let target = 1.05 * lloyd.energy / n as f64;
+
+    let run = |guard: EnergyGuard| {
+        let request = ClusterRequest::builder()
+            .inline(Arc::clone(&x))
+            .k(6)
+            .initial_centroids(Arc::new(c0.clone()))
+            .engine(EngineKind::MiniBatch)
+            .chunk_size(512)
+            .guard(guard)
+            .record_trace(true)
+            .threads(1)
+            .seed(3)
+            .build()
+            .unwrap();
+        ClusterSession::open(request).unwrap().run().unwrap()
+    };
+    let exact = run(EnergyGuard::Exact);
+    let sampled = run(EnergyGuard::Sampled { rows });
+
+    let exact_mse: Vec<f64> = exact.energy_trace.iter().map(|e| e / n as f64).collect();
+    let sampled_mse: Vec<f64> = sampled.energy_trace.iter().map(|e| e / rows as f64).collect();
+    // Envelope: every sampled checkpoint tracks the exact value of the
+    // same epoch within 15% (a 25% uniform reservoir has a ~2-3% expected
+    // energy error; the band leaves room for the two trajectories
+    // drifting once their guards measure slightly different energies).
+    let common = exact_mse.len().min(sampled_mse.len());
+    assert!(common >= 1, "both runs record at least one checkpoint");
+    for i in 0..common {
+        let (e, s) = (exact_mse[i], sampled_mse[i]);
+        let rel = (e - s).abs() / e.max(1e-12);
+        assert!(rel < 0.15, "epoch {i}: exact mse {e} vs sampled {s} (rel {rel})");
+    }
+    // Quality gate: epochs to reach the 5%-of-Lloyd band agree within 1.
+    let epochs_to = |trace: &[f64]| trace.iter().position(|&e| e <= target);
+    let ee = epochs_to(&exact_mse).expect("the exact run reaches the Lloyd band");
+    let se = epochs_to(&sampled_mse).expect("the sampled run reaches the Lloyd band");
+    assert!(ee.abs_diff(se) <= 1, "epochs to target: exact {ee} vs sampled {se}");
+    // And the cheap guard composes with the pipeline: prefetch-on rerun
+    // of the sampled run is bit-identical to prefetch-off.
+    let request = ClusterRequest::builder()
+        .inline(Arc::clone(&x))
+        .k(6)
+        .initial_centroids(Arc::new(c0.clone()))
+        .engine(EngineKind::MiniBatch)
+        .chunk_size(512)
+        .guard(EnergyGuard::Sampled { rows })
+        .prefetch(true)
+        .record_trace(true)
+        .threads(1)
+        .seed(3)
+        .build()
+        .unwrap();
+    let piped = ClusterSession::open(request).unwrap().run().unwrap();
+    assert_eq!(piped.iterations, sampled.iterations);
+    assert_eq!(piped.energy.to_bits(), sampled.energy.to_bits());
 }

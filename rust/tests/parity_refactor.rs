@@ -403,6 +403,7 @@ fn minibatch_parity() {
             convergence_tol: 1e-5,
             sampling: BatchSampling::Sequential,
             seed: 42,
+            ..MiniBatchConfig::default()
         };
         let mut solver = MiniBatchSolver::try_new(cfg).unwrap();
         let mut source = InMemoryChunks::new(Arc::clone(&x));

@@ -171,6 +171,53 @@ fn minibatch_resume_is_bit_identical_under_both_sampling_modes() {
 }
 
 #[test]
+fn minibatch_resume_with_prefetch_is_bit_identical() {
+    // The pipeline is invisible to durability: a snapshot written by a
+    // prefetch-off run resumes under prefetch-on — the stream fingerprint
+    // deliberately excludes the prefetch knob — and the stitched run is
+    // bit-identical to the uninterrupted prefetch-off reference.
+    let _quiesce = FaultPlan::new().install();
+    let data = curve(29, 2400);
+    let dir = tmp("parity_minibatch_prefetch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let make = |epochs: usize, prefetch: bool, checkpointed: bool| {
+        let mut b = ClusterRequest::builder()
+            .inline(Arc::clone(&data))
+            .k(6)
+            .engine(EngineKind::MiniBatch)
+            .chunk_size(256)
+            .prefetch(prefetch)
+            .threads(1)
+            .seed(9)
+            .max_iters(epochs);
+        if checkpointed {
+            b = b.checkpoint(CheckpointPolicy::new(&dir, 1));
+        }
+        b.build().expect("valid request")
+    };
+    let full = run(make(60, false, false)).expect("reference run");
+    let cut = full.iterations / 2;
+    assert!(cut >= 1, "need a multi-epoch run");
+    let r1 = run(make(cut, false, true)).expect("capped prefetch-off run");
+    assert_eq!(r1.iterations, cut, "the cap lands on an epoch boundary");
+    let r2 = run(make(60, true, true)).expect("prefetch-on resumed run");
+    assert_eq!(r2.iterations, full.iterations, "same total epochs");
+    assert_eq!(
+        r2.energy.to_bits(),
+        full.energy.to_bits(),
+        "bit-identical final energy across the prefetch seam"
+    );
+    let same_centroids = r2
+        .centroids
+        .as_slice()
+        .iter()
+        .zip(full.centroids.as_slice())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same_centroids, "bit-identical centroids across the prefetch seam");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn checkpoint_write_fault_sweep_never_tears_a_snapshot() {
     let data = curve(31, 1500);
     let make = |dir: Option<&PathBuf>, iters: usize| {

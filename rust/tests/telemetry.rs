@@ -84,6 +84,57 @@ fn concurrent_increments_are_never_lost() {
     assert_eq!(buckets, total, "bucket counts must sum to the observation count");
 }
 
+#[test]
+fn prefetch_counters_move_and_render() {
+    let _g = serialize();
+    telemetry::enable();
+    let m = telemetry::metrics();
+    let (h0, s0, b0) = (
+        m.stream_prefetch_hits.get(),
+        m.stream_prefetch_stalls.get(),
+        m.stream_prefetch_bytes.get(),
+    );
+    let obs0 = m.stream_prefetch_stall_seconds.count();
+
+    let req = ClusterRequest::builder()
+        .inline(blobs(51, 1500))
+        .k(6)
+        .seed(51)
+        .engine(EngineKind::MiniBatch)
+        .chunk_size(256)
+        .prefetch(true)
+        .threads(1)
+        .build()
+        .expect("valid request");
+    let mut session = ClusterSession::open(req).expect("session opens");
+    let report = session.run().expect("prefetched run succeeds");
+    assert!(report.iterations >= 1);
+
+    let hits = m.stream_prefetch_hits.get() - h0;
+    let stalls = m.stream_prefetch_stalls.get() - s0;
+    let bytes = m.stream_prefetch_bytes.get() - b0;
+    assert!(hits + stalls >= 1, "every served chunk is either a hit or a stall");
+    assert_eq!(
+        m.stream_prefetch_stall_seconds.count() - obs0,
+        stalls,
+        "one stall-duration observation per counted stall"
+    );
+    assert!(bytes > 0, "chunk bytes flowing through the pipeline are accounted");
+
+    // The dump path renders the new families (counters unconditionally,
+    // the stall histogram with its bucket series).
+    let text = telemetry::prometheus_text();
+    for family in [
+        "aakm_stream_prefetch_hits_total",
+        "aakm_stream_prefetch_stalls_total",
+        "aakm_stream_prefetch_bytes_total",
+        "aakm_stream_prefetch_stall_seconds_bucket",
+    ] {
+        assert!(text.contains(family), "missing family {family} in:\n{text}");
+    }
+    telemetry::disable();
+}
+
 // ---- JSONL event log ----------------------------------------------------
 
 #[test]

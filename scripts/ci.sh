@@ -76,13 +76,16 @@ rm -f "$probe_log"
 
 # Quick-mode mini-batch smoke: run the streaming sweep on one small shape
 # and fail if the machine-readable trail is missing any engine variant
-# (Lloyd target, minibatch+AA, minibatch plain) or the epochs-to-target
-# columns. Same probe pattern as perf_hotpath above.
+# (Lloyd target, minibatch+AA, minibatch plain), the epochs-to-target
+# columns, or the stream-saturation sweep's throughput/guard columns
+# (prefetch off/on rows-per-sec and the sampled-vs-exact epoch delta).
+# Same probe pattern as perf_hotpath above.
 mb_probe_log=$(mktemp)
 if PERF_MINIBATCH_QUICK=1 cargo bench --bench perf_minibatch --no-run >"$mb_probe_log" 2>&1; then
   PERF_MINIBATCH_QUICK=1 cargo bench --bench perf_minibatch
   for key in lloyd_energy minibatch_aa minibatch_plain epochs_to_target \
-             aa_beats_plain; do
+             aa_beats_plain stream_sweep rows_per_sec prefetch_speedup \
+             guard_epoch_delta; do
     if ! grep -q "\"$key\"" BENCH_minibatch.json; then
       echo "ci.sh: BENCH_minibatch.json is missing '$key' entries" >&2
       exit 1
@@ -191,6 +194,28 @@ else
   exit 1
 fi
 rm -f "$rc_probe_log"
+
+# Prefetch-parity smoke: replay the saturated-streaming contract tests —
+# prefetch on/off bit-identical per sampling mode, the sampled energy
+# guard tracking the exact one, and resume-across-prefetch parity — as a
+# named leg so a pipeline ordering regression is called out by name even
+# though the default `cargo test` above also runs these. Same probe
+# pattern as above.
+pp_probe_log=$(mktemp)
+if cargo test --test integration_stream --no-run >"$pp_probe_log" 2>&1; then
+  cargo test -q --test integration_stream -- \
+    prefetch_runs_are_bit_identical_per_sampling_mode \
+    sampled_guard_tracks_the_exact_guard
+  cargo test -q --test recovery -- minibatch_resume_with_prefetch_is_bit_identical
+  echo "ci.sh: prefetch-parity smoke leg OK (bit-identical on/off + sampled-guard envelope + resume)"
+elif grep -qi "no test target named" "$pp_probe_log"; then
+  echo "ci.sh: integration_stream test target not declared in this manifest; skipping smoke leg" >&2
+else
+  echo "ci.sh: integration_stream tests failed to build:" >&2
+  cat "$pp_probe_log" >&2
+  exit 1
+fi
+rm -f "$pp_probe_log"
 
 # Crash-recovery smoke: a checkpointed CLI solve interrupted mid-run —
 # first gracefully (SIGINT flushes a final snapshot and reports the run
